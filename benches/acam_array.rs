@@ -1,0 +1,123 @@
+//! ACAM simulator bench + ablations: search latency vs array geometry, the
+//! two cell designs, variability-vs-accuracy, and the analogue energy
+//! accounting (Eq. 14) — the design-choice ablations DESIGN.md calls out.
+
+use hec::acam::cell::CellKind;
+use hec::acam::program::{binary_query_voltages, program_array, WindowMode};
+use hec::acam::{ArrayConfig, Variability};
+use hec::benchkit::{bench, section};
+use hec::rng::Rng;
+use hec::templates::{pack_bits, TemplateSet};
+
+fn toy_set(m: usize, n: usize, rng: &mut Rng) -> TemplateSet {
+    let templates: Vec<Vec<u8>> = (0..m)
+        .map(|_| (0..n).map(|_| u8::from(rng.u01() < 0.5)).collect())
+        .collect();
+    let w = n.div_ceil(64);
+    TemplateSet {
+        packed: templates.iter().flat_map(|t| pack_bits(t, w)).collect(),
+        words_per_row: w,
+        lo: vec![vec![0.0; n]; m],
+        hi: vec![vec![1.0; n]; m],
+        bin_lo: templates
+            .iter()
+            .map(|t| t.iter().map(|&b| b as f32 - 0.5).collect())
+            .collect(),
+        bin_hi: templates
+            .iter()
+            .map(|t| t.iter().map(|&b| b as f32 + 0.5).collect())
+            .collect(),
+        class_of: (0..m).collect(),
+        silhouette: vec![],
+        templates,
+    }
+}
+
+fn main() {
+    let mut rng = Rng::new(17);
+
+    section("search latency vs geometry (6T4R, ideal devices)");
+    for (m, n) in [(10usize, 784usize), (30, 784), (10, 1568), (100, 784)] {
+        let set = toy_set(m, n, &mut rng);
+        let mut arr = program_array(
+            &set,
+            WindowMode::Binary,
+            ArrayConfig::default(),
+            Variability::ideal(),
+            1,
+        );
+        let q: Vec<u8> = (0..n).map(|_| u8::from(rng.u01() < 0.5)).collect();
+        let qv = binary_query_voltages(&q);
+        bench(&format!("search {m}x{n}"), 3, 30, || {
+            std::hint::black_box(arr.search(std::hint::black_box(&qv)));
+        });
+    }
+
+    section("cell design comparison (10x784, ideal)");
+    let set = toy_set(10, 784, &mut rng);
+    let q: Vec<u8> = (0..784).map(|_| u8::from(rng.u01() < 0.5)).collect();
+    let qv = binary_query_voltages(&q);
+    for kind in [CellKind::Charging6T4R, CellKind::Precharging3T1R] {
+        let mut arr = program_array(
+            &set,
+            WindowMode::Binary,
+            ArrayConfig { kind, ..Default::default() },
+            Variability::ideal(),
+            1,
+        );
+        let out = arr.search(&qv);
+        bench(&format!("search {kind:?}"), 3, 30, || {
+            std::hint::black_box(arr.search(std::hint::black_box(&qv)));
+        });
+        println!(
+            "    energy {:.3} nJ  (Eq. 14: 10 x 784 x 185 fJ = 1.4504 nJ)",
+            out.energy_nj
+        );
+        assert!((out.energy_nj - 1.4504).abs() < 0.01);
+    }
+
+    section("variability ablation: decision stability vs ideal (10x784)");
+    let mut ideal_arr = program_array(
+        &set,
+        WindowMode::Binary,
+        ArrayConfig::default(),
+        Variability::ideal(),
+        7,
+    );
+    println!("{:>8} {:>12} {:>12}", "level", "6T4R", "3T1R");
+    for level in [0.0, 0.5, 1.0, 2.0, 4.0] {
+        let mut stab = Vec::new();
+        for kind in [CellKind::Charging6T4R, CellKind::Precharging3T1R] {
+            let mut arr = program_array(
+                &set,
+                WindowMode::Binary,
+                ArrayConfig { kind, ..Default::default() },
+                Variability::at_level(level),
+                7,
+            );
+            let mut agree = 0usize;
+            let trials = 100;
+            let mut qrng = Rng::new(31);
+            for _ in 0..trials {
+                let q: Vec<u8> = (0..784).map(|_| u8::from(qrng.u01() < 0.5)).collect();
+                let qv = binary_query_voltages(&q);
+                let ideal_out = ideal_arr.search(&qv);
+                let out = arr.search(&qv);
+                let am = |sims: &[f64]| {
+                    sims.iter()
+                        .enumerate()
+                        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                        .unwrap()
+                        .0
+                };
+                agree += usize::from(am(&out.similarity) == am(&ideal_out.similarity));
+            }
+            stab.push(agree as f64 / trials as f64);
+        }
+        println!("{level:>8.1} {:>12.2} {:>12.2}", stab[0], stab[1]);
+        if level == 0.0 {
+            assert!(stab[0] > 0.99, "ideal 6T4R must match the ideal argmax");
+        }
+    }
+    println!("\nacam_array: PASS");
+}

@@ -1,0 +1,63 @@
+//! §V.D reproduction: every published energy figure regenerated from the
+//! Horowitz constants and Eq. 13/14, paper-scale and as-built, with the
+//! strict-pJ variant alongside (unit-slip note in `hec::energy`).
+
+use hec::benchkit::{paper_row, section};
+use hec::energy::{constants as c, EnergyModel, Scale};
+use hec::runtime::Meta;
+
+fn main() {
+    let m = EnergyModel::default();
+
+    section("§V.D — published arithmetic (paper scale)");
+    let r = m.report(Scale::Paper);
+    paper_row("E_back-end (nJ)", c::E_BACKEND_NJ, r.e_backend_nj, "nJ");
+    paper_row("E_front-end (nJ)", c::E_FRONTEND_NJ, r.e_frontend_nj, "nJ");
+    paper_row("E_total (nJ)", c::E_TOTAL_NJ, r.e_total_nj, "nJ");
+    paper_row("E_teacher (uJ)", c::E_TEACHER_UJ, r.e_teacher_uj, "uJ");
+    paper_row("reduction (x)", c::ENERGY_REDUCTION, r.reduction, "x");
+
+    // Eq. 14 is exact; front/teacher within 0.5%; reduction within a few %
+    // of the published rounding.
+    assert!((r.e_backend_nj - c::E_BACKEND_NJ).abs() < 0.01);
+    assert!((r.e_frontend_nj - c::E_FRONTEND_NJ).abs() / c::E_FRONTEND_NJ < 0.005);
+    assert!((r.e_teacher_uj - c::E_TEACHER_UJ).abs() / c::E_TEACHER_UJ < 0.005);
+    assert!(r.reduction > 700.0 && r.reduction < 900.0);
+
+    section("strict-pJ variant (x1000 unit-slip check)");
+    println!(
+        "front-end strict-pJ: {:.0} nJ (published arithmetic: {:.2} nJ)",
+        m.frontend_strict_pj_nj(c::FRONTEND_OPS_ACAM),
+        r.e_frontend_nj
+    );
+
+    section("per-MAC decomposition");
+    println!(
+        "mul8 {} pJ + add8 {} pJ + mem {} pJ = {:.2} pJ/MAC",
+        c::MUL8_PJ,
+        c::ADD8_PJ,
+        c::MEM_32K_PJ,
+        m.per_mac_pj()
+    );
+    println!(
+        "ops: softmax head removed = {} (frontend {} = {} - {})",
+        c::SOFTMAX_HEAD_OPS,
+        c::FRONTEND_OPS_ACAM,
+        c::STUDENT_OPT.macs,
+        c::SOFTMAX_HEAD_OPS
+    );
+
+    if let Ok(meta) = Meta::load("artifacts") {
+        section("as-built deployment");
+        let ab = m.report(Scale::AsBuilt {
+            frontend_ops: meta.macs.as_built.student_effective,
+            teacher_macs: meta.macs.as_built.teacher_gray.macs,
+            n_templates: meta.artifacts.n_templates as u64,
+            n_features: meta.artifacts.n_features as u64,
+        });
+        println!("{ab}");
+        // Back-end term is scale-independent (same 10x784 array).
+        assert!((ab.e_backend_nj - c::E_BACKEND_NJ).abs() < 0.01);
+    }
+    println!("\nenergy_estimates: PASS");
+}

@@ -1,0 +1,79 @@
+//! Fig. 6 (confusion matrix) + Fig. 7 (per-class accuracy) reproduction for
+//! the feature-count pattern-matching classifier, evaluated through the full
+//! deployed stack (PJRT front-end -> binarise -> packed matcher), plus the
+//! §V.B feature-count / similarity equivalence check.
+
+use hec::benchkit::{paper_row, section};
+use hec::config::{Backend, ServeConfig};
+use hec::coordinator::Pipeline;
+use hec::dataset::{SyntheticDataset, CLASS_NAMES};
+use hec::runtime::Meta;
+
+fn main() {
+    if !std::path::Path::new("artifacts/meta.json").is_file() {
+        println!("fig6_fig7_matching: run `make artifacts` first");
+        return;
+    }
+    let meta = Meta::load("artifacts").unwrap();
+
+    let cfg = ServeConfig {
+        artifacts_dir: "artifacts".into(),
+        backend: Backend::FeatureCount,
+        ..Default::default()
+    };
+    let mut p = Pipeline::new(&cfg).unwrap();
+    let n = 500;
+    let ds = SyntheticDataset::new(1_000_003, n, p.meta.norm.mean as f32, p.meta.norm.std as f32);
+    let (images, labels) = ds.batch(0, n);
+    let eval = p.evaluate(&images, &labels, 32).unwrap();
+
+    section("Fig. 6 — confusion matrix (feature-count matching)");
+    print!("{:>12}", "");
+    for c in CLASS_NAMES {
+        print!("{:>6}", &c[..c.len().min(5)]);
+    }
+    println!();
+    for (i, row) in eval.confusion.iter().enumerate() {
+        print!("{:>12}", CLASS_NAMES[i]);
+        for v in row {
+            print!("{v:>6}");
+        }
+        println!();
+    }
+
+    section("Fig. 7 — per-class accuracy");
+    for (i, acc) in eval.per_class_accuracy().iter().enumerate() {
+        let bar = "#".repeat((acc * 40.0) as usize);
+        println!("{:>12} {:>6.3} {bar}", CLASS_NAMES[i], acc);
+    }
+
+    section("overall vs paper");
+    paper_row("binary matching accuracy", 70.91 / 100.0, eval.accuracy, "acc");
+
+    // §V.B: identical performance of the two matching modes in binary domain.
+    section("§V.B — feature count vs similarity (binary domain)");
+    let mm = &meta.experiments.matching_modes;
+    println!(
+        "python-side: fc={:.4} sim={:.4} agreement={:.4}",
+        mm.feature_count_acc, mm.similarity_binary_acc, mm.agreement
+    );
+    let mut sim = Pipeline::new(&ServeConfig {
+        artifacts_dir: "artifacts".into(),
+        backend: Backend::Similarity,
+        ..Default::default()
+    })
+    .unwrap();
+    let eval_sim = sim.evaluate(&images, &labels, 32).unwrap();
+    println!(
+        "rust-side:   fc={:.4} sim={:.4}",
+        eval.accuracy, eval_sim.accuracy
+    );
+    assert!(
+        (eval.accuracy - eval_sim.accuracy).abs() < 0.02,
+        "paper shape: binary fc and similarity must perform identically"
+    );
+    // Sanity on the confusion matrix itself.
+    let total: u64 = eval.confusion.iter().flatten().sum();
+    assert_eq!(total as usize, n);
+    println!("\nfig6_fig7_matching: PASS");
+}

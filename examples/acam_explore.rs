@@ -1,0 +1,128 @@
+//! ACAM design exploration: sweep device variability and compare the two
+//! published TXL cells (6T4R charging vs 3T1R precharging), plus a window
+//! diagnostic and an on-device template-refresh demo using the Rust k-means
+//! substrate.
+//!
+//!     cargo run --release --example acam_explore
+
+use hec::acam::cell::CellKind;
+use hec::acam::program::{binary_query_voltages, program_array, WindowMode};
+use hec::acam::{wta, ArrayConfig, Variability};
+use hec::config::{Backend, ServeConfig};
+use hec::coordinator::Pipeline;
+use hec::dataset::SyntheticDataset;
+use hec::kmeans;
+use hec::templates::TemplateStore;
+
+fn main() -> anyhow::Result<()> {
+    let store = TemplateStore::load("artifacts/templates.json")?;
+    let set = store.set(1)?;
+
+    // ---- 1. variability sweep, both cell kinds --------------------------
+    let cfg = ServeConfig {
+        artifacts_dir: "artifacts".into(),
+        backend: Backend::FeatureCount,
+        ..Default::default()
+    };
+    let mut pipeline = Pipeline::new(&cfg)?;
+    let n = 300;
+    let ds = SyntheticDataset::new(
+        1_000_003,
+        n,
+        pipeline.meta.norm.mean as f32,
+        pipeline.meta.norm.std as f32,
+    );
+    let (images, labels) = ds.batch(0, n);
+    // Extract features once through PJRT; replay them through the ACAM sim
+    // at each corner (isolates device effects from the front-end).
+    let feats = pipeline.extract_features(&images, n)?;
+    let nf = pipeline.meta.artifacts.n_features;
+
+    println!("=== accuracy vs variability level (feature replay, {n} samples) ===");
+    println!("{:>8} {:>14} {:>14}", "level", "6T4R", "3T1R");
+    for level in [0.0, 0.25, 0.5, 1.0, 2.0, 4.0, 8.0] {
+        let mut accs = Vec::new();
+        for kind in [CellKind::Charging6T4R, CellKind::Precharging3T1R] {
+            let var = Variability::at_level(level);
+            let mut arr = program_array(
+                set,
+                WindowMode::Binary,
+                ArrayConfig { kind, ..Default::default() },
+                var.clone(),
+                42,
+            );
+            let mut rng = hec::rng::Rng::new(7);
+            let mut correct = 0usize;
+            for (i, row) in feats.chunks_exact(nf).enumerate() {
+                let bits = store.binarize(row);
+                let out = arr.search(&binary_query_voltages(&bits));
+                let pred = wta::winner_take_all_classes(
+                    &out.similarity,
+                    &set.class_of,
+                    store.num_classes,
+                    &var,
+                    &mut rng,
+                );
+                correct += usize::from(pred == labels[i]);
+            }
+            accs.push(correct as f64 / n as f64);
+        }
+        println!("{level:>8.2} {:>14.4} {:>14.4}", accs[0], accs[1]);
+    }
+
+    // ---- 2. window diagnostic: programming error vs variability ----------
+    println!("\n=== programmed-window error vs variability (volts, row 0) ===");
+    for level in [0.0, 1.0, 4.0] {
+        let arr = program_array(
+            set,
+            WindowMode::Binary,
+            ArrayConfig::default(),
+            Variability::at_level(level),
+            42,
+        );
+        println!(
+            "level {level:>4}: full-match headroom {:.2}x (rows={}, width={})",
+            arr.full_match_headroom(),
+            arr.num_rows(),
+            arr.width()
+        );
+    }
+
+    // ---- 3. on-device template refresh with the Rust k-means -------------
+    // Cluster served binary feature maps per class and measure how well the
+    // regenerated templates agree with the deployed ones.
+    println!("\n=== on-device template refresh (k-means over served features) ===");
+    let mut agreements = Vec::new();
+    for class in 0..store.num_classes {
+        let rows: Vec<Vec<f64>> = feats
+            .chunks_exact(nf)
+            .enumerate()
+            .filter(|(i, _)| labels[*i] == class)
+            .map(|(_, row)| store.binarize(row).iter().map(|&b| b as f64).collect())
+            .collect();
+        if rows.is_empty() {
+            continue;
+        }
+        let clustering = kmeans::kmeans(&rows, 1, 20, 2, 7);
+        let refreshed: Vec<u8> = clustering.centroids[0]
+            .iter()
+            .map(|&v| u8::from(v > 0.5))
+            .collect();
+        let deployed = &set.templates[set
+            .class_of
+            .iter()
+            .position(|&c| c == class)
+            .unwrap()];
+        let agree = refreshed
+            .iter()
+            .zip(deployed.iter())
+            .filter(|(a, b)| a == b)
+            .count() as f64
+            / nf as f64;
+        agreements.push(agree);
+        println!("class {class}: refreshed/deployed agreement {:.1}%", agree * 100.0);
+    }
+    let mean = agreements.iter().sum::<f64>() / agreements.len() as f64;
+    println!("mean agreement {:.1}%", mean * 100.0);
+    Ok(())
+}

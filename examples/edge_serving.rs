@@ -1,0 +1,94 @@
+//! End-to-end serving driver — the repo's E2E validation workload.
+//!
+//! Starts the coordinator (dynamic batcher + PJRT front-end + ACAM-sim
+//! back-end), drives it with multi-threaded clients submitting a realistic
+//! synthetic request stream, and reports accuracy, latency percentiles,
+//! throughput and the modelled per-inference energy.  The run recorded in
+//! EXPERIMENTS.md §E2E comes from this binary.
+//!
+//!     cargo run --release --example edge_serving [-- requests clients]
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use hec::config::{Backend, ServeConfig};
+use hec::coordinator::Server;
+use hec::dataset::SyntheticDataset;
+use hec::runtime::Meta;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let requests: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(2000);
+    let clients: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(4);
+
+    let mut cfg = ServeConfig {
+        artifacts_dir: "artifacts".into(),
+        backend: Backend::AcamSim,
+        ..Default::default()
+    };
+    cfg.batch.max_batch = 32;
+    cfg.batch.max_wait_us = 2_000;
+
+    let server = Server::start(cfg)?;
+    let meta = Meta::load("artifacts")?;
+    let img_len = meta.artifacts.image_size * meta.artifacts.image_size;
+    let ds = SyntheticDataset::new(1_000_003, 512, meta.norm.mean as f32, meta.norm.std as f32);
+
+    // Pre-render the request pool (clients replay it round-robin).
+    let pool: Vec<(Vec<f32>, usize)> = (0..512).map(|i| (ds.image(i), ds.label(i))).collect();
+    let pool = Arc::new(pool);
+    let correct = Arc::new(AtomicUsize::new(0));
+    let done = Arc::new(AtomicUsize::new(0));
+
+    let t0 = std::time::Instant::now();
+    let mut joins = Vec::new();
+    for c in 0..clients {
+        let handle = server.handle.clone();
+        let pool = Arc::clone(&pool);
+        let correct = Arc::clone(&correct);
+        let done = Arc::clone(&done);
+        let per_client = requests / clients;
+        joins.push(std::thread::spawn(move || {
+            for r in 0..per_client {
+                let (img, label) = &pool[(c * per_client + r) % pool.len()];
+                // Retry on backpressure.
+                let rx = loop {
+                    match handle.submit(img.clone()) {
+                        Ok(rx) => break rx,
+                        Err(_) => std::thread::sleep(std::time::Duration::from_micros(200)),
+                    }
+                };
+                if let Ok(Ok(res)) = rx.recv() {
+                    if res.class == *label {
+                        correct.fetch_add(1, Ordering::Relaxed);
+                    }
+                    done.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    let n = done.load(Ordering::Relaxed);
+
+    println!("=== edge serving E2E ({n} requests, {clients} clients, batcher 32/2ms) ===");
+    println!("{}", server.handle.metrics.snapshot());
+    println!("throughput = {:.0} req/s", n as f64 / secs);
+    println!(
+        "accuracy   = {:.4} ({}/{})",
+        correct.load(Ordering::Relaxed) as f64 / n as f64,
+        correct.load(Ordering::Relaxed),
+        n
+    );
+    println!(
+        "energy     = {:.2} nJ / inference (modelled)",
+        server.handle.metrics.snapshot().energy_nj / n as f64
+    );
+    assert_eq!(n, requests, "all requests must complete");
+    drop(server.handle.clone()); // metrics borrowed above
+    server.shutdown();
+    println!("img_len={img_len} (driver sanity)");
+    Ok(())
+}

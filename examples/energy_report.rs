@@ -1,0 +1,63 @@
+//! §V.D energy report: the paper-scale reproduction (published arithmetic),
+//! the strict-pJ variant (unit-slip note in `hec::energy`), the as-built
+//! deployment, and the per-layer Eq. 13 MAC ledger.
+//!
+//!     cargo run --release --example energy_report
+
+use hec::energy::{constants, effective_macs, student_layers, EnergyModel, Scale};
+use hec::runtime::Meta;
+
+fn main() -> anyhow::Result<()> {
+    let model = EnergyModel::default();
+
+    println!("=== §V.D (paper scale, published arithmetic) ===");
+    let r = model.report(Scale::Paper);
+    println!("{r}");
+    println!(
+        "\npublished: E_front={} nJ  E_back={} nJ  E_total={} nJ  teacher={} uJ  reduction={}x",
+        constants::E_FRONTEND_NJ,
+        constants::E_BACKEND_NJ,
+        constants::E_TOTAL_NJ,
+        constants::E_TEACHER_UJ,
+        constants::ENERGY_REDUCTION
+    );
+    println!(
+        "strict-pJ front-end variant: {:.0} nJ (x1000 the published figure — \
+         see the unit-slip note in rust/src/energy/mod.rs)",
+        model.frontend_strict_pj_nj(constants::FRONTEND_OPS_ACAM)
+    );
+
+    println!("\n=== Eq. 13 ledger: Fig.-5 student, per layer ===");
+    println!("{:<8} {:>14} {:>10}", "layer", "MACs", "params");
+    let layers = student_layers();
+    for l in &layers {
+        println!("{:<8} {:>14} {:>10}", l.name(), l.macs(), l.params());
+    }
+    let total: u64 = layers.iter().map(|l| l.macs()).sum();
+    println!("{:<8} {:>14}", "total", total);
+    println!(
+        "effective at 80% sparsity: {} (paper: {})",
+        effective_macs(total, 0.8),
+        constants::STUDENT_OPT.macs
+    );
+
+    if let Ok(meta) = Meta::load("artifacts") {
+        println!("\n=== as-built deployment ===");
+        println!(
+            "{}",
+            model.report(Scale::AsBuilt {
+                frontend_ops: meta.macs.as_built.student_effective,
+                teacher_macs: meta.macs.as_built.teacher_gray.macs,
+                n_templates: meta.artifacts.n_templates as u64,
+                n_features: meta.artifacts.n_features as u64,
+            })
+        );
+        println!(
+            "\n(as-built teacher is width-scaled for CPU training — the paper-scale \
+             block above is the published comparison; see DESIGN.md §Substitutions)"
+        );
+    } else {
+        println!("\n(no artifacts/ — run `make artifacts` for the as-built block)");
+    }
+    Ok(())
+}

@@ -1,0 +1,58 @@
+//! Quickstart: load the deployed artifacts, classify a handful of samples
+//! through the full hybrid stack, print predictions + the per-inference
+//! energy estimate.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use hec::config::{Backend, ServeConfig};
+use hec::coordinator::Pipeline;
+use hec::dataset::{SyntheticDataset, CLASS_NAMES};
+
+fn main() -> anyhow::Result<()> {
+    // 1. Point the pipeline at the artifacts produced by `make artifacts`.
+    let cfg = ServeConfig {
+        artifacts_dir: "artifacts".into(),
+        backend: Backend::AcamSim, // the paper's system: CNN front-end + ACAM
+        templates_per_class: 1,
+        ..Default::default()
+    };
+    let mut pipeline = Pipeline::new(&cfg)?;
+    println!(
+        "loaded: {} features, {} templates, image {}x{}",
+        pipeline.meta.artifacts.n_features,
+        pipeline.meta.artifacts.n_templates,
+        pipeline.meta.artifacts.image_size,
+        pipeline.meta.artifacts.image_size
+    );
+
+    // 2. Build a small labelled workload (the synthetic CIFAR-like test
+    //    distribution the models were trained against).
+    let n = 12;
+    let ds = SyntheticDataset::new(
+        1_000_003,
+        n,
+        pipeline.meta.norm.mean as f32,
+        pipeline.meta.norm.std as f32,
+    );
+    let (images, labels) = ds.batch(0, n);
+
+    // 3. Classify.
+    let results = pipeline.classify_batch(&images, n)?;
+    let mut correct = 0;
+    for (i, r) in results.iter().enumerate() {
+        let ok = r.class == labels[i];
+        correct += usize::from(ok);
+        println!(
+            "sample {i:>2}: {} -> predicted {:<10} truth {:<10} ({:.2} nJ)",
+            if ok { "ok " } else { "ERR" },
+            CLASS_NAMES[r.class],
+            CLASS_NAMES[labels[i]],
+            r.energy_nj,
+        );
+    }
+    println!("\naccuracy {correct}/{n}");
+
+    // 4. The §V.D energy story for this deployment.
+    println!("\n{}", pipeline.energy_report());
+    Ok(())
+}

@@ -1,0 +1,446 @@
+"""AOT export — the single build-time entry point (`make artifacts`).
+
+Runs the full Section-II pipeline (teacher -> distill -> prune -> QAT ->
+templates), evaluates every experiment the paper reports (Table I, Table II,
+Fig. 1, Fig. 6, Fig. 7, §V.D inputs), and emits the artifacts/ contract
+described in DESIGN.md:
+
+  *.hlo.txt        — HLO *text* modules for the Rust PJRT runtime (text, not
+                     serialized proto: jax>=0.5 emits 64-bit instruction ids
+                     that xla_extension 0.5.1 rejects; the text parser
+                     reassigns ids).
+  templates.json   — binary templates + matching windows, k = 1, 2, 3.
+  meta.json        — shapes, norm stats, metrics, MAC ledger, experiment data.
+  train_log.json   — per-epoch loss/accuracy for every phase.
+
+Python never runs again after this: the Rust binary is self-contained.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import re
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import data, macs, templates as tpl
+from .config import PipelineConfig
+from .model import (
+    init_student,
+    init_teacher,
+    student_features,
+    student_logits,
+    student_param_count,
+    teacher_logits,
+)
+from .prune import prune_student, sparsity_of
+from .qat import qat_student
+from .train import (
+    distill_student,
+    eval_metrics,
+    train_student_baseline,
+    train_teacher,
+)
+from .kernels import (
+    binary_quantize,
+    match_feature_count,
+    match_similarity,
+    ref,
+)
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (return_tuple=True so the Rust
+    side unwraps with to_tuple1/tuple elements)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+# The xla_client bundled with this jaxlib corrupts *large* dense constants on
+# the mlir->XlaComputation conversion (values come back as iota bit
+# patterns), so weights must NEVER be baked into the graph: every exported
+# entry point takes them as runtime parameters and ships them in a binary
+# sidecar (<name>.params.bin + <name>.params.json) that the Rust runtime
+# uploads once as PJRT buffers.  This guard catches any regression.
+_CONST_RE = re.compile(r"constant\(\{")
+
+
+def check_no_large_constants(text: str, name: str) -> None:
+    for line in text.splitlines():
+        if "constant(" not in line:
+            continue
+        if _CONST_RE.search(line) and line.count(",") > 16:
+            raise RuntimeError(
+                f"{name}: exported HLO contains a large baked constant — "
+                f"these are corrupted by the mlir->XLA conversion; pass the "
+                f"array as a runtime parameter instead:\n{line[:200]}"
+            )
+
+
+def export_hlo(fn, example_args, path: str) -> int:
+    text = to_hlo_text(jax.jit(fn).lower(*example_args))
+    check_no_large_constants(text, os.path.basename(path))
+    with open(path, "w") as f:
+        f.write(text)
+    return len(text)
+
+
+def export_parameterized(fn_flat, x_specs, flat_arrays, out_dir: str, name: str) -> int:
+    """Export `fn_flat(*x_specs, *flat) -> (out,)` plus its parameter sidecar.
+
+    The weights travel in `<name>.params.bin` (raw little-endian f32) with a
+    `<name>.params.json` manifest (shape per array, in argument order); the
+    Rust runtime uploads them once and appends them to every execute call.
+    """
+    flat_specs = [jax.ShapeDtypeStruct(a.shape, jnp.float32) for a in flat_arrays]
+    text = to_hlo_text(jax.jit(fn_flat).lower(*x_specs, *flat_specs))
+    check_no_large_constants(text, name)
+    with open(os.path.join(out_dir, f"{name}.hlo.txt"), "w") as f:
+        f.write(text)
+    manifest = {"arrays": []}
+    with open(os.path.join(out_dir, f"{name}.params.bin"), "wb") as f:
+        offset = 0
+        for a in flat_arrays:
+            arr = np.asarray(a, dtype=np.float32)
+            f.write(arr.tobytes())  # little-endian on every supported host
+            manifest["arrays"].append({"shape": list(arr.shape), "offset": offset})
+            offset += arr.size
+        manifest["total"] = offset
+    with open(os.path.join(out_dir, f"{name}.params.json"), "w") as f:
+        json.dump(manifest, f)
+    return len(text)
+
+
+# ---------------------------------------------------------------------------
+# Pipeline
+# ---------------------------------------------------------------------------
+
+
+def run_pipeline(cfg: PipelineConfig, out_dir: str, use_pallas_export: bool = True):
+    os.makedirs(out_dir, exist_ok=True)
+    t_start = time.time()
+    log: list = []
+    meta: dict = {"config": json.loads(cfg.to_json())}
+
+    # ---- data -------------------------------------------------------------
+    tx, ty, vx, vy, norm = data.load(cfg.data)
+    txc, tyc, vxc, vyc, norm_c = data.load(cfg.data, color=True)
+    meta["norm"] = norm
+    meta["norm_color"] = norm_c
+    meta["dataset"] = {
+        "train": len(tx),
+        "test": len(vx),
+        "source": "cifar10" if (cfg.data.cifar_dir or os.environ.get("CIFAR10_DIR")) else "synthetic",
+    }
+    print(f"[data] train={len(tx)} test={len(vx)} source={meta['dataset']['source']}")
+
+    # ---- teacher (colour + greyscale, Table I rows 1-2) ---------------------
+    key = jax.random.PRNGKey(cfg.teacher.seed)
+    tparams_c, tstate_c = init_teacher(cfg.teacher, key, in_channels=3)
+    tparams_c, tstate_c, log = train_teacher(cfg.teacher, tparams_c, tstate_c, txc, tyc, vxc, vyc, log)
+    teacher_c_apply = jax.jit(
+        lambda p, s, xb: teacher_logits(p, s, xb, cfg.teacher, training=False)[0]
+    )
+    m_teacher_c = eval_metrics(teacher_c_apply, tparams_c, tstate_c, vxc, vyc)
+    print(f"[teacher colour] acc={m_teacher_c['accuracy']:.4f}")
+
+    tparams, tstate = init_teacher(cfg.teacher, jax.random.PRNGKey(cfg.teacher.seed + 1), in_channels=1)
+    tparams, tstate, log = train_teacher(cfg.teacher, tparams, tstate, tx, ty, vx, vy, log)
+    teacher_apply = jax.jit(
+        lambda p, s, xb: teacher_logits(p, s, xb, cfg.teacher, training=False)[0]
+    )
+    m_teacher_g = eval_metrics(teacher_apply, tparams, tstate, vx, vy)
+    print(f"[teacher grey]   acc={m_teacher_g['accuracy']:.4f}")
+
+    # ---- student baseline (Table I row 3) -----------------------------------
+    sparams_b, sstate_b = init_student(cfg.student, jax.random.PRNGKey(cfg.student.seed))
+    sparams_b, sstate_b, log = train_student_baseline(
+        cfg.student, sparams_b, sstate_b, tx, ty, vx, vy, log
+    )
+    student_apply = jax.jit(lambda p, s, xb: student_logits(p, s, xb, training=False)[0])
+    m_student_b = eval_metrics(student_apply, sparams_b, sstate_b, vx, vy)
+    print(f"[student base]   acc={m_student_b['accuracy']:.4f}")
+
+    # ---- student optimised: distill -> prune -> QAT (Table I row 4) ---------
+    sparams, sstate = init_student(cfg.student, jax.random.PRNGKey(cfg.student.seed + 1))
+    frozen_teacher = lambda xb: teacher_apply(tparams, tstate, xb)
+    sparams, sstate, log = distill_student(
+        cfg.distill, cfg.student, sparams, sstate, frozen_teacher, tx, ty, vx, vy, log
+    )
+    sparams, sstate, masks, log = prune_student(
+        cfg.prune, cfg.student, sparams, sstate, tx, ty, vx, vy, log
+    )
+    sparams, sstate, log = qat_student(
+        cfg.quant, cfg.student, sparams, sstate, masks, tx, ty, vx, vy, log
+    )
+    m_student_o = eval_metrics(student_apply, sparams, sstate, vx, vy)
+    achieved_sparsity = sparsity_of(sparams, masks)
+    print(f"[student opt]    acc={m_student_o['accuracy']:.4f} sparsity={achieved_sparsity:.3f}")
+
+    # ---- MAC / parameter ledger (Eq. 13; as-built + paper-scale) ------------
+    s_layers = macs.student_layers(cfg.student.filters)
+    t_layers = macs.teacher_layers(cfg.teacher.width, cfg.teacher.blocks_per_stage)
+    tc_layers = macs.teacher_layers(cfg.teacher.width, cfg.teacher.blocks_per_stage, in_ch=3)
+    # Effective (sparsity-skipped) MACs cover the pruned conv stack only;
+    # the dense head is unpruned and accounted separately — the ACAM removes
+    # it entirely (§V.D), the softmax baseline pays it in full.
+    head_macs = s_layers[-1].macs
+    head_ops = s_layers[-1].params  # 784*10 + 10 = the paper's 7,850
+    conv_macs = macs.total_macs(s_layers) - head_macs
+    meta["macs"] = {
+        "as_built": {
+            "student": macs.model_summary(s_layers),
+            "teacher_gray": macs.model_summary(t_layers),
+            "teacher_color": macs.model_summary(tc_layers),
+            "student_effective": macs.effective_macs(conv_macs, achieved_sparsity),
+            "head_ops": head_ops,
+            "student_params_actual": student_param_count(sparams),
+            "achieved_sparsity": achieved_sparsity,
+        },
+        "paper_scale": macs.PAPER,
+    }
+
+    # ---- feature extraction for templates -----------------------------------
+    feat_apply = jax.jit(lambda p, s, xb: student_features(p, s, xb, training=False)[0])
+    def features_of(x):
+        out = [np.asarray(feat_apply(sparams, sstate, jnp.asarray(x[i : i + 256])))
+               for i in range(0, len(x), 256)]
+        return np.concatenate(out)
+
+    feats_train = features_of(tx)
+    feats_test = features_of(vx)
+
+    th_mean = tpl.feature_thresholds(feats_train, "mean")
+    th_median = tpl.feature_thresholds(feats_train, "median")
+    thresholds = th_mean if cfg.quant.threshold_mode == "mean" else th_median
+    bin_train = tpl.binarize(feats_train, thresholds)
+    bin_test = tpl.binarize(feats_test, thresholds)
+
+    # ---- experiments: Fig. 1, Table II, Fig. 6/7, matching modes ------------
+    experiments: dict = {}
+    experiments["fig1_thresholds"] = {
+        "mean": th_mean.tolist(),
+        "median": th_median.tolist(),
+    }
+
+    stores = {}
+    multi_template_acc = {}
+    for k in (1, 2, 3):
+        store = tpl.generate_templates(
+            bin_train,
+            feats_train,
+            ty,
+            cfg.data.num_classes,
+            k,
+            cfg.template.kmeans_iters,
+            cfg.template.kmeans_restarts,
+            cfg.template.window_margin,
+            cfg.template.seed,
+        )
+        stores[k] = store
+        pred = tpl.match_predict_fc(bin_test, store, cfg.data.num_classes)
+        multi_template_acc[k] = float((pred == vy).mean())
+        print(f"[match k={k}] feature-count acc={multi_template_acc[k]:.4f} "
+              f"silhouette={['%.3f' % s for s in store['silhouette']]}")
+    experiments["table2_multi_template"] = multi_template_acc
+
+    # Mean vs median thresholding accuracy (Fig. 1's downstream consequence).
+    store_mean = stores[1]
+    bin_train_med = tpl.binarize(feats_train, th_median)
+    bin_test_med = tpl.binarize(feats_test, th_median)
+    store_med = tpl.generate_templates(
+        bin_train_med, feats_train, ty, cfg.data.num_classes, 1,
+        cfg.template.kmeans_iters, cfg.template.kmeans_restarts,
+        cfg.template.window_margin, cfg.template.seed,
+    )
+    acc_mean_th = multi_template_acc[1]
+    acc_med_th = float(
+        (tpl.match_predict_fc(bin_test_med, store_med, cfg.data.num_classes) == vy).mean()
+    )
+    experiments["fig1_threshold_accuracy"] = {"mean": acc_mean_th, "median": acc_med_th}
+    print(f"[fig1] mean-threshold acc={acc_mean_th:.4f} median-threshold acc={acc_med_th:.4f}")
+
+    # Fig. 6/7: confusion + per-class accuracy of feature-count matching (k=1).
+    pred_fc = tpl.match_predict_fc(bin_test, store_mean, cfg.data.num_classes)
+    cm = np.zeros((cfg.data.num_classes, cfg.data.num_classes), dtype=np.int64)
+    for t, p in zip(vy, pred_fc):
+        cm[int(t), int(p)] += 1
+    from .train import confusion_metrics
+
+    m_match = confusion_metrics(cm)
+    experiments["fig6_confusion"] = m_match["confusion"]
+    experiments["fig7_per_class_accuracy"] = m_match["per_class_accuracy"]
+
+    # §V.B: binary-domain equivalence of feature-count and similarity matching.
+    pred_sim = tpl.match_predict_sim(
+        bin_test, store_mean, cfg.data.num_classes, cfg.template.similarity_alpha
+    )
+    experiments["matching_modes"] = {
+        "feature_count_acc": float((pred_fc == vy).mean()),
+        "similarity_binary_acc": float((pred_sim == vy).mean()),
+        "agreement": float((pred_fc == pred_sim).mean()),
+    }
+
+    # Table I assembly (as-measured).
+    experiments["table1"] = {
+        "teacher_color": {**{k: m_teacher_c[k] for k in ("accuracy", "f1", "precision", "recall")},
+                          "params": macs.total_params(tc_layers), "macs": macs.total_macs(tc_layers)},
+        "teacher_gray": {**{k: m_teacher_g[k] for k in ("accuracy", "f1", "precision", "recall")},
+                         "params": macs.total_params(t_layers), "macs": macs.total_macs(t_layers)},
+        "student_base": {**{k: m_student_b[k] for k in ("accuracy", "f1", "precision", "recall")},
+                         "params": student_param_count(sparams_b), "macs": macs.total_macs(s_layers)},
+        "student_opt": {**{k: m_student_o[k] for k in ("accuracy", "f1", "precision", "recall")},
+                        "params": student_param_count(sparams),
+                        "macs": meta["macs"]["as_built"]["student_effective"]},
+    }
+    meta["experiments"] = experiments
+
+    # Golden record for the Rust integration tests: expected behaviour of the
+    # deployed artifacts on the first test samples (same generator seed the
+    # Rust synthetic workload uses).
+    meta["golden"] = {
+        "test_seed": cfg.data.seed + 1_000_003,
+        "n": 32,
+        "labels": [int(v) for v in vy[:32]],
+        "pred_fc_k1": [int(p) for p in pred_fc[:32]],
+        "features_row0_first8": [float(v) for v in feats_test[0][:8]],
+        "binary_row0_ones": int(bin_test[0].sum()),
+    }
+
+    # ---- templates.json ------------------------------------------------------
+    tjson = {
+        "num_classes": cfg.data.num_classes,
+        "n_features": int(bin_train.shape[1]),
+        "threshold_mode": cfg.quant.threshold_mode,
+        "thresholds": thresholds.tolist(),
+        "thresholds_mean": th_mean.tolist(),
+        "thresholds_median": th_median.tolist(),
+        "similarity_alpha": cfg.template.similarity_alpha,
+        "stores": {
+            str(k): {
+                "templates": stores[k]["templates"].astype(int).tolist(),
+                "lo": stores[k]["lo"].tolist(),
+                "hi": stores[k]["hi"].tolist(),
+                "bin_lo": stores[k]["bin_lo"].tolist(),
+                "bin_hi": stores[k]["bin_hi"].tolist(),
+                "class_of": stores[k]["class_of"].tolist(),
+                "silhouette": stores[k]["silhouette"],
+            }
+            for k in stores
+        },
+    }
+    with open(os.path.join(out_dir, "templates.json"), "w") as f:
+        json.dump(tjson, f)
+
+    # ---- HLO export -----------------------------------------------------------
+    # Weights are runtime parameters (see export_parameterized): flatten the
+    # student/teacher pytrees once and close over the treedefs.
+    n_feat = int(bin_train.shape[1])
+    n_templ = len(store_mean["class_of"])
+    s_flat, s_treedef = jax.tree_util.tree_flatten((sparams, sstate))
+    # The feature-extractor exports must not carry the (unused) softmax head:
+    # XLA drops unused parameters during conversion, which would desynchronise
+    # the sidecar's argument order from the compiled program.
+    sparams_fe = {k: v for k, v in sparams.items() if k != "head"}
+    fe_flat, fe_treedef = jax.tree_util.tree_flatten((sparams_fe, sstate))
+    t_flat, t_treedef = jax.tree_util.tree_flatten((tparams, tstate))
+    th_arr = np.asarray(thresholds, np.float32)
+
+    def fwd_flat(x, *flat):
+        p, s = jax.tree_util.tree_unflatten(fe_treedef, flat)
+        return (student_features(p, s, x, training=False, use_pallas=use_pallas_export)[0],)
+
+    def fwd_fast_flat(x, *flat):
+        # CPU-serving variant: identical math through the pure-jnp path
+        # (XLA's native convolutions), numerically equal to the Pallas
+        # artifact (pinned by tests).  The Pallas artifact remains the
+        # TPU-shaped deliverable; the coordinator picks this one on CPU.
+        p, s = jax.tree_util.tree_unflatten(fe_treedef, flat)
+        return (student_features(p, s, x, training=False, use_pallas=False)[0],)
+
+    def fwd_softmax_flat(x, *flat):
+        p, s = jax.tree_util.tree_unflatten(s_treedef, flat)
+        return (student_logits(p, s, x, training=False, use_pallas=use_pallas_export)[0],)
+
+    def fwd_binary_flat(x, *flat):
+        th = flat[-1]
+        p, s = jax.tree_util.tree_unflatten(fe_treedef, flat[:-1])
+        f = student_features(p, s, x, training=False, use_pallas=use_pallas_export)[0]
+        return (binary_quantize(f, th),)
+
+    def teacher_flat(x, *flat):
+        p, s = jax.tree_util.tree_unflatten(t_treedef, flat)
+        return (teacher_logits(p, s, x, cfg.teacher, training=False)[0],)
+
+    sizes = {}
+    for b in cfg.export_batch_sizes:
+        x_spec = jax.ShapeDtypeStruct((b, cfg.data.image_size, cfg.data.image_size, 1), jnp.float32)
+        q_spec = jax.ShapeDtypeStruct((b, n_feat), jnp.float32)
+        t_spec = jax.ShapeDtypeStruct((n_templ, n_feat), jnp.float32)
+
+        def mfc(q, t):
+            return (match_feature_count(q, t),)
+
+        def msim(q, lo, hi):
+            return (match_similarity(q, lo, hi, cfg.template.similarity_alpha),)
+
+        sizes[f"student_fwd_b{b}"] = export_parameterized(
+            fwd_flat, (x_spec,), fe_flat, out_dir, f"student_fwd_b{b}")
+        sizes[f"student_fwd_fast_b{b}"] = export_parameterized(
+            fwd_fast_flat, (x_spec,), fe_flat, out_dir, f"student_fwd_fast_b{b}")
+        sizes[f"student_softmax_b{b}"] = export_parameterized(
+            fwd_softmax_flat, (x_spec,), s_flat, out_dir, f"student_softmax_b{b}")
+        sizes[f"student_binary_b{b}"] = export_parameterized(
+            fwd_binary_flat, (x_spec,), fe_flat + [th_arr], out_dir, f"student_binary_b{b}")
+        # The matchers take queries and templates as runtime args already.
+        sizes[f"match_fc_b{b}"] = export_hlo(
+            mfc, (q_spec, t_spec), os.path.join(out_dir, f"match_fc_b{b}.hlo.txt"))
+        sizes[f"match_sim_b{b}"] = export_hlo(
+            msim, (q_spec, t_spec, t_spec), os.path.join(out_dir, f"match_sim_b{b}.hlo.txt"))
+
+    # Teacher (greyscale) at batch 8 for the energy/latency comparison bench.
+    xt_spec = jax.ShapeDtypeStruct((8, cfg.data.image_size, cfg.data.image_size, 1), jnp.float32)
+    sizes["teacher_fwd_b8"] = export_parameterized(
+        teacher_flat, (xt_spec,), t_flat, out_dir, "teacher_fwd_b8")
+
+    meta["artifacts"] = {
+        "hlo_sizes": sizes,
+        "batch_sizes": list(cfg.export_batch_sizes),
+        "n_features": n_feat,
+        "n_templates": n_templ,
+        "image_size": cfg.data.image_size,
+        "use_pallas": use_pallas_export,
+    }
+    meta["wallclock_secs"] = time.time() - t_start
+
+    with open(os.path.join(out_dir, "meta.json"), "w") as f:
+        json.dump(meta, f, indent=1)
+    with open(os.path.join(out_dir, "train_log.json"), "w") as f:
+        json.dump(log, f, indent=1)
+    print(f"[done] {len(sizes)} HLO artifacts -> {out_dir} in {meta['wallclock_secs']:.1f}s")
+    return meta
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifacts directory")
+    ap.add_argument("--full", action="store_true",
+                    help="paper-leaning config (slower) instead of the fast CPU config")
+    ap.add_argument("--no-pallas", action="store_true",
+                    help="export jnp-path HLO (debug aid)")
+    args = ap.parse_args()
+    cfg = PipelineConfig() if args.full else PipelineConfig.fast()
+    run_pipeline(cfg, args.out, use_pallas_export=not args.no_pallas)
+
+
+if __name__ == "__main__":
+    main()

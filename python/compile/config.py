@@ -1,0 +1,151 @@
+"""Hyper-parameter configuration for the hybrid edge classifier pipeline.
+
+Every stage of the paper's methodology (Section II) is parameterised here so
+that the ablation sweeps in ``run_experiments.py`` and the AOT export in
+``aot.py`` share a single source of truth.  Values default to the paper's
+choices; scale knobs (dataset size, teacher width, epochs) default to values
+that train in minutes on a single CPU — the paper-scale constants used for
+the Table I / §V.D energy accounting live in :mod:`compile.macs`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from dataclasses import dataclass, field
+from typing import Optional
+
+
+@dataclass
+class DataConfig:
+    """Dataset parameters (Section IV-A).
+
+    If ``cifar_dir`` points at an extracted CIFAR-10 python-pickle directory
+    the real dataset is used; otherwise the synthetic CIFAR-like generator in
+    :mod:`compile.data` produces a matched-shape workload (see DESIGN.md
+    §Substitutions).
+    """
+
+    cifar_dir: Optional[str] = None  # $CIFAR10_DIR override in data.py
+    image_size: int = 32
+    num_classes: int = 10
+    grayscale: bool = True  # paper: Y = .2989 R + .5870 G + .1140 B
+    train_samples: int = 4000  # synthetic generator sizes (paper: 50_000)
+    test_samples: int = 1000  # paper: 10_000
+    seed: int = 0
+
+
+@dataclass
+class TeacherConfig:
+    """Teacher ResNet (Section IV-B): 3 stages of residual blocks.
+
+    The paper calls it ResNet-50 but describes the CIFAR-style 3-stage
+    residual network (16/32/64-channel stages, two 3x3 convs per block).
+    ``width`` scales the first-stage channel count; ``blocks_per_stage``
+    scales depth.  Paper-scale: width=16 with enough blocks for 26.2M params;
+    default here is CPU-trainable.
+    """
+
+    width: int = 16
+    blocks_per_stage: int = 1
+    l2: float = 1e-4
+    epochs: int = 6
+    batch_size: int = 64
+    lr: float = 1e-3
+    seed: int = 1
+
+
+@dataclass
+class StudentConfig:
+    """Student CNN (Fig. 5): conv32-BN-pool, conv128-BN-pool, conv256, conv16.
+
+    The trailing 2x2-valid conv16 reduces the 8x8x256 map to 7x7x16 = 784
+    features — the template width used throughout Section V.
+    """
+
+    filters: tuple = (32, 128, 256, 16)
+    feature_dim: int = 784  # 7*7*16, fixed by the Fig. 5 architecture
+    epochs: int = 6
+    batch_size: int = 64
+    lr: float = 1e-3
+    seed: int = 2
+
+
+@dataclass
+class DistillConfig:
+    """Knowledge distillation (Section II-A, Eq. 1-4)."""
+
+    alpha: float = 0.7  # weight on the KD term in Eq. 1
+    temperature: float = 4.0  # T in Eq. 2-3
+    curriculum: bool = True  # teacher-loss-ordered batches (Eq. 4)
+    epochs: int = 6
+
+
+@dataclass
+class PruneConfig:
+    """Magnitude pruning (Section II-B, Eq. 5-7)."""
+
+    initial_sparsity: float = 0.50  # s_i
+    final_sparsity: float = 0.80  # s_f
+    pruning_steps: int = 8  # n_t in Eq. 5
+    finetune_steps_per_prune: int = 30
+    final_finetune_epochs: int = 2
+
+
+@dataclass
+class QuantConfig:
+    """Quantisation scheme (Section II-C)."""
+
+    weight_bits: int = 8
+    qat_epochs: int = 2
+    # Feature-map binarisation threshold mode for templates: "mean" | "median"
+    threshold_mode: str = "mean"
+
+
+@dataclass
+class TemplateConfig:
+    """ACAM template generation (Section II-D1)."""
+
+    templates_per_class: int = 1  # Table II sweeps 1, 2, 3
+    kmeans_iters: int = 50
+    kmeans_restarts: int = 4
+    similarity_alpha: float = 0.05  # alpha in Eq. 11
+    window_margin: float = 0.0  # half-width added around binary template bounds
+    seed: int = 3
+
+
+@dataclass
+class PipelineConfig:
+    """Top-level pipeline configuration."""
+
+    data: DataConfig = field(default_factory=DataConfig)
+    teacher: TeacherConfig = field(default_factory=TeacherConfig)
+    student: StudentConfig = field(default_factory=StudentConfig)
+    distill: DistillConfig = field(default_factory=DistillConfig)
+    prune: PruneConfig = field(default_factory=PruneConfig)
+    quant: QuantConfig = field(default_factory=QuantConfig)
+    template: TemplateConfig = field(default_factory=TemplateConfig)
+    # Batch sizes for which AOT inference artifacts are emitted.
+    export_batch_sizes: tuple = (1, 8, 32)
+
+    def to_json(self) -> str:
+        return json.dumps(dataclasses.asdict(self), indent=2, default=list)
+
+    @staticmethod
+    def fast() -> "PipelineConfig":
+        """A configuration that completes the full pipeline in ~1-2 min on CPU.
+
+        Used by the default ``make artifacts`` target and by the integration
+        tests; ``run_experiments.py --full`` scales everything up.
+        """
+        cfg = PipelineConfig()
+        cfg.data.train_samples = 2000
+        cfg.data.test_samples = 600
+        cfg.teacher.epochs = 4
+        cfg.student.epochs = 4
+        cfg.distill.epochs = 6
+        cfg.prune.pruning_steps = 6
+        cfg.prune.finetune_steps_per_prune = 25
+        cfg.prune.final_finetune_epochs = 2
+        cfg.quant.qat_epochs = 1
+        return cfg

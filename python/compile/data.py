@@ -1,0 +1,213 @@
+"""Dataset preparation (Section IV-A).
+
+Two sources, selected automatically:
+
+1. **Real CIFAR-10** — if ``cfg.cifar_dir`` (or ``$CIFAR10_DIR``) points at an
+   extracted ``cifar-10-batches-py`` directory, the standard pickle batches
+   are loaded.
+2. **Synthetic CIFAR-like generator** — otherwise, ten procedurally generated
+   32x32 texture/shape classes with controlled intra-class variability.  The
+   *identical* generator is implemented in ``rust/src/dataset/synthetic.rs``
+   so the Rust serving workload and the Python training distribution match
+   bit-for-bit in structure (same class recipes, same parameter ranges).
+
+Both paths apply the paper's grayscale conversion
+``Y = 0.2989 R + 0.5870 G + 0.1140 B`` and per-dataset normalisation.
+"""
+
+from __future__ import annotations
+
+import os
+import pickle
+from typing import Optional, Tuple
+
+import numpy as np
+
+from .config import DataConfig
+
+GRAY_WEIGHTS = np.array([0.2989, 0.5870, 0.1140], dtype=np.float32)
+
+CLASS_NAMES = (
+    "airplane", "automobile", "bird", "cat", "deer",
+    "dog", "frog", "horse", "ship", "truck",
+)
+
+
+def to_grayscale(rgb: np.ndarray) -> np.ndarray:
+    """Paper Eq.: Y = 0.2989 R + 0.5870 G + 0.1140 B.  rgb: [..., 3] in [0,1]."""
+    return np.tensordot(rgb, GRAY_WEIGHTS, axes=([-1], [0]))
+
+
+# ---------------------------------------------------------------------------
+# Synthetic CIFAR-like generator (mirrored by rust/src/dataset/synthetic.rs)
+# ---------------------------------------------------------------------------
+#
+# Each class is a parameterised recipe mixing low-frequency structure (the
+# "object") with textured background, at an SNR low enough that a linear
+# classifier cannot saturate — the teacher/student/matching accuracy ordering
+# of the paper then has room to show.  All randomness is drawn from a
+# SplitMix64-seeded Philox-free LCG identical to the Rust implementation, so
+# sample i of class c is the same image in both languages.
+
+
+def _splitmix64(x: int) -> int:
+    x = (x + 0x9E3779B97F4A7C15) & 0xFFFFFFFFFFFFFFFF
+    z = x
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & 0xFFFFFFFFFFFFFFFF
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & 0xFFFFFFFFFFFFFFFF
+    return z ^ (z >> 31)
+
+
+class Lcg:
+    """64-bit LCG (MMIX constants) seeded via SplitMix64; u01 uses top 53 bits.
+
+    Kept deliberately simple so the Rust mirror (dataset/synthetic.rs) is a
+    line-for-line translation.
+    """
+
+    A = 6364136223846793005
+    C = 1442695040888963407
+    MASK = 0xFFFFFFFFFFFFFFFF
+
+    def __init__(self, seed: int):
+        self.state = _splitmix64(seed & self.MASK)
+
+    def next_u64(self) -> int:
+        self.state = (self.A * self.state + self.C) & self.MASK
+        return self.state
+
+    def u01(self) -> float:
+        return (self.next_u64() >> 11) * (1.0 / 9007199254740992.0)
+
+    def range(self, lo: float, hi: float) -> float:
+        return lo + (hi - lo) * self.u01()
+
+
+def _grid(size: int) -> Tuple[np.ndarray, np.ndarray]:
+    ax = (np.arange(size, dtype=np.float32) + 0.5) / size
+    return np.meshgrid(ax, ax, indexing="ij")
+
+
+def synth_image(class_id: int, sample_id: int, seed: int, size: int = 32) -> np.ndarray:
+    """Render one grayscale synthetic sample in [0, 1].
+
+    Class recipes (matched in rust/src/dataset/synthetic.rs::render):
+      0 horizontal band   1 vertical band     2 centered disc
+      3 ring              4 diagonal stripes  5 anti-diagonal stripes
+      6 checkerboard      7 radial gradient   8 two-blob
+      9 cross
+    """
+    rng = Lcg((seed << 40) ^ (class_id << 20) ^ sample_id)
+    yy, xx = _grid(size)
+    cx, cy = rng.range(0.35, 0.65), rng.range(0.35, 0.65)
+    scale = rng.range(0.8, 1.25)
+    phase = rng.range(0.0, 1.0)
+    amp = rng.range(0.7, 1.0)
+
+    if class_id == 0:
+        img = np.exp(-(((yy - cy) / (0.12 * scale)) ** 2))
+    elif class_id == 1:
+        img = np.exp(-(((xx - cx) / (0.12 * scale)) ** 2))
+    elif class_id == 2:
+        r = np.sqrt((xx - cx) ** 2 + (yy - cy) ** 2)
+        img = (r < 0.22 * scale).astype(np.float32)
+    elif class_id == 3:
+        r = np.sqrt((xx - cx) ** 2 + (yy - cy) ** 2)
+        img = (np.abs(r - 0.25 * scale) < 0.06).astype(np.float32)
+    elif class_id == 4:
+        img = 0.5 + 0.5 * np.sin(2 * np.pi * (xx + yy) * 4.0 * scale + phase * 6.2831853)
+    elif class_id == 5:
+        img = 0.5 + 0.5 * np.sin(2 * np.pi * (xx - yy) * 4.0 * scale + phase * 6.2831853)
+    elif class_id == 6:
+        fx = np.floor(xx * 4.0 * scale + phase)
+        fy = np.floor(yy * 4.0 * scale + phase)
+        img = np.mod(fx + fy, 2.0)
+    elif class_id == 7:
+        r = np.sqrt((xx - cx) ** 2 + (yy - cy) ** 2)
+        img = np.clip(1.0 - r / (0.7 * scale), 0.0, 1.0)
+    elif class_id == 8:
+        d1 = (xx - cx * 0.6) ** 2 + (yy - cy) ** 2
+        d2 = (xx - (cx * 0.6 + 0.4)) ** 2 + (yy - cy) ** 2
+        img = np.exp(-d1 / (0.02 * scale)) + np.exp(-d2 / (0.02 * scale))
+    elif class_id == 9:
+        img = np.maximum(
+            np.exp(-(((yy - cy) / 0.08) ** 2)), np.exp(-(((xx - cx) / 0.08) ** 2))
+        )
+    else:
+        raise ValueError(f"class_id out of range: {class_id}")
+
+    img = amp * img.astype(np.float32)
+    # Textured background noise — deterministic per-pixel stream.
+    noise = np.empty((size, size), dtype=np.float32)
+    for i in range(size):
+        for j in range(size):
+            noise[i, j] = rng.u01()
+    img = 0.4 * img + 1.2 * (noise - 0.5)
+    return np.clip(img, 0.0, 1.0)
+
+
+def synth_dataset(n: int, seed: int, size: int = 32, num_classes: int = 10):
+    """Generate ``n`` samples round-robin over classes. Returns (x[N,S,S,1], y[N])."""
+    xs = np.zeros((n, size, size, 1), dtype=np.float32)
+    ys = np.zeros((n,), dtype=np.int32)
+    for i in range(n):
+        c = i % num_classes
+        xs[i, :, :, 0] = synth_image(c, i // num_classes, seed, size)
+        ys[i] = c
+    return xs, ys
+
+
+# ---------------------------------------------------------------------------
+# Real CIFAR-10 loader
+# ---------------------------------------------------------------------------
+
+
+def _load_cifar_batches(d: str):
+    def unpickle(p):
+        with open(p, "rb") as f:
+            return pickle.load(f, encoding="bytes")
+
+    xs, ys = [], []
+    for b in range(1, 6):
+        d_ = unpickle(os.path.join(d, f"data_batch_{b}"))
+        xs.append(d_[b"data"])
+        ys.extend(d_[b"labels"])
+    train_x = np.concatenate(xs).reshape(-1, 3, 32, 32).transpose(0, 2, 3, 1)
+    train_y = np.array(ys, dtype=np.int32)
+    t = unpickle(os.path.join(d, "test_batch"))
+    test_x = t[b"data"].reshape(-1, 3, 32, 32).transpose(0, 2, 3, 1)
+    test_y = np.array(t[b"labels"], dtype=np.int32)
+    return (train_x / 255.0).astype(np.float32), train_y, (test_x / 255.0).astype(
+        np.float32
+    ), test_y
+
+
+def load(cfg: DataConfig, color: bool = False):
+    """Load (train_x, train_y, test_x, test_y) per the config.
+
+    Grayscale output shape is [N, S, S, 1]; colour is [N, S, S, 3] (only the
+    real dataset supports colour — the synthetic generator is gray-native and
+    tiles the channel for the "teacher colour" Table I row).
+    Values are normalised to zero mean / unit variance using *train* stats.
+    """
+    cifar_dir = cfg.cifar_dir or os.environ.get("CIFAR10_DIR")
+    if cifar_dir and os.path.isdir(cifar_dir):
+        tx, ty, vx, vy = _load_cifar_batches(cifar_dir)
+        tx, ty = tx[: cfg.train_samples], ty[: cfg.train_samples]
+        vx, vy = vx[: cfg.test_samples], vy[: cfg.test_samples]
+        if not color:
+            tx = to_grayscale(tx)[..., None]
+            vx = to_grayscale(vx)[..., None]
+    else:
+        tx, ty = synth_dataset(cfg.train_samples, cfg.seed, cfg.image_size, cfg.num_classes)
+        vx, vy = synth_dataset(
+            cfg.test_samples, cfg.seed + 1_000_003, cfg.image_size, cfg.num_classes
+        )
+        if color:  # synthetic is gray-native; tile channels for colour models
+            tx = np.repeat(tx, 3, axis=-1)
+            vx = np.repeat(vx, 3, axis=-1)
+
+    mean, std = float(tx.mean()), float(tx.std() + 1e-7)
+    tx = (tx - mean) / std
+    vx = (vx - mean) / std
+    return tx, ty, vx, vy, {"mean": mean, "std": std}

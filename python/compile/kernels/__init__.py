@@ -1,0 +1,11 @@
+"""L1 — Pallas kernels for the hybrid edge classifier's compute hot-spots.
+
+All kernels run under ``interpret=True`` (CPU PJRT cannot execute Mosaic
+custom-calls); each is validated against the pure-jnp oracle in ``ref.py``.
+"""
+
+from . import ref  # noqa: F401
+from .conv2d import conv2d  # noqa: F401
+from .matmul import matmul  # noqa: F401
+from .pattern_match import match_feature_count, match_similarity  # noqa: F401
+from .quantize import binary_quantize  # noqa: F401

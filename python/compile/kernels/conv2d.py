@@ -1,0 +1,31 @@
+"""Pallas conv2d kernel: im2col patch extraction + MXU-tiled matmul.
+
+The student CNN's compute hot-spot (Eq. 13: MACs = Ho*Wo*Kh*Kw*Cin*Cout per
+layer) is a convolution.  On TPU the profitable mapping is *not* a direct
+sliding-window loop (that under-utilises the MXU); it is im2col: gather the
+(dy, dx, cin) patch for every output pixel into a [B*Ho*Wo, Kh*Kw*Cin] matrix
+and contract it against the [Kh*Kw*Cin, Cout] filter matrix on the systolic
+array.  Patch extraction is pure data movement — XLA fuses the
+pad+slice+concat into the surrounding graph — while the FLOPs all land in the
+Pallas matmul grid (see kernels/matmul.py for the VMEM/MXU tiling rationale).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import ref
+from .matmul import matmul
+
+
+def conv2d(x: jnp.ndarray, w: jnp.ndarray, padding: str = "SAME") -> jnp.ndarray:
+    """x: [B,H,W,Cin], w: [Kh,Kw,Cin,Cout] -> [B,Ho,Wo,Cout] (f32).
+
+    Matches ``ref.conv2d`` exactly (same im2col layout); the contraction runs
+    in the Pallas matmul kernel.
+    """
+    kh, kw, cin, cout = w.shape
+    cols = ref.im2col(x, kh, kw, padding)  # [B,Ho,Wo,K]
+    b, ho, wo, k = cols.shape
+    out = matmul(cols.reshape(b * ho * wo, k), w.reshape(kh * kw * cin, cout))
+    return out.reshape(b, ho, wo, cout)

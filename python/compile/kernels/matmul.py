@@ -1,0 +1,75 @@
+"""Pallas tiled matmul kernel — the MXU-shaped primitive under conv2d and the
+softmax head.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the grid walks (M/BM, N/BN)
+output tiles; for each, the innermost grid axis loops the K dimension in BK
+slabs so a (BM, BK) x (BK, BN) product lands on the MXU systolic array with
+all three operands resident in VMEM.  BlockSpec carries the HBM->VMEM
+schedule that a CUDA implementation would express with threadblocks +
+shared-memory staging.  Because the output index_map is invariant in the K
+grid axis, the (BM, BN) output block stays VMEM-resident across the K loop
+and serves as the accumulator (the canonical Pallas matmul pattern).
+
+CPU note: lowered with ``interpret=True`` (Mosaic custom-calls cannot run on
+the CPU PJRT plugin), so the structure — not interpret wallclock — is the
+optimisation target.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes: multiples of the 128x128 MXU tile / 8x128 VPU lane
+# layout.  (BM, BK, BN) = (128, 128, 128) keeps the three VMEM-resident
+# operands at 3 * 128*128*4 B = 192 KiB, far under the ~16 MiB VMEM budget,
+# leaving headroom for the Mosaic compiler's double-buffered pipelining.
+BM, BK, BN = 128, 128, 128
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    """One (BM, BN) output tile; grid axis 2 walks the K slabs."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(a_ref[...], b_ref[...], preferred_element_type=jnp.float32)
+
+
+def _pad_to(x: jnp.ndarray, m0: int, m1: int) -> jnp.ndarray:
+    p0 = (-x.shape[0]) % m0
+    p1 = (-x.shape[1]) % m1
+    if p0 or p1:
+        x = jnp.pad(x, ((0, p0), (0, p1)))
+    return x
+
+
+def matmul(a: jnp.ndarray, b: jnp.ndarray, bm: int = BM, bk: int = BK, bn: int = BN):
+    """f32 [M,K] x [K,N] -> [M,N] via the Pallas grid; pads to tile multiples
+    and slices the result back, so arbitrary shapes are accepted.
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    bm, bk, bn = min(bm, max(m, 8)), min(bk, max(k, 8)), min(bn, max(n, 8))
+    ap = _pad_to(a, bm, bk)
+    bp = _pad_to(b, bk, bn)
+    mp, kp = ap.shape
+    _, np_ = bp.shape
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=(mp // bm, np_ // bn, kp // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(ap, bp)
+    return out[:m, :n]

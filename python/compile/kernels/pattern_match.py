@@ -1,0 +1,134 @@
+"""Pallas pattern-matching kernels — the software model of the ACAM array.
+
+The physical ACAM compares a query against *all* stored templates
+simultaneously: every TXL cell checks one (template, feature) pair and the
+per-template matchline integrates the per-cell match currents.  The TPU
+analogue of that all-parallel compare is a VPU broadcast-compare-reduce over
+a (templates x features) tile: each grid step holds one (BB queries, BM
+templates) score tile in VMEM, streams BN-feature slabs of the query block
+and template block through, and accumulates the reduction — exactly the
+matchline's charge accumulation, with the innermost grid axis playing the
+role of time.
+
+Two kernels, mirroring Section II-D2:
+  * ``match_feature_count`` — Eq. 8, exact-equality count (binary ACAM).
+  * ``match_similarity``    — Eq. 9-11, windowed distance + hit-ratio model.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Tile sizes: BB query rows x BM template rows x BN features per grid step.
+# Score tile (BB x BM) stays VMEM-resident across the feature axis (the
+# accumulator), query/template slabs are (BB x BN) and (BM x BN).
+BB, BM, BN = 32, 16, 256
+
+
+def _pad(x, m0, m1, value=0.0):
+    p0, p1 = (-x.shape[0]) % m0, (-x.shape[1]) % m1
+    if p0 or p1:
+        x = jnp.pad(x, ((0, p0), (0, p1)), constant_values=value)
+    return x
+
+
+def _fc_kernel(q_ref, t_ref, o_ref, *, n_pad: int, n_k: int):
+    """Feature-count tile: o[b,m] += sum_n I(q[b,n] == t[m,n])."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    eq = q_ref[...][:, None, :] == t_ref[...][None, :, :]
+    o_ref[...] += jnp.sum(eq.astype(jnp.float32), axis=-1)
+
+    # Padded feature columns compare 0 == 0 and inflate every score by the
+    # same constant; remove it on the last slab so scores equal Eq. 8 exactly.
+    @pl.when((k == n_k - 1) & (n_pad > 0))
+    def _depad():
+        o_ref[...] -= jnp.float32(n_pad)
+
+
+def match_feature_count(q: jnp.ndarray, t: jnp.ndarray) -> jnp.ndarray:
+    """Eq. 8 scores: q [B,N] x t [M,N] -> f32 [B,M]."""
+    bq, n = q.shape
+    m, n2 = t.shape
+    assert n == n2
+    bb, bm, bn = min(BB, bq), min(BM, m), min(BN, n)
+    qp, tp = _pad(q, bb, bn), _pad(t, bm, bn)
+    n_pad = qp.shape[1] - n
+    n_k = qp.shape[1] // bn
+    out = pl.pallas_call(
+        functools.partial(_fc_kernel, n_pad=n_pad, n_k=n_k),
+        grid=(qp.shape[0] // bb, tp.shape[0] // bm, n_k),
+        in_specs=[
+            pl.BlockSpec((bb, bn), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bm, bn), lambda i, j, k: (j, k)),
+        ],
+        out_specs=pl.BlockSpec((bb, bm), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((qp.shape[0], tp.shape[0]), jnp.float32),
+        interpret=True,
+    )(qp, tp)
+    return out[:bq, :m]
+
+
+def _sim_kernel(q_ref, lo_ref, hi_ref, d_ref, h_ref):
+    """Similarity tile: accumulate distance-outside-window and hit count."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        d_ref[...] = jnp.zeros_like(d_ref)
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    qb = q_ref[...][:, None, :]
+    lo = lo_ref[...][None, :, :]
+    hi = hi_ref[...][None, :, :]
+    over = jnp.maximum(qb - hi, 0.0)
+    under = jnp.maximum(lo - qb, 0.0)
+    d_ref[...] += jnp.sum(over * over + under * under, axis=-1)
+    h_ref[...] += jnp.sum(((qb >= lo) & (qb <= hi)).astype(jnp.float32), axis=-1)
+
+
+def match_similarity(
+    q: jnp.ndarray, t_lo: jnp.ndarray, t_hi: jnp.ndarray, alpha: float
+) -> jnp.ndarray:
+    """Eq. 9-11 scores: q [B,N], bounds [M,N] -> f32 [B,M].
+
+    Padded feature columns are given the window [0, 0] and padded queries the
+    value 0, so pads register as in-window hits with zero distance; the final
+    hit-ratio division uses the *true* N and subtracts the pad hits.
+    """
+    bq, n = q.shape
+    m, n2 = t_lo.shape
+    assert n == n2 and t_hi.shape == t_lo.shape
+    bb, bm, bn = min(BB, bq), min(BM, m), min(BN, n)
+    qp = _pad(q, bb, bn)
+    lop, hip = _pad(t_lo, bm, bn), _pad(t_hi, bm, bn)
+    n_pad = qp.shape[1] - n
+    d, h = pl.pallas_call(
+        _sim_kernel,
+        grid=(qp.shape[0] // bb, lop.shape[0] // bm, qp.shape[1] // bn),
+        in_specs=[
+            pl.BlockSpec((bb, bn), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bm, bn), lambda i, j, k: (j, k)),
+            pl.BlockSpec((bm, bn), lambda i, j, k: (j, k)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bb, bm), lambda i, j, k: (i, j)),
+            pl.BlockSpec((bb, bm), lambda i, j, k: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((qp.shape[0], lop.shape[0]), jnp.float32),
+            jax.ShapeDtypeStruct((qp.shape[0], lop.shape[0]), jnp.float32),
+        ],
+        interpret=True,
+    )(qp, lop, hip)
+    d = d[:bq, :m]
+    h = (h[:bq, :m] - n_pad) / jnp.float32(n)
+    return h / (1.0 + alpha * d)

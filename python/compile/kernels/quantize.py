@@ -1,0 +1,42 @@
+"""Pallas binary-quantisation kernel (Section II-C feature-map binarisation).
+
+One grid step binarises a (BB, BN) feature tile against the per-feature
+threshold row — a pure VPU elementwise op; the kernel exists so the full
+inference path (conv -> binarise -> match) lowers into one HLO module with no
+host round-trip between front-end and back-end.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BB, BN = 32, 256
+
+
+def _quant_kernel(x_ref, th_ref, o_ref):
+    o_ref[...] = (x_ref[...] > th_ref[...]).astype(jnp.float32)
+
+
+def binary_quantize(features: jnp.ndarray, thresholds: jnp.ndarray) -> jnp.ndarray:
+    """features [B,N] f32, thresholds [N] f32 -> {0,1} f32 [B,N] (matches
+    ``ref.binary_quantize``)."""
+    b, n = features.shape
+    bb, bn = min(BB, b), min(BN, n)
+    p0, p1 = (-b) % bb, (-n) % bn
+    xp = jnp.pad(features, ((0, p0), (0, p1)))
+    # Pad thresholds with +inf so padded columns binarise to 0.
+    thp = jnp.pad(thresholds[None, :], ((0, 0), (0, p1)), constant_values=jnp.inf)
+    out = pl.pallas_call(
+        _quant_kernel,
+        grid=(xp.shape[0] // bb, xp.shape[1] // bn),
+        in_specs=[
+            pl.BlockSpec((bb, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((1, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bb, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct(xp.shape, jnp.float32),
+        interpret=True,
+    )(xp, thp)
+    return out[:b, :n]

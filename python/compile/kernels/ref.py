@@ -1,0 +1,112 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the CORE correctness signal: each kernel's pytest compares its
+output against the function here with ``assert_allclose``.  They are also the
+path used *during training* (interpret-mode Pallas is too slow for the train
+loop); the AOT inference graphs switch to the Pallas implementations so the
+exported HLO exercises the kernel lowering.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Plain f32 matmul: [M,K] x [K,N] -> [M,N]."""
+    return jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+
+def im2col(x: jnp.ndarray, kh: int, kw: int, padding: str) -> jnp.ndarray:
+    """Extract conv patches: x[B,H,W,C] -> [B,Ho,Wo,kh*kw*C].
+
+    Patch layout is (dy, dx, c) row-major — the same order the conv weights
+    are reshaped with in :func:`conv2d`, and the order the Pallas kernel
+    assumes.
+    """
+    b, h, w, c = x.shape
+    if padding == "SAME":
+        ph, pw = (kh - 1) // 2, (kw - 1) // 2
+        x = jnp.pad(x, ((0, 0), (ph, kh - 1 - ph), (pw, kw - 1 - pw), (0, 0)))
+        ho, wo = h, w
+    elif padding == "VALID":
+        ho, wo = h - kh + 1, w - kw + 1
+    else:
+        raise ValueError(padding)
+    patches = []
+    for dy in range(kh):
+        for dx in range(kw):
+            patches.append(x[:, dy : dy + ho, dx : dx + wo, :])
+    return jnp.concatenate(patches, axis=-1)
+
+
+def conv2d(x: jnp.ndarray, w: jnp.ndarray, padding: str = "SAME") -> jnp.ndarray:
+    """2-D convolution via im2col + matmul.
+
+    x: [B,H,W,Cin], w: [kh,kw,Cin,Cout] -> [B,Ho,Wo,Cout].  This is the
+    *definition* the Pallas kernel must match; it is itself validated against
+    ``jax.lax.conv_general_dilated`` in the tests.
+    """
+    kh, kw, cin, cout = w.shape
+    cols = im2col(x, kh, kw, padding)  # [B,Ho,Wo,kh*kw*Cin]
+    b, ho, wo, k = cols.shape
+    out = matmul(cols.reshape(b * ho * wo, k), w.reshape(kh * kw * cin, cout))
+    return out.reshape(b, ho, wo, cout)
+
+
+def binary_quantize(features: jnp.ndarray, thresholds: jnp.ndarray) -> jnp.ndarray:
+    """Mean/median-threshold binarisation (Section II-C): f32 -> {0,1} f32.
+
+    features: [B,N], thresholds: [N] (per-feature threshold vector).
+    """
+    return (features > thresholds[None, :]).astype(jnp.float32)
+
+
+def match_feature_count(q: jnp.ndarray, t: jnp.ndarray) -> jnp.ndarray:
+    """Eq. 8: S_fc[b,m] = sum_i I(q[b,i] == t[m,i]).
+
+    q: [B,N] binary query feature maps; t: [M,N] binary templates.
+    Returns f32 scores [B,M].
+    """
+    eq = q[:, None, :] == t[None, :, :]
+    return jnp.sum(eq.astype(jnp.float32), axis=-1)
+
+
+def match_similarity(
+    q: jnp.ndarray, t_lo: jnp.ndarray, t_hi: jnp.ndarray, alpha: float
+) -> jnp.ndarray:
+    """Eq. 9-11: distance outside [lo,hi] window + hit ratio -> similarity.
+
+    q: [B,N] real-valued queries; t_lo/t_hi: [M,N] per-template bounds.
+    S_sim = H / (1 + alpha * D) with
+      D = sum_i (q - hi)^2 [q>hi] + (lo - q)^2 [q<lo]
+      H = mean_i 1(lo <= q <= hi)
+    """
+    qb = q[:, None, :]
+    over = jnp.maximum(qb - t_hi[None, :, :], 0.0)
+    under = jnp.maximum(t_lo[None, :, :] - qb, 0.0)
+    d = jnp.sum(over * over + under * under, axis=-1)
+    hit = jnp.mean(
+        ((qb >= t_lo[None, :, :]) & (qb <= t_hi[None, :, :])).astype(jnp.float32),
+        axis=-1,
+    )
+    return hit / (1.0 + alpha * d)
+
+
+def classify(scores: jnp.ndarray, template_class: jnp.ndarray, num_classes: int) -> jnp.ndarray:
+    """Eq. 12 with multi-template support: per-class max over that class's
+    templates, then argmax over classes.
+
+    scores: [B,M] similarity/count scores; template_class: [M] int class ids.
+    """
+    onehot = template_class[None, :, None] == jnp.arange(num_classes)[None, None, :]
+    neg = jnp.full_like(scores, -jnp.inf)[:, :, None]
+    per = jnp.where(onehot, scores[:, :, None], neg)  # [B,M,C]
+    return jnp.argmax(jnp.max(per, axis=1), axis=-1)
+
+
+def maxpool2(x: jnp.ndarray) -> jnp.ndarray:
+    """2x2 stride-2 max pooling, x: [B,H,W,C] with even H,W."""
+    b, h, w, c = x.shape
+    return jnp.max(x.reshape(b, h // 2, 2, w // 2, 2, c), axis=(2, 4))

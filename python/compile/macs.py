@@ -1,0 +1,146 @@
+"""MAC / parameter accounting (Eq. 13) plus the paper-scale constants used by
+the Table I and §V.D reproductions.
+
+Two accounting modes:
+
+* **as-built** — exact Eq.-13 walk over the models actually trained in this
+  environment (CPU-scaled widths/dataset);
+* **paper-scale** — the constants the paper reports for its ResNet-50 teacher
+  and Fig.-5 student, used so the §V.D energy arithmetic reproduces the
+  published 792x figure independent of our training scale.
+
+The same constants are mirrored in ``rust/src/energy/constants.rs`` (the Rust
+side owns the serving-time energy ledger); `python/tests/test_macs.py` pins
+them so the two languages cannot drift apart.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Paper-reported constants (Table I + Section V.D)
+# ---------------------------------------------------------------------------
+
+PAPER = {
+    "teacher_color": {"params": 26_215_810, "macs": 3_858_551_808, "accuracy": 93.77},
+    "teacher_gray": {"params": 26_209_538, "macs": 3_808_375_808, "accuracy": 91.04},
+    "student_base": {"params": 380_314, "macs": 23_785_120, "accuracy": 76.29},
+    "student_opt": {"params": 380_314, "macs": 4_757_024, "accuracy": 82.22},
+    # Section V.D energy accounting inputs
+    "softmax_head_ops": 7_850,  # 784*10 + 10, removed when ACAM replaces the head
+    "frontend_ops_acam": 4_749_174,  # 4,757,024 - 7,850
+    "sparsity": 0.80,
+    "acam_cell_energy_fj": 185.0,
+    "n_templates": 10,
+    "n_features": 784,
+    # Horowitz ISSCC'14 8-bit energies
+    "mul8_pj": 0.2,
+    "add8_pj": 0.03,
+    "mem32k_pj": 20.0,
+    # Published results
+    "e_backend_nj": 1.45,
+    "e_frontend_nj": 96.07,
+    "e_total_nj": 97.52,
+    "e_teacher_uj": 78.06,
+    "energy_reduction": 792.0,
+    "match_accuracy_binary": 70.91,
+    "multi_template_accuracy": {1: 70.91, 2: 71.64, 3: 71.60},
+}
+
+
+# ---------------------------------------------------------------------------
+# Eq. 13 walk over layer descriptions
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class ConvLayer:
+    h_out: int
+    w_out: int
+    kh: int
+    kw: int
+    cin: int
+    cout: int
+    name: str = ""
+
+    @property
+    def macs(self) -> int:
+        """Eq. 13: MACs = Ho*Wo*Kh*Kw*Cin*Cout."""
+        return self.h_out * self.w_out * self.kh * self.kw * self.cin * self.cout
+
+    @property
+    def params(self) -> int:
+        return self.kh * self.kw * self.cin * self.cout + self.cout
+
+
+@dataclass
+class DenseLayer:
+    din: int
+    dout: int
+    name: str = ""
+
+    @property
+    def macs(self) -> int:
+        return self.din * self.dout
+
+    @property
+    def params(self) -> int:
+        return self.din * self.dout + self.dout
+
+
+def student_layers(filters=(32, 128, 256, 16), in_ch=1, size=32) -> List:
+    """The Fig.-5 student: conv/BN/pool x2, conv, 2x2-valid conv, dense head."""
+    f1, f2, f3, f4 = filters
+    s2, s4 = size // 2, size // 4
+    feat = (s4 - 1) ** 2 * f4
+    return [
+        ConvLayer(size, size, 3, 3, in_ch, f1, "conv1"),
+        ConvLayer(s2, s2, 3, 3, f1, f2, "conv2"),
+        ConvLayer(s4, s4, 3, 3, f2, f3, "conv3"),
+        ConvLayer(s4 - 1, s4 - 1, 2, 2, f3, f4, "conv4"),
+        DenseLayer(feat, 10, "head"),
+    ]
+
+
+def teacher_layers(width=16, blocks_per_stage=1, in_ch=1, size=32) -> List:
+    layers: List = [ConvLayer(size, size, 3, 3, in_ch, width, "stem")]
+    cin, s = width, size
+    for si, w in enumerate((width, width * 2, width * 4)):
+        for bi in range(blocks_per_stage):
+            stride = 2 if (si > 0 and bi == 0) else 1
+            s_out = s // stride
+            layers.append(ConvLayer(s_out, s_out, 3, 3, cin, w, f"s{si}b{bi}a"))
+            layers.append(ConvLayer(s_out, s_out, 3, 3, w, w, f"s{si}b{bi}b"))
+            if cin != w:
+                layers.append(ConvLayer(s_out, s_out, 1, 1, cin, w, f"s{si}b{bi}proj"))
+            cin, s = w, s_out
+    layers.append(DenseLayer(width * 4, 10, "head"))
+    return layers
+
+
+def total_macs(layers: List) -> int:
+    return sum(l.macs for l in layers)
+
+
+def total_params(layers: List, bn_channels: int = 0) -> int:
+    return sum(l.params for l in layers) + 2 * bn_channels  # gamma+beta per channel
+
+
+def model_summary(layers: List) -> Dict:
+    return {
+        "layers": [
+            {"name": l.name, "macs": l.macs, "params": l.params} for l in layers
+        ],
+        "macs": total_macs(layers),
+        "params": total_params(layers),
+    }
+
+
+def effective_macs(macs: int, sparsity: float) -> int:
+    """Pruned-weight MACs are skipped entirely (the paper's 80%-sparsity
+    argument for the 4.76M effective-ops figure)."""
+    return int(round(macs * (1.0 - sparsity)))

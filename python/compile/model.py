@@ -1,0 +1,230 @@
+"""L2 — JAX model definitions: teacher ResNet and Fig.-5 student CNN.
+
+Models are pure functional pytrees: ``init_*`` builds the parameter dict,
+``*_apply`` runs the forward pass.  BatchNorm keeps a separate *state* pytree
+(running mean/var) threaded through training and frozen at export.
+
+The student forward has a ``use_pallas`` switch: the training loop uses the
+pure-jnp reference path (interpret-mode Pallas is orders of magnitude slower
+than XLA on CPU), while the AOT export (aot.py) lowers the Pallas path so the
+kernel's tiling structure lands in the shipped HLO.  Both paths are asserted
+numerically identical in python/tests/test_model.py.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import StudentConfig, TeacherConfig
+from .kernels import conv2d as pallas_conv2d
+from .kernels import matmul as pallas_matmul
+from .kernels import ref
+
+Params = Dict
+State = Dict
+
+# ---------------------------------------------------------------------------
+# Initialisers / primitive layers
+# ---------------------------------------------------------------------------
+
+
+def _he_conv(key, kh, kw, cin, cout):
+    fan_in = kh * kw * cin
+    std = np.sqrt(2.0 / fan_in)
+    return jax.random.normal(key, (kh, kw, cin, cout), jnp.float32) * std
+
+
+def _he_dense(key, din, dout):
+    std = np.sqrt(2.0 / din)
+    return jax.random.normal(key, (din, dout), jnp.float32) * std
+
+
+def init_conv(key, kh, kw, cin, cout) -> Params:
+    return {"w": _he_conv(key, kh, kw, cin, cout), "b": jnp.zeros((cout,), jnp.float32)}
+
+
+def init_bn(c) -> Tuple[Params, State]:
+    return (
+        {"gamma": jnp.ones((c,), jnp.float32), "beta": jnp.zeros((c,), jnp.float32)},
+        {"mean": jnp.zeros((c,), jnp.float32), "var": jnp.ones((c,), jnp.float32)},
+    )
+
+
+def init_dense(key, din, dout) -> Params:
+    return {"w": _he_dense(key, din, dout), "b": jnp.zeros((dout,), jnp.float32)}
+
+
+def conv_apply(p: Params, x, padding="SAME", stride=1, use_pallas=False):
+    """Conv + bias.  Stride handled by slicing the SAME output (stride only
+    appears in the teacher, which always runs the jnp path)."""
+    if use_pallas:
+        y = pallas_conv2d(x, p["w"], padding)
+    else:
+        y = jax.lax.conv_general_dilated(
+            x,
+            p["w"],
+            window_strides=(stride, stride),
+            padding=padding,
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        )
+        return y + p["b"]
+    if stride != 1:
+        y = y[:, ::stride, ::stride, :]
+    return y + p["b"]
+
+
+BN_MOMENTUM = 0.9
+BN_EPS = 1e-5
+
+
+def bn_apply(p: Params, s: State, x, training: bool):
+    """BatchNorm over NHW; returns (y, new_state)."""
+    if training:
+        mean = jnp.mean(x, axis=(0, 1, 2))
+        var = jnp.var(x, axis=(0, 1, 2))
+        new_s = {
+            "mean": BN_MOMENTUM * s["mean"] + (1 - BN_MOMENTUM) * mean,
+            "var": BN_MOMENTUM * s["var"] + (1 - BN_MOMENTUM) * var,
+        }
+    else:
+        mean, var, new_s = s["mean"], s["var"], s
+    y = (x - mean) * jax.lax.rsqrt(var + BN_EPS) * p["gamma"] + p["beta"]
+    return y, new_s
+
+
+def dense_apply(p: Params, x, use_pallas=False):
+    y = pallas_matmul(x, p["w"]) if use_pallas else jnp.dot(x, p["w"])
+    return y + p["b"]
+
+
+# ---------------------------------------------------------------------------
+# Student CNN (Fig. 5)
+# ---------------------------------------------------------------------------
+#
+#   conv 3x3x32 SAME - BN - ReLU - maxpool2   -> 16x16x32
+#   conv 3x3x128 SAME - BN - ReLU - maxpool2  -> 8x8x128
+#   conv 3x3x256 SAME - ReLU                  -> 8x8x256
+#   conv 2x2x16 VALID - ReLU                  -> 7x7x16 -> flatten 784
+#   [softmax head: dense 784 -> 10]           (baseline classifier only)
+
+
+def init_student(cfg: StudentConfig, key, in_channels=1, num_classes=10):
+    f1, f2, f3, f4 = cfg.filters
+    k = jax.random.split(key, 5)
+    bn1_p, bn1_s = init_bn(f1)
+    bn2_p, bn2_s = init_bn(f2)
+    params = {
+        "conv1": init_conv(k[0], 3, 3, in_channels, f1),
+        "bn1": bn1_p,
+        "conv2": init_conv(k[1], 3, 3, f1, f2),
+        "bn2": bn2_p,
+        "conv3": init_conv(k[2], 3, 3, f2, f3),
+        "conv4": init_conv(k[3], 2, 2, f3, f4),
+        "head": init_dense(k[4], cfg.feature_dim, num_classes),
+    }
+    state = {"bn1": bn1_s, "bn2": bn2_s}
+    return params, state
+
+
+def student_features(params, state, x, training=False, use_pallas=False):
+    """Front-end feature extractor: x [B,32,32,1] -> features [B,784].
+
+    This is exactly the tensor the ACAM back-end consumes (the paper's
+    "flattened feature map used as a query key").
+    """
+    h = conv_apply(params["conv1"], x, "SAME", use_pallas=use_pallas)
+    h, s1 = bn_apply(params["bn1"], state["bn1"], h, training)
+    h = ref.maxpool2(jax.nn.relu(h))
+    h = conv_apply(params["conv2"], h, "SAME", use_pallas=use_pallas)
+    h, s2 = bn_apply(params["bn2"], state["bn2"], h, training)
+    h = ref.maxpool2(jax.nn.relu(h))
+    h = jax.nn.relu(conv_apply(params["conv3"], h, "SAME", use_pallas=use_pallas))
+    h = jax.nn.relu(conv_apply(params["conv4"], h, "VALID", use_pallas=use_pallas))
+    feats = h.reshape(h.shape[0], -1)
+    return feats, {"bn1": s1, "bn2": s2}
+
+
+def student_logits(params, state, x, training=False, use_pallas=False):
+    """Full student with the baseline softmax head: -> logits [B,10]."""
+    feats, new_s = student_features(params, state, x, training, use_pallas)
+    return dense_apply(params["head"], feats, use_pallas=use_pallas), new_s
+
+
+def student_param_count(params) -> int:
+    return sum(int(np.prod(p.shape)) for p in jax.tree_util.tree_leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# Teacher ResNet (Section IV-B: 3 stages, 2x3x3 convs per block, identity /
+# 1x1-projection shortcuts, GAP + dense head)
+# ---------------------------------------------------------------------------
+
+
+def init_teacher(cfg: TeacherConfig, key, in_channels=1, num_classes=10):
+    widths = (cfg.width, cfg.width * 2, cfg.width * 4)
+    keys = iter(jax.random.split(key, 4 + 6 * 3 * cfg.blocks_per_stage))
+    bn0_p, bn0_s = init_bn(widths[0])
+    params = {"stem": init_conv(next(keys), 3, 3, in_channels, widths[0]), "bn0": bn0_p}
+    state = {"bn0": bn0_s}
+    cin = widths[0]
+    for si, w in enumerate(widths):
+        for bi in range(cfg.blocks_per_stage):
+            name = f"s{si}b{bi}"
+            bna_p, bna_s = init_bn(w)
+            bnb_p, bnb_s = init_bn(w)
+            blk = {
+                "conv_a": init_conv(next(keys), 3, 3, cin, w),
+                "bn_a": bna_p,
+                "conv_b": init_conv(next(keys), 3, 3, w, w),
+                "bn_b": bnb_p,
+            }
+            if cin != w:
+                blk["proj"] = init_conv(next(keys), 1, 1, cin, w)
+            params[name] = blk
+            state[name] = {"bn_a": bna_s, "bn_b": bnb_s}
+            cin = w
+    params["head"] = init_dense(next(keys), widths[-1], num_classes)
+    return params, state
+
+
+def _teacher_block(blk, bst, x, stride, training):
+    h = conv_apply(blk["conv_a"], x, "SAME", stride=stride)
+    h, sa = bn_apply(blk["bn_a"], bst["bn_a"], h, training)
+    h = jax.nn.relu(h)
+    h = conv_apply(blk["conv_b"], h, "SAME")
+    h, sb = bn_apply(blk["bn_b"], bst["bn_b"], h, training)
+    if "proj" in blk:
+        x = conv_apply(blk["proj"], x, "SAME", stride=stride)
+    elif stride != 1:
+        x = x[:, ::stride, ::stride, :]
+    return jax.nn.relu(h + x), {"bn_a": sa, "bn_b": sb}
+
+
+def teacher_logits(params, state, x, cfg: TeacherConfig, training=False):
+    """Teacher forward: x [B,32,32,C] -> logits [B,10]."""
+    h = conv_apply(params["stem"], x, "SAME")
+    h, s0 = bn_apply(params["bn0"], state["bn0"], h, training)
+    h = jax.nn.relu(h)
+    new_state = {"bn0": s0}
+    for si in range(3):
+        for bi in range(cfg.blocks_per_stage):
+            name = f"s{si}b{bi}"
+            stride = 2 if (si > 0 and bi == 0) else 1
+            h, new_state[name] = _teacher_block(
+                params[name], state[name], h, stride, training
+            )
+    h = jnp.mean(h, axis=(1, 2))  # global average pooling
+    return dense_apply(params["head"], h), new_state
+
+
+def l2_penalty(params) -> jnp.ndarray:
+    """Sum of squared conv/dense weights (teacher regulariser)."""
+    return sum(
+        jnp.sum(p ** 2)
+        for path, p in jax.tree_util.tree_leaves_with_path(params)
+        if path[-1].key == "w"
+    )

@@ -1,0 +1,155 @@
+"""Magnitude pruning on the polynomial schedule of Section II-B (Eq. 5-7).
+
+Sparsity ramps from ``s_i`` = 0.50 to ``s_f`` = 0.80 over ``n_t`` pruning
+steps via ``s(t) = s_f + (s_i - s_f)(1 - t/n_t)^3``; at each step the global
+weight-magnitude percentile (Eq. 7) sets the threshold, weights below it are
+masked to zero (Eq. 6), and a brief masked fine-tune lets the survivors
+adapt.  Masks persist through fine-tuning (gradient updates cannot resurrect
+a pruned weight) — the standard iterative-magnitude-pruning contract.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import PruneConfig, StudentConfig
+from .model import student_logits
+from .train import adam_init, adam_update, cross_entropy, evaluate, _batches
+
+# Only conv/dense kernels are pruned; biases and BN affine params are dense.
+_PRUNABLE_KEY = "w"
+
+
+def polynomial_sparsity(t: int, cfg: PruneConfig) -> float:
+    """Eq. 5."""
+    frac = 1.0 - t / cfg.pruning_steps
+    return cfg.final_sparsity + (cfg.initial_sparsity - cfg.final_sparsity) * frac ** 3
+
+
+def _prunable_leaves(params) -> List:
+    return [
+        (path, leaf)
+        for path, leaf in jax.tree_util.tree_leaves_with_path(params)
+        if path[-1].key == _PRUNABLE_KEY and path[0].key != "head"
+    ]
+
+
+def global_threshold(params, sparsity: float) -> float:
+    """Eq. 7: the sparsity-percentile of |W| pooled over all prunable layers."""
+    mags = np.concatenate(
+        [np.abs(np.asarray(leaf)).ravel() for _, leaf in _prunable_leaves(params)]
+    )
+    return float(np.quantile(mags, sparsity))
+
+
+def make_masks(params, sparsity: float) -> Dict:
+    """Binary masks (Eq. 6): 1 where |w| >= theta, per the *global* threshold."""
+    theta = global_threshold(params, sparsity)
+
+    def mask_of(path_key, leaf):
+        return (jnp.abs(leaf) >= theta).astype(jnp.float32)
+
+    masks = jax.tree_util.tree_map(jnp.ones_like, params)
+    masks = _set_prunable(masks, params, mask_of)
+    return masks
+
+
+def _set_prunable(masks, params, fn):
+    flat_m, treedef = jax.tree_util.tree_flatten_with_path(masks)
+    flat_p = jax.tree_util.tree_leaves_with_path(params)
+    out = []
+    for (path_m, m), (path_p, p) in zip(flat_m, flat_p):
+        if path_m[-1].key == _PRUNABLE_KEY and path_m[0].key != "head":
+            out.append(fn(path_m, p))
+        else:
+            out.append(m)
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(masks), out
+    )
+
+
+def apply_masks(params, masks):
+    return jax.tree_util.tree_map(lambda p, m: p * m, params, masks)
+
+
+def sparsity_of(params, masks) -> float:
+    """Achieved sparsity over prunable weights."""
+    total, zeros = 0, 0
+    for (path, m) in jax.tree_util.tree_leaves_with_path(masks):
+        if path[-1].key == _PRUNABLE_KEY and path[0].key != "head":
+            total += m.size
+            zeros += int(m.size - jnp.sum(m))
+    return zeros / max(total, 1)
+
+
+def prune_student(
+    cfg: PruneConfig, scfg: StudentConfig, params, state, tx, ty, vx, vy, log=None
+):
+    """Iterative prune + fine-tune (Section II-B), returns (params, state, masks)."""
+    log = log if log is not None else []
+
+    @jax.jit
+    def step(params, state, opt, masks, xb, yb):
+        def loss_fn(p):
+            logits, new_s = student_logits(p, state, xb, training=True)
+            return cross_entropy(logits, yb), new_s
+
+        (loss, new_s), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        grads = jax.tree_util.tree_map(lambda g, m: g * m, grads, masks)
+        params, opt = adam_update(params, grads, opt, scfg.lr * 0.3)
+        params = apply_masks(params, masks)
+        return params, new_s, opt, loss
+
+    opt = adam_init(params)
+    rng = np.random.default_rng(scfg.seed + 31)
+    infer = jax.jit(lambda p, s, xb: student_logits(p, s, xb, training=False)[0])
+    masks = jax.tree_util.tree_map(jnp.ones_like, params)
+
+    for t in range(1, cfg.pruning_steps + 1):
+        t0 = time.time()
+        s_t = polynomial_sparsity(t, cfg)
+        masks = make_masks(params, s_t)
+        params = apply_masks(params, masks)
+        # Brief masked fine-tune so survivors compensate (Section II-B).
+        steps_done = 0
+        while steps_done < cfg.finetune_steps_per_prune:
+            for bidx in _batches(len(tx), scfg.batch_size, rng):
+                params, state, opt, _ = step(
+                    params, state, opt, masks, jnp.asarray(tx[bidx]), jnp.asarray(ty[bidx])
+                )
+                steps_done += 1
+                if steps_done >= cfg.finetune_steps_per_prune:
+                    break
+        log.append(
+            {
+                "phase": "prune",
+                "step": t,
+                "target_sparsity": s_t,
+                "achieved_sparsity": sparsity_of(params, masks),
+                "val_acc": evaluate(infer, params, state, vx, vy),
+                "secs": time.time() - t0,
+            }
+        )
+
+    # Final fine-tune phase at fixed (final) sparsity.
+    for epoch in range(cfg.final_finetune_epochs):
+        t0 = time.time()
+        for bidx in _batches(len(tx), scfg.batch_size, rng):
+            params, state, opt, _ = step(
+                params, state, opt, masks, jnp.asarray(tx[bidx]), jnp.asarray(ty[bidx])
+            )
+        log.append(
+            {
+                "phase": "prune_finetune",
+                "epoch": epoch,
+                "achieved_sparsity": sparsity_of(params, masks),
+                "val_acc": evaluate(infer, params, state, vx, vy),
+                "secs": time.time() - t0,
+            }
+        )
+    return params, state, masks, log

@@ -1,0 +1,101 @@
+"""8-bit quantisation-aware training (Section II-C, first stage).
+
+Weights are fake-quantised to signed 8-bit integers (symmetric, per-tensor)
+on the forward pass with a straight-through estimator on the backward pass,
+so the student adapts to the reduced precision during fine-tuning.  The
+exported artifacts carry both the float weights and the integer scales so the
+Rust energy model can account 8-bit MACs (Horowitz constants).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import QuantConfig, StudentConfig
+from .model import student_logits
+from .train import adam_init, adam_update, cross_entropy, evaluate, _batches
+
+
+def fake_quant(w: jnp.ndarray, bits: int = 8) -> jnp.ndarray:
+    """Symmetric per-tensor fake quantisation with a straight-through estimator.
+
+    q = round(w / s) clipped to [-2^{b-1}+1, 2^{b-1}-1], dequantised by s.
+    The STE (``stop_gradient`` of the rounding residual) passes gradients
+    through the rounding unchanged.
+    """
+    qmax = 2 ** (bits - 1) - 1
+    scale = jnp.maximum(jnp.max(jnp.abs(w)), 1e-8) / qmax
+    q = jnp.clip(jnp.round(w / scale), -qmax, qmax) * scale
+    return w + jax.lax.stop_gradient(q - w)
+
+
+def quantize_params(params, bits: int = 8):
+    """Hard-quantise every conv/dense kernel (the deployment snapshot)."""
+
+    def q(path, leaf):
+        if path[-1].key == "w":
+            qmax = 2 ** (bits - 1) - 1
+            scale = max(float(jnp.max(jnp.abs(leaf))), 1e-8) / qmax
+            return jnp.clip(jnp.round(leaf / scale), -qmax, qmax) * scale
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(q, params)
+
+
+def _fq_params(params, bits):
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: fake_quant(leaf, bits) if path[-1].key == "w" else leaf,
+        params,
+    )
+
+
+def qat_student(
+    cfg: QuantConfig, scfg: StudentConfig, params, state, masks, tx, ty, vx, vy, log=None
+):
+    """QAT fine-tune with pruning masks kept in force."""
+    log = log if log is not None else []
+
+    @jax.jit
+    def step(params, state, opt, xb, yb):
+        def loss_fn(p):
+            pq = _fq_params(p, cfg.weight_bits)
+            logits, new_s = student_logits(pq, state, xb, training=True)
+            return cross_entropy(logits, yb), new_s
+
+        (loss, new_s), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        grads = jax.tree_util.tree_map(lambda g, m: g * m, grads, masks)
+        params, opt = adam_update(params, grads, opt, scfg.lr * 0.1)
+        params = jax.tree_util.tree_map(lambda p, m: p * m, params, masks)
+        return params, new_s, opt, loss
+
+    opt = adam_init(params)
+    rng = np.random.default_rng(scfg.seed + 47)
+    infer = jax.jit(
+        lambda p, s, xb: student_logits(
+            _fq_params(p, cfg.weight_bits), s, xb, training=False
+        )[0]
+    )
+    for epoch in range(cfg.qat_epochs):
+        t0 = time.time()
+        losses = []
+        for bidx in _batches(len(tx), scfg.batch_size, rng):
+            params, state, opt, loss = step(
+                params, state, opt, jnp.asarray(tx[bidx]), jnp.asarray(ty[bidx])
+            )
+            losses.append(float(loss))
+        log.append(
+            {
+                "phase": "qat",
+                "epoch": epoch,
+                "loss": float(np.mean(losses)),
+                "val_acc": evaluate(infer, params, state, vx, vy),
+                "secs": time.time() - t0,
+            }
+        )
+    # Deployment snapshot: hard-quantised weights (masks already zero where pruned).
+    return quantize_params(params, cfg.weight_bits), state, log

@@ -1,0 +1,221 @@
+"""Template generation for ACAM deployment (Section II-D1).
+
+Turns the student's 784-feature maps into the back-end's stored patterns:
+
+* per-feature **thresholds** (mean- or median-based, Fig. 1) binarise feature
+  maps;
+* one or more **templates per class** (Table II): k-means centroids over the
+  class's binary feature maps, quality-checked with silhouette scores;
+* per-template **matching windows** [lo, hi] for the similarity model
+  (Eq. 9-11) and for programming the ACAM cells' RRAM conductance pairs.
+
+k-means and silhouette are hand-rolled (no sklearn in this environment) and
+mirrored in ``rust/src/kmeans/`` for on-device template refresh.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Thresholding (Section II-C / Fig. 1)
+# ---------------------------------------------------------------------------
+
+
+def feature_thresholds(features: np.ndarray, mode: str = "mean") -> np.ndarray:
+    """Per-feature binarisation threshold over the training set.
+
+    mean mode: ReLU sparsity drags the mean *below* the median, so low-
+    magnitude informative activations survive binarisation (the paper's
+    argument for mean over median).
+    """
+    if mode == "mean":
+        return features.mean(axis=0)
+    if mode == "median":
+        return np.median(features, axis=0)
+    raise ValueError(f"unknown threshold mode: {mode}")
+
+
+def binarize(features: np.ndarray, thresholds: np.ndarray) -> np.ndarray:
+    return (features > thresholds[None, :]).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# k-means + silhouette (hand-rolled; mirrored in rust/src/kmeans)
+# ---------------------------------------------------------------------------
+
+
+def kmeans(
+    x: np.ndarray, k: int, iters: int, restarts: int, rng: np.random.Generator
+) -> Tuple[np.ndarray, np.ndarray, float]:
+    """Lloyd's algorithm with k-means++ seeding and restarts.
+
+    Returns (centroids [k,N], assignment [n], inertia).  Empty clusters are
+    re-seeded from the point farthest from its centroid.
+    """
+    n = len(x)
+    best = None
+    for _ in range(max(restarts, 1)):
+        cents = _kmeanspp(x, k, rng)
+        assign = np.zeros(n, dtype=np.int64)
+        for _ in range(iters):
+            d = ((x[:, None, :] - cents[None, :, :]) ** 2).sum(-1)  # [n,k]
+            new_assign = d.argmin(1)
+            for c in range(k):
+                sel = new_assign == c
+                if sel.any():
+                    cents[c] = x[sel].mean(0)
+                else:  # re-seed empty cluster at the worst-fit point
+                    cents[c] = x[d.min(1).argmax()]
+            if (new_assign == assign).all():
+                assign = new_assign
+                break
+            assign = new_assign
+        inertia = float(((x - cents[assign]) ** 2).sum())
+        if best is None or inertia < best[2]:
+            best = (cents.copy(), assign.copy(), inertia)
+    return best
+
+
+def _kmeanspp(x: np.ndarray, k: int, rng: np.random.Generator) -> np.ndarray:
+    n = len(x)
+    cents = [x[rng.integers(n)]]
+    for _ in range(1, k):
+        d2 = np.min(((x[:, None, :] - np.asarray(cents)[None]) ** 2).sum(-1), axis=1)
+        if d2.sum() <= 0:
+            cents.append(x[rng.integers(n)])
+            continue
+        probs = d2 / d2.sum()
+        cents.append(x[rng.choice(n, p=probs)])
+    return np.asarray(cents, dtype=np.float64)
+
+
+def silhouette_score(x: np.ndarray, assign: np.ndarray, sample_cap: int = 256, seed: int = 0) -> float:
+    """Mean silhouette over (a capped subsample of) x; single-cluster -> 0."""
+    ks = np.unique(assign)
+    if len(ks) < 2:
+        return 0.0
+    rng = np.random.default_rng(seed)
+    idx = rng.permutation(len(x))[: min(sample_cap, len(x))]
+    xs, as_ = x[idx], assign[idx]
+    d = np.sqrt(((xs[:, None, :] - x[None, :, :]) ** 2).sum(-1))  # [s,n]
+    scores = []
+    for i in range(len(xs)):
+        own = assign == as_[i]
+        own_d = d[i][own]
+        a = own_d.sum() / max(own.sum() - 1, 1)  # exclude self via sum/(n-1)
+        b = np.inf
+        for c in ks:
+            if c == as_[i]:
+                continue
+            sel = assign == c
+            if sel.any():
+                b = min(b, d[i][sel].mean())
+        denom = max(a, b)
+        scores.append(0.0 if denom == 0 else (b - a) / denom)
+    return float(np.mean(scores))
+
+
+# ---------------------------------------------------------------------------
+# Template set generation
+# ---------------------------------------------------------------------------
+
+
+def generate_templates(
+    bin_features: np.ndarray,
+    real_features: np.ndarray,
+    labels: np.ndarray,
+    num_classes: int,
+    templates_per_class: int,
+    kmeans_iters: int = 50,
+    kmeans_restarts: int = 4,
+    window_margin: float = 0.0,
+    seed: int = 0,
+) -> Dict:
+    """Build the template store.
+
+    Per class: k-means (k = templates_per_class) on the class's *binary*
+    feature maps; centroid > 0.5 gives the binary template (k = 1 degenerates
+    to the majority-vote template).  Matching windows for the similarity model
+    and ACAM programming come from the *real-valued* features of the cluster
+    members: [p10, p90] per feature, widened by ``window_margin``.
+
+    Returns a dict ready to serialise as templates.json:
+      templates   [M][N] 0/1 ints
+      lo, hi      [M][N] floats (real-feature windows)
+      bin_lo/hi   [M][N] floats (binary-domain windows: t +/- 0.5)
+      class_of    [M] ints
+      silhouette  per-class scores (the Table II clustering diagnostic)
+    """
+    rng = np.random.default_rng(seed)
+    templates, los, his, blos, bhis, class_of, silhouettes = [], [], [], [], [], [], []
+    for c in range(num_classes):
+        sel = labels == c
+        xb, xr = bin_features[sel], real_features[sel]
+        k = min(templates_per_class, max(len(xb), 1))
+        if k == 1:
+            cents = xb.mean(0, keepdims=True)
+            assign = np.zeros(len(xb), dtype=np.int64)
+            sil = 0.0
+        else:
+            cents, assign, _ = kmeans(xb.astype(np.float64), k, kmeans_iters, kmeans_restarts, rng)
+            sil = silhouette_score(xb.astype(np.float64), assign, seed=seed + c)
+        for ci in range(len(cents)):
+            t = (cents[ci] > 0.5).astype(np.int8)
+            members = xr[assign == ci] if (assign == ci).any() else xr
+            lo = np.percentile(members, 10, axis=0) - window_margin
+            hi = np.percentile(members, 90, axis=0) + window_margin
+            templates.append(t)
+            los.append(lo.astype(np.float32))
+            his.append(np.maximum(hi, lo).astype(np.float32))
+            blos.append(t.astype(np.float32) - 0.5)
+            bhis.append(t.astype(np.float32) + 0.5)
+            class_of.append(c)
+        silhouettes.append(sil)
+    return {
+        "templates": np.asarray(templates),
+        "lo": np.asarray(los),
+        "hi": np.asarray(his),
+        "bin_lo": np.asarray(blos),
+        "bin_hi": np.asarray(bhis),
+        "class_of": np.asarray(class_of, dtype=np.int32),
+        "silhouette": silhouettes,
+        "templates_per_class": templates_per_class,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Matching-based evaluation (numpy reference used by run_experiments)
+# ---------------------------------------------------------------------------
+
+
+def match_predict_fc(binq: np.ndarray, store: Dict, num_classes: int) -> np.ndarray:
+    """Eq. 8 + Eq. 12 (per-class max over that class's templates)."""
+    t = store["templates"].astype(np.float32)
+    scores = (binq[:, None, :] == t[None, :, :]).sum(-1)  # [B,M]
+    return _argmax_per_class(scores, store["class_of"], num_classes)
+
+
+def match_predict_sim(
+    q: np.ndarray, store: Dict, num_classes: int, alpha: float, binary: bool = True
+) -> np.ndarray:
+    """Eq. 9-12 against the binary-domain (or real-domain) windows."""
+    lo = store["bin_lo"] if binary else store["lo"]
+    hi = store["bin_hi"] if binary else store["hi"]
+    qb = q[:, None, :]
+    over = np.maximum(qb - hi[None], 0.0)
+    under = np.maximum(lo[None] - qb, 0.0)
+    d = (over * over + under * under).sum(-1)
+    h = ((qb >= lo[None]) & (qb <= hi[None])).mean(-1)
+    scores = h / (1.0 + alpha * d)
+    return _argmax_per_class(scores, store["class_of"], num_classes)
+
+
+def _argmax_per_class(scores: np.ndarray, class_of: np.ndarray, num_classes: int) -> np.ndarray:
+    best = np.full((len(scores), num_classes), -np.inf)
+    for m, c in enumerate(class_of):
+        best[:, c] = np.maximum(best[:, c], scores[:, m])
+    return best.argmax(1)

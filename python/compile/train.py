@@ -1,0 +1,299 @@
+"""Training loops: teacher pre-training, baseline student training, and the
+knowledge-distillation framework of Section II-A (Eq. 1-4) with curriculum
+ordering.
+
+Everything is hand-rolled functional JAX (no optax in this environment): Adam
+state is a pytree zipped with the parameters, train steps are jitted once per
+phase, and BatchNorm state threads through explicitly.
+"""
+
+from __future__ import annotations
+
+import functools
+import time
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import DistillConfig, StudentConfig, TeacherConfig
+from .model import student_logits, teacher_logits
+
+# ---------------------------------------------------------------------------
+# Adam
+# ---------------------------------------------------------------------------
+
+
+def adam_init(params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree_util.tree_map(jnp.zeros_like, params), "t": jnp.zeros((), jnp.int32)}
+
+
+def adam_update(params, grads, opt, lr, b1=0.9, b2=0.999, eps=1e-8):
+    t = opt["t"] + 1
+    m = jax.tree_util.tree_map(lambda m_, g: b1 * m_ + (1 - b1) * g, opt["m"], grads)
+    v = jax.tree_util.tree_map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, opt["v"], grads)
+    bc1 = 1 - b1 ** t.astype(jnp.float32)
+    bc2 = 1 - b2 ** t.astype(jnp.float32)
+    new_params = jax.tree_util.tree_map(
+        lambda p, m_, v_: p - lr * (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps),
+        params,
+        m,
+        v,
+    )
+    return new_params, {"m": m, "v": v, "t": t}
+
+
+# ---------------------------------------------------------------------------
+# Losses (Eq. 1-3)
+# ---------------------------------------------------------------------------
+
+
+def cross_entropy(logits, labels):
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+
+
+def kd_loss(student_logits_, teacher_logits_, temperature):
+    """Eq. 2: T^2 * KL(softmax(z_s/T) || softmax(z_t/T)).
+
+    (Direction note: Hinton's formulation trains the student to match the
+    teacher's softened distribution — cross-entropy with teacher targets —
+    which is KL(teacher || student) up to the teacher's constant entropy;
+    we use that standard form so gradients match the reference recipe.)
+    """
+    t_prob = jax.nn.softmax(teacher_logits_ / temperature)
+    s_logp = jax.nn.log_softmax(student_logits_ / temperature)
+    kl = jnp.sum(t_prob * (jnp.log(t_prob + 1e-9) - s_logp), axis=-1)
+    return temperature ** 2 * jnp.mean(kl)
+
+
+def composite_loss(s_logits, t_logits, labels, alpha, temperature):
+    """Eq. 1: L = alpha * L_KD + (1 - alpha) * L_CE."""
+    return alpha * kd_loss(s_logits, t_logits, temperature) + (1 - alpha) * cross_entropy(
+        s_logits, labels
+    )
+
+
+# ---------------------------------------------------------------------------
+# Generic epoch driver
+# ---------------------------------------------------------------------------
+
+
+def _batches(n, batch_size, rng: Optional[np.random.Generator], order=None):
+    idx = np.arange(n) if order is None else np.asarray(order)
+    if rng is not None:
+        idx = rng.permutation(idx)
+    for i in range(0, n - batch_size + 1, batch_size):
+        yield idx[i : i + batch_size]
+
+
+def evaluate(apply_fn, params, state, x, y, batch_size=200) -> float:
+    """Top-1 accuracy of ``apply_fn(params, state, xb) -> logits``."""
+    correct = 0
+    for i in range(0, len(x), batch_size):
+        logits = apply_fn(params, state, jnp.asarray(x[i : i + batch_size]))
+        correct += int(jnp.sum(jnp.argmax(logits, -1) == jnp.asarray(y[i : i + batch_size])))
+    return correct / len(x)
+
+
+def eval_metrics(apply_fn, params, state, x, y, num_classes=10, batch_size=200):
+    """Accuracy, macro F1/precision/recall and the confusion matrix — the
+    Table I metric set."""
+    cm = np.zeros((num_classes, num_classes), dtype=np.int64)
+    for i in range(0, len(x), batch_size):
+        logits = apply_fn(params, state, jnp.asarray(x[i : i + batch_size]))
+        pred = np.asarray(jnp.argmax(logits, -1))
+        for t, p in zip(y[i : i + batch_size], pred):
+            cm[int(t), int(p)] += 1
+    return confusion_metrics(cm)
+
+
+def confusion_metrics(cm: np.ndarray) -> Dict:
+    tp = np.diag(cm).astype(np.float64)
+    support = cm.sum(axis=1).astype(np.float64)
+    predicted = cm.sum(axis=0).astype(np.float64)
+    prec = np.where(predicted > 0, tp / np.maximum(predicted, 1), 0.0)
+    rec = np.where(support > 0, tp / np.maximum(support, 1), 0.0)
+    f1 = np.where(prec + rec > 0, 2 * prec * rec / np.maximum(prec + rec, 1e-12), 0.0)
+    return {
+        "accuracy": float(tp.sum() / max(cm.sum(), 1)),
+        "f1": float(f1.mean()),
+        "precision": float(prec.mean()),
+        "recall": float(rec.mean()),
+        "per_class_accuracy": (tp / np.maximum(support, 1)).tolist(),
+        "confusion": cm.tolist(),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Teacher pre-training
+# ---------------------------------------------------------------------------
+
+
+def train_teacher(cfg: TeacherConfig, params, state, tx, ty, vx, vy, log=None):
+    log = log if log is not None else []
+
+    @jax.jit
+    def step(params, state, opt, xb, yb):
+        def loss_fn(p):
+            logits, new_s = teacher_logits(p, state, xb, cfg, training=True)
+            from .model import l2_penalty
+
+            return cross_entropy(logits, yb) + cfg.l2 * l2_penalty(p), new_s
+
+        (loss, new_s), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        params, opt = adam_update(params, grads, opt, cfg.lr)
+        return params, new_s, opt, loss
+
+    opt = adam_init(params)
+    rng = np.random.default_rng(cfg.seed)
+    infer = jax.jit(lambda p, s, xb: teacher_logits(p, s, xb, cfg, training=False)[0])
+    for epoch in range(cfg.epochs):
+        t0 = time.time()
+        losses = []
+        for bidx in _batches(len(tx), cfg.batch_size, rng):
+            params, state, opt, loss = step(
+                params, state, opt, jnp.asarray(tx[bidx]), jnp.asarray(ty[bidx])
+            )
+            losses.append(float(loss))
+        acc = evaluate(infer, params, state, vx, vy)
+        log.append(
+            {
+                "phase": "teacher",
+                "epoch": epoch,
+                "loss": float(np.mean(losses)),
+                "val_acc": acc,
+                "secs": time.time() - t0,
+            }
+        )
+    return params, state, log
+
+
+# ---------------------------------------------------------------------------
+# Student: baseline + knowledge distillation with curriculum (Eq. 4)
+# ---------------------------------------------------------------------------
+
+
+def train_student_baseline(cfg: StudentConfig, params, state, tx, ty, vx, vy, log=None):
+    """Hard-label training — the "Student (without optimisations)" Table I row."""
+    log = log if log is not None else []
+
+    @jax.jit
+    def step(params, state, opt, xb, yb):
+        def loss_fn(p):
+            logits, new_s = student_logits(p, state, xb, training=True)
+            return cross_entropy(logits, yb), new_s
+
+        (loss, new_s), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        params, opt = adam_update(params, grads, opt, cfg.lr)
+        return params, new_s, opt, loss
+
+    opt = adam_init(params)
+    rng = np.random.default_rng(cfg.seed)
+    infer = jax.jit(lambda p, s, xb: student_logits(p, s, xb, training=False)[0])
+    for epoch in range(cfg.epochs):
+        t0 = time.time()
+        losses = []
+        for bidx in _batches(len(tx), cfg.batch_size, rng):
+            params, state, opt, loss = step(
+                params, state, opt, jnp.asarray(tx[bidx]), jnp.asarray(ty[bidx])
+            )
+            losses.append(float(loss))
+        acc = evaluate(infer, params, state, vx, vy)
+        log.append(
+            {
+                "phase": "student_baseline",
+                "epoch": epoch,
+                "loss": float(np.mean(losses)),
+                "val_acc": acc,
+                "secs": time.time() - t0,
+            }
+        )
+    return params, state, log
+
+
+def curriculum_order(t_logits: np.ndarray, labels: np.ndarray) -> np.ndarray:
+    """Eq. 4: order samples by teacher cross-entropy, easiest first."""
+    logp = jax.nn.log_softmax(jnp.asarray(t_logits))
+    d = -np.asarray(jnp.take_along_axis(logp, jnp.asarray(labels)[:, None], axis=1))[:, 0]
+    return np.argsort(d, kind="stable")
+
+
+def distill_student(
+    dcfg: DistillConfig,
+    scfg: StudentConfig,
+    params,
+    state,
+    teacher_apply: Callable,  # xb -> teacher logits (frozen)
+    tx,
+    ty,
+    vx,
+    vy,
+    log=None,
+):
+    """Knowledge distillation (Eq. 1-3) with curriculum ordering (Eq. 4).
+
+    The teacher's logits over the whole training set are precomputed once:
+    they define both the soft targets and the difficulty ordering.  Curriculum
+    pacing: epoch e trains on the easiest fraction of the data (growing
+    linearly from 60% to 100% over the curriculum phase), *shuffled within
+    the subset* — strictly sorted batches destabilise BatchNorm statistics
+    and can collapse training, so Eq. 4 selects *what* the student sees, not
+    the literal batch order.
+    """
+    log = log if log is not None else []
+    t_logits_all = []
+    for i in range(0, len(tx), 256):
+        t_logits_all.append(np.asarray(teacher_apply(jnp.asarray(tx[i : i + 256]))))
+    t_logits_all = np.concatenate(t_logits_all)
+    order = curriculum_order(t_logits_all, ty) if dcfg.curriculum else None
+
+    @jax.jit
+    def step(params, state, opt, xb, yb, tb):
+        def loss_fn(p):
+            logits, new_s = student_logits(p, state, xb, training=True)
+            return composite_loss(logits, tb, yb, dcfg.alpha, dcfg.temperature), new_s
+
+        (loss, new_s), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        params, opt = adam_update(params, grads, opt, scfg.lr)
+        return params, new_s, opt, loss
+
+    opt = adam_init(params)
+    rng = np.random.default_rng(scfg.seed + 17)
+    infer = jax.jit(lambda p, s, xb: student_logits(p, s, xb, training=False)[0])
+    for epoch in range(dcfg.epochs):
+        t0 = time.time()
+        losses = []
+        curriculum_phase = dcfg.curriculum and epoch < max(dcfg.epochs // 2, 1)
+        if curriculum_phase:
+            # Easiest fraction grows 60% -> 100% across the curriculum phase.
+            phase_len = max(dcfg.epochs // 2, 1)
+            frac = 0.6 + 0.4 * (epoch + 1) / phase_len
+            subset = order[: max(int(frac * len(tx)), scfg.batch_size)]
+            batch_iter = _batches(len(subset), scfg.batch_size, rng, order=subset)
+        else:
+            batch_iter = _batches(len(tx), scfg.batch_size, rng)
+        for bidx in batch_iter:
+            params, state, opt, loss = step(
+                params,
+                state,
+                opt,
+                jnp.asarray(tx[bidx]),
+                jnp.asarray(ty[bidx]),
+                jnp.asarray(t_logits_all[bidx]),
+            )
+            losses.append(float(loss))
+        acc = evaluate(infer, params, state, vx, vy)
+        log.append(
+            {
+                "phase": "distill",
+                "epoch": epoch,
+                "curriculum": bool(curriculum_phase),
+                "loss": float(np.mean(losses)),
+                "val_acc": acc,
+                "secs": time.time() - t0,
+            }
+        )
+    return params, state, log

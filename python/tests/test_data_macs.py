@@ -1,0 +1,122 @@
+"""Dataset generator determinism (golden values shared with the Rust mirror)
+and the Eq.-13 MAC ledger / paper-scale constants."""
+
+import numpy as np
+from numpy.testing import assert_allclose
+
+from compile import macs
+from compile.config import DataConfig
+from compile.data import GRAY_WEIGHTS, Lcg, load, synth_dataset, synth_image, to_grayscale
+
+
+# ---------------------------------------------------------------------------
+# LCG / generator golden values — pinned identically in
+# rust/src/dataset/synthetic.rs tests; a change on either side breaks both.
+# ---------------------------------------------------------------------------
+
+
+def test_lcg_golden_sequence():
+    l = Lcg(42)
+    assert [l.next_u64() for l in [l] * 0] == []
+    seq = [Lcg(42).next_u64()]
+    l = Lcg(42)
+    seq = [l.next_u64() for _ in range(4)]
+    assert seq == [
+        13986908341085854848,
+        2827560660634158031,
+        776025860801273266,
+        301797295797536665,
+    ]
+
+
+def test_lcg_u01_golden():
+    assert abs(Lcg(0).u01() - 0.288574626916) < 1e-10
+
+
+def test_synth_image_golden():
+    img = synth_image(3, 7, 0)
+    assert img.shape == (32, 32)
+    assert abs(float(img.sum()) - 194.83780) < 1e-2
+    assert float(img[0, 0]) == 0.0
+
+
+def test_synth_image_deterministic():
+    a = synth_image(5, 11, 3)
+    b = synth_image(5, 11, 3)
+    assert_allclose(a, b)
+    c = synth_image(5, 12, 3)
+    assert not np.allclose(a, c)
+
+
+def test_synth_dataset_round_robin_labels():
+    x, y = synth_dataset(25, seed=0)
+    assert list(y[:12]) == [0, 1, 2, 3, 4, 5, 6, 7, 8, 9, 0, 1]
+    assert x.shape == (25, 32, 32, 1)
+    assert x.min() >= 0.0 and x.max() <= 1.0
+
+
+def test_grayscale_weights_are_paper_formula():
+    assert_allclose(GRAY_WEIGHTS, [0.2989, 0.5870, 0.1140], rtol=1e-6)
+    rgb = np.ones((2, 2, 3), np.float32)
+    assert_allclose(to_grayscale(rgb), np.full((2, 2), 0.9999), rtol=1e-4)
+
+
+def test_load_normalised():
+    cfg = DataConfig(train_samples=100, test_samples=40)
+    tx, ty, vx, vy, norm = load(cfg)
+    assert abs(tx.mean()) < 1e-3 and abs(tx.std() - 1.0) < 1e-2
+    assert tx.shape == (100, 32, 32, 1) and vx.shape == (40, 32, 32, 1)
+
+
+def test_load_color_tiles_channels():
+    cfg = DataConfig(train_samples=50, test_samples=20)
+    tx, *_ = load(cfg, color=True)
+    assert tx.shape == (50, 32, 32, 3)
+    assert_allclose(tx[..., 0], tx[..., 1])
+
+
+# ---------------------------------------------------------------------------
+# MAC ledger (Eq. 13)
+# ---------------------------------------------------------------------------
+
+
+def test_conv_macs_eq13():
+    l = macs.ConvLayer(h_out=16, w_out=16, kh=3, kw=3, cin=32, cout=128)
+    assert l.macs == 16 * 16 * 3 * 3 * 32 * 128
+
+
+def test_student_macs_layer_breakdown():
+    layers = macs.student_layers()
+    by_name = {l.name: l for l in layers}
+    assert by_name["conv1"].macs == 32 * 32 * 9 * 1 * 32
+    assert by_name["conv2"].macs == 16 * 16 * 9 * 32 * 128
+    assert by_name["conv3"].macs == 8 * 8 * 9 * 128 * 256
+    assert by_name["conv4"].macs == 7 * 7 * 4 * 256 * 16
+    assert by_name["head"].macs == 784 * 10
+
+
+def test_softmax_head_ops_constant():
+    """§V.D: removing the head saves 784*10 + 10 = 7,850 ops."""
+    head = macs.student_layers()[-1]
+    assert head.params == macs.PAPER["softmax_head_ops"] == 7850
+
+
+def test_paper_constants_internally_consistent():
+    p = macs.PAPER
+    assert p["frontend_ops_acam"] == round(p["student_opt"]["macs"]) - p["softmax_head_ops"]
+    # E_backend = 10 * 784 * 185fJ = 1.4504 nJ
+    e_b = p["n_templates"] * p["n_features"] * p["acam_cell_energy_fj"] * 1e-6  # nJ
+    assert abs(e_b - p["e_backend_nj"]) < 0.01
+    # Student effective MACs = 20% of base MACs (80% sparsity).
+    assert abs(p["student_opt"]["macs"] - p["student_base"]["macs"] * 0.2) < 1.0
+
+
+def test_effective_macs():
+    assert macs.effective_macs(1000, 0.8) == 200
+    assert macs.effective_macs(23_785_120, 0.8) == 4_757_024
+
+
+def test_teacher_macs_scale_with_width():
+    small = macs.total_macs(macs.teacher_layers(width=8))
+    big = macs.total_macs(macs.teacher_layers(width=16))
+    assert 3.5 < big / small < 4.5  # MACs ~ width^2

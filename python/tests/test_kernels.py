@@ -1,0 +1,196 @@
+"""Pallas kernels vs the pure-jnp oracle — the core correctness signal.
+
+hypothesis sweeps shapes (and the dtypes the pipeline feeds: f32 features,
+{0,1}-valued binaries) and asserts allclose against ref.py, per the repo
+contract that every kernel behaviour is pinned by its oracle.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import (
+    binary_quantize,
+    conv2d,
+    match_feature_count,
+    match_similarity,
+    matmul,
+    ref,
+)
+
+RNG = np.random.default_rng(0)
+HYP = dict(max_examples=12, deadline=None)
+
+
+# ---------------------------------------------------------------------------
+# matmul
+# ---------------------------------------------------------------------------
+
+
+@settings(**HYP)
+@given(
+    m=st.integers(1, 150),
+    k=st.integers(1, 150),
+    n=st.integers(1, 70),
+)
+def test_matmul_matches_ref(m, k, n):
+    a = RNG.normal(size=(m, k)).astype(np.float32)
+    b = RNG.normal(size=(k, n)).astype(np.float32)
+    assert_allclose(np.asarray(matmul(a, b)), a @ b, rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_exact_tile_multiple():
+    a = RNG.normal(size=(256, 128)).astype(np.float32)
+    b = RNG.normal(size=(128, 256)).astype(np.float32)
+    assert_allclose(np.asarray(matmul(a, b)), a @ b, rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_small_tiles():
+    a = RNG.normal(size=(20, 30)).astype(np.float32)
+    b = RNG.normal(size=(30, 10)).astype(np.float32)
+    out = matmul(a, b, bm=8, bk=8, bn=8)
+    assert_allclose(np.asarray(out), a @ b, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# conv2d
+# ---------------------------------------------------------------------------
+
+
+@settings(**HYP)
+@given(
+    b=st.integers(1, 3),
+    hw=st.sampled_from([4, 7, 8, 16]),
+    cin=st.sampled_from([1, 3, 8]),
+    cout=st.sampled_from([4, 16]),
+    kh=st.sampled_from([1, 2, 3]),
+    padding=st.sampled_from(["SAME", "VALID"]),
+)
+def test_conv2d_matches_ref(b, hw, cin, cout, kh, padding):
+    if padding == "VALID" and kh > hw:
+        return
+    x = RNG.normal(size=(b, hw, hw, cin)).astype(np.float32)
+    w = RNG.normal(size=(kh, kh, cin, cout)).astype(np.float32)
+    got = np.asarray(conv2d(x, w, padding))
+    want = np.asarray(ref.conv2d(jnp.asarray(x), jnp.asarray(w), padding))
+    assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_ref_conv2d_matches_lax():
+    """The oracle itself is validated against XLA's convolution."""
+    x = RNG.normal(size=(2, 12, 12, 5)).astype(np.float32)
+    w = RNG.normal(size=(3, 3, 5, 7)).astype(np.float32)
+    want = jax.lax.conv_general_dilated(
+        jnp.asarray(x), jnp.asarray(w), (1, 1), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    assert_allclose(np.asarray(ref.conv2d(jnp.asarray(x), jnp.asarray(w), "SAME")),
+                    np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_conv2d_valid_2x2_gives_fig5_feature_dim():
+    """Fig. 5: 8x8x256 --conv 2x2x16 VALID--> 7x7x16 = 784 features."""
+    x = RNG.normal(size=(1, 8, 8, 256)).astype(np.float32)
+    w = RNG.normal(size=(2, 2, 256, 16)).astype(np.float32)
+    out = conv2d(x, w, "VALID")
+    assert out.shape == (1, 7, 7, 16)
+    assert int(np.prod(out.shape[1:])) == 784
+
+
+# ---------------------------------------------------------------------------
+# pattern matching
+# ---------------------------------------------------------------------------
+
+
+@settings(**HYP)
+@given(
+    b=st.integers(1, 40),
+    m=st.integers(1, 35),
+    n=st.integers(1, 300),
+)
+def test_feature_count_matches_ref(b, m, n):
+    q = (RNG.random((b, n)) > 0.5).astype(np.float32)
+    t = (RNG.random((m, n)) > 0.5).astype(np.float32)
+    got = np.asarray(match_feature_count(q, t))
+    want = np.asarray(ref.match_feature_count(jnp.asarray(q), jnp.asarray(t)))
+    assert_allclose(got, want)
+
+
+def test_feature_count_extremes():
+    q = np.ones((2, 64), np.float32)
+    t = np.vstack([np.ones((1, 64), np.float32), np.zeros((1, 64), np.float32)])
+    s = np.asarray(match_feature_count(q, t))
+    assert s[0, 0] == 64.0 and s[0, 1] == 0.0
+
+
+@settings(**HYP)
+@given(
+    b=st.integers(1, 40),
+    m=st.integers(1, 35),
+    n=st.integers(1, 300),
+    alpha=st.floats(0.0, 1.0),
+)
+def test_similarity_matches_ref(b, m, n, alpha):
+    q = RNG.normal(size=(b, n)).astype(np.float32)
+    lo = (RNG.normal(size=(m, n)) - 0.5).astype(np.float32)
+    hi = lo + RNG.random((m, n)).astype(np.float32)
+    got = np.asarray(match_similarity(q, lo, hi, alpha))
+    want = np.asarray(ref.match_similarity(jnp.asarray(q), jnp.asarray(lo), jnp.asarray(hi), alpha))
+    assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_similarity_in_window_is_one():
+    """A query inside every window has D=0, H=1 -> similarity exactly 1."""
+    q = np.zeros((1, 50), np.float32)
+    lo, hi = -np.ones((3, 50), np.float32), np.ones((3, 50), np.float32)
+    s = np.asarray(match_similarity(q, lo, hi, 0.5))
+    assert_allclose(s, np.ones((1, 3)))
+
+
+# ---------------------------------------------------------------------------
+# binary quantize
+# ---------------------------------------------------------------------------
+
+
+@settings(**HYP)
+@given(b=st.integers(1, 50), n=st.integers(1, 900))
+def test_binary_quantize_matches_ref(b, n):
+    x = RNG.normal(size=(b, n)).astype(np.float32)
+    th = RNG.normal(size=(n,)).astype(np.float32)
+    got = np.asarray(binary_quantize(x, th))
+    want = np.asarray(ref.binary_quantize(jnp.asarray(x), jnp.asarray(th)))
+    assert_allclose(got, want)
+    assert set(np.unique(got)).issubset({0.0, 1.0})
+
+
+def test_binary_quantize_strict_inequality():
+    """Threshold equality binarises to 0 (strict >), matching Rust."""
+    x = np.array([[1.0, 2.0, 3.0]], np.float32)
+    th = np.array([1.0, 1.5, 3.0], np.float32)
+    assert np.asarray(binary_quantize(x, th)).tolist() == [[0.0, 1.0, 0.0]]
+
+
+# ---------------------------------------------------------------------------
+# classify (Eq. 12 multi-template argmax)
+# ---------------------------------------------------------------------------
+
+
+def test_classify_picks_best_template_class():
+    scores = jnp.asarray([[1.0, 5.0, 3.0, 4.0]])
+    class_of = jnp.asarray([0, 0, 1, 1])
+    pred = ref.classify(scores, class_of, 2)
+    assert int(pred[0]) == 0  # max over class 0 templates (5) beats class 1 (4)
+
+
+def test_fc_and_sim_agree_on_binary_inputs():
+    """§V.B: with binary features and unit windows the two matching modes
+    produce the same argmax (scores are monotone transforms of each other)."""
+    q = (RNG.random((30, 100)) > 0.5).astype(np.float32)
+    t = (RNG.random((10, 100)) > 0.5).astype(np.float32)
+    fc = np.asarray(ref.match_feature_count(jnp.asarray(q), jnp.asarray(t)))
+    sim = np.asarray(ref.match_similarity(
+        jnp.asarray(q), jnp.asarray(t) - 0.5, jnp.asarray(t) + 0.5, 0.05))
+    assert (fc.argmax(1) == sim.argmax(1)).all()

@@ -1,0 +1,136 @@
+"""Model definitions: shapes, Fig.-5 feature width, pallas/jnp path equality,
+BatchNorm state threading, teacher block wiring."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile.config import StudentConfig, TeacherConfig
+from compile.model import (
+    init_student,
+    init_teacher,
+    l2_penalty,
+    student_features,
+    student_logits,
+    student_param_count,
+    teacher_logits,
+)
+
+RNG = np.random.default_rng(1)
+
+
+@pytest.fixture(scope="module")
+def student():
+    cfg = StudentConfig()
+    params, state = init_student(cfg, jax.random.PRNGKey(0))
+    return cfg, params, state
+
+
+@pytest.fixture(scope="module")
+def teacher():
+    cfg = TeacherConfig(width=8, blocks_per_stage=1)
+    params, state = init_teacher(cfg, jax.random.PRNGKey(1))
+    return cfg, params, state
+
+
+def test_student_feature_dim_is_784(student):
+    cfg, params, state = student
+    x = jnp.asarray(RNG.normal(size=(2, 32, 32, 1)).astype(np.float32))
+    feats, _ = student_features(params, state, x)
+    assert feats.shape == (2, 784)
+
+
+def test_student_logits_shape(student):
+    cfg, params, state = student
+    x = jnp.asarray(RNG.normal(size=(3, 32, 32, 1)).astype(np.float32))
+    logits, _ = student_logits(params, state, x)
+    assert logits.shape == (3, 10)
+
+
+def test_student_pallas_path_matches_jnp(student):
+    """The AOT export uses the Pallas path; training uses jnp — they must be
+    numerically identical (same im2col layout, same contraction)."""
+    cfg, params, state = student
+    x = jnp.asarray(RNG.normal(size=(2, 32, 32, 1)).astype(np.float32))
+    f_jnp, _ = student_features(params, state, x, use_pallas=False)
+    f_pl, _ = student_features(params, state, x, use_pallas=True)
+    assert_allclose(np.asarray(f_jnp), np.asarray(f_pl), rtol=1e-4, atol=1e-4)
+
+
+def test_student_param_count_matches_fig5(student):
+    """Fig. 5 arithmetic: conv1 320 + bn1 64 + conv2 36,992 + bn2 256 +
+    conv3 295,168 + conv4 16,400 + head 7,850."""
+    cfg, params, state = student
+    expect = (
+        (3 * 3 * 1 * 32 + 32)
+        + 2 * 32
+        + (3 * 3 * 32 * 128 + 128)
+        + 2 * 128
+        + (3 * 3 * 128 * 256 + 256)
+        + (2 * 2 * 256 * 16 + 16)
+        + (784 * 10 + 10)
+    )
+    assert student_param_count(params) == expect
+
+
+def test_bn_state_updates_only_in_training(student):
+    cfg, params, state = student
+    x = jnp.asarray(RNG.normal(size=(4, 32, 32, 1)).astype(np.float32))
+    _, s_train = student_features(params, state, x, training=True)
+    _, s_infer = student_features(params, state, x, training=False)
+    assert not np.allclose(np.asarray(s_train["bn1"]["mean"]), np.asarray(state["bn1"]["mean"]))
+    assert_allclose(np.asarray(s_infer["bn1"]["mean"]), np.asarray(state["bn1"]["mean"]))
+
+
+def test_teacher_shapes(teacher):
+    cfg, params, state = teacher
+    x = jnp.asarray(RNG.normal(size=(2, 32, 32, 1)).astype(np.float32))
+    logits, new_state = teacher_logits(params, state, x, cfg)
+    assert logits.shape == (2, 10)
+    assert set(new_state) == set(state)
+
+
+def test_teacher_color_input():
+    cfg = TeacherConfig(width=8)
+    params, state = init_teacher(cfg, jax.random.PRNGKey(2), in_channels=3)
+    x = jnp.asarray(RNG.normal(size=(2, 32, 32, 3)).astype(np.float32))
+    logits, _ = teacher_logits(params, state, x, cfg)
+    assert logits.shape == (2, 10)
+
+
+def test_teacher_stage_downsampling(teacher):
+    """Stages 1 and 2 halve spatial dims: 32 -> 16 -> 8 before GAP."""
+    cfg, params, state = teacher
+    # Probe by checking a projection conv exists exactly where widths change.
+    assert "proj" in params["s1b0"] and "proj" in params["s2b0"]
+    assert "proj" not in params["s0b0"]
+
+
+def test_l2_penalty_positive_and_weight_only(teacher):
+    cfg, params, state = teacher
+    p = l2_penalty(params)
+    assert float(p) > 0
+    # Zeroing biases must not change the penalty.
+    import jax.tree_util as jtu
+
+    params2 = jtu.tree_map_with_path(
+        lambda path, x: jnp.zeros_like(x) if path[-1].key == "b" else x, params
+    )
+    assert_allclose(float(l2_penalty(params2)), float(p), rtol=1e-6)
+
+
+def test_student_grad_flows(student):
+    cfg, params, state = student
+    x = jnp.asarray(RNG.normal(size=(2, 32, 32, 1)).astype(np.float32))
+    y = jnp.asarray(np.array([1, 3]))
+
+    def loss(p):
+        logits, _ = student_logits(p, state, x, training=True)
+        logp = jax.nn.log_softmax(logits)
+        return -jnp.mean(jnp.take_along_axis(logp, y[:, None], 1))
+
+    g = jax.grad(loss)(params)
+    norms = [float(jnp.abs(leaf).sum()) for leaf in jax.tree_util.tree_leaves(g)]
+    assert all(np.isfinite(norms)) and sum(norms) > 0

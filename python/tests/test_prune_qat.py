@@ -1,0 +1,124 @@
+"""Pruning schedule (Eq. 5-7) and QAT fake-quantisation invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from numpy.testing import assert_allclose
+
+from compile.config import PruneConfig, StudentConfig
+from compile.model import init_student
+from compile.prune import (
+    apply_masks,
+    global_threshold,
+    make_masks,
+    polynomial_sparsity,
+    sparsity_of,
+)
+from compile.qat import fake_quant, quantize_params
+
+RNG = np.random.default_rng(3)
+
+
+def _student_params():
+    return init_student(StudentConfig(), jax.random.PRNGKey(7))[0]
+
+
+def test_polynomial_schedule_endpoints():
+    cfg = PruneConfig(initial_sparsity=0.5, final_sparsity=0.8, pruning_steps=8)
+    assert_allclose(polynomial_sparsity(0, cfg), 0.5, rtol=1e-9)
+    assert_allclose(polynomial_sparsity(8, cfg), 0.8, rtol=1e-9)
+
+
+def test_polynomial_schedule_monotone():
+    cfg = PruneConfig(pruning_steps=10)
+    vals = [polynomial_sparsity(t, cfg) for t in range(11)]
+    assert all(b >= a for a, b in zip(vals, vals[1:]))
+
+
+def test_polynomial_schedule_cubic_shape():
+    """Eq. 5 at t = n_t/2: s = s_f + (s_i - s_f) * 0.125."""
+    cfg = PruneConfig(initial_sparsity=0.5, final_sparsity=0.8, pruning_steps=8)
+    assert_allclose(polynomial_sparsity(4, cfg), 0.8 + (0.5 - 0.8) * 0.125, rtol=1e-9)
+
+
+def test_global_threshold_is_percentile():
+    params = _student_params()
+    th = global_threshold(params, 0.6)
+    mags = np.concatenate(
+        [
+            np.abs(np.asarray(leaf)).ravel()
+            for path, leaf in jax.tree_util.tree_leaves_with_path(params)
+            if path[-1].key == "w" and path[0].key != "head"
+        ]
+    )
+    assert_allclose(th, np.quantile(mags, 0.6), rtol=1e-6)
+
+
+def test_masks_hit_target_sparsity():
+    params = _student_params()
+    for target in (0.5, 0.8):
+        masks = make_masks(params, target)
+        assert abs(sparsity_of(params, masks) - target) < 0.02
+
+
+def test_masks_preserve_head_and_biases():
+    """The head feeds the softmax baseline; ACAM-aware pruning leaves it and
+    all biases dense."""
+    params = _student_params()
+    masks = make_masks(params, 0.8)
+    assert float(jnp.min(masks["head"]["w"])) == 1.0
+    assert float(jnp.min(masks["conv1"]["b"])) == 1.0
+
+
+def test_apply_masks_zeroes_exactly():
+    params = _student_params()
+    masks = make_masks(params, 0.7)
+    pruned = apply_masks(params, masks)
+    w = np.asarray(pruned["conv3"]["w"])
+    m = np.asarray(masks["conv3"]["w"])
+    assert (w[m == 0] == 0).all()
+    assert_allclose(w[m == 1], np.asarray(params["conv3"]["w"])[m == 1])
+
+
+# ---------------------------------------------------------------------------
+# QAT
+# ---------------------------------------------------------------------------
+
+
+def test_fake_quant_levels():
+    """8-bit symmetric: at most 255 distinct dequantised levels."""
+    w = jnp.asarray(RNG.normal(size=(64, 64)).astype(np.float32))
+    q = np.asarray(fake_quant(w, bits=8))
+    assert len(np.unique(q)) <= 255
+
+
+def test_fake_quant_bounded_error():
+    w = jnp.asarray(RNG.normal(size=(1000,)).astype(np.float32))
+    q = np.asarray(fake_quant(w, bits=8))
+    scale = float(jnp.max(jnp.abs(w))) / 127
+    assert np.max(np.abs(q - np.asarray(w))) <= scale * 0.5 + 1e-7
+
+
+def test_fake_quant_ste_gradient_is_identity():
+    w = jnp.asarray([0.3, -0.7, 0.01])
+    g = jax.grad(lambda x: jnp.sum(fake_quant(x) * jnp.asarray([1.0, 2.0, 3.0])))(w)
+    assert_allclose(np.asarray(g), [1.0, 2.0, 3.0], rtol=1e-6)
+
+
+def test_quantize_params_idempotent():
+    params = _student_params()
+    q1 = quantize_params(params)
+    q2 = quantize_params(q1)
+    for a, b in zip(jax.tree_util.tree_leaves(q1), jax.tree_util.tree_leaves(q2)):
+        assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6, atol=1e-7)
+
+
+def test_quantize_params_keeps_zeros():
+    """Pruned (zero) weights stay exactly zero after quantisation — sparsity
+    survives deployment."""
+    params = _student_params()
+    masks = make_masks(params, 0.8)
+    pruned = apply_masks(params, masks)
+    q = quantize_params(pruned)
+    w = np.asarray(q["conv3"]["w"])
+    assert (w[np.asarray(masks["conv3"]["w"]) == 0] == 0).all()

@@ -1,0 +1,132 @@
+"""Template generation: thresholds (Fig. 1), k-means/silhouette, matching
+predictors (Eq. 8-12) and the §V.B binary-equivalence property."""
+
+import numpy as np
+from numpy.testing import assert_allclose
+
+from compile.templates import (
+    binarize,
+    feature_thresholds,
+    generate_templates,
+    kmeans,
+    match_predict_fc,
+    match_predict_sim,
+    silhouette_score,
+)
+
+RNG = np.random.default_rng(4)
+
+
+def test_mean_threshold_below_median_for_relu_sparse_features():
+    """The paper's Fig.-1 argument: ReLU sparsity (many zeros) drags the mean
+    below the median for most features."""
+    feats = np.maximum(RNG.normal(size=(500, 64)) - 0.8, 0.0).astype(np.float32)
+    mean_th = feature_thresholds(feats, "mean")
+    med_th = feature_thresholds(feats, "median")
+    assert (med_th <= mean_th + 1e-6).mean() > 0.9  # median is 0 almost everywhere
+    # and crucially the mean keeps low-magnitude activations classifiable:
+    assert (mean_th > 0).mean() > 0.9
+
+
+def test_binarize_output_domain():
+    feats = RNG.normal(size=(20, 16)).astype(np.float32)
+    th = feature_thresholds(feats, "mean")
+    b = binarize(feats, th)
+    assert set(np.unique(b)).issubset({0.0, 1.0})
+
+
+def test_kmeans_separates_two_blobs():
+    a = RNG.normal(size=(50, 8)) + 5.0
+    b = RNG.normal(size=(50, 8)) - 5.0
+    x = np.vstack([a, b])
+    cents, assign, inertia = kmeans(x, 2, iters=50, restarts=3, rng=RNG)
+    # Each blob maps to a single cluster.
+    assert len(set(assign[:50])) == 1 and len(set(assign[50:])) == 1
+    assert assign[0] != assign[50]
+
+
+def test_kmeans_k1_is_mean():
+    x = RNG.normal(size=(30, 4))
+    cents, assign, _ = kmeans(x, 1, iters=10, restarts=1, rng=RNG)
+    assert_allclose(cents[0], x.mean(0), rtol=1e-6)
+
+
+def test_kmeans_inertia_nonincreasing_in_k():
+    x = RNG.normal(size=(60, 6))
+    inertias = [kmeans(x, k, 30, 3, np.random.default_rng(0))[2] for k in (1, 2, 3)]
+    assert inertias[0] >= inertias[1] >= inertias[2]
+
+
+def test_silhouette_range_and_separation():
+    a = RNG.normal(size=(40, 4)) + 4.0
+    b = RNG.normal(size=(40, 4)) - 4.0
+    x = np.vstack([a, b])
+    assign = np.array([0] * 40 + [1] * 40)
+    s = silhouette_score(x, assign)
+    assert 0.5 < s <= 1.0
+    # Random assignment scores far worse.
+    s_rand = silhouette_score(x, RNG.integers(0, 2, size=80))
+    assert s_rand < s
+
+
+def test_silhouette_single_cluster_is_zero():
+    x = RNG.normal(size=(20, 3))
+    assert silhouette_score(x, np.zeros(20, dtype=np.int64)) == 0.0
+
+
+def _toy_store(k=1):
+    """Two well-separated classes in binary feature space."""
+    n = 40
+    f0 = (RNG.random((60, n)) < 0.15).astype(np.float32)
+    f1 = (RNG.random((60, n)) > 0.15).astype(np.float32)
+    feats = np.vstack([f0, f1])
+    labels = np.array([0] * 60 + [1] * 60)
+    store = generate_templates(feats, feats, labels, 2, k, seed=0)
+    return feats, labels, store
+
+
+def test_generate_templates_shapes():
+    feats, labels, store = _toy_store(k=2)
+    assert store["templates"].shape == (4, 40)
+    assert list(store["class_of"]) == [0, 0, 1, 1]
+    assert store["lo"].shape == store["hi"].shape == (4, 40)
+    assert (store["hi"] >= store["lo"]).all()
+
+
+def test_templates_are_binary():
+    _, _, store = _toy_store(k=3)
+    assert set(np.unique(store["templates"])).issubset({0, 1})
+
+
+def test_match_predict_fc_separable():
+    feats, labels, store = _toy_store(k=1)
+    pred = match_predict_fc(feats, store, 2)
+    assert (pred == labels).mean() > 0.95
+
+
+def test_match_predict_sim_binary_agrees_with_fc():
+    """§V.B: in the binary domain the similarity model and the feature count
+    converge to the same classification."""
+    feats, labels, store = _toy_store(k=1)
+    p_fc = match_predict_fc(feats, store, 2)
+    p_sim = match_predict_sim(feats, store, 2, alpha=0.05, binary=True)
+    assert (p_fc == p_sim).all()
+
+
+def test_multi_template_covers_subclusters():
+    """A class made of two distant binary sub-modes needs k=2 to match both."""
+    n = 40
+    m0 = np.zeros(n, np.float32)
+    m1 = np.ones(n, np.float32)
+    cls0 = np.vstack([np.tile(m0, (30, 1)), np.tile(m1, (30, 1))])
+    cls0 += (RNG.random(cls0.shape) < 0.05)  # flip a few bits
+    cls0 = np.clip(cls0, 0, 1)
+    cls1 = np.tile((np.arange(n) % 2).astype(np.float32), (60, 1))
+    feats = np.vstack([cls0, cls1])
+    labels = np.array([0] * 60 + [1] * 60)
+    s1 = generate_templates(feats, feats, labels, 2, 1, seed=0)
+    s2 = generate_templates(feats, feats, labels, 2, 2, seed=0)
+    acc1 = (match_predict_fc(feats, s1, 2) == labels).mean()
+    acc2 = (match_predict_fc(feats, s2, 2) == labels).mean()
+    assert acc2 >= acc1  # Table II: the second template helps bimodal classes
+    assert acc2 > 0.95

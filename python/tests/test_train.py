@@ -1,0 +1,100 @@
+"""Distillation losses (Eq. 1-3), curriculum ordering (Eq. 4), Adam, metrics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from numpy.testing import assert_allclose
+
+from compile.train import (
+    adam_init,
+    adam_update,
+    composite_loss,
+    confusion_metrics,
+    cross_entropy,
+    curriculum_order,
+    kd_loss,
+)
+
+RNG = np.random.default_rng(2)
+
+
+def test_cross_entropy_perfect_prediction_near_zero():
+    logits = jnp.asarray([[20.0, 0.0, 0.0], [0.0, 20.0, 0.0]])
+    labels = jnp.asarray([0, 1])
+    assert float(cross_entropy(logits, labels)) < 1e-6
+
+
+def test_kd_loss_zero_when_student_equals_teacher():
+    z = jnp.asarray(RNG.normal(size=(8, 10)).astype(np.float32))
+    assert abs(float(kd_loss(z, z, temperature=4.0))) < 1e-5
+
+
+def test_kd_loss_positive_when_different():
+    zs = jnp.asarray(RNG.normal(size=(8, 10)).astype(np.float32))
+    zt = jnp.asarray(RNG.normal(size=(8, 10)).astype(np.float32))
+    assert float(kd_loss(zs, zt, temperature=4.0)) > 0
+
+
+def test_kd_t2_scaling_keeps_gradients_comparable():
+    """Hinton's T^2 factor: gradient magnitude should be O(1) across T."""
+    zs = jnp.asarray(RNG.normal(size=(16, 10)).astype(np.float32))
+    zt = jnp.asarray(RNG.normal(size=(16, 10)).astype(np.float32))
+    g2 = jnp.abs(jax.grad(lambda z: kd_loss(z, zt, 2.0))(zs)).mean()
+    g8 = jnp.abs(jax.grad(lambda z: kd_loss(z, zt, 8.0))(zs)).mean()
+    # Without T^2 these differ by ~(8/2)^2 = 16x; with it, well within 4x.
+    assert float(g2) / float(g8) < 4.0 and float(g8) / float(g2) < 4.0
+
+
+def test_composite_loss_alpha_extremes():
+    """Eq. 1: alpha=0 -> pure CE, alpha=1 -> pure KD."""
+    zs = jnp.asarray(RNG.normal(size=(8, 10)).astype(np.float32))
+    zt = jnp.asarray(RNG.normal(size=(8, 10)).astype(np.float32))
+    y = jnp.asarray(RNG.integers(0, 10, size=8))
+    assert_allclose(
+        float(composite_loss(zs, zt, y, 0.0, 4.0)), float(cross_entropy(zs, y)), rtol=1e-6
+    )
+    assert_allclose(
+        float(composite_loss(zs, zt, y, 1.0, 4.0)), float(kd_loss(zs, zt, 4.0)), rtol=1e-6
+    )
+
+
+def test_curriculum_orders_easy_first():
+    """Eq. 4: samples the teacher nails come before ones it misses."""
+    # Teacher confident-correct on sample 0, confident-wrong on sample 1.
+    t_logits = np.array([[10.0, 0.0], [10.0, 0.0], [2.0, 0.0]], np.float32)
+    labels = np.array([0, 1, 0])
+    order = curriculum_order(t_logits, labels)
+    assert order[0] == 0 and order[-1] == 1
+
+
+def test_adam_converges_on_quadratic():
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    opt = adam_init(params)
+    for _ in range(400):
+        g = jax.grad(lambda p: jnp.sum(p["w"] ** 2))(params)
+        params, opt = adam_update(params, g, opt, lr=0.05)
+    assert float(jnp.abs(params["w"]).max()) < 1e-2
+
+
+def test_adam_bias_correction_first_step():
+    """After one step with unit gradient, |delta| ~ lr (bias-corrected)."""
+    params = {"w": jnp.asarray([0.0])}
+    opt = adam_init(params)
+    g = {"w": jnp.asarray([1.0])}
+    new_params, _ = adam_update(params, g, opt, lr=0.1)
+    assert_allclose(float(new_params["w"][0]), -0.1, rtol=1e-3)
+
+
+def test_confusion_metrics_identity():
+    cm = np.diag([5, 5, 5])
+    m = confusion_metrics(cm)
+    assert m["accuracy"] == 1.0 and m["f1"] == 1.0
+    assert m["per_class_accuracy"] == [1.0, 1.0, 1.0]
+
+
+def test_confusion_metrics_known_case():
+    cm = np.array([[8, 2], [4, 6]])
+    m = confusion_metrics(cm)
+    assert_allclose(m["accuracy"], 0.7)
+    assert_allclose(m["precision"], ((8 / 12) + (6 / 8)) / 2, rtol=1e-9)
+    assert_allclose(m["recall"], (0.8 + 0.6) / 2, rtol=1e-9)

@@ -1,0 +1,296 @@
+//! ACAM array: rows of cells sharing a matchline, simulated with explicit
+//! RC timesteps, sensed by per-row amplifiers (Fig. 3's first layer).
+//!
+//! The search is the paper's "massively parallel compare": every cell of
+//! every row evaluates the query simultaneously; each row's matchline
+//! integrates its cells' currents; the sense amplifier converts time-to-
+//! charge into the row's analogue similarity.  With the 6T4R charging cell
+//! the matchline voltage after the evaluation window is monotone in the
+//! number of matching cells, so the downstream WTA computes exactly
+//! Eq. 8 + Eq. 12.
+
+
+use super::cell::{AcamCell, CellKind, I_LIMIT};
+use super::variability::Variability;
+use super::VDD;
+
+/// Electrical configuration of the array periphery.
+#[derive(Debug, Clone)]
+pub struct ArrayConfig {
+    pub kind: CellKind,
+    /// Matchline capacitance per attached cell (F). 5 fF/cell is typical
+    /// for a 180 nm metal line plus drain loading.
+    pub c_ml_per_cell: f64,
+    /// Evaluation window (s).
+    pub t_eval: f64,
+    /// Simulation timestep (s).
+    pub dt: f64,
+    /// Matchline leakage resistance (ohm) — bounds the voltage at long t.
+    pub r_leak: f64,
+    /// Sense-amp reference as a fraction of VDD (match/mismatch decision).
+    pub sense_ref: f64,
+    /// Per-search per-cell energy (fJ) — the Section III-B figure.
+    pub cell_energy_fj: f64,
+}
+
+impl Default for ArrayConfig {
+    fn default() -> Self {
+        ArrayConfig {
+            kind: CellKind::Charging6T4R,
+            c_ml_per_cell: 5e-15,
+            t_eval: 20e-9,
+            dt: 0.5e-9,
+            r_leak: 5e8,
+            sense_ref: 0.5,
+            cell_energy_fj: 185.0,
+        }
+    }
+}
+
+/// Result of one parallel search.
+#[derive(Debug, Clone)]
+pub struct SearchOutput {
+    /// Per-row analogue similarity in [0, 1] (matchline voltage / VDD for
+    /// the charging cell; min of the two precharged lines for 3T1R).
+    pub similarity: Vec<f64>,
+    /// Per-row sense-amp digital match flags.
+    pub matched: Vec<bool>,
+    /// Per-row count of matching cells (diagnostic; what Eq. 8 counts).
+    pub match_counts: Vec<u32>,
+    /// Energy consumed by this search (nJ): cells x 185 fJ.
+    pub energy_nj: f64,
+}
+
+/// The array: `rows x width` cells (one row per stored template).
+pub struct AcamArray {
+    pub config: ArrayConfig,
+    pub variability: Variability,
+    rows: Vec<Vec<AcamCell>>,
+    rng: crate::rng::Rng,
+}
+
+impl AcamArray {
+    /// Build from per-row windows: `windows[r] = (lo[], hi[])` in volts.
+    pub fn from_windows(
+        config: ArrayConfig,
+        variability: Variability,
+        windows: &[(Vec<f64>, Vec<f64>)],
+        seed: u64,
+    ) -> Self {
+        let mut rng = crate::rng::Rng::new(seed);
+        let rows = windows
+            .iter()
+            .map(|(lo, hi)| {
+                lo.iter()
+                    .zip(hi.iter())
+                    .map(|(&l, &h)| AcamCell::program(config.kind, l, h, &variability, &mut rng))
+                    .collect()
+            })
+            .collect();
+        AcamArray {
+            config,
+            variability,
+            rows,
+            rng,
+        }
+    }
+
+    pub fn num_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn width(&self) -> usize {
+        self.rows.first().map_or(0, Vec::len)
+    }
+
+    /// One massively-parallel search of `query_v` (volts, one per column).
+    ///
+    /// Timestepped matchline integration:
+    /// * 6T4R: `C dV/dt = I_match - V / R_leak`, V(0) = 0 (discharged init);
+    /// * 3T1R: both lines precharged to VDD, mismatch currents pull down:
+    ///   `C dV/dt = -I_dis - (V - VDD) / R_leak`.
+    pub fn search(&mut self, query_v: &[f64]) -> SearchOutput {
+        assert_eq!(query_v.len(), self.width(), "query width mismatch");
+        let n_rows = self.num_rows();
+        let width = self.width();
+        let c_ml = self.config.c_ml_per_cell * width as f64;
+        let steps = (self.config.t_eval / self.config.dt).ceil() as usize;
+
+        let mut similarity = Vec::with_capacity(n_rows);
+        let mut matched = Vec::with_capacity(n_rows);
+        let mut match_counts = Vec::with_capacity(n_rows);
+
+        let sense_sigma = self.variability.sense_offset_sigma * VDD;
+
+        for row in &self.rows {
+            // Evaluate every cell once (the physical compare is static
+            // during the evaluation window).
+            let mut i_charge = 0f64;
+            let mut i_dis_low = 0f64;
+            let mut i_dis_high = 0f64;
+            let mut count = 0u32;
+            for (cell, &v) in row.iter().zip(query_v.iter()) {
+                let r = cell.response(v, &self.variability, &mut self.rng);
+                i_charge += r.i_charge;
+                i_dis_low += r.i_dis_low;
+                i_dis_high += r.i_dis_high;
+                count += u32::from(r.matched);
+            }
+
+            let sim = match self.config.kind {
+                CellKind::Charging6T4R => {
+                    // Integrate the single matchline from 0 V.
+                    let mut v_ml = 0f64;
+                    for _ in 0..steps {
+                        let dv = (i_charge - v_ml / self.config.r_leak) / c_ml;
+                        v_ml = (v_ml + dv * self.config.dt).clamp(0.0, VDD);
+                    }
+                    v_ml / VDD
+                }
+                CellKind::Precharging3T1R => {
+                    // Integrate both precharged lines downward.
+                    let mut v_lo = VDD;
+                    let mut v_hi = VDD;
+                    for _ in 0..steps {
+                        let dvl = (-i_dis_low - (v_lo - VDD) / self.config.r_leak) / c_ml;
+                        let dvh = (-i_dis_high - (v_hi - VDD) / self.config.r_leak) / c_ml;
+                        v_lo = (v_lo + dvl * self.config.dt).clamp(0.0, VDD);
+                        v_hi = (v_hi + dvh * self.config.dt).clamp(0.0, VDD);
+                    }
+                    // A template matches to the degree *neither* line dropped.
+                    v_lo.min(v_hi) / VDD
+                }
+            };
+
+            let sense_ref = if sense_sigma > 0.0 {
+                self.config.sense_ref + self.rng.normal(0.0, sense_sigma) / VDD
+            } else {
+                self.config.sense_ref
+            };
+            similarity.push(sim);
+            matched.push(sim >= sense_ref);
+            match_counts.push(count);
+        }
+
+        SearchOutput {
+            energy_nj: (n_rows * width) as f64 * self.config.cell_energy_fj * 1e-6,
+            similarity,
+            matched,
+            match_counts,
+        }
+    }
+
+    /// Full-row charge saturation check: with all `width` cells matching and
+    /// the default periphery, the matchline must reach the sense reference
+    /// within the evaluation window (design-point sanity, used in tests and
+    /// calibration).
+    pub fn full_match_headroom(&self) -> f64 {
+        let width = self.width().max(1);
+        let c_ml = self.config.c_ml_per_cell * width as f64;
+        // Linear-charge estimate: V = I_total * t / C.
+        let v = I_LIMIT * width as f64 * self.config.t_eval / c_ml;
+        v.min(VDD) / (self.config.sense_ref * VDD)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Binary-template helper: windows [V(b-0.5), V(b+0.5)].
+    fn binary_windows(templates: &[Vec<u8>]) -> Vec<(Vec<f64>, Vec<f64>)> {
+        use super::super::feature_to_voltage as v;
+        templates
+            .iter()
+            .map(|t| {
+                let lo = t.iter().map(|&b| v(b as f32 - 0.5)).collect();
+                let hi = t.iter().map(|&b| v(b as f32 + 0.5)).collect();
+                (lo, hi)
+            })
+            .collect()
+    }
+
+    fn ideal_array(templates: &[Vec<u8>], kind: CellKind) -> AcamArray {
+        let cfg = ArrayConfig {
+            kind,
+            ..Default::default()
+        };
+        AcamArray::from_windows(cfg, Variability::ideal(), &binary_windows(templates), 7)
+    }
+
+    #[test]
+    fn similarity_monotone_in_match_count_6t4r() {
+        // Rows engineered to match 64, 32, 0 of 64 query bits.
+        let q: Vec<u8> = vec![1; 64];
+        let t_full = vec![1u8; 64];
+        let mut t_half = vec![1u8; 64];
+        for b in t_half.iter_mut().take(32) {
+            *b = 0;
+        }
+        let t_none = vec![0u8; 64];
+        let mut arr = ideal_array(&[t_full, t_half, t_none], CellKind::Charging6T4R);
+        let qv: Vec<f64> = q.iter().map(|&b| super::super::feature_to_voltage(b as f32)).collect();
+        let out = arr.search(&qv);
+        assert_eq!(out.match_counts, vec![64, 32, 0]);
+        assert!(out.similarity[0] > out.similarity[1]);
+        assert!(out.similarity[1] > out.similarity[2]);
+    }
+
+    #[test]
+    fn ideal_match_counts_equal_eq8() {
+        let templates: Vec<Vec<u8>> = (0..4)
+            .map(|r| (0..32).map(|i| ((i + r) % 3 == 0) as u8).collect())
+            .collect();
+        let q: Vec<u8> = (0..32).map(|i| (i % 2 == 0) as u8).collect();
+        let mut arr = ideal_array(&templates, CellKind::Charging6T4R);
+        let qv: Vec<f64> = q.iter().map(|&b| super::super::feature_to_voltage(b as f32)).collect();
+        let out = arr.search(&qv);
+        for (r, t) in templates.iter().enumerate() {
+            let eq8: u32 = q.iter().zip(t.iter()).map(|(a, b)| u32::from(a == b)).sum();
+            assert_eq!(out.match_counts[r], eq8, "row {r}");
+        }
+    }
+
+    #[test]
+    fn precharging_3t1r_full_match_stays_high() {
+        let t = vec![1u8, 0, 1, 0, 1, 0, 1, 0];
+        let mut arr = ideal_array(&[t.clone()], CellKind::Precharging3T1R);
+        let qv: Vec<f64> = t.iter().map(|&b| super::super::feature_to_voltage(b as f32)).collect();
+        let out = arr.search(&qv);
+        assert!(out.similarity[0] > 0.95, "{}", out.similarity[0]);
+        assert!(out.matched[0]);
+    }
+
+    #[test]
+    fn precharging_3t1r_mismatch_drops() {
+        let t = vec![1u8; 8];
+        let mut arr = ideal_array(&[t], CellKind::Precharging3T1R);
+        let qv = vec![super::super::feature_to_voltage(0.0); 8]; // all bits wrong
+        let out = arr.search(&qv);
+        assert!(out.similarity[0] < 0.5, "{}", out.similarity[0]);
+        assert!(!out.matched[0]);
+    }
+
+    #[test]
+    fn energy_is_cells_times_185fj() {
+        let templates = vec![vec![0u8; 784]; 10];
+        let mut arr = ideal_array(&templates, CellKind::Charging6T4R);
+        let out = arr.search(&vec![super::super::feature_to_voltage(0.0); 784]);
+        // 10 x 784 x 185 fJ = 1.4504 nJ (Eq. 14)
+        assert!((out.energy_nj - 1.4504).abs() < 0.001, "{}", out.energy_nj);
+    }
+
+    #[test]
+    fn full_match_headroom_at_design_point() {
+        let templates = vec![vec![1u8; 784]];
+        let arr = ideal_array(&templates, CellKind::Charging6T4R);
+        assert!(arr.full_match_headroom() >= 1.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn wrong_query_width_panics() {
+        let mut arr = ideal_array(&[vec![1u8; 8]], CellKind::Charging6T4R);
+        arr.search(&[0.0; 4]);
+    }
+}

@@ -1,0 +1,254 @@
+//! TXL-ACAM pixel models — the two published cell designs (Fig. 4).
+//!
+//! Both cells store a matching window `[v_lo, v_hi]`: the input line voltage
+//! matches when it falls inside the window.  The window bounds live in RRAM
+//! conductances:
+//!
+//! * **6T4R charging cell** (Fig. 4a): two hybrid RRAM-CMOS inverters, each
+//!   with a pull-up/pull-down RRAM pair whose ratio sets the inverter's
+//!   switching threshold — `v_th = VDD * g_up / (g_up + g_down)`.  On a
+//!   match, a current-limited pMOS *charges* the matchline; mismatching
+//!   cells contribute nothing.  Preferred for sparse activations (most cells
+//!   idle).
+//! * **3T1R precharging cell** (Fig. 4b): a 1T1R voltage divider drives a
+//!   complementary nMOS/pMOS pair hanging off dual matchlines
+//!   (`ML_LOW`/`ML_HIGH`).  Input below the low bound *discharges* `ML_LOW`;
+//!   input above the high bound discharges `ML_HIGH`; in-window inputs leave
+//!   both precharged.  Smaller cell, and evaluating each bound separately
+//!   makes the cell differentiable (trainable thresholds).
+//!
+//! The behavioural contract shared by both: `response(v_in)` reports whether
+//! the cell matches and the current it pushes onto (or pulls off) its
+//! matchline(s).
+
+
+use super::rram::{RramDevice, G_MAX, G_MIN};
+use super::variability::Variability;
+use super::VDD;
+
+/// Which TXL pixel the array is built from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CellKind {
+    /// Fig. 4a — 6T4R charging design.
+    Charging6T4R,
+    /// Fig. 4b — 3T1R precharging design.
+    Precharging3T1R,
+}
+
+
+/// Current-limiter budget per cell (A).
+///
+/// Design point: with the default periphery (5 fF/cell matchline loading,
+/// 20 ns evaluation window) a *full-row* match charges the matchline to
+/// `I * t_eval / C_cell = 0.4 µA * 20 ns / 5 fF = 1.6 V` — deliberately
+/// below VDD so the matchline never clamps and row voltage stays strictly
+/// monotone in the number of matching cells (the property that makes the
+/// analogue argmax equal Eq. 8 + Eq. 12).
+pub const I_LIMIT: f64 = 0.4e-6;
+/// Discharge current scale for the 3T1R cell (A); same design point, so a
+/// full-row mismatch pulls a precharged line down by 1.6 V.
+pub const I_DISCHARGE: f64 = 0.4e-6;
+
+/// Convert a desired threshold voltage into an RRAM conductance pair.
+///
+/// `v_th = VDD * g_up / (g_up + g_dn)` fixes only the *ratio*
+/// `r = g_up / g_dn = v_th / (VDD - v_th)`; splitting the ratio
+/// geometrically around the mid-window conductance
+/// (`g_up = g_mid * sqrt(r)`, `g_dn = g_mid / sqrt(r)`) keeps both devices
+/// inside the `[G_MIN, G_MAX]` programming window across the full
+/// representable ratio range `[G_MIN/G_MAX, G_MAX/G_MIN]` — i.e. thresholds
+/// in `[~0.018, ~1.78] V`.
+pub fn threshold_to_conductances(v_th: f64) -> (f64, f64) {
+    let g_mid = (G_MIN * G_MAX).sqrt();
+    let v = v_th.clamp(0.02, VDD - 0.02);
+    let r = (v / (VDD - v)).clamp(G_MIN / G_MAX, G_MAX / G_MIN);
+    let s = r.sqrt();
+    ((g_mid * s).clamp(G_MIN, G_MAX), (g_mid / s).clamp(G_MIN, G_MAX))
+}
+
+/// Recover the threshold voltage implemented by a conductance pair.
+pub fn conductances_to_threshold(g_up: f64, g_dn: f64) -> f64 {
+    VDD * g_up / (g_up + g_dn)
+}
+
+/// One ACAM pixel: a `[lo, hi]` window in two RRAM pairs.
+#[derive(Debug, Clone)]
+pub struct AcamCell {
+    pub kind: CellKind,
+    lo_up: RramDevice,
+    lo_dn: RramDevice,
+    hi_up: RramDevice,
+    hi_dn: RramDevice,
+}
+
+/// What a cell does to its matchline(s) during one evaluation.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CellResponse {
+    /// Whether the input fell inside the stored window.
+    pub matched: bool,
+    /// 6T4R: current pushed onto the (single) matchline on a match.
+    pub i_charge: f64,
+    /// 3T1R: current pulled off ML_LOW (input below window).
+    pub i_dis_low: f64,
+    /// 3T1R: current pulled off ML_HIGH (input above window).
+    pub i_dis_high: f64,
+}
+
+impl AcamCell {
+    /// Program a cell to the window `[v_lo, v_hi]` (volts) through the
+    /// variability model.
+    pub fn program(
+        kind: CellKind,
+        v_lo: f64,
+        v_hi: f64,
+        var: &Variability,
+        rng: &mut crate::rng::Rng,
+    ) -> Self {
+        debug_assert!(v_lo <= v_hi, "window must satisfy lo <= hi");
+        let (glo_up, glo_dn) = threshold_to_conductances(v_lo);
+        let (ghi_up, ghi_dn) = threshold_to_conductances(v_hi);
+        AcamCell {
+            kind,
+            lo_up: RramDevice::program(glo_up, var, rng),
+            lo_dn: RramDevice::program(glo_dn, var, rng),
+            hi_up: RramDevice::program(ghi_up, var, rng),
+            hi_dn: RramDevice::program(ghi_dn, var, rng),
+        }
+    }
+
+    /// The effective window at read time (after read noise / drift).
+    pub fn window(&self, var: &Variability, rng: &mut crate::rng::Rng) -> (f64, f64) {
+        let lo = conductances_to_threshold(
+            self.lo_up.read(var, rng),
+            self.lo_dn.read(var, rng),
+        );
+        let hi = conductances_to_threshold(
+            self.hi_up.read(var, rng),
+            self.hi_dn.read(var, rng),
+        );
+        (lo, hi.max(lo))
+    }
+
+    /// The programmed window without noise (diagnostics / calibration).
+    pub fn nominal_window(&self) -> (f64, f64) {
+        let lo = conductances_to_threshold(
+            self.lo_up.conductance(),
+            self.lo_dn.conductance(),
+        );
+        let hi = conductances_to_threshold(
+            self.hi_up.conductance(),
+            self.hi_dn.conductance(),
+        );
+        (lo, hi.max(lo))
+    }
+
+    /// Evaluate the cell against an input voltage.
+    pub fn response(&self, v_in: f64, var: &Variability, rng: &mut crate::rng::Rng) -> CellResponse {
+        let (lo, hi) = self.window(var, rng);
+        let matched = v_in >= lo && v_in <= hi;
+        match self.kind {
+            CellKind::Charging6T4R => CellResponse {
+                matched,
+                i_charge: if matched { I_LIMIT } else { 0.0 },
+                i_dis_low: 0.0,
+                i_dis_high: 0.0,
+            },
+            CellKind::Precharging3T1R => {
+                // Discharge strength grows with how far outside the window
+                // the input sits (the MOS overdrive), saturating at I_DISCHARGE.
+                let below = (lo - v_in).max(0.0);
+                let above = (v_in - hi).max(0.0);
+                let sat = |v: f64| I_DISCHARGE * (v / 0.2).min(1.0);
+                CellResponse {
+                    matched,
+                    i_charge: 0.0,
+                    i_dis_low: sat(below),
+                    i_dis_high: sat(above),
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+        
+    fn rng() -> crate::rng::Rng {
+        crate::rng::Rng::new(0)
+    }
+
+    #[test]
+    fn threshold_conductance_roundtrip() {
+        for v in [0.1, 0.5, 0.9, 1.2] {
+            let (gu, gd) = threshold_to_conductances(v);
+            let back = conductances_to_threshold(gu, gd);
+            assert!((back - v).abs() < 0.02, "v={v} back={back}");
+        }
+    }
+
+    #[test]
+    fn ideal_window_is_programmed_window() {
+        let mut r = rng();
+        let c = AcamCell::program(CellKind::Charging6T4R, 0.3, 0.8, &Variability::ideal(), &mut r);
+        let (lo, hi) = c.nominal_window();
+        assert!((lo - 0.3).abs() < 0.02 && (hi - 0.8).abs() < 0.02, "({lo},{hi})");
+    }
+
+    #[test]
+    fn charging_cell_matches_inside_window() {
+        let mut r = rng();
+        let c = AcamCell::program(CellKind::Charging6T4R, 0.2, 0.7, &Variability::ideal(), &mut r);
+        let inside = c.response(0.5, &Variability::ideal(), &mut r);
+        assert!(inside.matched && inside.i_charge > 0.0);
+        let outside = c.response(1.0, &Variability::ideal(), &mut r);
+        assert!(!outside.matched && outside.i_charge == 0.0);
+    }
+
+    #[test]
+    fn precharging_cell_discharges_correct_line() {
+        let mut r = rng();
+        let c = AcamCell::program(CellKind::Precharging3T1R, 0.4, 0.6, &Variability::ideal(), &mut r);
+        let below = c.response(0.1, &Variability::ideal(), &mut r);
+        assert!(!below.matched && below.i_dis_low > 0.0 && below.i_dis_high == 0.0);
+        let above = c.response(0.9, &Variability::ideal(), &mut r);
+        assert!(!above.matched && above.i_dis_high > 0.0 && above.i_dis_low == 0.0);
+        let inside = c.response(0.5, &Variability::ideal(), &mut r);
+        assert!(inside.matched && inside.i_dis_low == 0.0 && inside.i_dis_high == 0.0);
+    }
+
+    #[test]
+    fn discharge_scales_with_violation() {
+        let mut r = rng();
+        let c = AcamCell::program(CellKind::Precharging3T1R, 0.4, 0.6, &Variability::ideal(), &mut r);
+        let near = c.response(0.65, &Variability::ideal(), &mut r);
+        let far = c.response(0.9, &Variability::ideal(), &mut r);
+        assert!(far.i_dis_high > near.i_dis_high);
+    }
+
+    #[test]
+    fn binary_windows_encode_bits() {
+        // The program-time mapping for binary templates: bit b -> window
+        // [V(b - 0.5), V(b + 0.5)] through the affine feature->voltage map.
+        // A 0-bit cell must match V(0) and reject V(1), and vice versa.
+        use super::super::feature_to_voltage as v;
+        let mut r = rng();
+        let ideal = Variability::ideal();
+        let c0 = AcamCell::program(CellKind::Charging6T4R, v(-0.5), v(0.5), &ideal, &mut r);
+        assert!(c0.response(v(0.0), &ideal, &mut r).matched);
+        assert!(!c0.response(v(1.0), &ideal, &mut r).matched);
+        let c1 = AcamCell::program(CellKind::Charging6T4R, v(0.5), v(1.5), &ideal, &mut r);
+        assert!(c1.response(v(1.0), &ideal, &mut r).matched);
+        assert!(!c1.response(v(0.0), &ideal, &mut r).matched);
+    }
+
+    #[test]
+    fn variability_perturbs_window() {
+        let mut r = rng();
+        let noisy = Variability { program_sigma: 0.2, ..Default::default() };
+        let c = AcamCell::program(CellKind::Charging6T4R, 0.3, 0.8, &noisy, &mut r);
+        let (lo, hi) = c.nominal_window();
+        // Window moved, but stays ordered and in-rail.
+        assert!(lo <= hi && lo >= 0.0 && hi <= VDD);
+    }
+}

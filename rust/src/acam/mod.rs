@@ -1,0 +1,60 @@
+//! RRAM-CMOS ACAM behavioural circuit simulator (Section III).
+//!
+//! Stands in for the paper's fabricated 180 nm TXL-ACAM (DESIGN.md
+//! §Substitutions).  The simulator is organised the way the silicon is:
+//!
+//! * [`rram`] — the non-volatile resistive devices: programmable
+//!   conductances with programming variability, read noise and drift;
+//! * [`cell`] — the two published TXL pixels: the 6T4R *charging* cell
+//!   (Fig. 4a, sparse-activation friendly) and the 3T1R *precharging* cell
+//!   (Fig. 4b, area-optimised, differentiable thresholds).  Each cell holds
+//!   a `[lo, hi]` matching window in its RRAM conductance pair(s);
+//! * [`array`] — rows of cells sharing a matchline: explicit-timestep RC
+//!   integration of the matchline voltage, sense-amplifier thresholding,
+//!   per-search energy accounting (185 fJ/cell);
+//! * [`wta`] — the analogue winner-take-all that computes Eq. 12's argmax
+//!   in the analogue domain (one-hot output, offset noise);
+//! * [`program`] — "program-once-read-many": maps a
+//!   [`crate::templates::TemplateSet`] onto target conductances, then
+//!   programs the array through the variability model.
+//!
+//! Fidelity contract (pinned by tests): with *ideal* devices the simulated
+//! ACAM classification is identical to the digital Eq. 8/Eq. 12 reference in
+//! [`crate::matching`]; with realistic variability the accuracy degrades
+//! gracefully (the `acam_explore` example and the variability ablation bench
+//! quantify this).
+
+pub mod array;
+pub mod cell;
+pub mod program;
+pub mod rram;
+pub mod variability;
+pub mod wta;
+
+pub use array::{AcamArray, ArrayConfig, SearchOutput};
+pub use cell::{AcamCell, CellKind};
+pub use program::program_array;
+pub use rram::RramDevice;
+pub use variability::Variability;
+pub use wta::winner_take_all;
+
+/// Supply voltage of the 180 nm process the TXL-ACAM is designed in.
+pub const VDD: f64 = 1.8;
+
+/// Feature -> input-line voltage map: `V = V_OFF + f * V_GAIN`.
+///
+/// The offset keeps every representable window bound strictly positive — the
+/// hybrid inverter threshold `VDD * g_up / (g_up + g_dn)` can only reach
+/// `[VDD/(1 + G_MAX/G_MIN), VDD/(1 + G_MIN/G_MAX)] ~ [0.018, 1.78] V`, so a
+/// zero-volt encoding of bit 0 would sit below the representable range.
+/// With the offset, bit 0 -> 0.3 V and bit 1 -> 1.3 V, both comfortably
+/// inside it.
+pub const V_OFF: f64 = 0.3;
+/// Gain of the feature -> voltage map (V per feature unit).
+pub const V_GAIN: f64 = 1.0;
+
+/// Encode a feature value (binary 0/1 or real-valued in [0, ~1]) as an input
+/// line voltage.
+pub fn feature_to_voltage(f: f32) -> f64 {
+    V_OFF + (f as f64).clamp(-0.5, 1.5) * V_GAIN
+}

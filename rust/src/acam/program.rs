@@ -1,0 +1,138 @@
+//! "Program-once-read-many": map a trained [`TemplateSet`] onto ACAM
+//! windows and program the array (Section II-D2's pragmatic flow — weights
+//! are calibrated in software and written to the RRAM once).
+
+use crate::templates::TemplateSet;
+
+use super::array::{AcamArray, ArrayConfig};
+use super::variability::Variability;
+use super::feature_to_voltage;
+
+/// Which window encoding to program.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WindowMode {
+    /// Binary templates: bit b -> window [b - 0.5, b + 0.5] * V_RANGE.
+    /// Queries are binarised feature maps (0/1 volts).
+    Binary,
+    /// Real-feature windows from the template store's [lo, hi] percentile
+    /// bounds; queries are raw (un-binarised) feature voltages.
+    RealValued,
+}
+
+/// Program an ACAM array from a template set.
+///
+/// Row r of the array holds template r; [`TemplateSet::class_of`] maps rows
+/// to classes for the downstream WTA.
+pub fn program_array(
+    set: &TemplateSet,
+    mode: WindowMode,
+    config: ArrayConfig,
+    variability: Variability,
+    seed: u64,
+) -> AcamArray {
+    let windows: Vec<(Vec<f64>, Vec<f64>)> = match mode {
+        WindowMode::Binary => set
+            .templates
+            .iter()
+            .map(|t| {
+                let lo = t.iter().map(|&b| feature_to_voltage(b as f32 - 0.5)).collect();
+                let hi = t.iter().map(|&b| feature_to_voltage(b as f32 + 0.5)).collect();
+                (lo, hi)
+            })
+            .collect(),
+        WindowMode::RealValued => set
+            .lo
+            .iter()
+            .zip(set.hi.iter())
+            .map(|(lo, hi)| {
+                // Real features are normalised activations; scale into the
+                // input voltage range the same way queries are.
+                let l = lo.iter().map(|&v| feature_to_voltage(v)).collect();
+                let h = hi.iter().map(|&v| feature_to_voltage(v)).collect();
+                (l, h)
+            })
+            .collect(),
+    };
+    AcamArray::from_windows(config, variability, &windows, seed)
+}
+
+/// Encode a binary query (0/1 bytes) as input-line voltages.
+pub fn binary_query_voltages(bits: &[u8]) -> Vec<f64> {
+    bits.iter().map(|&b| feature_to_voltage(b as f32)).collect()
+}
+
+/// Encode a real-valued feature query as input-line voltages.
+pub fn real_query_voltages(features: &[f32]) -> Vec<f64> {
+    features.iter().map(|&f| feature_to_voltage(f)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::templates::pack_bits;
+
+    fn toy_set() -> TemplateSet {
+        let templates = vec![vec![1u8, 0, 1, 0], vec![0u8, 1, 0, 1]];
+        let w = 1;
+        TemplateSet {
+            packed: templates.iter().flat_map(|t| pack_bits(t, w)).collect(),
+            words_per_row: w,
+            lo: vec![vec![0.0, 0.0, 0.5, 0.0]; 2],
+            hi: vec![vec![1.0, 0.2, 1.0, 0.3]; 2],
+            bin_lo: templates
+                .iter()
+                .map(|t| t.iter().map(|&b| b as f32 - 0.5).collect())
+                .collect(),
+            bin_hi: templates
+                .iter()
+                .map(|t| t.iter().map(|&b| b as f32 + 0.5).collect())
+                .collect(),
+            class_of: vec![0, 1],
+            silhouette: vec![],
+            templates,
+        }
+    }
+
+    #[test]
+    fn binary_programming_reproduces_eq8() {
+        let set = toy_set();
+        let mut arr = program_array(
+            &set,
+            WindowMode::Binary,
+            ArrayConfig::default(),
+            Variability::ideal(),
+            0,
+        );
+        let q = [1u8, 0, 1, 0];
+        let out = arr.search(&binary_query_voltages(&q));
+        assert_eq!(out.match_counts, vec![4, 0]);
+    }
+
+    #[test]
+    fn real_valued_windows_accept_in_range_queries() {
+        let set = toy_set();
+        let mut arr = program_array(
+            &set,
+            WindowMode::RealValued,
+            ArrayConfig::default(),
+            Variability::ideal(),
+            0,
+        );
+        // Query inside row 0's [lo, hi] on all 4 features.
+        let out = arr.search(&real_query_voltages(&[0.5, 0.1, 0.7, 0.15]));
+        assert_eq!(out.match_counts[0], 4);
+    }
+
+    #[test]
+    fn query_voltage_encodings() {
+        use crate::acam::{V_GAIN, V_OFF};
+        assert_eq!(
+            binary_query_voltages(&[0, 1]),
+            vec![V_OFF, V_OFF + V_GAIN]
+        );
+        let rv = real_query_voltages(&[0.25, 2.0, -1.0]);
+        assert!((rv[0] - (V_OFF + 0.25 * V_GAIN)).abs() < 1e-9);
+        assert!((rv[1] - (V_OFF + 1.5 * V_GAIN)).abs() < 1e-9); // clamped
+        assert!((rv[2] - (V_OFF - 0.5 * V_GAIN)).abs() < 1e-9); // clamped
+    }
+}

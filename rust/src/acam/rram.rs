@@ -1,0 +1,132 @@
+//! RRAM device model: programmable non-volatile conductance with
+//! programming variability, read noise and retention drift.
+//!
+//! Calibrated to the in-house devices referenced by the paper [26]:
+//! HRS/LRS window of roughly 1 µS – 100 µS, log-normal programming spread.
+
+
+use super::variability::Variability;
+
+/// Low-conductance bound (high-resistance state), siemens.
+pub const G_MIN: f64 = 1e-6;
+/// High-conductance bound (low-resistance state), siemens.
+pub const G_MAX: f64 = 1e-4;
+
+/// One two-terminal RRAM device.
+#[derive(Debug, Clone)]
+pub struct RramDevice {
+    /// Programmed conductance (S), fixed after programming
+    /// (program-once-read-many).
+    g: f64,
+    /// Target the programming aimed at (kept for diagnostics).
+    target: f64,
+}
+
+impl RramDevice {
+    /// Program the device toward `target` conductance through the
+    /// variability model (log-normal multiplicative error — the standard
+    /// empirical model for filamentary RRAM programming spread).
+    pub fn program(target: f64, var: &Variability, rng: &mut crate::rng::Rng) -> Self {
+        let target = target.clamp(G_MIN, G_MAX);
+        let g = if var.program_sigma > 0.0 {
+            (target * rng.normal(0.0, var.program_sigma).exp()).clamp(G_MIN, G_MAX)
+        } else {
+            target
+        };
+        RramDevice { g, target }
+    }
+
+    /// Ideal programming (zero spread) — the software-calibration reference.
+    pub fn ideal(target: f64) -> Self {
+        let target = target.clamp(G_MIN, G_MAX);
+        RramDevice { g: target, target }
+    }
+
+    /// Read the conductance with read noise and retention drift applied.
+    ///
+    /// Drift: G(t) = G0 * (t / t0)^(-nu) for t > t0 (power-law retention
+    /// loss); `age_hours` selects the read time.
+    pub fn read(&self, var: &Variability, rng: &mut crate::rng::Rng) -> f64 {
+        let mut g = self.g;
+        if var.drift_nu > 0.0 && var.age_hours > 1.0 {
+            g *= var.age_hours.powf(-var.drift_nu);
+        }
+        if var.read_sigma > 0.0 {
+            g *= 1.0 + rng.normal(0.0, var.read_sigma);
+        }
+        g.clamp(G_MIN, G_MAX)
+    }
+
+    /// Programmed conductance without noise (diagnostics).
+    pub fn conductance(&self) -> f64 {
+        self.g
+    }
+
+    /// Absolute programming error relative to target (diagnostics).
+    pub fn program_error(&self) -> f64 {
+        (self.g - self.target).abs()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+        
+    #[test]
+    fn ideal_program_is_exact() {
+        let d = RramDevice::ideal(5e-5);
+        assert_eq!(d.conductance(), 5e-5);
+        assert_eq!(d.program_error(), 0.0);
+    }
+
+    #[test]
+    fn program_clamps_to_device_window() {
+        assert_eq!(RramDevice::ideal(1.0).conductance(), G_MAX);
+        assert_eq!(RramDevice::ideal(0.0).conductance(), G_MIN);
+    }
+
+    #[test]
+    fn programming_spread_scales_with_sigma() {
+        let mut rng = crate::rng::Rng::new(0);
+        let var_lo = Variability { program_sigma: 0.01, ..Default::default() };
+        let var_hi = Variability { program_sigma: 0.3, ..Default::default() };
+        let spread = |v: &Variability, rng: &mut crate::rng::Rng| {
+            let errs: Vec<f64> = (0..200)
+                .map(|_| RramDevice::program(1e-5, v, rng).program_error())
+                .collect();
+            errs.iter().sum::<f64>() / errs.len() as f64
+        };
+        let lo = spread(&var_lo, &mut rng);
+        let hi = spread(&var_hi, &mut rng);
+        assert!(hi > lo * 5.0, "lo={lo} hi={hi}");
+    }
+
+    #[test]
+    fn read_noise_zero_is_deterministic() {
+        let mut rng = crate::rng::Rng::new(1);
+        let d = RramDevice::ideal(2e-5);
+        let v = Variability::default();
+        assert_eq!(d.read(&v, &mut rng), 2e-5);
+    }
+
+    #[test]
+    fn drift_reduces_conductance() {
+        let mut rng = crate::rng::Rng::new(2);
+        let d = RramDevice::ideal(5e-5);
+        let aged = Variability { drift_nu: 0.05, age_hours: 1000.0, ..Default::default() };
+        let g_aged = d.read(&aged, &mut rng);
+        assert!(g_aged < 5e-5);
+        assert!(g_aged > G_MIN);
+    }
+
+    #[test]
+    fn read_respects_device_window() {
+        let mut rng = crate::rng::Rng::new(3);
+        let d = RramDevice::ideal(G_MAX);
+        let noisy = Variability { read_sigma: 0.5, ..Default::default() };
+        for _ in 0..100 {
+            let g = d.read(&noisy, &mut rng);
+            assert!((G_MIN..=G_MAX).contains(&g));
+        }
+    }
+}

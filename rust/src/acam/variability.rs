@@ -1,0 +1,99 @@
+//! Device non-ideality model shared by the RRAM devices and the analogue
+//! periphery (sense amplifiers, WTA).
+
+
+/// Stochastic non-idealities injected into the simulation.
+///
+/// All sigmas are *relative* (fraction of the nominal value) except
+/// `wta_offset_v`, which is an input-referred offset voltage.
+#[derive(Debug, Clone)]
+pub struct Variability {
+    /// Log-normal programming spread of RRAM conductance.
+    pub program_sigma: f64,
+    /// Gaussian multiplicative read noise on RRAM conductance.
+    pub read_sigma: f64,
+    /// Retention drift exponent: G(t) = G0 * t^-nu (t in hours).
+    pub drift_nu: f64,
+    /// Device age at read time (hours); drift applies when > 1.
+    pub age_hours: f64,
+    /// Sense-amp threshold offset (relative to VDD).
+    pub sense_offset_sigma: f64,
+    /// WTA comparator input-referred offset (volts).
+    pub wta_offset_v: f64,
+}
+
+impl Default for Variability {
+    /// Ideal devices — the calibration reference: with this setting the
+    /// simulated ACAM must agree exactly with the digital matcher.
+    fn default() -> Self {
+        Variability {
+            program_sigma: 0.0,
+            read_sigma: 0.0,
+            drift_nu: 0.0,
+            age_hours: 0.0,
+            sense_offset_sigma: 0.0,
+            wta_offset_v: 0.0,
+        }
+    }
+}
+
+impl Variability {
+    /// Ideal devices (alias for `Default`).
+    pub fn ideal() -> Self {
+        Self::default()
+    }
+
+    /// A representative fabricated-device corner: moderate programming
+    /// spread and read noise, light drift (values in line with published
+    /// RRAM characterisation, e.g. the paper's ref. [26]).
+    pub fn typical() -> Self {
+        Variability {
+            program_sigma: 0.05,
+            read_sigma: 0.02,
+            drift_nu: 0.01,
+            age_hours: 24.0,
+            sense_offset_sigma: 0.01,
+            wta_offset_v: 0.005,
+        }
+    }
+
+    /// Scale all non-idealities by `level` (0 = ideal, 1 = typical,
+    /// >1 = worst-case sweeps for the variability ablation).
+    pub fn at_level(level: f64) -> Self {
+        let t = Self::typical();
+        Variability {
+            program_sigma: t.program_sigma * level,
+            read_sigma: t.read_sigma * level,
+            drift_nu: t.drift_nu * level,
+            age_hours: t.age_hours,
+            sense_offset_sigma: t.sense_offset_sigma * level,
+            wta_offset_v: t.wta_offset_v * level,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_ideal() {
+        let v = Variability::default();
+        assert_eq!(v.program_sigma, 0.0);
+        assert_eq!(v.wta_offset_v, 0.0);
+    }
+
+    #[test]
+    fn level_zero_is_ideal() {
+        let v = Variability::at_level(0.0);
+        assert_eq!(v.program_sigma, 0.0);
+        assert_eq!(v.read_sigma, 0.0);
+    }
+
+    #[test]
+    fn level_scales_linearly() {
+        let v1 = Variability::at_level(1.0);
+        let v2 = Variability::at_level(2.0);
+        assert!((v2.program_sigma - 2.0 * v1.program_sigma).abs() < 1e-12);
+    }
+}

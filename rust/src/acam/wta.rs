@@ -1,0 +1,115 @@
+//! Analogue winner-take-all (Fig. 3's final layer): computes the Eq.-12
+//! argmax over row similarities in the analogue domain and emits a one-hot
+//! vector.
+//!
+//! Real WTA comparators carry input-referred offsets; the model adds a
+//! per-input Gaussian offset of `wta_offset_v` volts, so near-ties can flip
+//! under variability — exactly the failure mode a circuit designer budgets
+//! the offset for.
+
+
+use super::variability::Variability;
+use super::VDD;
+
+/// One-hot winner over analogue similarities (values in [0, 1], scaled by
+/// VDD internally).  Ties break to the lowest index (matches the digital
+/// reference in [`crate::matching::classify`]).
+pub fn winner_take_all(
+    similarities: &[f64],
+    var: &Variability,
+    rng: &mut crate::rng::Rng,
+) -> (usize, Vec<u8>) {
+    assert!(!similarities.is_empty(), "WTA needs at least one input");
+    let sigma = var.wta_offset_v;
+    let mut best = 0usize;
+    let mut best_v = f64::NEG_INFINITY;
+    for (i, &s) in similarities.iter().enumerate() {
+        let mut v = s * VDD;
+        if sigma > 0.0 {
+            v += rng.normal(0.0, sigma);
+        }
+        if v > best_v {
+            best_v = v;
+            best = i;
+        }
+    }
+    let mut onehot = vec![0u8; similarities.len()];
+    onehot[best] = 1;
+    (best, onehot)
+}
+
+/// Per-class WTA: reduce template similarities to class similarities
+/// (max over each class's templates — the multi-template rule of
+/// Section II-D1) and then take the winner.
+pub fn winner_take_all_classes(
+    similarities: &[f64],
+    class_of: &[usize],
+    num_classes: usize,
+    var: &Variability,
+    rng: &mut crate::rng::Rng,
+) -> usize {
+    assert_eq!(similarities.len(), class_of.len());
+    let mut per_class = vec![f64::NEG_INFINITY; num_classes];
+    for (&s, &c) in similarities.iter().zip(class_of.iter()) {
+        if s > per_class[c] {
+            per_class[c] = s;
+        }
+    }
+    winner_take_all(&per_class, var, rng).0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+        
+    fn rng() -> crate::rng::Rng {
+        crate::rng::Rng::new(0)
+    }
+
+    #[test]
+    fn picks_max_and_onehot() {
+        let (w, oh) = winner_take_all(&[0.2, 0.9, 0.5], &Variability::ideal(), &mut rng());
+        assert_eq!(w, 1);
+        assert_eq!(oh, vec![0, 1, 0]);
+    }
+
+    #[test]
+    fn tie_breaks_low_index() {
+        let (w, _) = winner_take_all(&[0.7, 0.7], &Variability::ideal(), &mut rng());
+        assert_eq!(w, 0);
+    }
+
+    #[test]
+    fn per_class_max_rule() {
+        // class 0: (0.1, 0.95); class 1: (0.5, 0.6) -> class 0 wins.
+        let w = winner_take_all_classes(
+            &[0.1, 0.95, 0.5, 0.6],
+            &[0, 0, 1, 1],
+            2,
+            &Variability::ideal(),
+            &mut rng(),
+        );
+        assert_eq!(w, 0);
+    }
+
+    #[test]
+    fn offset_noise_can_flip_near_ties_but_not_clear_wins() {
+        let noisy = Variability {
+            wta_offset_v: 0.02,
+            ..Default::default()
+        };
+        let mut r = rng();
+        // Clear win: 0.9 vs 0.1 (0.8 * VDD = 1.44 V apart >> 20 mV offsets).
+        for _ in 0..100 {
+            let (w, _) = winner_take_all(&[0.1, 0.9], &noisy, &mut r);
+            assert_eq!(w, 1);
+        }
+        // Near-tie: 1 mV apart — offsets dominate, both outcomes occur.
+        let mut winners = std::collections::HashSet::new();
+        for _ in 0..200 {
+            let (w, _) = winner_take_all(&[0.5, 0.5005], &noisy, &mut r);
+            winners.insert(w);
+        }
+        assert_eq!(winners.len(), 2);
+    }
+}

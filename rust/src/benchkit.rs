@@ -1,0 +1,138 @@
+//! Timing harness substrate (criterion is unavailable offline).
+//!
+//! [`bench`] runs a closure through warmup + timed iterations, reports
+//! mean / p50 / p99 / min wall time per iteration, and returns the
+//! [`BenchResult`] so bench binaries can print paper-style comparison rows
+//! and assert shape properties (who wins, by what factor).
+
+use std::time::{Duration, Instant};
+
+/// One benchmark's timing summary.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p99: Duration,
+    pub min: Duration,
+}
+
+impl BenchResult {
+    /// Iterations per second at the mean.
+    pub fn throughput(&self) -> f64 {
+        if self.mean.as_secs_f64() == 0.0 {
+            f64::INFINITY
+        } else {
+            1.0 / self.mean.as_secs_f64()
+        }
+    }
+}
+
+impl std::fmt::Display for BenchResult {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:<38} mean {:>10.2?}  p50 {:>10.2?}  p99 {:>10.2?}  min {:>10.2?}  ({:.0}/s)",
+            self.name,
+            self.mean,
+            self.p50,
+            self.p99,
+            self.min,
+            self.throughput()
+        )
+    }
+}
+
+/// Run `f` for `warmup` unmeasured + `iters` measured iterations.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed());
+    }
+    summarize(name, &mut samples)
+}
+
+/// Adaptive variant: keeps iterating until `budget` wall time is spent
+/// (at least `min_iters`), so slow PJRT paths don't stall the suite.
+pub fn bench_for<F: FnMut()>(
+    name: &str,
+    warmup: usize,
+    min_iters: usize,
+    budget: Duration,
+    mut f: F,
+) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::new();
+    let t_start = Instant::now();
+    while samples.len() < min_iters || t_start.elapsed() < budget {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed());
+        if samples.len() >= 100_000 {
+            break;
+        }
+    }
+    summarize(name, &mut samples)
+}
+
+fn summarize(name: &str, samples: &mut [Duration]) -> BenchResult {
+    samples.sort_unstable();
+    let iters = samples.len();
+    let total: Duration = samples.iter().sum();
+    let r = BenchResult {
+        name: name.to_string(),
+        iters,
+        mean: total / iters as u32,
+        p50: samples[iters / 2],
+        p99: samples[(iters * 99) / 100],
+        min: samples[0],
+    };
+    println!("{r}");
+    r
+}
+
+/// Print a section header in the bench output.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+/// Print one paper-vs-measured comparison row.
+pub fn paper_row(label: &str, paper: f64, measured: f64, unit: &str) {
+    let ratio = if paper != 0.0 { measured / paper } else { f64::NAN };
+    println!("{label:<34} paper {paper:>12.4} {unit:<4} measured {measured:>12.4} {unit:<4} (x{ratio:.3})");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_counts_iterations() {
+        let mut n = 0;
+        let r = bench("noop", 2, 10, || n += 1);
+        assert_eq!(r.iters, 10);
+        assert_eq!(n, 12); // warmup + measured
+        assert!(r.min <= r.p50 && r.p50 <= r.p99);
+    }
+
+    #[test]
+    fn bench_for_respects_min_iters() {
+        let r = bench_for("noop", 0, 5, Duration::from_millis(0), || {});
+        assert!(r.iters >= 5);
+    }
+
+    #[test]
+    fn throughput_is_inverse_mean() {
+        let r = bench("sleepless", 0, 3, || std::thread::sleep(Duration::from_micros(200)));
+        let tp = r.throughput();
+        assert!(tp > 1000.0 && tp < 6000.0, "{tp}");
+    }
+}

@@ -1,0 +1,219 @@
+//! Configuration system: serde-backed, file-loadable, CLI-overridable.
+//!
+//! A deployment is described by one [`ServeConfig`]; `hec serve --config
+//! serve.json` loads it, and every field has a CLI override in `main.rs`.
+
+use std::path::{Path, PathBuf};
+
+
+use crate::acam::cell::CellKind;
+use crate::error::{Error, Result};
+
+/// Which back-end classifies the extracted feature maps.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    /// Simulated RRAM-CMOS ACAM (the paper's system).
+    AcamSim,
+    /// Digital Eq. 8 feature count (packed popcount hot path).
+    FeatureCount,
+    /// Digital Eq. 9-11 similarity model.
+    Similarity,
+    /// Baseline: the student's dense softmax head on PJRT.
+    Softmax,
+}
+
+impl std::str::FromStr for Backend {
+    type Err = Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "acam" | "acam_sim" => Ok(Backend::AcamSim),
+            "fc" | "feature_count" => Ok(Backend::FeatureCount),
+            "sim" | "similarity" => Ok(Backend::Similarity),
+            "softmax" => Ok(Backend::Softmax),
+            _ => Err(Error::Config(format!("unknown backend: {s}"))),
+        }
+    }
+}
+
+/// Dynamic batching policy.
+#[derive(Debug, Clone)]
+pub struct BatchConfig {
+    /// Largest batch the batcher will form (must be one of the exported
+    /// artifact batch sizes; smaller batches are padded up to the nearest).
+    pub max_batch: usize,
+    /// How long the batcher waits to fill a batch before dispatching what
+    /// it has (microseconds).
+    pub max_wait_us: u64,
+    /// Request queue depth before backpressure (submit returns an error).
+    pub queue_depth: usize,
+}
+
+impl Default for BatchConfig {
+    fn default() -> Self {
+        BatchConfig {
+            max_batch: 32,
+            max_wait_us: 2_000,
+            queue_depth: 1024,
+        }
+    }
+}
+
+/// ACAM back-end knobs.
+#[derive(Debug, Clone)]
+pub struct AcamConfig {
+    pub cell_kind: CellKind,
+    /// Variability level: 0 = ideal, 1 = typical fabricated corner.
+    pub variability_level: f64,
+    /// RNG seed for programming + read noise.
+    pub seed: u64,
+}
+
+impl Default for AcamConfig {
+    fn default() -> Self {
+        AcamConfig {
+            cell_kind: CellKind::Charging6T4R,
+            variability_level: 0.0,
+            seed: 42,
+        }
+    }
+}
+
+/// Top-level serving configuration.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Artifacts directory (HLO text + templates.json + meta.json).
+    pub artifacts_dir: PathBuf,
+    /// Classification back-end.
+    pub backend: Backend,
+    /// Templates per class (Table II: 1, 2 or 3).
+    pub templates_per_class: usize,
+    /// Serve through the jnp-lowered front-end variant (XLA-native convs —
+    /// the fast path on CPU).  `false` routes through the Pallas-lowered
+    /// artifact (the TPU-shaped deliverable; interpret lowering is slow on
+    /// CPU PJRT).  Both are numerically identical.
+    pub use_fast_frontend: bool,
+    pub batch: BatchConfig,
+    pub acam: AcamConfig,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            artifacts_dir: PathBuf::from("artifacts"),
+            backend: Backend::AcamSim,
+            templates_per_class: 1,
+            use_fast_frontend: true,
+            batch: BatchConfig::default(),
+            acam: AcamConfig::default(),
+        }
+    }
+}
+
+impl ServeConfig {
+    /// Load from a JSON file; absent fields keep their defaults.
+    pub fn load<P: AsRef<Path>>(path: P) -> Result<Self> {
+        let doc = crate::jsonlite::parse(&std::fs::read_to_string(path)?)?;
+        let mut cfg = ServeConfig::default();
+        if let Some(v) = doc.get("artifacts_dir").and_then(|v| v.as_str()) {
+            cfg.artifacts_dir = PathBuf::from(v);
+        }
+        if let Some(v) = doc.get("backend").and_then(|v| v.as_str()) {
+            cfg.backend = v.parse()?;
+        }
+        if let Some(v) = doc.get("templates_per_class").and_then(|v| v.as_usize()) {
+            cfg.templates_per_class = v;
+        }
+        if let Some(v) = doc.get("use_fast_frontend").and_then(|v| v.as_bool()) {
+            cfg.use_fast_frontend = v;
+        }
+        if let Some(b) = doc.get("batch") {
+            if let Some(v) = b.get("max_batch").and_then(|v| v.as_usize()) {
+                cfg.batch.max_batch = v;
+            }
+            if let Some(v) = b.get("max_wait_us").and_then(|v| v.as_u64()) {
+                cfg.batch.max_wait_us = v;
+            }
+            if let Some(v) = b.get("queue_depth").and_then(|v| v.as_usize()) {
+                cfg.batch.queue_depth = v;
+            }
+        }
+        if let Some(a) = doc.get("acam") {
+            if let Some(v) = a.get("cell_kind").and_then(|v| v.as_str()) {
+                cfg.acam.cell_kind = match v {
+                    "6t4r" | "charging" => CellKind::Charging6T4R,
+                    "3t1r" | "precharging" => CellKind::Precharging3T1R,
+                    other => return Err(Error::Config(format!("unknown cell kind: {other}"))),
+                };
+            }
+            if let Some(v) = a.get("variability_level").and_then(|v| v.as_f64()) {
+                cfg.acam.variability_level = v;
+            }
+            if let Some(v) = a.get("seed").and_then(|v| v.as_u64()) {
+                cfg.acam.seed = v;
+            }
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if !(1..=3).contains(&self.templates_per_class) {
+            return Err(Error::Config(format!(
+                "templates_per_class must be 1..=3, got {}",
+                self.templates_per_class
+            )));
+        }
+        if self.batch.max_batch == 0 || self.batch.queue_depth == 0 {
+            return Err(Error::Config("batch sizes must be positive".into()));
+        }
+        if self.acam.variability_level < 0.0 {
+            return Err(Error::Config("variability_level must be >= 0".into()));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid() {
+        ServeConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn backend_parses() {
+        assert_eq!("acam".parse::<Backend>().unwrap(), Backend::AcamSim);
+        assert_eq!("fc".parse::<Backend>().unwrap(), Backend::FeatureCount);
+        assert!("nope".parse::<Backend>().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_bad_k() {
+        let mut c = ServeConfig::default();
+        c.templates_per_class = 4;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn load_overrides_defaults() {
+        let dir = std::env::temp_dir().join(format!("hec-cfg-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("serve.json");
+        std::fs::write(
+            &path,
+            r#"{"backend": "fc", "templates_per_class": 2,
+                "batch": {"max_batch": 8},
+                "acam": {"cell_kind": "3t1r", "variability_level": 1.5}}"#,
+        )
+        .unwrap();
+        let cfg = ServeConfig::load(&path).unwrap();
+        assert_eq!(cfg.backend, Backend::FeatureCount);
+        assert_eq!(cfg.templates_per_class, 2);
+        assert_eq!(cfg.batch.max_batch, 8);
+        assert_eq!(cfg.acam.cell_kind, CellKind::Precharging3T1R);
+        assert!((cfg.acam.variability_level - 1.5).abs() < 1e-12);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

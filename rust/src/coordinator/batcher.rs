@@ -1,0 +1,115 @@
+//! Dynamic batching policy — pure logic, independent of the transport, so it
+//! is unit- and property-testable without a running PJRT client.
+//!
+//! The batcher assembles incoming requests into batches bounded by
+//! `max_batch` items and `max_wait` since the *first* queued item, then the
+//! router pads each batch up to the nearest exported artifact batch size
+//! (1 / 8 / 32 by default) — the classic dynamic-batching trade between
+//! latency (small batches dispatch sooner) and throughput (bigger batches
+//! amortise dispatch overhead).
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::time::{Duration, Instant};
+
+/// Assemble one batch from a channel: blocks for the first item, then drains
+/// until `max_batch` items are held or `max_wait` has elapsed since the first
+/// item arrived.  Returns `None` when the channel is closed and empty.
+pub fn assemble<T>(rx: &Receiver<T>, max_batch: usize, max_wait: Duration) -> Option<Vec<T>> {
+    let first = rx.recv().ok()?;
+    let deadline = Instant::now() + max_wait;
+    let mut batch = Vec::with_capacity(max_batch);
+    batch.push(first);
+    while batch.len() < max_batch {
+        let now = Instant::now();
+        if now >= deadline {
+            break;
+        }
+        match rx.recv_timeout(deadline - now) {
+            Ok(item) => batch.push(item),
+            Err(RecvTimeoutError::Timeout) => break,
+            Err(RecvTimeoutError::Disconnected) => break,
+        }
+    }
+    Some(batch)
+}
+
+/// Choose the smallest exported batch size that fits `n` (or the largest if
+/// `n` exceeds them all), returning `(artifact_batch, padding)`.
+pub fn pad_to_artifact(n: usize, exported: &[usize]) -> (usize, usize) {
+    debug_assert!(!exported.is_empty());
+    let mut sizes = exported.to_vec();
+    sizes.sort_unstable();
+    for &b in &sizes {
+        if b >= n {
+            return (b, b - n);
+        }
+    }
+    let b = *sizes.last().unwrap();
+    (b, 0) // caller splits batches larger than the max artifact
+}
+
+/// Split an oversized batch into artifact-sized chunks (last chunk padded).
+pub fn chunks_for(n: usize, exported: &[usize]) -> Vec<(usize, usize)> {
+    let max = *exported.iter().max().unwrap();
+    let mut out = Vec::new();
+    let mut rest = n;
+    while rest > max {
+        out.push((max, 0));
+        rest -= max;
+    }
+    if rest > 0 {
+        out.push(pad_to_artifact(rest, exported));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::sync_channel;
+
+    #[test]
+    fn assemble_collects_up_to_max() {
+        let (tx, rx) = sync_channel(16);
+        for i in 0..5 {
+            tx.send(i).unwrap();
+        }
+        let b = assemble(&rx, 3, Duration::from_millis(5)).unwrap();
+        assert_eq!(b, vec![0, 1, 2]);
+        let b2 = assemble(&rx, 3, Duration::from_millis(5)).unwrap();
+        assert_eq!(b2, vec![3, 4]);
+    }
+
+    #[test]
+    fn assemble_times_out_with_partial_batch() {
+        let (tx, rx) = sync_channel(16);
+        tx.send(42).unwrap();
+        let t0 = Instant::now();
+        let b = assemble(&rx, 8, Duration::from_millis(20)).unwrap();
+        assert_eq!(b, vec![42]);
+        assert!(t0.elapsed() >= Duration::from_millis(15));
+    }
+
+    #[test]
+    fn assemble_none_on_closed_empty_channel() {
+        let (tx, rx) = sync_channel::<u32>(1);
+        drop(tx);
+        assert!(assemble(&rx, 4, Duration::from_millis(1)).is_none());
+    }
+
+    #[test]
+    fn pad_picks_smallest_fit() {
+        let exported = [1, 8, 32];
+        assert_eq!(pad_to_artifact(1, &exported), (1, 0));
+        assert_eq!(pad_to_artifact(2, &exported), (8, 6));
+        assert_eq!(pad_to_artifact(8, &exported), (8, 0));
+        assert_eq!(pad_to_artifact(9, &exported), (32, 23));
+    }
+
+    #[test]
+    fn chunks_split_oversized() {
+        let exported = [1, 8, 32];
+        assert_eq!(chunks_for(70, &exported), vec![(32, 0), (32, 0), (8, 2)]);
+        assert_eq!(chunks_for(5, &exported), vec![(8, 3)]);
+    }
+}

@@ -1,0 +1,199 @@
+//! Serving metrics: counters, log-bucketed latency histogram, energy ledger.
+//!
+//! Lock-free on the hot path (atomics only); `snapshot()` gives a consistent
+//! read for the CLI / benches.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Latency histogram with power-of-two microsecond buckets:
+/// bucket i covers [2^i, 2^(i+1)) µs; bucket 0 covers [0, 2) µs.
+const BUCKETS: usize = 24; // up to ~8.4 s
+
+#[derive(Default)]
+pub struct Histogram {
+    buckets: [AtomicU64; BUCKETS],
+    sum_us: AtomicU64,
+    count: AtomicU64,
+}
+
+impl Histogram {
+    pub fn record_us(&self, us: u64) {
+        let idx = (64 - us.max(1).leading_zeros() as usize).min(BUCKETS) - 1;
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        self.sum_us.load(Ordering::Relaxed) as f64 / n as f64
+    }
+
+    /// Approximate percentile from the bucket histogram (upper bucket edge).
+    pub fn percentile_us(&self, p: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let target = ((total as f64) * p.clamp(0.0, 1.0)).ceil() as u64;
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return 1u64 << (i + 1);
+            }
+        }
+        1u64 << BUCKETS
+    }
+}
+
+/// All serving counters.
+#[derive(Default)]
+pub struct Metrics {
+    pub requests: AtomicU64,
+    pub responses: AtomicU64,
+    pub errors: AtomicU64,
+    pub batches: AtomicU64,
+    pub batched_items: AtomicU64,
+    pub padded_slots: AtomicU64,
+    /// End-to-end request latency.
+    pub latency: Histogram,
+    /// PJRT execute() time per batch.
+    pub execute: Histogram,
+    /// Back-end (ACAM / matcher) time per batch.
+    pub backend: Histogram,
+    /// Modelled energy, micro-nJ integer (nJ * 1e3) to stay in atomics.
+    energy_mnj: AtomicU64,
+}
+
+impl Metrics {
+    pub fn add_energy_nj(&self, nj: f64) {
+        self.energy_mnj
+            .fetch_add((nj * 1e3).round() as u64, Ordering::Relaxed);
+    }
+
+    pub fn energy_nj(&self) -> f64 {
+        self.energy_mnj.load(Ordering::Relaxed) as f64 / 1e3
+    }
+
+    pub fn snapshot(&self) -> Snapshot {
+        let batches = self.batches.load(Ordering::Relaxed);
+        let items = self.batched_items.load(Ordering::Relaxed);
+        Snapshot {
+            requests: self.requests.load(Ordering::Relaxed),
+            responses: self.responses.load(Ordering::Relaxed),
+            errors: self.errors.load(Ordering::Relaxed),
+            batches,
+            mean_batch: if batches > 0 {
+                items as f64 / batches as f64
+            } else {
+                0.0
+            },
+            pad_fraction: if items > 0 {
+                self.padded_slots.load(Ordering::Relaxed) as f64
+                    / (items + self.padded_slots.load(Ordering::Relaxed)) as f64
+            } else {
+                0.0
+            },
+            latency_mean_us: self.latency.mean_us(),
+            latency_p50_us: self.latency.percentile_us(0.50),
+            latency_p99_us: self.latency.percentile_us(0.99),
+            execute_mean_us: self.execute.mean_us(),
+            backend_mean_us: self.backend.mean_us(),
+            energy_nj: self.energy_nj(),
+        }
+    }
+}
+
+/// A consistent point-in-time read of the metrics.
+#[derive(Debug, Clone)]
+pub struct Snapshot {
+    pub requests: u64,
+    pub responses: u64,
+    pub errors: u64,
+    pub batches: u64,
+    pub mean_batch: f64,
+    pub pad_fraction: f64,
+    pub latency_mean_us: f64,
+    pub latency_p50_us: u64,
+    pub latency_p99_us: u64,
+    pub execute_mean_us: f64,
+    pub backend_mean_us: f64,
+    pub energy_nj: f64,
+}
+
+impl std::fmt::Display for Snapshot {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(
+            f,
+            "requests={} responses={} errors={} batches={} mean_batch={:.2} pad={:.1}%",
+            self.requests,
+            self.responses,
+            self.errors,
+            self.batches,
+            self.mean_batch,
+            self.pad_fraction * 100.0
+        )?;
+        writeln!(
+            f,
+            "latency mean={:.0}us p50<{}us p99<{}us  (execute {:.0}us, backend {:.0}us per batch)",
+            self.latency_mean_us,
+            self.latency_p50_us,
+            self.latency_p99_us,
+            self.execute_mean_us,
+            self.backend_mean_us
+        )?;
+        write!(f, "modelled energy total={:.2} nJ", self.energy_nj)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_mean_and_percentiles() {
+        let h = Histogram::default();
+        for us in [1u64, 2, 4, 8, 1000] {
+            h.record_us(us);
+        }
+        assert_eq!(h.count(), 5);
+        assert!((h.mean_us() - 203.0).abs() < 1.0);
+        assert!(h.percentile_us(0.5) <= 8);
+        assert!(h.percentile_us(0.99) >= 1000);
+    }
+
+    #[test]
+    fn histogram_zero_is_safe() {
+        let h = Histogram::default();
+        h.record_us(0);
+        assert_eq!(h.count(), 1);
+        assert_eq!(h.percentile_us(1.0), 2);
+    }
+
+    #[test]
+    fn energy_accumulates_in_millinj() {
+        let m = Metrics::default();
+        m.add_energy_nj(1.45);
+        m.add_energy_nj(1.45);
+        assert!((m.energy_nj() - 2.9).abs() < 1e-9);
+    }
+
+    #[test]
+    fn snapshot_batch_stats() {
+        let m = Metrics::default();
+        m.batches.fetch_add(2, Ordering::Relaxed);
+        m.batched_items.fetch_add(10, Ordering::Relaxed);
+        m.padded_slots.fetch_add(6, Ordering::Relaxed);
+        let s = m.snapshot();
+        assert!((s.mean_batch - 5.0).abs() < 1e-9);
+        assert!((s.pad_fraction - 6.0 / 16.0).abs() < 1e-9);
+    }
+}

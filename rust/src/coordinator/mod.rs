@@ -1,0 +1,19 @@
+//! Layer-3 coordinator: the serving system around the hybrid classifier.
+//!
+//! * [`batcher`] — dynamic batching policy (size + deadline, artifact-size
+//!   padding);
+//! * [`pipeline`] — image -> PJRT front-end -> binarise -> back-end
+//!   (ACAM sim / digital matcher / softmax baseline) -> class + energy;
+//! * [`server`] — the event loop: bounded request queue with backpressure, a
+//!   dedicated worker thread owning the PJRT state, async-friendly handles;
+//! * [`metrics`] — lock-free counters, latency histograms, energy ledger.
+
+pub mod batcher;
+pub mod metrics;
+pub mod oneshot;
+pub mod pipeline;
+pub mod server;
+
+pub use metrics::{Metrics, Snapshot};
+pub use pipeline::{Classification, Evaluation, Pipeline};
+pub use server::{Handle, Server};

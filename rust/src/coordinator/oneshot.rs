@@ -1,0 +1,89 @@
+//! Single-use response channel (tokio's `oneshot` is unavailable offline).
+//!
+//! Thin wrapper over a bounded `std::sync::mpsc` channel of capacity 1 with
+//! a send-once API: the worker thread sends exactly one result; the waiter
+//! blocks on [`Receiver::recv`] or polls [`Receiver::try_recv`].
+
+use std::sync::mpsc;
+
+/// Create a connected (sender, receiver) pair.
+pub fn channel<T>() -> (Sender<T>, Receiver<T>) {
+    let (tx, rx) = mpsc::sync_channel(1);
+    (Sender { tx }, Receiver { rx })
+}
+
+/// Send-once handle.
+pub struct Sender<T> {
+    tx: mpsc::SyncSender<T>,
+}
+
+impl<T> Sender<T> {
+    /// Deliver the result. Returns the value back if the receiver is gone.
+    pub fn send(self, value: T) -> Result<(), T> {
+        self.tx.try_send(value).map_err(|e| match e {
+            mpsc::TrySendError::Full(v) | mpsc::TrySendError::Disconnected(v) => v,
+        })
+    }
+}
+
+/// Await-once handle.
+pub struct Receiver<T> {
+    rx: mpsc::Receiver<T>,
+}
+
+impl<T> Receiver<T> {
+    /// Block until the result arrives; `Err` if the sender was dropped.
+    pub fn recv(self) -> Result<T, RecvError> {
+        self.rx.recv().map_err(|_| RecvError)
+    }
+
+    /// Non-blocking poll.
+    pub fn try_recv(&self) -> Option<T> {
+        self.rx.try_recv().ok()
+    }
+}
+
+/// The sender was dropped without sending.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RecvError;
+
+impl std::fmt::Display for RecvError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "oneshot sender dropped without sending")
+    }
+}
+
+impl std::error::Error for RecvError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn send_then_recv() {
+        let (tx, rx) = channel();
+        tx.send(42).unwrap();
+        assert_eq!(rx.recv().unwrap(), 42);
+    }
+
+    #[test]
+    fn recv_after_drop_is_error() {
+        let (tx, rx) = channel::<u32>();
+        drop(tx);
+        assert_eq!(rx.recv(), Err(RecvError));
+    }
+
+    #[test]
+    fn send_after_drop_returns_value() {
+        let (tx, rx) = channel();
+        drop(rx);
+        assert_eq!(tx.send(7), Err(7));
+    }
+
+    #[test]
+    fn cross_thread() {
+        let (tx, rx) = channel();
+        std::thread::spawn(move || tx.send("done").unwrap());
+        assert_eq!(rx.recv().unwrap(), "done");
+    }
+}

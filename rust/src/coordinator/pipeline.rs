@@ -1,0 +1,385 @@
+//! The request pipeline: image batch -> PJRT student front-end -> feature
+//! binarisation -> back-end classification (simulated ACAM, digital matcher,
+//! or softmax baseline) -> prediction + energy estimate.
+//!
+//! This is the paper's Fig. 2 as executable structure.  Everything here runs
+//! on the serving thread; no Python, no allocation churn after warmup (the
+//! padded input buffer and the packed-query scratch are reused).
+
+use std::time::Instant;
+
+use crate::acam::program::{binary_query_voltages, program_array, WindowMode};
+use crate::acam::{wta, AcamArray, ArrayConfig, Variability};
+use crate::config::{Backend, ServeConfig};
+use crate::energy::{EnergyModel, Scale};
+use crate::error::{Error, Result};
+use crate::matching;
+use crate::runtime::{Meta, Runtime};
+use crate::templates::TemplateStore;
+
+/// One classification outcome.
+#[derive(Debug, Clone)]
+pub struct Classification {
+    pub class: usize,
+    /// Modelled per-inference energy (nJ): front-end effective MACs +
+    /// back-end search.
+    pub energy_nj: f64,
+}
+
+/// The assembled serving pipeline.
+pub struct Pipeline {
+    runtime: Runtime,
+    pub meta: Meta,
+    pub store: TemplateStore,
+    backend: Backend,
+    k: usize,
+    acam: Option<AcamArray>,
+    acam_var: Variability,
+    energy: EnergyModel,
+    /// Front-end artifact prefix ("student_fwd_fast" on the CPU hot path,
+    /// "student_fwd" for the Pallas-lowered variant).
+    fwd_prefix: &'static str,
+    /// Per-inference front-end energy (nJ), precomputed from the as-built
+    /// effective MAC count.
+    e_frontend_nj: f64,
+    /// Reusable padded image buffer (allocation-free hot path).
+    scratch: Vec<f32>,
+    rng: crate::rng::Rng,
+}
+
+impl Pipeline {
+    /// Build from a serving config: loads meta.json + templates.json,
+    /// compiles the needed HLO artifacts, programs the ACAM array.
+    pub fn new(cfg: &ServeConfig) -> Result<Self> {
+        cfg.validate()?;
+        let meta = Meta::load(&cfg.artifacts_dir)?;
+        let store = TemplateStore::load(cfg.artifacts_dir.join("templates.json"))?;
+        let mut runtime = Runtime::new(&cfg.artifacts_dir)?;
+
+        // Precompile every batch variant of the front-end (and the softmax
+        // head when it is the backend) so compilation never hits the request
+        // path.
+        let fwd_prefix = if cfg.use_fast_frontend && has_fast_variant(&cfg.artifacts_dir, &meta) {
+            "student_fwd_fast"
+        } else {
+            "student_fwd"
+        };
+        let prefix = if cfg.backend == Backend::Softmax {
+            "student_softmax"
+        } else {
+            fwd_prefix
+        };
+        for &b in &meta.artifacts.batch_sizes {
+            runtime.load(&format!("{prefix}_b{b}"))?;
+        }
+
+        let set = store.set(cfg.templates_per_class)?;
+        let acam = if cfg.backend == Backend::AcamSim {
+            Some(program_array(
+                set,
+                WindowMode::Binary,
+                ArrayConfig {
+                    kind: cfg.acam.cell_kind,
+                    ..Default::default()
+                },
+                Variability::at_level(cfg.acam.variability_level),
+                cfg.acam.seed,
+            ))
+        } else {
+            None
+        };
+
+        let frontend_ops = meta.macs.as_built.student_effective;
+        let energy = EnergyModel::default();
+        let e_frontend_nj = energy.frontend_nj(frontend_ops);
+
+        Ok(Pipeline {
+            runtime,
+            backend: cfg.backend,
+            k: cfg.templates_per_class,
+            acam,
+            acam_var: Variability::at_level(cfg.acam.variability_level),
+            energy,
+            e_frontend_nj,
+            fwd_prefix,
+            scratch: Vec::new(),
+            rng: crate::rng::Rng::new(cfg.acam.seed ^ 0x5EED),
+            meta,
+            store,
+        })
+    }
+
+    /// Pixels per image.
+    pub fn image_len(&self) -> usize {
+        let s = self.meta.artifacts.image_size;
+        s * s
+    }
+
+    /// Run the front-end on `n` images packed in `images`, padding to the
+    /// artifact batch `b`; returns the first `n` rows of the output matrix
+    /// with `row_len` columns.
+    fn run_frontend(
+        &mut self,
+        name_prefix: &str,
+        images: &[f32],
+        n: usize,
+        b: usize,
+        row_len: usize,
+    ) -> Result<Vec<f32>> {
+        let img_len = self.image_len();
+        let s = self.meta.artifacts.image_size as i64;
+        if images.len() != n * img_len {
+            return Err(Error::Request(format!(
+                "batch buffer has {} floats, expected {} ({} images)",
+                images.len(),
+                n * img_len,
+                n
+            )));
+        }
+        // Pad into the reusable scratch buffer.
+        self.scratch.clear();
+        self.scratch.resize(b * img_len, 0.0);
+        self.scratch[..images.len()].copy_from_slice(images);
+        let name = format!("{name_prefix}_b{b}");
+        let exe = self.runtime.load(&name)?;
+        let out = exe.run_f32(&[(&self.scratch, &[b as i64, s, s, 1])])?;
+        if out.len() != b * row_len {
+            return Err(Error::Artifact(format!(
+                "{name} returned {} floats, expected {}",
+                out.len(),
+                b * row_len
+            )));
+        }
+        Ok(out[..n * row_len].to_vec())
+    }
+
+    /// Extract (real-valued) feature maps for `n` images (public for the
+    /// benches and template-refresh example).
+    pub fn extract_features(&mut self, images: &[f32], n: usize) -> Result<Vec<f32>> {
+        let nf = self.meta.artifacts.n_features;
+        let max_b = *self.meta.artifacts.batch_sizes.iter().max().unwrap();
+        let prefix = self.fwd_prefix;
+        if n <= max_b {
+            let b = self.meta.batch_for(n);
+            return self.run_frontend(prefix, images, n, b, nf);
+        }
+        // Chunk oversized requests to artifact-sized dispatches.
+        let img_len = self.image_len();
+        let mut out = Vec::with_capacity(n * nf);
+        let mut i = 0;
+        while i < n {
+            let m = max_b.min(n - i);
+            let b = self.meta.batch_for(m);
+            out.extend(self.run_frontend(
+                prefix,
+                &images[i * img_len..(i + m) * img_len],
+                m,
+                b,
+                nf,
+            )?);
+            i += m;
+        }
+        Ok(out)
+    }
+
+    /// Classify a batch of `n` images (timings recorded by the caller).
+    /// Batches beyond the largest exported artifact size are split into
+    /// artifact-sized chunks.
+    pub fn classify_batch(&mut self, images: &[f32], n: usize) -> Result<Vec<Classification>> {
+        let max_b = *self.meta.artifacts.batch_sizes.iter().max().unwrap();
+        if n > max_b {
+            let img_len = self.image_len();
+            let mut out = Vec::with_capacity(n);
+            let mut i = 0;
+            while i < n {
+                let m = max_b.min(n - i);
+                out.extend(self.classify_batch(&images[i * img_len..(i + m) * img_len], m)?);
+                i += m;
+            }
+            return Ok(out);
+        }
+        let num_classes = self.store.num_classes;
+        match self.backend {
+            Backend::Softmax => {
+                let b = self.meta.batch_for(n);
+                let logits = self.run_frontend("student_softmax", images, n, b, num_classes)?;
+                // Softmax baseline pays for the dense head: no ACAM term,
+                // head ops not removed (they are excluded from
+                // student_effective, which covers the pruned conv stack).
+                let e = self.energy.frontend_nj(
+                    self.meta.macs.as_built.student_effective
+                        + self.meta.macs.as_built.head_ops,
+                );
+                Ok(logits
+                    .chunks_exact(num_classes)
+                    .map(|row| Classification {
+                        class: argmax(row),
+                        energy_nj: e,
+                    })
+                    .collect())
+            }
+            Backend::FeatureCount | Backend::Similarity | Backend::AcamSim => {
+                let feats = self.extract_features(images, n)?;
+                let nf = self.meta.artifacts.n_features;
+                let mut out = Vec::with_capacity(n);
+                for row in feats.chunks_exact(nf) {
+                    out.push(self.classify_features(row)?);
+                }
+                Ok(out)
+            }
+        }
+    }
+
+    /// Classify one already-extracted feature map.
+    pub fn classify_features(&mut self, features: &[f32]) -> Result<Classification> {
+        let num_classes = self.store.num_classes;
+        let set = self.store.set(self.k)?;
+        let bits = self.store.binarize(features);
+        let (class, e_backend) = match self.backend {
+            Backend::FeatureCount => {
+                let c = matching::classify_feature_count(&bits, set, num_classes);
+                // Digital matcher modelled at the same ACAM energy envelope
+                // (it replaces the same head); report the Eq. 14 figure.
+                (c, self.energy.backend_nj(set.num_templates() as u64, set.num_features() as u64))
+            }
+            Backend::Similarity => {
+                let qf: Vec<f32> = bits.iter().map(|&b| b as f32).collect();
+                let c = matching::classify_similarity(
+                    &qf,
+                    set,
+                    self.store.similarity_alpha,
+                    num_classes,
+                    true,
+                );
+                (c, self.energy.backend_nj(set.num_templates() as u64, set.num_features() as u64))
+            }
+            Backend::AcamSim => {
+                let arr = self
+                    .acam
+                    .as_mut()
+                    .ok_or_else(|| Error::Config("ACAM array not programmed".into()))?;
+                let search = arr.search(&binary_query_voltages(&bits));
+                let c = wta::winner_take_all_classes(
+                    &search.similarity,
+                    &set.class_of,
+                    num_classes,
+                    &self.acam_var,
+                    &mut self.rng,
+                );
+                (c, search.energy_nj)
+            }
+            Backend::Softmax => unreachable!("handled in classify_batch"),
+        };
+        Ok(Classification {
+            class,
+            energy_nj: self.e_frontend_nj + e_backend,
+        })
+    }
+
+    /// Evaluate accuracy + confusion matrix over a labelled workload.
+    pub fn evaluate(
+        &mut self,
+        images: &[f32],
+        labels: &[usize],
+        batch: usize,
+    ) -> Result<Evaluation> {
+        let img_len = self.image_len();
+        let n = labels.len();
+        let num_classes = self.store.num_classes;
+        let mut confusion = vec![vec![0u64; num_classes]; num_classes];
+        let mut correct = 0usize;
+        let mut energy_nj = 0f64;
+        let t0 = Instant::now();
+        let mut i = 0;
+        while i < n {
+            let m = batch.min(n - i);
+            let chunk = &images[i * img_len..(i + m) * img_len];
+            for (j, c) in self.classify_batch(chunk, m)?.into_iter().enumerate() {
+                let truth = labels[i + j];
+                confusion[truth][c.class] += 1;
+                correct += usize::from(c.class == truth);
+                energy_nj += c.energy_nj;
+            }
+            i += m;
+        }
+        Ok(Evaluation {
+            accuracy: correct as f64 / n as f64,
+            confusion,
+            total_energy_nj: energy_nj,
+            wall_secs: t0.elapsed().as_secs_f64(),
+            n,
+        })
+    }
+
+    /// The §V.D report for this deployment (as-built scale).
+    pub fn energy_report(&self) -> crate::energy::EnergyReport {
+        let set = self.store.set(self.k).expect("validated at construction");
+        self.energy.report(Scale::AsBuilt {
+            frontend_ops: self.meta.macs.as_built.student_effective,
+            teacher_macs: self.meta.macs.as_built.teacher_gray.macs,
+            n_templates: set.num_templates() as u64,
+            n_features: set.num_features() as u64,
+        })
+    }
+
+    /// Access the underlying runtime (benches).
+    pub fn runtime_mut(&mut self) -> &mut Runtime {
+        &mut self.runtime
+    }
+}
+
+/// Accuracy/confusion summary of an evaluation run.
+#[derive(Debug, Clone)]
+pub struct Evaluation {
+    pub accuracy: f64,
+    pub confusion: Vec<Vec<u64>>,
+    pub total_energy_nj: f64,
+    pub wall_secs: f64,
+    pub n: usize,
+}
+
+impl Evaluation {
+    /// Per-class accuracy (Fig. 7).
+    pub fn per_class_accuracy(&self) -> Vec<f64> {
+        self.confusion
+            .iter()
+            .enumerate()
+            .map(|(c, row)| {
+                let total: u64 = row.iter().sum();
+                if total == 0 {
+                    0.0
+                } else {
+                    row[c] as f64 / total as f64
+                }
+            })
+            .collect()
+    }
+}
+
+/// Does the artifact set include the jnp-lowered fast front-end?
+fn has_fast_variant(dir: &std::path::Path, meta: &Meta) -> bool {
+    let b = meta.artifacts.batch_sizes.first().copied().unwrap_or(1);
+    dir.join(format!("student_fwd_fast_b{b}.hlo.txt")).is_file()
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &v) in xs.iter().enumerate() {
+        if v > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_basic() {
+        assert_eq!(argmax(&[0.1, 0.9, 0.5]), 1);
+        assert_eq!(argmax(&[1.0]), 0);
+        assert_eq!(argmax(&[2.0, 2.0]), 0); // tie -> low index
+    }
+}

@@ -1,0 +1,172 @@
+//! The serving loop: a dedicated worker thread owns the (non-`Send`) PJRT
+//! pipeline; callers submit requests through a bounded channel (the
+//! backpressure boundary) and wait on per-request oneshot channels, so
+//! multi-threaded front-ends (and the CLI demo driver) compose naturally.
+
+use std::sync::mpsc::{sync_channel, SyncSender, TrySendError};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::config::ServeConfig;
+use crate::error::{Error, Result};
+
+use super::oneshot;
+
+use super::batcher;
+use super::metrics::Metrics;
+use super::pipeline::{Classification, Pipeline};
+
+/// One in-flight request.
+struct Job {
+    image: Vec<f32>,
+    enqueued: Instant,
+    resp: oneshot::Sender<Result<Classification>>,
+}
+
+/// Handle for submitting classification requests.
+#[derive(Clone)]
+pub struct Handle {
+    tx: SyncSender<Job>,
+    pub metrics: Arc<Metrics>,
+    image_len: usize,
+}
+
+impl Handle {
+    /// Submit an image; await the returned receiver for the result.
+    /// Fails fast (backpressure) when the queue is full.
+    pub fn submit(&self, image: Vec<f32>) -> Result<oneshot::Receiver<Result<Classification>>> {
+        if image.len() != self.image_len {
+            return Err(Error::Request(format!(
+                "image has {} pixels, expected {}",
+                image.len(),
+                self.image_len
+            )));
+        }
+        let (tx, rx) = oneshot::channel();
+        self.metrics
+            .requests
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        match self.tx.try_send(Job {
+            image,
+            enqueued: Instant::now(),
+            resp: tx,
+        }) {
+            Ok(()) => Ok(rx),
+            Err(TrySendError::Full(_)) => {
+                self.metrics
+                    .errors
+                    .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                Err(Error::Request("queue full (backpressure)".into()))
+            }
+            Err(TrySendError::Disconnected(_)) => {
+                Err(Error::Request("server stopped".into()))
+            }
+        }
+    }
+
+    /// Convenience for synchronous callers: submit and block.
+    pub fn classify_blocking(&self, image: Vec<f32>) -> Result<Classification> {
+        let rx = self.submit(image)?;
+        rx.recv()
+            .map_err(|_| Error::Request("worker dropped response".into()))?
+    }
+}
+
+/// The running server (worker thread + handle).
+pub struct Server {
+    pub handle: Handle,
+    worker: Option<JoinHandle<()>>,
+}
+
+impl Server {
+    /// Start the worker thread.  The PJRT pipeline is **constructed inside
+    /// the worker** (PJRT handles are not `Send`); construction failure is
+    /// reported back through a ready-channel before `start` returns.
+    pub fn start(cfg: ServeConfig) -> Result<Server> {
+        let metrics = Arc::new(Metrics::default());
+        let (tx, rx) = sync_channel::<Job>(cfg.batch.queue_depth);
+        let max_batch = cfg.batch.max_batch;
+        let max_wait = Duration::from_micros(cfg.batch.max_wait_us);
+        let m = Arc::clone(&metrics);
+        let (ready_tx, ready_rx) = oneshot::channel::<Result<usize>>();
+
+        let worker = std::thread::Builder::new()
+            .name("hec-serve".into())
+            .spawn(move || {
+                use std::sync::atomic::Ordering::Relaxed;
+                let mut pipeline = match Pipeline::new(&cfg) {
+                    Ok(p) => {
+                        let image_len = p.image_len();
+                        let _ = ready_tx.send(Ok(image_len));
+                        p
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                let image_len = pipeline.image_len();
+                while let Some(batch) = batcher::assemble(&rx, max_batch, max_wait) {
+                    let n = batch.len();
+                    m.batches.fetch_add(1, Relaxed);
+                    m.batched_items.fetch_add(n as u64, Relaxed);
+
+                    // Pack images contiguously.
+                    let mut buf = Vec::with_capacity(n * image_len);
+                    for job in &batch {
+                        buf.extend_from_slice(&job.image);
+                    }
+                    let padded = pipeline.meta.batch_for(n) - n;
+                    m.padded_slots.fetch_add(padded as u64, Relaxed);
+
+                    let t0 = Instant::now();
+                    let results = pipeline.classify_batch(&buf, n);
+                    m.execute.record_us(t0.elapsed().as_micros() as u64);
+
+                    match results {
+                        Ok(results) => {
+                            for (job, res) in batch.into_iter().zip(results) {
+                                m.latency
+                                    .record_us(job.enqueued.elapsed().as_micros() as u64);
+                                m.add_energy_nj(res.energy_nj);
+                                m.responses.fetch_add(1, Relaxed);
+                                let _ = job.resp.send(Ok(res));
+                            }
+                        }
+                        Err(e) => {
+                            let msg = e.to_string();
+                            for job in batch {
+                                m.errors.fetch_add(1, Relaxed);
+                                let _ = job.resp.send(Err(Error::Request(msg.clone())));
+                            }
+                        }
+                    }
+                }
+            })
+            .expect("spawn serving worker");
+
+        let image_len = ready_rx
+            .recv()
+            .map_err(|_| Error::Request("serving worker died during startup".into()))??;
+        Ok(Server {
+            handle: Handle {
+                tx,
+                metrics,
+                image_len,
+            },
+            worker: Some(worker),
+        })
+    }
+
+    /// Stop accepting requests and join the worker.  (Outstanding `Handle`
+    /// clones keep the channel open; the worker exits once the last clone
+    /// drops.)
+    pub fn shutdown(self) {
+        let Server { handle, worker } = self;
+        drop(handle);
+        if let Some(w) = worker {
+            let _ = w.join();
+        }
+    }
+}

@@ -1,0 +1,59 @@
+//! Dataset substrate: the synthetic CIFAR-like workload generator.
+//!
+//! The serving benches and examples need an input distribution identical to
+//! what the Python pipeline trained on.  [`synthetic`] is a line-for-line
+//! mirror of `python/compile/data.py` — the same SplitMix64-seeded LCG, the
+//! same ten class recipes — so sample *i* of class *c* is the same image in
+//! both languages (pinned by golden-value tests on both sides).
+
+pub mod synthetic;
+
+pub use synthetic::{render, Lcg, SyntheticDataset, IMAGE_SIZE, NUM_CLASSES};
+
+/// Paper Section IV-A grayscale weights: Y = 0.2989 R + 0.5870 G + 0.1140 B.
+pub const GRAY_WEIGHTS: [f32; 3] = [0.2989, 0.5870, 0.1140];
+
+/// Convert an interleaved RGB image (HWC, values in [0,1]) to grayscale.
+pub fn to_grayscale(rgb: &[f32], pixels: usize) -> Vec<f32> {
+    assert_eq!(rgb.len(), pixels * 3);
+    (0..pixels)
+        .map(|i| {
+            GRAY_WEIGHTS[0] * rgb[3 * i]
+                + GRAY_WEIGHTS[1] * rgb[3 * i + 1]
+                + GRAY_WEIGHTS[2] * rgb[3 * i + 2]
+        })
+        .collect()
+}
+
+/// CIFAR-10 class names (the labels the paper classifies).
+pub const CLASS_NAMES: [&str; 10] = [
+    "airplane",
+    "automobile",
+    "bird",
+    "cat",
+    "deer",
+    "dog",
+    "frog",
+    "horse",
+    "ship",
+    "truck",
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grayscale_formula() {
+        let rgb = [1.0f32, 1.0, 1.0, 0.5, 0.0, 0.0];
+        let g = to_grayscale(&rgb, 2);
+        assert!((g[0] - 0.9999).abs() < 1e-4);
+        assert!((g[1] - 0.2989 * 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    #[should_panic]
+    fn grayscale_wrong_len_panics() {
+        to_grayscale(&[0.0; 5], 2);
+    }
+}

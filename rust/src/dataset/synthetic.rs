@@ -1,0 +1,262 @@
+//! Synthetic CIFAR-like generator — line-for-line mirror of
+//! `python/compile/data.py` (see DESIGN.md §Substitutions for why this
+//! stands in for CIFAR-10 in this environment).
+//!
+//! Determinism contract: `Lcg` and `render` reproduce the Python
+//! implementation exactly; golden values are pinned in both test suites so
+//! the two sides cannot drift.
+
+/// Image edge length (CIFAR format).
+pub const IMAGE_SIZE: usize = 32;
+/// Number of classes.
+pub const NUM_CLASSES: usize = 10;
+
+/// SplitMix64 finaliser used to seed the LCG.
+pub fn splitmix64(x: u64) -> u64 {
+    let x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = x;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// 64-bit LCG (MMIX constants), seeded via SplitMix64; `u01` uses the top
+/// 53 bits — identical to the Python `Lcg`.
+#[derive(Debug, Clone)]
+pub struct Lcg {
+    state: u64,
+}
+
+impl Lcg {
+    const A: u64 = 6364136223846793005;
+    const C: u64 = 1442695040888963407;
+
+    pub fn new(seed: u64) -> Self {
+        Lcg {
+            state: splitmix64(seed),
+        }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = Self::A.wrapping_mul(self.state).wrapping_add(Self::C);
+        self.state
+    }
+
+    /// Uniform in [0, 1) from the top 53 bits.
+    pub fn u01(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / 9007199254740992.0)
+    }
+
+    pub fn range(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.u01()
+    }
+}
+
+/// Render one grayscale sample in [0, 1], row-major `[IMAGE_SIZE^2]`.
+///
+/// Class recipes (must match `data.synth_image`):
+/// 0 horizontal band, 1 vertical band, 2 disc, 3 ring, 4 diagonal stripes,
+/// 5 anti-diagonal stripes, 6 checkerboard, 7 radial gradient, 8 two-blob,
+/// 9 cross.
+pub fn render(class_id: usize, sample_id: u64, seed: u64) -> Vec<f32> {
+    assert!(class_id < NUM_CLASSES, "class_id out of range");
+    let size = IMAGE_SIZE;
+    let mut rng = Lcg::new((seed << 40) ^ ((class_id as u64) << 20) ^ sample_id);
+    let cx = rng.range(0.35, 0.65);
+    let cy = rng.range(0.35, 0.65);
+    let scale = rng.range(0.8, 1.25);
+    let phase = rng.range(0.0, 1.0);
+    let amp = rng.range(0.7, 1.0);
+
+    let mut img = vec![0f32; size * size];
+    for i in 0..size {
+        // yy varies along i (rows), xx along j (cols) — matches np.meshgrid(indexing="ij").
+        let yy = (i as f64 + 0.5) / size as f64;
+        for j in 0..size {
+            let xx = (j as f64 + 0.5) / size as f64;
+            let v: f64 = match class_id {
+                0 => (-((yy - cy) / (0.12 * scale)).powi(2)).exp(),
+                1 => (-((xx - cx) / (0.12 * scale)).powi(2)).exp(),
+                2 => {
+                    let r = ((xx - cx).powi(2) + (yy - cy).powi(2)).sqrt();
+                    if r < 0.22 * scale {
+                        1.0
+                    } else {
+                        0.0
+                    }
+                }
+                3 => {
+                    let r = ((xx - cx).powi(2) + (yy - cy).powi(2)).sqrt();
+                    if (r - 0.25 * scale).abs() < 0.06 {
+                        1.0
+                    } else {
+                        0.0
+                    }
+                }
+                4 => {
+                    0.5 + 0.5
+                        * (2.0 * std::f64::consts::PI * (xx + yy) * 4.0 * scale
+                            + phase * 6.2831853)
+                            .sin()
+                }
+                5 => {
+                    0.5 + 0.5
+                        * (2.0 * std::f64::consts::PI * (xx - yy) * 4.0 * scale
+                            + phase * 6.2831853)
+                            .sin()
+                }
+                6 => {
+                    let fx = (xx * 4.0 * scale + phase).floor();
+                    let fy = (yy * 4.0 * scale + phase).floor();
+                    (fx + fy).rem_euclid(2.0)
+                }
+                7 => {
+                    let r = ((xx - cx).powi(2) + (yy - cy).powi(2)).sqrt();
+                    (1.0 - r / (0.7 * scale)).clamp(0.0, 1.0)
+                }
+                8 => {
+                    let d1 = (xx - cx * 0.6).powi(2) + (yy - cy).powi(2);
+                    let d2 = (xx - (cx * 0.6 + 0.4)).powi(2) + (yy - cy).powi(2);
+                    (-d1 / (0.02 * scale)).exp() + (-d2 / (0.02 * scale)).exp()
+                }
+                9 => {
+                    let a = (-((yy - cy) / 0.08).powi(2)).exp();
+                    let b = (-((xx - cx) / 0.08).powi(2)).exp();
+                    a.max(b)
+                }
+                _ => unreachable!(),
+            };
+            img[i * size + j] = (amp * v) as f32;
+        }
+    }
+    // Deterministic per-pixel noise stream — same draw order as Python.
+    for px in img.iter_mut() {
+        let noise = rng.u01() as f32;
+        *px = (0.4 * *px + 1.2 * (noise - 0.5)).clamp(0.0, 1.0);
+    }
+    img
+}
+
+/// A lazily-rendered synthetic dataset: sample `i` has class `i % 10`
+/// (round-robin) — matching `data.synth_dataset`.
+#[derive(Debug, Clone)]
+pub struct SyntheticDataset {
+    pub seed: u64,
+    pub len: usize,
+    /// Normalisation stats from training (meta.json `norm`); applied so the
+    /// serving inputs match what the student was trained on.
+    pub mean: f32,
+    pub std: f32,
+}
+
+impl SyntheticDataset {
+    pub fn new(seed: u64, len: usize, mean: f32, std: f32) -> Self {
+        SyntheticDataset {
+            seed,
+            len,
+            mean,
+            std,
+        }
+    }
+
+    /// The label of sample `i`.
+    pub fn label(&self, i: usize) -> usize {
+        i % NUM_CLASSES
+    }
+
+    /// Render + normalise sample `i` (shape `[IMAGE_SIZE * IMAGE_SIZE]`).
+    pub fn image(&self, i: usize) -> Vec<f32> {
+        let mut img = render(self.label(i), (i / NUM_CLASSES) as u64, self.seed);
+        for v in img.iter_mut() {
+            *v = (*v - self.mean) / self.std;
+        }
+        img
+    }
+
+    /// Render a contiguous normalised batch `[n * IMAGE_SIZE^2]` with labels.
+    pub fn batch(&self, start: usize, n: usize) -> (Vec<f32>, Vec<usize>) {
+        let mut xs = Vec::with_capacity(n * IMAGE_SIZE * IMAGE_SIZE);
+        let mut ys = Vec::with_capacity(n);
+        for i in start..start + n {
+            let idx = i % self.len;
+            xs.extend_from_slice(&self.image(idx));
+            ys.push(self.label(idx));
+        }
+        (xs, ys)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Golden values pinned against python/tests/test_data_macs.py.
+    #[test]
+    fn lcg_golden_sequence() {
+        let mut l = Lcg::new(42);
+        assert_eq!(l.next_u64(), 13986908341085854848);
+        assert_eq!(l.next_u64(), 2827560660634158031);
+        assert_eq!(l.next_u64(), 776025860801273266);
+        assert_eq!(l.next_u64(), 301797295797536665);
+    }
+
+    #[test]
+    fn lcg_u01_golden() {
+        let mut l = Lcg::new(0);
+        assert!((l.u01() - 0.288574626916).abs() < 1e-10);
+    }
+
+    #[test]
+    fn splitmix_golden() {
+        assert_eq!(splitmix64(123), 13032462758197477675);
+    }
+
+    #[test]
+    fn render_golden() {
+        let img = render(3, 7, 0);
+        let sum: f32 = img.iter().sum();
+        assert!(
+            (sum - 194.83780).abs() < 0.05,
+            "render(3,7,0) sum drifted: {sum}"
+        );
+        assert_eq!(img[0], 0.0);
+    }
+
+    #[test]
+    fn render_deterministic() {
+        assert_eq!(render(5, 11, 3), render(5, 11, 3));
+        assert_ne!(render(5, 11, 3), render(5, 12, 3));
+    }
+
+    #[test]
+    fn render_in_unit_range() {
+        for c in 0..NUM_CLASSES {
+            let img = render(c, 0, 1);
+            assert!(img.iter().all(|v| (0.0..=1.0).contains(v)), "class {c}");
+        }
+    }
+
+    #[test]
+    fn dataset_round_robin() {
+        let ds = SyntheticDataset::new(0, 25, 0.0, 1.0);
+        let labels: Vec<usize> = (0..12).map(|i| ds.label(i)).collect();
+        assert_eq!(labels, vec![0, 1, 2, 3, 4, 5, 6, 7, 8, 9, 0, 1]);
+    }
+
+    #[test]
+    fn dataset_batch_shapes_and_wraparound() {
+        let ds = SyntheticDataset::new(0, 10, 0.5, 2.0);
+        let (xs, ys) = ds.batch(8, 4);
+        assert_eq!(xs.len(), 4 * IMAGE_SIZE * IMAGE_SIZE);
+        assert_eq!(ys, vec![8, 9, 0, 1]); // wraps at len=10
+    }
+
+    #[test]
+    fn dataset_normalisation_applied() {
+        let raw = SyntheticDataset::new(0, 10, 0.0, 1.0).image(0);
+        let norm = SyntheticDataset::new(0, 10, 0.5, 2.0).image(0);
+        for (r, n) in raw.iter().zip(norm.iter()) {
+            assert!((n - (r - 0.5) / 2.0).abs() < 1e-6);
+        }
+    }
+}

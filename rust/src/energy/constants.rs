@@ -1,0 +1,72 @@
+//! Paper-reported constants (Table I + §V.D) and Horowitz ISSCC'14 energy
+//! figures — mirrored from `python/compile/macs.py::PAPER`; the pytest /
+//! cargo-test pair pins both sides to the same numbers.
+
+/// Table I rows (params, MACs, accuracy %) at paper scale.
+pub struct PaperModel {
+    pub params: u64,
+    pub macs: u64,
+    pub accuracy: f64,
+}
+
+pub const TEACHER_COLOR: PaperModel = PaperModel {
+    params: 26_215_810,
+    macs: 3_858_551_808,
+    accuracy: 93.77,
+};
+
+pub const TEACHER_GRAY: PaperModel = PaperModel {
+    params: 26_209_538,
+    macs: 3_808_375_808,
+    accuracy: 91.04,
+};
+
+pub const STUDENT_BASE: PaperModel = PaperModel {
+    params: 380_314,
+    macs: 23_785_120,
+    accuracy: 76.29,
+};
+
+pub const STUDENT_OPT: PaperModel = PaperModel {
+    params: 380_314,
+    macs: 4_757_024,
+    accuracy: 82.22,
+};
+
+/// §V.D: ops of the dense softmax head removed by the ACAM (784*10 + 10).
+pub const SOFTMAX_HEAD_OPS: u64 = 7_850;
+
+/// §V.D: front-end ops with the head removed: 4,757,024 - 7,850.
+pub const FRONTEND_OPS_ACAM: u64 = 4_749_174;
+
+/// Pruning sparsity of the optimised student.
+pub const SPARSITY: f64 = 0.80;
+
+/// TXL-ACAM energy per similarity-search operation per cell (Section III-B).
+pub const ACAM_CELL_ENERGY_FJ: f64 = 185.0;
+
+/// Deployed back-end geometry: 10 templates x 784 features.
+pub const N_TEMPLATES: u64 = 10;
+pub const N_FEATURES: u64 = 784;
+
+/// Horowitz ISSCC'14, 45 nm: 8-bit integer op energies (pJ).
+pub const MUL8_PJ: f64 = 0.2;
+pub const ADD8_PJ: f64 = 0.03;
+/// 32 KB cache access (pJ) — the §V.D per-MAC memory-access charge.
+pub const MEM_32K_PJ: f64 = 20.0;
+
+/// Horowitz 32-bit float op energies (pJ) — used for the teacher estimate.
+pub const FMUL32_PJ: f64 = 3.7;
+pub const FADD32_PJ: f64 = 0.9;
+
+/// Published §V.D results.
+pub const E_BACKEND_NJ: f64 = 1.45;
+pub const E_FRONTEND_NJ: f64 = 96.07;
+pub const E_TOTAL_NJ: f64 = 97.52;
+pub const E_TEACHER_UJ: f64 = 78.06;
+pub const ENERGY_REDUCTION: f64 = 792.0;
+
+/// §V.B binary matching accuracy and Table II sweep.
+pub const MATCH_ACCURACY_BINARY: f64 = 70.91;
+pub const MULTI_TEMPLATE_ACCURACY: [(usize, f64); 3] =
+    [(1, 70.91), (2, 71.64), (3, 71.60)];

@@ -1,0 +1,323 @@
+//! Energy ledger — the §V.D accounting, implemented as a first-class runtime
+//! subsystem so every served classification carries its energy estimate.
+//!
+//! Two accounting scales (DESIGN.md §Substitutions):
+//! * **paper scale** — the constants the paper reports (ResNet-50 teacher,
+//!   Fig.-5 student); reproduces the published 792x reduction;
+//! * **as-built** — Eq. 13 walked over the models actually trained by
+//!   `make artifacts` (read from meta.json), for the serving metrics.
+//!
+//! ### Unit-slip note (reproduction fidelity)
+//!
+//! The paper quotes Horowitz per-op energies in **pJ** (0.2 pJ mul + 0.03 pJ
+//! add + 20 pJ memory = 20.23 pJ/MAC) but its published totals only follow
+//! if that per-MAC figure is applied as **fJ**: 4,749,174 MACs x 20.23 fJ =
+//! 96.07 nJ (the published front-end figure) and 3,858,551,808 MACs x
+//! 20.23 fJ = 78.06 uJ (the published teacher figure).  With strict pJ the
+//! totals would be 1000x larger.  We reproduce the *published arithmetic*
+//! (fJ-effective, [`EnergyModel::report`]) because the paper's headline
+//! 792x is a *ratio* and is unit-slip invariant; [`EnergyModel::frontend_strict_pj_nj`]
+//! exposes the strict-pJ variant for comparison.  See EXPERIMENTS.md §V.D.
+
+pub mod constants;
+
+
+use constants::*;
+
+/// Energy model parameters (Horowitz constants by default; configurable so
+/// ablations can model other process nodes).
+#[derive(Debug, Clone)]
+pub struct EnergyModel {
+    /// 8-bit multiply energy (pJ, Horowitz).
+    pub mul8_pj: f64,
+    /// 8-bit add energy (pJ, Horowitz).
+    pub add8_pj: f64,
+    /// Memory access energy per MAC (pJ; the paper's 32 KB cache figure).
+    pub mem_pj: f64,
+    /// ACAM energy per cell per search (fJ, Section III-B).
+    pub acam_cell_fj: f64,
+}
+
+impl Default for EnergyModel {
+    fn default() -> Self {
+        EnergyModel {
+            mul8_pj: MUL8_PJ,
+            add8_pj: ADD8_PJ,
+            mem_pj: MEM_32K_PJ,
+            acam_cell_fj: ACAM_CELL_ENERGY_FJ,
+        }
+    }
+}
+
+impl EnergyModel {
+    /// Per-MAC energy in the paper's stated units (pJ): mul + add + memory.
+    pub fn per_mac_pj(&self) -> f64 {
+        self.mul8_pj + self.add8_pj + self.mem_pj
+    }
+
+    /// Eq. 14: E_back-end = N_templates x N_features x E_cell, in nJ.
+    /// (This term is unit-consistent in the paper: 10 x 784 x 185 fJ = 1.45 nJ.)
+    pub fn backend_nj(&self, n_templates: u64, n_features: u64) -> f64 {
+        (n_templates * n_features) as f64 * self.acam_cell_fj * 1e-6
+    }
+
+    /// §V.D front-end total in nJ, following the paper's published
+    /// arithmetic (per-MAC figure applied as fJ — see the unit-slip note).
+    pub fn frontend_nj(&self, ops: u64) -> f64 {
+        ops as f64 * self.per_mac_pj() * 1e-6
+    }
+
+    /// Strict-pJ front-end total in nJ (1000x the published arithmetic).
+    pub fn frontend_strict_pj_nj(&self, ops: u64) -> f64 {
+        ops as f64 * self.per_mac_pj() * 1e-3
+    }
+
+    /// Teacher energy in µJ (paper arithmetic; colour-teacher MACs x
+    /// 20.23 fJ = 78.06 µJ matches the published figure).
+    pub fn teacher_uj(&self, macs: u64) -> f64 {
+        macs as f64 * self.per_mac_pj() * 1e-9
+    }
+
+    /// §V.D composite: the full hybrid-vs-teacher comparison.
+    pub fn report(&self, scale: Scale) -> EnergyReport {
+        let (frontend_ops, teacher_macs, n_templates, n_features) = match scale {
+            Scale::Paper => (
+                FRONTEND_OPS_ACAM,
+                TEACHER_COLOR.macs,
+                N_TEMPLATES,
+                N_FEATURES,
+            ),
+            Scale::AsBuilt {
+                frontend_ops,
+                teacher_macs,
+                n_templates,
+                n_features,
+            } => (frontend_ops, teacher_macs, n_templates, n_features),
+        };
+        let e_backend_nj = self.backend_nj(n_templates, n_features);
+        let e_frontend_nj = self.frontend_nj(frontend_ops);
+        let e_total_nj = e_backend_nj + e_frontend_nj;
+        let e_teacher_uj = self.teacher_uj(teacher_macs);
+        EnergyReport {
+            frontend_ops,
+            teacher_macs,
+            n_templates,
+            n_features,
+            e_backend_nj,
+            e_frontend_nj,
+            e_total_nj,
+            e_teacher_uj,
+            reduction: e_teacher_uj * 1e3 / e_total_nj,
+        }
+    }
+}
+
+/// Which model scale the report uses.
+#[derive(Debug, Clone, Copy)]
+pub enum Scale {
+    /// Paper-reported constants (reproduces §V.D's published numbers).
+    Paper,
+    /// The models this repo actually trained (from meta.json).
+    AsBuilt {
+        frontend_ops: u64,
+        teacher_macs: u64,
+        n_templates: u64,
+        n_features: u64,
+    },
+}
+
+/// The §V.D table: per-classification energy, front and back, vs teacher.
+#[derive(Debug, Clone)]
+pub struct EnergyReport {
+    pub frontend_ops: u64,
+    pub teacher_macs: u64,
+    pub n_templates: u64,
+    pub n_features: u64,
+    pub e_backend_nj: f64,
+    pub e_frontend_nj: f64,
+    pub e_total_nj: f64,
+    pub e_teacher_uj: f64,
+    /// Teacher energy / hybrid energy (the paper's 792x headline).
+    pub reduction: f64,
+}
+
+impl std::fmt::Display for EnergyReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(
+            f,
+            "E_front-end = {:>9.2} nJ  ({} effective 8-bit MACs)",
+            self.e_frontend_nj, self.frontend_ops
+        )?;
+        writeln!(
+            f,
+            "E_back-end  = {:>9.2} nJ  ({} templates x {} features)",
+            self.e_backend_nj, self.n_templates, self.n_features
+        )?;
+        writeln!(f, "E_total     = {:>9.2} nJ", self.e_total_nj)?;
+        writeln!(
+            f,
+            "E_teacher   = {:>9.2} uJ  ({} MACs)",
+            self.e_teacher_uj, self.teacher_macs
+        )?;
+        write!(f, "reduction   = {:>9.0}x", self.reduction)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Eq. 13 MAC ledger (mirrors python/compile/macs.py)
+// ---------------------------------------------------------------------------
+
+/// One accountable layer.
+#[derive(Debug, Clone)]
+pub enum Layer {
+    Conv {
+        name: String,
+        h_out: u64,
+        w_out: u64,
+        kh: u64,
+        kw: u64,
+        cin: u64,
+        cout: u64,
+    },
+    Dense {
+        name: String,
+        din: u64,
+        dout: u64,
+    },
+}
+
+impl Layer {
+    /// Eq. 13: MACs = Ho*Wo*Kh*Kw*Cin*Cout (dense: din*dout).
+    pub fn macs(&self) -> u64 {
+        match self {
+            Layer::Conv {
+                h_out,
+                w_out,
+                kh,
+                kw,
+                cin,
+                cout,
+                ..
+            } => h_out * w_out * kh * kw * cin * cout,
+            Layer::Dense { din, dout, .. } => din * dout,
+        }
+    }
+
+    pub fn params(&self) -> u64 {
+        match self {
+            Layer::Conv {
+                kh, kw, cin, cout, ..
+            } => kh * kw * cin * cout + cout,
+            Layer::Dense { din, dout, .. } => din * dout + dout,
+        }
+    }
+
+    pub fn name(&self) -> &str {
+        match self {
+            Layer::Conv { name, .. } | Layer::Dense { name, .. } => name,
+        }
+    }
+}
+
+/// The Fig.-5 student layer stack (mirrors `macs.student_layers`).
+pub fn student_layers() -> Vec<Layer> {
+    vec![
+        Layer::Conv { name: "conv1".into(), h_out: 32, w_out: 32, kh: 3, kw: 3, cin: 1, cout: 32 },
+        Layer::Conv { name: "conv2".into(), h_out: 16, w_out: 16, kh: 3, kw: 3, cin: 32, cout: 128 },
+        Layer::Conv { name: "conv3".into(), h_out: 8, w_out: 8, kh: 3, kw: 3, cin: 128, cout: 256 },
+        Layer::Conv { name: "conv4".into(), h_out: 7, w_out: 7, kh: 2, kw: 2, cin: 256, cout: 16 },
+        Layer::Dense { name: "head".into(), din: 784, dout: 10 },
+    ]
+}
+
+/// Total MACs over a stack.
+pub fn total_macs(layers: &[Layer]) -> u64 {
+    layers.iter().map(Layer::macs).sum()
+}
+
+/// Sparsity-skipped effective MACs (§V.A's 80%-sparsity argument).
+pub fn effective_macs(macs: u64, sparsity: f64) -> u64 {
+    (macs as f64 * (1.0 - sparsity)).round() as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eq14_backend_energy_matches_paper() {
+        let m = EnergyModel::default();
+        // 10 x 784 x 185 fJ = 1.4504 nJ
+        assert!((m.backend_nj(N_TEMPLATES, N_FEATURES) - E_BACKEND_NJ).abs() < 0.01);
+    }
+
+    #[test]
+    fn frontend_energy_matches_published_arithmetic() {
+        let m = EnergyModel::default();
+        let e = m.frontend_nj(FRONTEND_OPS_ACAM);
+        assert!((e - E_FRONTEND_NJ).abs() / E_FRONTEND_NJ < 0.005, "{e}");
+        // ... and the strict-pJ variant is exactly 1000x that.
+        let strict = m.frontend_strict_pj_nj(FRONTEND_OPS_ACAM);
+        assert!((strict / e - 1000.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn teacher_energy_matches_published() {
+        let m = EnergyModel::default();
+        let e = m.teacher_uj(TEACHER_COLOR.macs);
+        assert!((e - E_TEACHER_UJ).abs() / E_TEACHER_UJ < 0.005, "{e}");
+    }
+
+    #[test]
+    fn reduction_matches_paper_headline() {
+        let r = EnergyModel::default().report(Scale::Paper);
+        // Published: 792x (78.06 uJ vs 97.52 nJ; exact division gives ~800 —
+        // the paper rounds). Assert within 2% of 800 and above 780.
+        assert!(r.reduction > 780.0 && r.reduction < 820.0, "{}", r.reduction);
+        assert!((r.e_total_nj - E_TOTAL_NJ).abs() / E_TOTAL_NJ < 0.005);
+    }
+
+    #[test]
+    fn softmax_head_constant() {
+        let head = &student_layers()[4];
+        assert_eq!(head.params(), SOFTMAX_HEAD_OPS);
+        assert_eq!(FRONTEND_OPS_ACAM, STUDENT_OPT.macs - SOFTMAX_HEAD_OPS);
+    }
+
+    #[test]
+    fn eq13_layer_macs() {
+        let layers = student_layers();
+        assert_eq!(layers[0].macs(), 32 * 32 * 9 * 32);
+        assert_eq!(layers[1].macs(), 16 * 16 * 9 * 32 * 128);
+        assert_eq!(layers[3].macs(), 49 * 4 * 256 * 16);
+    }
+
+    #[test]
+    fn effective_macs_rounds() {
+        assert_eq!(effective_macs(23_785_120, 0.80), 4_757_024);
+        assert_eq!(effective_macs(1000, 0.8), 200);
+    }
+
+    #[test]
+    fn student_sparsity_relation() {
+        // Paper: optimised student MACs = 20% of base MACs.
+        assert_eq!(
+            effective_macs(STUDENT_BASE.macs, SPARSITY),
+            STUDENT_OPT.macs
+        );
+    }
+
+    #[test]
+    fn as_built_scale_plumbs_through() {
+        let m = EnergyModel::default();
+        let r = m.report(Scale::AsBuilt {
+            frontend_ops: 1000,
+            teacher_macs: 1_000_000,
+            n_templates: 10,
+            n_features: 784,
+        });
+        assert_eq!(r.frontend_ops, 1000);
+        assert!(r.e_total_nj > r.e_backend_nj);
+        assert!(r.reduction > 1.0);
+    }
+}

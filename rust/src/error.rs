@@ -1,0 +1,47 @@
+//! Unified error type for the serving stack.
+
+use thiserror::Error;
+
+/// Library-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// All failure modes the coordinator can surface to a caller.
+#[derive(Error, Debug)]
+pub enum Error {
+    /// PJRT / XLA runtime failures (compile, execute, literal marshalling).
+    #[error("xla: {0}")]
+    Xla(String),
+
+    /// Artifact loading / validation problems (missing files, shape
+    /// mismatches between meta.json and the HLO modules).
+    #[error("artifact: {0}")]
+    Artifact(String),
+
+    /// Template store inconsistencies (wrong feature width, empty classes).
+    #[error("template: {0}")]
+    Template(String),
+
+    /// Request-level errors (bad image shape, closed channels, timeouts).
+    #[error("request: {0}")]
+    Request(String),
+
+    /// Configuration errors.
+    #[error("config: {0}")]
+    Config(String),
+
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+
+    #[error("json: {0}")]
+    Json(#[from] crate::jsonlite::ParseError),
+
+    /// Schema errors while extracting typed fields from parsed JSON.
+    #[error("schema: {0}")]
+    Schema(String),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}

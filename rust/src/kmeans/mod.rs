@@ -1,0 +1,248 @@
+//! k-means + silhouette substrate — the on-device mirror of the build-time
+//! clustering in `python/compile/templates.py`.
+//!
+//! The paper generates multi-template sets with k-means at training time; an
+//! edge deployment that adapts templates in the field (program-once-read-many
+//! RRAM still allows periodic re-programming maintenance windows) needs the
+//! same machinery on-device.  Used by `examples/acam_explore.rs` and the
+//! Table II bench to regenerate template sets from served feature maps.
+
+
+/// Result of one clustering run.
+#[derive(Debug, Clone)]
+pub struct Clustering {
+    /// Centroids, row-major `[k][dim]`.
+    pub centroids: Vec<Vec<f64>>,
+    /// Cluster index per input point.
+    pub assignment: Vec<usize>,
+    /// Sum of squared distances to assigned centroids.
+    pub inertia: f64,
+}
+
+fn sq_dist(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b.iter()).map(|(x, y)| (x - y) * (x - y)).sum()
+}
+
+/// k-means++ seeding (matches the Python implementation's scheme).
+fn kmeanspp(x: &[Vec<f64>], k: usize, rng: &mut crate::rng::Rng) -> Vec<Vec<f64>> {
+    let n = x.len();
+    let mut cents = vec![x[rng.below(n)].clone()];
+    while cents.len() < k {
+        let d2: Vec<f64> = x
+            .iter()
+            .map(|p| {
+                cents
+                    .iter()
+                    .map(|c| sq_dist(p, c))
+                    .fold(f64::INFINITY, f64::min)
+            })
+            .collect();
+        let total: f64 = d2.iter().sum();
+        if total <= 0.0 {
+            cents.push(x[rng.below(n)].clone());
+            continue;
+        }
+        let mut r = rng.u01() * total;
+        let mut pick = n - 1;
+        for (i, &d) in d2.iter().enumerate() {
+            r -= d;
+            if r <= 0.0 {
+                pick = i;
+                break;
+            }
+        }
+        cents.push(x[pick].clone());
+    }
+    cents
+}
+
+/// Lloyd's algorithm with k-means++ seeding and restarts; empty clusters are
+/// re-seeded at the worst-fit point.
+pub fn kmeans(x: &[Vec<f64>], k: usize, iters: usize, restarts: usize, seed: u64) -> Clustering {
+    assert!(!x.is_empty() && k >= 1, "kmeans needs data and k >= 1");
+    let k = k.min(x.len());
+    let mut rng = crate::rng::Rng::new(seed);
+    let mut best: Option<Clustering> = None;
+    for _ in 0..restarts.max(1) {
+        let mut cents = kmeanspp(x, k, &mut rng);
+        let mut assign = vec![0usize; x.len()];
+        for _ in 0..iters {
+            let mut changed = false;
+            // Assignment step (and track the worst-fit point for re-seeding).
+            let mut worst = (0usize, 0f64);
+            for (i, p) in x.iter().enumerate() {
+                let (mut bi, mut bd) = (0usize, f64::INFINITY);
+                for (c, cent) in cents.iter().enumerate() {
+                    let d = sq_dist(p, cent);
+                    if d < bd {
+                        bd = d;
+                        bi = c;
+                    }
+                }
+                if assign[i] != bi {
+                    assign[i] = bi;
+                    changed = true;
+                }
+                if bd > worst.1 {
+                    worst = (i, bd);
+                }
+            }
+            // Update step.
+            let dim = x[0].len();
+            let mut sums = vec![vec![0f64; dim]; k];
+            let mut counts = vec![0usize; k];
+            for (p, &a) in x.iter().zip(assign.iter()) {
+                counts[a] += 1;
+                for (s, v) in sums[a].iter_mut().zip(p.iter()) {
+                    *s += v;
+                }
+            }
+            for c in 0..k {
+                if counts[c] == 0 {
+                    cents[c] = x[worst.0].clone();
+                } else {
+                    for (s, cv) in sums[c].iter().zip(cents[c].iter_mut()) {
+                        *cv = s / counts[c] as f64;
+                    }
+                }
+            }
+            if !changed {
+                break;
+            }
+        }
+        let inertia: f64 = x
+            .iter()
+            .zip(assign.iter())
+            .map(|(p, &a)| sq_dist(p, &cents[a]))
+            .sum();
+        if best.as_ref().map_or(true, |b| inertia < b.inertia) {
+            best = Some(Clustering {
+                centroids: cents,
+                assignment: assign,
+                inertia,
+            });
+        }
+    }
+    best.unwrap()
+}
+
+/// Mean silhouette score over (a capped subsample of) the data; returns 0
+/// for a single cluster, values in [-1, 1] otherwise.
+pub fn silhouette(x: &[Vec<f64>], assignment: &[usize], sample_cap: usize, seed: u64) -> f64 {
+    let ks: std::collections::BTreeSet<usize> = assignment.iter().copied().collect();
+    if ks.len() < 2 {
+        return 0.0;
+    }
+    let mut rng = crate::rng::Rng::new(seed);
+    let mut idx: Vec<usize> = (0..x.len()).collect();
+    // Fisher-Yates prefix shuffle for the subsample.
+    for i in 0..idx.len().min(sample_cap) {
+        let j = i + rng.below(idx.len() - i);
+        idx.swap(i, j);
+    }
+    idx.truncate(sample_cap.min(x.len()));
+
+    let mut total = 0f64;
+    for &i in &idx {
+        let own = assignment[i];
+        let mut a_sum = 0f64;
+        let mut a_n = 0usize;
+        let mut b_per: std::collections::BTreeMap<usize, (f64, usize)> = Default::default();
+        for (j, p) in x.iter().enumerate() {
+            let d = sq_dist(&x[i], p).sqrt();
+            if assignment[j] == own {
+                if j != i {
+                    a_sum += d;
+                    a_n += 1;
+                }
+            } else {
+                let e = b_per.entry(assignment[j]).or_insert((0.0, 0));
+                e.0 += d;
+                e.1 += 1;
+            }
+        }
+        let a = if a_n > 0 { a_sum / a_n as f64 } else { 0.0 };
+        let b = b_per
+            .values()
+            .map(|(s, n)| s / *n as f64)
+            .fold(f64::INFINITY, f64::min);
+        let denom = a.max(b);
+        total += if denom == 0.0 { 0.0 } else { (b - a) / denom };
+    }
+    total / idx.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn blob(center: f64, n: usize, dim: usize, seed: u64) -> Vec<Vec<f64>> {
+        let mut rng = crate::rng::Rng::new(seed);
+        (0..n)
+            .map(|_| (0..dim).map(|_| center + rng.u01() - 0.5).collect())
+            .collect()
+    }
+
+    #[test]
+    fn separates_two_blobs() {
+        let mut x = blob(5.0, 40, 4, 1);
+        x.extend(blob(-5.0, 40, 4, 2));
+        let c = kmeans(&x, 2, 50, 3, 0);
+        let first = c.assignment[0];
+        assert!(c.assignment[..40].iter().all(|&a| a == first));
+        assert!(c.assignment[40..].iter().all(|&a| a != first));
+    }
+
+    #[test]
+    fn k1_is_mean() {
+        let x = blob(0.0, 30, 3, 3);
+        let c = kmeans(&x, 1, 10, 1, 0);
+        for d in 0..3 {
+            let mean: f64 = x.iter().map(|p| p[d]).sum::<f64>() / x.len() as f64;
+            assert!((c.centroids[0][d] - mean).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn inertia_nonincreasing_in_k() {
+        let mut x = blob(3.0, 30, 4, 4);
+        x.extend(blob(-3.0, 30, 4, 5));
+        x.extend(blob(0.0, 30, 4, 6));
+        let i1 = kmeans(&x, 1, 30, 3, 0).inertia;
+        let i2 = kmeans(&x, 2, 30, 3, 0).inertia;
+        let i3 = kmeans(&x, 3, 30, 3, 0).inertia;
+        assert!(i1 >= i2 && i2 >= i3);
+    }
+
+    #[test]
+    fn k_clamped_to_n() {
+        let x = blob(0.0, 3, 2, 7);
+        let c = kmeans(&x, 10, 5, 1, 0);
+        assert_eq!(c.centroids.len(), 3);
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let x = blob(1.0, 50, 3, 8);
+        let a = kmeans(&x, 3, 20, 2, 42);
+        let b = kmeans(&x, 3, 20, 2, 42);
+        assert_eq!(a.assignment, b.assignment);
+    }
+
+    #[test]
+    fn silhouette_separated_beats_random() {
+        let mut x = blob(4.0, 30, 3, 9);
+        x.extend(blob(-4.0, 30, 3, 10));
+        let good: Vec<usize> = (0..60).map(|i| usize::from(i >= 30)).collect();
+        let bad: Vec<usize> = (0..60).map(|i| i % 2).collect();
+        let sg = silhouette(&x, &good, 60, 0);
+        let sb = silhouette(&x, &bad, 60, 0);
+        assert!(sg > 0.5 && sg > sb, "good={sg} bad={sb}");
+    }
+
+    #[test]
+    fn silhouette_single_cluster_zero() {
+        let x = blob(0.0, 10, 2, 11);
+        assert_eq!(silhouette(&x, &vec![0; 10], 10, 0), 0.0);
+    }
+}

@@ -1,0 +1,46 @@
+//! # Hybrid Edge Classifier — Rust coordinator (Layer 3)
+//!
+//! Reproduction of *"A Hybrid Edge Classifier: Combining TinyML-Optimised CNN
+//! with RRAM-CMOS ACAM for Energy-Efficient Inference"* (Woodward et al.,
+//! 2025).
+//!
+//! The serving runtime is self-contained after `make artifacts`:
+//!
+//! * [`runtime`] loads AOT-compiled HLO text modules (the student CNN
+//!   front-end, lowered from JAX+Pallas) onto the PJRT CPU client and runs
+//!   them on the request hot path — Python is never invoked at runtime.
+//! * [`acam`] is a circuit-level behavioural simulator of the RRAM-CMOS
+//!   TXL-ACAM back-end (6T4R charging and 3T1R precharging cells, matchline
+//!   dynamics, sense amplifiers, analogue winner-take-all) standing in for
+//!   the paper's fabricated 180 nm hardware (DESIGN.md §Substitutions).
+//! * [`matching`] implements the paper's digital matching models (Eq. 8-12)
+//!   bit-exactly, including a packed 64-features-per-word popcount path.
+//! * [`coordinator`] owns the event loop: request router, dynamic batcher,
+//!   back-end dispatch, metrics.
+//! * [`energy`] is the Horowitz-constant energy ledger behind §V.D.
+//! * [`dataset`], [`templates`], [`kmeans`], [`config`] are supporting
+//!   substrates (synthetic workload generator mirrored from Python, template
+//!   store, on-device clustering, configuration).
+
+//!
+//! Offline-environment note: only the `xla` crate's dependency tree is
+//! vendored, so [`jsonlite`] (JSON), [`rng`] (SplitMix64 + Box-Muller) and
+//! [`benchkit`] (timing harness) replace serde / rand / criterion, the
+//! serving loop is built on `std::thread` + bounded channels instead of
+//! tokio, and the CLI is hand-parsed instead of clap.
+
+pub mod acam;
+pub mod benchkit;
+pub mod config;
+pub mod coordinator;
+pub mod dataset;
+pub mod energy;
+pub mod error;
+pub mod jsonlite;
+pub mod kmeans;
+pub mod matching;
+pub mod rng;
+pub mod runtime;
+pub mod templates;
+
+pub use error::{Error, Result};

@@ -1,0 +1,268 @@
+//! `hec` — the hybrid edge classifier launcher (hand-rolled CLI; clap is
+//! unavailable offline).
+//!
+//! Subcommands:
+//! * `serve`     — run the serving loop against a synthetic request stream
+//!   and print throughput/latency/energy metrics;
+//! * `classify`  — classify a few synthetic samples and print predictions;
+//! * `eval`      — accuracy + confusion matrix of the deployed backend over
+//!   a labelled test workload (Fig. 6 / Fig. 7 data);
+//! * `energy`    — the §V.D energy report at paper scale and as-built scale;
+//! * `acam-sim`  — ACAM variability sweep (accuracy vs device non-ideality);
+//! * `info`      — artifact inventory and metadata.
+//!
+//! Global flags: `--artifacts DIR` `--backend acam|fc|sim|softmax`
+//! `--templates K` `--variability LEVEL` `--config serve.json`.
+
+use std::collections::HashMap;
+
+use hec::config::{Backend, ServeConfig};
+use hec::coordinator::{Pipeline, Server};
+use hec::dataset::{SyntheticDataset, CLASS_NAMES};
+use hec::energy::{EnergyModel, Scale};
+use hec::runtime::Meta;
+
+const USAGE: &str = "usage: hec [--artifacts DIR] [--backend acam|fc|sim|softmax] \
+[--templates K] [--variability L] [--frontend fast|pallas] [--config FILE] \
+<serve|classify|eval|energy|acam-sim|info> [--requests N] [--concurrency N] \
+[--count N] [--samples N] [--batch N] [--levels 0,1,2]";
+
+/// Minimal flag parser: `--key value` pairs plus one positional subcommand.
+struct Args {
+    cmd: String,
+    flags: HashMap<String, String>,
+}
+
+fn parse_args() -> Result<Args, String> {
+    let mut cmd = None;
+    let mut flags = HashMap::new();
+    let mut it = std::env::args().skip(1).peekable();
+    while let Some(a) = it.next() {
+        if let Some(key) = a.strip_prefix("--") {
+            let val = it
+                .next()
+                .ok_or_else(|| format!("flag --{key} needs a value"))?;
+            flags.insert(key.to_string(), val);
+        } else if cmd.is_none() {
+            cmd = Some(a);
+        } else {
+            return Err(format!("unexpected argument: {a}"));
+        }
+    }
+    Ok(Args {
+        cmd: cmd.ok_or_else(|| USAGE.to_string())?,
+        flags,
+    })
+}
+
+impl Args {
+    fn get<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T, String> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("bad value for --{key}: {v}")),
+        }
+    }
+}
+
+fn serve_config(args: &Args) -> anyhow::Result<ServeConfig> {
+    let mut cfg = match args.flags.get("config") {
+        Some(path) => ServeConfig::load(path)?,
+        None => ServeConfig::default(),
+    };
+    if let Some(dir) = args.flags.get("artifacts") {
+        cfg.artifacts_dir = dir.into();
+    }
+    if let Some(b) = args.flags.get("backend") {
+        cfg.backend = b.parse::<Backend>()?;
+    }
+    cfg.templates_per_class = args.get("templates", cfg.templates_per_class).map_err(anyhow::Error::msg)?;
+    if let Some(f) = args.flags.get("frontend") {
+        cfg.use_fast_frontend = match f.as_str() {
+            "fast" => true,
+            "pallas" => false,
+            other => anyhow::bail!("--frontend must be fast|pallas, got {other}"),
+        };
+    }
+    cfg.acam.variability_level = args.get("variability", cfg.acam.variability_level).map_err(anyhow::Error::msg)?;
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn test_workload(meta: &Meta, n: usize, seed: u64) -> (Vec<f32>, Vec<usize>) {
+    let ds = SyntheticDataset::new(seed, n, meta.norm.mean as f32, meta.norm.std as f32);
+    ds.batch(0, n)
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = match parse_args() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    };
+    let cfg = serve_config(&args)?;
+
+    match args.cmd.as_str() {
+        "info" => {
+            let meta = Meta::load(&cfg.artifacts_dir)?;
+            println!(
+                "dataset: {} (train={}, test={})",
+                meta.dataset.source, meta.dataset.train, meta.dataset.test
+            );
+            println!(
+                "features: {}  templates: {}  image: {}x{}",
+                meta.artifacts.n_features,
+                meta.artifacts.n_templates,
+                meta.artifacts.image_size,
+                meta.artifacts.image_size
+            );
+            println!(
+                "batch variants: {:?}  pallas: {}",
+                meta.artifacts.batch_sizes, meta.artifacts.use_pallas
+            );
+            println!(
+                "as-built sparsity: {:.3}  effective MACs: {}",
+                meta.macs.as_built.achieved_sparsity, meta.macs.as_built.student_effective
+            );
+            let mut rows: Vec<_> = meta.experiments.table1.iter().collect();
+            rows.sort_by_key(|(k, _)| (*k).clone());
+            for (name, row) in rows {
+                println!(
+                    "table1 {name:>14}: acc={:.4} params={} macs={}",
+                    row.accuracy, row.params, row.macs
+                );
+            }
+        }
+        "energy" => {
+            let model = EnergyModel::default();
+            println!("=== §V.D energy report (paper scale) ===");
+            println!("{}", model.report(Scale::Paper));
+            if let Ok(meta) = Meta::load(&cfg.artifacts_dir) {
+                println!("\n=== as-built scale ===");
+                println!(
+                    "{}",
+                    model.report(Scale::AsBuilt {
+                        frontend_ops: meta.macs.as_built.student_effective,
+                        teacher_macs: meta.macs.as_built.teacher_gray.macs,
+                        n_templates: meta.artifacts.n_templates as u64,
+                        n_features: meta.artifacts.n_features as u64,
+                    })
+                );
+            }
+        }
+        "classify" => {
+            let count: usize = args.get("count", 10).map_err(anyhow::Error::msg)?;
+            let mut pipeline = Pipeline::new(&cfg)?;
+            let (images, labels) = test_workload(&pipeline.meta, count, 999);
+            let img_len = pipeline.image_len();
+            for i in 0..count {
+                let res =
+                    pipeline.classify_batch(&images[i * img_len..(i + 1) * img_len], 1)?;
+                println!(
+                    "sample {i}: predicted={} ({}) truth={} energy={:.2} nJ",
+                    res[0].class, CLASS_NAMES[res[0].class], labels[i], res[0].energy_nj
+                );
+            }
+        }
+        "eval" => {
+            let samples: usize = args.get("samples", 600).map_err(anyhow::Error::msg)?;
+            let batch: usize = args.get("batch", 32).map_err(anyhow::Error::msg)?;
+            let mut pipeline = Pipeline::new(&cfg)?;
+            let (images, labels) = test_workload(&pipeline.meta, samples, 1_000_003);
+            let eval = pipeline.evaluate(&images, &labels, batch)?;
+            println!(
+                "backend={:?} k={} samples={}",
+                cfg.backend, cfg.templates_per_class, eval.n
+            );
+            println!("accuracy = {:.4}", eval.accuracy);
+            println!(
+                "energy   = {:.2} nJ total ({:.2} nJ / inference)",
+                eval.total_energy_nj,
+                eval.total_energy_nj / eval.n as f64
+            );
+            println!(
+                "wall     = {:.2} s ({:.0} inf/s)",
+                eval.wall_secs,
+                eval.n as f64 / eval.wall_secs
+            );
+            println!(
+                "per-class accuracy: {:?}",
+                eval.per_class_accuracy()
+                    .iter()
+                    .map(|a| (a * 100.0).round() / 100.0)
+                    .collect::<Vec<_>>()
+            );
+            println!("confusion:");
+            for row in &eval.confusion {
+                println!("  {row:?}");
+            }
+        }
+        "acam-sim" => {
+            let samples: usize = args.get("samples", 300).map_err(anyhow::Error::msg)?;
+            let levels_s = args
+                .flags
+                .get("levels")
+                .cloned()
+                .unwrap_or_else(|| "0,0.5,1,2,4".to_string());
+            let levels: Vec<f64> = levels_s
+                .split(',')
+                .filter_map(|s| s.trim().parse().ok())
+                .collect();
+            println!("{:>10} {:>10}", "level", "accuracy");
+            for level in levels {
+                let mut c = cfg.clone();
+                c.backend = Backend::AcamSim;
+                c.acam.variability_level = level;
+                let mut pipeline = Pipeline::new(&c)?;
+                let (images, labels) = test_workload(&pipeline.meta, samples, 1_000_003);
+                let eval = pipeline.evaluate(&images, &labels, 32)?;
+                println!("{level:>10.2} {:>10.4}", eval.accuracy);
+            }
+        }
+        "serve" => {
+            let requests: usize = args.get("requests", 2000).map_err(anyhow::Error::msg)?;
+            let concurrency: usize = args.get("concurrency", 64).map_err(anyhow::Error::msg)?;
+            let server = Server::start(cfg.clone())?;
+            let handle = server.handle.clone();
+            let meta = Meta::load(&cfg.artifacts_dir)?;
+            let (images, _) = test_workload(&meta, 256, 77);
+            let img_len = meta.artifacts.image_size * meta.artifacts.image_size;
+
+            let t0 = std::time::Instant::now();
+            let mut inflight = std::collections::VecDeque::new();
+            let mut done = 0usize;
+            let mut submitted = 0usize;
+            while done < requests {
+                while inflight.len() < concurrency && submitted < requests {
+                    let idx = submitted % 256;
+                    let img = images[idx * img_len..(idx + 1) * img_len].to_vec();
+                    match handle.submit(img) {
+                        Ok(rx) => {
+                            inflight.push_back(rx);
+                            submitted += 1;
+                        }
+                        Err(_) => break, // backpressure: drain one first
+                    }
+                }
+                if let Some(rx) = inflight.pop_front() {
+                    let _ = rx.recv();
+                    done += 1;
+                }
+            }
+            let secs = t0.elapsed().as_secs_f64();
+            println!("=== serving metrics ({requests} requests, concurrency {concurrency}) ===");
+            println!("{}", handle.metrics.snapshot());
+            println!("throughput = {:.0} req/s", requests as f64 / secs);
+            drop(handle);
+            server.shutdown();
+        }
+        other => {
+            eprintln!("unknown subcommand: {other}\n{USAGE}");
+            std::process::exit(2);
+        }
+    }
+    Ok(())
+}

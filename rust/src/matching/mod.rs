@@ -1,0 +1,246 @@
+//! Digital matching engines — bit-exact implementations of the paper's two
+//! pattern-matching models (Section II-D2) plus the Eq.-12 decision rule.
+//!
+//! Three interchangeable scorers:
+//! * [`feature_count_dense`] — Eq. 8 over 0/1 bytes, the readable reference;
+//! * [`feature_count_packed`] — the same scores via XOR + popcount on u64
+//!   words (64 features per word), the serving hot path;
+//! * [`similarity`] — Eq. 9-11 windowed distance + hit-ratio model.
+//!
+//! A property test (`prop_packed_equals_dense`) pins packed == dense, and
+//! `prop_binary_fc_sim_agree` pins the §V.B observation that in the binary
+//! domain feature-count and similarity argmax-coincide.
+
+use crate::templates::TemplateSet;
+
+/// Eq. 8: number of exactly-matching features, dense byte path.
+pub fn feature_count_dense(query: &[u8], template: &[u8]) -> u32 {
+    debug_assert_eq!(query.len(), template.len());
+    query
+        .iter()
+        .zip(template.iter())
+        .map(|(q, t)| u32::from(q == t))
+        .sum()
+}
+
+/// Eq. 8 for all templates in a set, dense path. Returns one score per row.
+pub fn feature_count_all_dense(query: &[u8], set: &TemplateSet) -> Vec<u32> {
+    set.templates
+        .iter()
+        .map(|t| feature_count_dense(query, t))
+        .collect()
+}
+
+/// Eq. 8 on packed words: matches = N - hamming(query, template).
+///
+/// `packed_query` must come from [`TemplateSet::pack_query`]; trailing pad
+/// bits are zero in both operands so they XOR to zero and never count as
+/// mismatches.
+pub fn feature_count_packed(
+    packed_query: &[u64],
+    packed_row: &[u64],
+    n_features: u32,
+) -> u32 {
+    debug_assert_eq!(packed_query.len(), packed_row.len());
+    let hamming: u32 = packed_query
+        .iter()
+        .zip(packed_row.iter())
+        .map(|(q, t)| (q ^ t).count_ones())
+        .sum();
+    n_features - hamming
+}
+
+/// Eq. 8 against every row of the packed template matrix.
+pub fn feature_count_all_packed(packed_query: &[u64], set: &TemplateSet) -> Vec<u32> {
+    let w = set.words_per_row;
+    let n = set.num_features() as u32;
+    set.packed
+        .chunks_exact(w)
+        .map(|row| feature_count_packed(packed_query, row, n))
+        .collect()
+}
+
+/// Eq. 9-11: similarity of a real-valued query against one window pair.
+pub fn similarity(query: &[f32], lo: &[f32], hi: &[f32], alpha: f32) -> f32 {
+    debug_assert_eq!(query.len(), lo.len());
+    debug_assert_eq!(query.len(), hi.len());
+    let mut dist = 0f64;
+    let mut hits = 0u32;
+    for ((&q, &l), &h) in query.iter().zip(lo.iter()).zip(hi.iter()) {
+        if q > h {
+            let d = (q - h) as f64;
+            dist += d * d;
+        } else if q < l {
+            let d = (l - q) as f64;
+            dist += d * d;
+        } else {
+            hits += 1;
+        }
+    }
+    let hit_ratio = hits as f64 / query.len() as f64;
+    (hit_ratio / (1.0 + alpha as f64 * dist)) as f32
+}
+
+/// Eq. 9-11 against every template window in a set.
+///
+/// `binary_domain` selects the `t ± 0.5` windows (for binary queries) versus
+/// the real-feature windows.
+pub fn similarity_all(
+    query: &[f32],
+    set: &TemplateSet,
+    alpha: f32,
+    binary_domain: bool,
+) -> Vec<f32> {
+    let (los, his) = if binary_domain {
+        (&set.bin_lo, &set.bin_hi)
+    } else {
+        (&set.lo, &set.hi)
+    };
+    los.iter()
+        .zip(his.iter())
+        .map(|(lo, hi)| similarity(query, lo, hi, alpha))
+        .collect()
+}
+
+/// Eq. 12 with multi-template support: per-class max over the class's
+/// templates, then argmax over classes. Ties break to the lower class id
+/// (stable, matching the numpy reference).
+pub fn classify<S: PartialOrd + Copy>(scores: &[S], class_of: &[usize], num_classes: usize) -> usize {
+    debug_assert_eq!(scores.len(), class_of.len());
+    let mut best: Vec<Option<S>> = vec![None; num_classes];
+    for (&s, &c) in scores.iter().zip(class_of.iter()) {
+        match best[c] {
+            Some(b) if b >= s => {}
+            _ => best[c] = Some(s),
+        }
+    }
+    let mut arg = 0;
+    let mut max: Option<S> = None;
+    for (c, b) in best.iter().enumerate() {
+        if let Some(v) = b {
+            if max.is_none() || *v > max.unwrap() {
+                max = Some(*v);
+                arg = c;
+            }
+        }
+    }
+    arg
+}
+
+/// Convenience: full binary feature-count classification (packed hot path).
+pub fn classify_feature_count(query_bits: &[u8], set: &TemplateSet, num_classes: usize) -> usize {
+    let packed = set.pack_query(query_bits);
+    let scores = feature_count_all_packed(&packed, set);
+    classify(&scores, &set.class_of, num_classes)
+}
+
+/// Convenience: full similarity classification (Eq. 9-12).
+pub fn classify_similarity(
+    query: &[f32],
+    set: &TemplateSet,
+    alpha: f32,
+    num_classes: usize,
+    binary_domain: bool,
+) -> usize {
+    let scores = similarity_all(query, set, alpha, binary_domain);
+    classify(&scores, &set.class_of, num_classes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::templates::pack_bits;
+
+    fn toy_set(templates: Vec<Vec<u8>>, class_of: Vec<usize>) -> TemplateSet {
+        let n = templates[0].len();
+        let w = n.div_ceil(64);
+        let packed = templates.iter().flat_map(|t| pack_bits(t, w)).collect();
+        let bin_lo = templates
+            .iter()
+            .map(|t| t.iter().map(|&b| b as f32 - 0.5).collect())
+            .collect();
+        let bin_hi = templates
+            .iter()
+            .map(|t| t.iter().map(|&b| b as f32 + 0.5).collect::<Vec<f32>>())
+            .collect();
+        TemplateSet {
+            packed,
+            words_per_row: w,
+            lo: vec![vec![0.0; n]; templates.len()],
+            hi: vec![vec![1.0; n]; templates.len()],
+            bin_lo,
+            bin_hi,
+            silhouette: vec![],
+            class_of,
+            templates,
+        }
+    }
+
+    #[test]
+    fn feature_count_extremes() {
+        let q = vec![1u8; 64];
+        assert_eq!(feature_count_dense(&q, &vec![1u8; 64]), 64);
+        assert_eq!(feature_count_dense(&q, &vec![0u8; 64]), 0);
+    }
+
+    #[test]
+    fn packed_equals_dense_on_odd_width() {
+        // 100 features: crosses a word boundary with 28 pad bits.
+        let q: Vec<u8> = (0..100).map(|i| (i % 3 == 0) as u8).collect();
+        let t: Vec<u8> = (0..100).map(|i| (i % 7 == 0) as u8).collect();
+        let set = toy_set(vec![t.clone()], vec![0]);
+        let dense = feature_count_dense(&q, &t);
+        let packed = feature_count_all_packed(&set.pack_query(&q), &set)[0];
+        assert_eq!(dense, packed);
+    }
+
+    #[test]
+    fn similarity_inside_window_is_one() {
+        let q = vec![0.5f32; 10];
+        let lo = vec![0.0f32; 10];
+        let hi = vec![1.0f32; 10];
+        assert!((similarity(&q, &lo, &hi, 0.5) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn similarity_distance_penalty() {
+        let lo = vec![0.0f32; 4];
+        let hi = vec![1.0f32; 4];
+        let near = similarity(&[1.1, 0.5, 0.5, 0.5], &lo, &hi, 1.0);
+        let far = similarity(&[3.0, 0.5, 0.5, 0.5], &lo, &hi, 1.0);
+        assert!(near > far);
+        // Hit ratio identical (3/4), so ordering is purely the D term.
+    }
+
+    #[test]
+    fn similarity_below_window() {
+        let s = similarity(&[-1.0], &[0.0], &[1.0], 1.0);
+        assert!((s - 0.0).abs() < 1e-6); // H=0 -> similarity 0 regardless of D
+    }
+
+    #[test]
+    fn classify_per_class_max() {
+        // class 0 templates score (1, 5); class 1 templates (3, 4).
+        let scores = [1u32, 5, 3, 4];
+        let class_of = [0, 0, 1, 1];
+        assert_eq!(classify(&scores, &class_of, 2), 0);
+    }
+
+    #[test]
+    fn classify_tie_breaks_low() {
+        let scores = [2u32, 2];
+        assert_eq!(classify(&scores, &[0, 1], 2), 0);
+    }
+
+    #[test]
+    fn end_to_end_binary_classification() {
+        let t0 = vec![1u8; 32];
+        let t1 = vec![0u8; 32];
+        let set = toy_set(vec![t0, t1], vec![0, 1]);
+        let mut q = vec![1u8; 32];
+        q[0] = 0; // still closest to t0
+        assert_eq!(classify_feature_count(&q, &set, 2), 0);
+        let qf: Vec<f32> = q.iter().map(|&b| b as f32).collect();
+        assert_eq!(classify_similarity(&qf, &set, 0.05, 2, true), 0);
+    }
+}

@@ -1,0 +1,329 @@
+//! meta.json — the build-time pipeline's record of shapes, normalisation,
+//! metrics and experiment data, consumed by the coordinator and benches.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::jsonlite::{self, Value};
+
+#[derive(Debug, Clone)]
+pub struct Norm {
+    pub mean: f64,
+    pub std: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct DatasetInfo {
+    pub train: usize,
+    pub test: usize,
+    pub source: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactsInfo {
+    pub batch_sizes: Vec<usize>,
+    pub n_features: usize,
+    pub n_templates: usize,
+    pub image_size: usize,
+    pub use_pallas: bool,
+}
+
+#[derive(Debug, Clone)]
+pub struct Table1Row {
+    pub accuracy: f64,
+    pub f1: f64,
+    pub precision: f64,
+    pub recall: f64,
+    pub params: u64,
+    pub macs: u64,
+}
+
+#[derive(Debug, Clone)]
+pub struct MatchingModes {
+    pub feature_count_acc: f64,
+    pub similarity_binary_acc: f64,
+    pub agreement: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct Experiments {
+    pub table1: HashMap<String, Table1Row>,
+    /// templates-per-class -> feature-count accuracy (Table II).
+    pub table2_multi_template: HashMap<usize, f64>,
+    /// "mean"/"median" -> downstream matching accuracy (Fig. 1).
+    pub fig1_threshold_accuracy: HashMap<String, f64>,
+    pub fig6_confusion: Vec<Vec<u64>>,
+    pub fig7_per_class_accuracy: Vec<f64>,
+    pub matching_modes: MatchingModes,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelSummary {
+    pub macs: u64,
+    pub params: u64,
+}
+
+#[derive(Debug, Clone)]
+pub struct AsBuilt {
+    pub student: ModelSummary,
+    pub teacher_gray: ModelSummary,
+    pub teacher_color: ModelSummary,
+    /// Sparsity-skipped MACs of the pruned conv stack (head excluded).
+    pub student_effective: u64,
+    /// Dense-head ops (removed by the ACAM; paid by the softmax baseline).
+    pub head_ops: u64,
+    pub student_params_actual: u64,
+    pub achieved_sparsity: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct MacsInfo {
+    pub as_built: AsBuilt,
+}
+
+/// Parsed meta.json (the fields the runtime needs; the raw document keeps
+/// the training log and config for humans).
+#[derive(Debug, Clone)]
+pub struct Meta {
+    pub norm: Norm,
+    pub dataset: DatasetInfo,
+    pub artifacts: ArtifactsInfo,
+    pub experiments: Experiments,
+    pub macs: MacsInfo,
+}
+
+fn need<'a>(v: Option<&'a Value>, what: &str) -> Result<&'a Value> {
+    v.ok_or_else(|| Error::Schema(format!("meta.json: missing {what}")))
+}
+
+fn num(v: &Value, what: &str) -> Result<f64> {
+    v.as_f64()
+        .ok_or_else(|| Error::Schema(format!("meta.json: {what} must be a number")))
+}
+
+fn summary(v: &Value, what: &str) -> Result<ModelSummary> {
+    Ok(ModelSummary {
+        macs: num(need(v.get("macs"), what)?, what)? as u64,
+        params: num(need(v.get("params"), what)?, what)? as u64,
+    })
+}
+
+impl Meta {
+    pub fn load<P: AsRef<Path>>(artifacts_dir: P) -> Result<Self> {
+        let path = artifacts_dir.as_ref().join("meta.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| Error::Artifact(format!("cannot read {}: {e}", path.display())))?;
+        Self::parse(&text)
+    }
+
+    /// Parse meta.json text (exposed for tests).
+    pub fn parse(text: &str) -> Result<Self> {
+        let doc = jsonlite::parse(text)?;
+
+        let norm_v = need(doc.get("norm"), "norm")?;
+        let norm = Norm {
+            mean: num(need(norm_v.get("mean"), "norm.mean")?, "norm.mean")?,
+            std: num(need(norm_v.get("std"), "norm.std")?, "norm.std")?,
+        };
+
+        let ds = need(doc.get("dataset"), "dataset")?;
+        let dataset = DatasetInfo {
+            train: num(need(ds.get("train"), "dataset.train")?, "train")? as usize,
+            test: num(need(ds.get("test"), "dataset.test")?, "test")? as usize,
+            source: need(ds.get("source"), "dataset.source")?
+                .as_str()
+                .unwrap_or("unknown")
+                .to_string(),
+        };
+
+        let art = need(doc.get("artifacts"), "artifacts")?;
+        let batch_sizes: Vec<usize> = need(art.get("batch_sizes"), "batch_sizes")?
+            .as_array()
+            .ok_or_else(|| Error::Schema("batch_sizes must be an array".into()))?
+            .iter()
+            .filter_map(Value::as_usize)
+            .collect();
+        if batch_sizes.is_empty() {
+            return Err(Error::Artifact("meta.json has no batch sizes".into()));
+        }
+        let artifacts = ArtifactsInfo {
+            batch_sizes,
+            n_features: num(need(art.get("n_features"), "n_features")?, "n_features")? as usize,
+            n_templates: num(need(art.get("n_templates"), "n_templates")?, "n_templates")?
+                as usize,
+            image_size: num(need(art.get("image_size"), "image_size")?, "image_size")? as usize,
+            use_pallas: need(art.get("use_pallas"), "use_pallas")?
+                .as_bool()
+                .unwrap_or(false),
+        };
+
+        let exp = need(doc.get("experiments"), "experiments")?;
+        let mut table1 = HashMap::new();
+        for (name, row) in need(exp.get("table1"), "table1")?
+            .as_object()
+            .ok_or_else(|| Error::Schema("table1 must be an object".into()))?
+        {
+            table1.insert(
+                name.clone(),
+                Table1Row {
+                    accuracy: num(need(row.get("accuracy"), "accuracy")?, "accuracy")?,
+                    f1: num(need(row.get("f1"), "f1")?, "f1")?,
+                    precision: num(need(row.get("precision"), "precision")?, "precision")?,
+                    recall: num(need(row.get("recall"), "recall")?, "recall")?,
+                    params: num(need(row.get("params"), "params")?, "params")? as u64,
+                    macs: num(need(row.get("macs"), "macs")?, "macs")? as u64,
+                },
+            );
+        }
+        let mut table2 = HashMap::new();
+        for (k, v) in need(exp.get("table2_multi_template"), "table2")?
+            .as_object()
+            .ok_or_else(|| Error::Schema("table2 must be an object".into()))?
+        {
+            if let (Ok(kk), Some(acc)) = (k.parse::<usize>(), v.as_f64()) {
+                table2.insert(kk, acc);
+            }
+        }
+        let mut fig1 = HashMap::new();
+        for (k, v) in need(exp.get("fig1_threshold_accuracy"), "fig1")?
+            .as_object()
+            .ok_or_else(|| Error::Schema("fig1 must be an object".into()))?
+        {
+            if let Some(acc) = v.as_f64() {
+                fig1.insert(k.clone(), acc);
+            }
+        }
+        let fig6: Vec<Vec<u64>> = need(exp.get("fig6_confusion"), "fig6")?
+            .as_array()
+            .ok_or_else(|| Error::Schema("fig6 must be a matrix".into()))?
+            .iter()
+            .map(|row| {
+                row.as_array()
+                    .map(|r| r.iter().filter_map(Value::as_u64).collect())
+                    .unwrap_or_default()
+            })
+            .collect();
+        let fig7: Vec<f64> = need(exp.get("fig7_per_class_accuracy"), "fig7")?
+            .as_array()
+            .ok_or_else(|| Error::Schema("fig7 must be an array".into()))?
+            .iter()
+            .filter_map(Value::as_f64)
+            .collect();
+        let mm = need(exp.get("matching_modes"), "matching_modes")?;
+        let matching_modes = MatchingModes {
+            feature_count_acc: num(need(mm.get("feature_count_acc"), "fc acc")?, "fc")?,
+            similarity_binary_acc: num(need(mm.get("similarity_binary_acc"), "sim acc")?, "sim")?,
+            agreement: num(need(mm.get("agreement"), "agreement")?, "agreement")?,
+        };
+
+        let ab = need(doc.at(&["macs", "as_built"]), "macs.as_built")?;
+        let as_built = AsBuilt {
+            student: summary(need(ab.get("student"), "student")?, "student")?,
+            teacher_gray: summary(need(ab.get("teacher_gray"), "teacher_gray")?, "teacher_gray")?,
+            teacher_color: summary(
+                need(ab.get("teacher_color"), "teacher_color")?,
+                "teacher_color",
+            )?,
+            student_effective: num(
+                need(ab.get("student_effective"), "student_effective")?,
+                "student_effective",
+            )? as u64,
+            head_ops: ab
+                .get("head_ops")
+                .and_then(Value::as_u64)
+                .unwrap_or(7_850),
+            student_params_actual: num(
+                need(ab.get("student_params_actual"), "student_params_actual")?,
+                "student_params_actual",
+            )? as u64,
+            achieved_sparsity: num(
+                need(ab.get("achieved_sparsity"), "achieved_sparsity")?,
+                "achieved_sparsity",
+            )?,
+        };
+
+        Ok(Meta {
+            norm,
+            dataset,
+            artifacts,
+            experiments: Experiments {
+                table1,
+                table2_multi_template: table2,
+                fig1_threshold_accuracy: fig1,
+                fig6_confusion: fig6,
+                fig7_per_class_accuracy: fig7,
+                matching_modes,
+            },
+            macs: MacsInfo { as_built },
+        })
+    }
+
+    /// Smallest exported batch size >= n (or the largest available).
+    pub fn batch_for(&self, n: usize) -> usize {
+        let mut sizes = self.artifacts.batch_sizes.clone();
+        sizes.sort_unstable();
+        for &b in &sizes {
+            if b >= n {
+                return b;
+            }
+        }
+        *sizes.last().unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const TOY: &str = r#"{
+        "norm": {"mean": 0.5, "std": 0.25},
+        "dataset": {"train": 100, "test": 50, "source": "synthetic"},
+        "artifacts": {"batch_sizes": [1, 8, 32], "n_features": 784,
+                      "n_templates": 10, "image_size": 32, "use_pallas": true},
+        "experiments": {
+            "table1": {"teacher_gray": {"accuracy": 0.9, "f1": 0.9,
+                "precision": 0.9, "recall": 0.9, "params": 100, "macs": 1000}},
+            "table2_multi_template": {"1": 0.7, "2": 0.71, "3": 0.715},
+            "fig1_threshold_accuracy": {"mean": 0.7, "median": 0.68},
+            "fig6_confusion": [[5, 1], [2, 4]],
+            "fig7_per_class_accuracy": [0.83, 0.66],
+            "matching_modes": {"feature_count_acc": 0.7,
+                "similarity_binary_acc": 0.7, "agreement": 1.0}
+        },
+        "macs": {"as_built": {
+            "student": {"macs": 200, "params": 20, "layers": []},
+            "teacher_gray": {"macs": 2000, "params": 200},
+            "teacher_color": {"macs": 2100, "params": 210},
+            "student_effective": 40,
+            "student_params_actual": 20,
+            "achieved_sparsity": 0.8
+        }}
+    }"#;
+
+    #[test]
+    fn parses_toy_meta() {
+        let m = Meta::parse(TOY).unwrap();
+        assert_eq!(m.norm.mean, 0.5);
+        assert_eq!(m.artifacts.batch_sizes, vec![1, 8, 32]);
+        assert_eq!(m.experiments.table2_multi_template[&2], 0.71);
+        assert_eq!(m.experiments.fig6_confusion[1][0], 2);
+        assert_eq!(m.macs.as_built.student_effective, 40);
+        assert_eq!(m.experiments.table1["teacher_gray"].macs, 1000);
+    }
+
+    #[test]
+    fn batch_for_picks_smallest_fit() {
+        let m = Meta::parse(TOY).unwrap();
+        assert_eq!(m.batch_for(1), 1);
+        assert_eq!(m.batch_for(2), 8);
+        assert_eq!(m.batch_for(9), 32);
+        assert_eq!(m.batch_for(100), 32);
+    }
+
+    #[test]
+    fn missing_field_is_schema_error() {
+        let r = Meta::parse(r#"{"norm": {"mean": 1.0}}"#);
+        assert!(r.is_err());
+    }
+}

@@ -1,0 +1,168 @@
+//! Parameter sidecar loader.
+//!
+//! Exported entry points take their weights as runtime arguments (the
+//! mlir->XLA conversion in the build toolchain corrupts large baked
+//! constants — see `python/compile/aot.py::export_parameterized`).  Each
+//! parameterized artifact `<name>.hlo.txt` ships with:
+//!
+//! * `<name>.params.json` — manifest: array shapes in argument order;
+//! * `<name>.params.bin`  — the raw little-endian f32 payload.
+//!
+//! The runtime uploads every array once as a device-resident PJRT buffer at
+//! load time and appends the buffers to each execute call.
+
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::jsonlite::{self, Value};
+
+/// One parameter array: shape + f32 data.
+#[derive(Debug, Clone)]
+pub struct ParamArray {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl ParamArray {
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Load the `<prefix>.params.{json,bin}` sidecar pair.  Returns an empty
+/// vector when no manifest exists (constant-free artifacts like the
+/// matchers).
+pub fn load_params(dir: &Path, name: &str) -> Result<Vec<ParamArray>> {
+    let manifest_path = dir.join(format!("{name}.params.json"));
+    if !manifest_path.is_file() {
+        return Ok(Vec::new());
+    }
+    let manifest = jsonlite::parse(&std::fs::read_to_string(&manifest_path)?)?;
+    let bin = std::fs::read(dir.join(format!("{name}.params.bin")))?;
+    if bin.len() % 4 != 0 {
+        return Err(Error::Artifact(format!(
+            "{name}.params.bin length {} is not a multiple of 4",
+            bin.len()
+        )));
+    }
+    let floats: Vec<f32> = bin
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+
+    let arrays = manifest
+        .get("arrays")
+        .and_then(Value::as_array)
+        .ok_or_else(|| Error::Schema(format!("{name}.params.json: missing 'arrays'")))?;
+    let total = manifest
+        .get("total")
+        .and_then(Value::as_usize)
+        .unwrap_or(floats.len());
+    if total != floats.len() {
+        return Err(Error::Artifact(format!(
+            "{name}.params.bin holds {} floats, manifest says {total}",
+            floats.len()
+        )));
+    }
+
+    let mut out = Vec::with_capacity(arrays.len());
+    for (i, a) in arrays.iter().enumerate() {
+        let shape: Vec<usize> = a
+            .get("shape")
+            .and_then(Value::as_array)
+            .ok_or_else(|| Error::Schema(format!("{name}: array {i} missing shape")))?
+            .iter()
+            .map(|v| {
+                v.as_usize()
+                    .ok_or_else(|| Error::Schema(format!("{name}: bad dim in array {i}")))
+            })
+            .collect::<Result<_>>()?;
+        let offset = a
+            .get("offset")
+            .and_then(Value::as_usize)
+            .ok_or_else(|| Error::Schema(format!("{name}: array {i} missing offset")))?;
+        let len: usize = shape.iter().product();
+        if offset + len > floats.len() {
+            return Err(Error::Artifact(format!(
+                "{name}: array {i} spans past the end of the payload"
+            )));
+        }
+        out.push(ParamArray {
+            shape,
+            data: floats[offset..offset + len].to_vec(),
+        });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scratch(tag: &str) -> std::path::PathBuf {
+        let p = std::env::temp_dir().join(format!("hec-params-{tag}-{}", std::process::id()));
+        std::fs::create_dir_all(&p).unwrap();
+        p
+    }
+
+    fn write_sidecar(dir: &Path, name: &str, arrays: &[(&[usize], &[f32])]) {
+        let mut bin: Vec<u8> = Vec::new();
+        let mut manifest = String::from("{\"arrays\":[");
+        let mut offset = 0usize;
+        for (i, (shape, data)) in arrays.iter().enumerate() {
+            if i > 0 {
+                manifest.push(',');
+            }
+            manifest.push_str(&format!(
+                "{{\"shape\":{:?},\"offset\":{offset}}}",
+                shape.to_vec()
+            ));
+            for v in *data {
+                bin.extend_from_slice(&v.to_le_bytes());
+            }
+            offset += data.len();
+        }
+        manifest.push_str(&format!("],\"total\":{offset}}}"));
+        std::fs::write(dir.join(format!("{name}.params.json")), manifest).unwrap();
+        std::fs::write(dir.join(format!("{name}.params.bin")), bin).unwrap();
+    }
+
+    #[test]
+    fn missing_manifest_is_empty() {
+        let dir = scratch("none");
+        assert!(load_params(&dir, "nope").unwrap().is_empty());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn roundtrip_two_arrays() {
+        let dir = scratch("two");
+        write_sidecar(
+            &dir,
+            "m",
+            &[(&[2, 3], &[1., 2., 3., 4., 5., 6.]), (&[2], &[7., 8.])],
+        );
+        let ps = load_params(&dir, "m").unwrap();
+        assert_eq!(ps.len(), 2);
+        assert_eq!(ps[0].shape, vec![2, 3]);
+        assert_eq!(ps[0].data, vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(ps[1].data, vec![7., 8.]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn truncated_payload_is_error() {
+        let dir = scratch("trunc");
+        write_sidecar(&dir, "m", &[(&[4], &[1., 2., 3., 4.])]);
+        // Chop the bin file.
+        let bin_path = dir.join("m.params.bin");
+        let bin = std::fs::read(&bin_path).unwrap();
+        std::fs::write(&bin_path, &bin[..8]).unwrap();
+        assert!(load_params(&dir, "m").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,362 @@
+//! Template store: loads, validates and packs `artifacts/templates.json`.
+//!
+//! The store carries, per k in {1, 2, 3} (Table II):
+//! * binary templates (the patterns programmed into the ACAM),
+//! * real-feature matching windows `[lo, hi]` (Eq. 9 bounds / RRAM targets),
+//! * binary-domain windows (`t ± 0.5`) for the similarity model on binary
+//!   queries,
+//! * the owning class of each template (Eq. 12 per-class max).
+//!
+//! Binary templates are additionally packed into u64 words (64 features per
+//! word) for the popcount fast path in [`crate::matching`].
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::jsonlite::{self, Value};
+
+/// One template set (a fixed `templates_per_class`).
+#[derive(Debug, Clone)]
+pub struct TemplateSet {
+    /// Binary templates, row-major `[m][n]` with values 0/1.
+    pub templates: Vec<Vec<u8>>,
+    /// Packed rows: `words_per_row` u64s per template, LSB-first bit order.
+    pub packed: Vec<u64>,
+    pub words_per_row: usize,
+    /// Real-feature windows (Eq. 9 bounds).
+    pub lo: Vec<Vec<f32>>,
+    pub hi: Vec<Vec<f32>>,
+    /// Binary-domain windows (t ± 0.5).
+    pub bin_lo: Vec<Vec<f32>>,
+    pub bin_hi: Vec<Vec<f32>>,
+    /// Owning class per template.
+    pub class_of: Vec<usize>,
+    /// Per-class silhouette scores from the build-time clustering.
+    pub silhouette: Vec<f64>,
+}
+
+impl TemplateSet {
+    /// Number of stored templates (rows).
+    pub fn num_templates(&self) -> usize {
+        self.templates.len()
+    }
+
+    /// Feature width.
+    pub fn num_features(&self) -> usize {
+        self.templates.first().map_or(0, |t| t.len())
+    }
+
+    /// Pack a binary query the same way the templates are packed.
+    pub fn pack_query(&self, q: &[u8]) -> Vec<u64> {
+        pack_bits(q, self.words_per_row)
+    }
+
+    fn validate(&self, n_features: usize, num_classes: usize) -> Result<()> {
+        if self.templates.is_empty() {
+            return Err(Error::Template("empty template set".into()));
+        }
+        for (i, t) in self.templates.iter().enumerate() {
+            if t.len() != n_features {
+                return Err(Error::Template(format!(
+                    "template {i} has {} features, expected {n_features}",
+                    t.len()
+                )));
+            }
+            if t.iter().any(|&b| b > 1) {
+                return Err(Error::Template(format!("template {i} is not binary")));
+            }
+        }
+        if self.class_of.len() != self.templates.len() {
+            return Err(Error::Template("class_of length mismatch".into()));
+        }
+        if self.class_of.iter().any(|&c| c >= num_classes) {
+            return Err(Error::Template("class id out of range".into()));
+        }
+        let mut seen = vec![false; num_classes];
+        for &c in &self.class_of {
+            seen[c] = true;
+        }
+        if !seen.iter().all(|&s| s) {
+            return Err(Error::Template("some class has no template".into()));
+        }
+        for (lo, hi) in self.lo.iter().zip(self.hi.iter()) {
+            if lo.len() != n_features || hi.len() != n_features {
+                return Err(Error::Template("window width mismatch".into()));
+            }
+            if lo.iter().zip(hi.iter()).any(|(l, h)| l > h) {
+                return Err(Error::Template("window lo > hi".into()));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Pack 0/1 bytes into u64 words, LSB-first.
+pub fn pack_bits(bits: &[u8], words_per_row: usize) -> Vec<u64> {
+    let mut out = vec![0u64; words_per_row];
+    for (i, &b) in bits.iter().enumerate() {
+        if b != 0 {
+            out[i / 64] |= 1u64 << (i % 64);
+        }
+    }
+    out
+}
+
+/// The full store: thresholds + one [`TemplateSet`] per templates-per-class.
+#[derive(Debug, Clone)]
+pub struct TemplateStore {
+    pub num_classes: usize,
+    pub n_features: usize,
+    /// Per-feature binarisation thresholds (the deployed mode from training).
+    pub thresholds: Vec<f32>,
+    /// Both threshold variants, kept for the Fig. 1 bench.
+    pub thresholds_mean: Vec<f32>,
+    pub thresholds_median: Vec<f32>,
+    pub threshold_mode: String,
+    pub similarity_alpha: f32,
+    /// Keyed by templates-per-class (1, 2, 3).
+    pub sets: BTreeMap<usize, TemplateSet>,
+}
+
+struct RawSet {
+    templates: Vec<Vec<u8>>,
+    lo: Vec<Vec<f32>>,
+    hi: Vec<Vec<f32>>,
+    bin_lo: Vec<Vec<f32>>,
+    bin_hi: Vec<Vec<f32>>,
+    class_of: Vec<usize>,
+    silhouette: Vec<f64>,
+}
+
+struct RawStore {
+    num_classes: usize,
+    n_features: usize,
+    threshold_mode: String,
+    thresholds: Vec<f32>,
+    thresholds_mean: Vec<f32>,
+    thresholds_median: Vec<f32>,
+    similarity_alpha: f32,
+    stores: BTreeMap<String, RawSet>,
+}
+
+/// Schema-error helper: `field(v.get("x"), "x")?`.
+fn field<'a>(v: Option<&'a Value>, name: &str) -> Result<&'a Value> {
+    v.ok_or_else(|| Error::Schema(format!("templates.json: missing field '{name}'")))
+}
+
+fn f32_matrix(v: &Value, name: &str) -> Result<Vec<Vec<f32>>> {
+    v.as_f32_matrix()
+        .ok_or_else(|| Error::Schema(format!("templates.json: '{name}' must be a numeric matrix")))
+}
+
+fn parse_raw_set(v: &Value) -> Result<RawSet> {
+    let templates: Vec<Vec<u8>> = f32_matrix(field(v.get("templates"), "templates")?, "templates")?
+        .into_iter()
+        .map(|row| row.into_iter().map(|f| f as u8).collect())
+        .collect();
+    let class_of = field(v.get("class_of"), "class_of")?
+        .as_array()
+        .ok_or_else(|| Error::Schema("class_of must be an array".into()))?
+        .iter()
+        .map(|x| x.as_usize().ok_or_else(|| Error::Schema("class_of must be ints".into())))
+        .collect::<Result<Vec<usize>>>()?;
+    let silhouette = field(v.get("silhouette"), "silhouette")?
+        .as_array()
+        .ok_or_else(|| Error::Schema("silhouette must be an array".into()))?
+        .iter()
+        .map(|x| x.as_f64().unwrap_or(0.0))
+        .collect();
+    Ok(RawSet {
+        templates,
+        lo: f32_matrix(field(v.get("lo"), "lo")?, "lo")?,
+        hi: f32_matrix(field(v.get("hi"), "hi")?, "hi")?,
+        bin_lo: f32_matrix(field(v.get("bin_lo"), "bin_lo")?, "bin_lo")?,
+        bin_hi: f32_matrix(field(v.get("bin_hi"), "bin_hi")?, "bin_hi")?,
+        class_of,
+        silhouette,
+    })
+}
+
+impl TemplateStore {
+    /// Load and validate `templates.json`.
+    pub fn load<P: AsRef<Path>>(path: P) -> Result<Self> {
+        let doc = jsonlite::parse(&std::fs::read_to_string(path)?)?;
+        let f32_vec = |name: &str| -> Result<Vec<f32>> {
+            field(doc.get(name), name)?
+                .as_f32_vec()
+                .ok_or_else(|| Error::Schema(format!("'{name}' must be a numeric array")))
+        };
+        let mut stores = BTreeMap::new();
+        for (k, v) in field(doc.get("stores"), "stores")?
+            .as_object()
+            .ok_or_else(|| Error::Schema("'stores' must be an object".into()))?
+        {
+            stores.insert(k.clone(), parse_raw_set(v)?);
+        }
+        let raw = RawStore {
+            num_classes: field(doc.get("num_classes"), "num_classes")?
+                .as_usize()
+                .ok_or_else(|| Error::Schema("num_classes must be an int".into()))?,
+            n_features: field(doc.get("n_features"), "n_features")?
+                .as_usize()
+                .ok_or_else(|| Error::Schema("n_features must be an int".into()))?,
+            threshold_mode: field(doc.get("threshold_mode"), "threshold_mode")?
+                .as_str()
+                .unwrap_or("mean")
+                .to_string(),
+            thresholds: f32_vec("thresholds")?,
+            thresholds_mean: f32_vec("thresholds_mean")?,
+            thresholds_median: f32_vec("thresholds_median")?,
+            similarity_alpha: field(doc.get("similarity_alpha"), "similarity_alpha")?
+                .as_f64()
+                .ok_or_else(|| Error::Schema("similarity_alpha must be a number".into()))?
+                as f32,
+            stores,
+        };
+        Self::from_raw(raw)
+    }
+
+    fn from_raw(raw: RawStore) -> Result<Self> {
+        if raw.thresholds.len() != raw.n_features {
+            return Err(Error::Template("threshold width mismatch".into()));
+        }
+        let words_per_row = raw.n_features.div_ceil(64);
+        let mut sets = BTreeMap::new();
+        for (k, rs) in raw.stores {
+            let k: usize = k
+                .parse()
+                .map_err(|_| Error::Template(format!("bad store key {k}")))?;
+            let packed = rs
+                .templates
+                .iter()
+                .flat_map(|t| pack_bits(t, words_per_row))
+                .collect();
+            let set = TemplateSet {
+                templates: rs.templates,
+                packed,
+                words_per_row,
+                lo: rs.lo,
+                hi: rs.hi,
+                bin_lo: rs.bin_lo,
+                bin_hi: rs.bin_hi,
+                class_of: rs.class_of,
+                silhouette: rs.silhouette,
+            };
+            set.validate(raw.n_features, raw.num_classes)?;
+            sets.insert(k, set);
+        }
+        if sets.is_empty() {
+            return Err(Error::Template("no template sets".into()));
+        }
+        Ok(TemplateStore {
+            num_classes: raw.num_classes,
+            n_features: raw.n_features,
+            thresholds: raw.thresholds,
+            thresholds_mean: raw.thresholds_mean,
+            thresholds_median: raw.thresholds_median,
+            threshold_mode: raw.threshold_mode,
+            similarity_alpha: raw.similarity_alpha,
+            sets,
+        })
+    }
+
+    /// The template set for `k` templates per class.
+    pub fn set(&self, k: usize) -> Result<&TemplateSet> {
+        self.sets
+            .get(&k)
+            .ok_or_else(|| Error::Template(format!("no set with {k} templates/class")))
+    }
+
+    /// Binarise a real-valued feature vector with the deployed thresholds
+    /// (strict `>`, matching the Python/Pallas kernels).
+    pub fn binarize(&self, features: &[f32]) -> Vec<u8> {
+        features
+            .iter()
+            .zip(self.thresholds.iter())
+            .map(|(f, t)| u8::from(f > t))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_raw(n_features: usize) -> RawStore {
+        let t0 = vec![1u8; n_features];
+        let t1 = vec![0u8; n_features];
+        let mk = |t: &Vec<u8>| RawSet {
+            templates: vec![t.clone(), t.iter().map(|b| 1 - b).collect()],
+            lo: vec![vec![0.0; n_features]; 2],
+            hi: vec![vec![1.0; n_features]; 2],
+            bin_lo: vec![vec![-0.5; n_features]; 2],
+            bin_hi: vec![vec![0.5; n_features]; 2],
+            class_of: vec![0, 1],
+            silhouette: vec![0.0, 0.0],
+        };
+        RawStore {
+            num_classes: 2,
+            n_features,
+            threshold_mode: "mean".into(),
+            thresholds: vec![0.5; n_features],
+            thresholds_mean: vec![0.5; n_features],
+            thresholds_median: vec![0.6; n_features],
+            similarity_alpha: 0.05,
+            stores: BTreeMap::from([("1".to_string(), mk(&t0)), ("2".to_string(), mk(&t1))]),
+        }
+    }
+
+    #[test]
+    fn pack_bits_lsb_first() {
+        let bits = [1u8, 0, 1, 1];
+        let packed = pack_bits(&bits, 1);
+        assert_eq!(packed[0], 0b1101);
+    }
+
+    #[test]
+    fn pack_bits_multiword() {
+        let mut bits = vec![0u8; 70];
+        bits[0] = 1;
+        bits[64] = 1;
+        bits[69] = 1;
+        let packed = pack_bits(&bits, 2);
+        assert_eq!(packed[0], 1);
+        assert_eq!(packed[1], 0b100001);
+    }
+
+    #[test]
+    fn load_roundtrip_and_binarize() {
+        let store = TemplateStore::from_raw(toy_raw(8)).unwrap();
+        assert_eq!(store.set(1).unwrap().num_templates(), 2);
+        let b = store.binarize(&[0.4, 0.6, 0.5, 0.9, 0.0, 1.0, 0.51, 0.49]);
+        assert_eq!(b, vec![0, 1, 0, 1, 0, 1, 1, 0]); // strict >
+    }
+
+    #[test]
+    fn validate_rejects_nonbinary() {
+        let mut raw = toy_raw(4);
+        raw.stores.get_mut("1").unwrap().templates[0][0] = 2;
+        assert!(TemplateStore::from_raw(raw).is_err());
+    }
+
+    #[test]
+    fn validate_rejects_missing_class() {
+        let mut raw = toy_raw(4);
+        raw.stores.get_mut("1").unwrap().class_of = vec![0, 0];
+        assert!(TemplateStore::from_raw(raw).is_err());
+    }
+
+    #[test]
+    fn validate_rejects_bad_window() {
+        let mut raw = toy_raw(4);
+        raw.stores.get_mut("2").unwrap().lo[0][2] = 5.0;
+        assert!(TemplateStore::from_raw(raw).is_err());
+    }
+
+    #[test]
+    fn missing_set_is_error() {
+        let store = TemplateStore::from_raw(toy_raw(4)).unwrap();
+        assert!(store.set(3).is_err());
+    }
+}

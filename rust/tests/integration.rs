@@ -1,0 +1,363 @@
+//! Integration tests over the real artifacts (`make artifacts` must have
+//! run; tests skip with a message when the artifacts directory is absent so
+//! `cargo test` stays green on a fresh checkout).
+
+use hec::config::{Backend, ServeConfig};
+use hec::coordinator::{Pipeline, Server};
+use hec::dataset::SyntheticDataset;
+use hec::jsonlite;
+use hec::runtime::{Meta, Runtime};
+use hec::templates::TemplateStore;
+
+const ARTIFACTS: &str = "artifacts";
+
+fn have_artifacts() -> bool {
+    let ok = std::path::Path::new(ARTIFACTS).join("meta.json").is_file();
+    if !ok {
+        eprintln!("skipping: run `make artifacts` first");
+    }
+    ok
+}
+
+fn cfg(backend: Backend) -> ServeConfig {
+    ServeConfig {
+        artifacts_dir: ARTIFACTS.into(),
+        backend,
+        ..Default::default()
+    }
+}
+
+fn golden() -> jsonlite::Value {
+    let text = std::fs::read_to_string("artifacts/meta.json").unwrap();
+    jsonlite::parse(&text).unwrap().get("golden").unwrap().clone()
+}
+
+fn workload(meta: &Meta, n: usize, seed: u64) -> (Vec<f32>, Vec<usize>) {
+    SyntheticDataset::new(seed, n, meta.norm.mean as f32, meta.norm.std as f32).batch(0, n)
+}
+
+/// The deployed Rust pipeline must reproduce the Python pipeline's
+/// predictions bit-for-bit on the golden samples (same generator, same HLO,
+/// same thresholds, same matcher).
+#[test]
+fn golden_predictions_match_python() {
+    if !have_artifacts() {
+        return;
+    }
+    let g = golden();
+    let seed = g.get("test_seed").unwrap().as_u64().unwrap();
+    let n = g.get("n").unwrap().as_usize().unwrap();
+    let want: Vec<usize> = g
+        .get("pred_fc_k1")
+        .unwrap()
+        .as_array()
+        .unwrap()
+        .iter()
+        .map(|v| v.as_usize().unwrap())
+        .collect();
+
+    let mut pipeline = Pipeline::new(&cfg(Backend::FeatureCount)).unwrap();
+    let (images, _) = workload(&pipeline.meta, n, seed);
+    let got: Vec<usize> = pipeline
+        .classify_batch(&images, n)
+        .unwrap()
+        .into_iter()
+        .map(|c| c.class)
+        .collect();
+    assert_eq!(got, want, "Rust FC predictions diverge from Python golden");
+}
+
+/// Feature values produced through PJRT must match the Python-side export
+/// (catches constant corruption / layout mismatches).
+#[test]
+fn golden_features_match_python() {
+    if !have_artifacts() {
+        return;
+    }
+    let g = golden();
+    let seed = g.get("test_seed").unwrap().as_u64().unwrap();
+    let want: Vec<f32> = g
+        .get("features_row0_first8")
+        .unwrap()
+        .as_f32_vec()
+        .unwrap();
+    let ones = g.get("binary_row0_ones").unwrap().as_usize().unwrap();
+
+    let mut pipeline = Pipeline::new(&cfg(Backend::FeatureCount)).unwrap();
+    let (images, _) = workload(&pipeline.meta, 1, seed);
+    let feats = pipeline.extract_features(&images, 1).unwrap();
+    for (i, (g, w)) in feats.iter().zip(want.iter()).enumerate() {
+        assert!(
+            (g - w).abs() < 1e-3 + 1e-3 * w.abs(),
+            "feature {i}: got {g}, want {w}"
+        );
+    }
+    let bits = pipeline.store.binarize(&feats);
+    let got_ones: usize = bits.iter().map(|&b| b as usize).sum();
+    assert_eq!(got_ones, ones);
+}
+
+/// Ideal ACAM simulation must classify identically to the digital
+/// feature-count path (the §III fidelity contract).
+#[test]
+fn ideal_acam_equals_feature_count() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut fc = Pipeline::new(&cfg(Backend::FeatureCount)).unwrap();
+    let mut acam = Pipeline::new(&cfg(Backend::AcamSim)).unwrap();
+    let (images, _) = workload(&fc.meta, 64, 1_000_003);
+    let p_fc: Vec<usize> = fc
+        .classify_batch(&images, 64)
+        .unwrap()
+        .into_iter()
+        .map(|c| c.class)
+        .collect();
+    let p_acam: Vec<usize> = acam
+        .classify_batch(&images, 64)
+        .unwrap()
+        .into_iter()
+        .map(|c| c.class)
+        .collect();
+    assert_eq!(p_fc, p_acam);
+}
+
+/// §V.B: binary-domain similarity matching agrees with feature count.
+#[test]
+fn similarity_agrees_with_feature_count() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut fc = Pipeline::new(&cfg(Backend::FeatureCount)).unwrap();
+    let mut sim = Pipeline::new(&cfg(Backend::Similarity)).unwrap();
+    let (images, _) = workload(&fc.meta, 64, 1_000_003);
+    let p_fc: Vec<usize> = fc.classify_batch(&images, 64).unwrap().iter().map(|c| c.class).collect();
+    let p_sim: Vec<usize> = sim.classify_batch(&images, 64).unwrap().iter().map(|c| c.class).collect();
+    let agree = p_fc.iter().zip(&p_sim).filter(|(a, b)| a == b).count();
+    assert!(agree >= 62, "agreement {agree}/64"); // ties may split
+}
+
+/// Accuracy ordering from the paper: softmax head >= binary matching, and
+/// both clearly above chance.
+#[test]
+fn accuracy_ordering_softmax_vs_matching() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut soft = Pipeline::new(&cfg(Backend::Softmax)).unwrap();
+    let mut fc = Pipeline::new(&cfg(Backend::FeatureCount)).unwrap();
+    let (images, labels) = workload(&soft.meta, 200, 1_000_003);
+    let e_soft = soft.evaluate(&images, &labels, 32).unwrap();
+    let e_fc = fc.evaluate(&images, &labels, 32).unwrap();
+    assert!(e_soft.accuracy > 0.5, "softmax {:.3}", e_soft.accuracy);
+    assert!(e_fc.accuracy > 0.5, "fc {:.3}", e_fc.accuracy);
+    assert!(
+        e_soft.accuracy >= e_fc.accuracy - 0.02,
+        "softmax {:.3} vs fc {:.3}",
+        e_soft.accuracy,
+        e_fc.accuracy
+    );
+    // Energy: under the paper's published (fJ-effective) arithmetic the
+    // dense head costs only ~0.16 nJ, *less* than the 1.45 nJ ACAM search —
+    // the "ACAM beats the digital head" claim only holds under strict-pJ
+    // units (where the head costs ~159 nJ).  Assert that strict-pJ ordering.
+    let em = hec::energy::EnergyModel::default();
+    let head_strict_nj = em.frontend_strict_pj_nj(soft.meta.macs.as_built.head_ops);
+    let acam_nj = em.backend_nj(10, 784);
+    assert!(
+        head_strict_nj > acam_nj,
+        "strict-pJ head {head_strict_nj} nJ must exceed ACAM {acam_nj} nJ"
+    );
+    // And the two deployments must report different energy ledgers.
+    assert!((e_fc.total_energy_nj - e_soft.total_energy_nj).abs() > 1e-6);
+}
+
+/// All three Table II template sets load, validate, and classify.
+#[test]
+fn multi_template_sets_work() {
+    if !have_artifacts() {
+        return;
+    }
+    for k in 1..=3 {
+        let mut c = cfg(Backend::FeatureCount);
+        c.templates_per_class = k;
+        let mut p = Pipeline::new(&c).unwrap();
+        let (images, labels) = workload(&p.meta, 100, 1_000_003);
+        let e = p.evaluate(&images, &labels, 32).unwrap();
+        assert!(e.accuracy > 0.4, "k={k}: {:.3}", e.accuracy);
+        let set = p.store.set(k).unwrap();
+        assert_eq!(set.num_templates(), k * p.store.num_classes);
+    }
+}
+
+/// The match_fc HLO artifact computes the same scores as the Rust matcher.
+#[test]
+fn match_artifact_equals_rust_matcher() {
+    if !have_artifacts() {
+        return;
+    }
+    let meta = Meta::load(ARTIFACTS).unwrap();
+    let store = TemplateStore::load("artifacts/templates.json").unwrap();
+    let set = store.set(1).unwrap();
+    let mut rt = Runtime::new(ARTIFACTS).unwrap();
+    let b = 8usize;
+    let nf = meta.artifacts.n_features;
+    let m = set.num_templates();
+
+    // Build a batch of binary queries.
+    let mut rng = hec::rng::Rng::new(11);
+    let mut q = vec![0f32; b * nf];
+    for v in q.iter_mut() {
+        *v = f32::from(rng.u01() < 0.5);
+    }
+    let t: Vec<f32> = set
+        .templates
+        .iter()
+        .flat_map(|row| row.iter().map(|&x| x as f32))
+        .collect();
+
+    let exe = rt.load(&format!("match_fc_b{b}")).unwrap();
+    let scores = exe
+        .run_f32(&[
+            (&q, &[b as i64, nf as i64]),
+            (&t, &[m as i64, nf as i64]),
+        ])
+        .unwrap();
+    for i in 0..b {
+        let bits: Vec<u8> = q[i * nf..(i + 1) * nf].iter().map(|&v| v as u8).collect();
+        let want = hec::matching::feature_count_all_dense(&bits, set);
+        for (j, &w) in want.iter().enumerate() {
+            assert_eq!(scores[i * m + j] as u32, w, "query {i} template {j}");
+        }
+    }
+}
+
+/// The Pallas-lowered artifact and the jnp-lowered fast variant are
+/// numerically identical (the L2 perf optimisation must not change math).
+#[test]
+fn pallas_and_fast_frontends_agree() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut fast_cfg = cfg(Backend::FeatureCount);
+    fast_cfg.use_fast_frontend = true;
+    let mut pallas_cfg = cfg(Backend::FeatureCount);
+    pallas_cfg.use_fast_frontend = false;
+    let mut fast = Pipeline::new(&fast_cfg).unwrap();
+    let mut pallas = Pipeline::new(&pallas_cfg).unwrap();
+    let (images, _) = workload(&fast.meta, 4, 1_000_003);
+    let ff = fast.extract_features(&images, 4).unwrap();
+    let fp = pallas.extract_features(&images, 4).unwrap();
+    for (i, (a, b)) in ff.iter().zip(fp.iter()).enumerate() {
+        assert!((a - b).abs() < 1e-3 + 1e-3 * b.abs(), "feature {i}: {a} vs {b}");
+    }
+}
+
+/// Front-end batch variants all produce consistent features for the same
+/// image (padding must not leak into real rows).
+#[test]
+fn batch_variants_are_consistent() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut pipeline = Pipeline::new(&cfg(Backend::FeatureCount)).unwrap();
+    let (images, _) = workload(&pipeline.meta, 1, 1_000_003);
+    let nf = pipeline.meta.artifacts.n_features;
+    // n=1 -> b1 artifact; duplicate the image 9x -> b32 artifact.
+    let f1 = pipeline.extract_features(&images, 1).unwrap();
+    let mut many = Vec::new();
+    for _ in 0..9 {
+        many.extend_from_slice(&images);
+    }
+    let f9 = pipeline.extract_features(&many, 9).unwrap();
+    for i in 0..9 {
+        for j in 0..nf {
+            let a = f1[j];
+            let b = f9[i * nf + j];
+            assert!((a - b).abs() < 1e-4, "row {i} feat {j}: {a} vs {b}");
+        }
+    }
+}
+
+/// End-to-end serving: submit through the dynamic batcher, all responses
+/// arrive, metrics add up.
+#[test]
+fn server_round_trip() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut c = cfg(Backend::FeatureCount);
+    c.batch.max_batch = 8;
+    c.batch.max_wait_us = 500;
+    let server = Server::start(c).unwrap();
+    let handle = server.handle.clone();
+    let meta = Meta::load(ARTIFACTS).unwrap();
+    let (images, _) = workload(&meta, 16, 77);
+    let img_len = meta.artifacts.image_size * meta.artifacts.image_size;
+
+    let rxs: Vec<_> = (0..16)
+        .map(|i| {
+            handle
+                .submit(images[i * img_len..(i + 1) * img_len].to_vec())
+                .unwrap()
+        })
+        .collect();
+    for rx in rxs {
+        let res = rx.recv().unwrap().unwrap();
+        assert!(res.class < 10);
+        assert!(res.energy_nj > 0.0);
+    }
+    let snap = handle.metrics.snapshot();
+    assert_eq!(snap.responses, 16);
+    assert_eq!(snap.errors, 0);
+    assert!(snap.batches >= 2); // 16 items with max_batch 8
+    drop(handle);
+    server.shutdown();
+}
+
+/// Bad image size is rejected before it reaches the queue.
+#[test]
+fn server_rejects_bad_shapes() {
+    if !have_artifacts() {
+        return;
+    }
+    let server = Server::start(cfg(Backend::FeatureCount)).unwrap();
+    assert!(server.handle.submit(vec![0.0; 17]).is_err());
+    server.shutdown();
+}
+
+/// Evaluation confusion matrix is consistent with its accuracy.
+#[test]
+fn evaluation_confusion_consistency() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut p = Pipeline::new(&cfg(Backend::FeatureCount)).unwrap();
+    let (images, labels) = workload(&p.meta, 100, 1_000_003);
+    let e = p.evaluate(&images, &labels, 32).unwrap();
+    let total: u64 = e.confusion.iter().flatten().sum();
+    assert_eq!(total as usize, e.n);
+    let diag: u64 = (0..10).map(|i| e.confusion[i][i]).sum();
+    assert!((e.accuracy - diag as f64 / e.n as f64).abs() < 1e-9);
+}
+
+/// ACAM variability ablation: ideal accuracy >= heavily-degraded accuracy.
+#[test]
+fn acam_variability_degrades_gracefully() {
+    if !have_artifacts() {
+        return;
+    }
+    let run = |level: f64| {
+        let mut c = cfg(Backend::AcamSim);
+        c.acam.variability_level = level;
+        let mut p = Pipeline::new(&c).unwrap();
+        let (images, labels) = workload(&p.meta, 100, 1_000_003);
+        p.evaluate(&images, &labels, 32).unwrap().accuracy
+    };
+    let ideal = run(0.0);
+    let noisy = run(8.0);
+    assert!(
+        ideal >= noisy - 0.05,
+        "ideal {ideal:.3} should not lose to heavily degraded {noisy:.3}"
+    );
+}

@@ -1,0 +1,234 @@
+//! Property-based tests (hand-rolled generator loops; proptest is
+//! unavailable offline).  Each property runs a few hundred randomized cases
+//! from a fixed seed, shrink-free but reproducible.
+
+use hec::jsonlite::{self, Value};
+use hec::matching;
+use hec::rng::Rng;
+use hec::templates::{pack_bits, TemplateSet};
+
+fn toy_set(templates: Vec<Vec<u8>>, class_of: Vec<usize>) -> TemplateSet {
+    let n = templates[0].len();
+    let w = n.div_ceil(64);
+    TemplateSet {
+        packed: templates.iter().flat_map(|t| pack_bits(t, w)).collect(),
+        words_per_row: w,
+        lo: vec![vec![0.0; n]; templates.len()],
+        hi: vec![vec![1.0; n]; templates.len()],
+        bin_lo: templates
+            .iter()
+            .map(|t| t.iter().map(|&b| b as f32 - 0.5).collect())
+            .collect(),
+        bin_hi: templates
+            .iter()
+            .map(|t| t.iter().map(|&b| b as f32 + 0.5).collect())
+            .collect(),
+        silhouette: vec![],
+        class_of,
+        templates,
+    }
+}
+
+fn random_bits(rng: &mut Rng, n: usize, p: f64) -> Vec<u8> {
+    (0..n).map(|_| u8::from(rng.u01() < p)).collect()
+}
+
+/// Property: packed popcount scoring == dense byte scoring, any width.
+#[test]
+fn prop_packed_equals_dense() {
+    let mut rng = Rng::new(42);
+    for case in 0..300 {
+        let n = 1 + rng.below(300);
+        let m = 1 + rng.below(12);
+        let p = rng.range(0.05, 0.95);
+        let templates: Vec<Vec<u8>> = (0..m).map(|_| random_bits(&mut rng, n, p)).collect();
+        let class_of: Vec<usize> = (0..m).collect();
+        let set = toy_set(templates.clone(), class_of);
+        let q = random_bits(&mut rng, n, p);
+        let dense = matching::feature_count_all_dense(&q, &set);
+        let packed = matching::feature_count_all_packed(&set.pack_query(&q), &set);
+        assert_eq!(dense, packed, "case {case}: n={n} m={m}");
+    }
+}
+
+/// Property (§V.B): on binary queries with unit windows, feature count and
+/// similarity classification agree exactly.
+#[test]
+fn prop_binary_fc_sim_agree() {
+    let mut rng = Rng::new(7);
+    for case in 0..200 {
+        let n = 8 + rng.below(200);
+        let classes = 2 + rng.below(6);
+        let templates: Vec<Vec<u8>> = (0..classes).map(|_| random_bits(&mut rng, n, 0.5)).collect();
+        let class_of: Vec<usize> = (0..classes).collect();
+        let set = toy_set(templates, class_of);
+        let q = random_bits(&mut rng, n, 0.5);
+        let fc = matching::classify_feature_count(&q, &set, classes);
+        let qf: Vec<f32> = q.iter().map(|&b| b as f32).collect();
+        let sim = matching::classify_similarity(&qf, &set, 0.05, classes, true);
+        assert_eq!(fc, sim, "case {case}");
+    }
+}
+
+/// Property: Eq. 12 multi-template per-class max equals brute force.
+#[test]
+fn prop_classify_equals_bruteforce() {
+    let mut rng = Rng::new(13);
+    for _ in 0..300 {
+        let num_classes = 2 + rng.below(5);
+        let m = num_classes + rng.below(10);
+        let scores: Vec<u32> = (0..m).map(|_| rng.below(1000) as u32).collect();
+        // Every class owns at least one template.
+        let mut class_of: Vec<usize> = (0..num_classes).collect();
+        for _ in num_classes..m {
+            class_of.push(rng.below(num_classes));
+        }
+        let got = matching::classify(&scores, &class_of, num_classes);
+        // Brute force: best (score, -class) pair.
+        let mut best_class = 0;
+        let mut best_score = None::<u32>;
+        for c in 0..num_classes {
+            let s = scores
+                .iter()
+                .zip(class_of.iter())
+                .filter(|(_, &cc)| cc == c)
+                .map(|(&s, _)| s)
+                .max();
+            if let Some(s) = s {
+                if best_score.map_or(true, |b| s > b) {
+                    best_score = Some(s);
+                    best_class = c;
+                }
+            }
+        }
+        assert_eq!(got, best_class);
+    }
+}
+
+/// Property: feature-count score is symmetric and bounded by N, and scoring
+/// a template against itself gives exactly N.
+#[test]
+fn prop_feature_count_bounds() {
+    let mut rng = Rng::new(99);
+    for _ in 0..200 {
+        let n = 1 + rng.below(256);
+        let a = random_bits(&mut rng, n, 0.5);
+        let b = random_bits(&mut rng, n, 0.5);
+        let ab = matching::feature_count_dense(&a, &b);
+        let ba = matching::feature_count_dense(&b, &a);
+        assert_eq!(ab, ba);
+        assert!(ab <= n as u32);
+        assert_eq!(matching::feature_count_dense(&a, &a), n as u32);
+    }
+}
+
+/// Property: similarity is 1 exactly when all features are in-window, and
+/// decreases (weakly) as the query moves farther outside.
+#[test]
+fn prop_similarity_monotone_in_violation() {
+    let mut rng = Rng::new(5);
+    for _ in 0..200 {
+        let n = 1 + rng.below(64);
+        let lo = vec![0.0f32; n];
+        let hi = vec![1.0f32; n];
+        let inside: Vec<f32> = (0..n).map(|_| rng.range(0.0, 1.0) as f32).collect();
+        assert!((matching::similarity(&inside, &lo, &hi, 0.3) - 1.0).abs() < 1e-6);
+        let mut out1 = inside.clone();
+        let mut out2 = inside.clone();
+        out1[0] = 1.5;
+        out2[0] = 3.0;
+        let s1 = matching::similarity(&out1, &lo, &hi, 0.3);
+        let s2 = matching::similarity(&out2, &lo, &hi, 0.3);
+        assert!(s1 >= s2, "{s1} {s2}");
+        assert!(s1 < 1.0);
+    }
+}
+
+/// Property: jsonlite parse(write(v)) == v for random value trees.
+#[test]
+fn prop_jsonlite_roundtrip() {
+    fn random_value(rng: &mut Rng, depth: usize) -> Value {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Value::Null,
+            1 => Value::Bool(rng.u01() < 0.5),
+            // Round-trippable numbers: scaled integers.
+            2 => Value::Num((rng.below(2_000_001) as f64 - 1_000_000.0) / 64.0),
+            3 => Value::Str(
+                (0..rng.below(12))
+                    .map(|_| char::from(32 + rng.below(94) as u8))
+                    .collect(),
+            ),
+            4 => Value::Arr((0..rng.below(6)).map(|_| random_value(rng, depth - 1)).collect()),
+            _ => Value::Obj(
+                (0..rng.below(6))
+                    .map(|i| (format!("k{i}"), random_value(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    let mut rng = Rng::new(1234);
+    for case in 0..300 {
+        let v = random_value(&mut rng, 3);
+        let text = v.to_json();
+        let back = jsonlite::parse(&text).unwrap_or_else(|e| panic!("case {case}: {e}\n{text}"));
+        assert_eq!(back, v, "case {case}: {text}");
+    }
+}
+
+/// Property: batcher padding picks the smallest exported size that fits and
+/// chunking covers the batch exactly.
+#[test]
+fn prop_batcher_padding() {
+    use hec::coordinator::batcher::{chunks_for, pad_to_artifact};
+    let exported = [1usize, 8, 32];
+    let mut rng = Rng::new(3);
+    for _ in 0..300 {
+        let n = 1 + rng.below(100);
+        let (b, pad) = pad_to_artifact(n.min(32), &exported);
+        assert!(b >= n.min(32));
+        assert_eq!(b - n.min(32), pad);
+        assert!(exported.contains(&b));
+        let chunks = chunks_for(n, &exported);
+        let covered: usize = chunks.iter().map(|(b, p)| b - p).sum();
+        assert_eq!(covered, n);
+        for (b, _) in chunks {
+            assert!(exported.contains(&b));
+        }
+    }
+}
+
+/// Property: the ideal ACAM array's match counts equal Eq. 8 for random
+/// binary templates/queries (the core fidelity contract).
+#[test]
+fn prop_ideal_acam_equals_eq8() {
+    use hec::acam::program::{binary_query_voltages, program_array, WindowMode};
+    use hec::acam::{ArrayConfig, Variability};
+    let mut rng = Rng::new(21);
+    for case in 0..25 {
+        let n = 8 + rng.below(64);
+        let m = 2 + rng.below(6);
+        let templates: Vec<Vec<u8>> = (0..m).map(|_| random_bits(&mut rng, n, 0.5)).collect();
+        let class_of: Vec<usize> = (0..m).collect();
+        let set = toy_set(templates.clone(), class_of);
+        let mut arr = program_array(
+            &set,
+            WindowMode::Binary,
+            ArrayConfig::default(),
+            Variability::ideal(),
+            case as u64,
+        );
+        let q = random_bits(&mut rng, n, 0.5);
+        let out = arr.search(&binary_query_voltages(&q));
+        for (r, t) in templates.iter().enumerate() {
+            let want = matching::feature_count_dense(&q, t);
+            assert_eq!(out.match_counts[r], want, "case {case} row {r}");
+        }
+        // Analogue similarity ordering equals count ordering.
+        let mut idx: Vec<usize> = (0..m).collect();
+        idx.sort_by(|&a, &b| out.similarity[b].partial_cmp(&out.similarity[a]).unwrap());
+        let mut idx2: Vec<usize> = (0..m).collect();
+        idx2.sort_by_key(|&r| std::cmp::Reverse(out.match_counts[r]));
+        let key = |v: &[usize]| -> Vec<u32> { v.iter().map(|&r| out.match_counts[r]).collect() };
+        assert_eq!(key(&idx), key(&idx2), "case {case}");
+    }
+}
