@@ -1,0 +1,35 @@
+# Hybrid edge classifier — build / verify entry points.
+#
+# `make verify` is the tier-1 gate (what CI's rust job runs); it needs only
+# a stock Rust toolchain — the default build has zero external dependencies
+# and serves with synthetic weights when no artifacts/ directory exists.
+
+.PHONY: verify test lint fmt artifacts clean
+
+# Tier-1 verification: release build + full test suite.
+verify:
+	cargo build --release
+	cargo test -q
+
+test:
+	cargo test -q
+	-python -m pytest python/tests -q
+
+# Style gates (CI runs these as separate steps).
+lint:
+	cargo fmt --check
+	cargo clippy --all-targets -- -D warnings
+
+fmt:
+	cargo fmt
+
+# Build the AOT artifacts (HLO text modules + templates.json + meta.json).
+# Requires the Python training stack (jax + numpy); the Rust serving stack
+# runs without artifacts via the synthetic-weight fallback, so this step is
+# optional for development.
+artifacts:
+	cd python && python -m compile.aot --out ../artifacts
+
+clean:
+	cargo clean
+	rm -rf artifacts

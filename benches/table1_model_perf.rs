@@ -1,7 +1,7 @@
 //! Table I reproduction: teacher vs student (± optimisations) — accuracy,
 //! F1/precision/recall, parameters, MAC counts, compression ratios — plus
-//! the measured PJRT inference latency of the deployed teacher and student
-//! artifacts.
+//! the measured front-end inference latency through the deployed execution
+//! engine.
 //!
 //! Paper-vs-measured *shape* assertions: the student keeps a tiny fraction
 //! of the teacher's parameters/MACs, optimisations close most of the
@@ -9,8 +9,10 @@
 //! sparsity skip.
 
 use hec::benchkit::{bench_for, paper_row, section};
+use hec::config::{Backend, ServeConfig};
+use hec::coordinator::Pipeline;
 use hec::energy::constants;
-use hec::runtime::{Meta, Runtime};
+use hec::runtime::Meta;
 use std::time::Duration;
 
 fn main() {
@@ -74,31 +76,28 @@ fn main() {
         "80% sparsity must cut effective MACs by >3x"
     );
 
-    section("measured PJRT latency (batch 8)");
-    let mut rt = Runtime::new("artifacts").unwrap();
+    section("measured front-end latency (batch 8, deployed engine)");
+    let mut p = Pipeline::new(&ServeConfig {
+        artifacts_dir: "artifacts".into(),
+        backend: Backend::FeatureCount,
+        ..Default::default()
+    })
+    .unwrap();
     let s = meta.artifacts.image_size;
     let img = vec![0.1f32; 8 * s * s];
-    let dims = [8i64, s as i64, s as i64, 1];
-
-    // Use the jnp-lowered serving variant when present (the Pallas artifact's
-    // interpret lowering is not a meaningful CPU wallclock — see DESIGN.md).
-    let student_name = if std::path::Path::new("artifacts/student_fwd_fast_b8.hlo.txt").is_file() {
-        "student_fwd_fast_b8"
-    } else {
-        "student_fwd_b8"
-    };
-    rt.load(student_name).unwrap();
-    rt.load("teacher_fwd_b8").unwrap();
     let budget = Duration::from_secs(3);
-    let student = bench_for(&format!("{student_name} (PJRT)"), 2, 10, budget, || {
-        rt.load(student_name).unwrap().run_f32(&[(&img, &dims)]).unwrap();
-    });
-    let teacher = bench_for("teacher_fwd_b8 (PJRT)", 2, 10, budget, || {
-        rt.load("teacher_fwd_b8").unwrap().run_f32(&[(&img, &dims)]).unwrap();
-    });
+    let student = bench_for(
+        &format!("student features b8 ({})", p.engine_name()),
+        2,
+        10,
+        budget,
+        || {
+            p.extract_features(&img, 8).unwrap();
+        },
+    );
     println!(
-        "student/teacher wallclock: teacher is {:.2}x slower (as-built MAC ratio: {:.2}x)",
-        teacher.mean.as_secs_f64() / student.mean.as_secs_f64(),
+        "student front-end: {:.0} images/s (as-built teacher/student MAC ratio: {:.2}x)",
+        8.0 * student.throughput(),
         meta.macs.as_built.teacher_gray.macs as f64 / meta.macs.as_built.student.macs as f64
     );
     println!("\ntable1_model_perf: PASS");

@@ -12,19 +12,20 @@ use hec::config::{Backend, ServeConfig};
 use hec::coordinator::Pipeline;
 use hec::dataset::SyntheticDataset;
 use hec::kmeans;
-use hec::templates::TemplateStore;
 
-fn main() -> anyhow::Result<()> {
-    let store = TemplateStore::load("artifacts/templates.json")?;
-    let set = store.set(1)?;
-
+fn main() -> hec::Result<()> {
     // ---- 1. variability sweep, both cell kinds --------------------------
+    // The pipeline loads artifacts/templates.json when present or
+    // bootstraps a store from the synthetic dataset otherwise, so this
+    // exploration runs on a clean checkout too.
     let cfg = ServeConfig {
         artifacts_dir: "artifacts".into(),
         backend: Backend::FeatureCount,
         ..Default::default()
     };
     let mut pipeline = Pipeline::new(&cfg)?;
+    let store = pipeline.store.clone();
+    let set = store.set(1)?;
     let n = 300;
     let ds = SyntheticDataset::new(
         1_000_003,

@@ -16,7 +16,7 @@ use hec::coordinator::Server;
 use hec::dataset::SyntheticDataset;
 use hec::runtime::Meta;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> hec::Result<()> {
     let args: Vec<String> = std::env::args().collect();
     let requests: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(2000);
     let clients: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(4);
@@ -30,7 +30,7 @@ fn main() -> anyhow::Result<()> {
     cfg.batch.max_wait_us = 2_000;
 
     let server = Server::start(cfg)?;
-    let meta = Meta::load("artifacts")?;
+    let meta = Meta::load_or_synthetic("artifacts")?;
     let img_len = meta.artifacts.image_size * meta.artifacts.image_size;
     let ds = SyntheticDataset::new(1_000_003, 512, meta.norm.mean as f32, meta.norm.std as f32);
 

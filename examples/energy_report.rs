@@ -7,7 +7,7 @@
 use hec::energy::{constants, effective_macs, student_layers, EnergyModel, Scale};
 use hec::runtime::Meta;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> hec::Result<()> {
     let model = EnergyModel::default();
 
     println!("=== §V.D (paper scale, published arithmetic) ===");

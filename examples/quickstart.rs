@@ -1,15 +1,20 @@
-//! Quickstart: load the deployed artifacts, classify a handful of samples
-//! through the full hybrid stack, print predictions + the per-inference
-//! energy estimate.
+//! Quickstart: classify a handful of samples through the full hybrid stack
+//! and print predictions + the per-inference energy estimate.
 //!
-//!     make artifacts && cargo run --release --example quickstart
+//! Runs on a clean checkout with **no artifacts directory**: the default
+//! interp engine falls back to synthetic weights and bootstraps templates
+//! from the synthetic dataset.  With `make artifacts` it picks up the real
+//! exported weights instead.
+//!
+//!     cargo run --release --example quickstart
 
 use hec::config::{Backend, ServeConfig};
 use hec::coordinator::Pipeline;
 use hec::dataset::{SyntheticDataset, CLASS_NAMES};
 
-fn main() -> anyhow::Result<()> {
-    // 1. Point the pipeline at the artifacts produced by `make artifacts`.
+fn main() -> hec::Result<()> {
+    // 1. Point the pipeline at the artifacts directory (used when present,
+    //    synthetic fallback otherwise).
     let cfg = ServeConfig {
         artifacts_dir: "artifacts".into(),
         backend: Backend::AcamSim, // the paper's system: CNN front-end + ACAM
@@ -18,11 +23,13 @@ fn main() -> anyhow::Result<()> {
     };
     let mut pipeline = Pipeline::new(&cfg)?;
     println!(
-        "loaded: {} features, {} templates, image {}x{}",
+        "loaded: engine {}, {} features, {} templates, image {}x{} (dataset: {})",
+        pipeline.engine_name(),
         pipeline.meta.artifacts.n_features,
         pipeline.meta.artifacts.n_templates,
         pipeline.meta.artifacts.image_size,
-        pipeline.meta.artifacts.image_size
+        pipeline.meta.artifacts.image_size,
+        pipeline.meta.dataset.source,
     );
 
     // 2. Build a small labelled workload (the synthetic CIFAR-like test

@@ -9,6 +9,30 @@ use std::path::{Path, PathBuf};
 use crate::acam::cell::CellKind;
 use crate::error::{Error, Result};
 
+/// Which execution engine runs the student CNN front-end
+/// (see `rust/src/runtime/backend/`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Engine {
+    /// Pure-Rust interpreter — the default; zero native dependencies, runs
+    /// with or without an artifacts directory.
+    #[default]
+    Interp,
+    /// HLO/PJRT runtime — requires the `pjrt` cargo feature and an
+    /// artifacts directory.
+    Pjrt,
+}
+
+impl std::str::FromStr for Engine {
+    type Err = Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "interp" | "rust" => Ok(Engine::Interp),
+            "pjrt" | "xla" => Ok(Engine::Pjrt),
+            _ => Err(Error::Config(format!("unknown engine: {s}"))),
+        }
+    }
+}
+
 /// Which back-end classifies the extracted feature maps.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Backend {
@@ -81,8 +105,12 @@ impl Default for AcamConfig {
 /// Top-level serving configuration.
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
-    /// Artifacts directory (HLO text + templates.json + meta.json).
+    /// Artifacts directory (HLO text + templates.json + meta.json).  May be
+    /// absent: the interp engine then serves from synthetic weights and
+    /// bootstrapped templates.
     pub artifacts_dir: PathBuf,
+    /// Front-end execution engine.
+    pub engine: Engine,
     /// Classification back-end.
     pub backend: Backend,
     /// Templates per class (Table II: 1, 2 or 3).
@@ -100,6 +128,7 @@ impl Default for ServeConfig {
     fn default() -> Self {
         ServeConfig {
             artifacts_dir: PathBuf::from("artifacts"),
+            engine: Engine::default(),
             backend: Backend::AcamSim,
             templates_per_class: 1,
             use_fast_frontend: true,
@@ -116,6 +145,9 @@ impl ServeConfig {
         let mut cfg = ServeConfig::default();
         if let Some(v) = doc.get("artifacts_dir").and_then(|v| v.as_str()) {
             cfg.artifacts_dir = PathBuf::from(v);
+        }
+        if let Some(v) = doc.get("engine").and_then(|v| v.as_str()) {
+            cfg.engine = v.parse()?;
         }
         if let Some(v) = doc.get("backend").and_then(|v| v.as_str()) {
             cfg.backend = v.parse()?;
@@ -187,6 +219,26 @@ mod tests {
         assert_eq!("acam".parse::<Backend>().unwrap(), Backend::AcamSim);
         assert_eq!("fc".parse::<Backend>().unwrap(), Backend::FeatureCount);
         assert!("nope".parse::<Backend>().is_err());
+    }
+
+    #[test]
+    fn engine_parses_and_defaults_to_interp() {
+        assert_eq!("interp".parse::<Engine>().unwrap(), Engine::Interp);
+        assert_eq!("rust".parse::<Engine>().unwrap(), Engine::Interp);
+        assert_eq!("pjrt".parse::<Engine>().unwrap(), Engine::Pjrt);
+        assert!("cuda".parse::<Engine>().is_err());
+        assert_eq!(ServeConfig::default().engine, Engine::Interp);
+    }
+
+    #[test]
+    fn engine_loads_from_config_file() {
+        let dir = std::env::temp_dir().join(format!("hec-engcfg-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("serve.json");
+        std::fs::write(&path, r#"{"engine": "pjrt", "backend": "fc"}"#).unwrap();
+        let cfg = ServeConfig::load(&path).unwrap();
+        assert_eq!(cfg.engine, Engine::Pjrt);
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -2,10 +2,13 @@
 //!
 //! * [`batcher`] — dynamic batching policy (size + deadline, artifact-size
 //!   padding);
-//! * [`pipeline`] — image -> PJRT front-end -> binarise -> back-end
-//!   (ACAM sim / digital matcher / softmax baseline) -> class + energy;
+//! * [`pipeline`] — image -> front-end engine (pure-Rust interpreter or
+//!   PJRT, via the [`crate::runtime::FrontEnd`] trait) -> binarise ->
+//!   back-end (ACAM sim / digital matcher / softmax baseline) -> class +
+//!   energy;
 //! * [`server`] — the event loop: bounded request queue with backpressure, a
-//!   dedicated worker thread owning the PJRT state, async-friendly handles;
+//!   dedicated worker thread owning the engine state, async-friendly
+//!   handles;
 //! * [`metrics`] — lock-free counters, latency histograms, energy ledger.
 
 pub mod batcher;

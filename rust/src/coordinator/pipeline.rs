@@ -1,10 +1,18 @@
-//! The request pipeline: image batch -> PJRT student front-end -> feature
-//! binarisation -> back-end classification (simulated ACAM, digital matcher,
-//! or softmax baseline) -> prediction + energy estimate.
+//! The request pipeline: image batch -> front-end engine (pure-Rust
+//! interpreter or PJRT) -> feature binarisation -> back-end classification
+//! (simulated ACAM, digital matcher, or softmax baseline) -> prediction +
+//! energy estimate.
 //!
-//! This is the paper's Fig. 2 as executable structure.  Everything here runs
-//! on the serving thread; no Python, no allocation churn after warmup (the
-//! padded input buffer and the packed-query scratch are reused).
+//! This is the paper's Fig. 2 as executable structure.  The front-end is a
+//! [`FrontEnd`] trait object selected by `ServeConfig::engine`, so the
+//! pipeline never knows which engine is running.  Everything here runs on
+//! the serving thread.
+//!
+//! Artifact-free serving: when the configured artifacts directory does not
+//! exist, [`Pipeline::new`] falls back to synthetic metadata
+//! ([`Meta::synthetic`]), synthetic interpreter weights, and a template
+//! store bootstrapped from the synthetic dataset through the same engine —
+//! a fully self-consistent deployment that needs zero build-time steps.
 
 use std::time::Instant;
 
@@ -14,8 +22,16 @@ use crate::config::{Backend, ServeConfig};
 use crate::energy::{EnergyModel, Scale};
 use crate::error::{Error, Result};
 use crate::matching;
-use crate::runtime::{Meta, Runtime};
+use crate::runtime::{backend, FrontEnd, Meta};
 use crate::templates::TemplateStore;
+
+/// Samples drawn per class when bootstrapping templates without artifacts.
+const BOOTSTRAP_PER_CLASS: usize = 8;
+
+/// Synthetic-dataset seed for the bootstrap workload (distinct from the
+/// evaluation seeds the benches and tests use, so bootstrapped templates
+/// are never graded on their own training samples).
+const BOOTSTRAP_DATA_SEED: u64 = 0xB007_5EED;
 
 /// One classification outcome.
 #[derive(Debug, Clone)]
@@ -28,7 +44,7 @@ pub struct Classification {
 
 /// The assembled serving pipeline.
 pub struct Pipeline {
-    runtime: Runtime,
+    engine: Box<dyn FrontEnd>,
     pub meta: Meta,
     pub store: TemplateStore,
     backend: Backend,
@@ -36,42 +52,35 @@ pub struct Pipeline {
     acam: Option<AcamArray>,
     acam_var: Variability,
     energy: EnergyModel,
-    /// Front-end artifact prefix ("student_fwd_fast" on the CPU hot path,
-    /// "student_fwd" for the Pallas-lowered variant).
-    fwd_prefix: &'static str,
     /// Per-inference front-end energy (nJ), precomputed from the as-built
     /// effective MAC count.
     e_frontend_nj: f64,
-    /// Reusable padded image buffer (allocation-free hot path).
-    scratch: Vec<f32>,
     rng: crate::rng::Rng,
 }
 
 impl Pipeline {
-    /// Build from a serving config: loads meta.json + templates.json,
-    /// compiles the needed HLO artifacts, programs the ACAM array.
+    /// Build from a serving config: loads (or synthesises) meta.json and
+    /// templates.json, constructs the configured engine, programs the ACAM
+    /// array.
     pub fn new(cfg: &ServeConfig) -> Result<Self> {
         cfg.validate()?;
-        let meta = Meta::load(&cfg.artifacts_dir)?;
-        let store = TemplateStore::load(cfg.artifacts_dir.join("templates.json"))?;
-        let mut runtime = Runtime::new(&cfg.artifacts_dir)?;
-
-        // Precompile every batch variant of the front-end (and the softmax
-        // head when it is the backend) so compilation never hits the request
-        // path.
-        let fwd_prefix = if cfg.use_fast_frontend && has_fast_variant(&cfg.artifacts_dir, &meta) {
-            "student_fwd_fast"
+        // One probe decides real-vs-synthetic for the WHOLE deployment:
+        // meta, weights (InterpBackend uses the same meta.json probe), and
+        // templates must come from the same side, or a partially-written
+        // artifacts directory could silently mix trained templates with
+        // synthetic weights.
+        let have_artifacts = cfg.artifacts_dir.join("meta.json").is_file();
+        let meta = if have_artifacts {
+            Meta::load(&cfg.artifacts_dir)?
         } else {
-            "student_fwd"
+            Meta::synthetic()
         };
-        let prefix = if cfg.backend == Backend::Softmax {
-            "student_softmax"
+        let mut engine = backend::create(cfg, &meta)?;
+        let store = if have_artifacts {
+            TemplateStore::load(cfg.artifacts_dir.join("templates.json"))?
         } else {
-            fwd_prefix
+            bootstrap_store(engine.as_mut(), &meta, cfg.acam.seed)?
         };
-        for &b in &meta.artifacts.batch_sizes {
-            runtime.load(&format!("{prefix}_b{b}"))?;
-        }
 
         let set = store.set(cfg.templates_per_class)?;
         let acam = if cfg.backend == Backend::AcamSim {
@@ -94,15 +103,13 @@ impl Pipeline {
         let e_frontend_nj = energy.frontend_nj(frontend_ops);
 
         Ok(Pipeline {
-            runtime,
+            engine,
             backend: cfg.backend,
             k: cfg.templates_per_class,
             acam,
             acam_var: Variability::at_level(cfg.acam.variability_level),
             energy,
             e_frontend_nj,
-            fwd_prefix,
-            scratch: Vec::new(),
             rng: crate::rng::Rng::new(cfg.acam.seed ^ 0x5EED),
             meta,
             store,
@@ -115,94 +122,49 @@ impl Pipeline {
         s * s
     }
 
-    /// Run the front-end on `n` images packed in `images`, padding to the
-    /// artifact batch `b`; returns the first `n` rows of the output matrix
-    /// with `row_len` columns.
-    fn run_frontend(
-        &mut self,
-        name_prefix: &str,
-        images: &[f32],
-        n: usize,
-        b: usize,
-        row_len: usize,
-    ) -> Result<Vec<f32>> {
-        let img_len = self.image_len();
-        let s = self.meta.artifacts.image_size as i64;
-        if images.len() != n * img_len {
-            return Err(Error::Request(format!(
-                "batch buffer has {} floats, expected {} ({} images)",
-                images.len(),
-                n * img_len,
-                n
-            )));
-        }
-        // Pad into the reusable scratch buffer.
-        self.scratch.clear();
-        self.scratch.resize(b * img_len, 0.0);
-        self.scratch[..images.len()].copy_from_slice(images);
-        let name = format!("{name_prefix}_b{b}");
-        let exe = self.runtime.load(&name)?;
-        let out = exe.run_f32(&[(&self.scratch, &[b as i64, s, s, 1])])?;
-        if out.len() != b * row_len {
-            return Err(Error::Artifact(format!(
-                "{name} returned {} floats, expected {}",
-                out.len(),
-                b * row_len
-            )));
-        }
-        Ok(out[..n * row_len].to_vec())
+    /// Name of the deployed execution engine (diagnostics).
+    pub fn engine_name(&self) -> &'static str {
+        self.engine.name()
     }
 
     /// Extract (real-valued) feature maps for `n` images (public for the
-    /// benches and template-refresh example).
+    /// benches and template-refresh example).  Buffer-length validation is
+    /// the engine's contract (see [`FrontEnd`]).
     pub fn extract_features(&mut self, images: &[f32], n: usize) -> Result<Vec<f32>> {
+        let feats = self.engine.extract_features(images, n)?;
         let nf = self.meta.artifacts.n_features;
-        let max_b = *self.meta.artifacts.batch_sizes.iter().max().unwrap();
-        let prefix = self.fwd_prefix;
-        if n <= max_b {
-            let b = self.meta.batch_for(n);
-            return self.run_frontend(prefix, images, n, b, nf);
+        if feats.len() != n * nf {
+            return Err(Error::Backend(format!(
+                "{} front-end returned {} floats, expected {}",
+                self.engine.name(),
+                feats.len(),
+                n * nf
+            )));
         }
-        // Chunk oversized requests to artifact-sized dispatches.
-        let img_len = self.image_len();
-        let mut out = Vec::with_capacity(n * nf);
-        let mut i = 0;
-        while i < n {
-            let m = max_b.min(n - i);
-            let b = self.meta.batch_for(m);
-            out.extend(self.run_frontend(
-                prefix,
-                &images[i * img_len..(i + m) * img_len],
-                m,
-                b,
-                nf,
-            )?);
-            i += m;
-        }
-        Ok(out)
+        Ok(feats)
+    }
+
+    /// Modelled padding overhead for a batch of `n` (engine-specific: the
+    /// interpreter never pads; PJRT pads up to the exported artifact size).
+    pub fn padding_for(&self, n: usize) -> usize {
+        self.engine.padding_for(n)
     }
 
     /// Classify a batch of `n` images (timings recorded by the caller).
-    /// Batches beyond the largest exported artifact size are split into
-    /// artifact-sized chunks.
+    /// Engines accept arbitrary batch sizes (PJRT chunks internally).
     pub fn classify_batch(&mut self, images: &[f32], n: usize) -> Result<Vec<Classification>> {
-        let max_b = *self.meta.artifacts.batch_sizes.iter().max().unwrap();
-        if n > max_b {
-            let img_len = self.image_len();
-            let mut out = Vec::with_capacity(n);
-            let mut i = 0;
-            while i < n {
-                let m = max_b.min(n - i);
-                out.extend(self.classify_batch(&images[i * img_len..(i + m) * img_len], m)?);
-                i += m;
-            }
-            return Ok(out);
-        }
         let num_classes = self.store.num_classes;
         match self.backend {
             Backend::Softmax => {
-                let b = self.meta.batch_for(n);
-                let logits = self.run_frontend("student_softmax", images, n, b, num_classes)?;
+                let logits = self.engine.logits(images, n, num_classes)?;
+                if logits.len() != n * num_classes {
+                    return Err(Error::Backend(format!(
+                        "{} head returned {} floats, expected {}",
+                        self.engine.name(),
+                        logits.len(),
+                        n * num_classes
+                    )));
+                }
                 // Softmax baseline pays for the dense head: no ACAM term,
                 // head ops not removed (they are excluded from
                 // student_effective, which covers the pruned conv stack).
@@ -240,7 +202,11 @@ impl Pipeline {
                 let c = matching::classify_feature_count(&bits, set, num_classes);
                 // Digital matcher modelled at the same ACAM energy envelope
                 // (it replaces the same head); report the Eq. 14 figure.
-                (c, self.energy.backend_nj(set.num_templates() as u64, set.num_features() as u64))
+                (
+                    c,
+                    self.energy
+                        .backend_nj(set.num_templates() as u64, set.num_features() as u64),
+                )
             }
             Backend::Similarity => {
                 let qf: Vec<f32> = bits.iter().map(|&b| b as f32).collect();
@@ -251,7 +217,11 @@ impl Pipeline {
                     num_classes,
                     true,
                 );
-                (c, self.energy.backend_nj(set.num_templates() as u64, set.num_features() as u64))
+                (
+                    c,
+                    self.energy
+                        .backend_nj(set.num_templates() as u64, set.num_features() as u64),
+                )
             }
             Backend::AcamSim => {
                 let arr = self
@@ -321,11 +291,23 @@ impl Pipeline {
             n_features: set.num_features() as u64,
         })
     }
+}
 
-    /// Access the underlying runtime (benches).
-    pub fn runtime_mut(&mut self) -> &mut Runtime {
-        &mut self.runtime
-    }
+/// Bootstrap a template store from the synthetic dataset through the
+/// deployed engine (the artifact-free path): render a labelled workload,
+/// extract features, and hand them to [`TemplateStore::from_features`].
+fn bootstrap_store(engine: &mut dyn FrontEnd, meta: &Meta, seed: u64) -> Result<TemplateStore> {
+    let classes = crate::dataset::NUM_CLASSES;
+    let n = BOOTSTRAP_PER_CLASS * classes;
+    let ds = crate::dataset::SyntheticDataset::new(
+        BOOTSTRAP_DATA_SEED,
+        n,
+        meta.norm.mean as f32,
+        meta.norm.std as f32,
+    );
+    let (images, labels) = ds.batch(0, n);
+    let feats = engine.extract_features(&images, n)?;
+    TemplateStore::from_features(&feats, &labels, meta.artifacts.n_features, classes, seed)
 }
 
 /// Accuracy/confusion summary of an evaluation run.
@@ -354,12 +336,6 @@ impl Evaluation {
             })
             .collect()
     }
-}
-
-/// Does the artifact set include the jnp-lowered fast front-end?
-fn has_fast_variant(dir: &std::path::Path, meta: &Meta) -> bool {
-    let b = meta.artifacts.batch_sizes.first().copied().unwrap_or(1);
-    dir.join(format!("student_fwd_fast_b{b}.hlo.txt")).is_file()
 }
 
 fn argmax(xs: &[f32]) -> usize {

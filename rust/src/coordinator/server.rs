@@ -1,7 +1,8 @@
-//! The serving loop: a dedicated worker thread owns the (non-`Send`) PJRT
-//! pipeline; callers submit requests through a bounded channel (the
-//! backpressure boundary) and wait on per-request oneshot channels, so
-//! multi-threaded front-ends (and the CLI demo driver) compose naturally.
+//! The serving loop: a dedicated worker thread owns the pipeline (the
+//! engine trait object is not `Send` — PJRT handles cannot cross threads);
+//! callers submit requests through a bounded channel (the backpressure
+//! boundary) and wait on per-request oneshot channels, so multi-threaded
+//! front-ends (and the CLI demo driver) compose naturally.
 
 use std::sync::mpsc::{sync_channel, SyncSender, TrySendError};
 use std::sync::Arc;
@@ -117,7 +118,7 @@ impl Server {
                     for job in &batch {
                         buf.extend_from_slice(&job.image);
                     }
-                    let padded = pipeline.meta.batch_for(n) - n;
+                    let padded = pipeline.padding_for(n);
                     m.padded_slots.fetch_add(padded as u64, Relaxed);
 
                     let t0 = Instant::now();

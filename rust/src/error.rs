@@ -1,47 +1,99 @@
 //! Unified error type for the serving stack.
+//!
+//! Hand-implemented `Display` / `std::error::Error` (`thiserror` is
+//! unavailable offline; the default build carries zero external
+//! dependencies).
 
-use thiserror::Error;
+use std::fmt;
 
 /// Library-wide result alias.
 pub type Result<T> = std::result::Result<T, Error>;
 
 /// All failure modes the coordinator can surface to a caller.
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum Error {
-    /// PJRT / XLA runtime failures (compile, execute, literal marshalling).
-    #[error("xla: {0}")]
-    Xla(String),
+    /// Execution-backend failures (interpreter shape mismatches; PJRT
+    /// compile / execute / literal marshalling when the `pjrt` feature is
+    /// enabled).
+    Backend(String),
 
     /// Artifact loading / validation problems (missing files, shape
-    /// mismatches between meta.json and the HLO modules).
-    #[error("artifact: {0}")]
+    /// mismatches between meta.json and the parameter sidecars).
     Artifact(String),
 
     /// Template store inconsistencies (wrong feature width, empty classes).
-    #[error("template: {0}")]
     Template(String),
 
     /// Request-level errors (bad image shape, closed channels, timeouts).
-    #[error("request: {0}")]
     Request(String),
 
     /// Configuration errors.
-    #[error("config: {0}")]
     Config(String),
 
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
+    /// I/O failures while reading artifacts or configuration files.
+    Io(std::io::Error),
 
-    #[error("json: {0}")]
-    Json(#[from] crate::jsonlite::ParseError),
+    /// JSON syntax errors from [`crate::jsonlite`].
+    Json(crate::jsonlite::ParseError),
 
     /// Schema errors while extracting typed fields from parsed JSON.
-    #[error("schema: {0}")]
     Schema(String),
 }
 
-impl From<xla::Error> for Error {
-    fn from(e: xla::Error) -> Self {
-        Error::Xla(e.to_string())
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Backend(m) => write!(f, "backend: {m}"),
+            Error::Artifact(m) => write!(f, "artifact: {m}"),
+            Error::Template(m) => write!(f, "template: {m}"),
+            Error::Request(m) => write!(f, "request: {m}"),
+            Error::Config(m) => write!(f, "config: {m}"),
+            Error::Io(e) => write!(f, "io: {e}"),
+            Error::Json(e) => write!(f, "json: {e}"),
+            Error::Schema(m) => write!(f, "schema: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            Error::Json(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+impl From<crate::jsonlite::ParseError> for Error {
+    fn from(e: crate::jsonlite::ParseError) -> Self {
+        Error::Json(e)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_includes_category_prefix() {
+        assert_eq!(
+            Error::Backend("boom".into()).to_string(),
+            "backend: boom"
+        );
+        assert_eq!(Error::Config("bad".into()).to_string(), "config: bad");
+    }
+
+    #[test]
+    fn io_errors_convert_and_chain() {
+        let e: Error = std::io::Error::new(std::io::ErrorKind::NotFound, "gone").into();
+        assert!(e.to_string().starts_with("io:"));
+        assert!(std::error::Error::source(&e).is_some());
     }
 }

@@ -4,11 +4,15 @@
 //! with RRAM-CMOS ACAM for Energy-Efficient Inference"* (Woodward et al.,
 //! 2025).
 //!
-//! The serving runtime is self-contained after `make artifacts`:
+//! The serving runtime is self-contained — it runs on a clean checkout
+//! with no artifacts at all (synthetic weights + bootstrapped templates),
+//! and picks up the real `make artifacts` outputs when they exist:
 //!
-//! * [`runtime`] loads AOT-compiled HLO text modules (the student CNN
-//!   front-end, lowered from JAX+Pallas) onto the PJRT CPU client and runs
-//!   them on the request hot path — Python is never invoked at runtime.
+//! * [`runtime`] hosts the pluggable front-end execution backends behind
+//!   the [`runtime::FrontEnd`] trait: a pure-Rust interpreter that ports
+//!   the Python reference kernels (the default engine everywhere), and the
+//!   PJRT path that compiles AOT-exported HLO text modules (cargo feature
+//!   `pjrt`).  Python is never invoked at runtime either way.
 //! * [`acam`] is a circuit-level behavioural simulator of the RRAM-CMOS
 //!   TXL-ACAM back-end (6T4R charging and 3T1R precharging cells, matchline
 //!   dynamics, sense amplifiers, analogue winner-take-all) standing in for
@@ -23,11 +27,12 @@
 //!   store, on-device clustering, configuration).
 
 //!
-//! Offline-environment note: only the `xla` crate's dependency tree is
-//! vendored, so [`jsonlite`] (JSON), [`rng`] (SplitMix64 + Box-Muller) and
-//! [`benchkit`] (timing harness) replace serde / rand / criterion, the
+//! Offline-environment note: the default build has **zero external
+//! dependencies** — [`jsonlite`] (JSON), [`rng`] (SplitMix64 + Box-Muller)
+//! and [`benchkit`] (timing harness) replace serde / rand / criterion, the
 //! serving loop is built on `std::thread` + bounded channels instead of
-//! tokio, and the CLI is hand-parsed instead of clap.
+//! tokio, and the CLI is hand-parsed instead of clap.  The `xla` crate is
+//! only referenced behind the `pjrt` cargo feature (see Cargo.toml).
 
 pub mod acam;
 pub mod benchkit;

@@ -11,19 +11,26 @@
 //! * `acam-sim`  — ACAM variability sweep (accuracy vs device non-ideality);
 //! * `info`      — artifact inventory and metadata.
 //!
-//! Global flags: `--artifacts DIR` `--backend acam|fc|sim|softmax`
-//! `--templates K` `--variability LEVEL` `--config serve.json`.
+//! Global flags: `--artifacts DIR` `--engine interp|pjrt`
+//! `--backend acam|fc|sim|softmax` `--templates K` `--variability LEVEL`
+//! `--config serve.json`.
+//!
+//! Every subcommand works without an artifacts directory: the default
+//! interp engine then serves from synthetic weights and bootstrapped
+//! templates (see `hec::coordinator::Pipeline`).
 
 use std::collections::HashMap;
 
-use hec::config::{Backend, ServeConfig};
+use hec::config::{Backend, Engine, ServeConfig};
 use hec::coordinator::{Pipeline, Server};
 use hec::dataset::{SyntheticDataset, CLASS_NAMES};
 use hec::energy::{EnergyModel, Scale};
 use hec::runtime::Meta;
+use hec::Error;
 
-const USAGE: &str = "usage: hec [--artifacts DIR] [--backend acam|fc|sim|softmax] \
-[--templates K] [--variability L] [--frontend fast|pallas] [--config FILE] \
+const USAGE: &str = "usage: hec [--artifacts DIR] [--engine interp|pjrt] \
+[--backend acam|fc|sim|softmax] [--templates K] [--variability L] \
+[--frontend fast|pallas] [--config FILE] \
 <serve|classify|eval|energy|acam-sim|info> [--requests N] [--concurrency N] \
 [--count N] [--samples N] [--batch N] [--levels 0,1,2]";
 
@@ -66,7 +73,7 @@ impl Args {
     }
 }
 
-fn serve_config(args: &Args) -> anyhow::Result<ServeConfig> {
+fn serve_config(args: &Args) -> hec::Result<ServeConfig> {
     let mut cfg = match args.flags.get("config") {
         Some(path) => ServeConfig::load(path)?,
         None => ServeConfig::default(),
@@ -74,18 +81,36 @@ fn serve_config(args: &Args) -> anyhow::Result<ServeConfig> {
     if let Some(dir) = args.flags.get("artifacts") {
         cfg.artifacts_dir = dir.into();
     }
+    if let Some(e) = args.flags.get("engine") {
+        cfg.engine = e.parse::<Engine>()?;
+    }
     if let Some(b) = args.flags.get("backend") {
         cfg.backend = b.parse::<Backend>()?;
     }
-    cfg.templates_per_class = args.get("templates", cfg.templates_per_class).map_err(anyhow::Error::msg)?;
+    cfg.templates_per_class = args
+        .get("templates", cfg.templates_per_class)
+        .map_err(Error::Config)?;
     if let Some(f) = args.flags.get("frontend") {
+        if cfg.engine != Engine::Pjrt {
+            return Err(Error::Config(
+                "--frontend only applies to the pjrt engine (pass --engine pjrt); \
+                 the interp engine has no fast/pallas artifact split"
+                    .into(),
+            ));
+        }
         cfg.use_fast_frontend = match f.as_str() {
             "fast" => true,
             "pallas" => false,
-            other => anyhow::bail!("--frontend must be fast|pallas, got {other}"),
+            other => {
+                return Err(Error::Config(format!(
+                    "--frontend must be fast|pallas, got {other}"
+                )))
+            }
         };
     }
-    cfg.acam.variability_level = args.get("variability", cfg.acam.variability_level).map_err(anyhow::Error::msg)?;
+    cfg.acam.variability_level = args
+        .get("variability", cfg.acam.variability_level)
+        .map_err(Error::Config)?;
     cfg.validate()?;
     Ok(cfg)
 }
@@ -95,7 +120,7 @@ fn test_workload(meta: &Meta, n: usize, seed: u64) -> (Vec<f32>, Vec<usize>) {
     ds.batch(0, n)
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> hec::Result<()> {
     let args = match parse_args() {
         Ok(a) => a,
         Err(e) => {
@@ -107,7 +132,14 @@ fn main() -> anyhow::Result<()> {
 
     match args.cmd.as_str() {
         "info" => {
-            let meta = Meta::load(&cfg.artifacts_dir)?;
+            let meta = Meta::load_or_synthetic(&cfg.artifacts_dir)?;
+            if meta.dataset.source == "synthetic-fallback" {
+                println!(
+                    "(no artifacts at {} — synthetic fallback deployment)",
+                    cfg.artifacts_dir.display()
+                );
+            }
+            println!("engine: {:?}", cfg.engine);
             println!(
                 "dataset: {} (train={}, test={})",
                 meta.dataset.source, meta.dataset.train, meta.dataset.test
@@ -140,7 +172,7 @@ fn main() -> anyhow::Result<()> {
             let model = EnergyModel::default();
             println!("=== §V.D energy report (paper scale) ===");
             println!("{}", model.report(Scale::Paper));
-            if let Ok(meta) = Meta::load(&cfg.artifacts_dir) {
+            if let Ok(meta) = Meta::load_or_synthetic(&cfg.artifacts_dir) {
                 println!("\n=== as-built scale ===");
                 println!(
                     "{}",
@@ -154,13 +186,12 @@ fn main() -> anyhow::Result<()> {
             }
         }
         "classify" => {
-            let count: usize = args.get("count", 10).map_err(anyhow::Error::msg)?;
+            let count: usize = args.get("count", 10).map_err(Error::Config)?;
             let mut pipeline = Pipeline::new(&cfg)?;
             let (images, labels) = test_workload(&pipeline.meta, count, 999);
             let img_len = pipeline.image_len();
             for i in 0..count {
-                let res =
-                    pipeline.classify_batch(&images[i * img_len..(i + 1) * img_len], 1)?;
+                let res = pipeline.classify_batch(&images[i * img_len..(i + 1) * img_len], 1)?;
                 println!(
                     "sample {i}: predicted={} ({}) truth={} energy={:.2} nJ",
                     res[0].class, CLASS_NAMES[res[0].class], labels[i], res[0].energy_nj
@@ -168,14 +199,17 @@ fn main() -> anyhow::Result<()> {
             }
         }
         "eval" => {
-            let samples: usize = args.get("samples", 600).map_err(anyhow::Error::msg)?;
-            let batch: usize = args.get("batch", 32).map_err(anyhow::Error::msg)?;
+            let samples: usize = args.get("samples", 600).map_err(Error::Config)?;
+            let batch: usize = args.get("batch", 32).map_err(Error::Config)?;
             let mut pipeline = Pipeline::new(&cfg)?;
             let (images, labels) = test_workload(&pipeline.meta, samples, 1_000_003);
             let eval = pipeline.evaluate(&images, &labels, batch)?;
             println!(
-                "backend={:?} k={} samples={}",
-                cfg.backend, cfg.templates_per_class, eval.n
+                "engine={} backend={:?} k={} samples={}",
+                pipeline.engine_name(),
+                cfg.backend,
+                cfg.templates_per_class,
+                eval.n
             );
             println!("accuracy = {:.4}", eval.accuracy);
             println!(
@@ -201,7 +235,7 @@ fn main() -> anyhow::Result<()> {
             }
         }
         "acam-sim" => {
-            let samples: usize = args.get("samples", 300).map_err(anyhow::Error::msg)?;
+            let samples: usize = args.get("samples", 300).map_err(Error::Config)?;
             let levels_s = args
                 .flags
                 .get("levels")
@@ -223,11 +257,11 @@ fn main() -> anyhow::Result<()> {
             }
         }
         "serve" => {
-            let requests: usize = args.get("requests", 2000).map_err(anyhow::Error::msg)?;
-            let concurrency: usize = args.get("concurrency", 64).map_err(anyhow::Error::msg)?;
+            let requests: usize = args.get("requests", 2000).map_err(Error::Config)?;
+            let concurrency: usize = args.get("concurrency", 64).map_err(Error::Config)?;
             let server = Server::start(cfg.clone())?;
             let handle = server.handle.clone();
-            let meta = Meta::load(&cfg.artifacts_dir)?;
+            let meta = Meta::load_or_synthetic(&cfg.artifacts_dir)?;
             let (images, _) = test_workload(&meta, 256, 77);
             let img_len = meta.artifacts.image_size * meta.artifacts.image_size;
 

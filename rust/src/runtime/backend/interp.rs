@@ -1,0 +1,576 @@
+//! `InterpBackend` — the pure-Rust student-CNN inference engine.
+//!
+//! Ports the Fig.-5 student forward pass (`python/compile/model.py::
+//! student_features` / `student_logits`, inference mode) on top of the
+//! reference kernels in [`super::kernels`]:
+//!
+//! ```text
+//! conv1 SAME -> BN -> ReLU -> maxpool2
+//! conv2 SAME -> BN -> ReLU -> maxpool2
+//! conv3 SAME -> ReLU
+//! conv4 VALID -> ReLU -> flatten (the ACAM query features)
+//! [dense head -> logits]            (softmax baseline only)
+//! ```
+//!
+//! Weights come from the existing `<name>.params.{json,bin}` sidecars
+//! (loaded through [`crate::runtime::params`]) when an artifacts directory
+//! is present — `student_softmax_b*` first because it carries the dense
+//! head, then `student_fwd_b*` — or from a deterministic He-initialised
+//! synthetic student when serving without artifacts (the zero-setup
+//! quickstart path: templates are bootstrapped from the same weights, so
+//! the whole stack stays self-consistent).
+
+use std::path::Path;
+
+use crate::config::ServeConfig;
+use crate::error::{Error, Result};
+use crate::rng::Rng;
+use crate::runtime::meta::Meta;
+use crate::runtime::params::{self, ParamArray};
+
+use super::kernels::{self, Padding};
+use super::FrontEnd;
+
+/// Filter widths (conv1..conv4 output channels) of the synthetic fallback
+/// student.  Slimmer than the Fig.-5 deployment so the interpreter stays
+/// fast in debug builds; the trailing 16 keeps the 7x7x16 = 784 feature
+/// contract at image size 32.
+pub const SYNTH_FILTERS: [usize; 4] = [8, 16, 32, 16];
+
+/// Seed for the synthetic He-initialised weights (fixed so every pipeline
+/// in a process — and across processes — sees the same fallback model).
+pub const SYNTH_WEIGHT_SEED: u64 = 0x5EED_F00D;
+
+/// One convolution layer: HWIO weights (`[kh, kw, cin, cout]` row-major)
+/// plus bias.
+#[derive(Debug, Clone)]
+pub struct Conv {
+    pub w: Vec<f32>,
+    pub b: Vec<f32>,
+    pub kh: usize,
+    pub kw: usize,
+    pub cin: usize,
+    pub cout: usize,
+}
+
+/// Frozen batch-norm statistics and affine parameters.
+#[derive(Debug, Clone)]
+pub struct BatchNorm {
+    pub gamma: Vec<f32>,
+    pub beta: Vec<f32>,
+    pub mean: Vec<f32>,
+    pub var: Vec<f32>,
+}
+
+/// The dense softmax head: `[din, dout]` weights plus bias.
+#[derive(Debug, Clone)]
+pub struct Dense {
+    pub w: Vec<f32>,
+    pub b: Vec<f32>,
+    pub din: usize,
+    pub dout: usize,
+}
+
+/// The full student parameter set.
+#[derive(Debug, Clone)]
+pub struct StudentParams {
+    pub conv1: Conv,
+    pub bn1: BatchNorm,
+    pub conv2: Conv,
+    pub bn2: BatchNorm,
+    pub conv3: Conv,
+    pub conv4: Conv,
+    /// Absent in the feature-extractor-only sidecars (`student_fwd_b*`).
+    pub head: Option<Dense>,
+}
+
+fn conv_from(b: &ParamArray, w: &ParamArray, name: &str) -> Result<Conv> {
+    if w.shape.len() != 4 {
+        return Err(Error::Artifact(format!(
+            "{name}: conv weight must be rank-4 HWIO, got shape {:?}",
+            w.shape
+        )));
+    }
+    let (kh, kw, cin, cout) = (w.shape[0], w.shape[1], w.shape[2], w.shape[3]);
+    if b.shape.len() != 1 || b.shape[0] != cout {
+        return Err(Error::Artifact(format!(
+            "{name}: bias shape {:?} does not match cout {cout}",
+            b.shape
+        )));
+    }
+    Ok(Conv {
+        w: w.data.clone(),
+        b: b.data.clone(),
+        kh,
+        kw,
+        cin,
+        cout,
+    })
+}
+
+fn bn_from(
+    beta: &ParamArray,
+    gamma: &ParamArray,
+    mean: &ParamArray,
+    var: &ParamArray,
+    c: usize,
+    name: &str,
+) -> Result<BatchNorm> {
+    for (what, a) in [("beta", beta), ("gamma", gamma), ("mean", mean), ("var", var)] {
+        if a.data.len() != c {
+            return Err(Error::Artifact(format!(
+                "{name}.{what}: expected {c} values, got {}",
+                a.data.len()
+            )));
+        }
+    }
+    Ok(BatchNorm {
+        gamma: gamma.data.clone(),
+        beta: beta.data.clone(),
+        mean: mean.data.clone(),
+        var: var.data.clone(),
+    })
+}
+
+impl StudentParams {
+    /// Assemble from a parameter sidecar in the AOT export's argument order
+    /// (`aot.py` flattens `({bn1, bn2, conv1..4[, head]}, {bn1, bn2})` with
+    /// jax `tree_flatten`, which sorts dict keys):
+    ///
+    /// ```text
+    ///  0 bn1.beta    1 bn1.gamma   2 bn2.beta    3 bn2.gamma
+    ///  4 conv1.b     5 conv1.w     6 conv2.b     7 conv2.w
+    ///  8 conv3.b     9 conv3.w    10 conv4.b    11 conv4.w
+    /// [12 head.b    13 head.w]     then bn1.mean, bn1.var, bn2.mean, bn2.var
+    /// ```
+    pub fn from_sidecar(arrays: &[ParamArray], with_head: bool) -> Result<StudentParams> {
+        let want = if with_head { 18 } else { 16 };
+        if arrays.len() != want {
+            return Err(Error::Artifact(format!(
+                "parameter sidecar has {} arrays, expected {want}",
+                arrays.len()
+            )));
+        }
+        let conv1 = conv_from(&arrays[4], &arrays[5], "conv1")?;
+        let conv2 = conv_from(&arrays[6], &arrays[7], "conv2")?;
+        let conv3 = conv_from(&arrays[8], &arrays[9], "conv3")?;
+        let conv4 = conv_from(&arrays[10], &arrays[11], "conv4")?;
+        let state = if with_head { 14 } else { 12 };
+        let bn1 = bn_from(
+            &arrays[0],
+            &arrays[1],
+            &arrays[state],
+            &arrays[state + 1],
+            conv1.cout,
+            "bn1",
+        )?;
+        let bn2 = bn_from(
+            &arrays[2],
+            &arrays[3],
+            &arrays[state + 2],
+            &arrays[state + 3],
+            conv2.cout,
+            "bn2",
+        )?;
+        let head = if with_head {
+            let (hb, hw) = (&arrays[12], &arrays[13]);
+            if hw.shape.len() != 2 {
+                return Err(Error::Artifact(format!(
+                    "head weight must be rank-2, got shape {:?}",
+                    hw.shape
+                )));
+            }
+            Some(Dense {
+                w: hw.data.clone(),
+                b: hb.data.clone(),
+                din: hw.shape[0],
+                dout: hw.shape[1],
+            })
+        } else {
+            None
+        };
+        Ok(StudentParams {
+            conv1,
+            bn1,
+            conv2,
+            bn2,
+            conv3,
+            conv4,
+            head,
+        })
+    }
+
+    /// Deterministic He-initialised synthetic student ([`SYNTH_FILTERS`]
+    /// channel widths, identity batch-norm, zero biases).
+    pub fn synthetic(seed: u64) -> StudentParams {
+        let [f1, f2, f3, f4] = SYNTH_FILTERS;
+        let mut rng = Rng::new(seed);
+        let conv1 = he_conv(&mut rng, 3, 3, 1, f1);
+        let conv2 = he_conv(&mut rng, 3, 3, f1, f2);
+        let conv3 = he_conv(&mut rng, 3, 3, f2, f3);
+        let conv4 = he_conv(&mut rng, 2, 2, f3, f4);
+        let head = he_dense(&mut rng, 7 * 7 * f4, crate::dataset::NUM_CLASSES);
+        StudentParams {
+            conv1,
+            bn1: identity_bn(f1),
+            conv2,
+            bn2: identity_bn(f2),
+            conv3,
+            conv4,
+            head: Some(head),
+        }
+    }
+}
+
+fn he_conv(rng: &mut Rng, kh: usize, kw: usize, cin: usize, cout: usize) -> Conv {
+    let std = (2.0 / (kh * kw * cin) as f64).sqrt();
+    let w = (0..kh * kw * cin * cout)
+        .map(|_| (rng.gauss() * std) as f32)
+        .collect();
+    Conv {
+        w,
+        b: vec![0.0; cout],
+        kh,
+        kw,
+        cin,
+        cout,
+    }
+}
+
+fn he_dense(rng: &mut Rng, din: usize, dout: usize) -> Dense {
+    let std = (2.0 / din as f64).sqrt();
+    let w = (0..din * dout).map(|_| (rng.gauss() * std) as f32).collect();
+    Dense {
+        w,
+        b: vec![0.0; dout],
+        din,
+        dout,
+    }
+}
+
+fn identity_bn(c: usize) -> BatchNorm {
+    BatchNorm {
+        gamma: vec![1.0; c],
+        beta: vec![0.0; c],
+        mean: vec![0.0; c],
+        var: vec![1.0; c],
+    }
+}
+
+fn conv(x: &[f32], h: usize, w: usize, layer: &Conv, pad: Padding) -> (Vec<f32>, usize, usize) {
+    kernels::conv2d(
+        x, h, w, layer.cin, &layer.w, layer.kh, layer.kw, layer.cout, &layer.b, pad,
+    )
+}
+
+/// The pure-Rust execution engine.
+pub struct InterpBackend {
+    params: StudentParams,
+    image_size: usize,
+    n_features: usize,
+}
+
+impl InterpBackend {
+    /// Load weights from the artifacts directory when one exists (detected
+    /// by `meta.json`, the same probe [`Meta::load_or_synthetic`] uses), or
+    /// fall back to the synthetic student.
+    pub fn new(cfg: &ServeConfig, meta: &Meta) -> Result<InterpBackend> {
+        let params = if cfg.artifacts_dir.join("meta.json").is_file() {
+            Self::load_sidecars(&cfg.artifacts_dir, meta)?
+        } else {
+            StudentParams::synthetic(SYNTH_WEIGHT_SEED)
+        };
+        let backend = InterpBackend {
+            image_size: meta.artifacts.image_size,
+            n_features: meta.artifacts.n_features,
+            params,
+        };
+        let produced = backend.feature_len();
+        if produced != backend.n_features {
+            return Err(Error::Artifact(format!(
+                "interp front-end produces {produced} features, meta.json says {}",
+                backend.n_features
+            )));
+        }
+        Ok(backend)
+    }
+
+    fn load_sidecars(dir: &Path, meta: &Meta) -> Result<StudentParams> {
+        let b = meta.artifacts.batch_sizes.iter().min().copied().unwrap_or(1);
+        let full = params::load_params(dir, &format!("student_softmax_b{b}"))?;
+        if !full.is_empty() {
+            return StudentParams::from_sidecar(&full, true);
+        }
+        let fe = params::load_params(dir, &format!("student_fwd_b{b}"))?;
+        if !fe.is_empty() {
+            return StudentParams::from_sidecar(&fe, false);
+        }
+        Err(Error::Artifact(format!(
+            "no interp-loadable parameter sidecar (student_softmax_b{b}.params.json or \
+             student_fwd_b{b}.params.json) in {}",
+            dir.display()
+        )))
+    }
+
+    /// Feature width implied by the layer stack at this image size: two 2x2
+    /// pools, then the VALID conv4 shrink.
+    fn feature_len(&self) -> usize {
+        let s = self.image_size / 4 + 1 - self.params.conv4.kh;
+        s * s * self.params.conv4.cout
+    }
+
+    /// The full `student_features` forward pass for one `[s, s, 1]` image.
+    fn forward_one(&self, img: &[f32]) -> Vec<f32> {
+        let p = &self.params;
+        let s = self.image_size;
+        let (mut h, hh, ww) = conv(img, s, s, &p.conv1, Padding::Same);
+        kernels::batchnorm(&mut h, p.conv1.cout, &p.bn1.gamma, &p.bn1.beta, &p.bn1.mean, &p.bn1.var);
+        kernels::relu(&mut h);
+        let (h, hh, ww) = kernels::maxpool2(&h, hh, ww, p.conv1.cout);
+        let (mut h, hh, ww) = conv(&h, hh, ww, &p.conv2, Padding::Same);
+        kernels::batchnorm(&mut h, p.conv2.cout, &p.bn2.gamma, &p.bn2.beta, &p.bn2.mean, &p.bn2.var);
+        kernels::relu(&mut h);
+        let (h, hh, ww) = kernels::maxpool2(&h, hh, ww, p.conv2.cout);
+        let (mut h, hh, ww) = conv(&h, hh, ww, &p.conv3, Padding::Same);
+        kernels::relu(&mut h);
+        let (mut h, _hh, _ww) = conv(&h, hh, ww, &p.conv4, Padding::Valid);
+        kernels::relu(&mut h);
+        h
+    }
+}
+
+impl FrontEnd for InterpBackend {
+    fn name(&self) -> &'static str {
+        "interp"
+    }
+
+    fn extract_features(&mut self, images: &[f32], n: usize) -> Result<Vec<f32>> {
+        let img_len = self.image_size * self.image_size;
+        if images.len() != n * img_len {
+            return Err(Error::Request(format!(
+                "batch buffer has {} floats, expected {} ({n} images)",
+                images.len(),
+                n * img_len
+            )));
+        }
+        let mut out = Vec::with_capacity(n * self.n_features);
+        for img in images.chunks_exact(img_len) {
+            out.extend(self.forward_one(img));
+        }
+        Ok(out)
+    }
+
+    fn logits(&mut self, images: &[f32], n: usize, num_classes: usize) -> Result<Vec<f32>> {
+        let feats = self.extract_features(images, n)?;
+        let head = self.params.head.as_ref().ok_or_else(|| {
+            Error::Artifact(
+                "softmax head unavailable (feature-extractor-only parameter set)".into(),
+            )
+        })?;
+        if head.dout != num_classes {
+            return Err(Error::Config(format!(
+                "head emits {} classes, pipeline expects {num_classes}",
+                head.dout
+            )));
+        }
+        if head.din != self.n_features {
+            return Err(Error::Artifact(format!(
+                "head expects {} features, front-end produces {}",
+                head.din, self.n_features
+            )));
+        }
+        Ok(kernels::dense(&feats, n, head.din, &head.w, &head.b, head.dout))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn seq(n: usize, scale: f64, off: f64) -> Vec<f32> {
+        (0..n).map(|i| (i as f64 * scale + off) as f32).collect()
+    }
+
+    fn assert_close(got: &[f32], want: &[f32], tol: f32) {
+        assert_eq!(got.len(), want.len(), "length mismatch");
+        for (i, (g, w)) in got.iter().zip(want.iter()).enumerate() {
+            assert!(
+                (g - w).abs() <= tol + tol * w.abs(),
+                "element {i}: got {g}, want {w}"
+            );
+        }
+    }
+
+    /// A tiny student (8x8 input, channels 2/3/4/5) with deterministic
+    /// weights; goldens generated by running the identical layer chain
+    /// through python/compile/kernels/ref.py (see the PR's golden
+    /// generator: conv1 SAME -> bn -> relu -> pool -> conv2 SAME -> bn ->
+    /// relu -> pool -> conv3 SAME -> relu -> conv4 VALID -> relu).
+    fn mini_student() -> InterpBackend {
+        let params = StudentParams {
+            conv1: Conv {
+                w: seq(18, 0.11, -0.9),
+                b: vec![0.05, -0.1],
+                kh: 3,
+                kw: 3,
+                cin: 1,
+                cout: 2,
+            },
+            bn1: BatchNorm {
+                gamma: vec![1.1, 0.9],
+                beta: vec![0.02, -0.03],
+                mean: vec![0.3, -0.2],
+                var: vec![0.8, 1.3],
+            },
+            conv2: Conv {
+                w: seq(54, 0.04, -1.0),
+                b: vec![0.0, 0.1, -0.05],
+                kh: 3,
+                kw: 3,
+                cin: 2,
+                cout: 3,
+            },
+            bn2: BatchNorm {
+                gamma: vec![0.95, 1.05, 1.0],
+                beta: vec![0.0, 0.05, -0.02],
+                mean: vec![0.1, 0.0, -0.1],
+                var: vec![1.1, 0.9, 1.0],
+            },
+            conv3: Conv {
+                w: seq(108, 0.02, -0.3),
+                b: vec![0.01, -0.01, 0.02, 0.0],
+                kh: 3,
+                kw: 3,
+                cin: 3,
+                cout: 4,
+            },
+            conv4: Conv {
+                w: seq(80, 0.01, -0.15),
+                b: vec![0.0, 0.02, -0.02, 0.01, -0.01],
+                kh: 2,
+                kw: 2,
+                cin: 4,
+                cout: 5,
+            },
+            head: Some(Dense {
+                w: seq(50, 0.017, -0.4),
+                b: seq(10, 0.01, -0.04),
+                din: 5,
+                dout: 10,
+            }),
+        };
+        InterpBackend {
+            params,
+            image_size: 8,
+            n_features: 5,
+        }
+    }
+
+    #[test]
+    fn mini_student_features_match_ref_chain() {
+        let mut be = mini_student();
+        let img = seq(64, 0.03, -0.9);
+        let feats = be.extract_features(&img, 1).unwrap();
+        let want = [40.4683, 44.6168, 48.7053, 52.8638, 56.9724];
+        assert_close(&feats, &want, 1e-3);
+    }
+
+    #[test]
+    fn mini_student_logits_match_ref_chain() {
+        let mut be = mini_student();
+        let img = seq(64, 0.03, -0.9);
+        let logits = be.logits(&img, 1, 10).unwrap();
+        let want = [
+            -7.64424, -3.49259, 0.659067, 4.81072, 8.96237, 13.114, 17.2657, 21.4173, 25.569,
+            29.7206,
+        ];
+        assert_close(&logits, &want, 1e-3);
+    }
+
+    #[test]
+    fn synthetic_params_are_deterministic_and_shaped() {
+        let a = StudentParams::synthetic(7);
+        let b = StudentParams::synthetic(7);
+        assert_eq!(a.conv1.w, b.conv1.w);
+        assert_eq!(a.head.as_ref().unwrap().w, b.head.as_ref().unwrap().w);
+        let [f1, f2, f3, f4] = SYNTH_FILTERS;
+        assert_eq!(a.conv1.w.len(), 9 * f1);
+        assert_eq!(a.conv2.w.len(), 9 * f1 * f2);
+        assert_eq!(a.conv3.w.len(), 9 * f2 * f3);
+        assert_eq!(a.conv4.w.len(), 4 * f3 * f4);
+        assert_eq!(a.head.as_ref().unwrap().din, 7 * 7 * f4);
+    }
+
+    #[test]
+    fn batch_and_single_extraction_agree() {
+        let mut be = mini_student();
+        let one = seq(64, 0.03, -0.9);
+        let mut three = Vec::new();
+        for _ in 0..3 {
+            three.extend_from_slice(&one);
+        }
+        let f1 = be.extract_features(&one, 1).unwrap();
+        let f3 = be.extract_features(&three, 3).unwrap();
+        for i in 0..3 {
+            assert_eq!(&f3[i * 5..(i + 1) * 5], &f1[..]);
+        }
+    }
+
+    #[test]
+    fn wrong_buffer_size_is_request_error() {
+        let mut be = mini_student();
+        match be.extract_features(&[0.0; 10], 1) {
+            Err(Error::Request(_)) => {}
+            other => panic!("expected request error, got {:?}", other.map(|v| v.len())),
+        }
+    }
+
+    #[test]
+    fn sidecar_roundtrip_reconstructs_params() {
+        // Build an 18-array sidecar in the export order from a synthetic
+        // student, then reload it and compare.
+        let sp = StudentParams::synthetic(3);
+        let head = sp.head.clone().unwrap();
+        let arr = |shape: Vec<usize>, data: &[f32]| ParamArray {
+            shape,
+            data: data.to_vec(),
+        };
+        let conv_arrays = |c: &Conv| {
+            (
+                arr(vec![c.cout], &c.b),
+                arr(vec![c.kh, c.kw, c.cin, c.cout], &c.w),
+            )
+        };
+        let (c1b, c1w) = conv_arrays(&sp.conv1);
+        let (c2b, c2w) = conv_arrays(&sp.conv2);
+        let (c3b, c3w) = conv_arrays(&sp.conv3);
+        let (c4b, c4w) = conv_arrays(&sp.conv4);
+        let arrays = vec![
+            arr(vec![sp.conv1.cout], &sp.bn1.beta),
+            arr(vec![sp.conv1.cout], &sp.bn1.gamma),
+            arr(vec![sp.conv2.cout], &sp.bn2.beta),
+            arr(vec![sp.conv2.cout], &sp.bn2.gamma),
+            c1b,
+            c1w,
+            c2b,
+            c2w,
+            c3b,
+            c3w,
+            c4b,
+            c4w,
+            arr(vec![head.dout], &head.b),
+            arr(vec![head.din, head.dout], &head.w),
+            arr(vec![sp.conv1.cout], &sp.bn1.mean),
+            arr(vec![sp.conv1.cout], &sp.bn1.var),
+            arr(vec![sp.conv2.cout], &sp.bn2.mean),
+            arr(vec![sp.conv2.cout], &sp.bn2.var),
+        ];
+        let re = StudentParams::from_sidecar(&arrays, true).unwrap();
+        assert_eq!(re.conv1.w, sp.conv1.w);
+        assert_eq!(re.conv4.cout, sp.conv4.cout);
+        assert_eq!(re.head.unwrap().w, head.w);
+
+        // Wrong array count is rejected.
+        assert!(StudentParams::from_sidecar(&arrays[..16], true).is_err());
+    }
+}

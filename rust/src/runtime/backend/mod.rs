@@ -1,0 +1,71 @@
+//! Pluggable front-end execution backends.
+//!
+//! The student CNN front-end executes through one of two engines behind the
+//! [`FrontEnd`] trait:
+//!
+//! * [`interp::InterpBackend`] — a dependency-free pure-Rust inference
+//!   engine that ports the reference kernels in `python/compile/kernels/`
+//!   (see [`kernels`]).  The default everywhere: it builds and serves on a
+//!   clean offline checkout, loading exported weight sidecars when an
+//!   artifacts directory exists and falling back to deterministic synthetic
+//!   weights when it does not.
+//! * [`pjrt::PjrtBackend`] — the HLO/PJRT path (cargo feature `pjrt`),
+//!   which compiles the AOT-exported HLO text artifacts onto the PJRT CPU
+//!   client.  Unavailable in offline builds because the `xla` crate cannot
+//!   be vendored there.
+//!
+//! [`FrontEnd`] is the dispatch seam: the coordinator pipeline only sees
+//! the trait, so engine selection is a configuration knob
+//! (`engine = "interp" | "pjrt"` / `hec --engine`), not a build fork.
+
+pub mod interp;
+pub mod kernels;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+
+use crate::config::{Engine, ServeConfig};
+use crate::error::Result;
+
+use super::meta::Meta;
+
+/// A front-end execution engine: runs the student CNN on image batches.
+///
+/// Images are packed contiguously, `image_size^2` floats each (NHWC with
+/// C = 1); outputs are row-major matrices.  Engines accept any batch size
+/// `n` — batching constraints (e.g. PJRT's exported artifact sizes) are an
+/// implementation detail handled inside the engine — and validate the
+/// input buffer length, returning `Error::Request` on a mismatch.
+pub trait FrontEnd {
+    /// Engine name for diagnostics and metrics labels.
+    fn name(&self) -> &'static str;
+
+    /// Padding slots this engine would add to dispatch a batch of `n`
+    /// (metrics only).  Engines that run any batch size natively pad
+    /// nothing.
+    fn padding_for(&self, _n: usize) -> usize {
+        0
+    }
+
+    /// Extract real-valued feature maps for `n` images: returns
+    /// `n * n_features` floats.
+    fn extract_features(&mut self, images: &[f32], n: usize) -> Result<Vec<f32>>;
+
+    /// Run the softmax-head variant for `n` images: returns
+    /// `n * num_classes` logits.
+    fn logits(&mut self, images: &[f32], n: usize, num_classes: usize) -> Result<Vec<f32>>;
+}
+
+/// Build the engine selected by `cfg.engine`.
+pub fn create(cfg: &ServeConfig, meta: &Meta) -> Result<Box<dyn FrontEnd>> {
+    match cfg.engine {
+        Engine::Interp => Ok(Box::new(interp::InterpBackend::new(cfg, meta)?)),
+        #[cfg(feature = "pjrt")]
+        Engine::Pjrt => Ok(Box::new(pjrt::PjrtBackend::new(cfg, meta)?)),
+        #[cfg(not(feature = "pjrt"))]
+        Engine::Pjrt => Err(crate::error::Error::Config(
+            "engine 'pjrt' requires a build with `--features pjrt` \
+             (and the vendored xla crate — see Cargo.toml)"
+                .into(),
+        )),
+    }
+}

@@ -1,0 +1,379 @@
+//! `PjrtBackend` — the HLO/PJRT execution engine (cargo feature `pjrt`).
+//!
+//! One [`Runtime`] owns the PJRT CPU client and a cache of compiled
+//! executables keyed by artifact name (`student_fwd_b8`, `match_fc_b32`,
+//! …).  Artifacts are HLO *text* — see DESIGN.md (jax >= 0.5 emits 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids).  All exported entry points return 1-tuples
+//! (`return_tuple=True` at lowering), unwrapped here with `to_tuple1`.
+//!
+//! This module only compiles with `--features pjrt`, which additionally
+//! requires the vendored `xla` crate (see Cargo.toml) — the default build
+//! has zero unvendorable dependencies and uses
+//! [`super::interp::InterpBackend`] instead.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::config::{Backend, ServeConfig};
+use crate::error::{Error, Result};
+use crate::runtime::meta::Meta;
+use crate::runtime::params;
+
+use super::FrontEnd;
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Backend(format!("xla: {e}"))
+    }
+}
+
+/// A loaded, compiled artifact plus its device-resident weight buffers.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    /// Weight buffers (uploaded once; appended to every execute call after
+    /// the caller's inputs — matching the exported argument order
+    /// `(x, *flat_params)`).
+    params: Vec<xla::PjRtBuffer>,
+    /// Artifact name (diagnostics).
+    pub name: String,
+}
+
+impl Executable {
+    /// Execute with f32 inputs; the parameter buffers are appended
+    /// automatically.  Returns the flattened f32 output of the single tuple
+    /// element.
+    pub fn run_f32(&self, inputs: &[(&[f32], &[i64])]) -> Result<Vec<f32>> {
+        let client = self.exe.client();
+        let mut bufs: Vec<xla::PjRtBuffer> = Vec::with_capacity(inputs.len());
+        for (data, dims) in inputs {
+            let dims_usize: Vec<usize> = dims.iter().map(|&d| d as usize).collect();
+            bufs.push(client.buffer_from_host_buffer::<f32>(data, &dims_usize, None)?);
+        }
+        let args: Vec<&xla::PjRtBuffer> = bufs.iter().chain(self.params.iter()).collect();
+        let result = self.exe.execute_b::<&xla::PjRtBuffer>(&args)?;
+        let out = result[0][0].to_literal_sync()?.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    /// Number of parameter arrays riding along with this artifact.
+    pub fn num_params(&self) -> usize {
+        self.params.len()
+    }
+}
+
+/// The PJRT runtime: client + executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    artifacts_dir: PathBuf,
+    cache: HashMap<String, Executable>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client rooted at an artifacts directory.
+    pub fn new<P: AsRef<Path>>(artifacts_dir: P) -> Result<Self> {
+        let dir = artifacts_dir.as_ref().to_path_buf();
+        if !dir.is_dir() {
+            return Err(Error::Artifact(format!(
+                "artifacts directory not found: {} (run `make artifacts`)",
+                dir.display()
+            )));
+        }
+        Ok(Runtime {
+            client: xla::PjRtClient::cpu()?,
+            artifacts_dir: dir,
+            cache: HashMap::new(),
+        })
+    }
+
+    /// PJRT platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile `<name>.hlo.txt` (cached after the first call).
+    pub fn load(&mut self, name: &str) -> Result<&Executable> {
+        if !self.cache.contains_key(name) {
+            let path = self.artifacts_dir.join(format!("{name}.hlo.txt"));
+            if !path.is_file() {
+                return Err(Error::Artifact(format!(
+                    "missing artifact {} (expected {})",
+                    name,
+                    path.display()
+                )));
+            }
+            let proto = xla::HloModuleProto::from_text_file(&path)?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp)?;
+            // Upload the weight sidecar (if any) once, device-resident.
+            let params = params::load_params(&self.artifacts_dir, name)?
+                .into_iter()
+                .map(|p| {
+                    self.client
+                        .buffer_from_host_buffer::<f32>(&p.data, &p.shape, None)
+                        .map_err(Error::from)
+                })
+                .collect::<Result<Vec<_>>>()?;
+            self.cache.insert(
+                name.to_string(),
+                Executable {
+                    exe,
+                    params,
+                    name: name.to_string(),
+                },
+            );
+        }
+        Ok(&self.cache[name])
+    }
+
+    /// Pre-compile a list of artifacts (warmup; keeps compile jitter off
+    /// the request path).
+    pub fn preload(&mut self, names: &[&str]) -> Result<()> {
+        for n in names {
+            self.load(n)?;
+        }
+        Ok(())
+    }
+
+    /// Names currently compiled.
+    pub fn loaded(&self) -> Vec<&str> {
+        self.cache.keys().map(String::as_str).collect()
+    }
+}
+
+/// Does the artifact set include the jnp-lowered fast front-end?
+fn has_fast_variant(dir: &Path, meta: &Meta) -> bool {
+    let b = meta.artifacts.batch_sizes.first().copied().unwrap_or(1);
+    dir.join(format!("student_fwd_fast_b{b}.hlo.txt")).is_file()
+}
+
+/// The PJRT-backed [`FrontEnd`]: dispatches to the AOT-exported batch
+/// variants, padding each request up to the nearest exported batch size
+/// and chunking oversized requests.
+pub struct PjrtBackend {
+    runtime: Runtime,
+    /// "student_fwd_fast" on the CPU hot path, "student_fwd" for the
+    /// Pallas-lowered variant (numerically identical).
+    fwd_prefix: &'static str,
+    batch_sizes: Vec<usize>,
+    image_size: usize,
+    n_features: usize,
+    /// Reusable padded input buffer (allocation-free hot path).
+    scratch: Vec<f32>,
+}
+
+impl PjrtBackend {
+    pub fn new(cfg: &ServeConfig, meta: &Meta) -> Result<PjrtBackend> {
+        let mut runtime = Runtime::new(&cfg.artifacts_dir)?;
+        let fwd_prefix = if cfg.use_fast_frontend && has_fast_variant(&cfg.artifacts_dir, meta) {
+            "student_fwd_fast"
+        } else {
+            "student_fwd"
+        };
+        // Precompile every batch variant of the entry point this deployment
+        // serves through, so compilation never hits the request path (the
+        // softmax baseline never calls the feature extractor and vice
+        // versa; whichever is unused compiles lazily if ever requested).
+        let preload_prefix = if cfg.backend == Backend::Softmax {
+            "student_softmax"
+        } else {
+            fwd_prefix
+        };
+        for &b in &meta.artifacts.batch_sizes {
+            runtime.load(&format!("{preload_prefix}_b{b}"))?;
+        }
+        let mut batch_sizes = meta.artifacts.batch_sizes.clone();
+        batch_sizes.sort_unstable();
+        Ok(PjrtBackend {
+            runtime,
+            fwd_prefix,
+            batch_sizes,
+            image_size: meta.artifacts.image_size,
+            n_features: meta.artifacts.n_features,
+            scratch: Vec::new(),
+        })
+    }
+
+    /// Access the underlying runtime (benches).
+    pub fn runtime_mut(&mut self) -> &mut Runtime {
+        &mut self.runtime
+    }
+
+    /// Smallest exported batch size >= n (or the largest available).
+    fn batch_for(&self, n: usize) -> usize {
+        for &b in &self.batch_sizes {
+            if b >= n {
+                return b;
+            }
+        }
+        *self.batch_sizes.last().expect("validated batch sizes")
+    }
+
+    /// Run `<prefix>_b{b}` on `n` images padded to artifact batch `b`;
+    /// returns the first `n` rows of `row_len` columns.
+    fn run_padded(
+        &mut self,
+        prefix: &str,
+        images: &[f32],
+        n: usize,
+        row_len: usize,
+    ) -> Result<Vec<f32>> {
+        let img_len = self.image_size * self.image_size;
+        let s = self.image_size as i64;
+        let b = self.batch_for(n);
+        self.scratch.clear();
+        self.scratch.resize(b * img_len, 0.0);
+        self.scratch[..images.len()].copy_from_slice(images);
+        let name = format!("{prefix}_b{b}");
+        let exe = self.runtime.load(&name)?;
+        let out = exe.run_f32(&[(&self.scratch, &[b as i64, s, s, 1])])?;
+        if out.len() != b * row_len {
+            return Err(Error::Artifact(format!(
+                "{name} returned {} floats, expected {}",
+                out.len(),
+                b * row_len
+            )));
+        }
+        Ok(out[..n * row_len].to_vec())
+    }
+
+    /// Chunk arbitrary `n` into artifact-sized dispatches.
+    fn run(&mut self, prefix: &str, images: &[f32], n: usize, row_len: usize) -> Result<Vec<f32>> {
+        let img_len = self.image_size * self.image_size;
+        if images.len() != n * img_len {
+            return Err(Error::Request(format!(
+                "batch buffer has {} floats, expected {} ({n} images)",
+                images.len(),
+                n * img_len
+            )));
+        }
+        let max_b = *self.batch_sizes.last().expect("validated batch sizes");
+        if n <= max_b {
+            return self.run_padded(prefix, images, n, row_len);
+        }
+        let mut out = Vec::with_capacity(n * row_len);
+        let mut i = 0;
+        while i < n {
+            let m = max_b.min(n - i);
+            out.extend(self.run_padded(
+                prefix,
+                &images[i * img_len..(i + m) * img_len],
+                m,
+                row_len,
+            )?);
+            i += m;
+        }
+        Ok(out)
+    }
+}
+
+impl FrontEnd for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn padding_for(&self, n: usize) -> usize {
+        let max_b = *self.batch_sizes.last().expect("validated batch sizes");
+        let tail = n % max_b;
+        if n > 0 && tail == 0 {
+            0
+        } else {
+            self.batch_for(tail) - tail
+        }
+    }
+
+    fn extract_features(&mut self, images: &[f32], n: usize) -> Result<Vec<f32>> {
+        let nf = self.n_features;
+        let prefix = self.fwd_prefix;
+        self.run(prefix, images, n, nf)
+    }
+
+    fn logits(&mut self, images: &[f32], n: usize, num_classes: usize) -> Result<Vec<f32>> {
+        self.run("student_softmax", images, n, num_classes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Scratch dir helper (tempfile crate unavailable offline); removed on
+    /// drop.
+    struct Scratch(std::path::PathBuf);
+
+    impl Scratch {
+        fn new(tag: &str) -> Self {
+            let p = std::env::temp_dir().join(format!(
+                "hec-rt-{tag}-{}-{:?}",
+                std::process::id(),
+                std::thread::current().id()
+            ));
+            std::fs::create_dir_all(&p).unwrap();
+            Scratch(p)
+        }
+        fn path(&self) -> &std::path::Path {
+            &self.0
+        }
+    }
+
+    impl Drop for Scratch {
+        fn drop(&mut self) {
+            let _ = std::fs::remove_dir_all(&self.0);
+        }
+    }
+
+    #[test]
+    fn missing_dir_is_error() {
+        assert!(Runtime::new("/nonexistent/path").is_err());
+    }
+
+    #[test]
+    fn missing_artifact_is_error() {
+        let dir = Scratch::new("missing");
+        let mut rt = Runtime::new(dir.path()).unwrap();
+        match rt.load("student_fwd_b1") {
+            Err(Error::Artifact(_)) => {}
+            other => panic!(
+                "expected artifact error, got {:?}",
+                other.err().map(|e| e.to_string())
+            ),
+        }
+    }
+
+    /// Round-trip a hand-written HLO module through compile + execute.
+    #[test]
+    fn executes_handwritten_hlo() {
+        let dir = Scratch::new("tiny");
+        let hlo = r#"
+HloModule tiny, entry_computation_layout={(f32[4]{0})->(f32[4]{0})}
+
+ENTRY main {
+  x = f32[4]{0} parameter(0)
+  two = f32[] constant(2)
+  bt = f32[4]{0} broadcast(two), dimensions={}
+  m = f32[4]{0} multiply(x, bt)
+  ROOT t = (f32[4]{0}) tuple(m)
+}
+"#;
+        std::fs::write(dir.path().join("tiny.hlo.txt"), hlo).unwrap();
+        let mut rt = Runtime::new(dir.path()).unwrap();
+        let exe = rt.load("tiny").unwrap();
+        let out = exe.run_f32(&[(&[1.0, 2.0, 3.0, 4.0], &[4])]).unwrap();
+        assert_eq!(out, vec![2.0, 4.0, 6.0, 8.0]);
+    }
+
+    #[test]
+    fn cache_returns_same_executable() {
+        let dir = Scratch::new("cache");
+        std::fs::write(
+            dir.path().join("t.hlo.txt"),
+            "HloModule t\nENTRY main { x = f32[1]{0} parameter(0) ROOT t = (f32[1]{0}) tuple(x) }",
+        )
+        .unwrap();
+        let mut rt = Runtime::new(dir.path()).unwrap();
+        rt.load("t").unwrap();
+        assert_eq!(rt.loaded(), vec!["t"]);
+        rt.load("t").unwrap();
+        assert_eq!(rt.loaded().len(), 1);
+    }
+}

@@ -1,215 +1,24 @@
-//! PJRT runtime: loads the AOT-compiled HLO text artifacts and executes them
-//! on the request hot path.
+//! Execution runtime: build metadata, parameter sidecars, and the pluggable
+//! front-end execution backends.
 //!
-//! One [`Runtime`] owns the PJRT CPU client and a cache of compiled
-//! executables keyed by artifact name (`student_fwd_b8`, `match_fc_b32`, …).
-//! Artifacts are HLO *text* — see DESIGN.md (jax >= 0.5 emits 64-bit
-//! instruction ids that xla_extension 0.5.1 rejects; the text parser
-//! reassigns ids).  All exported entry points return 1-tuples
-//! (`return_tuple=True` at lowering), unwrapped here with `to_tuple1`.
+//! * [`meta`] — `meta.json` (shapes, normalisation, experiment data) with a
+//!   synthetic default for artifact-free serving;
+//! * [`params`] — the `<name>.params.{json,bin}` weight-sidecar loader
+//!   shared by every engine;
+//! * [`backend`] — the [`FrontEnd`] trait and its implementations: the
+//!   pure-Rust [`backend::interp::InterpBackend`] (default) and the
+//!   HLO/PJRT [`backend::pjrt::PjrtBackend`] (cargo feature `pjrt`).
+//!
+//! The coordinator constructs an engine through [`backend::create`] and
+//! only ever talks to the trait; swapping engines is a config change.
 
+pub mod backend;
 pub mod meta;
 pub mod params;
 
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
-
-use crate::error::{Error, Result};
-
+pub use backend::{create as create_backend, FrontEnd};
 pub use meta::Meta;
 pub use params::ParamArray;
 
-/// A loaded, compiled artifact plus its device-resident weight buffers.
-pub struct Executable {
-    exe: xla::PjRtLoadedExecutable,
-    /// Weight buffers (uploaded once; appended to every execute call after
-    /// the caller's inputs — matching the exported argument order
-    /// `(x, *flat_params)`).
-    params: Vec<xla::PjRtBuffer>,
-    /// Artifact name (diagnostics).
-    pub name: String,
-}
-
-impl Executable {
-    /// Execute with f32 inputs; the parameter buffers are appended
-    /// automatically.  Returns the flattened f32 output of the single tuple
-    /// element.
-    pub fn run_f32(&self, inputs: &[(&[f32], &[i64])]) -> Result<Vec<f32>> {
-        let client = self.exe.client();
-        let mut bufs: Vec<xla::PjRtBuffer> = Vec::with_capacity(inputs.len());
-        for (data, dims) in inputs {
-            let dims_usize: Vec<usize> = dims.iter().map(|&d| d as usize).collect();
-            bufs.push(client.buffer_from_host_buffer::<f32>(data, &dims_usize, None)?);
-        }
-        let args: Vec<&xla::PjRtBuffer> = bufs.iter().chain(self.params.iter()).collect();
-        let result = self.exe.execute_b::<&xla::PjRtBuffer>(&args)?;
-        let out = result[0][0].to_literal_sync()?.to_tuple1()?;
-        Ok(out.to_vec::<f32>()?)
-    }
-
-    /// Number of parameter arrays riding along with this artifact.
-    pub fn num_params(&self) -> usize {
-        self.params.len()
-    }
-}
-
-/// The PJRT runtime: client + executable cache.
-pub struct Runtime {
-    client: xla::PjRtClient,
-    artifacts_dir: PathBuf,
-    cache: HashMap<String, Executable>,
-}
-
-impl Runtime {
-    /// Create a CPU PJRT client rooted at an artifacts directory.
-    pub fn new<P: AsRef<Path>>(artifacts_dir: P) -> Result<Self> {
-        let dir = artifacts_dir.as_ref().to_path_buf();
-        if !dir.is_dir() {
-            return Err(Error::Artifact(format!(
-                "artifacts directory not found: {} (run `make artifacts`)",
-                dir.display()
-            )));
-        }
-        Ok(Runtime {
-            client: xla::PjRtClient::cpu()?,
-            artifacts_dir: dir,
-            cache: HashMap::new(),
-        })
-    }
-
-    /// PJRT platform name (diagnostics).
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Load + compile `<name>.hlo.txt` (cached after the first call).
-    pub fn load(&mut self, name: &str) -> Result<&Executable> {
-        if !self.cache.contains_key(name) {
-            let path = self.artifacts_dir.join(format!("{name}.hlo.txt"));
-            if !path.is_file() {
-                return Err(Error::Artifact(format!(
-                    "missing artifact {} (expected {})",
-                    name,
-                    path.display()
-                )));
-            }
-            let proto = xla::HloModuleProto::from_text_file(&path)?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = self.client.compile(&comp)?;
-            // Upload the weight sidecar (if any) once, device-resident.
-            let params = params::load_params(&self.artifacts_dir, name)?
-                .into_iter()
-                .map(|p| {
-                    self.client
-                        .buffer_from_host_buffer::<f32>(&p.data, &p.shape, None)
-                        .map_err(Error::from)
-                })
-                .collect::<Result<Vec<_>>>()?;
-            self.cache.insert(
-                name.to_string(),
-                Executable {
-                    exe,
-                    params,
-                    name: name.to_string(),
-                },
-            );
-        }
-        Ok(&self.cache[name])
-    }
-
-    /// Pre-compile a list of artifacts (warmup; keeps compile jitter off the
-    /// request path).
-    pub fn preload(&mut self, names: &[&str]) -> Result<()> {
-        for n in names {
-            self.load(n)?;
-        }
-        Ok(())
-    }
-
-    /// Names currently compiled.
-    pub fn loaded(&self) -> Vec<&str> {
-        self.cache.keys().map(String::as_str).collect()
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    /// Scratch dir helper (tempfile crate unavailable offline); removed on
-    /// drop.
-    struct Scratch(std::path::PathBuf);
-
-    impl Scratch {
-        fn new(tag: &str) -> Self {
-            let p = std::env::temp_dir().join(format!(
-                "hec-rt-{tag}-{}-{:?}",
-                std::process::id(),
-                std::thread::current().id()
-            ));
-            std::fs::create_dir_all(&p).unwrap();
-            Scratch(p)
-        }
-        fn path(&self) -> &std::path::Path {
-            &self.0
-        }
-    }
-
-    impl Drop for Scratch {
-        fn drop(&mut self) {
-            let _ = std::fs::remove_dir_all(&self.0);
-        }
-    }
-
-    #[test]
-    fn missing_dir_is_error() {
-        assert!(Runtime::new("/nonexistent/path").is_err());
-    }
-
-    #[test]
-    fn missing_artifact_is_error() {
-        let dir = Scratch::new("missing");
-        let mut rt = Runtime::new(dir.path()).unwrap();
-        match rt.load("student_fwd_b1") {
-            Err(Error::Artifact(_)) => {}
-            other => panic!("expected artifact error, got {:?}", other.err().map(|e| e.to_string())),
-        }
-    }
-
-    /// Round-trip a hand-written HLO module through compile + execute.
-    #[test]
-    fn executes_handwritten_hlo() {
-        let dir = Scratch::new("tiny");
-        let hlo = r#"
-HloModule tiny, entry_computation_layout={(f32[4]{0})->(f32[4]{0})}
-
-ENTRY main {
-  x = f32[4]{0} parameter(0)
-  two = f32[] constant(2)
-  bt = f32[4]{0} broadcast(two), dimensions={}
-  m = f32[4]{0} multiply(x, bt)
-  ROOT t = (f32[4]{0}) tuple(m)
-}
-"#;
-        std::fs::write(dir.path().join("tiny.hlo.txt"), hlo).unwrap();
-        let mut rt = Runtime::new(dir.path()).unwrap();
-        let exe = rt.load("tiny").unwrap();
-        let out = exe.run_f32(&[(&[1.0, 2.0, 3.0, 4.0], &[4])]).unwrap();
-        assert_eq!(out, vec![2.0, 4.0, 6.0, 8.0]);
-    }
-
-    #[test]
-    fn cache_returns_same_executable() {
-        let dir = Scratch::new("cache");
-        std::fs::write(
-            dir.path().join("t.hlo.txt"),
-            "HloModule t\nENTRY main { x = f32[1]{0} parameter(0) ROOT t = (f32[1]{0}) tuple(x) }",
-        )
-        .unwrap();
-        let mut rt = Runtime::new(dir.path()).unwrap();
-        rt.load("t").unwrap();
-        assert_eq!(rt.loaded(), vec!["t"]);
-        rt.load("t").unwrap();
-        assert_eq!(rt.loaded().len(), 1);
-    }
-}
+#[cfg(feature = "pjrt")]
+pub use backend::pjrt::{Executable, Runtime};

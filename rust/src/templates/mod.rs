@@ -92,6 +92,42 @@ impl TemplateSet {
     }
 }
 
+/// `[p10, p90]` per-feature windows over the selected member rows, with
+/// numpy-style linear interpolation between order statistics.
+fn percentile_windows(feats: &[f32], n_features: usize, members: &[usize]) -> (Vec<f32>, Vec<f32>) {
+    let mut lo = vec![0f32; n_features];
+    let mut hi = vec![0f32; n_features];
+    let mut col: Vec<f32> = Vec::with_capacity(members.len());
+    for j in 0..n_features {
+        col.clear();
+        for &i in members {
+            col.push(feats[i * n_features + j]);
+        }
+        col.sort_by(f32::total_cmp);
+        let l = percentile_sorted(&col, 10.0);
+        let h = percentile_sorted(&col, 90.0);
+        lo[j] = l;
+        hi[j] = h.max(l);
+    }
+    (lo, hi)
+}
+
+/// Linear-interpolated percentile of a sorted slice (`np.percentile`).
+fn percentile_sorted(sorted: &[f32], p: f64) -> f32 {
+    let n = sorted.len();
+    if n == 1 {
+        return sorted[0];
+    }
+    let pos = (n - 1) as f64 * p / 100.0;
+    let base = pos.floor() as usize;
+    let frac = (pos - base as f64) as f32;
+    if base + 1 >= n {
+        sorted[n - 1]
+    } else {
+        sorted[base] + frac * (sorted[base + 1] - sorted[base])
+    }
+}
+
 /// Pack 0/1 bytes into u64 words, LSB-first.
 pub fn pack_bits(bits: &[u8], words_per_row: usize) -> Vec<u64> {
     let mut out = vec![0u64; words_per_row];
@@ -261,6 +297,156 @@ impl TemplateStore {
         })
     }
 
+    /// Bootstrap a store from served feature maps — the artifact-free path.
+    ///
+    /// Mirrors `python/compile/templates.py::generate_templates`: per-feature
+    /// mean/median thresholds over the rows, per-class k-means templates for
+    /// k = 1..=3 (k = 1 degenerates to the majority-vote template), and
+    /// `[p10, p90]` real-feature matching windows over each cluster's
+    /// members.  `feats` is `labels.len() x n_features`, row-major.
+    pub fn from_features(
+        feats: &[f32],
+        labels: &[usize],
+        n_features: usize,
+        num_classes: usize,
+        seed: u64,
+    ) -> Result<TemplateStore> {
+        let n = labels.len();
+        if n == 0 || feats.len() != n * n_features {
+            return Err(Error::Template(format!(
+                "feature matrix has {} floats, expected {n} rows x {n_features}",
+                feats.len()
+            )));
+        }
+        // Per-feature mean and median thresholds (Fig. 1's two modes).
+        let mut thresholds_mean = vec![0f32; n_features];
+        for row in feats.chunks_exact(n_features) {
+            for (t, v) in thresholds_mean.iter_mut().zip(row.iter()) {
+                *t += v;
+            }
+        }
+        for t in thresholds_mean.iter_mut() {
+            *t /= n as f32;
+        }
+        let mut thresholds_median = vec![0f32; n_features];
+        let mut col = vec![0f32; n];
+        for (j, tm) in thresholds_median.iter_mut().enumerate() {
+            for (i, c) in col.iter_mut().enumerate() {
+                *c = feats[i * n_features + j];
+            }
+            col.sort_by(f32::total_cmp);
+            *tm = if n % 2 == 1 {
+                col[n / 2]
+            } else {
+                0.5 * (col[n / 2 - 1] + col[n / 2])
+            };
+        }
+        // Binarise every row with the deployed (mean) thresholds.
+        let mut bits = vec![0u8; n * n_features];
+        for (i, row) in feats.chunks_exact(n_features).enumerate() {
+            for (j, (f, t)) in row.iter().zip(thresholds_mean.iter()).enumerate() {
+                bits[i * n_features + j] = u8::from(f > t);
+            }
+        }
+
+        let words_per_row = n_features.div_ceil(64);
+        let mut sets = BTreeMap::new();
+        for k in 1..=3usize {
+            let mut templates: Vec<Vec<u8>> = Vec::new();
+            let mut lo: Vec<Vec<f32>> = Vec::new();
+            let mut hi: Vec<Vec<f32>> = Vec::new();
+            let mut class_of: Vec<usize> = Vec::new();
+            let mut silhouette: Vec<f64> = Vec::new();
+            for c in 0..num_classes {
+                let rows: Vec<usize> = (0..n).filter(|&i| labels[i] == c).collect();
+                if rows.is_empty() {
+                    return Err(Error::Template(format!("class {c} has no feature rows")));
+                }
+                let xb: Vec<Vec<f64>> = rows
+                    .iter()
+                    .map(|&i| {
+                        bits[i * n_features..(i + 1) * n_features]
+                            .iter()
+                            .map(|&b| b as f64)
+                            .collect()
+                    })
+                    .collect();
+                let (centroids, assign, sil) = if k == 1 {
+                    let mut cent = vec![0f64; n_features];
+                    for row in &xb {
+                        for (s, v) in cent.iter_mut().zip(row.iter()) {
+                            *s += v;
+                        }
+                    }
+                    for s in cent.iter_mut() {
+                        *s /= xb.len() as f64;
+                    }
+                    (vec![cent], vec![0usize; xb.len()], 0.0)
+                } else {
+                    let cl = crate::kmeans::kmeans(&xb, k, 30, 2, seed.wrapping_add(c as u64));
+                    let sil =
+                        crate::kmeans::silhouette(&xb, &cl.assignment, 256, seed.wrapping_add(c as u64));
+                    (cl.centroids, cl.assignment, sil)
+                };
+                for (ci, cent) in centroids.iter().enumerate() {
+                    let t: Vec<u8> = cent.iter().map(|&v| u8::from(v > 0.5)).collect();
+                    // Window members: the cluster's real-feature rows
+                    // (whole class when a cluster came back empty).
+                    let mut members: Vec<usize> = rows
+                        .iter()
+                        .enumerate()
+                        .filter(|(ri, _)| assign[*ri] == ci)
+                        .map(|(_, &i)| i)
+                        .collect();
+                    if members.is_empty() {
+                        members = rows.clone();
+                    }
+                    let (wlo, whi) = percentile_windows(feats, n_features, &members);
+                    templates.push(t);
+                    lo.push(wlo);
+                    hi.push(whi);
+                    class_of.push(c);
+                }
+                silhouette.push(sil);
+            }
+            let packed = templates
+                .iter()
+                .flat_map(|t| pack_bits(t, words_per_row))
+                .collect();
+            let bin_lo: Vec<Vec<f32>> = templates
+                .iter()
+                .map(|t| t.iter().map(|&b| b as f32 - 0.5).collect())
+                .collect();
+            let bin_hi: Vec<Vec<f32>> = templates
+                .iter()
+                .map(|t| t.iter().map(|&b| b as f32 + 0.5).collect())
+                .collect();
+            let set = TemplateSet {
+                templates,
+                packed,
+                words_per_row,
+                lo,
+                hi,
+                bin_lo,
+                bin_hi,
+                class_of,
+                silhouette,
+            };
+            set.validate(n_features, num_classes)?;
+            sets.insert(k, set);
+        }
+        Ok(TemplateStore {
+            num_classes,
+            n_features,
+            thresholds: thresholds_mean.clone(),
+            thresholds_mean,
+            thresholds_median,
+            threshold_mode: "mean".into(),
+            similarity_alpha: 0.05,
+            sets,
+        })
+    }
+
     /// The template set for `k` templates per class.
     pub fn set(&self, k: usize) -> Result<&TemplateSet> {
         self.sets
@@ -358,5 +544,70 @@ mod tests {
     fn missing_set_is_error() {
         let store = TemplateStore::from_raw(toy_raw(4)).unwrap();
         assert!(store.set(3).is_err());
+    }
+
+    /// Synthetic per-class feature clusters for the bootstrap tests: class c
+    /// concentrates around c with a small deterministic wobble.
+    fn clustered_features(per_class: usize, classes: usize, nf: usize) -> (Vec<f32>, Vec<usize>) {
+        let mut rng = crate::rng::Rng::new(9);
+        let mut feats = Vec::with_capacity(per_class * classes * nf);
+        let mut labels = Vec::with_capacity(per_class * classes);
+        for i in 0..per_class * classes {
+            let c = i % classes;
+            labels.push(c);
+            for j in 0..nf {
+                let base = if j % classes == c { 1.0 } else { 0.0 };
+                feats.push((base + rng.range(-0.1, 0.1)) as f32);
+            }
+        }
+        (feats, labels)
+    }
+
+    #[test]
+    fn from_features_builds_valid_store() {
+        let (feats, labels) = clustered_features(8, 4, 20);
+        let store = TemplateStore::from_features(&feats, &labels, 20, 4, 42).unwrap();
+        assert_eq!(store.num_classes, 4);
+        assert_eq!(store.n_features, 20);
+        for k in 1..=3 {
+            let set = store.set(k).unwrap();
+            assert!(set.num_templates() >= 4, "k={k}");
+            assert_eq!(set.num_features(), 20);
+        }
+        // k = 1 gives exactly one (majority-vote) template per class, and
+        // that template marks the class's hot features.
+        let set1 = store.set(1).unwrap();
+        assert_eq!(set1.num_templates(), 4);
+        for (t, &c) in set1.templates.iter().zip(set1.class_of.iter()) {
+            for (j, &b) in t.iter().enumerate() {
+                assert_eq!(b, u8::from(j % 4 == c), "class {c} feature {j}");
+            }
+        }
+    }
+
+    #[test]
+    fn from_features_is_deterministic() {
+        let (feats, labels) = clustered_features(6, 3, 12);
+        let a = TemplateStore::from_features(&feats, &labels, 12, 3, 7).unwrap();
+        let b = TemplateStore::from_features(&feats, &labels, 12, 3, 7).unwrap();
+        assert_eq!(a.thresholds, b.thresholds);
+        assert_eq!(a.set(2).unwrap().templates, b.set(2).unwrap().templates);
+    }
+
+    #[test]
+    fn from_features_median_of_even_rows_interpolates() {
+        // 4 rows, 1 feature: values 0, 1, 2, 3 -> mean 1.5, median 1.5.
+        let feats = vec![0.0f32, 1.0, 2.0, 3.0];
+        let labels = vec![0usize, 1, 0, 1];
+        let store = TemplateStore::from_features(&feats, &labels, 1, 2, 0).unwrap();
+        assert!((store.thresholds_mean[0] - 1.5).abs() < 1e-6);
+        assert!((store.thresholds_median[0] - 1.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn from_features_rejects_bad_shapes() {
+        assert!(TemplateStore::from_features(&[0.0; 10], &[0, 1], 4, 2, 0).is_err());
+        // A class with no rows is rejected.
+        assert!(TemplateStore::from_features(&[0.0; 8], &[0, 0], 4, 2, 0).is_err());
     }
 }

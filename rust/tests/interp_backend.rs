@@ -1,0 +1,223 @@
+//! Artifact-free integration tests: the default interp engine + synthetic
+//! fallback must serve end-to-end on a clean checkout (no `make artifacts`),
+//! and `Pipeline::classify` must agree exactly with the digital matching
+//! reference path on the synthetic dataset.
+//!
+//! Every test points at a directory that cannot exist, so the fallback path
+//! is exercised deterministically even on machines that have built real
+//! artifacts.
+
+use hec::config::{Backend, Engine, ServeConfig};
+use hec::coordinator::{Pipeline, Server};
+use hec::dataset::SyntheticDataset;
+use hec::matching;
+
+/// An artifacts directory that never exists -> synthetic fallback.
+const NO_ARTIFACTS: &str = "/nonexistent-hec-artifacts";
+
+fn cfg(backend: Backend) -> ServeConfig {
+    ServeConfig {
+        artifacts_dir: NO_ARTIFACTS.into(),
+        backend,
+        ..Default::default()
+    }
+}
+
+fn workload(p: &Pipeline, n: usize, seed: u64) -> (Vec<f32>, Vec<usize>) {
+    SyntheticDataset::new(seed, n, p.meta.norm.mean as f32, p.meta.norm.std as f32).batch(0, n)
+}
+
+/// The full stack (synthetic weights, bootstrapped templates, similarity
+/// back-end — `--backend sim`) classifies a synthetic batch end-to-end.
+#[test]
+fn synthetic_pipeline_runs_end_to_end() {
+    let mut p = Pipeline::new(&cfg(Backend::Similarity)).unwrap();
+    assert_eq!(p.engine_name(), "interp");
+    assert_eq!(p.meta.dataset.source, "synthetic-fallback");
+    let n = 12;
+    let (images, _) = workload(&p, n, 1_000_003);
+    let results = p.classify_batch(&images, n).unwrap();
+    assert_eq!(results.len(), n);
+    for r in &results {
+        assert!(r.class < p.store.num_classes);
+        assert!(r.energy_nj > 0.0);
+    }
+}
+
+/// Predictions through the pipeline's feature-count back-end are identical
+/// to running the digital Eq. 8 + Eq. 12 reference directly on the
+/// binarised features.
+#[test]
+fn pipeline_matches_digital_reference_feature_count() {
+    let mut p = Pipeline::new(&cfg(Backend::FeatureCount)).unwrap();
+    let n = 16;
+    let (images, _) = workload(&p, n, 1_000_003);
+    let feats = p.extract_features(&images, n).unwrap();
+    let nf = p.meta.artifacts.n_features;
+    let got: Vec<usize> = p
+        .classify_batch(&images, n)
+        .unwrap()
+        .into_iter()
+        .map(|c| c.class)
+        .collect();
+    let set = p.store.set(1).unwrap();
+    let want: Vec<usize> = feats
+        .chunks_exact(nf)
+        .map(|row| {
+            let bits = p.store.binarize(row);
+            matching::classify_feature_count(&bits, set, p.store.num_classes)
+        })
+        .collect();
+    assert_eq!(got, want);
+}
+
+/// Same identity for the similarity back-end (`--backend sim`).
+#[test]
+fn pipeline_matches_digital_reference_similarity() {
+    let mut p = Pipeline::new(&cfg(Backend::Similarity)).unwrap();
+    let n = 16;
+    let (images, _) = workload(&p, n, 1_000_003);
+    let feats = p.extract_features(&images, n).unwrap();
+    let nf = p.meta.artifacts.n_features;
+    let got: Vec<usize> = p
+        .classify_batch(&images, n)
+        .unwrap()
+        .into_iter()
+        .map(|c| c.class)
+        .collect();
+    let set = p.store.set(1).unwrap();
+    let want: Vec<usize> = feats
+        .chunks_exact(nf)
+        .map(|row| {
+            let bits = p.store.binarize(row);
+            let qf: Vec<f32> = bits.iter().map(|&b| b as f32).collect();
+            matching::classify_similarity(
+                &qf,
+                set,
+                p.store.similarity_alpha,
+                p.store.num_classes,
+                true,
+            )
+        })
+        .collect();
+    assert_eq!(got, want);
+}
+
+/// The §III fidelity contract holds without artifacts too: an ideal
+/// simulated ACAM classifies identically to the digital feature count.
+#[test]
+fn ideal_acam_equals_feature_count() {
+    let mut fc = Pipeline::new(&cfg(Backend::FeatureCount)).unwrap();
+    let mut acam = Pipeline::new(&cfg(Backend::AcamSim)).unwrap();
+    let n = 16;
+    let (images, _) = workload(&fc, n, 1_000_003);
+    let p_fc: Vec<usize> = fc
+        .classify_batch(&images, n)
+        .unwrap()
+        .into_iter()
+        .map(|c| c.class)
+        .collect();
+    let p_acam: Vec<usize> = acam
+        .classify_batch(&images, n)
+        .unwrap()
+        .into_iter()
+        .map(|c| c.class)
+        .collect();
+    assert_eq!(p_fc, p_acam);
+}
+
+/// The softmax baseline runs through the synthetic head.
+#[test]
+fn softmax_backend_runs_on_synthetic_head() {
+    let mut p = Pipeline::new(&cfg(Backend::Softmax)).unwrap();
+    let n = 8;
+    let (images, _) = workload(&p, n, 999);
+    let results = p.classify_batch(&images, n).unwrap();
+    assert_eq!(results.len(), n);
+    for r in &results {
+        assert!(r.class < p.store.num_classes);
+    }
+}
+
+/// Feature extraction is deterministic and batch-size invariant.
+#[test]
+fn features_are_deterministic_and_batch_invariant() {
+    let mut p = Pipeline::new(&cfg(Backend::FeatureCount)).unwrap();
+    let (images, _) = workload(&p, 4, 77);
+    let nf = p.meta.artifacts.n_features;
+    let all = p.extract_features(&images, 4).unwrap();
+    let again = p.extract_features(&images, 4).unwrap();
+    assert_eq!(all, again);
+    let img_len = p.image_len();
+    for i in 0..4 {
+        let one = p
+            .extract_features(&images[i * img_len..(i + 1) * img_len], 1)
+            .unwrap();
+        assert_eq!(&all[i * nf..(i + 1) * nf], &one[..], "row {i}");
+    }
+}
+
+/// Two pipelines built from the same config see the same bootstrapped
+/// store and produce the same predictions (the bootstrap is deterministic).
+#[test]
+fn bootstrap_is_deterministic_across_pipelines() {
+    let a = Pipeline::new(&cfg(Backend::FeatureCount)).unwrap();
+    let b = Pipeline::new(&cfg(Backend::FeatureCount)).unwrap();
+    assert_eq!(a.store.thresholds, b.store.thresholds);
+    assert_eq!(
+        a.store.set(1).unwrap().templates,
+        b.store.set(1).unwrap().templates
+    );
+    // All three Table II template sets exist and validate.
+    for k in 1..=3 {
+        assert!(a.store.set(k).unwrap().num_templates() >= a.store.num_classes);
+    }
+}
+
+/// End-to-end serving without artifacts: dynamic batcher + worker thread.
+#[test]
+fn server_round_trip_without_artifacts() {
+    let mut c = cfg(Backend::FeatureCount);
+    c.batch.max_batch = 4;
+    c.batch.max_wait_us = 500;
+    let server = Server::start(c).unwrap();
+    let handle = server.handle.clone();
+    let p = Pipeline::new(&cfg(Backend::FeatureCount)).unwrap();
+    let (images, _) = workload(&p, 8, 77);
+    let img_len = p.image_len();
+    let rxs: Vec<_> = (0..8)
+        .map(|i| {
+            handle
+                .submit(images[i * img_len..(i + 1) * img_len].to_vec())
+                .unwrap()
+        })
+        .collect();
+    for rx in rxs {
+        let res = rx.recv().unwrap().unwrap();
+        assert!(res.class < 10);
+        assert!(res.energy_nj > 0.0);
+    }
+    let snap = handle.metrics.snapshot();
+    assert_eq!(snap.responses, 8);
+    assert_eq!(snap.errors, 0);
+    drop(handle);
+    server.shutdown();
+}
+
+/// Without the `pjrt` feature, selecting the pjrt engine is a config error
+/// with an actionable message (not a crash or a silent fallback).
+#[cfg(not(feature = "pjrt"))]
+#[test]
+fn pjrt_engine_errors_without_feature() {
+    let mut c = cfg(Backend::FeatureCount);
+    c.engine = Engine::Pjrt;
+    let err = Pipeline::new(&c).err().expect("must fail");
+    assert!(err.to_string().contains("pjrt"), "{err}");
+}
+
+/// Engine parsing round-trips through the CLI-facing names.
+#[test]
+fn engine_names_parse() {
+    assert_eq!("interp".parse::<Engine>().unwrap(), Engine::Interp);
+    assert_eq!("pjrt".parse::<Engine>().unwrap(), Engine::Pjrt);
+}
