@@ -3,9 +3,16 @@
 //! [`bench`] runs a closure through warmup + timed iterations, reports
 //! mean / p50 / p99 / min wall time per iteration, and returns the
 //! [`BenchResult`] so bench binaries can print paper-style comparison rows
-//! and assert shape properties (who wins, by what factor).
+//! and assert shape properties (who wins, by what factor).  Results
+//! serialise to [`crate::jsonlite::Value`] ([`BenchResult::to_json`] /
+//! [`write_json_report`]) so benches can emit machine-readable `BENCH_*.json`
+//! files and later PRs can track the perf trajectory.
 
+use std::collections::BTreeMap;
+use std::path::Path;
 use std::time::{Duration, Instant};
+
+use crate::jsonlite::Value;
 
 /// One benchmark's timing summary.
 #[derive(Debug, Clone)]
@@ -27,6 +34,40 @@ impl BenchResult {
             1.0 / self.mean.as_secs_f64()
         }
     }
+
+    /// Machine-readable summary (durations in microseconds).
+    pub fn to_json(&self) -> Value {
+        let mut o = BTreeMap::new();
+        o.insert("name".into(), Value::Str(self.name.clone()));
+        o.insert("iters".into(), Value::Num(self.iters as f64));
+        o.insert("mean_us".into(), Value::Num(self.mean.as_secs_f64() * 1e6));
+        o.insert("p50_us".into(), Value::Num(self.p50.as_secs_f64() * 1e6));
+        o.insert("p99_us".into(), Value::Num(self.p99.as_secs_f64() * 1e6));
+        o.insert("min_us".into(), Value::Num(self.min.as_secs_f64() * 1e6));
+        o.insert("throughput_per_s".into(), Value::Num(self.throughput()));
+        Value::Obj(o)
+    }
+}
+
+/// Write a bench report (`extra` scalar fields + per-result rows) to
+/// `path` as JSON.  The fixed `schema` field versions the layout for the
+/// perf-trajectory tooling of later PRs.
+pub fn write_json_report(
+    path: impl AsRef<Path>,
+    schema: &str,
+    extra: &[(&str, Value)],
+    results: &[&BenchResult],
+) -> std::io::Result<()> {
+    let mut o = BTreeMap::new();
+    o.insert("schema".into(), Value::Str(schema.into()));
+    for (k, v) in extra {
+        o.insert((*k).into(), v.clone());
+    }
+    o.insert(
+        "results".into(),
+        Value::Arr(results.iter().map(|r| r.to_json()).collect()),
+    );
+    std::fs::write(path, Value::Obj(o).to_json() + "\n")
 }
 
 impl std::fmt::Display for BenchResult {
@@ -127,6 +168,23 @@ mod tests {
     fn bench_for_respects_min_iters() {
         let r = bench_for("noop", 0, 5, Duration::from_millis(0), || {});
         assert!(r.iters >= 5);
+    }
+
+    #[test]
+    fn json_report_round_trips() {
+        let r = bench("jsonable", 0, 3, || {
+            std::thread::sleep(Duration::from_micros(50))
+        });
+        let path = std::env::temp_dir().join(format!("hec-bench-{}.json", std::process::id()));
+        write_json_report(&path, "hec/test/v1", &[("alpha", Value::Num(2.0))], &[&r]).unwrap();
+        let doc = crate::jsonlite::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(doc.get("schema").and_then(|v| v.as_str()), Some("hec/test/v1"));
+        assert_eq!(doc.get("alpha").and_then(|v| v.as_f64()), Some(2.0));
+        let rows = doc.get("results").and_then(|v| v.as_array()).unwrap();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].get("name").and_then(|v| v.as_str()), Some("jsonable"));
+        assert!(rows[0].get("mean_us").and_then(|v| v.as_f64()).unwrap() > 0.0);
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

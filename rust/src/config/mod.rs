@@ -13,10 +13,15 @@ use crate::error::{Error, Result};
 /// (see `rust/src/runtime/backend/`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum Engine {
-    /// Pure-Rust interpreter — the default; zero native dependencies, runs
-    /// with or without an artifacts directory.
+    /// Pure-Rust scalar interpreter — the default; zero native
+    /// dependencies, runs with or without an artifacts directory, and
+    /// serves as the numeric oracle for the fast path.
     #[default]
     Interp,
+    /// Blocked + multithreaded interpreter fast-path (im2col lowering,
+    /// register-tiled matmul, scratch arenas, batch sharding); same model
+    /// and weights as `Interp`, `threads`-configurable.
+    InterpFast,
     /// HLO/PJRT runtime — requires the `pjrt` cargo feature and an
     /// artifacts directory.
     Pjrt,
@@ -27,6 +32,7 @@ impl std::str::FromStr for Engine {
     fn from_str(s: &str) -> Result<Self> {
         match s {
             "interp" | "rust" => Ok(Engine::Interp),
+            "interp-fast" | "interp_fast" | "fast" => Ok(Engine::InterpFast),
             "pjrt" | "xla" => Ok(Engine::Pjrt),
             _ => Err(Error::Config(format!("unknown engine: {s}"))),
         }
@@ -111,6 +117,13 @@ pub struct ServeConfig {
     pub artifacts_dir: PathBuf,
     /// Front-end execution engine.
     pub engine: Engine,
+    /// Worker threads for the `interp-fast` engine: `0` = auto (the
+    /// `HEC_THREADS` env var if set, else `available_parallelism`); any
+    /// explicit value is clamped to `available_parallelism` by
+    /// [`ServeConfig::resolve_threads`].  `1` forces the deterministic
+    /// serial path (though thread count never changes the numbers — see
+    /// `runtime::backend::fast`).
+    pub threads: usize,
     /// Classification back-end.
     pub backend: Backend,
     /// Templates per class (Table II: 1, 2 or 3).
@@ -129,6 +142,7 @@ impl Default for ServeConfig {
         ServeConfig {
             artifacts_dir: PathBuf::from("artifacts"),
             engine: Engine::default(),
+            threads: 0,
             backend: Backend::AcamSim,
             templates_per_class: 1,
             use_fast_frontend: true,
@@ -148,6 +162,9 @@ impl ServeConfig {
         }
         if let Some(v) = doc.get("engine").and_then(|v| v.as_str()) {
             cfg.engine = v.parse()?;
+        }
+        if let Some(v) = doc.get("threads").and_then(|v| v.as_usize()) {
+            cfg.threads = v;
         }
         if let Some(v) = doc.get("backend").and_then(|v| v.as_str()) {
             cfg.backend = v.parse()?;
@@ -188,6 +205,29 @@ impl ServeConfig {
         Ok(cfg)
     }
 
+    /// Effective worker-thread count for the fast engine.  Precedence:
+    /// explicit `threads` (config file / `--threads`) > `HEC_THREADS` env >
+    /// `available_parallelism`; the result is always clamped to
+    /// `1..=available_parallelism`.
+    pub fn resolve_threads(&self) -> usize {
+        let hw = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        let requested = if self.threads != 0 {
+            self.threads
+        } else {
+            std::env::var("HEC_THREADS")
+                .ok()
+                .and_then(|v| v.trim().parse::<usize>().ok())
+                .unwrap_or(0)
+        };
+        if requested == 0 {
+            hw
+        } else {
+            requested.clamp(1, hw)
+        }
+    }
+
     pub fn validate(&self) -> Result<()> {
         if !(1..=3).contains(&self.templates_per_class) {
             return Err(Error::Config(format!(
@@ -225,9 +265,36 @@ mod tests {
     fn engine_parses_and_defaults_to_interp() {
         assert_eq!("interp".parse::<Engine>().unwrap(), Engine::Interp);
         assert_eq!("rust".parse::<Engine>().unwrap(), Engine::Interp);
+        assert_eq!("interp-fast".parse::<Engine>().unwrap(), Engine::InterpFast);
+        assert_eq!("fast".parse::<Engine>().unwrap(), Engine::InterpFast);
         assert_eq!("pjrt".parse::<Engine>().unwrap(), Engine::Pjrt);
         assert!("cuda".parse::<Engine>().is_err());
         assert_eq!(ServeConfig::default().engine, Engine::Interp);
+    }
+
+    #[test]
+    fn resolve_threads_clamps_to_hardware() {
+        let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        let mut c = ServeConfig::default();
+        c.threads = 1;
+        assert_eq!(c.resolve_threads(), 1, "threads=1 is the serial path");
+        c.threads = 100_000;
+        assert_eq!(c.resolve_threads(), hw, "explicit requests clamp to hw");
+        c.threads = 0;
+        let auto = c.resolve_threads();
+        assert!((1..=hw).contains(&auto), "auto resolves within 1..=hw");
+    }
+
+    #[test]
+    fn threads_loads_from_config_file() {
+        let dir = std::env::temp_dir().join(format!("hec-thrcfg-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("serve.json");
+        std::fs::write(&path, r#"{"engine": "interp-fast", "threads": 1}"#).unwrap();
+        let cfg = ServeConfig::load(&path).unwrap();
+        assert_eq!(cfg.engine, Engine::InterpFast);
+        assert_eq!(cfg.threads, 1);
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

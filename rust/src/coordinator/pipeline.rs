@@ -25,13 +25,15 @@ use crate::matching;
 use crate::runtime::{backend, FrontEnd, Meta};
 use crate::templates::TemplateStore;
 
-/// Samples drawn per class when bootstrapping templates without artifacts.
-const BOOTSTRAP_PER_CLASS: usize = 8;
+/// Samples drawn per class when bootstrapping templates without artifacts
+/// (public so tests can regenerate the bootstrap workload and assert its
+/// classification accuracy).
+pub const BOOTSTRAP_PER_CLASS: usize = 8;
 
 /// Synthetic-dataset seed for the bootstrap workload (distinct from the
 /// evaluation seeds the benches and tests use, so bootstrapped templates
 /// are never graded on their own training samples).
-const BOOTSTRAP_DATA_SEED: u64 = 0xB007_5EED;
+pub const BOOTSTRAP_DATA_SEED: u64 = 0xB007_5EED;
 
 /// One classification outcome.
 #[derive(Debug, Clone)]

@@ -11,9 +11,9 @@
 //! * `acam-sim`  — ACAM variability sweep (accuracy vs device non-ideality);
 //! * `info`      — artifact inventory and metadata.
 //!
-//! Global flags: `--artifacts DIR` `--engine interp|pjrt`
-//! `--backend acam|fc|sim|softmax` `--templates K` `--variability LEVEL`
-//! `--config serve.json`.
+//! Global flags: `--artifacts DIR` `--engine interp|interp-fast|pjrt`
+//! `--backend acam|fc|sim|softmax` `--templates K` `--threads N`
+//! `--variability LEVEL` `--config serve.json`.
 //!
 //! Every subcommand works without an artifacts directory: the default
 //! interp engine then serves from synthetic weights and bootstrapped
@@ -28,8 +28,8 @@ use hec::energy::{EnergyModel, Scale};
 use hec::runtime::Meta;
 use hec::Error;
 
-const USAGE: &str = "usage: hec [--artifacts DIR] [--engine interp|pjrt] \
-[--backend acam|fc|sim|softmax] [--templates K] [--variability L] \
+const USAGE: &str = "usage: hec [--artifacts DIR] [--engine interp|interp-fast|pjrt] \
+[--backend acam|fc|sim|softmax] [--templates K] [--threads N] [--variability L] \
 [--frontend fast|pallas] [--config FILE] \
 <serve|classify|eval|energy|acam-sim|info> [--requests N] [--concurrency N] \
 [--count N] [--samples N] [--batch N] [--levels 0,1,2]";
@@ -90,6 +90,7 @@ fn serve_config(args: &Args) -> hec::Result<ServeConfig> {
     cfg.templates_per_class = args
         .get("templates", cfg.templates_per_class)
         .map_err(Error::Config)?;
+    cfg.threads = args.get("threads", cfg.threads).map_err(Error::Config)?;
     if let Some(f) = args.flags.get("frontend") {
         if cfg.engine != Engine::Pjrt {
             return Err(Error::Config(

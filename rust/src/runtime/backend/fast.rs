@@ -1,0 +1,554 @@
+//! `FastBackend` — the blocked, multithreaded interpreter fast-path.
+//!
+//! Same model, same numbers, different loop nest: every convolution is
+//! lowered to an explicit `im2col` patch matrix and dispatched to a
+//! cache-blocked matmul with an unroll-by-8 register-tile microkernel
+//! ([`matmul_blocked`]), batch-norm arrives pre-folded into the conv
+//! weights ([`super::interp::FoldedStudent`]), and all intermediate
+//! tensors live in a per-worker [`Scratch`] arena so the hot loop performs
+//! zero heap allocations after warm-up.
+//!
+//! Parallelism (dependency-free, `std::thread::scope`):
+//!
+//! * **batch sharding** — `extract_features` / `logits` split a server
+//!   batch into contiguous image shards, one worker (and one `Scratch`)
+//!   per shard;
+//! * **row-band matmul** — for single-image requests the microkernel
+//!   splits the im2col row dimension (output pixels) into bands instead.
+//!
+//! Both schemes assign every output element to exactly one worker and
+//! never reduce across threads, so results are **bitwise identical for
+//! every thread count** — `threads = 1` (the deterministic serial path
+//! the config guarantees) is a scheduling special case, not a different
+//! numeric path.  The scalar [`super::interp::InterpBackend`] remains the
+//! oracle; `rust/tests/kernels_fast.rs` property-tests this module
+//! against it across randomized shapes.
+
+use crate::config::ServeConfig;
+use crate::error::{Error, Result};
+use crate::runtime::meta::Meta;
+
+use super::interp::{load_student_params, FoldedStudent, StudentParams};
+use super::kernels::Padding;
+use super::FrontEnd;
+
+/// Microkernel register-tile rows (im2col patch rows per tile).
+const MR: usize = 8;
+/// Microkernel unroll width: 8 output channels accumulated per row, in
+/// registers (one 256-bit lane of f32, two SSE lanes on baseline x86-64).
+const NR: usize = 8;
+/// K-dimension cache block: `KC * NR` floats of the B panel (~8 KiB) stay
+/// L1-resident across an MR-row sweep.
+const KC: usize = 256;
+
+/// Lower one `[h, w, cin]` image into its `[ho * wo, kh * kw * cin]` patch
+/// matrix (row-major), reusing `out`'s allocation.  Out-of-bounds taps stay
+/// zero, reproducing [`super::kernels::conv2d`]'s padding arithmetic
+/// (asymmetric SAME split for even kernels).  Returns `(ho, wo)`.
+#[allow(clippy::too_many_arguments)]
+pub fn im2col(
+    x: &[f32],
+    h: usize,
+    w: usize,
+    cin: usize,
+    kh: usize,
+    kw: usize,
+    padding: Padding,
+    out: &mut Vec<f32>,
+) -> (usize, usize) {
+    debug_assert_eq!(x.len(), h * w * cin);
+    let (ho, wo, ph, pw) = match padding {
+        Padding::Same => (h, w, (kh - 1) / 2, (kw - 1) / 2),
+        Padding::Valid => (h - kh + 1, w - kw + 1, 0, 0),
+    };
+    let k = kh * kw * cin;
+    out.clear();
+    out.resize(ho * wo * k, 0.0);
+    for oy in 0..ho {
+        for dy in 0..kh {
+            let iy = oy as isize + dy as isize - ph as isize;
+            if iy < 0 || iy >= h as isize {
+                continue; // padded row: the resize above left zeros
+            }
+            let x_row = &x[iy as usize * w * cin..(iy as usize + 1) * w * cin];
+            for ox in 0..wo {
+                let patch = (oy * wo + ox) * k + dy * kw * cin;
+                let ix0 = ox as isize - pw as isize;
+                if ix0 >= 0 && ix0 as usize + kw <= w {
+                    // Fully interior along x: one contiguous kw*cin copy.
+                    let src = ix0 as usize * cin;
+                    out[patch..patch + kw * cin].copy_from_slice(&x_row[src..src + kw * cin]);
+                } else {
+                    for dx in 0..kw {
+                        let ix = ix0 + dx as isize;
+                        if ix < 0 || ix >= w as isize {
+                            continue;
+                        }
+                        let src = ix as usize * cin;
+                        out[patch + dx * cin..patch + (dx + 1) * cin]
+                            .copy_from_slice(&x_row[src..src + cin]);
+                    }
+                }
+            }
+        }
+    }
+    (ho, wo)
+}
+
+/// Full MRxNR register tile: accumulators live in `acc` (which LLVM keeps
+/// in vector registers), each k-step costs one contiguous NR-wide B load
+/// plus MR broadcast-FMAs — the memory-traffic win over the naive conv
+/// loop, whose accumulator row round-trips through cache every k-step.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn tile_full(
+    a: &[f32],
+    i0: usize,
+    lda: usize,
+    k0: usize,
+    kc: usize,
+    b: &[f32],
+    j0: usize,
+    ldb: usize,
+    out: &mut [f32],
+    ldo: usize,
+) {
+    let mut rows: [&[f32]; MR] = [&[]; MR];
+    for (i, r) in rows.iter_mut().enumerate() {
+        *r = &a[(i0 + i) * lda + k0..(i0 + i) * lda + k0 + kc];
+    }
+    let mut acc = [[0f32; NR]; MR];
+    for kk in 0..kc {
+        let bb: [f32; NR] = b[(k0 + kk) * ldb + j0..(k0 + kk) * ldb + j0 + NR]
+            .try_into()
+            .unwrap();
+        for (r, row) in rows.iter().zip(acc.iter_mut()) {
+            let av = r[kk];
+            for (o, &bv) in row.iter_mut().zip(bb.iter()) {
+                *o += av * bv;
+            }
+        }
+    }
+    for (i, row) in acc.iter().enumerate() {
+        let dst = &mut out[(i0 + i) * ldo + j0..(i0 + i) * ldo + j0 + NR];
+        for (o, &v) in dst.iter_mut().zip(row.iter()) {
+            *o += v;
+        }
+    }
+}
+
+/// Edge tile with dynamic `rows x cols` extent (plain loops; by
+/// construction this covers < MR rows or < NR columns, so its cost is
+/// marginal).  Each output element uses the same arithmetic as
+/// [`tile_full`] — a fresh accumulator per KC block, summed over `kk` in
+/// order, added to `out` once — so an element produces identical bits
+/// whether band splitting lands it in a full or an edge tile.
+#[allow(clippy::too_many_arguments)]
+fn tile_edge(
+    a: &[f32],
+    i0: usize,
+    rows: usize,
+    lda: usize,
+    k0: usize,
+    kc: usize,
+    b: &[f32],
+    j0: usize,
+    cols: usize,
+    ldb: usize,
+    out: &mut [f32],
+    ldo: usize,
+) {
+    for i in 0..rows {
+        let ar = &a[(i0 + i) * lda + k0..(i0 + i) * lda + k0 + kc];
+        let dst = &mut out[(i0 + i) * ldo + j0..(i0 + i) * ldo + j0 + cols];
+        for (j, o) in dst.iter_mut().enumerate() {
+            let mut acc = 0f32;
+            for (kk, &av) in ar.iter().enumerate() {
+                acc += av * b[(k0 + kk) * ldb + j0 + j];
+            }
+            *o += acc;
+        }
+    }
+}
+
+/// One serial k-blocked band: `out[0..rows] += a[0..rows] x b`.
+fn matmul_band(a: &[f32], rows: usize, k: usize, b: &[f32], n: usize, out: &mut [f32]) {
+    let mut k0 = 0;
+    while k0 < k {
+        let kc = KC.min(k - k0);
+        let mut i = 0;
+        while i + MR <= rows {
+            let mut j = 0;
+            while j + NR <= n {
+                tile_full(a, i, k, k0, kc, b, j, n, out, n);
+                j += NR;
+            }
+            if j < n {
+                tile_edge(a, i, MR, k, k0, kc, b, j, n - j, n, out, n);
+            }
+            i += MR;
+        }
+        if i < rows {
+            tile_edge(a, i, rows - i, k, k0, kc, b, 0, n, n, out, n);
+        }
+        k0 += kc;
+    }
+}
+
+/// Cache-blocked matmul `out = a [m, k] x b [k, n]` (row-major), with the
+/// row dimension split into bands across `threads` scoped workers.  Band
+/// assignment never changes an element's accumulation order, so the result
+/// is bitwise independent of `threads`.
+pub fn matmul_blocked(
+    a: &[f32],
+    m: usize,
+    k: usize,
+    b: &[f32],
+    n: usize,
+    threads: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(out.len(), m * n);
+    out.fill(0.0);
+    // A band under 2 row-tiles is not worth a thread spawn.
+    let threads = threads.clamp(1, m.div_ceil(2 * MR).max(1));
+    if threads == 1 {
+        matmul_band(a, m, k, b, n, out);
+        return;
+    }
+    let band = m.div_ceil(threads);
+    std::thread::scope(|scope| {
+        for (t, out_band) in out.chunks_mut(band * n).enumerate() {
+            let rows = out_band.len() / n;
+            scope.spawn(move || matmul_band_shifted(a, t * band, rows, k, b, n, out_band));
+        }
+    });
+}
+
+/// Like [`matmul_band`] but writing into a band-local `out` slice whose row
+/// 0 corresponds to global row `i0` of `a`.
+fn matmul_band_shifted(
+    a: &[f32],
+    i0: usize,
+    rows: usize,
+    k: usize,
+    b: &[f32],
+    n: usize,
+    out: &mut [f32],
+) {
+    // Re-slice `a` so band row r lives at a[r * k..]: the tile kernels can
+    // then treat the band as a standalone matmul.
+    matmul_band(&a[i0 * k..], rows, k, b, n, out);
+}
+
+/// Add the per-channel bias and (optionally) apply ReLU in one pass.
+fn bias_relu(out: &mut [f32], cout: usize, bias: &[f32], relu: bool) {
+    for row in out.chunks_exact_mut(cout) {
+        for (o, &b) in row.iter_mut().zip(bias.iter()) {
+            let v = *o + b;
+            *o = if relu && v < 0.0 { 0.0 } else { v };
+        }
+    }
+}
+
+/// 2x2 stride-2 max pool into a reused buffer (even `h`, `w`).
+fn maxpool2_into(x: &[f32], h: usize, w: usize, c: usize, out: &mut Vec<f32>) -> (usize, usize) {
+    debug_assert!(h % 2 == 0 && w % 2 == 0, "maxpool2 needs even h, w");
+    let (ho, wo) = (h / 2, w / 2);
+    out.clear();
+    out.resize(ho * wo * c, 0.0);
+    for oy in 0..ho {
+        let top = &x[(2 * oy) * w * c..(2 * oy + 1) * w * c];
+        let bot = &x[(2 * oy + 1) * w * c..(2 * oy + 2) * w * c];
+        let orow = &mut out[oy * wo * c..(oy + 1) * wo * c];
+        for ox in 0..wo {
+            for ch in 0..c {
+                let i = (2 * ox) * c + ch;
+                let m = top[i].max(top[i + c]).max(bot[i]).max(bot[i + c]);
+                orow[ox * c + ch] = m;
+            }
+        }
+    }
+    (ho, wo)
+}
+
+/// Per-worker scratch arena: im2col patches plus two ping-pong activation
+/// buffers.  All `Vec`s keep their capacity across requests, so steady-state
+/// inference allocates nothing.
+#[derive(Default)]
+pub struct Scratch {
+    patches: Vec<f32>,
+    a: Vec<f32>,
+    b: Vec<f32>,
+}
+
+/// conv -> bias -> ReLU via im2col + blocked matmul, into a reused buffer.
+#[allow(clippy::too_many_arguments)]
+fn conv_fast(
+    x: &[f32],
+    h: usize,
+    w: usize,
+    layer: &super::interp::Conv,
+    pad: Padding,
+    threads: usize,
+    patches: &mut Vec<f32>,
+    out: &mut Vec<f32>,
+) -> (usize, usize) {
+    let (ho, wo) = im2col(x, h, w, layer.cin, layer.kh, layer.kw, pad, patches);
+    out.clear();
+    out.resize(ho * wo * layer.cout, 0.0);
+    conv_matmul(patches, ho * wo, layer, threads, out);
+    (ho, wo)
+}
+
+/// The matmul half of a conv: HWIO weights flattened row-major are exactly
+/// the `[kh * kw * cin, cout]` B matrix, so no repacking is needed.
+fn conv_matmul(
+    patches: &[f32],
+    m: usize,
+    layer: &super::interp::Conv,
+    threads: usize,
+    out: &mut [f32],
+) {
+    let k = layer.kh * layer.kw * layer.cin;
+    matmul_blocked(patches, m, k, &layer.w, layer.cout, threads, out);
+    bias_relu(out, layer.cout, &layer.b, true);
+}
+
+/// One full forward pass; `inner_threads` drives row-band matmul
+/// parallelism (1 when the caller already shards at batch level).
+fn forward_one(
+    p: &FoldedStudent,
+    image_size: usize,
+    inner_threads: usize,
+    sc: &mut Scratch,
+    img: &[f32],
+    out: &mut [f32],
+) {
+    let s = image_size;
+    let Scratch { patches, a, b } = sc;
+    let (hh, ww) = conv_fast(img, s, s, &p.conv1, Padding::Same, inner_threads, patches, a);
+    let (hh, ww) = maxpool2_into(a, hh, ww, p.conv1.cout, b);
+    let (hh, ww) = conv_fast(b, hh, ww, &p.conv2, Padding::Same, inner_threads, patches, a);
+    let (hh, ww) = maxpool2_into(a, hh, ww, p.conv2.cout, b);
+    let (hh, ww) = conv_fast(b, hh, ww, &p.conv3, Padding::Same, inner_threads, patches, a);
+    // conv4 (VALID) writes its ho*wo*cout output — exactly the feature
+    // row — straight into the caller's output slice.
+    let (ho, wo) = im2col(a, hh, ww, p.conv4.cin, p.conv4.kh, p.conv4.kw, Padding::Valid, patches);
+    debug_assert_eq!(out.len(), ho * wo * p.conv4.cout);
+    conv_matmul(patches, ho * wo, &p.conv4, inner_threads, out);
+}
+
+/// The blocked + threaded interpreter engine (`--engine interp-fast`).
+pub struct FastBackend {
+    folded: FoldedStudent,
+    image_size: usize,
+    n_features: usize,
+    threads: usize,
+    scratch: Vec<Scratch>,
+}
+
+impl FastBackend {
+    /// Same weight resolution as [`super::interp::InterpBackend::new`];
+    /// `threads` comes from [`ServeConfig::resolve_threads`].
+    pub fn new(cfg: &ServeConfig, meta: &Meta) -> Result<FastBackend> {
+        let backend = Self::from_params(
+            load_student_params(cfg, meta)?,
+            meta.artifacts.image_size,
+            cfg.resolve_threads(),
+        );
+        if backend.n_features != meta.artifacts.n_features {
+            return Err(Error::Artifact(format!(
+                "interp-fast front-end produces {} features, meta.json says {}",
+                backend.n_features, meta.artifacts.n_features
+            )));
+        }
+        Ok(backend)
+    }
+
+    /// Build directly from a parameter set (benches and tests).
+    pub fn from_params(params: StudentParams, image_size: usize, threads: usize) -> FastBackend {
+        let folded = FoldedStudent::from_params(&params);
+        let n_features = folded.feature_len(image_size);
+        FastBackend {
+            folded,
+            image_size,
+            n_features,
+            threads: threads.max(1),
+            scratch: Vec::new(),
+        }
+    }
+}
+
+impl FrontEnd for FastBackend {
+    fn name(&self) -> &'static str {
+        "interp-fast"
+    }
+
+    fn extract_features(&mut self, images: &[f32], n: usize) -> Result<Vec<f32>> {
+        let img_len = self.image_size * self.image_size;
+        if images.len() != n * img_len {
+            return Err(Error::Request(format!(
+                "batch buffer has {} floats, expected {} ({n} images)",
+                images.len(),
+                n * img_len
+            )));
+        }
+        let nf = self.n_features;
+        let mut out = vec![0f32; n * nf];
+        // Shard the batch across workers; a lone image instead threads the
+        // matmul row bands (inside forward_one).
+        let workers = if n == 0 { 1 } else { self.threads.min(n) };
+        while self.scratch.len() < workers {
+            self.scratch.push(Scratch::default());
+        }
+        let (folded, size) = (&self.folded, self.image_size);
+        if workers == 1 {
+            let inner = self.threads;
+            let sc = &mut self.scratch[0];
+            for (img, o) in images.chunks_exact(img_len).zip(out.chunks_exact_mut(nf)) {
+                forward_one(folded, size, inner, sc, img, o);
+            }
+        } else {
+            let shard = n.div_ceil(workers);
+            // Leftover thread budget (threads > n) goes to row-band matmul
+            // parallelism inside each shard; still bitwise invariant.
+            let inner = (self.threads / workers).max(1);
+            std::thread::scope(|scope| {
+                for ((imgs, outs), sc) in images
+                    .chunks(shard * img_len)
+                    .zip(out.chunks_mut(shard * nf))
+                    .zip(self.scratch.iter_mut())
+                {
+                    scope.spawn(move || {
+                        for (img, o) in imgs.chunks_exact(img_len).zip(outs.chunks_exact_mut(nf)) {
+                            forward_one(folded, size, inner, sc, img, o);
+                        }
+                    });
+                }
+            });
+        }
+        Ok(out)
+    }
+
+    fn logits(&mut self, images: &[f32], n: usize, num_classes: usize) -> Result<Vec<f32>> {
+        let feats = self.extract_features(images, n)?;
+        let head = self.folded.head.as_ref().ok_or_else(|| {
+            Error::Artifact(
+                "softmax head unavailable (feature-extractor-only parameter set)".into(),
+            )
+        })?;
+        if head.dout != num_classes {
+            return Err(Error::Config(format!(
+                "head emits {} classes, pipeline expects {num_classes}",
+                head.dout
+            )));
+        }
+        if head.din != self.n_features {
+            return Err(Error::Artifact(format!(
+                "head expects {} features, front-end produces {}",
+                head.din, self.n_features
+            )));
+        }
+        let mut out = vec![0f32; n * head.dout];
+        matmul_blocked(&feats, n, head.din, &head.w, head.dout, self.threads, &mut out);
+        bias_relu(&mut out, head.dout, &head.b, false);
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::kernels;
+    use super::*;
+
+    fn seq(n: usize, scale: f64, off: f64) -> Vec<f32> {
+        (0..n).map(|i| (i as f64 * scale + off) as f32).collect()
+    }
+
+    fn assert_close(got: &[f32], want: &[f32], tol: f32) {
+        assert_eq!(got.len(), want.len(), "length mismatch");
+        for (i, (g, w)) in got.iter().zip(want.iter()).enumerate() {
+            assert!(
+                (g - w).abs() <= tol + tol * w.abs(),
+                "element {i}: got {g}, want {w}"
+            );
+        }
+    }
+
+    #[test]
+    fn matmul_blocked_matches_scalar_matmul() {
+        for &(m, k, n, threads) in
+            &[(1, 1, 1, 1), (9, 17, 23, 1), (16, 32, 8, 2), (65, 300, 19, 3)]
+        {
+            let a = seq(m * k, 0.01, -0.7);
+            let b = seq(k * n, 0.02, -0.9);
+            let want = kernels::matmul(&a, m, k, &b, n);
+            let mut got = vec![0f32; m * n];
+            matmul_blocked(&a, m, k, &b, n, threads, &mut got);
+            assert_close(&got, &want, 1e-5);
+        }
+    }
+
+    #[test]
+    fn matmul_blocked_is_thread_count_invariant() {
+        // k > KC exercises multi-block accumulation: band splitting moves
+        // rows between full and edge tiles, which must not change any
+        // element's rounding (tile_edge mirrors tile_full's block sums).
+        for &(m, k, n) in &[(33usize, 130usize, 21usize), (41, 600, 13)] {
+            let a = seq(m * k, 0.013, -0.4);
+            let b = seq(k * n, 0.007, -0.2);
+            let mut one = vec![0f32; m * n];
+            let mut four = vec![0f32; m * n];
+            matmul_blocked(&a, m, k, &b, n, 1, &mut one);
+            matmul_blocked(&a, m, k, &b, n, 4, &mut four);
+            assert_eq!(one, four, "threading must be bitwise invisible (m={m})");
+        }
+    }
+
+    #[test]
+    fn im2col_reproduces_conv_via_matmul() {
+        // conv2d == im2col x flattened-HWIO for both paddings.
+        let (h, w, cin, kh, kw, cout) = (5, 6, 3, 3, 2, 4);
+        let x = seq(h * w * cin, 0.03, -1.0);
+        let wt = seq(kh * kw * cin * cout, 0.02, -0.5);
+        let bias = seq(cout, 0.1, -0.2);
+        for pad in [Padding::Same, Padding::Valid] {
+            let (want, ho, wo) = kernels::conv2d(&x, h, w, cin, &wt, kh, kw, cout, &bias, pad);
+            let mut patches = Vec::new();
+            let (gho, gwo) = im2col(&x, h, w, cin, kh, kw, pad, &mut patches);
+            assert_eq!((gho, gwo), (ho, wo));
+            let mut got = vec![0f32; ho * wo * cout];
+            matmul_blocked(&patches, ho * wo, kh * kw * cin, &wt, cout, 1, &mut got);
+            for (row, b) in got.chunks_exact_mut(cout).zip(std::iter::repeat(&bias)) {
+                for (o, &bv) in row.iter_mut().zip(b.iter()) {
+                    *o += bv;
+                }
+            }
+            assert_close(&got, &want, 1e-5);
+        }
+    }
+
+    #[test]
+    fn maxpool_into_matches_kernel() {
+        let x = seq(8 * 6 * 3, 0.05, -0.6);
+        let (want, ho, wo) = kernels::maxpool2(&x, 8, 6, 3);
+        let mut got = Vec::new();
+        let (gho, gwo) = maxpool2_into(&x, 8, 6, 3, &mut got);
+        assert_eq!((gho, gwo), (ho, wo));
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn fast_backend_matches_scalar_interp() {
+        let params = StudentParams::synthetic(11);
+        let mut scalar = super::super::interp::InterpBackend::from_params(params.clone(), 32);
+        let mut fast = FastBackend::from_params(params, 32, 2);
+        let img = seq(32 * 32, 0.002, -1.0);
+        let want = scalar.extract_features(&img, 1).unwrap();
+        let got = fast.extract_features(&img, 1).unwrap();
+        assert_close(&got, &want, 1e-5);
+    }
+}

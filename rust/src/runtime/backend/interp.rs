@@ -12,6 +12,11 @@
 //! [dense head -> logits]            (softmax baseline only)
 //! ```
 //!
+//! The frozen batch-norms are folded into conv1/conv2's weights and biases
+//! at parameter-load time ([`fold_conv_bn`] / [`FoldedStudent`]), so the
+//! executed chain is pure conv -> ReLU [-> pool]; a unit test pins the
+//! folded output to the explicit-BN reference chain.
+//!
 //! Weights come from the existing `<name>.params.{json,bin}` sidecars
 //! (loaded through [`crate::runtime::params`]) when an artifacts directory
 //! is present — `student_softmax_b*` first because it carries the dense
@@ -36,6 +41,11 @@ use super::FrontEnd;
 /// fast in debug builds; the trailing 16 keeps the 7x7x16 = 784 feature
 /// contract at image size 32.
 pub const SYNTH_FILTERS: [usize; 4] = [8, 16, 32, 16];
+
+/// The paper's Fig.-5 deployment filter widths (conv1..conv4 output
+/// channels) — what `benches/frontend_perf.rs` times, and what
+/// artifacts-trained weights use.
+pub const PAPER_FILTERS: [usize; 4] = [32, 128, 256, 16];
 
 /// Seed for the synthetic He-initialised weights (fixed so every pipeline
 /// in a process — and across processes — sees the same fallback model).
@@ -203,7 +213,13 @@ impl StudentParams {
     /// Deterministic He-initialised synthetic student ([`SYNTH_FILTERS`]
     /// channel widths, identity batch-norm, zero biases).
     pub fn synthetic(seed: u64) -> StudentParams {
-        let [f1, f2, f3, f4] = SYNTH_FILTERS;
+        Self::synthetic_with_filters(seed, SYNTH_FILTERS)
+    }
+
+    /// Synthetic student with explicit conv1..conv4 channel widths (the
+    /// perf bench uses [`PAPER_FILTERS`] to time the Fig.-5 shapes).
+    pub fn synthetic_with_filters(seed: u64, filters: [usize; 4]) -> StudentParams {
+        let [f1, f2, f3, f4] = filters;
         let mut rng = Rng::new(seed);
         let conv1 = he_conv(&mut rng, 3, 3, 1, f1);
         let conv2 = he_conv(&mut rng, 3, 3, f1, f2);
@@ -263,72 +279,141 @@ fn conv(x: &[f32], h: usize, w: usize, layer: &Conv, pad: Padding) -> (Vec<f32>,
     )
 }
 
-/// The pure-Rust execution engine.
+/// Fold a frozen batch-norm into the preceding conv: with
+/// `s_c = gamma_c / sqrt(var_c + eps)`,
+/// `bn(conv(x)) = conv'(x)` where `w'[.., c] = w[.., c] * s_c` and
+/// `b'_c = (b_c - mean_c) * s_c + beta_c`.  Removes two full per-pixel
+/// passes (bn1, bn2) from every inference.
+pub fn fold_conv_bn(conv: &Conv, bn: &BatchNorm) -> Conv {
+    let cout = conv.cout;
+    let scale: Vec<f32> = (0..cout)
+        .map(|c| bn.gamma[c] / (bn.var[c] + kernels::BN_EPS).sqrt())
+        .collect();
+    let w = conv
+        .w
+        .iter()
+        .enumerate()
+        .map(|(i, &v)| v * scale[i % cout])
+        .collect();
+    let b = (0..cout)
+        .map(|c| (conv.b[c] - bn.mean[c]) * scale[c] + bn.beta[c])
+        .collect();
+    Conv {
+        w,
+        b,
+        kh: conv.kh,
+        kw: conv.kw,
+        cin: conv.cin,
+        cout: conv.cout,
+    }
+}
+
+/// The student with batch-norms folded away — what both interpreter
+/// engines actually execute: four conv layers (ReLU after each, pools
+/// after the first two) plus the optional dense head.
+#[derive(Debug, Clone)]
+pub struct FoldedStudent {
+    pub conv1: Conv,
+    pub conv2: Conv,
+    pub conv3: Conv,
+    pub conv4: Conv,
+    pub head: Option<Dense>,
+}
+
+impl FoldedStudent {
+    pub fn from_params(p: &StudentParams) -> FoldedStudent {
+        FoldedStudent {
+            conv1: fold_conv_bn(&p.conv1, &p.bn1),
+            conv2: fold_conv_bn(&p.conv2, &p.bn2),
+            conv3: p.conv3.clone(),
+            conv4: p.conv4.clone(),
+            head: p.head.clone(),
+        }
+    }
+
+    /// Feature width implied by the layer stack at `image_size`: two 2x2
+    /// pools, then the VALID conv4 shrink (per-axis — conv4 need not be
+    /// square).
+    pub fn feature_len(&self, image_size: usize) -> usize {
+        let sh = image_size / 4 + 1 - self.conv4.kh;
+        let sw = image_size / 4 + 1 - self.conv4.kw;
+        sh * sw * self.conv4.cout
+    }
+}
+
+/// Resolve the student parameter set for `cfg`: weight sidecars when the
+/// artifacts directory exists (detected by `meta.json`, the same probe
+/// [`Meta::load_or_synthetic`] uses), synthetic weights otherwise.  Shared
+/// by [`InterpBackend`] and [`super::fast::FastBackend`] so both engines
+/// always serve the same model.
+pub fn load_student_params(cfg: &ServeConfig, meta: &Meta) -> Result<StudentParams> {
+    if cfg.artifacts_dir.join("meta.json").is_file() {
+        load_sidecars(&cfg.artifacts_dir, meta)
+    } else {
+        Ok(StudentParams::synthetic(SYNTH_WEIGHT_SEED))
+    }
+}
+
+fn load_sidecars(dir: &Path, meta: &Meta) -> Result<StudentParams> {
+    let b = meta.artifacts.batch_sizes.iter().min().copied().unwrap_or(1);
+    let full = params::load_params(dir, &format!("student_softmax_b{b}"))?;
+    if !full.is_empty() {
+        return StudentParams::from_sidecar(&full, true);
+    }
+    let fe = params::load_params(dir, &format!("student_fwd_b{b}"))?;
+    if !fe.is_empty() {
+        return StudentParams::from_sidecar(&fe, false);
+    }
+    Err(Error::Artifact(format!(
+        "no interp-loadable parameter sidecar (student_softmax_b{b}.params.json or \
+         student_fwd_b{b}.params.json) in {}",
+        dir.display()
+    )))
+}
+
+/// The pure-Rust scalar execution engine (the numeric oracle the blocked
+/// [`super::fast::FastBackend`] is property-tested against).
 pub struct InterpBackend {
-    params: StudentParams,
+    folded: FoldedStudent,
     image_size: usize,
     n_features: usize,
 }
 
 impl InterpBackend {
-    /// Load weights from the artifacts directory when one exists (detected
-    /// by `meta.json`, the same probe [`Meta::load_or_synthetic`] uses), or
-    /// fall back to the synthetic student.
+    /// Load weights from the artifacts directory when one exists, or fall
+    /// back to the synthetic student; batch-norms are folded into conv1/2
+    /// at load time.
     pub fn new(cfg: &ServeConfig, meta: &Meta) -> Result<InterpBackend> {
-        let params = if cfg.artifacts_dir.join("meta.json").is_file() {
-            Self::load_sidecars(&cfg.artifacts_dir, meta)?
-        } else {
-            StudentParams::synthetic(SYNTH_WEIGHT_SEED)
-        };
-        let backend = InterpBackend {
-            image_size: meta.artifacts.image_size,
-            n_features: meta.artifacts.n_features,
-            params,
-        };
-        let produced = backend.feature_len();
-        if produced != backend.n_features {
+        let backend = Self::from_params(load_student_params(cfg, meta)?, meta.artifacts.image_size);
+        if backend.n_features != meta.artifacts.n_features {
             return Err(Error::Artifact(format!(
-                "interp front-end produces {produced} features, meta.json says {}",
-                backend.n_features
+                "interp front-end produces {} features, meta.json says {}",
+                backend.n_features, meta.artifacts.n_features
             )));
         }
         Ok(backend)
     }
 
-    fn load_sidecars(dir: &Path, meta: &Meta) -> Result<StudentParams> {
-        let b = meta.artifacts.batch_sizes.iter().min().copied().unwrap_or(1);
-        let full = params::load_params(dir, &format!("student_softmax_b{b}"))?;
-        if !full.is_empty() {
-            return StudentParams::from_sidecar(&full, true);
+    /// Build directly from a parameter set (benches and tests).
+    pub fn from_params(params: StudentParams, image_size: usize) -> InterpBackend {
+        let folded = FoldedStudent::from_params(&params);
+        let n_features = folded.feature_len(image_size);
+        InterpBackend {
+            folded,
+            image_size,
+            n_features,
         }
-        let fe = params::load_params(dir, &format!("student_fwd_b{b}"))?;
-        if !fe.is_empty() {
-            return StudentParams::from_sidecar(&fe, false);
-        }
-        Err(Error::Artifact(format!(
-            "no interp-loadable parameter sidecar (student_softmax_b{b}.params.json or \
-             student_fwd_b{b}.params.json) in {}",
-            dir.display()
-        )))
     }
 
-    /// Feature width implied by the layer stack at this image size: two 2x2
-    /// pools, then the VALID conv4 shrink.
-    fn feature_len(&self) -> usize {
-        let s = self.image_size / 4 + 1 - self.params.conv4.kh;
-        s * s * self.params.conv4.cout
-    }
-
-    /// The full `student_features` forward pass for one `[s, s, 1]` image.
+    /// The full `student_features` forward pass for one `[s, s, 1]` image
+    /// (batch-norm already folded into the conv weights).
     fn forward_one(&self, img: &[f32]) -> Vec<f32> {
-        let p = &self.params;
+        let p = &self.folded;
         let s = self.image_size;
         let (mut h, hh, ww) = conv(img, s, s, &p.conv1, Padding::Same);
-        kernels::batchnorm(&mut h, p.conv1.cout, &p.bn1.gamma, &p.bn1.beta, &p.bn1.mean, &p.bn1.var);
         kernels::relu(&mut h);
         let (h, hh, ww) = kernels::maxpool2(&h, hh, ww, p.conv1.cout);
         let (mut h, hh, ww) = conv(&h, hh, ww, &p.conv2, Padding::Same);
-        kernels::batchnorm(&mut h, p.conv2.cout, &p.bn2.gamma, &p.bn2.beta, &p.bn2.mean, &p.bn2.var);
         kernels::relu(&mut h);
         let (h, hh, ww) = kernels::maxpool2(&h, hh, ww, p.conv2.cout);
         let (mut h, hh, ww) = conv(&h, hh, ww, &p.conv3, Padding::Same);
@@ -362,7 +447,7 @@ impl FrontEnd for InterpBackend {
 
     fn logits(&mut self, images: &[f32], n: usize, num_classes: usize) -> Result<Vec<f32>> {
         let feats = self.extract_features(images, n)?;
-        let head = self.params.head.as_ref().ok_or_else(|| {
+        let head = self.folded.head.as_ref().ok_or_else(|| {
             Error::Artifact(
                 "softmax head unavailable (feature-extractor-only parameter set)".into(),
             )
@@ -407,7 +492,11 @@ mod tests {
     /// generator: conv1 SAME -> bn -> relu -> pool -> conv2 SAME -> bn ->
     /// relu -> pool -> conv3 SAME -> relu -> conv4 VALID -> relu).
     fn mini_student() -> InterpBackend {
-        let params = StudentParams {
+        InterpBackend::from_params(mini_params(), 8)
+    }
+
+    fn mini_params() -> StudentParams {
+        StudentParams {
             conv1: Conv {
                 w: seq(18, 0.11, -0.9),
                 b: vec![0.05, -0.1],
@@ -458,12 +547,35 @@ mod tests {
                 din: 5,
                 dout: 10,
             }),
-        };
-        InterpBackend {
-            params,
-            image_size: 8,
-            n_features: 5,
         }
+    }
+
+    /// The folded forward pass must reproduce the explicit
+    /// conv -> batchnorm -> relu reference chain (the two per-pixel BN
+    /// passes that folding eliminates) to fp-noise tolerance.
+    #[test]
+    fn folded_forward_matches_unfolded_reference() {
+        let p = mini_params();
+        let img = seq(64, 0.03, -0.9);
+        // Unfolded reference: explicit BN passes after conv1 and conv2.
+        let (mut h, hh, ww) = conv(&img, 8, 8, &p.conv1, Padding::Same);
+        let bn1 = &p.bn1;
+        kernels::batchnorm(&mut h, p.conv1.cout, &bn1.gamma, &bn1.beta, &bn1.mean, &bn1.var);
+        kernels::relu(&mut h);
+        let (h, hh, ww) = kernels::maxpool2(&h, hh, ww, p.conv1.cout);
+        let (mut h, hh, ww) = conv(&h, hh, ww, &p.conv2, Padding::Same);
+        let bn2 = &p.bn2;
+        kernels::batchnorm(&mut h, p.conv2.cout, &bn2.gamma, &bn2.beta, &bn2.mean, &bn2.var);
+        kernels::relu(&mut h);
+        let (h, hh, ww) = kernels::maxpool2(&h, hh, ww, p.conv2.cout);
+        let (mut h, hh, ww) = conv(&h, hh, ww, &p.conv3, Padding::Same);
+        kernels::relu(&mut h);
+        let (mut want, _, _) = conv(&h, hh, ww, &p.conv4, Padding::Valid);
+        kernels::relu(&mut want);
+
+        let mut be = InterpBackend::from_params(p, 8);
+        let got = be.extract_features(&img, 1).unwrap();
+        assert_close(&got, &want, 1e-5);
     }
 
     #[test]

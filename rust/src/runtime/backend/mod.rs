@@ -8,7 +8,13 @@
 //!   (see [`kernels`]).  The default everywhere: it builds and serves on a
 //!   clean offline checkout, loading exported weight sidecars when an
 //!   artifacts directory exists and falling back to deterministic synthetic
-//!   weights when it does not.
+//!   weights when it does not.  Scalar and single-threaded by design: it is
+//!   the numeric oracle.
+//! * [`fast::FastBackend`] — the same model on the interpreter fast-path:
+//!   im2col lowering, a cache-blocked unroll-by-8 matmul microkernel,
+//!   scratch-buffer arenas, and `std::thread::scope` batch/row-band
+//!   parallelism (`--threads`).  Property-tested against the scalar
+//!   oracle; still dependency-free.
 //! * [`pjrt::PjrtBackend`] — the HLO/PJRT path (cargo feature `pjrt`),
 //!   which compiles the AOT-exported HLO text artifacts onto the PJRT CPU
 //!   client.  Unavailable in offline builds because the `xla` crate cannot
@@ -16,8 +22,10 @@
 //!
 //! [`FrontEnd`] is the dispatch seam: the coordinator pipeline only sees
 //! the trait, so engine selection is a configuration knob
-//! (`engine = "interp" | "pjrt"` / `hec --engine`), not a build fork.
+//! (`engine = "interp" | "interp-fast" | "pjrt"` / `hec --engine`), not a
+//! build fork.
 
+pub mod fast;
 pub mod interp;
 pub mod kernels;
 #[cfg(feature = "pjrt")]
@@ -59,6 +67,7 @@ pub trait FrontEnd {
 pub fn create(cfg: &ServeConfig, meta: &Meta) -> Result<Box<dyn FrontEnd>> {
     match cfg.engine {
         Engine::Interp => Ok(Box::new(interp::InterpBackend::new(cfg, meta)?)),
+        Engine::InterpFast => Ok(Box::new(fast::FastBackend::new(cfg, meta)?)),
         #[cfg(feature = "pjrt")]
         Engine::Pjrt => Ok(Box::new(pjrt::PjrtBackend::new(cfg, meta)?)),
         #[cfg(not(feature = "pjrt"))]

@@ -219,5 +219,63 @@ fn pjrt_engine_errors_without_feature() {
 #[test]
 fn engine_names_parse() {
     assert_eq!("interp".parse::<Engine>().unwrap(), Engine::Interp);
+    assert_eq!("interp-fast".parse::<Engine>().unwrap(), Engine::InterpFast);
     assert_eq!("pjrt".parse::<Engine>().unwrap(), Engine::Pjrt);
+}
+
+/// The interp-fast engine serves the full artifact-free pipeline and
+/// predicts identically to the scalar engine (same weights, same
+/// bootstrapped templates, fp-equivalent features).
+#[test]
+fn fast_engine_serves_and_matches_scalar_predictions() {
+    let mut scalar = Pipeline::new(&cfg(Backend::FeatureCount)).unwrap();
+    let mut c = cfg(Backend::FeatureCount);
+    c.engine = Engine::InterpFast;
+    let mut fast = Pipeline::new(&c).unwrap();
+    assert_eq!(fast.engine_name(), "interp-fast");
+    let n = 16;
+    let (images, _) = workload(&scalar, n, 1_000_003);
+    let p_scalar: Vec<usize> = scalar
+        .classify_batch(&images, n)
+        .unwrap()
+        .into_iter()
+        .map(|r| r.class)
+        .collect();
+    let p_fast: Vec<usize> = fast
+        .classify_batch(&images, n)
+        .unwrap()
+        .into_iter()
+        .map(|r| r.class)
+        .collect();
+    assert_eq!(p_scalar, p_fast);
+}
+
+/// Sanity (ROADMAP): the synthetic-weight + bootstrapped-template fallback
+/// is not just self-consistent but *accurate* on the samples its templates
+/// were bootstrapped from — well above the 10% chance floor — on both
+/// interpreter engines.
+#[test]
+fn bootstrap_samples_classified_above_chance_on_both_engines() {
+    use hec::coordinator::pipeline::{BOOTSTRAP_DATA_SEED, BOOTSTRAP_PER_CLASS};
+    use hec::dataset::NUM_CLASSES;
+    for engine in [Engine::Interp, Engine::InterpFast] {
+        let mut c = cfg(Backend::FeatureCount);
+        c.engine = engine;
+        let mut p = Pipeline::new(&c).unwrap();
+        let n = BOOTSTRAP_PER_CLASS * NUM_CLASSES;
+        let ds = SyntheticDataset::new(
+            BOOTSTRAP_DATA_SEED,
+            n,
+            p.meta.norm.mean as f32,
+            p.meta.norm.std as f32,
+        );
+        let (images, labels) = ds.batch(0, n);
+        let eval = p.evaluate(&images, &labels, 16).unwrap();
+        let chance = 1.0 / NUM_CLASSES as f64;
+        assert!(
+            eval.accuracy >= 2.0 * chance,
+            "{engine:?}: bootstrap-sample accuracy {:.3} not above chance ({chance:.2})",
+            eval.accuracy
+        );
+    }
 }

@@ -1,0 +1,183 @@
+//! Equivalence properties for the interpreter fast-path: the blocked
+//! im2col/matmul kernels and the `FastBackend` engine must match the
+//! scalar oracle (`kernels::conv2d` / `InterpBackend`) within 1e-5
+//! relative tolerance across randomized shapes — SAME and VALID padding,
+//! even and odd kernels, channel counts that are not multiples of the
+//! 8-wide block, batch sizes 1..8, and any thread count.
+//!
+//! Hand-rolled generator loops from fixed seeds (proptest is unavailable
+//! offline), matching the style of `properties.rs`.
+
+use hec::rng::Rng;
+use hec::runtime::backend::fast::{self, FastBackend};
+use hec::runtime::backend::interp::{Conv, InterpBackend, StudentParams};
+use hec::runtime::backend::kernels::{self, Padding};
+use hec::runtime::FrontEnd;
+
+const REL_TOL: f32 = 1e-5;
+
+fn assert_close(got: &[f32], want: &[f32], ctx: &str) {
+    assert_eq!(got.len(), want.len(), "{ctx}: length mismatch");
+    for (i, (g, w)) in got.iter().zip(want.iter()).enumerate() {
+        assert!(
+            (g - w).abs() <= REL_TOL + REL_TOL * w.abs(),
+            "{ctx}: element {i}: got {g}, want {w}"
+        );
+    }
+}
+
+fn random_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.range(-1.0, 1.0) as f32).collect()
+}
+
+/// Property: blocked matmul == scalar matmul for random (m, k, n) around
+/// and across the MR/NR/KC block boundaries, at thread counts 1..4.
+#[test]
+fn prop_matmul_blocked_equals_scalar() {
+    let mut rng = Rng::new(0xB10C);
+    for case in 0..120 {
+        let m = 1 + rng.below(40);
+        let k = 1 + rng.below(300);
+        let n = 1 + rng.below(40);
+        let threads = 1 + rng.below(4);
+        let a = random_vec(&mut rng, m * k);
+        let b = random_vec(&mut rng, k * n);
+        let want = kernels::matmul(&a, m, k, &b, n);
+        let mut got = vec![0f32; m * n];
+        fast::matmul_blocked(&a, m, k, &b, n, threads, &mut got);
+        assert_close(&got, &want, &format!("case {case}: m={m} k={k} n={n} t={threads}"));
+    }
+}
+
+/// Property: im2col + blocked matmul + bias == scalar conv2d for random
+/// shapes, both paddings, even and odd kernels, ragged channel counts.
+#[test]
+fn prop_fast_conv_equals_scalar_conv() {
+    let mut rng = Rng::new(0xC04F);
+    for case in 0..80 {
+        let kh = 1 + rng.below(5);
+        let kw = 1 + rng.below(5);
+        let h = kh + rng.below(10);
+        let w = kw + rng.below(10);
+        let cin = 1 + rng.below(9);
+        let cout = 1 + rng.below(19); // deliberately not 8-aligned
+        let pad = if rng.u01() < 0.5 { Padding::Same } else { Padding::Valid };
+        let x = random_vec(&mut rng, h * w * cin);
+        let wt = random_vec(&mut rng, kh * kw * cin * cout);
+        let bias = random_vec(&mut rng, cout);
+        let (want, ho, wo) = kernels::conv2d(&x, h, w, cin, &wt, kh, kw, cout, &bias, pad);
+
+        let mut patches = Vec::new();
+        let (gho, gwo) = fast::im2col(&x, h, w, cin, kh, kw, pad, &mut patches);
+        assert_eq!((gho, gwo), (ho, wo), "case {case}: output dims");
+        let mut got = vec![0f32; ho * wo * cout];
+        let threads = 1 + rng.below(3);
+        fast::matmul_blocked(&patches, ho * wo, kh * kw * cin, &wt, cout, threads, &mut got);
+        for row in got.chunks_exact_mut(cout) {
+            for (o, &bv) in row.iter_mut().zip(bias.iter()) {
+                *o += bv;
+            }
+        }
+        let ctx = format!(
+            "case {case}: h={h} w={w} cin={cin} k={kh}x{kw} cout={cout} pad={pad:?}"
+        );
+        assert_close(&got, &want, &ctx);
+    }
+}
+
+fn random_conv(rng: &mut Rng, kh: usize, kw: usize, cin: usize, cout: usize) -> Conv {
+    Conv {
+        w: random_vec(rng, kh * kw * cin * cout),
+        b: random_vec(rng, cout),
+        kh,
+        kw,
+        cin,
+        cout,
+    }
+}
+
+/// Random full student with ragged channel widths (valid at `image_size`
+/// divisible by 4; conv4 is 2x2 VALID like the paper's).
+fn random_student(rng: &mut Rng) -> StudentParams {
+    let f1 = 1 + rng.below(7);
+    let f2 = 1 + rng.below(9);
+    let f3 = 1 + rng.below(11);
+    let f4 = 1 + rng.below(6);
+    let mut sp = StudentParams::synthetic(1); // shapes overwritten below
+    sp.conv1 = random_conv(rng, 3, 3, 1, f1);
+    sp.conv2 = random_conv(rng, 3, 3, f1, f2);
+    sp.conv3 = random_conv(rng, 3, 3, f2, f3);
+    sp.conv4 = random_conv(rng, 2, 2, f3, f4);
+    sp.bn1 = hec::runtime::backend::interp::BatchNorm {
+        gamma: random_vec(rng, f1),
+        beta: random_vec(rng, f1),
+        mean: random_vec(rng, f1),
+        var: (0..f1).map(|_| 0.5 + rng.u01() as f32).collect(),
+    };
+    sp.bn2 = hec::runtime::backend::interp::BatchNorm {
+        gamma: random_vec(rng, f2),
+        beta: random_vec(rng, f2),
+        mean: random_vec(rng, f2),
+        var: (0..f2).map(|_| 0.5 + rng.u01() as f32).collect(),
+    };
+    sp.head = None;
+    sp
+}
+
+/// Property: the full FastBackend forward pass (im2col + blocked matmul +
+/// scratch arenas + batch sharding) matches the scalar InterpBackend on
+/// random students, image sizes, batch sizes 1..8, and thread counts 1..4.
+#[test]
+fn prop_fast_backend_equals_scalar_backend() {
+    let mut rng = Rng::new(0xFA57);
+    for case in 0..25 {
+        let image = [8, 12, 16][rng.below(3)];
+        let sp = random_student(&mut rng);
+        let n = 1 + rng.below(8);
+        let threads = 1 + rng.below(4);
+        let images = random_vec(&mut rng, n * image * image);
+        let mut scalar = InterpBackend::from_params(sp.clone(), image);
+        let mut fastb = FastBackend::from_params(sp, image, threads);
+        let want = scalar.extract_features(&images, n).unwrap();
+        let got = fastb.extract_features(&images, n).unwrap();
+        assert_close(
+            &got,
+            &want,
+            &format!("case {case}: image={image} n={n} t={threads}"),
+        );
+    }
+}
+
+/// Property: thread count is numerically invisible — the fast backend
+/// returns bitwise-identical features for 1 thread and many.
+#[test]
+fn prop_fast_backend_thread_count_invariant() {
+    let mut rng = Rng::new(0x7EAD);
+    for case in 0..10 {
+        let sp = random_student(&mut rng);
+        let n = 1 + rng.below(8);
+        let images = random_vec(&mut rng, n * 16 * 16);
+        let mut serial = FastBackend::from_params(sp.clone(), 16, 1);
+        let mut threaded = FastBackend::from_params(sp, 16, 4);
+        let a = serial.extract_features(&images, n).unwrap();
+        let b = threaded.extract_features(&images, n).unwrap();
+        assert_eq!(a, b, "case {case}: thread count changed the bits");
+    }
+}
+
+/// Property: fast logits (blocked dense head) match the scalar head.
+#[test]
+fn prop_fast_logits_equal_scalar_logits() {
+    let mut rng = Rng::new(0x10615);
+    for case in 0..10 {
+        // The synthetic student carries a head sized for image 32.
+        let sp = StudentParams::synthetic(1000 + case as u64);
+        let n = 1 + rng.below(4);
+        let images = random_vec(&mut rng, n * 32 * 32);
+        let mut scalar = InterpBackend::from_params(sp.clone(), 32);
+        let mut fastb = FastBackend::from_params(sp, 32, 1 + rng.below(3));
+        let want = scalar.logits(&images, n, hec::dataset::NUM_CLASSES).unwrap();
+        let got = fastb.logits(&images, n, hec::dataset::NUM_CLASSES).unwrap();
+        assert_close(&got, &want, &format!("case {case}: n={n}"));
+    }
+}
