@@ -6,6 +6,7 @@
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 
+use hec::api::ClassifyRequest;
 use hec::benchkit::section;
 use hec::config::{Backend, ServeConfig};
 use hec::coordinator::Server;
@@ -29,7 +30,7 @@ fn run(cfg: ServeConfig, requests: usize, clients: usize) -> (f64, f64, u64) {
                 for r in 0..requests / clients {
                     let img = pool[(c + r) % pool.len()].clone();
                     let rx = loop {
-                        match handle.submit(img.clone()) {
+                        match handle.submit(ClassifyRequest::new(img.clone())) {
                             Ok(rx) => break rx,
                             Err(_) => std::thread::sleep(std::time::Duration::from_micros(100)),
                         }

@@ -11,6 +11,7 @@
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 
+use hec::api::ClassifyRequest;
 use hec::config::{Backend, ServeConfig};
 use hec::coordinator::Server;
 use hec::dataset::SyntheticDataset;
@@ -53,13 +54,13 @@ fn main() -> hec::Result<()> {
                 let (img, label) = &pool[(c * per_client + r) % pool.len()];
                 // Retry on backpressure.
                 let rx = loop {
-                    match handle.submit(img.clone()) {
+                    match handle.submit(ClassifyRequest::new(img.clone())) {
                         Ok(rx) => break rx,
                         Err(_) => std::thread::sleep(std::time::Duration::from_micros(200)),
                     }
                 };
                 if let Ok(Ok(res)) = rx.recv() {
-                    if res.class == *label {
+                    if res.top1().class == *label {
                         correct.fetch_add(1, Ordering::Relaxed);
                     }
                     done.fetch_add(1, Ordering::Relaxed);

@@ -47,14 +47,17 @@ fn main() -> hec::Result<()> {
     let results = pipeline.classify_batch(&images, n)?;
     let mut correct = 0;
     for (i, r) in results.iter().enumerate() {
-        let ok = r.class == labels[i];
+        let top = r.top1();
+        let ok = top.class == labels[i];
         correct += usize::from(ok);
         println!(
-            "sample {i:>2}: {} -> predicted {:<10} truth {:<10} ({:.2} nJ)",
+            "sample {i:>2}: {} -> predicted {:<10} truth {:<10} ({:.2} nJ = front {:.2} + back {:.2})",
             if ok { "ok " } else { "ERR" },
-            CLASS_NAMES[r.class],
+            CLASS_NAMES[top.class],
             CLASS_NAMES[labels[i]],
-            r.energy_nj,
+            r.energy.total_nj(),
+            r.energy.front_end_nj,
+            r.energy.back_end_nj,
         );
     }
     println!("\naccuracy {correct}/{n}");

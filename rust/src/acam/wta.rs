@@ -48,14 +48,50 @@ pub fn winner_take_all_classes(
     var: &Variability,
     rng: &mut crate::rng::Rng,
 ) -> usize {
+    rank_classes(similarities, class_of, num_classes, var, rng)[0].0
+}
+
+/// Ranked per-class WTA readout: every class with its (offset-noised)
+/// comparator voltage normalised back to a [0, 1]-ish similarity, sorted
+/// descending with ties to the lower class id.
+///
+/// Draws the same per-class offset samples in the same order as
+/// [`winner_take_all`], so element 0 is exactly the class
+/// [`winner_take_all_classes`] would return for the same RNG state — the
+/// ranked view is the top-k generalisation, not a different decision rule.
+pub fn rank_classes(
+    similarities: &[f64],
+    class_of: &[usize],
+    num_classes: usize,
+    var: &Variability,
+    rng: &mut crate::rng::Rng,
+) -> Vec<(usize, f64)> {
     assert_eq!(similarities.len(), class_of.len());
+    assert!(num_classes > 0, "WTA needs at least one class");
     let mut per_class = vec![f64::NEG_INFINITY; num_classes];
     for (&s, &c) in similarities.iter().zip(class_of.iter()) {
         if s > per_class[c] {
             per_class[c] = s;
         }
     }
-    winner_take_all(&per_class, var, rng).0
+    let sigma = var.wta_offset_v;
+    let mut ranked: Vec<(usize, f64)> = per_class
+        .into_iter()
+        .enumerate()
+        .map(|(c, s)| {
+            let mut v = s * VDD;
+            if sigma > 0.0 {
+                v += rng.normal(0.0, sigma);
+            }
+            (c, v / VDD)
+        })
+        .collect();
+    ranked.sort_by(|a, b| {
+        b.1.partial_cmp(&a.1)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.0.cmp(&b.0))
+    });
+    ranked
 }
 
 #[cfg(test)]
@@ -90,6 +126,37 @@ mod tests {
             &mut rng(),
         );
         assert_eq!(w, 0);
+    }
+
+    #[test]
+    fn rank_classes_top1_equals_winner_and_is_sorted() {
+        let sims = [0.1, 0.95, 0.5, 0.6, 0.2, 0.2];
+        let class_of = [0, 0, 1, 1, 2, 2];
+        let ranked = rank_classes(&sims, &class_of, 3, &Variability::ideal(), &mut rng());
+        assert_eq!(ranked.len(), 3);
+        assert_eq!(ranked[0].0, 0); // class 0 best 0.95
+        assert!(ranked[0].1 >= ranked[1].1 && ranked[1].1 >= ranked[2].1);
+        let w = winner_take_all_classes(&sims, &class_of, 3, &Variability::ideal(), &mut rng());
+        assert_eq!(ranked[0].0, w);
+        // Ideal readout reports the clean per-class similarity.
+        assert!((ranked[0].1 - 0.95).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rank_classes_noisy_matches_winner_for_same_rng_state() {
+        let noisy = Variability {
+            wta_offset_v: 0.05,
+            ..Default::default()
+        };
+        let sims = [0.5, 0.505, 0.49];
+        let class_of = [0, 1, 2];
+        for seed in 0..50 {
+            let mut r1 = crate::rng::Rng::new(seed);
+            let mut r2 = crate::rng::Rng::new(seed);
+            let w = winner_take_all_classes(&sims, &class_of, 3, &noisy, &mut r1);
+            let ranked = rank_classes(&sims, &class_of, 3, &noisy, &mut r2);
+            assert_eq!(ranked[0].0, w, "seed {seed}");
+        }
     }
 
     #[test]

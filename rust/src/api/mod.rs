@@ -1,0 +1,327 @@
+//! `hec::api` v1 — the versioned public classification protocol.
+//!
+//! Everything that crosses the serving boundary speaks these types: the
+//! in-process [`crate::coordinator::Handle`], the HTTP/JSON front door in
+//! [`crate::gateway`], the CLI driver, and the e2e benches.  The surface is
+//! transport-ready by construction:
+//!
+//! * [`ClassifyRequest`] — image + `top_k` + optional per-request backend
+//!   override + `return_features` + a client-chosen request id;
+//! * [`ClassifyResponse`] — ranked [`Prediction`]s (per-class best scores
+//!   from the top-k matching path), a per-stage [`EnergyBreakdown`], queue /
+//!   compute [`Timing`], and the engine + backend that actually served the
+//!   request;
+//! * [`ApiError`] — a stable machine-readable [`ErrorCode`] plus a human
+//!   message; [`crate::error::Error`] maps onto it (`From<Error>`), and the
+//!   gateway maps codes onto HTTP statuses.
+//!
+//! JSON encode/decode (over [`crate::jsonlite`], no serde) lives in
+//! [`wire`]; the in-memory types here carry no transport concerns.
+//!
+//! Versioning contract: additive changes (new optional request fields, new
+//! response fields, new error codes) stay v1; anything that re-interprets an
+//! existing field is v2 under a new URL prefix.
+
+pub mod wire;
+
+use crate::config::Backend;
+
+/// Protocol version tag (`/v1/...` URL prefix, `"api"` response field).
+pub const API_VERSION: &str = "v1";
+
+/// One ranked class candidate.
+///
+/// Score semantics follow the serving backend (documented per backend in
+/// README §HTTP API): Eq. 8 match counts for `fc`, Eq. 9-11 similarities for
+/// `sim`, normalised (offset-noised) match-line voltages for `acam`, raw
+/// logits for `softmax`.  Within one response, scores are non-increasing.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Prediction {
+    pub class: usize,
+    pub score: f64,
+}
+
+/// Per-stage modelled energy (nJ).  `front_end_nj + back_end_nj` equals the
+/// single `energy_nj` figure the pre-v1 API reported.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EnergyBreakdown {
+    /// Student-CNN front-end (effective MACs; includes the dense head for
+    /// the softmax backend, which has no separate back-end stage).
+    pub front_end_nj: f64,
+    /// Back-end search (ACAM Eq. 14 envelope / match-line energy; zero for
+    /// softmax).
+    pub back_end_nj: f64,
+}
+
+impl EnergyBreakdown {
+    pub fn total_nj(&self) -> f64 {
+        self.front_end_nj + self.back_end_nj
+    }
+}
+
+/// Where a request's latency went.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct Timing {
+    /// Time spent queued before the batcher dispatched the batch (µs).
+    pub queue_us: u64,
+    /// Engine + matcher compute time of the carrying batch (µs).
+    pub compute_us: u64,
+}
+
+/// A v1 classification request.
+#[derive(Debug, Clone)]
+pub struct ClassifyRequest {
+    /// Row-major grayscale pixels, `image_size^2` floats (the deployment's
+    /// `/healthz` reports the expected length).
+    pub image: Vec<f32>,
+    /// How many ranked classes to return (clamped to the class count;
+    /// 0 is rejected as `INVALID_ARGUMENT`).
+    pub top_k: usize,
+    /// Per-request backend override; `None` serves on the deployment
+    /// backend.  Overrides the deployment did not provision for (e.g.
+    /// `acam` when no array was programmed) fail with
+    /// `BACKEND_UNAVAILABLE`.
+    pub backend: Option<Backend>,
+    /// Also return the raw front-end feature vector.
+    pub return_features: bool,
+    /// Client-chosen correlation id, echoed verbatim in the response.
+    pub request_id: Option<String>,
+}
+
+impl ClassifyRequest {
+    /// A default top-1 request on the deployment backend.
+    pub fn new(image: Vec<f32>) -> Self {
+        ClassifyRequest {
+            image,
+            top_k: 1,
+            backend: None,
+            return_features: false,
+            request_id: None,
+        }
+    }
+
+    /// The per-item knobs the pipeline needs (everything but the image and
+    /// transport metadata).
+    pub fn options(&self) -> ClassifyOptions {
+        ClassifyOptions {
+            top_k: self.top_k,
+            backend: self.backend,
+            return_features: self.return_features,
+        }
+    }
+}
+
+/// Pipeline-level per-item options (see [`ClassifyRequest`] field docs).
+#[derive(Debug, Clone, Copy)]
+pub struct ClassifyOptions {
+    pub top_k: usize,
+    pub backend: Option<Backend>,
+    pub return_features: bool,
+}
+
+impl Default for ClassifyOptions {
+    fn default() -> Self {
+        ClassifyOptions {
+            top_k: 1,
+            backend: None,
+            return_features: false,
+        }
+    }
+}
+
+/// One classification outcome at the pipeline level — no transport metadata
+/// yet (the server adds timing / ids and lifts this into a
+/// [`ClassifyResponse`]).
+#[derive(Debug, Clone)]
+pub struct ClassifyResult {
+    /// Ranked candidates, best first; never empty.
+    pub predictions: Vec<Prediction>,
+    pub energy: EnergyBreakdown,
+    /// The backend that actually scored this item (override-resolved).
+    pub backend: Backend,
+    /// Raw front-end features, when requested.
+    pub features: Option<Vec<f32>>,
+}
+
+impl ClassifyResult {
+    /// The winning candidate (the pre-v1 `Classification::class`).
+    pub fn top1(&self) -> &Prediction {
+        &self.predictions[0]
+    }
+}
+
+/// A v1 classification response.
+#[derive(Debug, Clone)]
+pub struct ClassifyResponse {
+    /// Echo of [`ClassifyRequest::request_id`].
+    pub request_id: Option<String>,
+    /// Ranked candidates, best first; never empty.
+    pub predictions: Vec<Prediction>,
+    pub energy: EnergyBreakdown,
+    pub timing: Timing,
+    /// Execution engine that served the request (`interp`, `interp-fast`,
+    /// `pjrt`).
+    pub engine: &'static str,
+    /// Backend that scored the request (override-resolved).
+    pub backend: Backend,
+    pub features: Option<Vec<f32>>,
+}
+
+impl ClassifyResponse {
+    pub fn top1(&self) -> &Prediction {
+        &self.predictions[0]
+    }
+}
+
+/// Stable machine-readable failure codes.  The string form (SCREAMING_CASE,
+/// [`ErrorCode::as_str`]) is the wire contract; variants are only ever
+/// added, never re-used.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrorCode {
+    /// Image length does not match the deployment's `image_size^2`.
+    InvalidShape,
+    /// A request field is out of range or unparseable (`top_k: 0`, unknown
+    /// backend name, ...).
+    InvalidArgument,
+    /// Request body is not valid JSON / not the documented schema.
+    MalformedRequest,
+    /// The bounded request queue is full (backpressure) — retry later.
+    QueueFull,
+    /// The requested backend is not provisioned in this deployment.
+    BackendUnavailable,
+    /// The server is shutting down / the worker is gone.
+    ServerStopped,
+    /// No such route.
+    NotFound,
+    /// Route exists, method does not.
+    MethodNotAllowed,
+    /// Unexpected internal failure (engine error, dropped response, ...).
+    Internal,
+}
+
+impl ErrorCode {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ErrorCode::InvalidShape => "INVALID_SHAPE",
+            ErrorCode::InvalidArgument => "INVALID_ARGUMENT",
+            ErrorCode::MalformedRequest => "MALFORMED_REQUEST",
+            ErrorCode::QueueFull => "QUEUE_FULL",
+            ErrorCode::BackendUnavailable => "BACKEND_UNAVAILABLE",
+            ErrorCode::ServerStopped => "SERVER_STOPPED",
+            ErrorCode::NotFound => "NOT_FOUND",
+            ErrorCode::MethodNotAllowed => "METHOD_NOT_ALLOWED",
+            ErrorCode::Internal => "INTERNAL",
+        }
+    }
+
+    /// Parse the wire form back (test clients, log scrapers).
+    pub fn parse(s: &str) -> Option<ErrorCode> {
+        Some(match s {
+            "INVALID_SHAPE" => ErrorCode::InvalidShape,
+            "INVALID_ARGUMENT" => ErrorCode::InvalidArgument,
+            "MALFORMED_REQUEST" => ErrorCode::MalformedRequest,
+            "QUEUE_FULL" => ErrorCode::QueueFull,
+            "BACKEND_UNAVAILABLE" => ErrorCode::BackendUnavailable,
+            "SERVER_STOPPED" => ErrorCode::ServerStopped,
+            "NOT_FOUND" => ErrorCode::NotFound,
+            "METHOD_NOT_ALLOWED" => ErrorCode::MethodNotAllowed,
+            "INTERNAL" => ErrorCode::Internal,
+            _ => return None,
+        })
+    }
+
+    /// The HTTP status the gateway maps this code onto for API-level
+    /// failures.  One documented exception: transport-level protocol
+    /// rejections (oversized head/body, unsupported transfer encoding)
+    /// carry `MALFORMED_REQUEST` with the more specific RFC status
+    /// (431/413/501) instead of this mapping — the code tells the client
+    /// *what kind* of failure it is, the status carries the HTTP-level
+    /// detail.
+    pub fn http_status(&self) -> u16 {
+        match self {
+            ErrorCode::InvalidShape
+            | ErrorCode::InvalidArgument
+            | ErrorCode::MalformedRequest => 400,
+            ErrorCode::NotFound => 404,
+            ErrorCode::MethodNotAllowed => 405,
+            ErrorCode::QueueFull => 429,
+            ErrorCode::BackendUnavailable | ErrorCode::ServerStopped => 503,
+            ErrorCode::Internal => 500,
+        }
+    }
+}
+
+/// A structured API failure: stable code + human-readable detail.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ApiError {
+    pub code: ErrorCode,
+    pub message: String,
+}
+
+impl ApiError {
+    pub fn new(code: ErrorCode, message: impl Into<String>) -> Self {
+        ApiError {
+            code,
+            message: message.into(),
+        }
+    }
+}
+
+impl std::fmt::Display for ApiError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}: {}", self.code.as_str(), self.message)
+    }
+}
+
+impl std::error::Error for ApiError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn energy_breakdown_sums() {
+        let e = EnergyBreakdown {
+            front_end_nj: 1.25,
+            back_end_nj: 1.45,
+        };
+        assert!((e.total_nj() - 2.7).abs() < 1e-12);
+    }
+
+    #[test]
+    fn error_codes_roundtrip_and_have_statuses() {
+        for code in [
+            ErrorCode::InvalidShape,
+            ErrorCode::InvalidArgument,
+            ErrorCode::MalformedRequest,
+            ErrorCode::QueueFull,
+            ErrorCode::BackendUnavailable,
+            ErrorCode::ServerStopped,
+            ErrorCode::NotFound,
+            ErrorCode::MethodNotAllowed,
+            ErrorCode::Internal,
+        ] {
+            assert_eq!(ErrorCode::parse(code.as_str()), Some(code));
+            let s = code.http_status();
+            assert!((400..=599).contains(&s), "{code:?} -> {s}");
+        }
+        assert_eq!(ErrorCode::parse("NOPE"), None);
+    }
+
+    #[test]
+    fn api_error_displays_code_prefix() {
+        let e = ApiError::new(ErrorCode::QueueFull, "queue full (backpressure)");
+        assert_eq!(e.to_string(), "QUEUE_FULL: queue full (backpressure)");
+    }
+
+    #[test]
+    fn request_defaults() {
+        let r = ClassifyRequest::new(vec![0.0; 4]);
+        assert_eq!(r.top_k, 1);
+        assert!(r.backend.is_none());
+        assert!(!r.return_features);
+        assert!(r.request_id.is_none());
+        let o = r.options();
+        assert_eq!(o.top_k, 1);
+    }
+}

@@ -1,0 +1,341 @@
+//! JSON wire form of the v1 API types (over [`crate::jsonlite`], no serde).
+//!
+//! Decode is strict about types but lenient about extras: unknown fields are
+//! ignored (additive evolution), wrong-typed or out-of-range fields fail
+//! with a structured [`ApiError`] rather than a parse panic.  Encode is
+//! total — every in-memory value has a JSON form ([`crate::jsonlite`] writes
+//! non-finite numbers as `null`).
+
+use std::collections::BTreeMap;
+
+use crate::config::Backend;
+use crate::jsonlite::Value;
+
+use super::{
+    ApiError, ClassifyRequest, ClassifyResponse, EnergyBreakdown, ErrorCode, Prediction, Timing,
+    API_VERSION,
+};
+
+fn bad(msg: impl Into<String>) -> ApiError {
+    ApiError::new(ErrorCode::InvalidArgument, msg)
+}
+
+impl ClassifyRequest {
+    /// Decode from a parsed JSON document.
+    pub fn from_value(v: &Value) -> Result<ClassifyRequest, ApiError> {
+        let obj = v
+            .as_object()
+            .ok_or_else(|| bad("request body must be a JSON object"))?;
+        let image = match obj.get("image") {
+            Some(img) => img
+                .as_f32_vec()
+                .ok_or_else(|| bad("'image' must be an array of numbers"))?,
+            None => return Err(bad("missing required field 'image'")),
+        };
+        let mut req = ClassifyRequest::new(image);
+        if let Some(k) = obj.get("top_k") {
+            let k = k
+                .as_f64()
+                .filter(|f| f.fract() == 0.0 && *f >= 0.0)
+                .ok_or_else(|| bad("'top_k' must be a non-negative integer"))?
+                as usize;
+            if k == 0 {
+                return Err(bad("'top_k' must be >= 1"));
+            }
+            req.top_k = k;
+        }
+        if let Some(b) = obj.get("backend") {
+            let name = b
+                .as_str()
+                .ok_or_else(|| bad("'backend' must be a string"))?;
+            req.backend = Some(
+                name.parse::<Backend>()
+                    .map_err(|_| bad(format!("unknown backend: {name}")))?,
+            );
+        }
+        if let Some(f) = obj.get("return_features") {
+            req.return_features = f
+                .as_bool()
+                .ok_or_else(|| bad("'return_features' must be a boolean"))?;
+        }
+        if let Some(id) = obj.get("request_id") {
+            req.request_id = Some(
+                id.as_str()
+                    .ok_or_else(|| bad("'request_id' must be a string"))?
+                    .to_string(),
+            );
+        }
+        Ok(req)
+    }
+
+    /// Encode (the CLI demo driver and test clients use this).
+    pub fn to_value(&self) -> Value {
+        let mut m = BTreeMap::new();
+        m.insert(
+            "image".to_string(),
+            Value::Arr(self.image.iter().map(|&p| Value::Num(p as f64)).collect()),
+        );
+        m.insert("top_k".to_string(), Value::Num(self.top_k as f64));
+        if let Some(b) = self.backend {
+            m.insert("backend".to_string(), Value::Str(b.name().to_string()));
+        }
+        if self.return_features {
+            m.insert("return_features".to_string(), Value::Bool(true));
+        }
+        if let Some(id) = &self.request_id {
+            m.insert("request_id".to_string(), Value::Str(id.clone()));
+        }
+        Value::Obj(m)
+    }
+}
+
+impl ClassifyResponse {
+    pub fn to_value(&self) -> Value {
+        let mut m = BTreeMap::new();
+        m.insert("api".to_string(), Value::Str(API_VERSION.to_string()));
+        if let Some(id) = &self.request_id {
+            m.insert("request_id".to_string(), Value::Str(id.clone()));
+        }
+        m.insert(
+            "predictions".to_string(),
+            Value::Arr(
+                self.predictions
+                    .iter()
+                    .map(|p| {
+                        Value::Obj(BTreeMap::from([
+                            ("class".to_string(), Value::Num(p.class as f64)),
+                            ("score".to_string(), Value::Num(p.score)),
+                        ]))
+                    })
+                    .collect(),
+            ),
+        );
+        m.insert(
+            "energy".to_string(),
+            Value::Obj(BTreeMap::from([
+                (
+                    "front_end_nj".to_string(),
+                    Value::Num(self.energy.front_end_nj),
+                ),
+                (
+                    "back_end_nj".to_string(),
+                    Value::Num(self.energy.back_end_nj),
+                ),
+                ("total_nj".to_string(), Value::Num(self.energy.total_nj())),
+            ])),
+        );
+        m.insert(
+            "timing".to_string(),
+            Value::Obj(BTreeMap::from([
+                (
+                    "queue_us".to_string(),
+                    Value::Num(self.timing.queue_us as f64),
+                ),
+                (
+                    "compute_us".to_string(),
+                    Value::Num(self.timing.compute_us as f64),
+                ),
+            ])),
+        );
+        m.insert("engine".to_string(), Value::Str(self.engine.to_string()));
+        m.insert(
+            "backend".to_string(),
+            Value::Str(self.backend.name().to_string()),
+        );
+        if let Some(feats) = &self.features {
+            m.insert(
+                "features".to_string(),
+                Value::Arr(feats.iter().map(|&f| Value::Num(f as f64)).collect()),
+            );
+        }
+        Value::Obj(m)
+    }
+
+    /// Decode (test clients / downstream consumers).  The `engine` string is
+    /// matched back to a static name; unknown engines decode as `"unknown"`.
+    pub fn from_value(v: &Value) -> Result<ClassifyResponse, ApiError> {
+        let obj = v
+            .as_object()
+            .ok_or_else(|| bad("response must be a JSON object"))?;
+        let predictions = obj
+            .get("predictions")
+            .and_then(Value::as_array)
+            .ok_or_else(|| bad("missing 'predictions' array"))?
+            .iter()
+            .map(|p| {
+                Some(Prediction {
+                    class: p.get("class")?.as_usize()?,
+                    score: p.get("score")?.as_f64()?,
+                })
+            })
+            .collect::<Option<Vec<_>>>()
+            .ok_or_else(|| bad("malformed prediction entry"))?;
+        if predictions.is_empty() {
+            return Err(bad("'predictions' must be non-empty"));
+        }
+        let energy = obj.get("energy").ok_or_else(|| bad("missing 'energy'"))?;
+        let energy = EnergyBreakdown {
+            front_end_nj: energy
+                .get("front_end_nj")
+                .and_then(Value::as_f64)
+                .ok_or_else(|| bad("missing 'energy.front_end_nj'"))?,
+            back_end_nj: energy
+                .get("back_end_nj")
+                .and_then(Value::as_f64)
+                .ok_or_else(|| bad("missing 'energy.back_end_nj'"))?,
+        };
+        let timing = match obj.get("timing") {
+            Some(t) => Timing {
+                queue_us: t.get("queue_us").and_then(Value::as_u64).unwrap_or(0),
+                compute_us: t.get("compute_us").and_then(Value::as_u64).unwrap_or(0),
+            },
+            None => Timing::default(),
+        };
+        let engine = match obj.get("engine").and_then(Value::as_str) {
+            Some("interp") => "interp",
+            Some("interp-fast") => "interp-fast",
+            Some("pjrt") => "pjrt",
+            _ => "unknown",
+        };
+        let backend = obj
+            .get("backend")
+            .and_then(Value::as_str)
+            .and_then(|s| s.parse::<Backend>().ok())
+            .ok_or_else(|| bad("missing or unknown 'backend'"))?;
+        Ok(ClassifyResponse {
+            request_id: obj
+                .get("request_id")
+                .and_then(Value::as_str)
+                .map(str::to_string),
+            predictions,
+            energy,
+            timing,
+            engine,
+            backend,
+            features: obj.get("features").and_then(Value::as_f32_vec),
+        })
+    }
+}
+
+impl ApiError {
+    /// The error envelope every non-2xx gateway response carries.
+    pub fn to_value(&self) -> Value {
+        Value::Obj(BTreeMap::from([(
+            "error".to_string(),
+            Value::Obj(BTreeMap::from([
+                (
+                    "code".to_string(),
+                    Value::Str(self.code.as_str().to_string()),
+                ),
+                ("message".to_string(), Value::Str(self.message.clone())),
+            ])),
+        )]))
+    }
+
+    /// Decode an error envelope (test clients).
+    pub fn from_value(v: &Value) -> Option<ApiError> {
+        let e = v.get("error")?;
+        Some(ApiError {
+            code: ErrorCode::parse(e.get("code")?.as_str()?)?,
+            message: e.get("message")?.as_str()?.to_string(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::jsonlite;
+
+    #[test]
+    fn request_roundtrip() {
+        let mut req = ClassifyRequest::new(vec![0.5, -1.25, 3.0]);
+        req.top_k = 3;
+        req.backend = Some(Backend::Similarity);
+        req.return_features = true;
+        req.request_id = Some("req-7".into());
+        let back =
+            ClassifyRequest::from_value(&jsonlite::parse(&req.to_value().to_json()).unwrap())
+                .unwrap();
+        assert_eq!(back.image, req.image);
+        assert_eq!(back.top_k, 3);
+        assert_eq!(back.backend, Some(Backend::Similarity));
+        assert!(back.return_features);
+        assert_eq!(back.request_id.as_deref(), Some("req-7"));
+    }
+
+    #[test]
+    fn request_defaults_and_unknown_fields_ignored() {
+        let v = jsonlite::parse(r#"{"image": [1, 2], "future_field": {"x": 1}}"#).unwrap();
+        let req = ClassifyRequest::from_value(&v).unwrap();
+        assert_eq!(req.image, vec![1.0, 2.0]);
+        assert_eq!(req.top_k, 1);
+        assert!(req.backend.is_none());
+    }
+
+    #[test]
+    fn request_decode_rejections() {
+        for (body, needle) in [
+            (r#"{}"#, "image"),
+            (r#"{"image": "nope"}"#, "image"),
+            (r#"{"image": [1], "top_k": 0}"#, "top_k"),
+            (r#"{"image": [1], "top_k": 1.5}"#, "top_k"),
+            (r#"{"image": [1], "backend": "cuda"}"#, "backend"),
+            (r#"{"image": [1], "request_id": 7}"#, "request_id"),
+            (r#"[1, 2]"#, "object"),
+        ] {
+            let err = ClassifyRequest::from_value(&jsonlite::parse(body).unwrap())
+                .expect_err(body);
+            assert_eq!(err.code, ErrorCode::InvalidArgument, "{body}");
+            assert!(err.message.contains(needle), "{body} -> {err}");
+        }
+    }
+
+    #[test]
+    fn response_roundtrip_and_energy_total() {
+        let resp = ClassifyResponse {
+            request_id: Some("abc".into()),
+            predictions: vec![
+                Prediction {
+                    class: 3,
+                    score: 712.0,
+                },
+                Prediction {
+                    class: 1,
+                    score: 700.0,
+                },
+            ],
+            energy: EnergyBreakdown {
+                front_end_nj: 1.25,
+                back_end_nj: 1.45,
+            },
+            timing: Timing {
+                queue_us: 120,
+                compute_us: 800,
+            },
+            engine: "interp",
+            backend: Backend::FeatureCount,
+            features: Some(vec![0.5, 1.5]),
+        };
+        let text = resp.to_value().to_json();
+        let v = jsonlite::parse(&text).unwrap();
+        assert_eq!(v.get("api").unwrap().as_str(), Some("v1"));
+        assert!(
+            (v.at(&["energy", "total_nj"]).unwrap().as_f64().unwrap() - 2.7).abs() < 1e-12
+        );
+        let back = ClassifyResponse::from_value(&v).unwrap();
+        assert_eq!(back.predictions, resp.predictions);
+        assert_eq!(back.backend, Backend::FeatureCount);
+        assert_eq!(back.engine, "interp");
+        assert_eq!(back.timing, resp.timing);
+        assert_eq!(back.features, resp.features);
+    }
+
+    #[test]
+    fn error_envelope_roundtrip() {
+        let e = ApiError::new(ErrorCode::QueueFull, "queue full (backpressure)");
+        let v = jsonlite::parse(&e.to_value().to_json()).unwrap();
+        assert_eq!(v.at(&["error", "code"]).unwrap().as_str(), Some("QUEUE_FULL"));
+        assert_eq!(ApiError::from_value(&v), Some(e));
+    }
+}

@@ -65,6 +65,19 @@ impl std::str::FromStr for Backend {
     }
 }
 
+impl Backend {
+    /// Canonical wire name (round-trips through [`std::str::FromStr`]) —
+    /// used by the v1 API's `backend` request/response fields.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Backend::AcamSim => "acam",
+            Backend::FeatureCount => "fc",
+            Backend::Similarity => "sim",
+            Backend::Softmax => "softmax",
+        }
+    }
+}
+
 /// Dynamic batching policy.
 #[derive(Debug, Clone)]
 pub struct BatchConfig {
@@ -84,6 +97,26 @@ impl Default for BatchConfig {
             max_batch: 32,
             max_wait_us: 2_000,
             queue_depth: 1024,
+        }
+    }
+}
+
+/// HTTP/JSON gateway front door (`hec serve --http ADDR`).
+#[derive(Debug, Clone)]
+pub struct HttpConfig {
+    /// Bind address (`127.0.0.1:8080`; port 0 asks the OS for a free port).
+    /// `None` disables the gateway.
+    pub addr: Option<String>,
+    /// Concurrent-connection cap; excess connections get an immediate
+    /// 429 (`QUEUE_FULL`).
+    pub max_connections: usize,
+}
+
+impl Default for HttpConfig {
+    fn default() -> Self {
+        HttpConfig {
+            addr: None,
+            max_connections: 64,
         }
     }
 }
@@ -135,6 +168,7 @@ pub struct ServeConfig {
     pub use_fast_frontend: bool,
     pub batch: BatchConfig,
     pub acam: AcamConfig,
+    pub http: HttpConfig,
 }
 
 impl Default for ServeConfig {
@@ -148,6 +182,7 @@ impl Default for ServeConfig {
             use_fast_frontend: true,
             batch: BatchConfig::default(),
             acam: AcamConfig::default(),
+            http: HttpConfig::default(),
         }
     }
 }
@@ -184,6 +219,14 @@ impl ServeConfig {
             }
             if let Some(v) = b.get("queue_depth").and_then(|v| v.as_usize()) {
                 cfg.batch.queue_depth = v;
+            }
+        }
+        if let Some(h) = doc.get("http") {
+            if let Some(v) = h.get("addr").and_then(|v| v.as_str()) {
+                cfg.http.addr = Some(v.to_string());
+            }
+            if let Some(v) = h.get("max_connections").and_then(|v| v.as_usize()) {
+                cfg.http.max_connections = v;
             }
         }
         if let Some(a) = doc.get("acam") {
@@ -228,6 +271,17 @@ impl ServeConfig {
         }
     }
 
+    /// Effective gateway bind address.  Precedence: explicit config/CLI
+    /// (`http.addr` / `--http`) > `HEC_HTTP_ADDR` env > disabled.
+    pub fn resolve_http_addr(&self) -> Option<String> {
+        self.http.addr.clone().or_else(|| {
+            std::env::var("HEC_HTTP_ADDR")
+                .ok()
+                .map(|v| v.trim().to_string())
+                .filter(|v| !v.is_empty())
+        })
+    }
+
     pub fn validate(&self) -> Result<()> {
         if !(1..=3).contains(&self.templates_per_class) {
             return Err(Error::Config(format!(
@@ -240,6 +294,9 @@ impl ServeConfig {
         }
         if self.acam.variability_level < 0.0 {
             return Err(Error::Config("variability_level must be >= 0".into()));
+        }
+        if self.http.max_connections == 0 {
+            return Err(Error::Config("http.max_connections must be positive".into()));
         }
         Ok(())
     }
@@ -305,6 +362,38 @@ mod tests {
         std::fs::write(&path, r#"{"engine": "pjrt", "backend": "fc"}"#).unwrap();
         let cfg = ServeConfig::load(&path).unwrap();
         assert_eq!(cfg.engine, Engine::Pjrt);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn backend_names_roundtrip() {
+        for b in [
+            Backend::AcamSim,
+            Backend::FeatureCount,
+            Backend::Similarity,
+            Backend::Softmax,
+        ] {
+            assert_eq!(b.name().parse::<Backend>().unwrap(), b);
+        }
+    }
+
+    #[test]
+    fn http_config_loads_and_validates() {
+        let dir = std::env::temp_dir().join(format!("hec-httpcfg-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("serve.json");
+        std::fs::write(
+            &path,
+            r#"{"http": {"addr": "127.0.0.1:0", "max_connections": 8}}"#,
+        )
+        .unwrap();
+        let cfg = ServeConfig::load(&path).unwrap();
+        assert_eq!(cfg.http.addr.as_deref(), Some("127.0.0.1:0"));
+        assert_eq!(cfg.http.max_connections, 8);
+        assert_eq!(cfg.resolve_http_addr().as_deref(), Some("127.0.0.1:0"));
+        let mut bad = ServeConfig::default();
+        bad.http.max_connections = 0;
+        assert!(bad.validate().is_err());
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -91,6 +91,71 @@ mod tests {
     }
 
     #[test]
+    fn assemble_deadline_counts_from_first_item() {
+        // Items that arrive after max_wait has elapsed since the FIRST item
+        // belong to the next batch, even though the channel is non-empty by
+        // the time the deadline check runs.
+        let (tx, rx) = sync_channel(16);
+        tx.send(1).unwrap();
+        let sender = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(150));
+            tx.send(2).unwrap();
+            tx // keep the channel open past assemble's return
+        });
+        let t0 = Instant::now();
+        let b = assemble(&rx, 8, Duration::from_millis(20)).unwrap();
+        assert_eq!(b, vec![1], "late item must not join the flushed batch");
+        assert!(t0.elapsed() < Duration::from_millis(140));
+        let tx = sender.join().unwrap();
+        let b2 = assemble(&rx, 8, Duration::from_millis(5)).unwrap();
+        assert_eq!(b2, vec![2]);
+        drop(tx);
+    }
+
+    #[test]
+    fn assemble_full_batch_returns_before_deadline() {
+        // max_batch items are already queued: assemble must not sit out the
+        // deadline, it returns the full batch immediately.
+        let (tx, rx) = sync_channel(16);
+        for i in 0..4 {
+            tx.send(i).unwrap();
+        }
+        let t0 = Instant::now();
+        let b = assemble(&rx, 4, Duration::from_secs(5)).unwrap();
+        assert_eq!(b, vec![0, 1, 2, 3]);
+        assert!(t0.elapsed() < Duration::from_secs(1), "must not wait out max_wait");
+    }
+
+    #[test]
+    fn assemble_flushes_partial_batch_on_disconnect() {
+        // Channel closes while a partial batch is held: the held items are
+        // flushed as a final batch (graceful shutdown), and the NEXT call
+        // returns None.
+        let (tx, rx) = sync_channel(16);
+        tx.send(10).unwrap();
+        tx.send(11).unwrap();
+        drop(tx);
+        let b = assemble(&rx, 8, Duration::from_millis(50)).unwrap();
+        assert_eq!(b, vec![10, 11]);
+        assert!(assemble(&rx, 8, Duration::from_millis(1)).is_none());
+    }
+
+    #[test]
+    fn assemble_zero_wait_dispatches_singletons() {
+        let (tx, rx) = sync_channel(16);
+        for i in 0..3 {
+            tx.send(i).unwrap();
+        }
+        // max_wait = 0: the deadline is already reached when the first item
+        // is in hand, so each batch carries exactly one item.
+        for want in 0..3 {
+            let b = assemble(&rx, 8, Duration::ZERO).unwrap();
+            assert_eq!(b, vec![want]);
+        }
+        drop(tx);
+    }
+
+    #[test]
     fn assemble_none_on_closed_empty_channel() {
         let (tx, rx) = sync_channel::<u32>(1);
         drop(tx);

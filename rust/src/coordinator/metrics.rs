@@ -63,6 +63,11 @@ pub struct Metrics {
     pub batches: AtomicU64,
     pub batched_items: AtomicU64,
     pub padded_slots: AtomicU64,
+    /// Gauge: requests accepted into the bounded queue but not yet pulled
+    /// into a batch by the worker.
+    pub queue_depth: AtomicU64,
+    /// Gauge: requests accepted but not yet answered (queued + computing).
+    pub in_flight: AtomicU64,
     /// End-to-end request latency.
     pub latency: Histogram,
     /// PJRT execute() time per batch.
@@ -83,6 +88,19 @@ impl Metrics {
         self.energy_mnj.load(Ordering::Relaxed) as f64 / 1e3
     }
 
+    /// Saturating gauge decrement (gauges never wrap below zero even if a
+    /// racing snapshot observes an intermediate state).
+    pub fn gauge_dec(gauge: &AtomicU64, by: u64) {
+        let mut cur = gauge.load(Ordering::Relaxed);
+        loop {
+            let next = cur.saturating_sub(by);
+            match gauge.compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed) {
+                Ok(_) => return,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
     pub fn snapshot(&self) -> Snapshot {
         let batches = self.batches.load(Ordering::Relaxed);
         let items = self.batched_items.load(Ordering::Relaxed);
@@ -90,6 +108,8 @@ impl Metrics {
             requests: self.requests.load(Ordering::Relaxed),
             responses: self.responses.load(Ordering::Relaxed),
             errors: self.errors.load(Ordering::Relaxed),
+            queue_depth: self.queue_depth.load(Ordering::Relaxed),
+            in_flight: self.in_flight.load(Ordering::Relaxed),
             batches,
             mean_batch: if batches > 0 {
                 items as f64 / batches as f64
@@ -118,6 +138,8 @@ pub struct Snapshot {
     pub requests: u64,
     pub responses: u64,
     pub errors: u64,
+    pub queue_depth: u64,
+    pub in_flight: u64,
     pub batches: u64,
     pub mean_batch: f64,
     pub pad_fraction: f64,
@@ -129,14 +151,97 @@ pub struct Snapshot {
     pub energy_nj: f64,
 }
 
+impl Snapshot {
+    /// Render as Prometheus text exposition format (version 0.0.4) — the
+    /// payload of the gateway's `GET /metrics`.
+    pub fn prometheus(&self) -> String {
+        fn push(out: &mut String, kind: &str, name: &str, help: &str, v: f64) {
+            use std::fmt::Write as _;
+            let _ = writeln!(out, "# HELP {name} {help}");
+            let _ = writeln!(out, "# TYPE {name} {kind}");
+            let _ = writeln!(out, "{name} {v}");
+        }
+        let mut out = String::new();
+        let counters: [(&str, &str, f64); 5] = [
+            (
+                "hec_requests_total",
+                "Requests accepted by the handle",
+                self.requests as f64,
+            ),
+            (
+                "hec_responses_total",
+                "Successful classifications",
+                self.responses as f64,
+            ),
+            (
+                "hec_errors_total",
+                "Failed or rejected requests",
+                self.errors as f64,
+            ),
+            (
+                "hec_batches_total",
+                "Batches dispatched to the engine",
+                self.batches as f64,
+            ),
+            (
+                "hec_energy_nanojoules_total",
+                "Modelled inference energy (nJ)",
+                self.energy_nj,
+            ),
+        ];
+        for (name, help, v) in counters {
+            push(&mut out, "counter", name, help, v);
+        }
+        let gauges: [(&str, &str, f64); 6] = [
+            (
+                "hec_queue_depth",
+                "Requests queued but not yet batched",
+                self.queue_depth as f64,
+            ),
+            (
+                "hec_in_flight",
+                "Requests accepted but not yet answered",
+                self.in_flight as f64,
+            ),
+            (
+                "hec_batch_size_mean",
+                "Mean dispatched batch size",
+                self.mean_batch,
+            ),
+            (
+                "hec_latency_mean_microseconds",
+                "Mean end-to-end request latency (us)",
+                self.latency_mean_us,
+            ),
+            (
+                "hec_latency_p50_microseconds",
+                "p50 end-to-end latency upper bound (us)",
+                self.latency_p50_us as f64,
+            ),
+            (
+                "hec_latency_p99_microseconds",
+                "p99 end-to-end latency upper bound (us)",
+                self.latency_p99_us as f64,
+            ),
+        ];
+        for (name, help, v) in gauges {
+            push(&mut out, "gauge", name, help, v);
+        }
+        out
+    }
+}
+
 impl std::fmt::Display for Snapshot {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         writeln!(
             f,
-            "requests={} responses={} errors={} batches={} mean_batch={:.2} pad={:.1}%",
+            "requests={} responses={} errors={} queued={} in_flight={} batches={} \
+             mean_batch={:.2} pad={:.1}%",
             self.requests,
             self.responses,
             self.errors,
+            self.queue_depth,
+            self.in_flight,
             self.batches,
             self.mean_batch,
             self.pad_fraction * 100.0
@@ -184,6 +289,53 @@ mod tests {
         m.add_energy_nj(1.45);
         m.add_energy_nj(1.45);
         assert!((m.energy_nj() - 2.9).abs() < 1e-9);
+    }
+
+    #[test]
+    fn gauges_track_and_saturate() {
+        let m = Metrics::default();
+        m.queue_depth.fetch_add(3, Ordering::Relaxed);
+        m.in_flight.fetch_add(5, Ordering::Relaxed);
+        Metrics::gauge_dec(&m.queue_depth, 2);
+        let s = m.snapshot();
+        assert_eq!(s.queue_depth, 1);
+        assert_eq!(s.in_flight, 5);
+        // Saturating: decrementing past zero pins at zero, never wraps.
+        Metrics::gauge_dec(&m.queue_depth, 100);
+        assert_eq!(m.snapshot().queue_depth, 0);
+    }
+
+    #[test]
+    fn prometheus_rendering_exposes_counters_and_gauges() {
+        let m = Metrics::default();
+        m.requests.fetch_add(7, Ordering::Relaxed);
+        m.responses.fetch_add(6, Ordering::Relaxed);
+        m.errors.fetch_add(1, Ordering::Relaxed);
+        m.queue_depth.fetch_add(2, Ordering::Relaxed);
+        m.in_flight.fetch_add(4, Ordering::Relaxed);
+        m.add_energy_nj(1.5);
+        let text = m.snapshot().prometheus();
+        for line in [
+            "hec_requests_total 7",
+            "hec_responses_total 6",
+            "hec_errors_total 1",
+            "hec_queue_depth 2",
+            "hec_in_flight 4",
+            "hec_energy_nanojoules_total 1.5",
+            "# TYPE hec_queue_depth gauge",
+            "# TYPE hec_requests_total counter",
+        ] {
+            assert!(text.contains(line), "missing {line:?} in:\n{text}");
+        }
+        // Every sample line is "name value" with a parseable float.
+        for line in text.lines().filter(|l| !l.starts_with('#')) {
+            let mut parts = line.split_whitespace();
+            let name = parts.next().unwrap();
+            let value = parts.next().unwrap();
+            assert!(name.starts_with("hec_"), "bad metric name in {line:?}");
+            assert!(value.parse::<f64>().is_ok(), "bad value in {line:?}");
+            assert!(parts.next().is_none(), "trailing tokens in {line:?}");
+        }
     }
 
     #[test]

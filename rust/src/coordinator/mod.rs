@@ -8,8 +8,9 @@
 //!   energy;
 //! * [`server`] — the event loop: bounded request queue with backpressure, a
 //!   dedicated worker thread owning the engine state, async-friendly
-//!   handles;
-//! * [`metrics`] — lock-free counters, latency histograms, energy ledger.
+//!   handles speaking the v1 [`crate::api`] types;
+//! * [`metrics`] — lock-free counters, gauges, latency histograms, energy
+//!   ledger, Prometheus rendering.
 
 pub mod batcher;
 pub mod metrics;
@@ -18,5 +19,5 @@ pub mod pipeline;
 pub mod server;
 
 pub use metrics::{Metrics, Snapshot};
-pub use pipeline::{Classification, Evaluation, Pipeline};
-pub use server::{Handle, Server};
+pub use pipeline::{Evaluation, Pipeline};
+pub use server::{Caps, Handle, Server};

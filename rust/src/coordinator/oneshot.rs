@@ -81,6 +81,28 @@ mod tests {
     }
 
     #[test]
+    fn try_recv_none_before_send_some_after() {
+        let (tx, rx) = channel();
+        assert_eq!(rx.try_recv(), None);
+        tx.send(5).unwrap();
+        assert_eq!(rx.try_recv(), Some(5));
+        // The single value is consumed; the channel yields nothing further.
+        assert_eq!(rx.try_recv(), None);
+    }
+
+    #[test]
+    fn drop_before_send_wakes_blocked_receiver() {
+        // A worker that dies mid-batch drops the Sender without sending;
+        // a receiver blocked in recv() must wake with RecvError rather
+        // than hang (the server maps this to an INTERNAL api error).
+        let (tx, rx) = channel::<u32>();
+        let waiter = std::thread::spawn(move || rx.recv());
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        drop(tx);
+        assert_eq!(waiter.join().unwrap(), Err(RecvError));
+    }
+
+    #[test]
     fn cross_thread() {
         let (tx, rx) = channel();
         std::thread::spawn(move || tx.send("done").unwrap());

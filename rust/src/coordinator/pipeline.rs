@@ -18,6 +18,7 @@ use std::time::Instant;
 
 use crate::acam::program::{binary_query_voltages, program_array, WindowMode};
 use crate::acam::{wta, AcamArray, ArrayConfig, Variability};
+use crate::api::{ClassifyOptions, ClassifyResult, EnergyBreakdown, Prediction};
 use crate::config::{Backend, ServeConfig};
 use crate::energy::{EnergyModel, Scale};
 use crate::error::{Error, Result};
@@ -34,15 +35,6 @@ pub const BOOTSTRAP_PER_CLASS: usize = 8;
 /// evaluation seeds the benches and tests use, so bootstrapped templates
 /// are never graded on their own training samples).
 pub const BOOTSTRAP_DATA_SEED: u64 = 0xB007_5EED;
-
-/// One classification outcome.
-#[derive(Debug, Clone)]
-pub struct Classification {
-    pub class: usize,
-    /// Modelled per-inference energy (nJ): front-end effective MACs +
-    /// back-end search.
-    pub energy_nj: f64,
-}
 
 /// The assembled serving pipeline.
 pub struct Pipeline {
@@ -152,75 +144,177 @@ impl Pipeline {
         self.engine.padding_for(n)
     }
 
-    /// Classify a batch of `n` images (timings recorded by the caller).
-    /// Engines accept arbitrary batch sizes (PJRT chunks internally).
-    pub fn classify_batch(&mut self, images: &[f32], n: usize) -> Result<Vec<Classification>> {
-        let num_classes = self.store.num_classes;
-        match self.backend {
-            Backend::Softmax => {
-                let logits = self.engine.logits(images, n, num_classes)?;
-                if logits.len() != n * num_classes {
-                    return Err(Error::Backend(format!(
-                        "{} head returned {} floats, expected {}",
-                        self.engine.name(),
-                        logits.len(),
-                        n * num_classes
-                    )));
-                }
-                // Softmax baseline pays for the dense head: no ACAM term,
-                // head ops not removed (they are excluded from
-                // student_effective, which covers the pruned conv stack).
-                let e = self.energy.frontend_nj(
-                    self.meta.macs.as_built.student_effective
-                        + self.meta.macs.as_built.head_ops,
-                );
-                Ok(logits
-                    .chunks_exact(num_classes)
-                    .map(|row| Classification {
-                        class: argmax(row),
-                        energy_nj: e,
-                    })
-                    .collect())
-            }
-            Backend::FeatureCount | Backend::Similarity | Backend::AcamSim => {
-                let feats = self.extract_features(images, n)?;
-                let nf = self.meta.artifacts.n_features;
-                let mut out = Vec::with_capacity(n);
-                for row in feats.chunks_exact(nf) {
-                    out.push(self.classify_features(row)?);
-                }
-                Ok(out)
-            }
+    /// Deployment backend (the default when a request carries no override).
+    pub fn backend(&self) -> Backend {
+        self.backend
+    }
+
+    /// Whether this deployment can serve a per-request `backend` override.
+    /// Digital matchers and the softmax head are always available (they run
+    /// on the always-loaded template store / engine head); the simulated
+    /// ACAM needs the array that is only programmed when the deployment
+    /// backend is `acam`.
+    pub fn backend_available(&self, b: Backend) -> bool {
+        match b {
+            Backend::AcamSim => self.acam.is_some(),
+            Backend::FeatureCount | Backend::Similarity | Backend::Softmax => true,
         }
     }
 
-    /// Classify one already-extracted feature map.
-    pub fn classify_features(&mut self, features: &[f32]) -> Result<Classification> {
+    /// Classify a batch of `n` images with the default options (top-1 on
+    /// the deployment backend).  Engines accept arbitrary batch sizes
+    /// (PJRT chunks internally).
+    pub fn classify_batch(&mut self, images: &[f32], n: usize) -> Result<Vec<ClassifyResult>> {
+        self.classify_batch_with(images, n, &vec![ClassifyOptions::default(); n])
+    }
+
+    /// Classify a batch with per-item options (the v1 API path): each item
+    /// resolves its own backend override, `top_k`, and `return_features`.
+    ///
+    /// The engine runs at most twice for the whole batch — one feature pass
+    /// if any item needs the matching path (or raw features), one head pass
+    /// if any item resolved to softmax — so mixed batches still amortise
+    /// dispatch like uniform ones.
+    pub fn classify_batch_with(
+        &mut self,
+        images: &[f32],
+        n: usize,
+        opts: &[ClassifyOptions],
+    ) -> Result<Vec<ClassifyResult>> {
+        if opts.len() != n {
+            return Err(Error::Request(format!(
+                "{} option sets for a batch of {n}",
+                opts.len()
+            )));
+        }
+        let num_classes = self.store.num_classes;
+        let resolved: Vec<Backend> = opts
+            .iter()
+            .map(|o| o.backend.unwrap_or(self.backend))
+            .collect();
+        for &b in &resolved {
+            if !self.backend_available(b) {
+                return Err(Error::Config(format!(
+                    "backend '{}' is not provisioned in this deployment",
+                    b.name()
+                )));
+            }
+        }
+        let needs_features = opts
+            .iter()
+            .zip(&resolved)
+            .any(|(o, &b)| o.return_features || b != Backend::Softmax);
+        let needs_logits = resolved.iter().any(|&b| b == Backend::Softmax);
+
+        let feats = if needs_features {
+            Some(self.extract_features(images, n)?)
+        } else {
+            None
+        };
+        let logits = if needs_logits {
+            let l = self.engine.logits(images, n, num_classes)?;
+            if l.len() != n * num_classes {
+                return Err(Error::Backend(format!(
+                    "{} head returned {} floats, expected {}",
+                    self.engine.name(),
+                    l.len(),
+                    n * num_classes
+                )));
+            }
+            Some(l)
+        } else {
+            None
+        };
+
+        let nf = self.meta.artifacts.n_features;
+        let mut out = Vec::with_capacity(n);
+        for (i, (o, &backend)) in opts.iter().zip(&resolved).enumerate() {
+            let k = o.top_k.clamp(1, num_classes);
+            let (predictions, energy) = match backend {
+                Backend::Softmax => {
+                    let row = &logits.as_ref().expect("logits computed")
+                        [i * num_classes..(i + 1) * num_classes];
+                    let ranked = matching::rank_scores(row);
+                    let predictions = ranked
+                        .into_iter()
+                        .take(k)
+                        .map(|(class, score)| Prediction {
+                            class,
+                            score: score as f64,
+                        })
+                        .collect();
+                    // Softmax baseline pays for the dense head: no back-end
+                    // term, head ops not removed (they are excluded from
+                    // student_effective, which covers the pruned conv stack).
+                    let e = self.energy.frontend_nj(
+                        self.meta.macs.as_built.student_effective
+                            + self.meta.macs.as_built.head_ops,
+                    );
+                    (
+                        predictions,
+                        EnergyBreakdown {
+                            front_end_nj: e,
+                            back_end_nj: 0.0,
+                        },
+                    )
+                }
+                _ => {
+                    let row =
+                        &feats.as_ref().expect("features computed")[i * nf..(i + 1) * nf];
+                    self.score_features(row, backend, k)?
+                }
+            };
+            out.push(ClassifyResult {
+                predictions,
+                energy,
+                backend,
+                features: if o.return_features {
+                    Some(
+                        feats.as_ref().expect("features computed")[i * nf..(i + 1) * nf]
+                            .to_vec(),
+                    )
+                } else {
+                    None
+                },
+            });
+        }
+        Ok(out)
+    }
+
+    /// Score one already-extracted feature map on a feature-domain backend:
+    /// ranked top-k predictions plus the back-end energy term.
+    fn score_features(
+        &mut self,
+        features: &[f32],
+        backend: Backend,
+        k: usize,
+    ) -> Result<(Vec<Prediction>, EnergyBreakdown)> {
         let num_classes = self.store.num_classes;
         let set = self.store.set(self.k)?;
         let bits = self.store.binarize(features);
-        let (class, e_backend) = match self.backend {
+        let (ranked, e_backend): (Vec<(usize, f64)>, f64) = match backend {
             Backend::FeatureCount => {
-                let c = matching::classify_feature_count(&bits, set, num_classes);
+                let top = matching::classify_feature_count_topk(&bits, set, num_classes, k);
                 // Digital matcher modelled at the same ACAM energy envelope
                 // (it replaces the same head); report the Eq. 14 figure.
                 (
-                    c,
+                    top.into_iter().map(|(c, s)| (c, s as f64)).collect(),
                     self.energy
                         .backend_nj(set.num_templates() as u64, set.num_features() as u64),
                 )
             }
             Backend::Similarity => {
                 let qf: Vec<f32> = bits.iter().map(|&b| b as f32).collect();
-                let c = matching::classify_similarity(
+                let top = matching::classify_similarity_topk(
                     &qf,
                     set,
                     self.store.similarity_alpha,
                     num_classes,
                     true,
+                    k,
                 );
                 (
-                    c,
+                    top.into_iter().map(|(c, s)| (c, s as f64)).collect(),
                     self.energy
                         .backend_nj(set.num_templates() as u64, set.num_features() as u64),
                 )
@@ -231,21 +325,28 @@ impl Pipeline {
                     .as_mut()
                     .ok_or_else(|| Error::Config("ACAM array not programmed".into()))?;
                 let search = arr.search(&binary_query_voltages(&bits));
-                let c = wta::winner_take_all_classes(
+                let mut ranked = wta::rank_classes(
                     &search.similarity,
                     &set.class_of,
                     num_classes,
                     &self.acam_var,
                     &mut self.rng,
                 );
-                (c, search.energy_nj)
+                ranked.truncate(k);
+                (ranked, search.energy_nj)
             }
-            Backend::Softmax => unreachable!("handled in classify_batch"),
+            Backend::Softmax => unreachable!("handled in classify_batch_with"),
         };
-        Ok(Classification {
-            class,
-            energy_nj: self.e_frontend_nj + e_backend,
-        })
+        Ok((
+            ranked
+                .into_iter()
+                .map(|(class, score)| Prediction { class, score })
+                .collect(),
+            EnergyBreakdown {
+                front_end_nj: self.e_frontend_nj,
+                back_end_nj: e_backend,
+            },
+        ))
     }
 
     /// Evaluate accuracy + confusion matrix over a labelled workload.
@@ -268,9 +369,10 @@ impl Pipeline {
             let chunk = &images[i * img_len..(i + m) * img_len];
             for (j, c) in self.classify_batch(chunk, m)?.into_iter().enumerate() {
                 let truth = labels[i + j];
-                confusion[truth][c.class] += 1;
-                correct += usize::from(c.class == truth);
-                energy_nj += c.energy_nj;
+                let class = c.top1().class;
+                confusion[truth][class] += 1;
+                correct += usize::from(class == truth);
+                energy_nj += c.energy.total_nj();
             }
             i += m;
         }
@@ -340,24 +442,15 @@ impl Evaluation {
     }
 }
 
-fn argmax(xs: &[f32]) -> usize {
-    let mut best = 0;
-    for (i, &v) in xs.iter().enumerate() {
-        if v > xs[best] {
-            best = i;
-        }
-    }
-    best
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
 
     #[test]
-    fn argmax_basic() {
-        assert_eq!(argmax(&[0.1, 0.9, 0.5]), 1);
-        assert_eq!(argmax(&[1.0]), 0);
-        assert_eq!(argmax(&[2.0, 2.0]), 0); // tie -> low index
+    fn default_options_are_top1_deployment_backend() {
+        let o = ClassifyOptions::default();
+        assert_eq!(o.top_k, 1);
+        assert!(o.backend.is_none());
+        assert!(!o.return_features);
     }
 }

@@ -1,28 +1,57 @@
 //! The serving loop: a dedicated worker thread owns the pipeline (the
 //! engine trait object is not `Send` — PJRT handles cannot cross threads);
-//! callers submit requests through a bounded channel (the backpressure
-//! boundary) and wait on per-request oneshot channels, so multi-threaded
-//! front-ends (and the CLI demo driver) compose naturally.
+//! callers submit v1 [`ClassifyRequest`]s through a bounded channel (the
+//! backpressure boundary) and wait on per-request oneshot channels for
+//! [`ClassifyResponse`]s, so multi-threaded front-ends (the HTTP gateway,
+//! the CLI demo driver) compose naturally and share one queue semantics.
 
 use std::sync::mpsc::{sync_channel, SyncSender, TrySendError};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use crate::config::ServeConfig;
-use crate::error::{Error, Result};
+use crate::api::{ApiError, ClassifyRequest, ClassifyResponse, ErrorCode, Timing};
+use crate::config::{Backend, ServeConfig};
+use crate::error::Result;
 
 use super::oneshot;
 
 use super::batcher;
 use super::metrics::Metrics;
-use super::pipeline::{Classification, Pipeline};
+use super::pipeline::Pipeline;
 
 /// One in-flight request.
 struct Job {
-    image: Vec<f32>,
+    req: ClassifyRequest,
     enqueued: Instant,
-    resp: oneshot::Sender<Result<Classification>>,
+    resp: oneshot::Sender<std::result::Result<ClassifyResponse, ApiError>>,
+}
+
+/// What the deployed pipeline can do — shared with every [`Handle`] clone so
+/// submit-time validation (shape, backend availability) and the gateway's
+/// `/healthz` never have to reach the worker thread.
+#[derive(Debug, Clone)]
+pub struct Caps {
+    /// Pixels per image (`image_size^2`).
+    pub image_len: usize,
+    pub num_classes: usize,
+    /// Execution engine name (`interp`, `interp-fast`, `pjrt`).
+    pub engine: &'static str,
+    /// Deployment backend (the default when requests carry no override).
+    pub backend: Backend,
+    /// Whether the simulated ACAM array was programmed (i.e. whether a
+    /// per-request `backend: "acam"` override can be served).
+    pub acam_available: bool,
+}
+
+impl Caps {
+    /// Whether a per-request backend override can be served here.
+    pub fn backend_available(&self, b: Backend) -> bool {
+        match b {
+            Backend::AcamSim => self.acam_available,
+            Backend::FeatureCount | Backend::Similarity | Backend::Softmax => true,
+        }
+    }
 }
 
 /// Handle for submitting classification requests.
@@ -30,47 +59,105 @@ struct Job {
 pub struct Handle {
     tx: SyncSender<Job>,
     pub metrics: Arc<Metrics>,
-    image_len: usize,
+    caps: Arc<Caps>,
 }
 
 impl Handle {
-    /// Submit an image; await the returned receiver for the result.
-    /// Fails fast (backpressure) when the queue is full.
-    pub fn submit(&self, image: Vec<f32>) -> Result<oneshot::Receiver<Result<Classification>>> {
-        if image.len() != self.image_len {
-            return Err(Error::Request(format!(
-                "image has {} pixels, expected {}",
-                image.len(),
-                self.image_len
-            )));
+    /// What the deployment can serve (image shape, engine, backends).
+    pub fn caps(&self) -> &Caps {
+        &self.caps
+    }
+
+    /// Submit a request; await the returned receiver for the response.
+    /// Fails fast with a structured [`ApiError`] on invalid requests or
+    /// backpressure (`QUEUE_FULL`) — nothing invalid reaches the queue.
+    #[allow(clippy::type_complexity)]
+    pub fn submit(
+        &self,
+        req: ClassifyRequest,
+    ) -> std::result::Result<
+        oneshot::Receiver<std::result::Result<ClassifyResponse, ApiError>>,
+        ApiError,
+    > {
+        use std::sync::atomic::Ordering::Relaxed;
+        if req.image.len() != self.caps.image_len {
+            return Err(ApiError::new(
+                ErrorCode::InvalidShape,
+                format!(
+                    "image has {} pixels, expected {}",
+                    req.image.len(),
+                    self.caps.image_len
+                ),
+            ));
+        }
+        if req.top_k == 0 {
+            return Err(ApiError::new(ErrorCode::InvalidArgument, "top_k must be >= 1"));
+        }
+        if let Some(b) = req.backend {
+            if !self.caps.backend_available(b) {
+                return Err(ApiError::new(
+                    ErrorCode::BackendUnavailable,
+                    format!(
+                        "backend '{}' is not provisioned in this deployment \
+                         (deployed backend: '{}')",
+                        b.name(),
+                        self.caps.backend.name()
+                    ),
+                ));
+            }
         }
         let (tx, rx) = oneshot::channel();
-        self.metrics
-            .requests
-            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        self.metrics.requests.fetch_add(1, Relaxed);
+        // Gauges go up BEFORE the job becomes visible to the worker: if they
+        // went up after a successful try_send, the worker could decrement
+        // first (saturating at 0) and the late increment would drift the
+        // gauge upward permanently.
+        self.metrics.queue_depth.fetch_add(1, Relaxed);
+        self.metrics.in_flight.fetch_add(1, Relaxed);
         match self.tx.try_send(Job {
-            image,
+            req,
             enqueued: Instant::now(),
             resp: tx,
         }) {
             Ok(()) => Ok(rx),
-            Err(TrySendError::Full(_)) => {
-                self.metrics
-                    .errors
-                    .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                Err(Error::Request("queue full (backpressure)".into()))
-            }
-            Err(TrySendError::Disconnected(_)) => {
-                Err(Error::Request("server stopped".into()))
+            Err(e) => {
+                Metrics::gauge_dec(&self.metrics.queue_depth, 1);
+                Metrics::gauge_dec(&self.metrics.in_flight, 1);
+                match e {
+                    TrySendError::Full(_) => {
+                        self.metrics.errors.fetch_add(1, Relaxed);
+                        Err(ApiError::new(
+                            ErrorCode::QueueFull,
+                            "queue full (backpressure)",
+                        ))
+                    }
+                    TrySendError::Disconnected(_) => Err(ApiError::new(
+                        ErrorCode::ServerStopped,
+                        "server stopped",
+                    )),
+                }
             }
         }
     }
 
-    /// Convenience for synchronous callers: submit and block.
-    pub fn classify_blocking(&self, image: Vec<f32>) -> Result<Classification> {
-        let rx = self.submit(image)?;
-        rx.recv()
-            .map_err(|_| Error::Request("worker dropped response".into()))?
+    /// Convenience for synchronous callers: top-1 classify on the
+    /// deployment backend, blocking.
+    pub fn classify_blocking(
+        &self,
+        image: Vec<f32>,
+    ) -> std::result::Result<ClassifyResponse, ApiError> {
+        self.submit_blocking(ClassifyRequest::new(image))
+    }
+
+    /// Submit any v1 request and block for the response.
+    pub fn submit_blocking(
+        &self,
+        req: ClassifyRequest,
+    ) -> std::result::Result<ClassifyResponse, ApiError> {
+        let rx = self.submit(req)?;
+        rx.recv().map_err(|_| {
+            ApiError::new(ErrorCode::Internal, "worker dropped response")
+        })?
     }
 }
 
@@ -81,8 +168,8 @@ pub struct Server {
 }
 
 impl Server {
-    /// Start the worker thread.  The PJRT pipeline is **constructed inside
-    /// the worker** (PJRT handles are not `Send`); construction failure is
+    /// Start the worker thread.  The pipeline is **constructed inside the
+    /// worker** (PJRT handles are not `Send`); construction failure is
     /// reported back through a ready-channel before `start` returns.
     pub fn start(cfg: ServeConfig) -> Result<Server> {
         let metrics = Arc::new(Metrics::default());
@@ -90,7 +177,7 @@ impl Server {
         let max_batch = cfg.batch.max_batch;
         let max_wait = Duration::from_micros(cfg.batch.max_wait_us);
         let m = Arc::clone(&metrics);
-        let (ready_tx, ready_rx) = oneshot::channel::<Result<usize>>();
+        let (ready_tx, ready_rx) = oneshot::channel::<Result<Caps>>();
 
         let worker = std::thread::Builder::new()
             .name("hec-serve".into())
@@ -98,8 +185,14 @@ impl Server {
                 use std::sync::atomic::Ordering::Relaxed;
                 let mut pipeline = match Pipeline::new(&cfg) {
                     Ok(p) => {
-                        let image_len = p.image_len();
-                        let _ = ready_tx.send(Ok(image_len));
+                        let caps = Caps {
+                            image_len: p.image_len(),
+                            num_classes: p.store.num_classes,
+                            engine: p.engine_name(),
+                            backend: p.backend(),
+                            acam_available: p.backend_available(Backend::AcamSim),
+                        };
+                        let _ = ready_tx.send(Ok(caps));
                         p
                     }
                     Err(e) => {
@@ -107,39 +200,59 @@ impl Server {
                         return;
                     }
                 };
+                let engine = pipeline.engine_name();
                 let image_len = pipeline.image_len();
                 while let Some(batch) = batcher::assemble(&rx, max_batch, max_wait) {
                     let n = batch.len();
+                    Metrics::gauge_dec(&m.queue_depth, n as u64);
                     m.batches.fetch_add(1, Relaxed);
                     m.batched_items.fetch_add(n as u64, Relaxed);
 
-                    // Pack images contiguously.
+                    // Pack images contiguously; capture per-job knobs.
                     let mut buf = Vec::with_capacity(n * image_len);
+                    let mut opts = Vec::with_capacity(n);
                     for job in &batch {
-                        buf.extend_from_slice(&job.image);
+                        buf.extend_from_slice(&job.req.image);
+                        opts.push(job.req.options());
                     }
                     let padded = pipeline.padding_for(n);
                     m.padded_slots.fetch_add(padded as u64, Relaxed);
 
-                    let t0 = Instant::now();
-                    let results = pipeline.classify_batch(&buf, n);
-                    m.execute.record_us(t0.elapsed().as_micros() as u64);
+                    let dispatched = Instant::now();
+                    let results = pipeline.classify_batch_with(&buf, n, &opts);
+                    let compute_us = dispatched.elapsed().as_micros() as u64;
+                    m.execute.record_us(compute_us);
 
                     match results {
                         Ok(results) => {
                             for (job, res) in batch.into_iter().zip(results) {
+                                let queue_us =
+                                    dispatched.duration_since(job.enqueued).as_micros() as u64;
                                 m.latency
                                     .record_us(job.enqueued.elapsed().as_micros() as u64);
-                                m.add_energy_nj(res.energy_nj);
+                                m.add_energy_nj(res.energy.total_nj());
                                 m.responses.fetch_add(1, Relaxed);
-                                let _ = job.resp.send(Ok(res));
+                                Metrics::gauge_dec(&m.in_flight, 1);
+                                let _ = job.resp.send(Ok(ClassifyResponse {
+                                    request_id: job.req.request_id,
+                                    predictions: res.predictions,
+                                    energy: res.energy,
+                                    timing: Timing {
+                                        queue_us,
+                                        compute_us,
+                                    },
+                                    engine,
+                                    backend: res.backend,
+                                    features: res.features,
+                                }));
                             }
                         }
                         Err(e) => {
-                            let msg = e.to_string();
+                            let api: ApiError = e.into();
                             for job in batch {
                                 m.errors.fetch_add(1, Relaxed);
-                                let _ = job.resp.send(Err(Error::Request(msg.clone())));
+                                Metrics::gauge_dec(&m.in_flight, 1);
+                                let _ = job.resp.send(Err(api.clone()));
                             }
                         }
                     }
@@ -147,14 +260,14 @@ impl Server {
             })
             .expect("spawn serving worker");
 
-        let image_len = ready_rx
-            .recv()
-            .map_err(|_| Error::Request("serving worker died during startup".into()))??;
+        let caps = ready_rx.recv().map_err(|_| {
+            crate::error::Error::Request("serving worker died during startup".into())
+        })??;
         Ok(Server {
             handle: Handle {
                 tx,
                 metrics,
-                image_len,
+                caps: Arc::new(caps),
             },
             worker: Some(worker),
         })

@@ -77,6 +77,36 @@ impl From<crate::jsonlite::ParseError> for Error {
     }
 }
 
+impl Error {
+    /// The stable v1 API code this internal error maps onto.  Sites that
+    /// know a more specific code (queue full, bad image shape, missing
+    /// backend) construct [`crate::api::ApiError`] directly; this is the
+    /// fallback for errors that bubble up from inside the stack.
+    pub fn api_code(&self) -> crate::api::ErrorCode {
+        use crate::api::ErrorCode;
+        match self {
+            // Config errors reaching a request path mean the request asked
+            // for something this deployment cannot do.
+            Error::Config(_) => ErrorCode::InvalidArgument,
+            Error::Request(_) => ErrorCode::InvalidArgument,
+            // Engine / artifact / template / IO / schema failures are not
+            // the caller's fault.
+            Error::Backend(_)
+            | Error::Artifact(_)
+            | Error::Template(_)
+            | Error::Io(_)
+            | Error::Json(_)
+            | Error::Schema(_) => ErrorCode::Internal,
+        }
+    }
+}
+
+impl From<Error> for crate::api::ApiError {
+    fn from(e: Error) -> Self {
+        crate::api::ApiError::new(e.api_code(), e.to_string())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -88,6 +118,18 @@ mod tests {
             "backend: boom"
         );
         assert_eq!(Error::Config("bad".into()).to_string(), "config: bad");
+    }
+
+    #[test]
+    fn api_code_mapping_is_stable() {
+        use crate::api::ErrorCode;
+        assert_eq!(Error::Config("x".into()).api_code(), ErrorCode::InvalidArgument);
+        assert_eq!(Error::Request("x".into()).api_code(), ErrorCode::InvalidArgument);
+        assert_eq!(Error::Backend("x".into()).api_code(), ErrorCode::Internal);
+        assert_eq!(Error::Schema("x".into()).api_code(), ErrorCode::Internal);
+        let api: crate::api::ApiError = Error::Backend("boom".into()).into();
+        assert_eq!(api.code, ErrorCode::Internal);
+        assert!(api.message.contains("boom"));
     }
 
     #[test]

@@ -1,0 +1,312 @@
+//! Minimal HTTP/1.1 message plumbing for the gateway (no hyper offline) —
+//! just enough of RFC 9112 for a JSON API: request line + headers +
+//! `Content-Length` bodies, keep-alive by default, bounded reads so a slow
+//! or hostile peer cannot balloon memory.
+//!
+//! Deliberately not supported (requests using them get a clean 4xx/close
+//! instead of undefined behaviour): chunked transfer encoding, multi-line
+//! header folding, pipelining beyond sequential keep-alive.
+
+use std::io::{BufRead, Write};
+
+/// Largest accepted request head (request line + headers).
+pub const MAX_HEAD_BYTES: usize = 16 * 1024;
+/// Largest accepted body (a 32x32 image batch of ~1k requests fits well
+/// under this; anything bigger should be split).
+pub const MAX_BODY_BYTES: usize = 16 * 1024 * 1024;
+
+/// One parsed request.
+#[derive(Debug)]
+pub struct Request {
+    pub method: String,
+    /// Path only (the query string, if any, is split off and kept verbatim).
+    pub path: String,
+    pub query: Option<String>,
+    headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+    /// Whether the client asked to close the connection after this exchange.
+    pub close: bool,
+}
+
+impl Request {
+    /// Case-insensitive header lookup (first match).
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(k, _)| k.eq_ignore_ascii_case(name))
+            .map(|(_, v)| v.as_str())
+    }
+}
+
+/// Why a request could not be read.
+#[derive(Debug)]
+pub enum ReadError {
+    /// Peer closed (or timed out) before sending a request line — normal
+    /// end of a keep-alive connection, not an error to report.
+    Eof,
+    /// Malformed or over-limit request; respond with this status and close.
+    Bad(u16, &'static str),
+}
+
+/// Read one request from a buffered stream.  Blocks until a full head is
+/// available (the caller sets a socket read timeout to bound this).
+pub fn read_request<R: BufRead>(reader: &mut R) -> Result<Request, ReadError> {
+    // -- head: read until CRLFCRLF with a hard cap ------------------------
+    let mut head = Vec::with_capacity(512);
+    loop {
+        let buf = match reader.fill_buf() {
+            Ok(b) => b,
+            Err(_) => return Err(ReadError::Eof),
+        };
+        if buf.is_empty() {
+            return Err(ReadError::Eof); // clean close between requests
+        }
+        // Consume up to (and including) the terminator if present.
+        let start = head.len().saturating_sub(3); // terminator may straddle
+        head.extend_from_slice(buf);
+        let consumed = buf.len();
+        if let Some(pos) = find_crlfcrlf(&head[start..]) {
+            let end = start + pos + 4;
+            if end > MAX_HEAD_BYTES {
+                return Err(ReadError::Bad(431, "request head too large"));
+            }
+            let overshoot = head.len() - end;
+            reader.consume(consumed - overshoot);
+            head.truncate(end);
+            break;
+        }
+        reader.consume(consumed);
+        if head.len() > MAX_HEAD_BYTES {
+            return Err(ReadError::Bad(431, "request head too large"));
+        }
+    }
+
+    let head_text =
+        std::str::from_utf8(&head).map_err(|_| ReadError::Bad(400, "non-UTF8 request head"))?;
+    let mut lines = head_text.split("\r\n");
+    let request_line = lines.next().unwrap_or_default();
+    let mut parts = request_line.split(' ');
+    let method = parts.next().unwrap_or_default().to_string();
+    let target = parts.next().unwrap_or_default().to_string();
+    let version = parts.next().unwrap_or_default().to_string();
+    if method.is_empty() || target.is_empty() || !version.starts_with("HTTP/1.") {
+        return Err(ReadError::Bad(400, "malformed request line"));
+    }
+
+    let mut headers = Vec::new();
+    for line in lines {
+        if line.is_empty() {
+            continue; // the blank terminator line
+        }
+        let Some((k, v)) = line.split_once(':') else {
+            return Err(ReadError::Bad(400, "malformed header line"));
+        };
+        headers.push((k.trim().to_string(), v.trim().to_string()));
+    }
+
+    // -- body: Content-Length only ----------------------------------------
+    // RFC 9112 §6.3: conflicting duplicate Content-Length headers must be
+    // rejected, not first-one-wins — behind a proxy that honors the other
+    // copy, disagreeing about framing desyncs the keep-alive stream.
+    let mut content_length = None;
+    for (_, v) in headers
+        .iter()
+        .filter(|(k, _)| k.eq_ignore_ascii_case("content-length"))
+    {
+        let n = v
+            .parse::<usize>()
+            .map_err(|_| ReadError::Bad(400, "bad Content-Length"))?;
+        if content_length.is_some_and(|seen| seen != n) {
+            return Err(ReadError::Bad(400, "conflicting Content-Length headers"));
+        }
+        content_length = Some(n);
+    }
+    let content_length = content_length.unwrap_or(0);
+    if headers.iter().any(|(k, v)| {
+        k.eq_ignore_ascii_case("transfer-encoding") && !v.eq_ignore_ascii_case("identity")
+    }) {
+        return Err(ReadError::Bad(501, "chunked bodies not supported"));
+    }
+    if content_length > MAX_BODY_BYTES {
+        return Err(ReadError::Bad(413, "body too large"));
+    }
+    let mut body = vec![0u8; content_length];
+    if content_length > 0 {
+        std::io::Read::read_exact(reader, &mut body)
+            .map_err(|_| ReadError::Bad(400, "body shorter than Content-Length"))?;
+    }
+
+    let close = version == "HTTP/1.0"
+        || headers
+            .iter()
+            .any(|(k, v)| k.eq_ignore_ascii_case("connection") && v.eq_ignore_ascii_case("close"));
+
+    let (path, query) = match target.split_once('?') {
+        Some((p, q)) => (p.to_string(), Some(q.to_string())),
+        None => (target, None),
+    };
+    Ok(Request {
+        method,
+        path,
+        query,
+        headers,
+        body,
+        close,
+    })
+}
+
+fn find_crlfcrlf(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n")
+}
+
+/// Write one response (always with `Content-Length`; `close` controls the
+/// `Connection` header).
+pub fn write_response<W: Write>(
+    out: &mut W,
+    status: u16,
+    content_type: &str,
+    body: &[u8],
+    close: bool,
+) -> std::io::Result<()> {
+    let reason = reason_phrase(status);
+    write!(
+        out,
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n",
+        body.len(),
+        if close { "close" } else { "keep-alive" },
+    )?;
+    out.write_all(body)?;
+    out.flush()
+}
+
+pub fn reason_phrase(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        501 => "Not Implemented",
+        503 => "Service Unavailable",
+        _ => "Unknown",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::BufReader;
+
+    fn parse(bytes: &[u8]) -> Result<Request, ReadError> {
+        read_request(&mut BufReader::new(bytes))
+    }
+
+    #[test]
+    fn parses_get_without_body() {
+        let r = parse(b"GET /healthz HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+        assert_eq!(r.method, "GET");
+        assert_eq!(r.path, "/healthz");
+        assert_eq!(r.query, None);
+        assert_eq!(r.header("host"), Some("x"));
+        assert!(r.body.is_empty());
+        assert!(!r.close);
+    }
+
+    #[test]
+    fn parses_post_with_body_and_close() {
+        let r = parse(
+            b"POST /v1/classify HTTP/1.1\r\nContent-Length: 4\r\nConnection: close\r\n\r\n{\"a\"",
+        )
+        .unwrap();
+        assert_eq!(r.method, "POST");
+        assert_eq!(r.body, b"{\"a\"");
+        assert!(r.close);
+    }
+
+    #[test]
+    fn splits_query_string() {
+        let r = parse(b"GET /metrics?format=prom HTTP/1.1\r\n\r\n").unwrap();
+        assert_eq!(r.path, "/metrics");
+        assert_eq!(r.query.as_deref(), Some("format=prom"));
+    }
+
+    #[test]
+    fn http10_implies_close() {
+        let r = parse(b"GET / HTTP/1.0\r\n\r\n").unwrap();
+        assert!(r.close);
+    }
+
+    #[test]
+    fn keep_alive_reads_two_requests_sequentially() {
+        let bytes =
+            b"GET /a HTTP/1.1\r\n\r\nPOST /b HTTP/1.1\r\nContent-Length: 2\r\n\r\nhi".to_vec();
+        let mut reader = BufReader::new(&bytes[..]);
+        let r1 = read_request(&mut reader).unwrap();
+        assert_eq!(r1.path, "/a");
+        let r2 = read_request(&mut reader).unwrap();
+        assert_eq!(r2.path, "/b");
+        assert_eq!(r2.body, b"hi");
+        assert!(matches!(read_request(&mut reader), Err(ReadError::Eof)));
+    }
+
+    #[test]
+    fn rejects_malformed_and_oversize() {
+        assert!(matches!(parse(b""), Err(ReadError::Eof)));
+        assert!(matches!(
+            parse(b"NOPE\r\n\r\n"),
+            Err(ReadError::Bad(400, _))
+        ));
+        assert!(matches!(
+            parse(b"GET / HTTP/2\r\n\r\n"),
+            Err(ReadError::Bad(400, _))
+        ));
+        assert!(matches!(
+            parse(b"POST / HTTP/1.1\r\nContent-Length: zap\r\n\r\n"),
+            Err(ReadError::Bad(400, _))
+        ));
+        assert!(matches!(
+            parse(b"POST / HTTP/1.1\r\nContent-Length: 999999999999\r\n\r\n"),
+            Err(ReadError::Bad(413, _))
+        ));
+        assert!(matches!(
+            parse(b"POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n"),
+            Err(ReadError::Bad(501, _))
+        ));
+        // RFC 9112: conflicting duplicates are rejected; agreeing ones pass.
+        assert!(matches!(
+            parse(b"POST / HTTP/1.1\r\nContent-Length: 5\r\nContent-Length: 30\r\n\r\nhello"),
+            Err(ReadError::Bad(400, _))
+        ));
+        let r = parse(b"POST / HTTP/1.1\r\nContent-Length: 2\r\nContent-Length: 2\r\n\r\nhi")
+            .unwrap();
+        assert_eq!(r.body, b"hi");
+        assert!(matches!(
+            parse(b"POST / HTTP/1.1\r\nContent-Length: 10\r\n\r\nshort"),
+            Err(ReadError::Bad(400, _))
+        ));
+        let huge = format!("GET / HTTP/1.1\r\nX-Pad: {}\r\n\r\n", "a".repeat(MAX_HEAD_BYTES));
+        assert!(matches!(
+            parse(huge.as_bytes()),
+            Err(ReadError::Bad(431, _))
+        ));
+    }
+
+    #[test]
+    fn response_writing_shape() {
+        let mut out = Vec::new();
+        write_response(&mut out, 200, "application/json", b"{}", false).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 200 OK\r\n"));
+        assert!(text.contains("Content-Length: 2\r\n"));
+        assert!(text.contains("Connection: keep-alive\r\n"));
+        assert!(text.ends_with("\r\n\r\n{}"));
+        let mut out = Vec::new();
+        write_response(&mut out, 429, "application/json", b"x", true).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 429 Too Many Requests\r\n"));
+        assert!(text.contains("Connection: close\r\n"));
+    }
+}

@@ -1,0 +1,298 @@
+//! HTTP/JSON gateway — the network front door over the v1 [`crate::api`].
+//!
+//! Built on `std::net` + [`crate::jsonlite`] only (the offline build carries
+//! zero external dependencies; SNIPPETS ADR-002 is the prior art for a pure
+//! wire stack).  Every HTTP request funnels into the same bounded-channel
+//! [`crate::coordinator::Handle`] the in-process callers use, so network
+//! load shares the queue semantics, dynamic batching, and backpressure of
+//! the rest of the system — a full queue is an HTTP 429, not a new code
+//! path.
+//!
+//! Routes:
+//!
+//! | Method + path          | Body                      | Response |
+//! |------------------------|---------------------------|----------|
+//! | `POST /v1/classify`    | [`ClassifyRequest`] JSON  | [`ClassifyResponse`] JSON |
+//! | `POST /v1/classify/batch` | `{"requests": [...]}`  | `{"responses": [...]}` (per-item response or error envelope) |
+//! | `GET /healthz`         | —                         | deployment facts (engine, backend, image_len, ...) |
+//! | `GET /metrics`         | —                         | Prometheus text ([`crate::coordinator::Snapshot::prometheus`]) |
+//!
+//! Concurrency model: a dedicated accept thread plus one thread per live
+//! connection (keep-alive), capped at `max_connections`; connections over
+//! the cap receive an immediate 429 (`QUEUE_FULL` — the cap is
+//! backpressure, like the bounded queue).  Thread-per-connection is the right
+//! size here because per-connection state is one 8 KiB buffer and the real
+//! bottleneck is the serving queue behind the handle.
+
+pub mod http;
+
+use std::collections::BTreeMap;
+use std::io::{BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::api::{ApiError, ClassifyRequest, ClassifyResponse, ErrorCode, API_VERSION};
+use crate::config::HttpConfig;
+use crate::coordinator::Handle;
+use crate::error::Result;
+use crate::jsonlite::{self, Value};
+
+use http::{read_request, write_response, ReadError, Request};
+
+/// Per-connection socket read timeout: bounds how long an idle keep-alive
+/// connection pins its thread.
+const READ_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// The running gateway (accept thread + connection threads).
+pub struct Gateway {
+    local_addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl Gateway {
+    /// Bind `cfg.addr` and start accepting.  Port 0 binds an OS-assigned
+    /// free port; [`Gateway::local_addr`] reports the resolved address.
+    pub fn start(handle: Handle, cfg: &HttpConfig) -> Result<Gateway> {
+        let addr = cfg.addr.as_deref().unwrap_or("127.0.0.1:0");
+        let listener = TcpListener::bind(addr)?;
+        let local_addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let max_connections = cfg.max_connections;
+
+        let stop_accept = Arc::clone(&stop);
+        let accept = std::thread::Builder::new()
+            .name("hec-gateway".into())
+            .spawn(move || {
+                let live = Arc::new(AtomicUsize::new(0));
+                for stream in listener.incoming() {
+                    if stop_accept.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    let Ok(stream) = stream else { continue };
+                    if live.load(Ordering::Relaxed) >= max_connections {
+                        let mut s = stream;
+                        let err = ApiError::new(
+                            ErrorCode::QueueFull,
+                            "connection limit reached, retry later",
+                        );
+                        // Same status the code maps to everywhere else (429):
+                        // the cap is backpressure, not an outage.
+                        let _ = write_response(
+                            &mut s,
+                            err.code.http_status(),
+                            "application/json",
+                            err.to_value().to_json().as_bytes(),
+                            true,
+                        );
+                        continue;
+                    }
+                    live.fetch_add(1, Ordering::Relaxed);
+                    let conn_live = Arc::clone(&live);
+                    let handle = handle.clone();
+                    let spawned = std::thread::Builder::new()
+                        .name("hec-gateway-conn".into())
+                        .spawn(move || {
+                            serve_connection(stream, &handle);
+                            conn_live.fetch_sub(1, Ordering::Relaxed);
+                        });
+                    if spawned.is_err() {
+                        // Thread spawn failed (resource exhaustion): the
+                        // closure never ran, so give the slot back instead
+                        // of leaking it until the cap locks the gateway up.
+                        live.fetch_sub(1, Ordering::Relaxed);
+                    }
+                }
+            })
+            .expect("spawn gateway accept thread");
+
+        Ok(Gateway {
+            local_addr,
+            stop,
+            accept: Some(accept),
+        })
+    }
+
+    /// The bound address (resolves port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// Stop accepting and join the accept thread.  Live connection threads
+    /// finish their current exchange and exit on their own (bounded by the
+    /// read timeout).
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        // Unblock the accept loop with a wake-up connection.
+        let _ = TcpStream::connect(self.local_addr);
+        if let Some(t) = self.accept.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+/// Serve one keep-alive connection until EOF / `Connection: close` /
+/// protocol error.
+fn serve_connection(stream: TcpStream, handle: &Handle) {
+    let _ = stream.set_read_timeout(Some(READ_TIMEOUT));
+    let _ = stream.set_nodelay(true);
+    let Ok(read_half) = stream.try_clone() else {
+        return;
+    };
+    let mut reader = BufReader::new(read_half);
+    let mut writer = stream;
+    loop {
+        match read_request(&mut reader) {
+            Err(ReadError::Eof) => return,
+            Err(ReadError::Bad(status, msg)) => {
+                let err = ApiError::new(ErrorCode::MalformedRequest, msg);
+                let _ = write_response(
+                    &mut writer,
+                    status,
+                    "application/json",
+                    err.to_value().to_json().as_bytes(),
+                    true,
+                );
+                return;
+            }
+            Ok(req) => {
+                let close = req.close;
+                if !respond(&mut writer, &req, handle, close) {
+                    return;
+                }
+                if close {
+                    return;
+                }
+            }
+        }
+    }
+}
+
+/// Route one request and write the response; returns false when the
+/// connection should drop (write failure).
+fn respond<W: Write>(out: &mut W, req: &Request, handle: &Handle, close: bool) -> bool {
+    let (status, content_type, body) = route(req, handle);
+    write_response(out, status, content_type, body.as_bytes(), close).is_ok()
+}
+
+/// The routing table: returns (status, content type, body).
+fn route(req: &Request, handle: &Handle) -> (u16, &'static str, String) {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("POST", "/v1/classify") => match classify_one(&req.body, handle) {
+            Ok(resp) => (200, "application/json", resp.to_value().to_json()),
+            Err(e) => (e.code.http_status(), "application/json", e.to_value().to_json()),
+        },
+        ("POST", "/v1/classify/batch") => match classify_batch(&req.body, handle) {
+            Ok(v) => (200, "application/json", v.to_json()),
+            Err(e) => (e.code.http_status(), "application/json", e.to_value().to_json()),
+        },
+        ("GET", "/healthz") => (200, "application/json", healthz(handle).to_json()),
+        ("GET", "/metrics") => (
+            200,
+            "text/plain; version=0.0.4",
+            handle.metrics.snapshot().prometheus(),
+        ),
+        (_, "/v1/classify") | (_, "/v1/classify/batch") | (_, "/healthz") | (_, "/metrics") => {
+            let e = ApiError::new(
+                ErrorCode::MethodNotAllowed,
+                format!("method {} not allowed on {}", req.method, req.path),
+            );
+            (405, "application/json", e.to_value().to_json())
+        }
+        _ => {
+            let e = ApiError::new(
+                ErrorCode::NotFound,
+                format!("no route for {}", req.path),
+            );
+            (404, "application/json", e.to_value().to_json())
+        }
+    }
+}
+
+fn parse_body(body: &[u8]) -> std::result::Result<Value, ApiError> {
+    let text = std::str::from_utf8(body)
+        .map_err(|_| ApiError::new(ErrorCode::MalformedRequest, "body is not UTF-8"))?;
+    jsonlite::parse(text)
+        .map_err(|e| ApiError::new(ErrorCode::MalformedRequest, format!("invalid JSON: {e}")))
+}
+
+/// `POST /v1/classify`: decode, submit through the bounded queue, block for
+/// the response (the connection thread is the waiter, mirroring an
+/// in-process `submit_blocking` caller).
+fn classify_one(
+    body: &[u8],
+    handle: &Handle,
+) -> std::result::Result<ClassifyResponse, ApiError> {
+    let req = ClassifyRequest::from_value(&parse_body(body)?)?;
+    handle.submit_blocking(req)
+}
+
+/// `POST /v1/classify/batch`: submit every item before collecting any
+/// response, so one HTTP batch becomes co-batchable work for the dynamic
+/// batcher instead of a serial request chain.  Item failures (shape, queue
+/// full) become per-item error envelopes; the call itself is 200.
+fn classify_batch(body: &[u8], handle: &Handle) -> std::result::Result<Value, ApiError> {
+    let doc = parse_body(body)?;
+    let items = doc
+        .get("requests")
+        .and_then(Value::as_array)
+        .ok_or_else(|| {
+            ApiError::new(
+                ErrorCode::InvalidArgument,
+                "body must be {\"requests\": [...]}",
+            )
+        })?;
+    let pending: Vec<std::result::Result<_, ApiError>> = items
+        .iter()
+        .map(|item| ClassifyRequest::from_value(item).and_then(|r| handle.submit(r)))
+        .collect();
+    let responses: Vec<Value> = pending
+        .into_iter()
+        .map(|p| match p {
+            Ok(rx) => match rx.recv() {
+                Ok(Ok(resp)) => resp.to_value(),
+                Ok(Err(e)) => e.to_value(),
+                Err(_) => ApiError::new(ErrorCode::Internal, "worker dropped response")
+                    .to_value(),
+            },
+            Err(e) => e.to_value(),
+        })
+        .collect();
+    Ok(Value::Obj(BTreeMap::from([(
+        "responses".to_string(),
+        Value::Arr(responses),
+    )])))
+}
+
+/// `GET /healthz`: liveness + the deployment facts a client needs to build
+/// valid requests.
+fn healthz(handle: &Handle) -> Value {
+    let caps = handle.caps();
+    Value::Obj(BTreeMap::from([
+        ("status".to_string(), Value::Str("ok".to_string())),
+        ("api".to_string(), Value::Str(API_VERSION.to_string())),
+        (
+            "engine".to_string(),
+            Value::Str(caps.engine.to_string()),
+        ),
+        (
+            "backend".to_string(),
+            Value::Str(caps.backend.name().to_string()),
+        ),
+        (
+            "image_len".to_string(),
+            Value::Num(caps.image_len as f64),
+        ),
+        (
+            "num_classes".to_string(),
+            Value::Num(caps.num_classes as f64),
+        ),
+        (
+            "acam_available".to_string(),
+            Value::Bool(caps.acam_available),
+        ),
+    ]))
+}

@@ -108,7 +108,11 @@ impl Value {
             Value::Null => out.push_str("null"),
             Value::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Value::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 1e15 {
+                if !n.is_finite() {
+                    // JSON has no NaN/Infinity literal; null is the least-bad
+                    // wire encoding (and what serde_json's default does too).
+                    out.push_str("null");
+                } else if n.fract() == 0.0 && n.abs() < 1e15 {
                     let _ = write!(out, "{}", *n as i64);
                 } else {
                     let _ = write!(out, "{n}");
@@ -432,6 +436,76 @@ mod tests {
         let v = parse(text).unwrap();
         let v2 = parse(&v.to_json()).unwrap();
         assert_eq!(v, v2);
+    }
+
+    #[test]
+    fn writer_emits_null_for_non_finite() {
+        assert_eq!(Value::Num(f64::NAN).to_json(), "null");
+        assert_eq!(Value::Num(f64::INFINITY).to_json(), "null");
+        assert_eq!(Value::Num(f64::NEG_INFINITY).to_json(), "null");
+        // And inside containers the document stays parseable.
+        let v = Value::Arr(vec![Value::Num(1.5), Value::Num(f64::NAN)]);
+        let back = parse(&v.to_json()).unwrap();
+        assert_eq!(
+            back,
+            Value::Arr(vec![Value::Num(1.5), Value::Null])
+        );
+    }
+
+    #[test]
+    fn writer_string_escape_roundtrip() {
+        let cases = [
+            "plain",
+            "quote \" backslash \\ slash /",
+            "ctrl \n \r \t \u{8} \u{c} \u{1} \u{1f}",
+            "unicode: caf\u{e9} \u{2603} \u{1F600}",
+            "",
+        ];
+        for s in cases {
+            let v = Value::Str(s.to_string());
+            let back = parse(&v.to_json()).unwrap();
+            assert_eq!(back.as_str(), Some(s), "round-trip of {s:?}");
+        }
+    }
+
+    #[test]
+    fn writer_number_edge_case_roundtrip() {
+        let cases = [
+            0.0,
+            -0.0,
+            1.0,
+            -1.0,
+            0.1,
+            -3.5e2,
+            1e15,          // integer-formatting boundary
+            1e15 + 2.0,    // just above it (still exactly representable)
+            -1e15,
+            1.23e300,      // near f64 max
+            5e-324,        // smallest subnormal
+            2.2250738585072014e-308, // smallest normal
+            9007199254740991.0,      // 2^53 - 1
+            f64::MAX,
+            f64::MIN_POSITIVE,
+        ];
+        for n in cases {
+            let v = Value::Num(n);
+            let back = parse(&v.to_json()).unwrap();
+            let got = back.as_f64().unwrap();
+            assert!(
+                got == n || (got == 0.0 && n == 0.0),
+                "round-trip of {n:e}: got {got:e} from {}",
+                v.to_json()
+            );
+        }
+    }
+
+    #[test]
+    fn object_with_escaped_keys_roundtrips() {
+        let mut m = BTreeMap::new();
+        m.insert("a\"b\\c".to_string(), Value::Num(1.0));
+        m.insert("tab\tkey".to_string(), Value::Bool(true));
+        let v = Value::Obj(m);
+        assert_eq!(parse(&v.to_json()).unwrap(), v);
     }
 
     #[test]

@@ -19,8 +19,15 @@
 //!   the paper's fabricated 180 nm hardware (DESIGN.md §Substitutions).
 //! * [`matching`] implements the paper's digital matching models (Eq. 8-12)
 //!   bit-exactly, including a packed 64-features-per-word popcount path.
+//! * [`api`] is the versioned (v1) public classification protocol: typed
+//!   requests/responses with ranked predictions, per-stage energy, timings,
+//!   and stable machine-readable error codes, plus the JSON wire form.
 //! * [`coordinator`] owns the event loop: request router, dynamic batcher,
 //!   back-end dispatch, metrics.
+//! * [`gateway`] is the dependency-free HTTP/1.1 + JSON front door
+//!   (`POST /v1/classify`, `/v1/classify/batch`, `GET /healthz`,
+//!   `GET /metrics`) funneling into the same bounded queue as in-process
+//!   callers.
 //! * [`energy`] is the Horowitz-constant energy ledger behind §V.D.
 //! * [`dataset`], [`templates`], [`kmeans`], [`config`] are supporting
 //!   substrates (synthetic workload generator mirrored from Python, template
@@ -35,12 +42,14 @@
 //! only referenced behind the `pjrt` cargo feature (see Cargo.toml).
 
 pub mod acam;
+pub mod api;
 pub mod benchkit;
 pub mod config;
 pub mod coordinator;
 pub mod dataset;
 pub mod energy;
 pub mod error;
+pub mod gateway;
 pub mod jsonlite;
 pub mod kmeans;
 pub mod matching;

@@ -3,7 +3,9 @@
 //!
 //! Subcommands:
 //! * `serve`     — run the serving loop against a synthetic request stream
-//!   and print throughput/latency/energy metrics;
+//!   and print throughput/latency/energy metrics; with `--http ADDR` (or
+//!   `http.addr` in the config file, or `HEC_HTTP_ADDR`) it instead exposes
+//!   the v1 HTTP/JSON gateway and blocks until killed;
 //! * `classify`  — classify a few synthetic samples and print predictions;
 //! * `eval`      — accuracy + confusion matrix of the deployed backend over
 //!   a labelled test workload (Fig. 6 / Fig. 7 data);
@@ -32,6 +34,7 @@ const USAGE: &str = "usage: hec [--artifacts DIR] [--engine interp|interp-fast|p
 [--backend acam|fc|sim|softmax] [--templates K] [--threads N] [--variability L] \
 [--frontend fast|pallas] [--config FILE] \
 <serve|classify|eval|energy|acam-sim|info> [--requests N] [--concurrency N] \
+[--http ADDR] [--max-connections N] \
 [--count N] [--samples N] [--batch N] [--levels 0,1,2]";
 
 /// Minimal flag parser: `--key value` pairs plus one positional subcommand.
@@ -111,6 +114,12 @@ fn serve_config(args: &Args) -> hec::Result<ServeConfig> {
     }
     cfg.acam.variability_level = args
         .get("variability", cfg.acam.variability_level)
+        .map_err(Error::Config)?;
+    if let Some(addr) = args.flags.get("http") {
+        cfg.http.addr = Some(addr.clone());
+    }
+    cfg.http.max_connections = args
+        .get("max-connections", cfg.http.max_connections)
         .map_err(Error::Config)?;
     cfg.validate()?;
     Ok(cfg)
@@ -193,9 +202,16 @@ fn main() -> hec::Result<()> {
             let img_len = pipeline.image_len();
             for i in 0..count {
                 let res = pipeline.classify_batch(&images[i * img_len..(i + 1) * img_len], 1)?;
+                let top = res[0].top1();
                 println!(
-                    "sample {i}: predicted={} ({}) truth={} energy={:.2} nJ",
-                    res[0].class, CLASS_NAMES[res[0].class], labels[i], res[0].energy_nj
+                    "sample {i}: predicted={} ({}) truth={} energy={:.2} nJ \
+                     (front {:.2} + back {:.2})",
+                    top.class,
+                    CLASS_NAMES[top.class],
+                    labels[i],
+                    res[0].energy.total_nj(),
+                    res[0].energy.front_end_nj,
+                    res[0].energy.back_end_nj,
                 );
             }
         }
@@ -260,6 +276,33 @@ fn main() -> hec::Result<()> {
         "serve" => {
             let requests: usize = args.get("requests", 2000).map_err(Error::Config)?;
             let concurrency: usize = args.get("concurrency", 64).map_err(Error::Config)?;
+            if let Some(addr) = cfg.resolve_http_addr() {
+                // Gateway mode: expose the v1 HTTP/JSON API and block until
+                // killed (the synthetic driver below is the no-HTTP mode).
+                let mut http = cfg.http.clone();
+                http.addr = Some(addr);
+                let server = Server::start(cfg.clone())?;
+                let gateway = hec::gateway::Gateway::start(server.handle.clone(), &http)?;
+                let caps = server.handle.caps().clone();
+                println!(
+                    "hec {} gateway listening on {} (engine {}, backend {}, image_len {})",
+                    hec::api::API_VERSION,
+                    gateway.local_addr(),
+                    caps.engine,
+                    caps.backend.name(),
+                    caps.image_len,
+                );
+                println!(
+                    "routes: POST /v1/classify  POST /v1/classify/batch  GET /healthz  GET /metrics"
+                );
+                use std::io::Write as _;
+                let _ = std::io::stdout().flush();
+                loop {
+                    std::thread::sleep(std::time::Duration::from_secs(60));
+                    println!("{}", server.handle.metrics.snapshot());
+                    let _ = std::io::stdout().flush();
+                }
+            }
             let server = Server::start(cfg.clone())?;
             let handle = server.handle.clone();
             let meta = Meta::load_or_synthetic(&cfg.artifacts_dir)?;
@@ -274,7 +317,7 @@ fn main() -> hec::Result<()> {
                 while inflight.len() < concurrency && submitted < requests {
                     let idx = submitted % 256;
                     let img = images[idx * img_len..(idx + 1) * img_len].to_vec();
-                    match handle.submit(img) {
+                    match handle.submit(hec::api::ClassifyRequest::new(img)) {
                         Ok(rx) => {
                             inflight.push_back(rx);
                             submitted += 1;

@@ -127,11 +127,78 @@ pub fn classify<S: PartialOrd + Copy>(scores: &[S], class_of: &[usize], num_clas
     arg
 }
 
+/// Eq. 12 inner max: the best score each class achieves over its own
+/// templates.  `None` for classes without a template (template stores
+/// validate full coverage, so serving paths never see it).
+pub fn per_class_best<S: PartialOrd + Copy>(
+    scores: &[S],
+    class_of: &[usize],
+    num_classes: usize,
+) -> Vec<Option<S>> {
+    debug_assert_eq!(scores.len(), class_of.len());
+    let mut best: Vec<Option<S>> = vec![None; num_classes];
+    for (&s, &c) in scores.iter().zip(class_of.iter()) {
+        match best[c] {
+            Some(b) if b >= s => {}
+            _ => best[c] = Some(s),
+        }
+    }
+    best
+}
+
+/// Rank classes by their per-class best score, descending.  Ties break to
+/// the lower class id, so `rank_classes(..)[0].0 == classify(..)` always —
+/// the top-1 of the ranked view is pinned to the Eq. 12 argmax.
+pub fn rank_classes<S: PartialOrd + Copy>(
+    scores: &[S],
+    class_of: &[usize],
+    num_classes: usize,
+) -> Vec<(usize, S)> {
+    let best = per_class_best(scores, class_of, num_classes);
+    let mut ranked: Vec<(usize, S)> = best
+        .into_iter()
+        .enumerate()
+        .filter_map(|(c, b)| b.map(|s| (c, s)))
+        .collect();
+    // Descending by score; class ids ascend within equal scores (matches the
+    // strict-> tie rule in `classify`).  Scores are never NaN here (counts or
+    // Eq. 9-11 similarities), so Equal on incomparable values is unreachable.
+    ranked.sort_by(|a, b| {
+        b.1.partial_cmp(&a.1)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.0.cmp(&b.0))
+    });
+    ranked
+}
+
+/// Rank a dense per-class score row (one score per class, e.g. softmax
+/// logits) descending, ties to the lower class id.
+pub fn rank_scores<S: PartialOrd + Copy>(row: &[S]) -> Vec<(usize, S)> {
+    let identity: Vec<usize> = (0..row.len()).collect();
+    rank_classes(row, &identity, row.len())
+}
+
 /// Convenience: full binary feature-count classification (packed hot path).
 pub fn classify_feature_count(query_bits: &[u8], set: &TemplateSet, num_classes: usize) -> usize {
     let packed = set.pack_query(query_bits);
     let scores = feature_count_all_packed(&packed, set);
     classify(&scores, &set.class_of, num_classes)
+}
+
+/// Top-k scored variant of [`classify_feature_count`]: the k best classes
+/// with their per-class best Eq. 8 match counts, rank order pinned to the
+/// argmax function (element 0 is always the `classify_feature_count` class).
+pub fn classify_feature_count_topk(
+    query_bits: &[u8],
+    set: &TemplateSet,
+    num_classes: usize,
+    k: usize,
+) -> Vec<(usize, u32)> {
+    let packed = set.pack_query(query_bits);
+    let scores = feature_count_all_packed(&packed, set);
+    let mut ranked = rank_classes(&scores, &set.class_of, num_classes);
+    ranked.truncate(k);
+    ranked
 }
 
 /// Convenience: full similarity classification (Eq. 9-12).
@@ -144,6 +211,23 @@ pub fn classify_similarity(
 ) -> usize {
     let scores = similarity_all(query, set, alpha, binary_domain);
     classify(&scores, &set.class_of, num_classes)
+}
+
+/// Top-k scored variant of [`classify_similarity`]: the k best classes with
+/// their per-class best Eq. 9-11 similarities, rank order pinned to the
+/// argmax function.
+pub fn classify_similarity_topk(
+    query: &[f32],
+    set: &TemplateSet,
+    alpha: f32,
+    num_classes: usize,
+    binary_domain: bool,
+    k: usize,
+) -> Vec<(usize, f32)> {
+    let scores = similarity_all(query, set, alpha, binary_domain);
+    let mut ranked = rank_classes(&scores, &set.class_of, num_classes);
+    ranked.truncate(k);
+    ranked
 }
 
 #[cfg(test)]
@@ -230,6 +314,69 @@ mod tests {
     fn classify_tie_breaks_low() {
         let scores = [2u32, 2];
         assert_eq!(classify(&scores, &[0, 1], 2), 0);
+    }
+
+    #[test]
+    fn rank_classes_orders_by_per_class_best() {
+        // class 0 best 5, class 1 best 4, class 2 best 9.
+        let scores = [1u32, 5, 3, 4, 9];
+        let class_of = [0, 0, 1, 1, 2];
+        let ranked = rank_classes(&scores, &class_of, 3);
+        assert_eq!(ranked, vec![(2, 9), (0, 5), (1, 4)]);
+        assert_eq!(ranked[0].0, classify(&scores, &class_of, 3));
+    }
+
+    #[test]
+    fn rank_classes_ties_break_to_low_class() {
+        let scores = [7u32, 7, 3];
+        let class_of = [1, 0, 2];
+        let ranked = rank_classes(&scores, &class_of, 3);
+        assert_eq!(ranked, vec![(0, 7), (1, 7), (2, 3)]);
+        assert_eq!(ranked[0].0, classify(&scores, &class_of, 3));
+    }
+
+    #[test]
+    fn rank_scores_is_identity_class_ranking() {
+        let ranked = rank_scores(&[0.1f32, 0.9, 0.9, 0.4]);
+        assert_eq!(
+            ranked.iter().map(|&(c, _)| c).collect::<Vec<_>>(),
+            vec![1, 2, 3, 0]
+        );
+    }
+
+    #[test]
+    fn topk_rank_order_pins_to_argmax() {
+        // Randomised queries: top-1 of every top-k variant must equal the
+        // corresponding argmax classifier, and scores must be descending.
+        let mut rng = crate::rng::Rng::new(7);
+        let n = 96;
+        let templates: Vec<Vec<u8>> = (0..6)
+            .map(|_| (0..n).map(|_| u8::from(rng.u01() < 0.5)).collect())
+            .collect();
+        let set = toy_set(templates, vec![0, 0, 1, 1, 2, 2]);
+        for _ in 0..20 {
+            let q: Vec<u8> = (0..n).map(|_| u8::from(rng.u01() < 0.5)).collect();
+            let top = classify_feature_count_topk(&q, &set, 3, 3);
+            assert_eq!(top.len(), 3);
+            assert_eq!(top[0].0, classify_feature_count(&q, &set, 3));
+            assert!(top[0].1 >= top[1].1 && top[1].1 >= top[2].1);
+
+            let qf: Vec<f32> = q.iter().map(|&b| b as f32).collect();
+            let tops = classify_similarity_topk(&qf, &set, 0.05, 3, true, 2);
+            assert_eq!(tops.len(), 2);
+            assert_eq!(tops[0].0, classify_similarity(&qf, &set, 0.05, 3, true));
+            assert!(tops[0].1 >= tops[1].1);
+        }
+    }
+
+    #[test]
+    fn topk_truncates_to_available_classes() {
+        let t0 = vec![1u8; 16];
+        let t1 = vec![0u8; 16];
+        let set = toy_set(vec![t0, t1], vec![0, 1]);
+        let q = vec![1u8; 16];
+        assert_eq!(classify_feature_count_topk(&q, &set, 2, 10).len(), 2);
+        assert_eq!(classify_feature_count_topk(&q, &set, 2, 1).len(), 1);
     }
 
     #[test]

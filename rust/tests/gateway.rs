@@ -1,0 +1,416 @@
+//! Gateway end-to-end tests: the HTTP/JSON front door must serve the exact
+//! same classifications as the in-process v1 API, under concurrent clients,
+//! with the documented error codes — all artifact-free (synthetic fallback
+//! deployment), so they run on a clean checkout.
+//!
+//! The parity test here is the PR's acceptance gate: for a fixed synthetic
+//! workload, predictions over HTTP equal `classify_blocking` in-process
+//! results, and the per-stage energy split sums to the pre-v1 single
+//! `energy_nj` figure (front-end Eq. 13 + back-end Eq. 14).
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+
+use hec::api::{ApiError, ClassifyRequest, ClassifyResponse, ErrorCode};
+use hec::config::{Backend, HttpConfig, ServeConfig};
+use hec::coordinator::{Pipeline, Server};
+use hec::dataset::SyntheticDataset;
+use hec::energy::EnergyModel;
+use hec::gateway::Gateway;
+use hec::jsonlite;
+
+/// An artifacts directory that never exists -> synthetic fallback.
+const NO_ARTIFACTS: &str = "/nonexistent-hec-artifacts";
+
+fn cfg(backend: Backend) -> ServeConfig {
+    let mut c = ServeConfig {
+        artifacts_dir: NO_ARTIFACTS.into(),
+        backend,
+        ..Default::default()
+    };
+    c.batch.max_batch = 8;
+    c.batch.max_wait_us = 500;
+    c
+}
+
+fn start(backend: Backend) -> (Server, Gateway) {
+    let server = Server::start(cfg(backend)).unwrap();
+    let http = HttpConfig {
+        addr: Some("127.0.0.1:0".to_string()),
+        max_connections: 32,
+    };
+    let gateway = Gateway::start(server.handle.clone(), &http).unwrap();
+    (server, gateway)
+}
+
+fn workload(p: &Pipeline, n: usize, seed: u64) -> (Vec<f32>, Vec<usize>) {
+    SyntheticDataset::new(seed, n, p.meta.norm.mean as f32, p.meta.norm.std as f32).batch(0, n)
+}
+
+/// Read one HTTP/1.1 response off a stream (status, body) using
+/// Content-Length framing, leaving the stream usable for keep-alive.
+fn read_response(stream: &mut TcpStream) -> (u16, String) {
+    let mut head = Vec::new();
+    let mut byte = [0u8; 1];
+    while !head.ends_with(b"\r\n\r\n") {
+        stream.read_exact(&mut byte).unwrap();
+        head.push(byte[0]);
+        assert!(head.len() < 64 * 1024, "unterminated response head");
+    }
+    let head = String::from_utf8(head).unwrap();
+    let status: u16 = head.split(' ').nth(1).unwrap().parse().unwrap();
+    let content_length: usize = head
+        .lines()
+        .find_map(|l| {
+            let (k, v) = l.split_once(':')?;
+            k.eq_ignore_ascii_case("content-length")
+                .then(|| v.trim().parse().unwrap())
+        })
+        .expect("response must carry Content-Length");
+    let mut body = vec![0u8; content_length];
+    stream.read_exact(&mut body).unwrap();
+    (status, String::from_utf8(body).unwrap())
+}
+
+fn send_request(
+    stream: &mut TcpStream,
+    method: &str,
+    path: &str,
+    body: Option<&str>,
+    close: bool,
+) {
+    let mut req = format!("{method} {path} HTTP/1.1\r\nHost: hec-test\r\n");
+    if close {
+        req.push_str("Connection: close\r\n");
+    }
+    if let Some(b) = body {
+        req.push_str(&format!(
+            "Content-Type: application/json\r\nContent-Length: {}\r\n",
+            b.len()
+        ));
+    }
+    req.push_str("\r\n");
+    if let Some(b) = body {
+        req.push_str(b);
+    }
+    stream.write_all(req.as_bytes()).unwrap();
+}
+
+/// One-shot request helper (Connection: close).
+fn http(addr: SocketAddr, method: &str, path: &str, body: Option<&str>) -> (u16, String) {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    send_request(&mut stream, method, path, body, true);
+    read_response(&mut stream)
+}
+
+#[test]
+fn healthz_reports_deployment_facts() {
+    let (server, gateway) = start(Backend::FeatureCount);
+    let (status, body) = http(gateway.local_addr(), "GET", "/healthz", None);
+    assert_eq!(status, 200);
+    let v = jsonlite::parse(&body).unwrap();
+    assert_eq!(v.get("status").unwrap().as_str(), Some("ok"));
+    assert_eq!(v.get("api").unwrap().as_str(), Some("v1"));
+    assert_eq!(v.get("engine").unwrap().as_str(), Some("interp"));
+    assert_eq!(v.get("backend").unwrap().as_str(), Some("fc"));
+    assert_eq!(
+        v.get("image_len").unwrap().as_usize(),
+        Some(server.handle.caps().image_len)
+    );
+    assert_eq!(v.get("acam_available").unwrap().as_bool(), Some(false));
+    gateway.shutdown();
+    server.shutdown();
+}
+
+#[test]
+fn metrics_exposes_prometheus_text() {
+    let (server, gateway) = start(Backend::FeatureCount);
+    // Drive one request through so counters are non-zero.
+    let img = vec![0.0f32; server.handle.caps().image_len];
+    let body = ClassifyRequest::new(img).to_value().to_json();
+    let (status, _) = http(gateway.local_addr(), "POST", "/v1/classify", Some(&body));
+    assert_eq!(status, 200);
+    let (status, text) = http(gateway.local_addr(), "GET", "/metrics", None);
+    assert_eq!(status, 200);
+    for needle in [
+        "hec_requests_total",
+        "hec_responses_total",
+        "hec_queue_depth",
+        "hec_in_flight",
+        "# TYPE hec_in_flight gauge",
+    ] {
+        assert!(text.contains(needle), "missing {needle} in:\n{text}");
+    }
+    gateway.shutdown();
+    server.shutdown();
+}
+
+/// THE parity gate: concurrent HTTP clients vs in-process classify_blocking
+/// on a fixed synthetic workload — identical predictions, and the response's
+/// front/back energy split sums to the pre-v1 single energy figure.
+#[test]
+fn http_parity_with_in_process_api_under_concurrency() {
+    let (server, gateway) = start(Backend::FeatureCount);
+    let p = Pipeline::new(&cfg(Backend::FeatureCount)).unwrap();
+    let n = 24;
+    let (images, _) = workload(&p, n, 1_000_003);
+    let img_len = p.image_len();
+
+    // In-process ground truth through the same running server.
+    let expected: Vec<(usize, f64)> = (0..n)
+        .map(|i| {
+            let r = server
+                .handle
+                .classify_blocking(images[i * img_len..(i + 1) * img_len].to_vec())
+                .unwrap();
+            (r.top1().class, r.energy.total_nj())
+        })
+        .collect();
+
+    // The pre-v1 energy figure, reconstructed independently: Eq. 13
+    // front-end + Eq. 14 back-end at this deployment's template scale.
+    let em = EnergyModel::default();
+    let set = p.store.set(1).unwrap();
+    let legacy_energy_nj = em.frontend_nj(p.meta.macs.as_built.student_effective)
+        + em.backend_nj(set.num_templates() as u64, set.num_features() as u64);
+
+    // Concurrent HTTP clients replaying the same workload.
+    let addr = gateway.local_addr();
+    let clients = 4;
+    let per_client = n / clients;
+    let images = std::sync::Arc::new(images);
+    let joins: Vec<_> = (0..clients)
+        .map(|c| {
+            let images = std::sync::Arc::clone(&images);
+            std::thread::spawn(move || {
+                let mut got = Vec::new();
+                for r in 0..per_client {
+                    let i = c * per_client + r;
+                    let mut req =
+                        ClassifyRequest::new(images[i * img_len..(i + 1) * img_len].to_vec());
+                    req.request_id = Some(format!("client{c}-req{r}"));
+                    let body = req.to_value().to_json();
+                    let (status, text) = http(addr, "POST", "/v1/classify", Some(&body));
+                    assert_eq!(status, 200, "client {c} req {r}: {text}");
+                    let resp =
+                        ClassifyResponse::from_value(&jsonlite::parse(&text).unwrap()).unwrap();
+                    assert_eq!(resp.request_id.as_deref(), Some(&*format!("client{c}-req{r}")));
+                    assert_eq!(resp.engine, "interp");
+                    assert_eq!(resp.backend, Backend::FeatureCount);
+                    got.push((i, resp.top1().class, resp.energy));
+                }
+                got
+            })
+        })
+        .collect();
+
+    for j in joins {
+        for (i, class, energy) in j.join().unwrap() {
+            assert_eq!(class, expected[i].0, "sample {i} diverged over HTTP");
+            let total = energy.total_nj();
+            assert!(
+                (total - expected[i].1).abs() < 1e-9,
+                "sample {i}: HTTP energy {total} vs in-process {}",
+                expected[i].1
+            );
+            assert!(
+                (total - legacy_energy_nj).abs() < 1e-9,
+                "sample {i}: front {} + back {} must sum to the pre-v1 figure {legacy_energy_nj}",
+                energy.front_end_nj,
+                energy.back_end_nj
+            );
+            assert!(energy.front_end_nj > 0.0 && energy.back_end_nj > 0.0);
+        }
+    }
+    gateway.shutdown();
+    server.shutdown();
+}
+
+#[test]
+fn batch_endpoint_matches_single_requests() {
+    let (server, gateway) = start(Backend::FeatureCount);
+    let p = Pipeline::new(&cfg(Backend::FeatureCount)).unwrap();
+    let n = 6;
+    let (images, _) = workload(&p, n, 777);
+    let img_len = p.image_len();
+
+    let singles: Vec<usize> = (0..n)
+        .map(|i| {
+            server
+                .handle
+                .classify_blocking(images[i * img_len..(i + 1) * img_len].to_vec())
+                .unwrap()
+                .top1()
+                .class
+        })
+        .collect();
+
+    let reqs: Vec<String> = (0..n)
+        .map(|i| {
+            ClassifyRequest::new(images[i * img_len..(i + 1) * img_len].to_vec())
+                .to_value()
+                .to_json()
+        })
+        .collect();
+    let body = format!("{{\"requests\": [{}]}}", reqs.join(","));
+    let (status, text) = http(gateway.local_addr(), "POST", "/v1/classify/batch", Some(&body));
+    assert_eq!(status, 200, "{text}");
+    let v = jsonlite::parse(&text).unwrap();
+    let responses = v.get("responses").unwrap().as_array().unwrap();
+    assert_eq!(responses.len(), n);
+    for (i, rv) in responses.iter().enumerate() {
+        let resp = ClassifyResponse::from_value(rv).unwrap();
+        assert_eq!(resp.top1().class, singles[i], "batch item {i}");
+    }
+
+    // A malformed item inside a batch fails alone, not the whole call.
+    let body = format!(
+        "{{\"requests\": [{}, {{\"image\": [1, 2, 3]}}]}}",
+        reqs[0]
+    );
+    let (status, text) = http(gateway.local_addr(), "POST", "/v1/classify/batch", Some(&body));
+    assert_eq!(status, 200);
+    let v = jsonlite::parse(&text).unwrap();
+    let responses = v.get("responses").unwrap().as_array().unwrap();
+    assert!(ClassifyResponse::from_value(&responses[0]).is_ok());
+    let err = ApiError::from_value(&responses[1]).expect("second item must be an error envelope");
+    assert_eq!(err.code, ErrorCode::InvalidShape);
+    gateway.shutdown();
+    server.shutdown();
+}
+
+#[test]
+fn top_k_features_and_overrides_over_http() {
+    let (server, gateway) = start(Backend::FeatureCount);
+    let p = Pipeline::new(&cfg(Backend::FeatureCount)).unwrap();
+    let (images, _) = workload(&p, 1, 999);
+    let caps = server.handle.caps().clone();
+
+    // top_k = 3 with features: ranked predictions, descending scores, and
+    // the raw feature vector.
+    let mut req = ClassifyRequest::new(images.clone());
+    req.top_k = 3;
+    req.return_features = true;
+    let (status, text) = http(
+        gateway.local_addr(),
+        "POST",
+        "/v1/classify",
+        Some(&req.to_value().to_json()),
+    );
+    assert_eq!(status, 200, "{text}");
+    let resp = ClassifyResponse::from_value(&jsonlite::parse(&text).unwrap()).unwrap();
+    assert_eq!(resp.predictions.len(), 3);
+    assert!(resp.predictions[0].score >= resp.predictions[1].score);
+    assert!(resp.predictions[1].score >= resp.predictions[2].score);
+    let top1 = server.handle.classify_blocking(images.clone()).unwrap();
+    assert_eq!(resp.top1().class, top1.top1().class, "top-1 pinned to argmax");
+    assert_eq!(
+        resp.features.as_ref().map(Vec::len),
+        Some(p.meta.artifacts.n_features)
+    );
+
+    // Per-request backend override onto the similarity matcher.
+    let mut req = ClassifyRequest::new(images.clone());
+    req.backend = Some(Backend::Similarity);
+    let (status, text) = http(
+        gateway.local_addr(),
+        "POST",
+        "/v1/classify",
+        Some(&req.to_value().to_json()),
+    );
+    assert_eq!(status, 200, "{text}");
+    let resp = ClassifyResponse::from_value(&jsonlite::parse(&text).unwrap()).unwrap();
+    assert_eq!(resp.backend, Backend::Similarity);
+
+    // ACAM was not programmed in this fc deployment -> 503 + stable code.
+    assert!(!caps.acam_available);
+    let mut req = ClassifyRequest::new(images);
+    req.backend = Some(Backend::AcamSim);
+    let (status, text) = http(
+        gateway.local_addr(),
+        "POST",
+        "/v1/classify",
+        Some(&req.to_value().to_json()),
+    );
+    assert_eq!(status, 503);
+    let err = ApiError::from_value(&jsonlite::parse(&text).unwrap()).unwrap();
+    assert_eq!(err.code, ErrorCode::BackendUnavailable);
+    gateway.shutdown();
+    server.shutdown();
+}
+
+#[test]
+fn error_paths_return_stable_codes() {
+    let (server, gateway) = start(Backend::FeatureCount);
+    let addr = gateway.local_addr();
+
+    // Wrong image shape -> 400 INVALID_SHAPE.
+    let body = ClassifyRequest::new(vec![1.0, 2.0]).to_value().to_json();
+    let (status, text) = http(addr, "POST", "/v1/classify", Some(&body));
+    assert_eq!(status, 400);
+    let err = ApiError::from_value(&jsonlite::parse(&text).unwrap()).unwrap();
+    assert_eq!(err.code, ErrorCode::InvalidShape);
+
+    // Bad JSON -> 400 MALFORMED_REQUEST.
+    let (status, text) = http(addr, "POST", "/v1/classify", Some("{not json"));
+    assert_eq!(status, 400);
+    let err = ApiError::from_value(&jsonlite::parse(&text).unwrap()).unwrap();
+    assert_eq!(err.code, ErrorCode::MalformedRequest);
+
+    // top_k 0 -> 400 INVALID_ARGUMENT.
+    let img_len = server.handle.caps().image_len;
+    let body = format!(
+        "{{\"image\": [{}], \"top_k\": 0}}",
+        vec!["0"; img_len].join(",")
+    );
+    let (status, text) = http(addr, "POST", "/v1/classify", Some(&body));
+    assert_eq!(status, 400);
+    let err = ApiError::from_value(&jsonlite::parse(&text).unwrap()).unwrap();
+    assert_eq!(err.code, ErrorCode::InvalidArgument);
+
+    // Unknown route -> 404; wrong method -> 405.
+    let (status, text) = http(addr, "GET", "/v2/classify", None);
+    assert_eq!(status, 404);
+    let err = ApiError::from_value(&jsonlite::parse(&text).unwrap()).unwrap();
+    assert_eq!(err.code, ErrorCode::NotFound);
+    let (status, text) = http(addr, "GET", "/v1/classify", None);
+    assert_eq!(status, 405);
+    let err = ApiError::from_value(&jsonlite::parse(&text).unwrap()).unwrap();
+    assert_eq!(err.code, ErrorCode::MethodNotAllowed);
+    gateway.shutdown();
+    server.shutdown();
+}
+
+#[test]
+fn keep_alive_serves_sequential_requests_on_one_connection() {
+    let (server, gateway) = start(Backend::FeatureCount);
+    let mut stream = TcpStream::connect(gateway.local_addr()).unwrap();
+    send_request(&mut stream, "GET", "/healthz", None, false);
+    let (status, _) = read_response(&mut stream);
+    assert_eq!(status, 200);
+    let img = vec![0.0f32; server.handle.caps().image_len];
+    let body = ClassifyRequest::new(img).to_value().to_json();
+    send_request(&mut stream, "POST", "/v1/classify", Some(&body), false);
+    let (status, text) = read_response(&mut stream);
+    assert_eq!(status, 200);
+    assert!(ClassifyResponse::from_value(&jsonlite::parse(&text).unwrap()).is_ok());
+    send_request(&mut stream, "GET", "/healthz", None, true);
+    let (status, _) = read_response(&mut stream);
+    assert_eq!(status, 200);
+    gateway.shutdown();
+    server.shutdown();
+}
+
+#[test]
+fn in_process_override_rejection_matches_http_semantics() {
+    // The same BACKEND_UNAVAILABLE contract, without the network in the
+    // loop: the submit-time check fires before anything is queued.
+    let server = Server::start(cfg(Backend::FeatureCount)).unwrap();
+    let mut req = ClassifyRequest::new(vec![0.0; server.handle.caps().image_len]);
+    req.backend = Some(Backend::AcamSim);
+    let err = server.handle.submit(req).err().expect("must be rejected");
+    assert_eq!(err.code, ErrorCode::BackendUnavailable);
+    let snap = server.handle.metrics.snapshot();
+    assert_eq!(snap.in_flight, 0, "rejected request must not leak in_flight");
+    server.shutdown();
+}

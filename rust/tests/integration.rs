@@ -61,7 +61,7 @@ fn golden_predictions_match_python() {
         .classify_batch(&images, n)
         .unwrap()
         .into_iter()
-        .map(|c| c.class)
+        .map(|c| c.top1().class)
         .collect();
     assert_eq!(got, want, "Rust FC predictions diverge from Python golden");
 }
@@ -110,13 +110,13 @@ fn ideal_acam_equals_feature_count() {
         .classify_batch(&images, 64)
         .unwrap()
         .into_iter()
-        .map(|c| c.class)
+        .map(|c| c.top1().class)
         .collect();
     let p_acam: Vec<usize> = acam
         .classify_batch(&images, 64)
         .unwrap()
         .into_iter()
-        .map(|c| c.class)
+        .map(|c| c.top1().class)
         .collect();
     assert_eq!(p_fc, p_acam);
 }
@@ -130,8 +130,18 @@ fn similarity_agrees_with_feature_count() {
     let mut fc = Pipeline::new(&cfg(Backend::FeatureCount)).unwrap();
     let mut sim = Pipeline::new(&cfg(Backend::Similarity)).unwrap();
     let (images, _) = workload(&fc.meta, 64, 1_000_003);
-    let p_fc: Vec<usize> = fc.classify_batch(&images, 64).unwrap().iter().map(|c| c.class).collect();
-    let p_sim: Vec<usize> = sim.classify_batch(&images, 64).unwrap().iter().map(|c| c.class).collect();
+    let p_fc: Vec<usize> = fc
+        .classify_batch(&images, 64)
+        .unwrap()
+        .iter()
+        .map(|c| c.top1().class)
+        .collect();
+    let p_sim: Vec<usize> = sim
+        .classify_batch(&images, 64)
+        .unwrap()
+        .iter()
+        .map(|c| c.top1().class)
+        .collect();
     let agree = p_fc.iter().zip(&p_sim).filter(|(a, b)| a == b).count();
     assert!(agree >= 62, "agreement {agree}/64"); // ties may split
 }
@@ -306,14 +316,16 @@ fn server_round_trip() {
     let rxs: Vec<_> = (0..16)
         .map(|i| {
             handle
-                .submit(images[i * img_len..(i + 1) * img_len].to_vec())
+                .submit(hec::api::ClassifyRequest::new(
+                    images[i * img_len..(i + 1) * img_len].to_vec(),
+                ))
                 .unwrap()
         })
         .collect();
     for rx in rxs {
         let res = rx.recv().unwrap().unwrap();
-        assert!(res.class < 10);
-        assert!(res.energy_nj > 0.0);
+        assert!(res.top1().class < 10);
+        assert!(res.energy.total_nj() > 0.0);
     }
     let snap = handle.metrics.snapshot();
     assert_eq!(snap.responses, 16);
@@ -330,7 +342,12 @@ fn server_rejects_bad_shapes() {
         return;
     }
     let server = Server::start(cfg(Backend::FeatureCount)).unwrap();
-    assert!(server.handle.submit(vec![0.0; 17]).is_err());
+    let err = server
+        .handle
+        .submit(hec::api::ClassifyRequest::new(vec![0.0; 17]))
+        .err()
+        .expect("bad shape must be rejected");
+    assert_eq!(err.code, hec::api::ErrorCode::InvalidShape);
     server.shutdown();
 }
 

@@ -39,8 +39,9 @@ fn synthetic_pipeline_runs_end_to_end() {
     let results = p.classify_batch(&images, n).unwrap();
     assert_eq!(results.len(), n);
     for r in &results {
-        assert!(r.class < p.store.num_classes);
-        assert!(r.energy_nj > 0.0);
+        assert!(r.top1().class < p.store.num_classes);
+        assert!(r.energy.total_nj() > 0.0);
+        assert!(r.energy.front_end_nj > 0.0 && r.energy.back_end_nj > 0.0);
     }
 }
 
@@ -58,7 +59,7 @@ fn pipeline_matches_digital_reference_feature_count() {
         .classify_batch(&images, n)
         .unwrap()
         .into_iter()
-        .map(|c| c.class)
+        .map(|c| c.top1().class)
         .collect();
     let set = p.store.set(1).unwrap();
     let want: Vec<usize> = feats
@@ -83,7 +84,7 @@ fn pipeline_matches_digital_reference_similarity() {
         .classify_batch(&images, n)
         .unwrap()
         .into_iter()
-        .map(|c| c.class)
+        .map(|c| c.top1().class)
         .collect();
     let set = p.store.set(1).unwrap();
     let want: Vec<usize> = feats
@@ -115,13 +116,13 @@ fn ideal_acam_equals_feature_count() {
         .classify_batch(&images, n)
         .unwrap()
         .into_iter()
-        .map(|c| c.class)
+        .map(|c| c.top1().class)
         .collect();
     let p_acam: Vec<usize> = acam
         .classify_batch(&images, n)
         .unwrap()
         .into_iter()
-        .map(|c| c.class)
+        .map(|c| c.top1().class)
         .collect();
     assert_eq!(p_fc, p_acam);
 }
@@ -135,7 +136,7 @@ fn softmax_backend_runs_on_synthetic_head() {
     let results = p.classify_batch(&images, n).unwrap();
     assert_eq!(results.len(), n);
     for r in &results {
-        assert!(r.class < p.store.num_classes);
+        assert!(r.top1().class < p.store.num_classes);
     }
 }
 
@@ -188,14 +189,16 @@ fn server_round_trip_without_artifacts() {
     let rxs: Vec<_> = (0..8)
         .map(|i| {
             handle
-                .submit(images[i * img_len..(i + 1) * img_len].to_vec())
+                .submit(hec::api::ClassifyRequest::new(
+                    images[i * img_len..(i + 1) * img_len].to_vec(),
+                ))
                 .unwrap()
         })
         .collect();
     for rx in rxs {
         let res = rx.recv().unwrap().unwrap();
-        assert!(res.class < 10);
-        assert!(res.energy_nj > 0.0);
+        assert!(res.top1().class < 10);
+        assert!(res.energy.total_nj() > 0.0);
     }
     let snap = handle.metrics.snapshot();
     assert_eq!(snap.responses, 8);
@@ -239,13 +242,13 @@ fn fast_engine_serves_and_matches_scalar_predictions() {
         .classify_batch(&images, n)
         .unwrap()
         .into_iter()
-        .map(|r| r.class)
+        .map(|r| r.top1().class)
         .collect();
     let p_fast: Vec<usize> = fast
         .classify_batch(&images, n)
         .unwrap()
         .into_iter()
-        .map(|r| r.class)
+        .map(|r| r.top1().class)
         .collect();
     assert_eq!(p_scalar, p_fast);
 }
