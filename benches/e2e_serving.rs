@@ -1,21 +1,29 @@
 //! End-to-end serving bench: throughput/latency of the full coordinator
-//! (dynamic batcher -> PJRT front-end -> back-end) across batching policies
-//! and back-ends — the systems-side evaluation the paper's Fig. 2
-//! architecture implies.
+//! (dynamic batcher -> front-end engine -> back-end) across batching
+//! policies, back-ends, and shard counts — the systems-side evaluation the
+//! paper's Fig. 2 architecture implies, at the ROADMAP's serving scale.
+//!
+//! Artifact-free by design: with no `make artifacts` output the synthetic
+//! fallback deployment serves (same code path CI runs), so this bench
+//! finally emits a serving-path trajectory point (`BENCH_e2e_serving.json`)
+//! on every machine.  `HEC_BENCH_SMOKE=1` shrinks the request counts for
+//! CI smoke runs (absolute numbers are noisy there; the JSON artifact is
+//! the deliverable, not a ratio gate).
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 
 use hec::api::ClassifyRequest;
-use hec::benchkit::section;
+use hec::benchkit::{section, BenchResult};
 use hec::config::{Backend, ServeConfig};
-use hec::coordinator::Server;
+use hec::coordinator::{ClassifySurface, ShardSet};
 use hec::dataset::SyntheticDataset;
+use hec::jsonlite::Value;
 use hec::runtime::Meta;
 
-fn run(cfg: ServeConfig, requests: usize, clients: usize) -> (f64, f64, u64) {
-    let server = Server::start(cfg).unwrap();
-    let meta = Meta::load("artifacts").unwrap();
+fn run(cfg: &ServeConfig, requests: usize, clients: usize) -> (f64, f64, u64, u64) {
+    let set = ShardSet::start(cfg).unwrap();
+    let meta = Meta::load_or_synthetic(&cfg.artifacts_dir).unwrap();
     let ds = SyntheticDataset::new(1_000_003, 256, meta.norm.mean as f32, meta.norm.std as f32);
     let pool: Arc<Vec<Vec<f32>>> = Arc::new((0..256).map(|i| ds.image(i)).collect());
     let done = Arc::new(AtomicUsize::new(0));
@@ -23,7 +31,7 @@ fn run(cfg: ServeConfig, requests: usize, clients: usize) -> (f64, f64, u64) {
     let t0 = std::time::Instant::now();
     let joins: Vec<_> = (0..clients)
         .map(|c| {
-            let handle = server.handle.clone();
+            let handle = set.handle.clone();
             let pool = Arc::clone(&pool);
             let done = Arc::clone(&done);
             std::thread::spawn(move || {
@@ -46,24 +54,49 @@ fn run(cfg: ServeConfig, requests: usize, clients: usize) -> (f64, f64, u64) {
         j.join().unwrap();
     }
     let secs = t0.elapsed().as_secs_f64();
-    let snap = server.handle.metrics.snapshot();
+    let snap = set.handle.snapshot();
     let n = done.load(Ordering::Relaxed);
-    drop(server.handle.clone());
-    server.shutdown();
-    (n as f64 / secs, snap.latency_mean_us, snap.latency_p99_us)
+    set.shutdown();
+    (
+        n as f64 / secs,
+        snap.latency_mean_us,
+        snap.latency_p50_us,
+        snap.latency_p99_us,
+    )
+}
+
+/// Lift one serving run into the benchkit report schema.  Field mapping
+/// (also recorded in the report's `row_semantics`): `mean_us`/`min_us` =
+/// 1e6 / request throughput (so `throughput_per_s` reads as system
+/// req/s under the run's concurrency), `p50_us`/`p99_us` = measured
+/// end-to-end request latency percentile upper bounds.  Under concurrent
+/// clients 1/throughput is NOT per-request latency — read latency from
+/// the percentile fields.
+fn row(name: &str, requests: usize, tput: f64, p50_us: u64, p99_us: u64) -> BenchResult {
+    let inv = std::time::Duration::from_secs_f64(if tput > 0.0 { 1.0 / tput } else { 0.0 });
+    BenchResult {
+        name: name.to_string(),
+        iters: requests,
+        mean: inv,
+        p50: std::time::Duration::from_micros(p50_us),
+        p99: std::time::Duration::from_micros(p99_us),
+        min: inv,
+    }
 }
 
 fn main() {
-    if !std::path::Path::new("artifacts/meta.json").is_file() {
-        println!("e2e_serving: run `make artifacts` first");
-        return;
+    let smoke = std::env::var("HEC_BENCH_SMOKE").is_ok();
+    let have_artifacts = std::path::Path::new("artifacts/meta.json").is_file();
+    if !have_artifacts {
+        println!("e2e_serving: no artifacts/ — serving the synthetic fallback deployment");
     }
     let base = ServeConfig {
         artifacts_dir: "artifacts".into(),
         backend: Backend::FeatureCount,
         ..Default::default()
     };
-    let requests = 600;
+    let requests = if smoke { 96 } else { 600 };
+    let mut report: Vec<BenchResult> = Vec::new();
 
     section("batching policy sweep (feature-count backend)");
     println!(
@@ -77,18 +110,28 @@ fn main() {
         let mut cfg = base.clone();
         cfg.batch.max_batch = max_batch;
         cfg.batch.max_wait_us = wait_us;
-        let (tput, mean_lat, p99) = run(cfg, requests, clients);
+        let (tput, mean_lat, p50, p99) = run(&cfg, requests, clients);
         println!(
             "{max_batch:>10} {wait_us:>10} {tput:>12.0} {mean_lat:>14.0} {p99:>14}   ({clients} clients)"
         );
+        report.push(row(
+            &format!("batch{max_batch}_wait{wait_us}us"),
+            requests,
+            tput,
+            p50,
+            p99,
+        ));
         results.push(tput);
     }
-    // The batching trade-off depends on offered concurrency: on this
-    // single-core testbed client threads contend with the PJRT worker, so
-    // we assert completion + sane throughput rather than a fixed ordering,
-    // and report the sweep (the deadline-padding interaction is the
-    // interesting systems result — underfilled big batches pay padding).
-    assert!(results.iter().all(|&t| t > 50.0), "all configs must sustain >50 req/s");
+    // The batching trade-off depends on offered concurrency: client threads
+    // contend with the worker on small testbeds, so we assert completion +
+    // sane throughput rather than a fixed ordering, and report the sweep
+    // (the deadline-padding interaction is the interesting systems result).
+    let floor = if smoke { 5.0 } else { 50.0 };
+    assert!(
+        results.iter().all(|&t| t > floor),
+        "all configs must sustain >{floor} req/s"
+    );
 
     section("backend sweep (batcher 32/2ms)");
     println!(
@@ -100,8 +143,52 @@ fn main() {
         cfg.backend = backend;
         cfg.batch.max_batch = 32;
         cfg.batch.max_wait_us = 2000;
-        let (tput, mean_lat, p99) = run(cfg, requests, 4);
+        let (tput, mean_lat, p50, p99) = run(&cfg, requests, 4);
         println!("{backend:>14?} {tput:>12.0} {mean_lat:>14.0} {p99:>14}");
+        report.push(row(
+            &format!("backend_{}", backend.name()),
+            requests,
+            tput,
+            p50,
+            p99,
+        ));
     }
-    println!("\ne2e_serving: PASS");
+
+    section("shard sweep (feature-count, batcher 8/500us, 16 clients)");
+    println!(
+        "{:>8} {:>12} {:>14} {:>14}",
+        "shards", "req/s", "mean_lat_us", "p99_lat_us"
+    );
+    for shards in [1usize, 2, 4] {
+        let mut cfg = base.clone();
+        cfg.batch.max_batch = 8;
+        cfg.batch.max_wait_us = 500;
+        cfg.shards.count = shards;
+        let (tput, mean_lat, p50, p99) = run(&cfg, requests, 16);
+        println!("{shards:>8} {tput:>12.0} {mean_lat:>14.0} {p99:>14}");
+        report.push(row(&format!("shards{shards}"), requests, tput, p50, p99));
+    }
+
+    let rows: Vec<&BenchResult> = report.iter().collect();
+    hec::benchkit::write_json_report(
+        "BENCH_e2e_serving.json",
+        "hec/e2e_serving/v1",
+        &[
+            ("requests_per_config", Value::Num(requests as f64)),
+            ("smoke", Value::Bool(smoke)),
+            ("artifacts", Value::Bool(have_artifacts)),
+            (
+                "row_semantics",
+                Value::Str(
+                    "mean_us/min_us = 1e6/req_throughput; p50_us/p99_us = \
+                     end-to-end request latency upper bounds"
+                        .to_string(),
+                ),
+            ),
+        ],
+        &rows,
+    )
+    .expect("write BENCH_e2e_serving.json");
+    println!("\nwrote BENCH_e2e_serving.json ({} rows)", rows.len());
+    println!("e2e_serving: PASS");
 }

@@ -1,19 +1,19 @@
 //! End-to-end serving driver — the repo's E2E validation workload.
 //!
-//! Starts the coordinator (dynamic batcher + PJRT front-end + ACAM-sim
-//! back-end), drives it with multi-threaded clients submitting a realistic
-//! synthetic request stream, and reports accuracy, latency percentiles,
-//! throughput and the modelled per-inference energy.  The run recorded in
-//! EXPERIMENTS.md §E2E comes from this binary.
+//! Starts the sharded coordinator (dynamic batcher + front-end engine +
+//! ACAM-sim back-end per shard), drives it with multi-threaded clients
+//! submitting a realistic synthetic request stream, and reports accuracy,
+//! latency percentiles, throughput and the modelled per-inference energy.
+//! The run recorded in EXPERIMENTS.md §E2E comes from this binary.
 //!
-//!     cargo run --release --example edge_serving [-- requests clients]
+//!     cargo run --release --example edge_serving [-- requests clients shards]
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 
 use hec::api::ClassifyRequest;
 use hec::config::{Backend, ServeConfig};
-use hec::coordinator::Server;
+use hec::coordinator::{ClassifySurface, ShardSet};
 use hec::dataset::SyntheticDataset;
 use hec::runtime::Meta;
 
@@ -21,6 +21,7 @@ fn main() -> hec::Result<()> {
     let args: Vec<String> = std::env::args().collect();
     let requests: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(2000);
     let clients: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(4);
+    let shards: usize = args.get(3).and_then(|s| s.parse().ok()).unwrap_or(1);
 
     let mut cfg = ServeConfig {
         artifacts_dir: "artifacts".into(),
@@ -29,8 +30,9 @@ fn main() -> hec::Result<()> {
     };
     cfg.batch.max_batch = 32;
     cfg.batch.max_wait_us = 2_000;
+    cfg.shards.count = shards;
 
-    let server = Server::start(cfg)?;
+    let set = ShardSet::start(&cfg)?;
     let meta = Meta::load_or_synthetic("artifacts")?;
     let img_len = meta.artifacts.image_size * meta.artifacts.image_size;
     let ds = SyntheticDataset::new(1_000_003, 512, meta.norm.mean as f32, meta.norm.std as f32);
@@ -44,7 +46,7 @@ fn main() -> hec::Result<()> {
     let t0 = std::time::Instant::now();
     let mut joins = Vec::new();
     for c in 0..clients {
-        let handle = server.handle.clone();
+        let handle = set.handle.clone();
         let pool = Arc::clone(&pool);
         let correct = Arc::clone(&correct);
         let done = Arc::clone(&done);
@@ -74,8 +76,12 @@ fn main() -> hec::Result<()> {
     let secs = t0.elapsed().as_secs_f64();
     let n = done.load(Ordering::Relaxed);
 
-    println!("=== edge serving E2E ({n} requests, {clients} clients, batcher 32/2ms) ===");
-    println!("{}", server.handle.metrics.snapshot());
+    println!(
+        "=== edge serving E2E ({n} requests, {clients} clients, {shards} shard{}, \
+         batcher 32/2ms) ===",
+        if shards == 1 { "" } else { "s" }
+    );
+    println!("{}", set.handle.snapshot());
     println!("throughput = {:.0} req/s", n as f64 / secs);
     println!(
         "accuracy   = {:.4} ({}/{})",
@@ -85,11 +91,10 @@ fn main() -> hec::Result<()> {
     );
     println!(
         "energy     = {:.2} nJ / inference (modelled)",
-        server.handle.metrics.snapshot().energy_nj / n as f64
+        set.handle.snapshot().energy_nj / n as f64
     );
     assert_eq!(n, requests, "all requests must complete");
-    drop(server.handle.clone()); // metrics borrowed above
-    server.shutdown();
+    set.shutdown();
     println!("img_len={img_len} (driver sanity)");
     Ok(())
 }

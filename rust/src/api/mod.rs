@@ -165,6 +165,12 @@ pub struct ClassifyResponse {
     /// Backend that scored the request (override-resolved).
     pub backend: Backend,
     pub features: Option<Vec<f32>>,
+    /// Index of the worker shard that served the request.  Additive v1
+    /// field.  `None` only for un-sharded in-process deployments
+    /// (`coordinator::Server`/`Handle`); the `hec serve` binary always
+    /// runs a `ShardSet`, so over HTTP this is present even at
+    /// `--shards 1` (as `0`).
+    pub shard: Option<usize>,
 }
 
 impl ClassifyResponse {

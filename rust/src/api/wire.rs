@@ -148,6 +148,9 @@ impl ClassifyResponse {
                 Value::Arr(feats.iter().map(|&f| Value::Num(f as f64)).collect()),
             );
         }
+        if let Some(shard) = self.shard {
+            m.insert("shard".to_string(), Value::Num(shard as f64));
+        }
         Value::Obj(m)
     }
 
@@ -213,6 +216,7 @@ impl ClassifyResponse {
             engine,
             backend,
             features: obj.get("features").and_then(Value::as_f32_vec),
+            shard: obj.get("shard").and_then(Value::as_usize),
         })
     }
 }
@@ -316,6 +320,7 @@ mod tests {
             engine: "interp",
             backend: Backend::FeatureCount,
             features: Some(vec![0.5, 1.5]),
+            shard: Some(2),
         };
         let text = resp.to_value().to_json();
         let v = jsonlite::parse(&text).unwrap();
@@ -329,6 +334,14 @@ mod tests {
         assert_eq!(back.engine, "interp");
         assert_eq!(back.timing, resp.timing);
         assert_eq!(back.features, resp.features);
+        assert_eq!(back.shard, Some(2));
+        // Un-sharded responses omit the field and decode back to None
+        // (v1 wire compatibility is additive).
+        let mut unsharded = resp;
+        unsharded.shard = None;
+        let v = jsonlite::parse(&unsharded.to_value().to_json()).unwrap();
+        assert!(v.get("shard").is_none());
+        assert_eq!(ClassifyResponse::from_value(&v).unwrap().shard, None);
     }
 
     #[test]

@@ -63,6 +63,9 @@ pub struct Metrics {
     pub batches: AtomicU64,
     pub batched_items: AtomicU64,
     pub padded_slots: AtomicU64,
+    /// Worker panic-restarts (shard deployments; always 0 for the plain
+    /// single-pipeline server).
+    pub restarts: AtomicU64,
     /// Gauge: requests accepted into the bounded queue but not yet pulled
     /// into a batch by the worker.
     pub queue_depth: AtomicU64,
@@ -110,6 +113,7 @@ impl Metrics {
             errors: self.errors.load(Ordering::Relaxed),
             queue_depth: self.queue_depth.load(Ordering::Relaxed),
             in_flight: self.in_flight.load(Ordering::Relaxed),
+            restarts: self.restarts.load(Ordering::Relaxed),
             batches,
             mean_batch: if batches > 0 {
                 items as f64 / batches as f64
@@ -140,6 +144,7 @@ pub struct Snapshot {
     pub errors: u64,
     pub queue_depth: u64,
     pub in_flight: u64,
+    pub restarts: u64,
     pub batches: u64,
     pub mean_batch: f64,
     pub pad_fraction: f64,
@@ -162,7 +167,7 @@ impl Snapshot {
             let _ = writeln!(out, "{name} {v}");
         }
         let mut out = String::new();
-        let counters: [(&str, &str, f64); 5] = [
+        let counters: [(&str, &str, f64); 6] = [
             (
                 "hec_requests_total",
                 "Requests accepted by the handle",
@@ -187,6 +192,11 @@ impl Snapshot {
                 "hec_energy_nanojoules_total",
                 "Modelled inference energy (nJ)",
                 self.energy_nj,
+            ),
+            (
+                "hec_restarts_total",
+                "Worker panic-restarts across all shards",
+                self.restarts as f64,
             ),
         ];
         for (name, help, v) in counters {
@@ -229,6 +239,121 @@ impl Snapshot {
         }
         out
     }
+
+    /// Aggregate per-shard snapshots into one deployment-wide view: counters
+    /// and gauges sum exactly; latency/execute means are weighted by each
+    /// shard's traffic; the percentile upper bounds take the worst shard
+    /// (a conservative deployment-wide bound, since per-shard histograms
+    /// cannot be re-bucketed from a snapshot).
+    pub fn merge(snaps: &[Snapshot]) -> Snapshot {
+        let mut out = Snapshot {
+            requests: 0,
+            responses: 0,
+            errors: 0,
+            queue_depth: 0,
+            in_flight: 0,
+            restarts: 0,
+            batches: 0,
+            mean_batch: 0.0,
+            pad_fraction: 0.0,
+            latency_mean_us: 0.0,
+            latency_p50_us: 0,
+            latency_p99_us: 0,
+            execute_mean_us: 0.0,
+            backend_mean_us: 0.0,
+            energy_nj: 0.0,
+        };
+        let mut items = 0f64;
+        let mut padded = 0f64;
+        for s in snaps {
+            out.requests += s.requests;
+            out.responses += s.responses;
+            out.errors += s.errors;
+            out.queue_depth += s.queue_depth;
+            out.in_flight += s.in_flight;
+            out.restarts += s.restarts;
+            out.batches += s.batches;
+            out.energy_nj += s.energy_nj;
+            out.latency_mean_us += s.latency_mean_us * s.responses as f64;
+            out.execute_mean_us += s.execute_mean_us * s.batches as f64;
+            out.backend_mean_us += s.backend_mean_us * s.batches as f64;
+            out.latency_p50_us = out.latency_p50_us.max(s.latency_p50_us);
+            out.latency_p99_us = out.latency_p99_us.max(s.latency_p99_us);
+            let shard_items = s.mean_batch * s.batches as f64;
+            items += shard_items;
+            // pad_fraction = padded / (items + padded)  =>  invert per shard.
+            if s.pad_fraction > 0.0 && s.pad_fraction < 1.0 {
+                padded += shard_items * s.pad_fraction / (1.0 - s.pad_fraction);
+            }
+        }
+        if out.responses > 0 {
+            out.latency_mean_us /= out.responses as f64;
+        }
+        if out.batches > 0 {
+            out.execute_mean_us /= out.batches as f64;
+            out.backend_mean_us /= out.batches as f64;
+            out.mean_batch = items / out.batches as f64;
+        }
+        if items + padded > 0.0 {
+            out.pad_fraction = padded / (items + padded);
+        }
+        out
+    }
+}
+
+/// Render the per-shard Prometheus series block (`shard`-labelled samples,
+/// one HELP/TYPE header per metric name) — appended after the aggregate
+/// [`Snapshot::prometheus`] payload by the sharded gateway's `/metrics`.
+pub fn prometheus_shards(shards: &[(Snapshot, bool)]) -> String {
+    use std::fmt::Write as _;
+    let mut out = String::new();
+    type Pick = fn(&Snapshot, bool) -> f64;
+    let series: [(&str, &str, &str, Pick); 6] = [
+        (
+            "hec_shard_queue_depth",
+            "gauge",
+            "Requests queued on this shard but not yet batched",
+            |s, _| s.queue_depth as f64,
+        ),
+        (
+            "hec_shard_in_flight",
+            "gauge",
+            "Requests accepted by this shard but not yet answered",
+            |s, _| s.in_flight as f64,
+        ),
+        (
+            "hec_shard_served_total",
+            "counter",
+            "Successful classifications served by this shard",
+            |s, _| s.responses as f64,
+        ),
+        (
+            "hec_shard_errors_total",
+            "counter",
+            "Failed or rejected requests on this shard",
+            |s, _| s.errors as f64,
+        ),
+        (
+            "hec_shard_restarts_total",
+            "counter",
+            "Panic-restarts of this shard's worker",
+            |s, _| s.restarts as f64,
+        ),
+        (
+            "hec_shard_healthy",
+            "gauge",
+            "1 when the shard worker is serving, 0 while draining/restarting",
+            |_, healthy| f64::from(u8::from(healthy)),
+        ),
+    ];
+    for (name, kind, help, pick) in series {
+        let _ = writeln!(out, "# HELP {name} {help}");
+        let _ = writeln!(out, "# TYPE {name} {kind}");
+        for (i, (snap, healthy)) in shards.iter().enumerate() {
+            let _ = writeln!(out, "{name}{{shard=\"{i}\"}} {}", pick(snap, *healthy));
+        }
+    }
+    out
 }
 
 impl std::fmt::Display for Snapshot {
@@ -336,6 +461,101 @@ mod tests {
             assert!(value.parse::<f64>().is_ok(), "bad value in {line:?}");
             assert!(parts.next().is_none(), "trailing tokens in {line:?}");
         }
+    }
+
+    #[test]
+    fn merge_sums_counters_and_weights_means() {
+        let a = Metrics::default();
+        a.requests.fetch_add(4, Ordering::Relaxed);
+        a.responses.fetch_add(4, Ordering::Relaxed);
+        a.batches.fetch_add(2, Ordering::Relaxed);
+        a.batched_items.fetch_add(4, Ordering::Relaxed);
+        a.latency.record_us(100);
+        a.latency.record_us(100);
+        a.latency.record_us(100);
+        a.latency.record_us(100);
+        a.add_energy_nj(2.0);
+        let b = Metrics::default();
+        b.requests.fetch_add(1, Ordering::Relaxed);
+        b.responses.fetch_add(1, Ordering::Relaxed);
+        b.errors.fetch_add(3, Ordering::Relaxed);
+        b.restarts.fetch_add(1, Ordering::Relaxed);
+        b.batches.fetch_add(1, Ordering::Relaxed);
+        b.batched_items.fetch_add(1, Ordering::Relaxed);
+        b.latency.record_us(600);
+        b.add_energy_nj(0.5);
+        let m = Snapshot::merge(&[a.snapshot(), b.snapshot()]);
+        assert_eq!(m.requests, 5);
+        assert_eq!(m.responses, 5);
+        assert_eq!(m.errors, 3);
+        assert_eq!(m.restarts, 1);
+        assert_eq!(m.batches, 3);
+        assert!((m.energy_nj - 2.5).abs() < 1e-9);
+        // Weighted latency mean: (4*100 + 1*600) / 5 = 200.
+        assert!((m.latency_mean_us - 200.0).abs() < 1e-6, "{}", m.latency_mean_us);
+        // Mean batch: 5 items over 3 batches.
+        assert!((m.mean_batch - 5.0 / 3.0).abs() < 1e-9);
+        // Worst-shard percentile bound.
+        assert!(m.latency_p99_us >= 600);
+        // Merging nothing is all-zero and finite.
+        let z = Snapshot::merge(&[]);
+        assert_eq!(z.requests, 0);
+        assert_eq!(z.latency_mean_us, 0.0);
+    }
+
+    #[test]
+    fn merge_reconstructs_pad_fraction() {
+        let a = Metrics::default();
+        a.batches.fetch_add(1, Ordering::Relaxed);
+        a.batched_items.fetch_add(10, Ordering::Relaxed);
+        a.padded_slots.fetch_add(6, Ordering::Relaxed);
+        let b = Metrics::default();
+        b.batches.fetch_add(1, Ordering::Relaxed);
+        b.batched_items.fetch_add(10, Ordering::Relaxed);
+        let m = Snapshot::merge(&[a.snapshot(), b.snapshot()]);
+        // 6 padded slots over 20 items total.
+        assert!((m.pad_fraction - 6.0 / 26.0).abs() < 1e-6, "{}", m.pad_fraction);
+    }
+
+    #[test]
+    fn prometheus_shard_block_labels_every_shard() {
+        let a = Metrics::default();
+        a.queue_depth.fetch_add(2, Ordering::Relaxed);
+        a.in_flight.fetch_add(3, Ordering::Relaxed);
+        a.responses.fetch_add(9, Ordering::Relaxed);
+        let b = Metrics::default();
+        b.restarts.fetch_add(1, Ordering::Relaxed);
+        let text = prometheus_shards(&[(a.snapshot(), true), (b.snapshot(), false)]);
+        for needle in [
+            "hec_shard_queue_depth{shard=\"0\"} 2",
+            "hec_shard_in_flight{shard=\"0\"} 3",
+            "hec_shard_served_total{shard=\"0\"} 9",
+            "hec_shard_restarts_total{shard=\"1\"} 1",
+            "hec_shard_healthy{shard=\"0\"} 1",
+            "hec_shard_healthy{shard=\"1\"} 0",
+            "# TYPE hec_shard_queue_depth gauge",
+            "# TYPE hec_shard_restarts_total counter",
+        ] {
+            assert!(text.contains(needle), "missing {needle:?} in:\n{text}");
+        }
+        // One HELP header per metric name, not per shard.
+        assert_eq!(text.matches("# HELP hec_shard_queue_depth").count(), 1);
+        // Every sample line is "name{shard=\"i\"} value" with a parseable
+        // float value.
+        for line in text.lines().filter(|l| !l.starts_with('#')) {
+            let (name, value) = line.split_once(' ').unwrap();
+            assert!(name.starts_with("hec_shard_"), "bad name in {line:?}");
+            assert!(name.contains("{shard=\""), "unlabelled sample {line:?}");
+            assert!(value.parse::<f64>().is_ok(), "bad value in {line:?}");
+        }
+    }
+
+    #[test]
+    fn restarts_render_in_aggregate_prometheus() {
+        let m = Metrics::default();
+        m.restarts.fetch_add(2, Ordering::Relaxed);
+        let text = m.snapshot().prometheus();
+        assert!(text.contains("hec_restarts_total 2"), "{text}");
     }
 
     #[test]

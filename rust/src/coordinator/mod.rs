@@ -9,15 +9,84 @@
 //! * [`server`] — the event loop: bounded request queue with backpressure, a
 //!   dedicated worker thread owning the engine state, async-friendly
 //!   handles speaking the v1 [`crate::api`] types;
+//! * [`shard`] — the scaled-out variant: N independent pipeline workers
+//!   (each with its own engine, ACAM array, RNG stream and bounded queue)
+//!   behind one routed submit surface with spill backpressure and
+//!   panic-restart shard health;
 //! * [`metrics`] — lock-free counters, gauges, latency histograms, energy
-//!   ledger, Prometheus rendering.
+//!   ledger, Prometheus rendering (aggregate + `shard`-labelled series).
+//!
+//! The [`ClassifySurface`] trait is the seam between front doors and
+//! deployments: the HTTP gateway (and any future transport) serves
+//! whichever surface it is handed — a single-pipeline [`Handle`] or a
+//! sharded [`shard::ShardHandle`] — without knowing which.
 
 pub mod batcher;
 pub mod metrics;
 pub mod oneshot;
 pub mod pipeline;
 pub mod server;
+pub mod shard;
 
 pub use metrics::{Metrics, Snapshot};
 pub use pipeline::{Evaluation, Pipeline};
 pub use server::{Caps, Handle, Server};
+pub use shard::{ShardHandle, ShardSet};
+
+use crate::api::{ApiError, ClassifyRequest, ClassifyResponse, ErrorCode};
+
+/// Health of one worker shard, as reported by `/healthz`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardStatus {
+    pub index: usize,
+    /// `false` while the shard is draining/restarting after a worker panic.
+    pub healthy: bool,
+    /// Panic-restarts of this shard's worker since startup.
+    pub restarts: u64,
+    pub queue_depth: u64,
+    pub in_flight: u64,
+}
+
+/// Deployment health: degraded while any shard is down.  Un-sharded
+/// deployments report an empty shard list and are never degraded (a dead
+/// single worker is `SERVER_STOPPED` at submit time, not a health state).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct HealthReport {
+    pub degraded: bool,
+    pub shards: Vec<ShardStatus>,
+}
+
+/// A submit surface the gateway (or any front door) can serve: caps for
+/// request validation, non-blocking submit into a bounded queue, health,
+/// and a Prometheus metrics payload.  Implemented by the single-pipeline
+/// [`Handle`] and the sharded [`shard::ShardHandle`].
+pub trait ClassifySurface {
+    /// What the deployment can serve (image shape, engine, backends).
+    fn caps(&self) -> &Caps;
+
+    /// Submit a request; await the returned receiver for the response.
+    #[allow(clippy::type_complexity)]
+    fn submit(
+        &self,
+        req: ClassifyRequest,
+    ) -> std::result::Result<
+        oneshot::Receiver<std::result::Result<ClassifyResponse, ApiError>>,
+        ApiError,
+    >;
+
+    /// Deployment health (degraded + per-shard statuses).
+    fn health(&self) -> HealthReport;
+
+    /// The `/metrics` payload (Prometheus text exposition format).
+    fn prometheus_text(&self) -> String;
+
+    /// Submit and block for the response.
+    fn submit_blocking(
+        &self,
+        req: ClassifyRequest,
+    ) -> std::result::Result<ClassifyResponse, ApiError> {
+        let rx = self.submit(req)?;
+        rx.recv()
+            .map_err(|_| ApiError::new(ErrorCode::Internal, "worker dropped response"))?
+    }
+}

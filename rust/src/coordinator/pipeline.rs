@@ -401,8 +401,22 @@ impl Pipeline {
 /// deployed engine (the artifact-free path): render a labelled workload,
 /// extract features, and hand them to [`TemplateStore::from_features`].
 fn bootstrap_store(engine: &mut dyn FrontEnd, meta: &Meta, seed: u64) -> Result<TemplateStore> {
+    bootstrap_store_with(engine, meta, seed, BOOTSTRAP_PER_CLASS)
+}
+
+/// [`bootstrap_store`] with an explicit samples-per-class budget — public
+/// so the ROADMAP's bootstrap sweep (`rust/tests/interp_backend.rs`) can
+/// grade template quality at 1/2/4/8 samples per class.  The synthetic
+/// dataset interleaves labels (`label(i) = i % NUM_CLASSES`), so the first
+/// `per_class * NUM_CLASSES` samples are exactly class-balanced.
+pub fn bootstrap_store_with(
+    engine: &mut dyn FrontEnd,
+    meta: &Meta,
+    seed: u64,
+    per_class: usize,
+) -> Result<TemplateStore> {
     let classes = crate::dataset::NUM_CLASSES;
-    let n = BOOTSTRAP_PER_CLASS * classes;
+    let n = per_class * classes;
     let ds = crate::dataset::SyntheticDataset::new(
         BOOTSTRAP_DATA_SEED,
         n,

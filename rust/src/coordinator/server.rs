@@ -10,7 +10,10 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use crate::api::{ApiError, ClassifyRequest, ClassifyResponse, ErrorCode, Timing};
+use crate::api::{
+    ApiError, ClassifyOptions, ClassifyRequest, ClassifyResponse, ClassifyResult, ErrorCode,
+    Timing,
+};
 use crate::config::{Backend, ServeConfig};
 use crate::error::Result;
 
@@ -20,17 +23,18 @@ use super::batcher;
 use super::metrics::Metrics;
 use super::pipeline::Pipeline;
 
-/// One in-flight request.
-struct Job {
-    req: ClassifyRequest,
-    enqueued: Instant,
-    resp: oneshot::Sender<std::result::Result<ClassifyResponse, ApiError>>,
+/// One in-flight request (shared with the sharded coordinator in
+/// [`super::shard`], which runs the same worker body per shard).
+pub(crate) struct Job {
+    pub(crate) req: ClassifyRequest,
+    pub(crate) enqueued: Instant,
+    pub(crate) resp: oneshot::Sender<std::result::Result<ClassifyResponse, ApiError>>,
 }
 
 /// What the deployed pipeline can do — shared with every [`Handle`] clone so
 /// submit-time validation (shape, backend availability) and the gateway's
 /// `/healthz` never have to reach the worker thread.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Caps {
     /// Pixels per image (`image_size^2`).
     pub image_len: usize,
@@ -52,6 +56,108 @@ impl Caps {
             Backend::FeatureCount | Backend::Similarity | Backend::Softmax => true,
         }
     }
+}
+
+/// Submit-time request validation against the deployment caps — shared by
+/// the single-pipeline [`Handle`] and the shard router so nothing invalid
+/// ever reaches a queue, whichever surface accepted the request.
+pub(crate) fn validate_request(
+    caps: &Caps,
+    req: &ClassifyRequest,
+) -> std::result::Result<(), ApiError> {
+    if req.image.len() != caps.image_len {
+        return Err(ApiError::new(
+            ErrorCode::InvalidShape,
+            format!(
+                "image has {} pixels, expected {}",
+                req.image.len(),
+                caps.image_len
+            ),
+        ));
+    }
+    if req.top_k == 0 {
+        return Err(ApiError::new(ErrorCode::InvalidArgument, "top_k must be >= 1"));
+    }
+    if let Some(b) = req.backend {
+        if !caps.backend_available(b) {
+            return Err(ApiError::new(
+                ErrorCode::BackendUnavailable,
+                format!(
+                    "backend '{}' is not provisioned in this deployment \
+                     (deployed backend: '{}')",
+                    b.name(),
+                    caps.backend.name()
+                ),
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// Pack a batch's images contiguously and capture per-job options — the
+/// front half of the worker body, shared with [`super::shard`].
+pub(crate) fn pack_batch(batch: &[Job], image_len: usize) -> (Vec<f32>, Vec<ClassifyOptions>) {
+    let mut buf = Vec::with_capacity(batch.len() * image_len);
+    let mut opts = Vec::with_capacity(batch.len());
+    for job in batch {
+        buf.extend_from_slice(&job.req.image);
+        opts.push(job.req.options());
+    }
+    (buf, opts)
+}
+
+/// Deliver one computed batch back to its waiters (or fail them all with
+/// the same error), maintaining the response/error counters, the energy
+/// ledger, and the `in_flight` gauge — the back half of the worker body,
+/// shared with [`super::shard`].
+pub(crate) fn deliver_batch(
+    batch: Vec<Job>,
+    results: std::result::Result<Vec<ClassifyResult>, ApiError>,
+    m: &Metrics,
+    engine: &'static str,
+    dispatched: Instant,
+    compute_us: u64,
+    shard: Option<usize>,
+) {
+    use std::sync::atomic::Ordering::Relaxed;
+    match results {
+        Ok(results) => {
+            for (job, res) in batch.into_iter().zip(results) {
+                let queue_us = dispatched.duration_since(job.enqueued).as_micros() as u64;
+                m.latency
+                    .record_us(job.enqueued.elapsed().as_micros() as u64);
+                m.add_energy_nj(res.energy.total_nj());
+                m.responses.fetch_add(1, Relaxed);
+                Metrics::gauge_dec(&m.in_flight, 1);
+                let _ = job.resp.send(Ok(ClassifyResponse {
+                    request_id: job.req.request_id,
+                    predictions: res.predictions,
+                    energy: res.energy,
+                    timing: Timing {
+                        queue_us,
+                        compute_us,
+                    },
+                    engine,
+                    backend: res.backend,
+                    features: res.features,
+                    shard,
+                }));
+            }
+        }
+        Err(api) => {
+            for job in batch {
+                fail_job(job, api.clone(), m);
+            }
+        }
+    }
+}
+
+/// Fail one job with a structured error, maintaining the error counter and
+/// the `in_flight` gauge.
+pub(crate) fn fail_job(job: Job, err: ApiError, m: &Metrics) {
+    m.errors.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    Metrics::gauge_dec(&m.in_flight, 1);
+    let _ = job.resp.send(Err(err));
 }
 
 /// Handle for submitting classification requests.
@@ -80,32 +186,7 @@ impl Handle {
         ApiError,
     > {
         use std::sync::atomic::Ordering::Relaxed;
-        if req.image.len() != self.caps.image_len {
-            return Err(ApiError::new(
-                ErrorCode::InvalidShape,
-                format!(
-                    "image has {} pixels, expected {}",
-                    req.image.len(),
-                    self.caps.image_len
-                ),
-            ));
-        }
-        if req.top_k == 0 {
-            return Err(ApiError::new(ErrorCode::InvalidArgument, "top_k must be >= 1"));
-        }
-        if let Some(b) = req.backend {
-            if !self.caps.backend_available(b) {
-                return Err(ApiError::new(
-                    ErrorCode::BackendUnavailable,
-                    format!(
-                        "backend '{}' is not provisioned in this deployment \
-                         (deployed backend: '{}')",
-                        b.name(),
-                        self.caps.backend.name()
-                    ),
-                ));
-            }
-        }
+        validate_request(&self.caps, &req)?;
         let (tx, rx) = oneshot::channel();
         self.metrics.requests.fetch_add(1, Relaxed);
         // Gauges go up BEFORE the job becomes visible to the worker: if they
@@ -208,54 +289,17 @@ impl Server {
                     m.batches.fetch_add(1, Relaxed);
                     m.batched_items.fetch_add(n as u64, Relaxed);
 
-                    // Pack images contiguously; capture per-job knobs.
-                    let mut buf = Vec::with_capacity(n * image_len);
-                    let mut opts = Vec::with_capacity(n);
-                    for job in &batch {
-                        buf.extend_from_slice(&job.req.image);
-                        opts.push(job.req.options());
-                    }
+                    let (buf, opts) = pack_batch(&batch, image_len);
                     let padded = pipeline.padding_for(n);
                     m.padded_slots.fetch_add(padded as u64, Relaxed);
 
                     let dispatched = Instant::now();
-                    let results = pipeline.classify_batch_with(&buf, n, &opts);
+                    let results = pipeline
+                        .classify_batch_with(&buf, n, &opts)
+                        .map_err(ApiError::from);
                     let compute_us = dispatched.elapsed().as_micros() as u64;
                     m.execute.record_us(compute_us);
-
-                    match results {
-                        Ok(results) => {
-                            for (job, res) in batch.into_iter().zip(results) {
-                                let queue_us =
-                                    dispatched.duration_since(job.enqueued).as_micros() as u64;
-                                m.latency
-                                    .record_us(job.enqueued.elapsed().as_micros() as u64);
-                                m.add_energy_nj(res.energy.total_nj());
-                                m.responses.fetch_add(1, Relaxed);
-                                Metrics::gauge_dec(&m.in_flight, 1);
-                                let _ = job.resp.send(Ok(ClassifyResponse {
-                                    request_id: job.req.request_id,
-                                    predictions: res.predictions,
-                                    energy: res.energy,
-                                    timing: Timing {
-                                        queue_us,
-                                        compute_us,
-                                    },
-                                    engine,
-                                    backend: res.backend,
-                                    features: res.features,
-                                }));
-                            }
-                        }
-                        Err(e) => {
-                            let api: ApiError = e.into();
-                            for job in batch {
-                                m.errors.fetch_add(1, Relaxed);
-                                Metrics::gauge_dec(&m.in_flight, 1);
-                                let _ = job.resp.send(Err(api.clone()));
-                            }
-                        }
-                    }
+                    deliver_batch(batch, results, &m, engine, dispatched, compute_us, None);
                 }
             })
             .expect("spawn serving worker");
@@ -282,5 +326,30 @@ impl Server {
         if let Some(w) = worker {
             let _ = w.join();
         }
+    }
+}
+
+impl super::ClassifySurface for Handle {
+    fn caps(&self) -> &Caps {
+        Handle::caps(self)
+    }
+
+    #[allow(clippy::type_complexity)]
+    fn submit(
+        &self,
+        req: ClassifyRequest,
+    ) -> std::result::Result<
+        oneshot::Receiver<std::result::Result<ClassifyResponse, ApiError>>,
+        ApiError,
+    > {
+        Handle::submit(self, req)
+    }
+
+    fn health(&self) -> super::HealthReport {
+        super::HealthReport::default()
+    }
+
+    fn prometheus_text(&self) -> String {
+        self.metrics.snapshot().prometheus()
     }
 }

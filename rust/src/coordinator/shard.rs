@@ -1,0 +1,758 @@
+//! Sharded serving: N independent [`Pipeline`] workers behind one routed
+//! submit surface.
+//!
+//! Each shard owns a full pipeline — its own front-end engine instance,
+//! ACAM array, RNG stream (seeded `acam.seed + shard_index`) and bounded
+//! request queue — so shards never contend on model state and a shard
+//! failure cannot poison its neighbours.  The [`ShardHandle`] is the
+//! [`super::ClassifySurface`] the gateway serves; it routes each request
+//! with a pluggable [`RoutePolicy`], spills a full queue to the next-best
+//! healthy shard before surfacing `QUEUE_FULL`, and keeps per-shard
+//! metrics for the `shard`-labelled Prometheus series.
+//!
+//! **Determinism is the design constraint.**  Routing depends only on the
+//! policy, the submit order (the round-robin ticket), and the observed
+//! queue occupancy — never on wall-clock time.  Because shard `i` runs the
+//! base config with `acam.seed + i`, an N-shard deployment's predictions
+//! and energy splits are bitwise identical to N independent single-pipeline
+//! runs fed the same routed request subsequences — the property
+//! `rust/tests/shard.rs` enforces for N in {1, 2, 4} on both interpreter
+//! engines.
+//!
+//! **Shard health.**  A worker panic (engine bug, poisoned state) is caught
+//! per batch: the shard is marked unhealthy *before* the failing requests
+//! are answered (`INTERNAL`), its queue is drained (every queued request
+//! fails fast with `INTERNAL` instead of hanging), the pipeline is rebuilt
+//! from config, and the shard rejoins the rotation — all without dropping
+//! the other shards.  `/healthz` reports `degraded` for exactly the
+//! unhealthy window.
+//!
+//! The [`Gate`] + [`ShardHooks`] types are the deterministic concurrency
+//! test harness: they let tests park a worker at a known point or inject a
+//! panic on a chosen request, replacing sleeps with explicit barriers.
+
+use std::panic::AssertUnwindSafe;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::api::{ApiError, ClassifyRequest, ClassifyResponse, ErrorCode};
+use crate::config::{RoutePolicy, ServeConfig};
+use crate::error::Result;
+
+use super::batcher;
+use super::metrics::{prometheus_shards, Metrics, Snapshot};
+use super::oneshot;
+use super::pipeline::Pipeline;
+use super::server::{deliver_batch, fail_job, pack_batch, validate_request, Caps, Job};
+use super::{ClassifySurface, HealthReport, ShardStatus};
+
+// ---------------------------------------------------------------------------
+// Deterministic test harness
+// ---------------------------------------------------------------------------
+
+/// A counting rendezvous for deterministic concurrency tests: workers
+/// `pass()` (announce arrival, then block until released) or
+/// `arrive_only()` (announce a checkpoint without blocking); the test
+/// thread `await_arrivals(n)` to synchronise and `release()` to let a
+/// parked worker continue.  No timeouts, no sleeps — every ordering the
+/// tests assert is forced, not raced.
+#[derive(Default)]
+pub struct Gate {
+    /// (arrivals, releases)
+    state: Mutex<(u64, u64)>,
+    cv: Condvar,
+}
+
+impl Gate {
+    pub fn new() -> Arc<Gate> {
+        Arc::new(Gate::default())
+    }
+
+    /// Announce arrival `n` (1-based) and block until `release` has been
+    /// called at least `n` times.
+    pub fn pass(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.0 += 1;
+        let my = st.0;
+        self.cv.notify_all();
+        while st.1 < my {
+            st = self.cv.wait(st).unwrap();
+        }
+    }
+
+    /// Announce a checkpoint without blocking.
+    pub fn arrive_only(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.0 += 1;
+        self.cv.notify_all();
+    }
+
+    /// Block until at least `n` arrivals have been announced.
+    pub fn await_arrivals(&self, n: u64) {
+        let mut st = self.state.lock().unwrap();
+        while st.0 < n {
+            st = self.cv.wait(st).unwrap();
+        }
+    }
+
+    /// Unblock the next parked `pass()` caller.
+    pub fn release(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.1 += 1;
+        self.cv.notify_all();
+    }
+
+    /// Arrivals announced so far.
+    pub fn arrivals(&self) -> u64 {
+        self.state.lock().unwrap().0
+    }
+}
+
+/// Test instrumentation threaded into every shard worker.  All hooks match
+/// on `request_id`, so production requests (which pick their own ids) are
+/// unaffected unless an operator deliberately wires a trigger; the default
+/// is fully inert.  These knobs are Rust-level only — they have no config
+/// file or CLI surface.
+#[derive(Default, Clone)]
+pub struct ShardHooks {
+    /// A request whose `request_id` equals this panics the worker mid-batch
+    /// (stands in for an engine bug) — exercising the unhealthy -> drain ->
+    /// restart path.
+    pub panic_on: Option<String>,
+    /// A request whose `request_id` equals this parks the worker on the
+    /// gate before computing, so tests can fill its queue deterministically.
+    pub hold: Option<(String, Arc<Gate>)>,
+    /// When set, a restarting worker `pass()`es this gate after draining
+    /// (letting tests observe the degraded window) and `arrive_only()`s
+    /// once healthy again (letting tests await recovery).
+    pub restart_gate: Option<Arc<Gate>>,
+}
+
+// ---------------------------------------------------------------------------
+// Routing
+// ---------------------------------------------------------------------------
+
+/// FNV-1a 64-bit — the sticky-routing hash (stable across platforms and
+/// releases; part of the routing contract, do not change).
+pub fn fnv1a(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in s.as_bytes() {
+        h ^= u64::from(*b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Pure routing plan: the candidate shard order for one request, best
+/// first.  Depends only on (policy, round-robin ticket, request id, queue
+/// depths, shard health) — no clocks, no randomness — so policies are unit
+/// testable without threads.
+///
+/// Unhealthy shards never appear.  With `spill`, the plan lists every
+/// healthy shard (primary first, then the spill order: cyclic successors
+/// for round-robin/hash, ascending depth for least-depth); without it, the
+/// plan is just the primary.  An empty plan means no healthy shard exists.
+pub fn plan_route(
+    policy: RoutePolicy,
+    ticket: u64,
+    request_id: Option<&str>,
+    queue_depths: &[u64],
+    healthy: &[bool],
+    spill: bool,
+) -> Vec<usize> {
+    debug_assert_eq!(queue_depths.len(), healthy.len());
+    let alive: Vec<usize> = (0..healthy.len()).filter(|&i| healthy[i]).collect();
+    if alive.is_empty() {
+        return Vec::new();
+    }
+    let mut order: Vec<usize> = match policy {
+        RoutePolicy::LeastQueueDepth => {
+            let mut sorted = alive;
+            // Stable ascending by depth; the stable sort makes the lowest
+            // index win ties.
+            sorted.sort_by_key(|&i| queue_depths[i]);
+            sorted
+        }
+        RoutePolicy::RoundRobin | RoutePolicy::Hash => {
+            let start = match (policy, request_id) {
+                (RoutePolicy::Hash, Some(id)) => (fnv1a(id) % alive.len() as u64) as usize,
+                // Round-robin, and hash's fallback for id-less requests.
+                _ => (ticket % alive.len() as u64) as usize,
+            };
+            (0..alive.len()).map(|k| alive[(start + k) % alive.len()]).collect()
+        }
+    };
+    if !spill {
+        order.truncate(1);
+    }
+    order
+}
+
+// ---------------------------------------------------------------------------
+// The shard set
+// ---------------------------------------------------------------------------
+
+struct ShardSlot {
+    tx: SyncSender<Job>,
+    metrics: Arc<Metrics>,
+    healthy: Arc<AtomicBool>,
+}
+
+struct Inner {
+    shards: Vec<ShardSlot>,
+    policy: RoutePolicy,
+    spill: bool,
+    /// Round-robin ticket counter (also the hash policy's fallback for
+    /// requests without an id).
+    rr: AtomicU64,
+    /// Submits rejected at the router itself (no healthy shard, or every
+    /// candidate queue full) — deployment-level load shedding that no
+    /// single shard saw, so it is counted here rather than skewing any
+    /// shard's `requests`/`errors` series.
+    rejected: AtomicU64,
+    caps: Caps,
+}
+
+/// Cloneable submit surface over the shard set — the sharded counterpart
+/// of [`super::Handle`], and a [`ClassifySurface`] the gateway can serve.
+#[derive(Clone)]
+pub struct ShardHandle {
+    inner: Arc<Inner>,
+}
+
+/// The running shard set (worker threads + routed handle).
+pub struct ShardSet {
+    pub handle: ShardHandle,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl ShardSet {
+    /// Start `cfg.resolve_shards()` worker pipelines.  Shard `i` runs the
+    /// base config with `acam.seed + i`, so a 1-shard set is bitwise
+    /// identical to a plain single-pipeline deployment.
+    pub fn start(cfg: &ServeConfig) -> Result<ShardSet> {
+        Self::start_with_hooks(cfg, ShardHooks::default())
+    }
+
+    /// [`ShardSet::start`] with test instrumentation (see [`ShardHooks`]).
+    pub fn start_with_hooks(cfg: &ServeConfig, hooks: ShardHooks) -> Result<ShardSet> {
+        cfg.validate()?;
+        let count = cfg.resolve_shards();
+        let max_wait = Duration::from_micros(cfg.batch.max_wait_us);
+        let mut slots = Vec::with_capacity(count);
+        let mut workers = Vec::with_capacity(count);
+        let mut caps: Option<Caps> = None;
+        for index in 0..count {
+            let mut scfg = cfg.clone();
+            scfg.acam.seed = cfg.acam.seed.wrapping_add(index as u64);
+            let (tx, rx) = sync_channel::<Job>(cfg.batch.queue_depth);
+            let metrics = Arc::new(Metrics::default());
+            let healthy = Arc::new(AtomicBool::new(true));
+            let (ready_tx, ready_rx) = oneshot::channel::<Result<Caps>>();
+            let m = Arc::clone(&metrics);
+            let h = Arc::clone(&healthy);
+            let shard_hooks = hooks.clone();
+            let max_batch = cfg.batch.max_batch;
+            let worker = std::thread::Builder::new()
+                .name(format!("hec-shard-{index}"))
+                .spawn(move || {
+                    shard_worker(index, scfg, rx, m, h, shard_hooks, max_batch, max_wait, ready_tx)
+                })
+                .expect("spawn shard worker");
+            let shard_caps = ready_rx.recv().map_err(|_| {
+                crate::error::Error::Request(format!("shard {index} died during startup"))
+            })??;
+            match &caps {
+                None => caps = Some(shard_caps),
+                Some(c) => {
+                    // All shards run the same config (modulo RNG seed), so
+                    // their caps must agree; a mismatch means the shards
+                    // would serve different deployments behind one surface.
+                    if *c != shard_caps {
+                        return Err(crate::error::Error::Config(format!(
+                            "shard {index} caps diverge from shard 0"
+                        )));
+                    }
+                }
+            }
+            slots.push(ShardSlot {
+                tx,
+                metrics,
+                healthy,
+            });
+            workers.push(worker);
+        }
+        Ok(ShardSet {
+            handle: ShardHandle {
+                inner: Arc::new(Inner {
+                    shards: slots,
+                    policy: cfg.shards.policy,
+                    spill: cfg.shards.spill,
+                    rr: AtomicU64::new(0),
+                    rejected: AtomicU64::new(0),
+                    caps: caps.expect("count >= 1"),
+                }),
+            },
+            workers,
+        })
+    }
+
+    /// Stop accepting requests and join the workers.  (Outstanding
+    /// [`ShardHandle`] clones keep the channels open; workers exit once the
+    /// last clone drops.)
+    pub fn shutdown(self) {
+        let ShardSet { handle, workers } = self;
+        drop(handle);
+        for w in workers {
+            let _ = w.join();
+        }
+    }
+}
+
+impl ShardHandle {
+    /// Number of worker shards.
+    pub fn shard_count(&self) -> usize {
+        self.inner.shards.len()
+    }
+
+    /// One shard's metrics (tests and dashboards).
+    pub fn shard_metrics(&self, shard: usize) -> &Arc<Metrics> {
+        &self.inner.shards[shard].metrics
+    }
+
+    /// Whether one shard is currently serving (not draining/restarting).
+    pub fn shard_healthy(&self, shard: usize) -> bool {
+        self.inner.shards[shard].healthy.load(Ordering::SeqCst)
+    }
+
+    /// Per-shard snapshots paired with health, in shard order.
+    pub fn shard_snapshots(&self) -> Vec<(Snapshot, bool)> {
+        self.inner
+            .shards
+            .iter()
+            .map(|s| (s.metrics.snapshot(), s.healthy.load(Ordering::SeqCst)))
+            .collect()
+    }
+
+    /// Aggregate deployment-wide snapshot (see [`Snapshot::merge`]),
+    /// including router-level rejections in `requests`/`errors` so the
+    /// aggregate keeps the single-pipeline handle's accounting semantics
+    /// (a shed submit still counts as a request and an error).
+    pub fn snapshot(&self) -> Snapshot {
+        let snaps: Vec<Snapshot> = self.shard_snapshots().into_iter().map(|(s, _)| s).collect();
+        let mut out = Snapshot::merge(&snaps);
+        let rejected = self.inner.rejected.load(Ordering::Relaxed);
+        out.requests += rejected;
+        out.errors += rejected;
+        out
+    }
+
+    /// Submits rejected at the router itself (no healthy shard / every
+    /// candidate queue full).
+    pub fn router_rejections(&self) -> u64 {
+        self.inner.rejected.load(Ordering::Relaxed)
+    }
+
+    /// Convenience for synchronous callers: top-1 classify on the
+    /// deployment backend, blocking (mirrors [`super::Handle`]).
+    pub fn classify_blocking(
+        &self,
+        image: Vec<f32>,
+    ) -> std::result::Result<ClassifyResponse, ApiError> {
+        ClassifySurface::submit_blocking(self, ClassifyRequest::new(image))
+    }
+}
+
+impl ClassifySurface for ShardHandle {
+    fn caps(&self) -> &Caps {
+        &self.inner.caps
+    }
+
+    #[allow(clippy::type_complexity)]
+    fn submit(
+        &self,
+        req: ClassifyRequest,
+    ) -> std::result::Result<
+        oneshot::Receiver<std::result::Result<ClassifyResponse, ApiError>>,
+        ApiError,
+    > {
+        let inner = &self.inner;
+        validate_request(&inner.caps, &req)?;
+        let depths: Vec<u64> = inner
+            .shards
+            .iter()
+            .map(|s| s.metrics.queue_depth.load(Ordering::SeqCst))
+            .collect();
+        let healthy: Vec<bool> = inner
+            .shards
+            .iter()
+            .map(|s| s.healthy.load(Ordering::SeqCst))
+            .collect();
+        // The ticket only advances when the plan consumes it, so sticky and
+        // least-depth traffic does not perturb the round-robin rotation.
+        let ticket = match (inner.policy, req.request_id.as_deref()) {
+            (RoutePolicy::RoundRobin, _) | (RoutePolicy::Hash, None) => {
+                inner.rr.fetch_add(1, Ordering::SeqCst)
+            }
+            _ => 0,
+        };
+        let plan = plan_route(
+            inner.policy,
+            ticket,
+            req.request_id.as_deref(),
+            &depths,
+            &healthy,
+            inner.spill,
+        );
+        if plan.is_empty() {
+            inner.rejected.fetch_add(1, Ordering::Relaxed);
+            return Err(ApiError::new(
+                ErrorCode::QueueFull,
+                "no healthy shard available (all draining/restarting), retry later",
+            ));
+        }
+        let (tx, rx) = oneshot::channel();
+        let mut job = Job {
+            req,
+            enqueued: Instant::now(),
+            resp: tx,
+        };
+        for &s in &plan {
+            let slot = &inner.shards[s];
+            // Gauges go up BEFORE the job becomes visible to the worker
+            // (same invariant as the single-pipeline handle: a late
+            // increment after a successful try_send could race the worker's
+            // decrement and drift the gauge upward permanently).
+            slot.metrics.queue_depth.fetch_add(1, Ordering::SeqCst);
+            slot.metrics.in_flight.fetch_add(1, Ordering::SeqCst);
+            match slot.tx.try_send(job) {
+                Ok(()) => {
+                    slot.metrics.requests.fetch_add(1, Ordering::Relaxed);
+                    return Ok(rx);
+                }
+                Err(e) => {
+                    Metrics::gauge_dec(&slot.metrics.queue_depth, 1);
+                    Metrics::gauge_dec(&slot.metrics.in_flight, 1);
+                    match e {
+                        // Spill: try the next-best shard in the plan.
+                        TrySendError::Full(j) | TrySendError::Disconnected(j) => job = j,
+                    }
+                }
+            }
+        }
+        inner.rejected.fetch_add(1, Ordering::Relaxed);
+        Err(ApiError::new(
+            ErrorCode::QueueFull,
+            if inner.spill {
+                "queue full on every healthy shard (backpressure)"
+            } else {
+                "queue full (backpressure)"
+            },
+        ))
+    }
+
+    fn health(&self) -> HealthReport {
+        let shards: Vec<ShardStatus> = self
+            .inner
+            .shards
+            .iter()
+            .enumerate()
+            .map(|(index, s)| {
+                let snap = s.metrics.snapshot();
+                ShardStatus {
+                    index,
+                    healthy: s.healthy.load(Ordering::SeqCst),
+                    restarts: snap.restarts,
+                    queue_depth: snap.queue_depth,
+                    in_flight: snap.in_flight,
+                }
+            })
+            .collect();
+        HealthReport {
+            degraded: shards.iter().any(|s| !s.healthy),
+            shards,
+        }
+    }
+
+    fn prometheus_text(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = self.snapshot().prometheus();
+        let name = "hec_router_rejections_total";
+        let _ = writeln!(
+            out,
+            "# HELP {name} Submits rejected at the shard router (no healthy shard / all queues full)"
+        );
+        let _ = writeln!(out, "# TYPE {name} counter");
+        let _ = writeln!(out, "{name} {}", self.router_rejections());
+        out.push_str(&prometheus_shards(&self.shard_snapshots()));
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The shard worker
+// ---------------------------------------------------------------------------
+
+/// One shard's serving loop: the single-pipeline worker body plus the
+/// panic boundary.  Compute runs inside `catch_unwind`; the job batch stays
+/// outside, so a panic fails every affected request with an explicit
+/// `INTERNAL` error (never a hung waiter) and the gauges stay exact.
+#[allow(clippy::too_many_arguments)]
+fn shard_worker(
+    index: usize,
+    cfg: ServeConfig,
+    rx: Receiver<Job>,
+    m: Arc<Metrics>,
+    healthy: Arc<AtomicBool>,
+    hooks: ShardHooks,
+    max_batch: usize,
+    max_wait: Duration,
+    ready_tx: oneshot::Sender<Result<Caps>>,
+) {
+    use std::sync::atomic::Ordering::Relaxed;
+    let mut pipeline = match Pipeline::new(&cfg) {
+        Ok(p) => {
+            let caps = Caps {
+                image_len: p.image_len(),
+                num_classes: p.store.num_classes,
+                engine: p.engine_name(),
+                backend: p.backend(),
+                acam_available: p.backend_available(crate::config::Backend::AcamSim),
+            };
+            let _ = ready_tx.send(Ok(caps));
+            p
+        }
+        Err(e) => {
+            let _ = ready_tx.send(Err(e));
+            return;
+        }
+    };
+    let engine = pipeline.engine_name();
+    let image_len = pipeline.image_len();
+    while let Some(batch) = batcher::assemble(&rx, max_batch, max_wait) {
+        let n = batch.len();
+        Metrics::gauge_dec(&m.queue_depth, n as u64);
+        m.batches.fetch_add(1, Relaxed);
+        m.batched_items.fetch_add(n as u64, Relaxed);
+
+        let (buf, opts) = pack_batch(&batch, image_len);
+        let padded = pipeline.padding_for(n);
+        m.padded_slots.fetch_add(padded as u64, Relaxed);
+
+        if let Some((id, gate)) = &hooks.hold {
+            if batch
+                .iter()
+                .any(|j| j.req.request_id.as_deref() == Some(id.as_str()))
+            {
+                gate.pass();
+            }
+        }
+        let inject = hooks
+            .panic_on
+            .as_deref()
+            .is_some_and(|p| batch.iter().any(|j| j.req.request_id.as_deref() == Some(p)));
+
+        let dispatched = Instant::now();
+        let result = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            if inject {
+                panic!("injected shard panic (ShardHooks::panic_on)");
+            }
+            pipeline.classify_batch_with(&buf, n, &opts)
+        }));
+        let compute_us = dispatched.elapsed().as_micros() as u64;
+        m.execute.record_us(compute_us);
+
+        match result {
+            Ok(res) => deliver_batch(
+                batch,
+                res.map_err(ApiError::from),
+                &m,
+                engine,
+                dispatched,
+                compute_us,
+                Some(index),
+            ),
+            Err(_panic) => {
+                // Unhealthy BEFORE the failures are answered: a caller that
+                // observes INTERNAL is guaranteed to find /healthz already
+                // degraded (the oneshot send orders the flag store).
+                healthy.store(false, Ordering::SeqCst);
+                m.restarts.fetch_add(1, Relaxed);
+                let err = ApiError::new(
+                    ErrorCode::Internal,
+                    format!("shard {index} worker panicked; request failed during restart"),
+                );
+                for job in batch {
+                    fail_job(job, err.clone(), &m);
+                }
+                // Drain: fail everything already queued (the router stopped
+                // routing here the moment `healthy` flipped, but jobs
+                // accepted before the flip are still in the channel) so the
+                // gauges return to zero instead of leaking.
+                while let Ok(job) = rx.try_recv() {
+                    Metrics::gauge_dec(&m.queue_depth, 1);
+                    fail_job(job, err.clone(), &m);
+                }
+                if let Some(g) = &hooks.restart_gate {
+                    g.pass();
+                }
+                // Restart: rebuild the pipeline from config.  A rebuild
+                // failure (or panic) leaves the shard permanently unhealthy
+                // and closes its queue — the other shards keep serving.
+                match std::panic::catch_unwind(AssertUnwindSafe(|| Pipeline::new(&cfg))) {
+                    Ok(Ok(p)) => {
+                        pipeline = p;
+                        healthy.store(true, Ordering::SeqCst);
+                        if let Some(g) = &hooks.restart_gate {
+                            g.arrive_only();
+                        }
+                    }
+                    _ => {
+                        // Terminal exit: best-effort final drain so a job
+                        // that raced past the first drain (submitted before
+                        // the router observed `healthy = false`) fails with
+                        // INTERNAL and its gauges are released rather than
+                        // leaking on a permanently-dead shard.  Anything
+                        // arriving after this sees the dropped receiver at
+                        // try_send time, and the submit path rolls its
+                        // gauge increments back on Disconnected.
+                        while let Ok(job) = rx.try_recv() {
+                            Metrics::gauge_dec(&m.queue_depth, 1);
+                            fail_job(job, err.clone(), &m);
+                        }
+                        return;
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const ALL: [bool; 3] = [true, true, true];
+
+    #[test]
+    fn fnv1a_is_the_reference_function() {
+        // Published FNV-1a 64 test vectors.
+        assert_eq!(fnv1a(""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a("a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a("foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn round_robin_cycles_in_ticket_order() {
+        let picks: Vec<usize> = (0..6)
+            .map(|t| plan_route(RoutePolicy::RoundRobin, t, None, &[0, 0, 0], &ALL, false)[0])
+            .collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn round_robin_skips_unhealthy_shards() {
+        let healthy = [true, false, true];
+        let picks: Vec<usize> = (0..4)
+            .map(|t| plan_route(RoutePolicy::RoundRobin, t, None, &[0, 0, 0], &healthy, false)[0])
+            .collect();
+        assert_eq!(picks, vec![0, 2, 0, 2]);
+    }
+
+    #[test]
+    fn least_depth_picks_minimum_and_lowest_index_ties() {
+        assert_eq!(
+            plan_route(RoutePolicy::LeastQueueDepth, 0, None, &[2, 1, 1], &ALL, false),
+            vec![1],
+            "lowest index wins the tie"
+        );
+        assert_eq!(
+            plan_route(RoutePolicy::LeastQueueDepth, 0, None, &[3, 2, 1], &ALL, true),
+            vec![2, 1, 0],
+            "spill order is ascending depth"
+        );
+        // The ticket never affects least-depth.
+        for t in 0..5 {
+            assert_eq!(
+                plan_route(RoutePolicy::LeastQueueDepth, t, None, &[5, 0, 9], &ALL, false),
+                vec![1]
+            );
+        }
+    }
+
+    #[test]
+    fn hash_routing_is_sticky_and_depth_blind() {
+        let id = Some("tenant-42");
+        let first = plan_route(RoutePolicy::Hash, 0, id, &[0, 0, 0], &ALL, false);
+        for (ticket, depths) in [(1u64, [9u64, 9, 9]), (7, [0, 5, 0]), (1000, [1, 2, 3])] {
+            assert_eq!(
+                plan_route(RoutePolicy::Hash, ticket, id, &depths, &ALL, false),
+                first,
+                "same id must stick to the same shard regardless of ticket/depths"
+            );
+        }
+        // Different ids spread (not all onto one shard).
+        let picks: std::collections::BTreeSet<usize> = (0..32)
+            .map(|i| {
+                plan_route(
+                    RoutePolicy::Hash,
+                    0,
+                    Some(&format!("req-{i}")),
+                    &[0, 0, 0],
+                    &ALL,
+                    false,
+                )[0]
+            })
+            .collect();
+        assert!(picks.len() > 1, "32 distinct ids all hashed to one shard");
+        // Id-less requests fall back to the round-robin ticket.
+        assert_eq!(
+            plan_route(RoutePolicy::Hash, 4, None, &[0, 0, 0], &ALL, false),
+            vec![1]
+        );
+    }
+
+    #[test]
+    fn spill_order_is_cyclic_from_primary() {
+        assert_eq!(
+            plan_route(RoutePolicy::RoundRobin, 1, None, &[0, 0, 0], &ALL, true),
+            vec![1, 2, 0]
+        );
+        let plan = plan_route(RoutePolicy::Hash, 0, Some("x"), &[0, 0, 0], &ALL, true);
+        assert_eq!(plan.len(), 3);
+        let p = plan[0];
+        assert_eq!(plan, vec![p, (p + 1) % 3, (p + 2) % 3]);
+    }
+
+    #[test]
+    fn no_healthy_shard_returns_empty_plan() {
+        assert!(plan_route(
+            RoutePolicy::RoundRobin,
+            0,
+            None,
+            &[0, 0],
+            &[false, false],
+            true
+        )
+        .is_empty());
+    }
+
+    #[test]
+    fn gate_orders_arrivals_and_releases() {
+        let gate = Gate::new();
+        let g = Arc::clone(&gate);
+        let worker = std::thread::spawn(move || {
+            g.pass(); // blocks until released
+            g.arrive_only();
+            "done"
+        });
+        gate.await_arrivals(1);
+        assert_eq!(gate.arrivals(), 1);
+        gate.release();
+        gate.await_arrivals(2);
+        assert_eq!(worker.join().unwrap(), "done");
+    }
+}

@@ -36,7 +36,7 @@ use std::time::Duration;
 
 use crate::api::{ApiError, ClassifyRequest, ClassifyResponse, ErrorCode, API_VERSION};
 use crate::config::HttpConfig;
-use crate::coordinator::Handle;
+use crate::coordinator::ClassifySurface;
 use crate::error::Result;
 use crate::jsonlite::{self, Value};
 
@@ -56,7 +56,15 @@ pub struct Gateway {
 impl Gateway {
     /// Bind `cfg.addr` and start accepting.  Port 0 binds an OS-assigned
     /// free port; [`Gateway::local_addr`] reports the resolved address.
-    pub fn start(handle: Handle, cfg: &HttpConfig) -> Result<Gateway> {
+    ///
+    /// The gateway serves any [`ClassifySurface`] — a single-pipeline
+    /// [`crate::coordinator::Handle`] or a sharded
+    /// [`crate::coordinator::ShardHandle`] — the same way: the surface
+    /// owns validation, routing and backpressure; the gateway owns HTTP.
+    pub fn start<S>(handle: S, cfg: &HttpConfig) -> Result<Gateway>
+    where
+        S: ClassifySurface + Clone + Send + 'static,
+    {
         let addr = cfg.addr.as_deref().unwrap_or("127.0.0.1:0");
         let listener = TcpListener::bind(addr)?;
         let local_addr = listener.local_addr()?;
@@ -136,7 +144,7 @@ impl Gateway {
 
 /// Serve one keep-alive connection until EOF / `Connection: close` /
 /// protocol error.
-fn serve_connection(stream: TcpStream, handle: &Handle) {
+fn serve_connection<S: ClassifySurface>(stream: TcpStream, handle: &S) {
     let _ = stream.set_read_timeout(Some(READ_TIMEOUT));
     let _ = stream.set_nodelay(true);
     let Ok(read_half) = stream.try_clone() else {
@@ -173,13 +181,18 @@ fn serve_connection(stream: TcpStream, handle: &Handle) {
 
 /// Route one request and write the response; returns false when the
 /// connection should drop (write failure).
-fn respond<W: Write>(out: &mut W, req: &Request, handle: &Handle, close: bool) -> bool {
+fn respond<W: Write, S: ClassifySurface>(
+    out: &mut W,
+    req: &Request,
+    handle: &S,
+    close: bool,
+) -> bool {
     let (status, content_type, body) = route(req, handle);
     write_response(out, status, content_type, body.as_bytes(), close).is_ok()
 }
 
 /// The routing table: returns (status, content type, body).
-fn route(req: &Request, handle: &Handle) -> (u16, &'static str, String) {
+fn route<S: ClassifySurface>(req: &Request, handle: &S) -> (u16, &'static str, String) {
     match (req.method.as_str(), req.path.as_str()) {
         ("POST", "/v1/classify") => match classify_one(&req.body, handle) {
             Ok(resp) => (200, "application/json", resp.to_value().to_json()),
@@ -193,7 +206,7 @@ fn route(req: &Request, handle: &Handle) -> (u16, &'static str, String) {
         ("GET", "/metrics") => (
             200,
             "text/plain; version=0.0.4",
-            handle.metrics.snapshot().prometheus(),
+            handle.prometheus_text(),
         ),
         (_, "/v1/classify") | (_, "/v1/classify/batch") | (_, "/healthz") | (_, "/metrics") => {
             let e = ApiError::new(
@@ -222,9 +235,9 @@ fn parse_body(body: &[u8]) -> std::result::Result<Value, ApiError> {
 /// `POST /v1/classify`: decode, submit through the bounded queue, block for
 /// the response (the connection thread is the waiter, mirroring an
 /// in-process `submit_blocking` caller).
-fn classify_one(
+fn classify_one<S: ClassifySurface>(
     body: &[u8],
-    handle: &Handle,
+    handle: &S,
 ) -> std::result::Result<ClassifyResponse, ApiError> {
     let req = ClassifyRequest::from_value(&parse_body(body)?)?;
     handle.submit_blocking(req)
@@ -234,7 +247,10 @@ fn classify_one(
 /// response, so one HTTP batch becomes co-batchable work for the dynamic
 /// batcher instead of a serial request chain.  Item failures (shape, queue
 /// full) become per-item error envelopes; the call itself is 200.
-fn classify_batch(body: &[u8], handle: &Handle) -> std::result::Result<Value, ApiError> {
+fn classify_batch<S: ClassifySurface>(
+    body: &[u8],
+    handle: &S,
+) -> std::result::Result<Value, ApiError> {
     let doc = parse_body(body)?;
     let items = doc
         .get("requests")
@@ -268,11 +284,18 @@ fn classify_batch(body: &[u8], handle: &Handle) -> std::result::Result<Value, Ap
 }
 
 /// `GET /healthz`: liveness + the deployment facts a client needs to build
-/// valid requests.
-fn healthz(handle: &Handle) -> Value {
+/// valid requests.  Sharded deployments additionally report per-shard
+/// health, and `status` becomes `"degraded"` while any shard is down —
+/// the deployment still serves (healthy shards absorb the traffic), but an
+/// operator's probe sees the reduced capacity.
+fn healthz<S: ClassifySurface>(handle: &S) -> Value {
     let caps = handle.caps();
-    Value::Obj(BTreeMap::from([
-        ("status".to_string(), Value::Str("ok".to_string())),
+    let health = handle.health();
+    let mut m = BTreeMap::from([
+        (
+            "status".to_string(),
+            Value::Str(if health.degraded { "degraded" } else { "ok" }.to_string()),
+        ),
         ("api".to_string(), Value::Str(API_VERSION.to_string())),
         (
             "engine".to_string(),
@@ -294,5 +317,29 @@ fn healthz(handle: &Handle) -> Value {
             "acam_available".to_string(),
             Value::Bool(caps.acam_available),
         ),
-    ]))
+    ]);
+    if !health.shards.is_empty() {
+        m.insert(
+            "shards".to_string(),
+            Value::Arr(
+                health
+                    .shards
+                    .iter()
+                    .map(|s| {
+                        Value::Obj(BTreeMap::from([
+                            ("index".to_string(), Value::Num(s.index as f64)),
+                            ("healthy".to_string(), Value::Bool(s.healthy)),
+                            ("restarts".to_string(), Value::Num(s.restarts as f64)),
+                            (
+                                "queue_depth".to_string(),
+                                Value::Num(s.queue_depth as f64),
+                            ),
+                            ("in_flight".to_string(), Value::Num(s.in_flight as f64)),
+                        ]))
+                    })
+                    .collect(),
+            ),
+        );
+    }
+    Value::Obj(m)
 }

@@ -23,7 +23,10 @@
 //!   requests/responses with ranked predictions, per-stage energy, timings,
 //!   and stable machine-readable error codes, plus the JSON wire form.
 //! * [`coordinator`] owns the event loop: request router, dynamic batcher,
-//!   back-end dispatch, metrics.
+//!   back-end dispatch, metrics — and the sharded scale-out
+//!   ([`coordinator::shard`]): N independent worker pipelines behind one
+//!   routed submit surface with spill backpressure and panic-restart
+//!   shard health.
 //! * [`gateway`] is the dependency-free HTTP/1.1 + JSON front door
 //!   (`POST /v1/classify`, `/v1/classify/batch`, `GET /healthz`,
 //!   `GET /metrics`) funneling into the same bounded queue as in-process

@@ -15,7 +15,16 @@
 //!
 //! Global flags: `--artifacts DIR` `--engine interp|interp-fast|pjrt`
 //! `--backend acam|fc|sim|softmax` `--templates K` `--threads N`
-//! `--variability LEVEL` `--config serve.json`.
+//! `--variability LEVEL` `--config serve.json` `--shards N`
+//! `--shard-policy round_robin|least_queue_depth|hash`.
+//!
+//! `serve` runs the sharded coordinator (`hec::coordinator::shard`): N
+//! independent worker pipelines behind one routed submit surface.  The
+//! default (`--shards 1`, or `HEC_SHARDS` unset) is a single-pipeline
+//! deployment whose *predictions and energy splits* are bitwise identical
+//! to the pre-sharding behaviour; on the wire it additionally carries the
+//! additive v1 fields (`shard: 0` in responses, a `shards` array in
+//! `/healthz`, `hec_shard_*` series in `/metrics`).
 //!
 //! Every subcommand works without an artifacts directory: the default
 //! interp engine then serves from synthetic weights and bootstrapped
@@ -24,7 +33,7 @@
 use std::collections::HashMap;
 
 use hec::config::{Backend, Engine, ServeConfig};
-use hec::coordinator::{Pipeline, Server};
+use hec::coordinator::{ClassifySurface, Pipeline, ShardSet};
 use hec::dataset::{SyntheticDataset, CLASS_NAMES};
 use hec::energy::{EnergyModel, Scale};
 use hec::runtime::Meta;
@@ -33,6 +42,7 @@ use hec::Error;
 const USAGE: &str = "usage: hec [--artifacts DIR] [--engine interp|interp-fast|pjrt] \
 [--backend acam|fc|sim|softmax] [--templates K] [--threads N] [--variability L] \
 [--frontend fast|pallas] [--config FILE] \
+[--shards N] [--shard-policy round_robin|least_queue_depth|hash] \
 <serve|classify|eval|energy|acam-sim|info> [--requests N] [--concurrency N] \
 [--http ADDR] [--max-connections N] \
 [--count N] [--samples N] [--batch N] [--levels 0,1,2]";
@@ -115,6 +125,10 @@ fn serve_config(args: &Args) -> hec::Result<ServeConfig> {
     cfg.acam.variability_level = args
         .get("variability", cfg.acam.variability_level)
         .map_err(Error::Config)?;
+    cfg.shards.count = args.get("shards", cfg.shards.count).map_err(Error::Config)?;
+    if let Some(p) = args.flags.get("shard-policy") {
+        cfg.shards.policy = p.parse::<hec::config::RoutePolicy>()?;
+    }
     if let Some(addr) = args.flags.get("http") {
         cfg.http.addr = Some(addr.clone());
     }
@@ -276,21 +290,27 @@ fn main() -> hec::Result<()> {
         "serve" => {
             let requests: usize = args.get("requests", 2000).map_err(Error::Config)?;
             let concurrency: usize = args.get("concurrency", 64).map_err(Error::Config)?;
+            let shards = cfg.resolve_shards();
+            let set = ShardSet::start(&cfg)?;
+            let handle = set.handle.clone();
             if let Some(addr) = cfg.resolve_http_addr() {
                 // Gateway mode: expose the v1 HTTP/JSON API and block until
                 // killed (the synthetic driver below is the no-HTTP mode).
                 let mut http = cfg.http.clone();
                 http.addr = Some(addr);
-                let server = Server::start(cfg.clone())?;
-                let gateway = hec::gateway::Gateway::start(server.handle.clone(), &http)?;
-                let caps = server.handle.caps().clone();
+                let gateway = hec::gateway::Gateway::start(handle.clone(), &http)?;
+                let caps = handle.caps().clone();
                 println!(
-                    "hec {} gateway listening on {} (engine {}, backend {}, image_len {})",
+                    "hec {} gateway listening on {} (engine {}, backend {}, image_len {}, \
+                     shards {} [{}{}])",
                     hec::api::API_VERSION,
                     gateway.local_addr(),
                     caps.engine,
                     caps.backend.name(),
                     caps.image_len,
+                    shards,
+                    cfg.shards.policy.name(),
+                    if cfg.shards.spill { ", spill" } else { "" },
                 );
                 println!(
                     "routes: POST /v1/classify  POST /v1/classify/batch  GET /healthz  GET /metrics"
@@ -299,12 +319,10 @@ fn main() -> hec::Result<()> {
                 let _ = std::io::stdout().flush();
                 loop {
                     std::thread::sleep(std::time::Duration::from_secs(60));
-                    println!("{}", server.handle.metrics.snapshot());
+                    println!("{}", handle.snapshot());
                     let _ = std::io::stdout().flush();
                 }
             }
-            let server = Server::start(cfg.clone())?;
-            let handle = server.handle.clone();
             let meta = Meta::load_or_synthetic(&cfg.artifacts_dir)?;
             let (images, _) = test_workload(&meta, 256, 77);
             let img_len = meta.artifacts.image_size * meta.artifacts.image_size;
@@ -331,11 +349,15 @@ fn main() -> hec::Result<()> {
                 }
             }
             let secs = t0.elapsed().as_secs_f64();
-            println!("=== serving metrics ({requests} requests, concurrency {concurrency}) ===");
-            println!("{}", handle.metrics.snapshot());
+            println!(
+                "=== serving metrics ({requests} requests, concurrency {concurrency}, \
+                 {shards} shard{}) ===",
+                if shards == 1 { "" } else { "s" }
+            );
+            println!("{}", handle.snapshot());
             println!("throughput = {:.0} req/s", requests as f64 / secs);
             drop(handle);
-            server.shutdown();
+            set.shutdown();
         }
         other => {
             eprintln!("unknown subcommand: {other}\n{USAGE}");

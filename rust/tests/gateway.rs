@@ -13,7 +13,8 @@ use std::net::{SocketAddr, TcpStream};
 
 use hec::api::{ApiError, ClassifyRequest, ClassifyResponse, ErrorCode};
 use hec::config::{Backend, HttpConfig, ServeConfig};
-use hec::coordinator::{Pipeline, Server};
+use hec::coordinator::shard::{Gate, ShardHooks};
+use hec::coordinator::{ClassifySurface, Pipeline, Server, ShardSet};
 use hec::dataset::SyntheticDataset;
 use hec::energy::EnergyModel;
 use hec::gateway::Gateway;
@@ -399,6 +400,179 @@ fn keep_alive_serves_sequential_requests_on_one_connection() {
     assert_eq!(status, 200);
     gateway.shutdown();
     server.shutdown();
+}
+
+/// Sharded parity over HTTP (the PR 4 gate): 4 concurrent clients against
+/// a 3-shard gateway produce exactly the same response *set* as the
+/// in-process single-shard run — same (sample -> class) assignments and a
+/// shard-invariant energy split — and every response names a valid shard.
+///
+/// (With the default single-template store, bootstrapped templates are
+/// seed-independent — k = 1 is the majority-vote template — so every
+/// shard's answers are identical and routing nondeterminism under
+/// concurrency cannot leak into the response set.)
+#[test]
+fn sharded_gateway_parity_with_single_shard_under_concurrency() {
+    let mut c = cfg(Backend::FeatureCount);
+    c.shards.count = 3;
+    let set = ShardSet::start(&c).unwrap();
+    let http = HttpConfig {
+        addr: Some("127.0.0.1:0".to_string()),
+        max_connections: 32,
+    };
+    let gateway = Gateway::start(set.handle.clone(), &http).unwrap();
+
+    // Single-shard in-process ground truth on the same fixed workload.
+    let mut p = Pipeline::new(&cfg(Backend::FeatureCount)).unwrap();
+    let n = 24;
+    let (images, _) = workload(&p, n, 1_000_003);
+    let img_len = p.image_len();
+    let expected: Vec<(usize, f64, f64)> = p
+        .classify_batch(&images, n)
+        .unwrap()
+        .into_iter()
+        .map(|r| (r.top1().class, r.energy.front_end_nj, r.energy.back_end_nj))
+        .collect();
+
+    let addr = gateway.local_addr();
+    let clients = 4;
+    let per_client = n / clients;
+    let images = std::sync::Arc::new(images);
+    let joins: Vec<_> = (0..clients)
+        .map(|cl| {
+            let images = std::sync::Arc::clone(&images);
+            std::thread::spawn(move || {
+                let mut got = Vec::new();
+                for r in 0..per_client {
+                    let i = cl * per_client + r;
+                    let req =
+                        ClassifyRequest::new(images[i * img_len..(i + 1) * img_len].to_vec());
+                    let body = req.to_value().to_json();
+                    let (status, text) = http(addr, "POST", "/v1/classify", Some(&body));
+                    assert_eq!(status, 200, "client {cl} req {r}: {text}");
+                    let resp =
+                        ClassifyResponse::from_value(&jsonlite::parse(&text).unwrap()).unwrap();
+                    got.push((i, resp));
+                }
+                got
+            })
+        })
+        .collect();
+
+    let mut served_shards = std::collections::BTreeSet::new();
+    for j in joins {
+        for (i, resp) in j.join().unwrap() {
+            let shard = resp.shard.expect("sharded responses carry a shard index");
+            assert!(shard < 3, "sample {i}: shard {shard} out of range");
+            served_shards.insert(shard);
+            assert_eq!(
+                resp.top1().class,
+                expected[i].0,
+                "sample {i} diverged from the single-shard run (served by shard {shard})"
+            );
+            // The energy split is shard-invariant: bitwise equal to the
+            // single-shard figures, whichever shard served the sample.
+            assert_eq!(resp.energy.front_end_nj, expected[i].1, "sample {i}");
+            assert_eq!(resp.energy.back_end_nj, expected[i].2, "sample {i}");
+        }
+    }
+    assert!(
+        served_shards.len() > 1,
+        "24 requests from 4 clients all landed on one shard: {served_shards:?}"
+    );
+
+    // /healthz names every shard healthy; /metrics carries the labelled
+    // per-shard series over HTTP.
+    let (status, body) = http(addr, "GET", "/healthz", None);
+    assert_eq!(status, 200);
+    let v = jsonlite::parse(&body).unwrap();
+    assert_eq!(v.get("status").unwrap().as_str(), Some("ok"));
+    let shards = v.get("shards").unwrap().as_array().unwrap();
+    assert_eq!(shards.len(), 3);
+    for s in shards {
+        assert_eq!(s.get("healthy").unwrap().as_bool(), Some(true));
+    }
+    let (status, text) = http(addr, "GET", "/metrics", None);
+    assert_eq!(status, 200);
+    for needle in [
+        "hec_shard_queue_depth{shard=\"2\"}",
+        "hec_shard_in_flight{shard=\"0\"}",
+        "hec_shard_restarts_total{shard=\"1\"} 0",
+        "hec_requests_total 24",
+    ] {
+        assert!(text.contains(needle), "missing {needle:?} in:\n{text}");
+    }
+    gateway.shutdown();
+    set.shutdown();
+}
+
+/// `/healthz` over HTTP flips to `degraded` for exactly the window a
+/// shard is down, then recovers — gated on the restart Gate, not timed.
+#[test]
+fn healthz_reports_degraded_while_a_shard_restarts() {
+    let gate = Gate::new();
+    let mut c = cfg(Backend::FeatureCount);
+    c.shards.count = 2;
+    let set = ShardSet::start_with_hooks(
+        &c,
+        ShardHooks {
+            panic_on: Some("boom".into()),
+            restart_gate: Some(std::sync::Arc::clone(&gate)),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let http_cfg = HttpConfig {
+        addr: Some("127.0.0.1:0".to_string()),
+        max_connections: 8,
+    };
+    let gateway = Gateway::start(set.handle.clone(), &http_cfg).unwrap();
+    let addr = gateway.local_addr();
+    let img_len = set.handle.caps().image_len;
+
+    // Trip the panic over HTTP: the request fails with the documented
+    // INTERNAL envelope (HTTP 500), never a hang.
+    let mut req = ClassifyRequest::new(vec![0.0; img_len]);
+    req.request_id = Some("boom".into());
+    let (status, text) = http(addr, "POST", "/v1/classify", Some(&req.to_value().to_json()));
+    assert_eq!(status, 500, "{text}");
+    let err = ApiError::from_value(&jsonlite::parse(&text).unwrap()).unwrap();
+    assert_eq!(err.code, ErrorCode::Internal);
+
+    // The restart is parked on the gate: /healthz must say degraded and
+    // name the down shard.
+    gate.await_arrivals(1);
+    let (status, body) = http(addr, "GET", "/healthz", None);
+    assert_eq!(status, 200);
+    let v = jsonlite::parse(&body).unwrap();
+    assert_eq!(v.get("status").unwrap().as_str(), Some("degraded"));
+    let down: Vec<bool> = v
+        .get("shards")
+        .unwrap()
+        .as_array()
+        .unwrap()
+        .iter()
+        .map(|s| s.get("healthy").unwrap().as_bool().unwrap())
+        .collect();
+    assert!(down.contains(&false), "one shard must report unhealthy");
+    assert!(down.contains(&true), "the other shard keeps serving");
+    // The healthy shard still serves requests while degraded.
+    let body = ClassifyRequest::new(vec![0.0; img_len]).to_value().to_json();
+    let (status, _) = http(addr, "POST", "/v1/classify", Some(&body));
+    assert_eq!(status, 200);
+
+    // Release the restart; once recovery is signalled, /healthz is ok again
+    // and the restart shows up in the labelled metrics.
+    gate.release();
+    gate.await_arrivals(2);
+    let (status, body) = http(addr, "GET", "/healthz", None);
+    assert_eq!(status, 200);
+    let v = jsonlite::parse(&body).unwrap();
+    assert_eq!(v.get("status").unwrap().as_str(), Some("ok"));
+    let (_, text) = http(addr, "GET", "/metrics", None);
+    assert!(text.contains("hec_restarts_total 1"), "{text}");
+    gateway.shutdown();
+    set.shutdown();
 }
 
 #[test]

@@ -253,6 +253,74 @@ fn fast_engine_serves_and_matches_scalar_predictions() {
     assert_eq!(p_scalar, p_fast);
 }
 
+/// ROADMAP bootstrap sweep (closes the "8 samples/class sweep" item):
+/// bootstrapped template quality as a function of the per-class sample
+/// budget.  For each budget in {1, 2, 4, 8}, build a store through the
+/// synthetic fallback engine and grade it on the full 8-per-class
+/// bootstrap workload with the digital Eq. 8 matcher.  Monotone-ish
+/// quality contract: every budget classifies no worse than chance, and the
+/// full 8-sample budget at least matches the 2x-chance bar the serving
+/// assertion below enforces.
+#[test]
+fn bootstrap_sweep_accuracy_over_samples_per_class() {
+    use hec::coordinator::pipeline::{bootstrap_store_with, BOOTSTRAP_DATA_SEED};
+    use hec::dataset::NUM_CLASSES;
+    use hec::runtime::Meta;
+
+    let c = cfg(Backend::FeatureCount);
+    let meta = Meta::synthetic();
+    let mut engine = hec::runtime::backend::create(&c, &meta).unwrap();
+
+    // The grading workload: the same 8-per-class bootstrap set the
+    // existing accuracy assertion uses (budgets < 8 are therefore graded
+    // partly out-of-sample — their templates saw only a prefix of it).
+    let n = 8 * NUM_CLASSES;
+    let ds = SyntheticDataset::new(
+        BOOTSTRAP_DATA_SEED,
+        n,
+        meta.norm.mean as f32,
+        meta.norm.std as f32,
+    );
+    let (images, labels) = ds.batch(0, n);
+    let feats = engine.extract_features(&images, n).unwrap();
+    let nf = meta.artifacts.n_features;
+
+    let chance = 1.0 / NUM_CLASSES as f64;
+    let mut accuracies = Vec::new();
+    for per_class in [1usize, 2, 4, 8] {
+        let store =
+            bootstrap_store_with(engine.as_mut(), &meta, c.acam.seed, per_class).unwrap();
+        let set = store.set(1).unwrap();
+        let correct = feats
+            .chunks_exact(nf)
+            .zip(&labels)
+            .filter(|(row, &label)| {
+                let bits = store.binarize(row);
+                matching::classify_feature_count(&bits, set, NUM_CLASSES) == label
+            })
+            .count();
+        let acc = correct as f64 / n as f64;
+        assert!(
+            acc >= chance,
+            "{per_class} samples/class: accuracy {acc:.3} below chance {chance:.2}"
+        );
+        accuracies.push((per_class, acc));
+    }
+    let acc8 = accuracies.last().unwrap().1;
+    assert!(
+        acc8 >= 2.0 * chance,
+        "8 samples/class must at least match the serving assertion's 2x-chance bar, \
+         got {acc8:.3} (sweep: {accuracies:?})"
+    );
+    // The deployed budget (8) is also what Pipeline::new bootstraps, so the
+    // sweep's top row is the production configuration.
+    assert_eq!(
+        hec::coordinator::pipeline::BOOTSTRAP_PER_CLASS,
+        8,
+        "sweep top must stay in sync with the deployed bootstrap budget"
+    );
+}
+
 /// Sanity (ROADMAP): the synthetic-weight + bootstrapped-template fallback
 /// is not just self-consistent but *accurate* on the samples its templates
 /// were bootstrapped from — well above the 10% chance floor — on both
