@@ -1,0 +1,167 @@
+//! Gateway ingestion perf: tree-parse (jsonlite `Value` + `from_value`) vs
+//! the streaming pull-parser decode vs the raw-binary frame decode, on a
+//! realistic batch-classify body (64 normalised 32x32 images).
+//!
+//! The decode paths must agree bit-for-bit before anything is timed — the
+//! streaming path is only admissible because it is indistinguishable from
+//! the tree path on the wire.
+//!
+//! Emits `BENCH_gateway_ingest.json` (override with `HEC_BENCH_OUT`) and
+//! asserts the acceptance bar: streaming >= 3x tree-parse throughput on the
+//! batch decode.  `HEC_BENCH_SMOKE=1` shrinks the timing budget;
+//! `HEC_BENCH_NO_ASSERT=1` reports without gating.
+
+use std::time::Duration;
+
+use hec::api::{binary, stream, ApiError, ClassifyRequest};
+use hec::benchkit::{self, bench_for, section, BenchResult};
+use hec::dataset::{SyntheticDataset, IMAGE_SIZE};
+use hec::jsonlite::{self, Value};
+
+const ITEMS: usize = 64;
+const PIXELS: usize = IMAGE_SIZE * IMAGE_SIZE;
+
+/// The gateway's pre-streaming decode path, kept verbatim as the baseline
+/// and oracle: full `Value` tree, then `from_value` per item.
+fn tree_decode_batch(text: &str) -> Vec<Result<ClassifyRequest, ApiError>> {
+    let doc = jsonlite::parse(text).expect("bench body is valid JSON");
+    doc.get("requests")
+        .and_then(Value::as_array)
+        .expect("bench body is an envelope")
+        .iter()
+        .map(ClassifyRequest::from_value)
+        .collect()
+}
+
+fn requests() -> Vec<ClassifyRequest> {
+    let ds = SyntheticDataset::new(7, ITEMS, 0.1307, 0.3081);
+    (0..ITEMS)
+        .map(|i| {
+            let mut req = ClassifyRequest::new(ds.image(i));
+            req.top_k = 3;
+            req
+        })
+        .collect()
+}
+
+fn envelope_json(reqs: &[ClassifyRequest]) -> String {
+    let items: Vec<Value> = reqs.iter().map(ClassifyRequest::to_value).collect();
+    Value::Obj(std::collections::BTreeMap::from([(
+        "requests".to_string(),
+        Value::Arr(items),
+    )]))
+    .to_json()
+}
+
+fn assert_same(a: &[Result<ClassifyRequest, ApiError>], b: &[Result<ClassifyRequest, ApiError>]) {
+    assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter().zip(b) {
+        let (x, y) = (x.as_ref().unwrap(), y.as_ref().unwrap());
+        assert_eq!(x.image.len(), y.image.len());
+        assert!(
+            x.image
+                .iter()
+                .zip(&y.image)
+                .all(|(p, q)| p.to_bits() == q.to_bits()),
+            "pixel bits diverge between decode paths"
+        );
+        assert_eq!(x.top_k, y.top_k);
+        assert_eq!(x.backend, y.backend);
+        assert_eq!(x.return_features, y.return_features);
+        assert_eq!(x.request_id, y.request_id);
+    }
+}
+
+fn main() {
+    let smoke = std::env::var("HEC_BENCH_SMOKE").is_ok();
+    let budget = if smoke {
+        Duration::from_millis(300)
+    } else {
+        Duration::from_millis(1500)
+    };
+
+    let reqs = requests();
+    let json_body = envelope_json(&reqs);
+    let bin_body = binary::encode_batch(&reqs);
+
+    // -- correctness gate before timing -----------------------------------
+    let tree_items = tree_decode_batch(&json_body);
+    let stream_items =
+        stream::decode_batch_envelope(&json_body, PIXELS, |r| r).expect("stream decode");
+    let bin_items = binary::decode_batch(&bin_body).expect("binary decode");
+    assert_same(&tree_items, &stream_items);
+    assert_same(&tree_items, &bin_items);
+    drop((tree_items, stream_items, bin_items));
+
+    section(&format!(
+        "batch decode: {ITEMS} x {PIXELS}px (JSON {} KiB, binary {} KiB)",
+        json_body.len() / 1024,
+        bin_body.len() / 1024
+    ));
+    let tree = bench_for("tree decode (jsonlite + from_value)", 1, 3, budget, || {
+        let items = tree_decode_batch(&json_body);
+        assert_eq!(items.len(), ITEMS);
+    });
+    let streaming = bench_for("stream decode (pull parser)", 1, 3, budget, || {
+        let items = stream::decode_batch_envelope(&json_body, PIXELS, |r| r).unwrap();
+        assert_eq!(items.len(), ITEMS);
+    });
+    let bin = bench_for("binary decode (x-hec-f32)", 1, 3, budget, || {
+        let items = binary::decode_batch(&bin_body).unwrap();
+        assert_eq!(items.len(), ITEMS);
+    });
+
+    let speedup_stream = tree.mean.as_secs_f64() / streaming.mean.as_secs_f64();
+    let speedup_binary = tree.mean.as_secs_f64() / bin.mean.as_secs_f64();
+    println!(
+        "speedup vs tree: {speedup_stream:.2}x streaming JSON, {speedup_binary:.2}x raw binary"
+    );
+
+    // Single-request context row (the /v1/classify hot path).
+    section("single-request decode: 1 x 1024px");
+    let one_json = reqs[0].to_value().to_json();
+    let one_bin = binary::encode_batch(&reqs[..1]);
+    let tree1 = bench_for("tree decode single", 1, 3, budget, || {
+        let v = jsonlite::parse(&one_json).unwrap();
+        ClassifyRequest::from_value(&v).unwrap();
+    });
+    let stream1 = bench_for("stream decode single", 1, 3, budget, || {
+        stream::decode_classify_request(&one_json, PIXELS).unwrap();
+    });
+    let bin1 = bench_for("binary decode single", 1, 3, budget, || {
+        binary::decode_single(&one_bin).unwrap();
+    });
+
+    let out =
+        std::env::var("HEC_BENCH_OUT").unwrap_or_else(|_| "BENCH_gateway_ingest.json".into());
+    let extra = vec![
+        ("items", Value::Num(ITEMS as f64)),
+        ("pixels_per_item", Value::Num(PIXELS as f64)),
+        ("json_body_bytes", Value::Num(json_body.len() as f64)),
+        ("binary_body_bytes", Value::Num(bin_body.len() as f64)),
+        ("speedup_stream", Value::Num(speedup_stream)),
+        ("speedup_binary", Value::Num(speedup_binary)),
+        ("smoke", Value::Bool(smoke)),
+    ];
+    let results = [tree, streaming, bin, tree1, stream1, bin1];
+    let rows: Vec<&BenchResult> = results.iter().collect();
+    benchkit::write_json_report(&out, "hec/gateway-ingest/v1", &extra, &rows)
+        .expect("write bench report");
+    println!("\nwrote {out}");
+
+    if smoke || std::env::var("HEC_BENCH_NO_ASSERT").is_ok() {
+        println!("gateway_ingest: speedup_stream = {speedup_stream:.2}x (assertion disabled)");
+    } else {
+        assert!(
+            speedup_stream >= 3.0,
+            "streaming decode must be >= 3x tree decode on batch classify, \
+             measured {speedup_stream:.2}x"
+        );
+        assert!(
+            speedup_binary >= speedup_stream,
+            "binary decode should not be slower than streaming JSON \
+             ({speedup_binary:.2}x vs {speedup_stream:.2}x)"
+        );
+        println!("gateway_ingest: PASS ({speedup_stream:.2}x >= 3x)");
+    }
+}

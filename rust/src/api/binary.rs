@@ -1,0 +1,305 @@
+//! Raw-binary request encoding (`application/x-hec-f32`) — pixels as
+//! little-endian f32, no JSON number parsing on the bulk of the body.
+//!
+//! The JSON path spends nearly all of its time lexing pixel numbers; an edge
+//! client that already holds f32 pixels can skip that entirely.  The framing
+//! is length-prefixed throughout so the decoder never scans:
+//!
+//! ```text
+//! header:   "HECB"  u8 version=1  u32 count          (little-endian u32s)
+//! per item: u32 meta_len   meta_len bytes of JSON metadata (may be 0)
+//!           u32 image_len  image_len * 4 bytes of f32 LE pixels
+//! ```
+//!
+//! The metadata object carries the non-pixel request fields (`top_k`,
+//! `backend`, `return_features`, `request_id`) with exactly the JSON
+//! request's semantics; `meta_len == 0` means all defaults, and an `image`
+//! key inside the meta is rejected.  Responses are the ordinary JSON
+//! [`ClassifyResponse`] — identical, byte for byte, to what the same pixels
+//! submitted as JSON produce (f32 → f64 → shortest-decimal JSON → f64 → f32
+//! round-trips exactly, so both paths feed the pipeline the same bits).
+//!
+//! Error model: *framing* errors (bad magic/version, truncation, trailing
+//! bytes) fail the whole call with `MALFORMED_REQUEST`; *meta* errors are
+//! per-item — the length prefixes let the decoder resynchronise to the next
+//! item, which the JSON path cannot do after a syntax error.
+
+use super::{stream, ApiError, ClassifyRequest, ErrorCode};
+use crate::jsonlite::Value;
+use std::collections::BTreeMap;
+
+/// The content type the gateway dispatches on.
+pub const CONTENT_TYPE: &str = "application/x-hec-f32";
+
+/// Frame magic (first four body bytes).
+pub const MAGIC: [u8; 4] = *b"HECB";
+
+/// Current frame version.
+pub const VERSION: u8 = 1;
+
+fn malformed(msg: impl Into<String>) -> ApiError {
+    ApiError::new(ErrorCode::MalformedRequest, msg)
+}
+
+/// Encode a batch of requests into one frame (test clients, the CLI
+/// driver, and SDK examples; the decode side is the hot path).
+pub fn encode_batch(reqs: &[ClassifyRequest]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(
+        9 + reqs.iter().map(|r| 8 + 4 * r.image.len() + 64).sum::<usize>(),
+    );
+    out.extend_from_slice(&MAGIC);
+    out.push(VERSION);
+    out.extend_from_slice(&(reqs.len() as u32).to_le_bytes());
+    for req in reqs {
+        let meta = encode_meta(req);
+        out.extend_from_slice(&(meta.len() as u32).to_le_bytes());
+        out.extend_from_slice(meta.as_bytes());
+        out.extend_from_slice(&(req.image.len() as u32).to_le_bytes());
+        for &p in &req.image {
+            out.extend_from_slice(&p.to_le_bytes());
+        }
+    }
+    out
+}
+
+/// The meta JSON for one request: the non-pixel fields, or `""` (length 0
+/// on the wire) when everything is at its default.
+fn encode_meta(req: &ClassifyRequest) -> String {
+    if req.top_k == 1
+        && req.backend.is_none()
+        && !req.return_features
+        && req.request_id.is_none()
+    {
+        return String::new();
+    }
+    let mut m = BTreeMap::new();
+    m.insert("top_k".to_string(), Value::Num(req.top_k as f64));
+    if let Some(b) = req.backend {
+        m.insert("backend".to_string(), Value::Str(b.name().to_string()));
+    }
+    if req.return_features {
+        m.insert("return_features".to_string(), Value::Bool(true));
+    }
+    if let Some(id) = &req.request_id {
+        m.insert("request_id".to_string(), Value::Str(id.clone()));
+    }
+    Value::Obj(m).to_json()
+}
+
+/// Decode a frame, handing each item to `submit` as soon as it is decoded
+/// (the binary twin of [`stream::decode_batch_envelope`]'s pipelining).
+/// Per-item meta failures go to `submit` as `Err`; framing failures abort
+/// the whole call.
+pub fn decode_batch_with<P>(
+    body: &[u8],
+    mut submit: impl FnMut(Result<ClassifyRequest, ApiError>) -> P,
+) -> Result<Vec<P>, ApiError> {
+    let mut r = FrameReader { body, pos: 0 };
+    let magic = r.take(4)?;
+    if magic != MAGIC {
+        return Err(malformed("bad magic (expected 'HECB')"));
+    }
+    let version = r.take(1)?[0];
+    if version != VERSION {
+        return Err(malformed(format!("unsupported binary version {version}")));
+    }
+    let count = r.u32()?;
+    let mut out = Vec::with_capacity(count.min(1024) as usize);
+    for _ in 0..count {
+        let meta_len = r.u32()? as usize;
+        let meta = r.take(meta_len)?;
+        let image_len = r.u32()? as usize;
+        let pixels = r.take(image_len.checked_mul(4).ok_or_else(|| {
+            malformed("binary body truncated")
+        })?)?;
+        let item = decode_item(meta, pixels);
+        out.push(submit(item));
+    }
+    if r.pos != body.len() {
+        return Err(malformed("trailing bytes after last item"));
+    }
+    Ok(out)
+}
+
+/// Decode a frame into per-item results (no submission pipelining).
+pub fn decode_batch(body: &[u8]) -> Result<Vec<Result<ClassifyRequest, ApiError>>, ApiError> {
+    decode_batch_with(body, |r| r)
+}
+
+/// Decode a single-request frame (`POST /v1/classify` with the binary
+/// content type): the frame must contain exactly one item.
+pub fn decode_single(body: &[u8]) -> Result<ClassifyRequest, ApiError> {
+    let mut items = decode_batch(body)?;
+    if items.len() != 1 {
+        return Err(ApiError::new(
+            ErrorCode::InvalidArgument,
+            format!(
+                "binary body must contain exactly 1 item for /v1/classify (got {})",
+                items.len()
+            ),
+        ));
+    }
+    items.pop().unwrap()
+}
+
+fn decode_item(meta: &[u8], pixels: &[u8]) -> Result<ClassifyRequest, ApiError> {
+    let mut req = if meta.is_empty() {
+        ClassifyRequest::new(Vec::new())
+    } else {
+        let text = std::str::from_utf8(meta).map_err(|_| malformed("meta is not UTF-8"))?;
+        stream::decode_meta(text)?
+    };
+    req.image = pixels
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    Ok(req)
+}
+
+/// Bounds-checked cursor over the frame; any read past the end is the
+/// stable whole-call truncation error.
+struct FrameReader<'a> {
+    body: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> FrameReader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], ApiError> {
+        let end = self
+            .pos
+            .checked_add(n)
+            .filter(|&e| e <= self.body.len())
+            .ok_or_else(|| malformed("binary body truncated"))?;
+        let s = &self.body[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32, ApiError> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Backend;
+
+    fn sample() -> ClassifyRequest {
+        let mut req = ClassifyRequest::new(vec![0.5, -1.25, 3.0e-3, f32::MIN_POSITIVE]);
+        req.top_k = 3;
+        req.backend = Some(Backend::Similarity);
+        req.return_features = true;
+        req.request_id = Some("bin-7".into());
+        req
+    }
+
+    #[test]
+    fn roundtrip_batch() {
+        let reqs = vec![sample(), ClassifyRequest::new(vec![1.0, 2.0])];
+        let body = encode_batch(&reqs);
+        let back = decode_batch(&body).unwrap();
+        assert_eq!(back.len(), 2);
+        for (orig, got) in reqs.iter().zip(&back) {
+            let got = got.as_ref().unwrap();
+            let ob: Vec<u32> = orig.image.iter().map(|p| p.to_bits()).collect();
+            let gb: Vec<u32> = got.image.iter().map(|p| p.to_bits()).collect();
+            assert_eq!(ob, gb);
+            assert_eq!(orig.top_k, got.top_k);
+            assert_eq!(orig.backend, got.backend);
+            assert_eq!(orig.return_features, got.return_features);
+            assert_eq!(orig.request_id, got.request_id);
+        }
+    }
+
+    #[test]
+    fn default_request_has_empty_meta() {
+        let req = ClassifyRequest::new(vec![1.0]);
+        let body = encode_batch(std::slice::from_ref(&req));
+        // header(9) + meta_len(4) + 0 meta + image_len(4) + 4 pixel bytes
+        assert_eq!(body.len(), 9 + 4 + 4 + 4);
+        let back = decode_single(&body).unwrap();
+        assert_eq!(back.image, vec![1.0]);
+        assert_eq!(back.top_k, 1);
+        assert!(back.backend.is_none());
+    }
+
+    #[test]
+    fn framing_errors_are_whole_call() {
+        // Too short / bad magic / bad version.
+        assert_eq!(
+            decode_batch(b"HEC").unwrap_err().code,
+            ErrorCode::MalformedRequest
+        );
+        let mut body = encode_batch(&[ClassifyRequest::new(vec![1.0])]);
+        body[0] = b'X';
+        let e = decode_batch(&body).unwrap_err();
+        assert!(e.message.contains("magic"), "{e}");
+        let mut body = encode_batch(&[ClassifyRequest::new(vec![1.0])]);
+        body[4] = 9;
+        let e = decode_batch(&body).unwrap_err();
+        assert!(e.message.contains("version"), "{e}");
+        // Truncations at every prefix length fail cleanly.
+        let body = encode_batch(&[sample()]);
+        for cut in 0..body.len() {
+            let e = decode_batch(&body[..cut]).unwrap_err();
+            assert_eq!(e.code, ErrorCode::MalformedRequest, "cut at {cut}");
+        }
+        // Trailing bytes.
+        let mut body = encode_batch(&[ClassifyRequest::new(vec![1.0])]);
+        body.push(0);
+        let e = decode_batch(&body).unwrap_err();
+        assert!(e.message.contains("trailing"), "{e}");
+    }
+
+    #[test]
+    fn meta_errors_are_per_item() {
+        // Item 0: bad meta JSON; item 1: fine.  The call succeeds with a
+        // per-item error.
+        let good = ClassifyRequest::new(vec![2.0]);
+        let mut body = Vec::new();
+        body.extend_from_slice(&MAGIC);
+        body.push(VERSION);
+        body.extend_from_slice(&2u32.to_le_bytes());
+        let meta = b"{not json";
+        body.extend_from_slice(&(meta.len() as u32).to_le_bytes());
+        body.extend_from_slice(meta);
+        body.extend_from_slice(&1u32.to_le_bytes());
+        body.extend_from_slice(&1.5f32.to_le_bytes());
+        let one = encode_batch(std::slice::from_ref(&good));
+        body.extend_from_slice(&one[9..]);
+        let items = decode_batch(&body).unwrap();
+        assert_eq!(items.len(), 2);
+        assert_eq!(items[0].as_ref().unwrap_err().code, ErrorCode::MalformedRequest);
+        assert_eq!(items[1].as_ref().unwrap().image, vec![2.0]);
+    }
+
+    #[test]
+    fn image_key_forbidden_in_meta() {
+        let mut body = Vec::new();
+        body.extend_from_slice(&MAGIC);
+        body.push(VERSION);
+        body.extend_from_slice(&1u32.to_le_bytes());
+        let meta = br#"{"image": [1, 2]}"#;
+        body.extend_from_slice(&(meta.len() as u32).to_le_bytes());
+        body.extend_from_slice(meta);
+        body.extend_from_slice(&0u32.to_le_bytes());
+        let e = decode_single(&body).unwrap_err();
+        assert_eq!(e.code, ErrorCode::InvalidArgument);
+        assert!(e.message.contains("image"), "{e}");
+    }
+
+    #[test]
+    fn single_requires_exactly_one() {
+        let body = encode_batch(&[
+            ClassifyRequest::new(vec![1.0]),
+            ClassifyRequest::new(vec![2.0]),
+        ]);
+        let e = decode_single(&body).unwrap_err();
+        assert_eq!(e.code, ErrorCode::InvalidArgument);
+        assert!(e.message.contains("exactly 1"), "{e}");
+        let empty = encode_batch(&[]);
+        assert!(decode_single(&empty).is_err());
+    }
+}

@@ -22,6 +22,8 @@
 //! response fields, new error codes) stay v1; anything that re-interprets an
 //! existing field is v2 under a new URL prefix.
 
+pub mod binary;
+pub mod stream;
 pub mod wire;
 
 use crate::config::Backend;

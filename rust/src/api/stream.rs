@@ -1,0 +1,462 @@
+//! Streaming (pull-parser) decode of v1 request bodies — the zero-tree twin
+//! of [`wire`](super::wire)'s `ClassifyRequest::from_value`.
+//!
+//! The gateway's hot path is "read three small fields and one huge number
+//! array": building a full [`crate::jsonlite::Value`] tree first means a
+//! `BTreeMap` plus one enum allocation per pixel, all thrown away
+//! immediately.  This module scans the document once with
+//! [`crate::jsonlite::stream::PullParser`] and decodes `image` straight into
+//! a pre-sized `Vec<f32>`.
+//!
+//! **Equivalence contract** (enforced by `rust/tests/ingest_fuzz.rs` and the
+//! in-module tests): for every input string, [`decode_classify_request`]
+//! returns exactly what `jsonlite::parse` + `ClassifyRequest::from_value`
+//! returns — same `Ok` fields bit for bit, or the same [`ApiError`] code
+//! *and message*.  Three tree-path behaviours need deliberate machinery:
+//!
+//! * **Syntax errors win.**  The tree path parses the whole document before
+//!   looking at any field, so `{"image": "x"` is `MALFORMED_REQUEST`, never
+//!   the `'image'` schema error.  The streaming path therefore *defers*
+//!   schema errors: it keeps scanning (and validating) to the end of the
+//!   document and only then reports them.
+//! * **Fixed error priority.**  `from_value` checks image → top_k → backend
+//!   → return_features → request_id regardless of document order; the
+//!   per-field result slots here are read out in that same order.
+//! * **Duplicate keys are last-wins** (the tree's `BTreeMap::insert`): a
+//!   later occurrence of a key replaces the earlier value *or error* in its
+//!   slot.
+
+use crate::config::Backend;
+use crate::jsonlite::stream::{Kind, PullParser};
+use crate::jsonlite::ParseError;
+
+use super::{ApiError, ClassifyRequest, ErrorCode};
+
+fn bad(msg: impl Into<String>) -> ApiError {
+    ApiError::new(ErrorCode::InvalidArgument, msg)
+}
+
+/// The gateway's wrapping of a JSON syntax error (same text as its tree
+/// path: `"invalid JSON: json parse error at byte N: ..."`).
+fn malformed(e: &ParseError) -> ApiError {
+    ApiError::new(ErrorCode::MalformedRequest, format!("invalid JSON: {e}"))
+}
+
+/// Decode one `POST /v1/classify` body.  `image_len_hint` pre-sizes the
+/// pixel buffer (the deployment's `caps().image_len`; 0 is fine).
+pub fn decode_classify_request(
+    text: &str,
+    image_len_hint: usize,
+) -> Result<ClassifyRequest, ApiError> {
+    let mut p = PullParser::new(text);
+    p.skip_ws();
+    let item = decode_request_value(&mut p, image_len_hint).map_err(|e| malformed(&e))?;
+    p.end().map_err(|e| malformed(&e))?;
+    item
+}
+
+/// Decode a `POST /v1/classify/batch` envelope `{"requests": [...]}`,
+/// handing each item to `submit` *as soon as it is decoded* — with a
+/// submitting closure, items enter the serving queue while later items are
+/// still being parsed, so one HTTP batch co-batches in the dynamic batcher
+/// even mid-parse.
+///
+/// Per-item schema errors go to `submit` (which typically maps them to
+/// per-item error envelopes); a syntax error anywhere fails the whole call
+/// with `MALFORMED_REQUEST`, and a missing/ill-typed `"requests"` key fails
+/// it with the envelope `INVALID_ARGUMENT` — both exactly as the tree path
+/// does.  Duplicate `"requests"` keys are last-wins: earlier submissions are
+/// dropped from the returned list (their responses are discarded).
+pub fn decode_batch_envelope<P>(
+    text: &str,
+    image_len_hint: usize,
+    mut submit: impl FnMut(Result<ClassifyRequest, ApiError>) -> P,
+) -> Result<Vec<P>, ApiError> {
+    let mut p = PullParser::new(text);
+    p.skip_ws();
+    let envelope =
+        scan_envelope(&mut p, image_len_hint, &mut submit).map_err(|e| malformed(&e))?;
+    p.end().map_err(|e| malformed(&e))?;
+    envelope.ok_or_else(|| bad("body must be {\"requests\": [...]}"))
+}
+
+/// Scan the batch envelope object.  `Ok(None)` = valid JSON but not an
+/// object with a `"requests"` array (deferred envelope error).
+fn scan_envelope<P>(
+    p: &mut PullParser,
+    hint: usize,
+    submit: &mut impl FnMut(Result<ClassifyRequest, ApiError>) -> P,
+) -> Result<Option<Vec<P>>, ParseError> {
+    if p.peek_kind()? != Kind::Object {
+        p.skip_value()?;
+        return Ok(None);
+    }
+    p.begin_object()?;
+    // Outer Option: key seen at all; inner: value was an array.
+    let mut slot: Option<Option<Vec<P>>> = None;
+    let mut first = true;
+    while let Some(key) = p.next_key(&mut first)? {
+        if key == "requests" {
+            if p.peek_kind()? == Kind::Array {
+                p.begin_array()?;
+                let mut items = Vec::new();
+                let mut ef = true;
+                while p.next_element(&mut ef)? {
+                    let item = decode_request_value(p, hint)?;
+                    items.push(submit(item));
+                }
+                slot = Some(Some(items));
+            } else {
+                p.skip_value()?;
+                slot = Some(None);
+            }
+        } else {
+            p.skip_value()?;
+        }
+    }
+    Ok(slot.flatten())
+}
+
+/// How the `image` field is sourced for this decode.
+#[derive(Clone, Copy)]
+enum ImageMode {
+    /// JSON body: `image` is a required number array; the `usize` pre-sizes
+    /// the pixel buffer.
+    Json(usize),
+    /// Binary meta object ([`super::binary`]): pixels arrive in the binary
+    /// frame, so an `image` key is rejected and a missing one is fine.
+    Forbidden,
+}
+
+/// Decode the meta object of one binary-encoded item (see
+/// [`super::binary`]): same fields and semantics as a JSON request, except
+/// `image` is forbidden and the returned request's pixel vector is empty
+/// (the caller fills it from the frame).
+pub(crate) fn decode_meta(text: &str) -> Result<ClassifyRequest, ApiError> {
+    let mut p = PullParser::new(text);
+    p.skip_ws();
+    let item =
+        decode_request_mode(&mut p, ImageMode::Forbidden).map_err(|e| malformed(&e))?;
+    p.end().map_err(|e| malformed(&e))?;
+    item
+}
+
+/// Per-field result slots with `from_value`'s read-out order.  `None` =
+/// field absent; a later duplicate key overwrites the whole slot (value or
+/// error), mirroring the tree's map insert.
+#[derive(Default)]
+struct Slots {
+    image: Option<Result<Vec<f32>, ApiError>>,
+    top_k: Option<Result<usize, ApiError>>,
+    backend: Option<Result<Backend, ApiError>>,
+    return_features: Option<Result<bool, ApiError>>,
+    request_id: Option<Result<String, ApiError>>,
+}
+
+impl Slots {
+    fn finish(self, image_required: bool) -> Result<ClassifyRequest, ApiError> {
+        let image = match self.image {
+            Some(r) => r?,
+            None if image_required => return Err(bad("missing required field 'image'")),
+            None => Vec::new(),
+        };
+        let mut req = ClassifyRequest::new(image);
+        if let Some(r) = self.top_k {
+            req.top_k = r?;
+        }
+        if let Some(r) = self.backend {
+            req.backend = Some(r?);
+        }
+        if let Some(r) = self.return_features {
+            req.return_features = r?;
+        }
+        if let Some(r) = self.request_id {
+            req.request_id = Some(r?);
+        }
+        Ok(req)
+    }
+}
+
+/// Decode one request object at the cursor (document root or a batch
+/// element).  Outer `Err` = syntax error (aborts the call as
+/// `MALFORMED_REQUEST`); inner `Err` = schema error for this item.
+fn decode_request_value(
+    p: &mut PullParser,
+    hint: usize,
+) -> Result<Result<ClassifyRequest, ApiError>, ParseError> {
+    decode_request_mode(p, ImageMode::Json(hint))
+}
+
+fn decode_request_mode(
+    p: &mut PullParser,
+    mode: ImageMode,
+) -> Result<Result<ClassifyRequest, ApiError>, ParseError> {
+    if p.peek_kind()? != Kind::Object {
+        p.skip_value()?;
+        return Ok(Err(bad("request body must be a JSON object")));
+    }
+    p.begin_object()?;
+    let mut slots = Slots::default();
+    let mut first = true;
+    while let Some(key) = p.next_key(&mut first)? {
+        match key.as_str() {
+            "image" => match mode {
+                ImageMode::Json(hint) => slots.image = Some(read_image(p, hint)?),
+                ImageMode::Forbidden => {
+                    p.skip_value()?;
+                    slots.image = Some(Err(bad(
+                        "'image' is not allowed in binary meta (pixels come from the frame)",
+                    )));
+                }
+            },
+            "top_k" => slots.top_k = Some(read_top_k(p)?),
+            "backend" => slots.backend = Some(read_backend(p)?),
+            "return_features" => slots.return_features = Some(read_return_features(p)?),
+            "request_id" => slots.request_id = Some(read_request_id(p)?),
+            // Unknown fields: ignored (additive evolution) but still
+            // syntax-validated.
+            _ => p.skip_value()?,
+        }
+    }
+    Ok(slots.finish(matches!(mode, ImageMode::Json(_))))
+}
+
+/// `image`: numbers decode straight into the output buffer (f64 → f32 with
+/// the same `as` cast the tree's `as_f32_vec` uses).  On the first
+/// non-number element the rest of the array is validated-and-skipped so the
+/// schema error can still be out-prioritised by a later syntax error.
+fn read_image(
+    p: &mut PullParser,
+    hint: usize,
+) -> Result<Result<Vec<f32>, ApiError>, ParseError> {
+    if p.peek_kind()? != Kind::Array {
+        p.skip_value()?;
+        return Ok(Err(bad("'image' must be an array of numbers")));
+    }
+    p.begin_array()?;
+    let mut out = Vec::with_capacity(hint);
+    let mut first = true;
+    while p.next_element(&mut first)? {
+        if p.peek_kind()? == Kind::Num {
+            out.push(p.read_f64()? as f32);
+        } else {
+            p.skip_value()?;
+            while p.next_element(&mut first)? {
+                p.skip_value()?;
+            }
+            return Ok(Err(bad("'image' must be an array of numbers")));
+        }
+    }
+    Ok(Ok(out))
+}
+
+fn read_top_k(p: &mut PullParser) -> Result<Result<usize, ApiError>, ParseError> {
+    if p.peek_kind()? != Kind::Num {
+        p.skip_value()?;
+        return Ok(Err(bad("'top_k' must be a non-negative integer")));
+    }
+    let f = p.read_f64()?;
+    // Same predicate as the tree path's filter (NaN/∞ fall through to the
+    // error arm because the comparisons are false).
+    if !(f.fract() == 0.0 && f >= 0.0) {
+        return Ok(Err(bad("'top_k' must be a non-negative integer")));
+    }
+    let k = f as usize;
+    if k == 0 {
+        return Ok(Err(bad("'top_k' must be >= 1")));
+    }
+    Ok(Ok(k))
+}
+
+fn read_backend(p: &mut PullParser) -> Result<Result<Backend, ApiError>, ParseError> {
+    if p.peek_kind()? != Kind::Str {
+        p.skip_value()?;
+        return Ok(Err(bad("'backend' must be a string")));
+    }
+    let name = p.read_string()?;
+    Ok(name
+        .parse::<Backend>()
+        .map_err(|_| bad(format!("unknown backend: {name}"))))
+}
+
+fn read_return_features(p: &mut PullParser) -> Result<Result<bool, ApiError>, ParseError> {
+    if p.peek_kind()? != Kind::Bool {
+        p.skip_value()?;
+        return Ok(Err(bad("'return_features' must be a boolean")));
+    }
+    Ok(Ok(p.read_bool()?))
+}
+
+fn read_request_id(p: &mut PullParser) -> Result<Result<String, ApiError>, ParseError> {
+    if p.peek_kind()? != Kind::Str {
+        p.skip_value()?;
+        return Ok(Err(bad("'request_id' must be a string")));
+    }
+    Ok(Ok(p.read_string()?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::jsonlite;
+
+    /// The gateway's tree path (parse_body + from_value), inlined as the
+    /// parity oracle.
+    fn tree_decode(text: &str) -> Result<ClassifyRequest, ApiError> {
+        let v = jsonlite::parse(text).map_err(|e| malformed(&e))?;
+        ClassifyRequest::from_value(&v)
+    }
+
+    fn tree_decode_batch(text: &str) -> Result<Vec<Result<ClassifyRequest, ApiError>>, ApiError> {
+        let doc = jsonlite::parse(text).map_err(|e| malformed(&e))?;
+        let items = doc
+            .get("requests")
+            .and_then(jsonlite::Value::as_array)
+            .ok_or_else(|| bad("body must be {\"requests\": [...]}"))?;
+        Ok(items.iter().map(ClassifyRequest::from_value).collect())
+    }
+
+    fn assert_req_eq(a: &ClassifyRequest, b: &ClassifyRequest, ctx: &str) {
+        let ab: Vec<u32> = a.image.iter().map(|p| p.to_bits()).collect();
+        let bb: Vec<u32> = b.image.iter().map(|p| p.to_bits()).collect();
+        assert_eq!(ab, bb, "image bits on {ctx}");
+        assert_eq!(a.top_k, b.top_k, "top_k on {ctx}");
+        assert_eq!(a.backend, b.backend, "backend on {ctx}");
+        assert_eq!(a.return_features, b.return_features, "return_features on {ctx}");
+        assert_eq!(a.request_id, b.request_id, "request_id on {ctx}");
+    }
+
+    fn assert_parity(text: &str) {
+        match (tree_decode(text), decode_classify_request(text, 4)) {
+            (Ok(t), Ok(s)) => assert_req_eq(&t, &s, text),
+            (Err(t), Err(s)) => {
+                assert_eq!(t.code, s.code, "error code on {text:?}");
+                assert_eq!(t.message, s.message, "error message on {text:?}");
+            }
+            (t, s) => panic!(
+                "accept/reject parity on {text:?}: tree {:?} vs stream {:?}",
+                t.map(|r| r.image.len()),
+                s.map(|r| r.image.len())
+            ),
+        }
+    }
+
+    #[test]
+    fn single_request_parity() {
+        for text in [
+            // Valid shapes.
+            r#"{"image": [1, 2.5, -0.5]}"#,
+            r#"{"image": [], "top_k": 3}"#,
+            r#"{"image": [0.1307], "backend": "sim", "return_features": true, "request_id": "r-1"}"#,
+            r#"{"image": [1], "future_field": {"x": [1, 2]}}"#,
+            // Schema errors (fixed priority, messages must match).
+            r#"{}"#,
+            r#"{"image": "nope"}"#,
+            r#"{"image": [1, "x", 2]}"#,
+            r#"{"image": [1, null]}"#,
+            r#"{"image": {"a": 1}}"#,
+            r#"{"image": [1], "top_k": 0}"#,
+            r#"{"image": [1], "top_k": 1.5}"#,
+            r#"{"image": [1], "top_k": -1}"#,
+            r#"{"image": [1], "top_k": "2"}"#,
+            r#"{"image": [1], "backend": "cuda"}"#,
+            r#"{"image": [1], "backend": 7}"#,
+            r#"{"image": [1], "return_features": "yes"}"#,
+            r#"{"image": [1], "request_id": 7}"#,
+            r#"[1, 2]"#,
+            r#""just a string""#,
+            "5",
+            // Error priority: image error reported before top_k error,
+            // regardless of document order.
+            r#"{"top_k": 0, "image": "bad"}"#,
+            r#"{"top_k": 0}"#,
+            // Duplicate keys: last wins, for values and errors alike.
+            r#"{"image": "bad", "image": [1, 2]}"#,
+            r#"{"image": [1, 2], "image": "bad"}"#,
+            r#"{"image": [1], "top_k": 0, "top_k": 2}"#,
+            // Syntax errors must out-prioritise schema errors.
+            r#"{"image": "x""#,
+            r#"{"image": [1, "x", }"#,
+            r#"{"image": [1]} trailing"#,
+            r#"{"image": [1,]}"#,
+            r#"{"image": [01e]}"#,
+            "{",
+            "",
+            "not json",
+        ] {
+            assert_parity(text);
+        }
+    }
+
+    #[test]
+    fn image_hint_is_only_a_hint() {
+        let req = decode_classify_request(r#"{"image": [1, 2, 3, 4, 5]}"#, 2).unwrap();
+        assert_eq!(req.image, vec![1.0, 2.0, 3.0, 4.0, 5.0]);
+        let req = decode_classify_request(r#"{"image": [1]}"#, 1024).unwrap();
+        assert_eq!(req.image, vec![1.0]);
+    }
+
+    #[test]
+    fn batch_envelope_parity() {
+        for text in [
+            r#"{"requests": []}"#,
+            r#"{"requests": [{"image": [1, 2]}, {"image": "bad"}, {"top_k": 1}]}"#,
+            r#"{"requests": [{"image": [1]}], "extra": true}"#,
+            // Envelope errors (valid JSON, wrong shape).
+            r#"{}"#,
+            r#"{"requests": 5}"#,
+            r#"[{"image": [1]}]"#,
+            // Duplicate envelope keys: last wins.
+            r#"{"requests": 5, "requests": [{"image": [1]}]}"#,
+            r#"{"requests": [{"image": [1]}], "requests": 5}"#,
+            r#"{"requests": [{"image": [1]}], "requests": [{"image": [2]}]}"#,
+            // Syntax errors beat envelope errors.
+            r#"{"requests": 5"#,
+            r#"{"requests": [{"image": [1]}]"#,
+        ] {
+            let tree = tree_decode_batch(text);
+            let stream = decode_batch_envelope(text, 4, |r| r);
+            match (tree, stream) {
+                (Ok(t), Ok(s)) => {
+                    assert_eq!(t.len(), s.len(), "item count on {text:?}");
+                    for (i, (ti, si)) in t.iter().zip(&s).enumerate() {
+                        match (ti, si) {
+                            (Ok(a), Ok(b)) => assert_req_eq(a, b, &format!("{text:?}[{i}]")),
+                            (Err(a), Err(b)) => {
+                                assert_eq!(a.code, b.code, "{text:?}[{i}]");
+                                assert_eq!(a.message, b.message, "{text:?}[{i}]");
+                            }
+                            _ => panic!("item parity on {text:?}[{i}]"),
+                        }
+                    }
+                }
+                (Err(t), Err(s)) => {
+                    assert_eq!(t.code, s.code, "on {text:?}");
+                    assert_eq!(t.message, s.message, "on {text:?}");
+                }
+                (t, s) => panic!(
+                    "envelope parity on {text:?}: tree ok={} stream ok={}",
+                    t.is_ok(),
+                    s.is_ok()
+                ),
+            }
+        }
+    }
+
+    #[test]
+    fn batch_submit_sees_items_in_order() {
+        let mut seen = Vec::new();
+        let got = decode_batch_envelope(
+            r#"{"requests": [{"image": [1]}, {"image": [2, 3]}]}"#,
+            2,
+            |r| {
+                seen.push(r.as_ref().map(|req| req.image.len()).ok().unwrap_or(0));
+                r.map(|req| req.image)
+            },
+        )
+        .unwrap();
+        assert_eq!(seen, [1, 2]);
+        assert_eq!(got.len(), 2);
+        assert_eq!(got[1].as_ref().unwrap(), &vec![2.0, 3.0]);
+    }
+}

@@ -94,16 +94,25 @@ pub(crate) fn validate_request(
     Ok(())
 }
 
-/// Pack a batch's images contiguously and capture per-job options — the
-/// front half of the worker body, shared with [`super::shard`].
-pub(crate) fn pack_batch(batch: &[Job], image_len: usize) -> (Vec<f32>, Vec<ClassifyOptions>) {
-    let mut buf = Vec::with_capacity(batch.len() * image_len);
-    let mut opts = Vec::with_capacity(batch.len());
+/// Pack a batch's images contiguously and capture per-job options into
+/// caller-owned scratch buffers — the front half of the worker body, shared
+/// with [`super::shard`].  The worker loops keep `buf`/`opts` alive across
+/// batches, so steady-state packing allocates nothing (the buffers grow to
+/// the largest batch seen and stay there).
+pub(crate) fn pack_batch_into(
+    batch: &[Job],
+    image_len: usize,
+    buf: &mut Vec<f32>,
+    opts: &mut Vec<ClassifyOptions>,
+) {
+    buf.clear();
+    opts.clear();
+    buf.reserve(batch.len() * image_len);
+    opts.reserve(batch.len());
     for job in batch {
         buf.extend_from_slice(&job.req.image);
         opts.push(job.req.options());
     }
-    (buf, opts)
 }
 
 /// Deliver one computed batch back to its waiters (or fail them all with
@@ -283,13 +292,15 @@ impl Server {
                 };
                 let engine = pipeline.engine_name();
                 let image_len = pipeline.image_len();
+                let mut buf: Vec<f32> = Vec::new();
+                let mut opts: Vec<ClassifyOptions> = Vec::new();
                 while let Some(batch) = batcher::assemble(&rx, max_batch, max_wait) {
                     let n = batch.len();
                     Metrics::gauge_dec(&m.queue_depth, n as u64);
                     m.batches.fetch_add(1, Relaxed);
                     m.batched_items.fetch_add(n as u64, Relaxed);
 
-                    let (buf, opts) = pack_batch(&batch, image_len);
+                    pack_batch_into(&batch, image_len, &mut buf, &mut opts);
                     let padded = pipeline.padding_for(n);
                     m.padded_slots.fetch_add(padded as u64, Relaxed);
 

@@ -46,7 +46,7 @@ use super::batcher;
 use super::metrics::{prometheus_shards, Metrics, Snapshot};
 use super::oneshot;
 use super::pipeline::Pipeline;
-use super::server::{deliver_batch, fail_job, pack_batch, validate_request, Caps, Job};
+use super::server::{deliver_batch, fail_job, pack_batch_into, validate_request, Caps, Job};
 use super::{ClassifySurface, HealthReport, ShardStatus};
 
 // ---------------------------------------------------------------------------
@@ -532,13 +532,15 @@ fn shard_worker(
     };
     let engine = pipeline.engine_name();
     let image_len = pipeline.image_len();
+    let mut buf: Vec<f32> = Vec::new();
+    let mut opts: Vec<crate::api::ClassifyOptions> = Vec::new();
     while let Some(batch) = batcher::assemble(&rx, max_batch, max_wait) {
         let n = batch.len();
         Metrics::gauge_dec(&m.queue_depth, n as u64);
         m.batches.fetch_add(1, Relaxed);
         m.batched_items.fetch_add(n as u64, Relaxed);
 
-        let (buf, opts) = pack_batch(&batch, image_len);
+        pack_batch_into(&batch, image_len, &mut buf, &mut opts);
         let padded = pipeline.padding_for(n);
         m.padded_slots.fetch_add(padded as u64, Relaxed);
 

@@ -1,11 +1,21 @@
 //! Minimal HTTP/1.1 message plumbing for the gateway (no hyper offline) —
 //! just enough of RFC 9112 for a JSON API: request line + headers +
-//! `Content-Length` bodies, keep-alive by default, bounded reads so a slow
-//! or hostile peer cannot balloon memory.
+//! `Content-Length` or `chunked` bodies, keep-alive by default, bounded
+//! reads so a slow or hostile peer cannot balloon memory.
 //!
-//! Deliberately not supported (requests using them get a clean 4xx/close
-//! instead of undefined behaviour): chunked transfer encoding, multi-line
-//! header folding, pipelining beyond sequential keep-alive.
+//! Chunked transfer encoding is consumed incrementally: every chunk-size
+//! line is capped ([`MAX_CHUNK_LINE`]), the declared size is checked against
+//! the running body total *before* its data is read (an over-cap upload is
+//! rejected at the chunk header, not after buffering 16 MiB), trailers are
+//! consumed-but-ignored under the head budget, and a connection that dies
+//! mid-body is a clean 400, never a hang.  Strictness notes: chunk sizes
+//! must be bare hex (no sign, no surrounding whitespace; extensions after
+//! `;` are ignored), and every line must terminate with CRLF.
+//!
+//! Deliberately not supported (requests using them get a clean 4xx/5xx +
+//! close instead of undefined behaviour): transfer codings other than
+//! `chunked`/`identity`, multi-line header folding, pipelining beyond
+//! sequential keep-alive.
 
 use std::io::{BufRead, Write};
 
@@ -14,6 +24,9 @@ pub const MAX_HEAD_BYTES: usize = 16 * 1024;
 /// Largest accepted body (a 32x32 image batch of ~1k requests fits well
 /// under this; anything bigger should be split).
 pub const MAX_BODY_BYTES: usize = 16 * 1024 * 1024;
+/// Largest accepted chunk-size line (hex size + extensions).  Generous —
+/// real clients emit well under 20 bytes.
+pub const MAX_CHUNK_LINE: usize = 256;
 
 /// One parsed request.
 #[derive(Debug)]
@@ -104,7 +117,7 @@ pub fn read_request<R: BufRead>(reader: &mut R) -> Result<Request, ReadError> {
         headers.push((k.trim().to_string(), v.trim().to_string()));
     }
 
-    // -- body: Content-Length only ----------------------------------------
+    // -- body: Content-Length or chunked -----------------------------------
     // RFC 9112 §6.3: conflicting duplicate Content-Length headers must be
     // rejected, not first-one-wins — behind a proxy that honors the other
     // copy, disagreeing about framing desyncs the keep-alive stream.
@@ -121,20 +134,40 @@ pub fn read_request<R: BufRead>(reader: &mut R) -> Result<Request, ReadError> {
         }
         content_length = Some(n);
     }
-    let content_length = content_length.unwrap_or(0);
-    if headers.iter().any(|(k, v)| {
-        k.eq_ignore_ascii_case("transfer-encoding") && !v.eq_ignore_ascii_case("identity")
-    }) {
-        return Err(ReadError::Bad(501, "chunked bodies not supported"));
+    let mut chunked = false;
+    for (_, v) in headers
+        .iter()
+        .filter(|(k, _)| k.eq_ignore_ascii_case("transfer-encoding"))
+    {
+        let v = v.trim();
+        if v.eq_ignore_ascii_case("chunked") {
+            chunked = true;
+        } else if !v.eq_ignore_ascii_case("identity") {
+            return Err(ReadError::Bad(501, "unsupported transfer encoding"));
+        }
     }
-    if content_length > MAX_BODY_BYTES {
-        return Err(ReadError::Bad(413, "body too large"));
-    }
-    let mut body = vec![0u8; content_length];
-    if content_length > 0 {
-        std::io::Read::read_exact(reader, &mut body)
-            .map_err(|_| ReadError::Bad(400, "body shorter than Content-Length"))?;
-    }
+    let body = if chunked {
+        // RFC 9112 §6.3: a message with both framings is a smuggling
+        // vector; reject instead of picking one.
+        if content_length.is_some() {
+            return Err(ReadError::Bad(
+                400,
+                "Content-Length with chunked transfer encoding",
+            ));
+        }
+        read_chunked_body(reader)?
+    } else {
+        let content_length = content_length.unwrap_or(0);
+        if content_length > MAX_BODY_BYTES {
+            return Err(ReadError::Bad(413, "body too large"));
+        }
+        let mut body = vec![0u8; content_length];
+        if content_length > 0 {
+            std::io::Read::read_exact(reader, &mut body)
+                .map_err(|_| ReadError::Bad(400, "body shorter than Content-Length"))?;
+        }
+        body
+    };
 
     let close = version == "HTTP/1.0"
         || headers
@@ -157,6 +190,108 @@ pub fn read_request<R: BufRead>(reader: &mut R) -> Result<Request, ReadError> {
 
 fn find_crlfcrlf(buf: &[u8]) -> Option<usize> {
     buf.windows(4).position(|w| w == b"\r\n\r\n")
+}
+
+/// Read a chunked body: size-line / data / CRLF repeated until the zero
+/// chunk, then trailers up to the blank line (consumed, ignored, budgeted).
+/// Every failure mode — truncation, over-cap, bad framing — maps to a
+/// status + message, never a hang or an unbounded buffer.
+fn read_chunked_body<R: BufRead>(reader: &mut R) -> Result<Vec<u8>, ReadError> {
+    let mut body = Vec::new();
+    loop {
+        let line = read_crlf_line(reader, MAX_CHUNK_LINE, (400, "oversized chunk-size line"))?;
+        let size = parse_chunk_size(&line)?;
+        if size == 0 {
+            break;
+        }
+        // Enforce the cap on the *declared* total before reading data: a
+        // hostile "FFFFFFFF\r\n" costs one line read, not a 4 GiB buffer.
+        match body.len().checked_add(size) {
+            Some(total) if total <= MAX_BODY_BYTES => {}
+            _ => return Err(ReadError::Bad(413, "body too large")),
+        }
+        let old_len = body.len();
+        body.resize(old_len + size, 0);
+        std::io::Read::read_exact(reader, &mut body[old_len..])
+            .map_err(|_| ReadError::Bad(400, "truncated chunked body"))?;
+        let mut crlf = [0u8; 2];
+        std::io::Read::read_exact(reader, &mut crlf)
+            .map_err(|_| ReadError::Bad(400, "truncated chunked body"))?;
+        if &crlf != b"\r\n" {
+            return Err(ReadError::Bad(400, "bad chunk terminator"));
+        }
+    }
+    // Trailer section: consume lines until the blank terminator.  Nothing
+    // in the API uses trailers, but they must leave the stream positioned
+    // at the next keep-alive request.
+    let mut trailer_bytes = 0usize;
+    loop {
+        let line = read_crlf_line(reader, MAX_HEAD_BYTES, (431, "trailers too large"))?;
+        if line.is_empty() {
+            break;
+        }
+        trailer_bytes += line.len() + 2;
+        if trailer_bytes > MAX_HEAD_BYTES {
+            return Err(ReadError::Bad(431, "trailers too large"));
+        }
+    }
+    Ok(body)
+}
+
+/// Read one CRLF-terminated line (CRLF stripped), bounded by `max`; lines
+/// over the bound fail with `too_long`, truncation/bare-LF with a 400.
+/// Handles terminators straddling `fill_buf` boundaries.
+fn read_crlf_line<R: BufRead>(
+    reader: &mut R,
+    max: usize,
+    too_long: (u16, &'static str),
+) -> Result<Vec<u8>, ReadError> {
+    let mut line = Vec::new();
+    loop {
+        let buf = match reader.fill_buf() {
+            Ok(b) => b,
+            Err(_) => return Err(ReadError::Bad(400, "truncated chunked body")),
+        };
+        if buf.is_empty() {
+            return Err(ReadError::Bad(400, "truncated chunked body"));
+        }
+        if let Some(i) = buf.iter().position(|&b| b == b'\n') {
+            line.extend_from_slice(&buf[..i]);
+            reader.consume(i + 1);
+            if line.pop() != Some(b'\r') {
+                return Err(ReadError::Bad(400, "bad chunk framing"));
+            }
+            if line.len() > max {
+                return Err(ReadError::Bad(too_long.0, too_long.1));
+            }
+            return Ok(line);
+        }
+        line.extend_from_slice(buf);
+        let n = buf.len();
+        reader.consume(n);
+        // +1: a trailing CR may still be pending its LF.
+        if line.len() > max + 1 {
+            return Err(ReadError::Bad(too_long.0, too_long.1));
+        }
+    }
+}
+
+/// Parse a chunk-size line: bare hex digits, optional `;extensions`
+/// (ignored).  Strict by design — no sign (`usize::from_str_radix` would
+/// accept a leading `+`), no whitespace, non-empty.
+fn parse_chunk_size(line: &[u8]) -> Result<usize, ReadError> {
+    let end = line
+        .iter()
+        .position(|&b| b == b';')
+        .unwrap_or(line.len());
+    let size_part = &line[..end];
+    if size_part.is_empty() || !size_part.iter().all(|b| b.is_ascii_hexdigit()) {
+        return Err(ReadError::Bad(400, "bad chunk size"));
+    }
+    // All-hexdigit bytes are valid UTF-8 and a valid radix-16 literal; the
+    // only remaining failure is overflow, which is over-cap by definition.
+    let text = std::str::from_utf8(size_part).expect("hex digits are ASCII");
+    usize::from_str_radix(text, 16).map_err(|_| ReadError::Bad(413, "body too large"))
 }
 
 /// Write one response (always with `Content-Length`; `close` controls the
@@ -272,7 +407,11 @@ mod tests {
             Err(ReadError::Bad(413, _))
         ));
         assert!(matches!(
-            parse(b"POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n"),
+            parse(b"POST / HTTP/1.1\r\nTransfer-Encoding: gzip\r\n\r\n"),
+            Err(ReadError::Bad(501, _))
+        ));
+        assert!(matches!(
+            parse(b"POST / HTTP/1.1\r\nTransfer-Encoding: gzip, chunked\r\n\r\n"),
             Err(ReadError::Bad(501, _))
         ));
         // RFC 9112: conflicting duplicates are rejected; agreeing ones pass.
@@ -290,6 +429,144 @@ mod tests {
         let huge = format!("GET / HTTP/1.1\r\nX-Pad: {}\r\n\r\n", "a".repeat(MAX_HEAD_BYTES));
         assert!(matches!(
             parse(huge.as_bytes()),
+            Err(ReadError::Bad(431, _))
+        ));
+    }
+
+    // ---- chunked transfer encoding --------------------------------------
+
+    fn chunked(body_frames: &str) -> Vec<u8> {
+        format!(
+            "POST /v1/classify HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n{body_frames}"
+        )
+        .into_bytes()
+    }
+
+    #[test]
+    fn parses_chunked_body() {
+        let r = parse(&chunked("4\r\nWiki\r\n5\r\npedia\r\n0\r\n\r\n")).unwrap();
+        assert_eq!(r.body, b"Wikipedia");
+        // Zero-length body.
+        let r = parse(&chunked("0\r\n\r\n")).unwrap();
+        assert!(r.body.is_empty());
+        // Hex sizes (both cases) and chunk extensions are accepted.
+        let r = parse(&chunked("A;ext=\"v\"\r\n0123456789\r\n0\r\n\r\n")).unwrap();
+        assert_eq!(r.body, b"0123456789");
+        let r = parse(&chunked("a\r\n0123456789\r\n0\r\n\r\n")).unwrap();
+        assert_eq!(r.body.len(), 10);
+    }
+
+    #[test]
+    fn chunked_trailers_are_consumed_and_keep_alive_survives() {
+        let mut bytes = chunked("2\r\nhi\r\n0\r\nX-Trailer: v\r\nX-Other: w\r\n\r\n");
+        bytes.extend_from_slice(b"GET /healthz HTTP/1.1\r\n\r\n");
+        let mut reader = BufReader::new(&bytes[..]);
+        let r1 = read_request(&mut reader).unwrap();
+        assert_eq!(r1.body, b"hi");
+        // The trailer must not leak into the header set or the stream.
+        assert_eq!(r1.header("x-trailer"), None);
+        let r2 = read_request(&mut reader).unwrap();
+        assert_eq!(r2.path, "/healthz");
+    }
+
+    #[test]
+    fn chunked_lines_straddling_read_boundaries() {
+        // A 3-byte buffer forces every line and terminator to straddle
+        // fill_buf calls.
+        let bytes = chunked("4\r\nWiki\r\n5\r\npedia\r\n0\r\nX-T: v\r\n\r\n");
+        for cap in [1, 2, 3, 5, 7] {
+            let mut reader = BufReader::with_capacity(cap, &bytes[..]);
+            let r = read_request(&mut reader).unwrap();
+            assert_eq!(r.body, b"Wikipedia", "capacity {cap}");
+        }
+    }
+
+    #[test]
+    fn chunked_truncations_fail_cleanly() {
+        // Cut the exchange at every byte boundary: each prefix must yield a
+        // clean error (or parse, once complete) — never a hang or panic.
+        let full = chunked("4\r\nWiki\r\n0\r\n\r\n");
+        for cut in 0..full.len() {
+            match parse(&full[..cut]) {
+                Err(ReadError::Eof) | Err(ReadError::Bad(..)) => {}
+                Ok(_) => panic!("prefix of {cut} bytes parsed as a full request"),
+            }
+        }
+        assert!(parse(&full).is_ok());
+    }
+
+    #[test]
+    fn chunked_rejects_bad_framing() {
+        // Bad hex / empty / signed sizes (strict: from_str_radix's '+'
+        // leniency must not leak through).
+        for frames in ["x\r\nhi\r\n0\r\n\r\n", "\r\n0\r\n\r\n", "+2\r\nhi\r\n0\r\n\r\n", " 2\r\nhi\r\n0\r\n\r\n"] {
+            assert!(
+                matches!(parse(&chunked(frames)), Err(ReadError::Bad(400, _))),
+                "frames {frames:?}"
+            );
+        }
+        // Bare-LF line terminator.
+        assert!(matches!(
+            parse(&chunked("2\nhi\r\n0\r\n\r\n")),
+            Err(ReadError::Bad(400, _))
+        ));
+        // Chunk data not followed by CRLF.
+        assert!(matches!(
+            parse(&chunked("2\r\nhixx0\r\n\r\n")),
+            Err(ReadError::Bad(400, _))
+        ));
+        // Oversized chunk-size line (a hostile extension blob).
+        let long = format!("2;{}\r\nhi\r\n0\r\n\r\n", "e".repeat(MAX_CHUNK_LINE + 8));
+        assert!(matches!(
+            parse(&chunked(&long)),
+            Err(ReadError::Bad(400, _))
+        ));
+    }
+
+    #[test]
+    fn chunked_enforces_body_cap_at_the_size_line() {
+        // Declares 16 MiB + 1 without sending it: rejected at the header.
+        let over = format!("{:x}\r\n", MAX_BODY_BYTES + 1);
+        assert!(matches!(
+            parse(&chunked(&over)),
+            Err(ReadError::Bad(413, _))
+        ));
+        // Overflow-sized declarations too.
+        assert!(matches!(
+            parse(&chunked("FFFFFFFFFFFFFFFF\r\n")),
+            Err(ReadError::Bad(413, _))
+        ));
+        assert!(matches!(
+            parse(&chunked("FFFFFFFFFFFFFFFFFF\r\n")),
+            Err(ReadError::Bad(413, _))
+        ));
+    }
+
+    #[test]
+    fn chunked_conflicts_with_content_length() {
+        assert!(matches!(
+            parse(
+                b"POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\nContent-Length: 2\r\n\r\n2\r\nhi\r\n0\r\n\r\n"
+            ),
+            Err(ReadError::Bad(400, _))
+        ));
+        // identity + Content-Length still works as before.
+        let r = parse(
+            b"POST / HTTP/1.1\r\nTransfer-Encoding: identity\r\nContent-Length: 2\r\n\r\nhi",
+        )
+        .unwrap();
+        assert_eq!(r.body, b"hi");
+    }
+
+    #[test]
+    fn chunked_oversized_trailers_rejected() {
+        let mut frames = String::from("2\r\nhi\r\n0\r\n");
+        for i in 0..200 {
+            frames.push_str(&format!("X-T{i}: {}\r\n", "v".repeat(100)));
+        }
+        frames.push_str("\r\n");
+        assert!(matches!(
+            parse(&chunked(&frames)),
             Err(ReadError::Bad(431, _))
         ));
     }

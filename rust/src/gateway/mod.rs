@@ -34,11 +34,11 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Duration;
 
-use crate::api::{ApiError, ClassifyRequest, ClassifyResponse, ErrorCode, API_VERSION};
+use crate::api::{binary, stream, ApiError, ClassifyResponse, ErrorCode, API_VERSION};
 use crate::config::HttpConfig;
 use crate::coordinator::ClassifySurface;
 use crate::error::Result;
-use crate::jsonlite::{self, Value};
+use crate::jsonlite::Value;
 
 use http::{read_request, write_response, ReadError, Request};
 
@@ -194,11 +194,11 @@ fn respond<W: Write, S: ClassifySurface>(
 /// The routing table: returns (status, content type, body).
 fn route<S: ClassifySurface>(req: &Request, handle: &S) -> (u16, &'static str, String) {
     match (req.method.as_str(), req.path.as_str()) {
-        ("POST", "/v1/classify") => match classify_one(&req.body, handle) {
+        ("POST", "/v1/classify") => match classify_one(req, handle) {
             Ok(resp) => (200, "application/json", resp.to_value().to_json()),
             Err(e) => (e.code.http_status(), "application/json", e.to_value().to_json()),
         },
-        ("POST", "/v1/classify/batch") => match classify_batch(&req.body, handle) {
+        ("POST", "/v1/classify/batch") => match classify_batch(req, handle) {
             Ok(v) => (200, "application/json", v.to_json()),
             Err(e) => (e.code.http_status(), "application/json", e.to_value().to_json()),
         },
@@ -225,46 +225,56 @@ fn route<S: ClassifySurface>(req: &Request, handle: &S) -> (u16, &'static str, S
     }
 }
 
-fn parse_body(body: &[u8]) -> std::result::Result<Value, ApiError> {
-    let text = std::str::from_utf8(body)
-        .map_err(|_| ApiError::new(ErrorCode::MalformedRequest, "body is not UTF-8"))?;
-    jsonlite::parse(text)
-        .map_err(|e| ApiError::new(ErrorCode::MalformedRequest, format!("invalid JSON: {e}")))
+/// Is this request's `Content-Type` the raw-binary image encoding
+/// ([`binary::CONTENT_TYPE`])?  Media-type parameters after `;` are
+/// tolerated; everything else (including absent) means JSON.
+fn is_binary(req: &Request) -> bool {
+    req.header("content-type")
+        .map(|ct| ct.split(';').next().unwrap_or("").trim())
+        .is_some_and(|mt| mt.eq_ignore_ascii_case(binary::CONTENT_TYPE))
 }
 
-/// `POST /v1/classify`: decode, submit through the bounded queue, block for
+fn body_text(body: &[u8]) -> std::result::Result<&str, ApiError> {
+    std::str::from_utf8(body)
+        .map_err(|_| ApiError::new(ErrorCode::MalformedRequest, "body is not UTF-8"))
+}
+
+/// `POST /v1/classify`: decode (streaming JSON or raw binary, no
+/// intermediate `Value` tree), submit through the bounded queue, block for
 /// the response (the connection thread is the waiter, mirroring an
 /// in-process `submit_blocking` caller).
 fn classify_one<S: ClassifySurface>(
-    body: &[u8],
+    req: &Request,
     handle: &S,
 ) -> std::result::Result<ClassifyResponse, ApiError> {
-    let req = ClassifyRequest::from_value(&parse_body(body)?)?;
-    handle.submit_blocking(req)
+    let decoded = if is_binary(req) {
+        binary::decode_single(&req.body)?
+    } else {
+        stream::decode_classify_request(body_text(&req.body)?, handle.caps().image_len)?
+    };
+    handle.submit_blocking(decoded)
 }
 
 /// `POST /v1/classify/batch`: submit every item before collecting any
 /// response, so one HTTP batch becomes co-batchable work for the dynamic
-/// batcher instead of a serial request chain.  Item failures (shape, queue
-/// full) become per-item error envelopes; the call itself is 200.
+/// batcher instead of a serial request chain — with the streaming decoders,
+/// each item is submitted *while later items are still being parsed*.  Item
+/// failures (shape, queue full) become per-item error envelopes; the call
+/// itself is 200.
 fn classify_batch<S: ClassifySurface>(
-    body: &[u8],
+    req: &Request,
     handle: &S,
 ) -> std::result::Result<Value, ApiError> {
-    let doc = parse_body(body)?;
-    let items = doc
-        .get("requests")
-        .and_then(Value::as_array)
-        .ok_or_else(|| {
-            ApiError::new(
-                ErrorCode::InvalidArgument,
-                "body must be {\"requests\": [...]}",
-            )
-        })?;
-    let pending: Vec<std::result::Result<_, ApiError>> = items
-        .iter()
-        .map(|item| ClassifyRequest::from_value(item).and_then(|r| handle.submit(r)))
-        .collect();
+    let submit = |item: std::result::Result<_, ApiError>| item.and_then(|r| handle.submit(r));
+    let pending = if is_binary(req) {
+        binary::decode_batch_with(&req.body, submit)?
+    } else {
+        stream::decode_batch_envelope(
+            body_text(&req.body)?,
+            handle.caps().image_len,
+            submit,
+        )?
+    };
     let responses: Vec<Value> = pending
         .into_iter()
         .map(|p| match p {

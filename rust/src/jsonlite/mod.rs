@@ -8,6 +8,8 @@
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
 
+pub mod stream;
+
 /// A parsed JSON value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Value {

@@ -1,0 +1,659 @@
+//! Pull-parser (streaming) mode for [`crate::jsonlite`] — the zero-tree
+//! ingestion path (SNIPPETS ADR-002: lazy scanning beats tree parsing ~33x
+//! for partial extraction; the gateway reads three small fields and one huge
+//! number array per request, the worst case for a tree).
+//!
+//! [`PullParser`] scans a document left to right and hands the caller one
+//! token at a time: callers drive objects with [`PullParser::next_key`],
+//! arrays with [`PullParser::next_element`], and read or skip each value in
+//! place — no [`super::Value`] tree, no `BTreeMap`, no per-number enum
+//! allocation.  Bulk number arrays decode straight into a caller-owned
+//! `Vec<f32>` buffer.
+//!
+//! **Parity contract** (enforced by `rust/tests/ingest_fuzz.rs`): for every
+//! input, the pull parser accepts exactly the documents [`super::parse`]
+//! accepts, rejects with the *same [`super::ParseError`] message at the same
+//! byte offset*, and produces bitwise-identical numbers.  The grammar is
+//! deliberately a mirror of the tree parser's, quirks included (lenient
+//! leading zeros, `"5."`-style numbers, `\u` escapes validated through
+//! `u32::from_str_radix`); any divergence is a bug in this module, not a
+//! feature.  Numbers go through a Clinger-style fast path (exact `u64`
+//! mantissa × exact power of ten — correctly rounded by construction, so
+//! bit-identical to `str::parse::<f64>`) and fall back to `str::parse` for
+//! anything outside the provably-exact class.
+
+use super::ParseError;
+
+/// Powers of ten exactly representable in f64 (10^0 ..= 10^22).  10^23 is
+/// the first inexact one, so 22 bounds the Clinger fast path.
+const POW10: [f64; 23] = [
+    1e0, 1e1, 1e2, 1e3, 1e4, 1e5, 1e6, 1e7, 1e8, 1e9, 1e10, 1e11, 1e12, 1e13, 1e14, 1e15, 1e16,
+    1e17, 1e18, 1e19, 1e20, 1e21, 1e22,
+];
+
+/// What the next value in the stream is, classified from its first byte
+/// (the same dispatch the tree parser's `value()` does).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kind {
+    Object,
+    Array,
+    Str,
+    Num,
+    Bool,
+    Null,
+}
+
+/// A streaming JSON scanner over a borrowed document.
+pub struct PullParser<'a> {
+    text: &'a str,
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> PullParser<'a> {
+    pub fn new(text: &'a str) -> Self {
+        PullParser {
+            text,
+            bytes: text.as_bytes(),
+            pos: 0,
+        }
+    }
+
+    /// Current byte offset (for error reporting / resynchronisation).
+    pub fn pos(&self) -> usize {
+        self.pos
+    }
+
+    fn err(&self, msg: &str) -> ParseError {
+        ParseError {
+            pos: self.pos,
+            msg: msg.to_string(),
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    pub fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.pos += 1;
+        }
+    }
+
+    fn expect(&mut self, c: u8) -> Result<(), ParseError> {
+        if self.peek() == Some(c) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            Err(self.err(&format!("expected '{}'", c as char)))
+        }
+    }
+
+    /// Classify the value at the cursor without consuming it.  Callers must
+    /// be positioned at a value start (the object/array protocols guarantee
+    /// this).  `Err` carries the tree parser's "expected a JSON value".
+    pub fn peek_kind(&self) -> Result<Kind, ParseError> {
+        match self.peek() {
+            Some(b'{') => Ok(Kind::Object),
+            Some(b'[') => Ok(Kind::Array),
+            Some(b'"') => Ok(Kind::Str),
+            Some(b't') | Some(b'f') => Ok(Kind::Bool),
+            Some(b'n') => Ok(Kind::Null),
+            Some(c) if c == b'-' || c.is_ascii_digit() => Ok(Kind::Num),
+            _ => Err(self.err("expected a JSON value")),
+        }
+    }
+
+    // ---- object / array protocols ---------------------------------------
+
+    /// Consume the opening `{` of an object.
+    pub fn begin_object(&mut self) -> Result<(), ParseError> {
+        self.expect(b'{')
+    }
+
+    /// Advance to the next key of the object being scanned.  `first` is a
+    /// caller-owned flag, `true` before the first call; the parser leaves
+    /// the cursor on the key's value (whitespace skipped).  Returns `None`
+    /// once `}` is consumed.
+    pub fn next_key(&mut self, first: &mut bool) -> Result<Option<String>, ParseError> {
+        if *first {
+            *first = false;
+            self.skip_ws();
+            if self.peek() == Some(b'}') {
+                self.pos += 1;
+                return Ok(None);
+            }
+        } else {
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b'}') => {
+                    self.pos += 1;
+                    return Ok(None);
+                }
+                _ => return Err(self.err("expected ',' or '}'")),
+            }
+        }
+        self.skip_ws();
+        let key = self.read_string_body()?;
+        self.skip_ws();
+        self.expect(b':')?;
+        self.skip_ws();
+        Ok(Some(key))
+    }
+
+    /// Consume the opening `[` of an array.
+    pub fn begin_array(&mut self) -> Result<(), ParseError> {
+        self.expect(b'[')
+    }
+
+    /// Advance to the next element of the array being scanned (same
+    /// caller-owned `first` flag protocol as [`PullParser::next_key`]).
+    /// Returns `false` once `]` is consumed; on `true` the cursor sits on
+    /// the element value.
+    pub fn next_element(&mut self, first: &mut bool) -> Result<bool, ParseError> {
+        if *first {
+            *first = false;
+            self.skip_ws();
+            if self.peek() == Some(b']') {
+                self.pos += 1;
+                return Ok(false);
+            }
+        } else {
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b']') => {
+                    self.pos += 1;
+                    return Ok(false);
+                }
+                _ => return Err(self.err("expected ',' or ']'")),
+            }
+        }
+        self.skip_ws();
+        Ok(true)
+    }
+
+    // ---- scalar readers --------------------------------------------------
+
+    /// Read a string value (cursor on the opening quote).
+    pub fn read_string(&mut self) -> Result<String, ParseError> {
+        self.read_string_body()
+    }
+
+    fn read_string_body(&mut self) -> Result<String, ParseError> {
+        self.expect(b'"')?;
+        let mut s = String::new();
+        loop {
+            match self.peek() {
+                None => return Err(self.err("unterminated string")),
+                Some(b'"') => {
+                    self.pos += 1;
+                    return Ok(s);
+                }
+                Some(b'\\') => {
+                    self.pos += 1;
+                    self.escape(Some(&mut s))?;
+                    self.pos += 1;
+                }
+                Some(c) if c < 0x80 => {
+                    s.push(c as char);
+                    self.pos += 1;
+                }
+                Some(_) => {
+                    // Multi-byte scalar: the cursor only ever rests on char
+                    // boundaries, so this lookup cannot fail.
+                    let c = self.text[self.pos..].chars().next().unwrap();
+                    s.push(c);
+                    self.pos += c.len_utf8();
+                }
+            }
+        }
+    }
+
+    /// Skip a string without building it (same validation, same errors).
+    fn skip_string(&mut self) -> Result<(), ParseError> {
+        self.expect(b'"')?;
+        loop {
+            match self.peek() {
+                None => return Err(self.err("unterminated string")),
+                Some(b'"') => {
+                    self.pos += 1;
+                    return Ok(());
+                }
+                Some(b'\\') => {
+                    self.pos += 1;
+                    self.escape(None)?;
+                    self.pos += 1;
+                }
+                Some(_) => {
+                    // Content bytes are skipped bytewise: UTF-8 continuation
+                    // bytes can never equal the ASCII quote or backslash.
+                    self.pos += 1;
+                }
+            }
+        }
+    }
+
+    /// Validate (and optionally decode into `out`) one escape sequence; the
+    /// cursor sits on the escape character after the backslash.  Mirrors the
+    /// tree parser byte for byte, including validating `\u` hex through
+    /// `u32::from_str_radix` and mapping unpaired surrogates to U+FFFD.
+    fn escape(&mut self, out: Option<&mut String>) -> Result<(), ParseError> {
+        let c = match self.peek() {
+            Some(b'"') => '"',
+            Some(b'\\') => '\\',
+            Some(b'/') => '/',
+            Some(b'n') => '\n',
+            Some(b't') => '\t',
+            Some(b'r') => '\r',
+            Some(b'b') => '\u{8}',
+            Some(b'f') => '\u{c}',
+            Some(b'u') => {
+                if self.pos + 4 >= self.bytes.len() {
+                    return Err(self.err("bad \\u escape"));
+                }
+                let hex = std::str::from_utf8(&self.bytes[self.pos + 1..self.pos + 5])
+                    .map_err(|_| self.err("bad \\u escape"))?;
+                let cp =
+                    u32::from_str_radix(hex, 16).map_err(|_| self.err("bad \\u escape"))?;
+                self.pos += 4;
+                char::from_u32(cp).unwrap_or('\u{fffd}')
+            }
+            _ => return Err(self.err("bad escape")),
+        };
+        if let Some(s) = out {
+            s.push(c);
+        }
+        Ok(())
+    }
+
+    /// Read a number value (cursor on `-` or a digit) as f64 —
+    /// bit-identical to the tree parser's `str::parse::<f64>` on the same
+    /// lexeme, via the Clinger fast path where provably exact.
+    pub fn read_f64(&mut self) -> Result<f64, ParseError> {
+        let lex = self.lex_number()?;
+        // Fast path: value is mantissa * 10^k with both factors exactly
+        // representable, so one IEEE multiply/divide is correctly rounded —
+        // identical to what a full correctly-rounding parser returns.
+        if let Some(f) = lex.fast_value() {
+            return Ok(f);
+        }
+        self.text[lex.start..lex.end]
+            .parse::<f64>()
+            .map_err(|_| self.err("bad number"))
+    }
+
+    /// Skip a number (cursor on `-` or a digit), applying the same validity
+    /// rule the tree parser's `str::parse` does.
+    fn skip_number(&mut self) -> Result<(), ParseError> {
+        self.lex_number().map(|_| ())
+    }
+
+    /// Lex one number lexeme with the tree parser's exact character
+    /// classes, rejecting (at the tree parser's position, with its message)
+    /// lexemes `str::parse::<f64>` would reject.
+    fn lex_number(&mut self) -> Result<NumLex, ParseError> {
+        let start = self.pos;
+        let mut neg = false;
+        if self.peek() == Some(b'-') {
+            self.pos += 1;
+            neg = true;
+        }
+        // Exact-u64 mantissa accumulation; `exact` goes false once the
+        // mantissa needs more than 15 significant digits (2^53 safety) and
+        // the slow path takes over for the value (the lexing continues).
+        let mut mant: u64 = 0;
+        let mut mant_digits: u32 = 0;
+        let mut exact = true;
+        let mut int_digits = 0usize;
+        while let Some(c) = self.peek() {
+            if !c.is_ascii_digit() {
+                break;
+            }
+            let d = (c - b'0') as u64;
+            if mant == 0 && d == 0 {
+                // Leading zeros: value-neutral, not significant digits.
+            } else if mant_digits < 15 {
+                mant = mant * 10 + d;
+                mant_digits += 1;
+            } else {
+                exact = false;
+            }
+            int_digits += 1;
+            self.pos += 1;
+        }
+        let mut frac_digits = 0usize;
+        if self.peek() == Some(b'.') {
+            self.pos += 1;
+            while let Some(c) = self.peek() {
+                if !c.is_ascii_digit() {
+                    break;
+                }
+                let d = (c - b'0') as u64;
+                if mant == 0 && d == 0 {
+                    // Still value-neutral, but the decimal exponent below
+                    // accounts for the position via `frac_digits`.
+                } else if mant_digits < 15 {
+                    mant = mant * 10 + d;
+                    mant_digits += 1;
+                } else {
+                    exact = false;
+                }
+                frac_digits += 1;
+                self.pos += 1;
+            }
+        }
+        let mut exp: i64 = 0;
+        let mut exp_present = false;
+        let mut exp_digits = 0usize;
+        if matches!(self.peek(), Some(b'e' | b'E')) {
+            exp_present = true;
+            self.pos += 1;
+            let mut exp_neg = false;
+            if matches!(self.peek(), Some(b'+' | b'-')) {
+                exp_neg = self.peek() == Some(b'-');
+                self.pos += 1;
+            }
+            while let Some(c) = self.peek() {
+                if !c.is_ascii_digit() {
+                    break;
+                }
+                exp = (exp * 10 + (c - b'0') as i64).min(1_000_000);
+                exp_digits += 1;
+                self.pos += 1;
+            }
+            if exp_neg {
+                exp = -exp;
+            }
+        }
+        // `str::parse::<f64>` acceptance, restated for this lexeme grammar:
+        // at least one digit overall, and a non-empty exponent when the
+        // marker is present.
+        if int_digits + frac_digits == 0 || (exp_present && exp_digits == 0) {
+            return Err(self.err("bad number"));
+        }
+        Ok(NumLex {
+            start,
+            end: self.pos,
+            neg,
+            mant,
+            exact,
+            k: exp - frac_digits as i64,
+        })
+    }
+
+    // ---- whole-value / document helpers ---------------------------------
+
+    /// Validate-and-discard one complete value (cursor at its start).  The
+    /// whole subtree gets the same syntax validation the tree parser
+    /// applies, so "skipped" never means "unchecked".
+    pub fn skip_value(&mut self) -> Result<(), ParseError> {
+        match self.peek_kind()? {
+            Kind::Object => {
+                self.begin_object()?;
+                let mut first = true;
+                while self.next_key(&mut first)?.is_some() {
+                    self.skip_value()?;
+                }
+                Ok(())
+            }
+            Kind::Array => {
+                self.begin_array()?;
+                let mut first = true;
+                while self.next_element(&mut first)? {
+                    self.skip_value()?;
+                }
+                Ok(())
+            }
+            Kind::Str => self.skip_string(),
+            Kind::Num => self.skip_number(),
+            Kind::Bool | Kind::Null => {
+                let word = match self.peek() {
+                    Some(b't') => "true",
+                    Some(b'f') => "false",
+                    _ => "null",
+                };
+                self.literal(word)
+            }
+        }
+    }
+
+    /// Consume a literal keyword (`true` / `false` / `null`) with the tree
+    /// parser's message on mismatch.
+    pub fn literal(&mut self, word: &str) -> Result<(), ParseError> {
+        if self.bytes[self.pos..].starts_with(word.as_bytes()) {
+            self.pos += word.len();
+            Ok(())
+        } else {
+            Err(self.err(&format!("expected '{word}'")))
+        }
+    }
+
+    /// Read a boolean (cursor on `t` or `f`).
+    pub fn read_bool(&mut self) -> Result<bool, ParseError> {
+        if self.peek() == Some(b't') {
+            self.literal("true")?;
+            Ok(true)
+        } else {
+            self.literal("false")?;
+            Ok(false)
+        }
+    }
+
+    /// After the top-level value: require end of input (the tree parser's
+    /// trailing-characters check).
+    pub fn end(&mut self) -> Result<(), ParseError> {
+        self.skip_ws();
+        if self.pos != self.bytes.len() {
+            return Err(self.err("trailing characters"));
+        }
+        Ok(())
+    }
+}
+
+/// One lexed number: the slice bounds for the slow path plus the exact
+/// mantissa/exponent decomposition for the fast path.
+struct NumLex {
+    start: usize,
+    end: usize,
+    neg: bool,
+    mant: u64,
+    exact: bool,
+    /// Decimal exponent applied to `mant` (explicit exponent minus
+    /// fraction length).
+    k: i64,
+}
+
+impl NumLex {
+    /// The Clinger fast path: when the mantissa fits in 53 bits and the
+    /// scale is an exact power of ten, one IEEE op on exact operands is
+    /// correctly rounded — the same result every correctly-rounding parser
+    /// (including `str::parse`) must return.  `None` defers to `str::parse`.
+    fn fast_value(&self) -> Option<f64> {
+        if !self.exact || self.k.unsigned_abs() > 22 {
+            return None;
+        }
+        let mut f = self.mant as f64;
+        if self.k > 0 {
+            f *= POW10[self.k as usize];
+        } else if self.k < 0 {
+            f /= POW10[(-self.k) as usize];
+        }
+        Some(if self.neg { -f } else { f })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{parse, Value};
+    use super::*;
+
+    /// Full-document scan via the pull API: skip the top value, require end.
+    fn scan(text: &str) -> Result<(), ParseError> {
+        let mut p = PullParser::new(text);
+        p.skip_ws();
+        p.skip_value()?;
+        p.end()
+    }
+
+    /// The core parity assertion: accept/reject, message, and byte offset
+    /// all match the tree parser.
+    fn assert_parity(text: &str) {
+        let tree = parse(text);
+        let stream = scan(text);
+        match (tree, stream) {
+            (Ok(_), Ok(())) => {}
+            (Err(t), Err(s)) => {
+                assert_eq!(t.msg, s.msg, "message parity on {text:?}");
+                assert_eq!(t.pos, s.pos, "position parity on {text:?}");
+            }
+            (t, s) => panic!("accept parity on {text:?}: tree {t:?} vs stream {s:?}"),
+        }
+    }
+
+    #[test]
+    fn parity_on_valid_documents() {
+        for text in [
+            "null",
+            "true",
+            "false",
+            "0",
+            "-0",
+            "-3.5e2",
+            "5.",
+            "-.5",
+            "01",
+            "1200e-2",
+            "1e999",
+            "\"hi\\n\\u0041\\u00e9 caf\u{e9}\"",
+            "[]",
+            "[1, 2.5, [3], {\"a\": null}]",
+            "{}",
+            r#"{"a": [1, 2, {"b": "x"}], "c": null}"#,
+            "  {\"k\"\t:\r\n [true]}  ",
+            "\"\\u+12f\"", // from_str_radix quirk: leading '+' accepted
+            "\"\\ud800\"", // unpaired surrogate -> U+FFFD in both parsers
+        ] {
+            assert_parity(text);
+        }
+    }
+
+    #[test]
+    fn parity_on_invalid_documents() {
+        for text in [
+            "",
+            "   ",
+            "{",
+            "[",
+            "[1,]",
+            "[,1]",
+            "{\"a\" 1}",
+            "{\"a\":}",
+            "{,}",
+            "[1 2]",
+            "1 2",
+            "nul",
+            "truex trailing",
+            "\"unterminated",
+            "\"bad \\q escape\"",
+            "\"\\u12",
+            "\"\\u12g4\"",
+            "-",
+            "-.",
+            "1e",
+            "1e+",
+            "1.e",
+            "[5..5]",
+            "{\"dup\": 1, \"dup\": }",
+        ] {
+            assert_parity(text);
+        }
+    }
+
+    #[test]
+    fn numbers_bitwise_match_str_parse() {
+        for text in [
+            "0",
+            "-0",
+            "-0.0",
+            "1",
+            "0.1",
+            "0.1307",
+            "-0.3081",
+            "5.",
+            "-.5",
+            "0005.500",
+            "1200e-2",
+            "9007199254740991",  // 2^53 - 1: still exact
+            "900719925474099123", // 18 digits: past the fast path
+            "1.7976931348623157e308",
+            "5e-324",
+            "2.2250738585072014e-308",
+            "123456789.123456789",
+            "1e22",
+            "1e23",
+            "-1e-22",
+            "3.141592653589793",
+            "1e999", // overflow -> inf in both
+        ] {
+            let mut p = PullParser::new(text);
+            let got = p.read_f64().unwrap();
+            let want: f64 = text.parse().unwrap();
+            assert_eq!(
+                got.to_bits(),
+                want.to_bits(),
+                "{text}: stream {got:e} vs parse {want:e}"
+            );
+        }
+    }
+
+    #[test]
+    fn pull_protocol_reads_fields() {
+        let mut p = PullParser::new(r#"{"a": 1.5, "b": [1, 2], "s": "x", "t": true}"#);
+        p.skip_ws();
+        p.begin_object().unwrap();
+        let mut first = true;
+        let mut seen = Vec::new();
+        while let Some(key) = p.next_key(&mut first).unwrap() {
+            match key.as_str() {
+                "a" => assert_eq!(p.read_f64().unwrap(), 1.5),
+                "b" => {
+                    let mut ef = true;
+                    let mut vals = Vec::new();
+                    p.begin_array().unwrap();
+                    while p.next_element(&mut ef).unwrap() {
+                        vals.push(p.read_f64().unwrap());
+                    }
+                    assert_eq!(vals, [1.0, 2.0]);
+                }
+                "s" => assert_eq!(p.read_string().unwrap(), "x"),
+                "t" => assert!(p.read_bool().unwrap()),
+                other => panic!("unexpected key {other}"),
+            }
+            seen.push(key);
+        }
+        p.end().unwrap();
+        assert_eq!(seen, ["a", "b", "s", "t"]);
+    }
+
+    #[test]
+    fn string_decoding_matches_tree() {
+        let cases: [&str; 4] = [
+            r#""plain""#,
+            r#""a\nb\t\"q\" \\ \/ \b \f""#,
+            r#""caf\u00e9 \u2603 \ud800""#,
+            "\"raw caf\u{e9} \u{2603}\"",
+        ];
+        for text in cases {
+            let want = match parse(text).unwrap() {
+                Value::Str(s) => s,
+                v => panic!("not a string: {v:?}"),
+            };
+            let mut p = PullParser::new(text);
+            assert_eq!(p.read_string().unwrap(), want, "on {text:?}");
+            assert_eq!(p.pos(), text.len(), "fully consumed {text:?}");
+        }
+    }
+}

@@ -11,7 +11,7 @@
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpStream};
 
-use hec::api::{ApiError, ClassifyRequest, ClassifyResponse, ErrorCode};
+use hec::api::{binary, ApiError, ClassifyRequest, ClassifyResponse, ErrorCode};
 use hec::config::{Backend, HttpConfig, ServeConfig};
 use hec::coordinator::shard::{Gate, ShardHooks};
 use hec::coordinator::{ClassifySurface, Pipeline, Server, ShardSet};
@@ -573,6 +573,297 @@ fn healthz_reports_degraded_while_a_shard_restarts() {
     assert!(text.contains("hec_restarts_total 1"), "{text}");
     gateway.shutdown();
     set.shutdown();
+}
+
+/// Send raw request bytes on a fresh connection and read one response.
+/// `half_close` shuts the write side first, so the server sees EOF on a
+/// deliberately truncated body instead of waiting for more bytes.
+fn send_raw(addr: SocketAddr, bytes: &[u8], half_close: bool) -> (u16, String) {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream.write_all(bytes).unwrap();
+    if half_close {
+        stream.shutdown(std::net::Shutdown::Write).unwrap();
+    }
+    read_response(&mut stream)
+}
+
+/// A POST with an arbitrary (possibly binary) body and content type.
+fn raw_post(path: &str, content_type: &str, body: &[u8]) -> Vec<u8> {
+    let mut req = format!(
+        "POST {path} HTTP/1.1\r\nHost: hec-test\r\nConnection: close\r\n\
+         Content-Type: {content_type}\r\nContent-Length: {}\r\n\r\n",
+        body.len()
+    )
+    .into_bytes();
+    req.extend_from_slice(body);
+    req
+}
+
+/// A chunked POST: `frames` are pre-formatted chunk lines joined with CRLF
+/// (the trailing `0` chunk and blank line must be included by the caller).
+fn chunked_post(path: &str, extra_headers: &str, frames: &str) -> Vec<u8> {
+    format!(
+        "POST {path} HTTP/1.1\r\nHost: hec-test\r\nConnection: close\r\n\
+         Content-Type: application/json\r\n{extra_headers}\
+         Transfer-Encoding: chunked\r\n\r\n{}",
+        frames.replace('\n', "\r\n")
+    )
+    .into_bytes()
+}
+
+/// Split a JSON body into 7-byte chunks of valid chunked framing.
+fn chunk_frames(body: &str) -> String {
+    let mut out = String::new();
+    for piece in body.as_bytes().chunks(7) {
+        out.push_str(&format!("{:x}\n", piece.len()));
+        out.push_str(std::str::from_utf8(piece).unwrap());
+        out.push('\n');
+    }
+    out.push_str("0\n\n");
+    out
+}
+
+/// Drop every `timing` subobject (queue/compute micros are the one
+/// legitimately nondeterministic part of a response) so the rest can be
+/// compared byte-for-byte.
+fn strip_timing(v: &jsonlite::Value) -> jsonlite::Value {
+    match v {
+        jsonlite::Value::Obj(m) => jsonlite::Value::Obj(
+            m.iter()
+                .filter(|(k, _)| k.as_str() != "timing")
+                .map(|(k, x)| (k.clone(), strip_timing(x)))
+                .collect(),
+        ),
+        jsonlite::Value::Arr(a) => jsonlite::Value::Arr(a.iter().map(strip_timing).collect()),
+        other => other.clone(),
+    }
+}
+
+fn comparable(text: &str) -> String {
+    strip_timing(&jsonlite::parse(text).unwrap()).to_json()
+}
+
+/// The tentpole's wire-parity gate: the same logical request sent three
+/// ways — buffered JSON, chunked JSON, raw binary — must produce
+/// byte-identical response JSON (timing subobject aside), for both
+/// `/v1/classify` and `/v1/classify/batch`.
+#[test]
+fn streaming_chunked_and_binary_ingestion_are_byte_identical() {
+    let (server, gateway) = start(Backend::FeatureCount);
+    let addr = gateway.local_addr();
+    let p = Pipeline::new(&cfg(Backend::FeatureCount)).unwrap();
+    let n = 4;
+    let (images, _) = workload(&p, n, 424_242);
+    let img_len = p.image_len();
+
+    let reqs: Vec<ClassifyRequest> = (0..n)
+        .map(|i| {
+            let mut r = ClassifyRequest::new(images[i * img_len..(i + 1) * img_len].to_vec());
+            r.top_k = 1 + (i % 3);
+            r.request_id = Some(format!("parity-{i}"));
+            if i == 1 {
+                r.return_features = true;
+            }
+            r
+        })
+        .collect();
+
+    // --- /v1/classify, all three encodings of request 0 ------------------
+    let body = reqs[0].to_value().to_json();
+    let (s1, buffered) = http(addr, "POST", "/v1/classify", Some(&body));
+    let (s2, chunked) = send_raw(
+        addr,
+        &chunked_post("/v1/classify", "", &chunk_frames(&body)),
+        false,
+    );
+    let (s3, bin) = send_raw(
+        addr,
+        &raw_post(
+            "/v1/classify",
+            binary::CONTENT_TYPE,
+            &binary::encode_batch(&reqs[..1]),
+        ),
+        false,
+    );
+    assert_eq!((s1, s2, s3), (200, 200, 200), "{buffered} {chunked} {bin}");
+    assert_eq!(comparable(&buffered), comparable(&chunked));
+    assert_eq!(comparable(&buffered), comparable(&bin));
+
+    // --- /v1/classify/batch, all three encodings of the full set ---------
+    let items: Vec<String> = reqs.iter().map(|r| r.to_value().to_json()).collect();
+    let body = format!("{{\"requests\": [{}]}}", items.join(","));
+    let (s1, buffered) = http(addr, "POST", "/v1/classify/batch", Some(&body));
+    let (s2, chunked) = send_raw(
+        addr,
+        &chunked_post("/v1/classify/batch", "", &chunk_frames(&body)),
+        false,
+    );
+    let (s3, bin) = send_raw(
+        addr,
+        &raw_post(
+            "/v1/classify/batch",
+            binary::CONTENT_TYPE,
+            &binary::encode_batch(&reqs),
+        ),
+        false,
+    );
+    assert_eq!((s1, s2, s3), (200, 200, 200), "{buffered} {chunked} {bin}");
+    assert_eq!(comparable(&buffered), comparable(&chunked));
+    assert_eq!(comparable(&buffered), comparable(&bin));
+
+    // Response ordering and ids survive every encoding.
+    let v = jsonlite::parse(&bin).unwrap();
+    let responses = v.get("responses").unwrap().as_array().unwrap();
+    for (i, rv) in responses.iter().enumerate() {
+        let resp = ClassifyResponse::from_value(rv).unwrap();
+        assert_eq!(resp.request_id.as_deref(), Some(&*format!("parity-{i}")));
+    }
+    gateway.shutdown();
+    server.shutdown();
+}
+
+/// Every new malformed-input class maps to its documented status + stable
+/// error code over a real socket — no hangs, no connection resets without
+/// a response.
+#[test]
+fn streaming_error_paths_return_stable_codes() {
+    let (server, gateway) = start(Backend::FeatureCount);
+    let addr = gateway.local_addr();
+    let assert_err = |(status, text): (u16, String), want_status: u16, want_code: ErrorCode| {
+        assert_eq!(status, want_status, "{text}");
+        let err = ApiError::from_value(&jsonlite::parse(&text).unwrap()).unwrap();
+        assert_eq!(err.code, want_code, "{text}");
+    };
+
+    // Bad chunk size line -> 400 MALFORMED_REQUEST.
+    assert_err(
+        send_raw(addr, &chunked_post("/v1/classify", "", "zz\n{}\n0\n\n"), false),
+        400,
+        ErrorCode::MalformedRequest,
+    );
+    // A chunk size declared over the body cap fails fast -> 413.
+    assert_err(
+        send_raw(
+            addr,
+            &chunked_post("/v1/classify", "", "ffffffffff\n"),
+            false,
+        ),
+        413,
+        ErrorCode::MalformedRequest,
+    );
+    // Truncated chunked body (client half-closes mid-chunk) -> 400.
+    assert_err(
+        send_raw(
+            addr,
+            &chunked_post("/v1/classify", "", "a\n{\"image\""),
+            true,
+        ),
+        400,
+        ErrorCode::MalformedRequest,
+    );
+    // Oversized chunk-size line -> 400.
+    let long_line = format!("2;{}\nok\n0\n\n", "e".repeat(400));
+    assert_err(
+        send_raw(addr, &chunked_post("/v1/classify", "", &long_line), false),
+        400,
+        ErrorCode::MalformedRequest,
+    );
+    // Unsupported transfer coding -> 501.
+    assert_err(
+        send_raw(
+            addr,
+            b"POST /v1/classify HTTP/1.1\r\nTransfer-Encoding: gzip\r\n\r\n",
+            false,
+        ),
+        501,
+        ErrorCode::MalformedRequest,
+    );
+    // Content-Length alongside chunked -> 400.
+    assert_err(
+        send_raw(
+            addr,
+            &chunked_post("/v1/classify", "Content-Length: 5\r\n", "0\n\n"),
+            false,
+        ),
+        400,
+        ErrorCode::MalformedRequest,
+    );
+    // Binary: bad magic -> 400 MALFORMED_REQUEST.
+    assert_err(
+        send_raw(
+            addr,
+            &raw_post("/v1/classify", binary::CONTENT_TYPE, b"NOPE\x01\x00\x00\x00\x00"),
+            false,
+        ),
+        400,
+        ErrorCode::MalformedRequest,
+    );
+    // Binary: truncated frame -> 400 MALFORMED_REQUEST.
+    let whole = binary::encode_batch(&[ClassifyRequest::new(vec![0.5; 4])]);
+    assert_err(
+        send_raw(
+            addr,
+            &raw_post("/v1/classify", binary::CONTENT_TYPE, &whole[..whole.len() - 3]),
+            false,
+        ),
+        400,
+        ErrorCode::MalformedRequest,
+    );
+    // Binary: two items on the single endpoint -> 400 INVALID_ARGUMENT.
+    let two = binary::encode_batch(&[
+        ClassifyRequest::new(vec![0.0; 4]),
+        ClassifyRequest::new(vec![1.0; 4]),
+    ]);
+    assert_err(
+        send_raw(addr, &raw_post("/v1/classify", binary::CONTENT_TYPE, &two), false),
+        400,
+        ErrorCode::InvalidArgument,
+    );
+    // Non-UTF8 JSON body -> 400 MALFORMED_REQUEST.
+    assert_err(
+        send_raw(
+            addr,
+            &raw_post("/v1/classify", "application/json", b"{\"image\": [\xff\xfe]}"),
+            false,
+        ),
+        400,
+        ErrorCode::MalformedRequest,
+    );
+    gateway.shutdown();
+    server.shutdown();
+}
+
+/// Chunked trailers are consumed, not leaked into the next request: a
+/// keep-alive connection survives a trailered chunked upload.
+#[test]
+fn chunked_trailers_and_keep_alive_interoperate() {
+    let (server, gateway) = start(Backend::FeatureCount);
+    let img_len = server.handle.caps().image_len;
+    let body = ClassifyRequest::new(vec![0.0; img_len]).to_value().to_json();
+
+    let mut frames = String::new();
+    for piece in body.as_bytes().chunks(100) {
+        frames.push_str(&format!("{:x}\n", piece.len()));
+        frames.push_str(std::str::from_utf8(piece).unwrap());
+        frames.push('\n');
+    }
+    frames.push_str("0\nX-Checksum: ab\nX-Other: cd\n\n");
+    let wire = format!(
+        "POST /v1/classify HTTP/1.1\r\nHost: hec-test\r\n\
+         Content-Type: application/json\r\nTransfer-Encoding: chunked\r\n\r\n{}",
+        frames.replace('\n', "\r\n")
+    );
+
+    let mut stream = TcpStream::connect(gateway.local_addr()).unwrap();
+    stream.write_all(wire.as_bytes()).unwrap();
+    let (status, text) = read_response(&mut stream);
+    assert_eq!(status, 200, "{text}");
+    // Same connection, next request: the trailers must not poison it.
+    send_request(&mut stream, "GET", "/healthz", None, true);
+    let (status, _) = read_response(&mut stream);
+    assert_eq!(status, 200);
+    gateway.shutdown();
+    server.shutdown();
 }
 
 #[test]

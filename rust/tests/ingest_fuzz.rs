@@ -1,0 +1,416 @@
+//! Deterministic seeded fuzz for the streaming ingestion stack.
+//!
+//! Three attack surfaces, one invariant each:
+//!
+//! 1. JSON: the pull parser and streaming request decoders must agree with
+//!    the `jsonlite` tree parser byte-for-byte — same accept/reject
+//!    decision, same error message, same error byte offset — on seeded
+//!    corpus documents (`rust/tests/corpus/`) and thousands of mutations
+//!    of them.
+//! 2. Chunked transfer-encoding: `read_request` must reassemble valid
+//!    chunked bodies exactly, regardless of how the bytes are fragmented
+//!    across reads, and must turn every truncation or framing corruption
+//!    into a clean `ReadError` — never a panic, never a hang.
+//! 3. Raw-binary frames: `encode_batch`/`decode_batch` must round-trip
+//!    bit-exactly, and every truncation or byte flip of a valid frame must
+//!    decode to a stable error, never a panic.
+//!
+//! Everything is seeded (`hec::rng::Rng`, SplitMix64) so a failure
+//! reproduces exactly.  `HEC_FUZZ_CASES` scales the per-group case count
+//! (default keeps `cargo test --release` in the tier-1 budget; CI raises
+//! it).
+
+use std::io::{BufReader, Read};
+
+use hec::api::stream::{decode_batch_envelope, decode_classify_request};
+use hec::api::{binary, ApiError, ClassifyRequest, ErrorCode};
+use hec::config::Backend;
+use hec::gateway::http::{read_request, ReadError, MAX_BODY_BYTES};
+use hec::jsonlite::stream::PullParser;
+use hec::jsonlite::{self};
+use hec::rng::Rng;
+
+/// Seed corpus: checked-in interesting inputs that mutations start from.
+const SEEDS: &[&str] = &[
+    include_str!("corpus/classify_single.json"),
+    include_str!("corpus/classify_batch.json"),
+    include_str!("corpus/numbers.json"),
+    include_str!("corpus/strings.json"),
+    include_str!("corpus/malformed.json"),
+];
+
+fn cases(default: usize) -> usize {
+    std::env::var("HEC_FUZZ_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default)
+}
+
+/// Bytes that matter to a JSON lexer — mutations draw from these so they
+/// hit grammar edges instead of just corrupting string payloads.
+const INTERESTING: &[u8] = b"{}[]:,\"\\eE.-+0159u truefalsenull\r\n\t\x00\x7f";
+
+fn mutate(rng: &mut Rng, seed: &str) -> String {
+    let mut b = seed.as_bytes().to_vec();
+    for _ in 0..1 + rng.below(4) {
+        match rng.below(4) {
+            0 if !b.is_empty() => {
+                let i = rng.below(b.len());
+                b[i] = INTERESTING[rng.below(INTERESTING.len())];
+            }
+            1 => {
+                let i = rng.below(b.len() + 1);
+                b.insert(i, INTERESTING[rng.below(INTERESTING.len())]);
+            }
+            2 if !b.is_empty() => {
+                b.remove(rng.below(b.len()));
+            }
+            _ if !b.is_empty() => {
+                b.truncate(rng.below(b.len()) + 1);
+            }
+            _ => {}
+        }
+    }
+    b.truncate(4096);
+    // The gateway only hands UTF-8 to the parsers (`body_text` rejects the
+    // rest), so lossy-decode mutations the same way a client never could.
+    String::from_utf8_lossy(&b).into_owned()
+}
+
+/// Iterate the corpus verbatim first, then endless seeded mutations.
+fn fuzz_inputs(rng: &mut Rng, case: usize) -> String {
+    if case < SEEDS.len() {
+        SEEDS[case].to_string()
+    } else {
+        mutate(rng, SEEDS[case % SEEDS.len()])
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Group 1: JSON parity
+// ---------------------------------------------------------------------------
+
+#[test]
+fn fuzz_pull_parser_matches_tree_parser() {
+    let mut rng = Rng::new(0x19e5_7000_0001);
+    for case in 0..cases(800) {
+        let text = fuzz_inputs(&mut rng, case);
+        let tree = jsonlite::parse(&text)
+            .map(|_| ())
+            .map_err(|e| e.to_string());
+        let mut p = PullParser::new(&text);
+        p.skip_ws();
+        let pull = p
+            .skip_value()
+            .and_then(|_| p.end())
+            .map_err(|e| e.to_string());
+        assert_eq!(tree, pull, "raw parser parity diverged on {text:?}");
+    }
+}
+
+fn malformed(e: impl std::fmt::Display) -> ApiError {
+    ApiError::new(ErrorCode::MalformedRequest, format!("invalid JSON: {e}"))
+}
+
+fn err_parts(e: &ApiError) -> (ErrorCode, &str) {
+    (e.code, e.message.as_str())
+}
+
+fn assert_item_parity(
+    t: &Result<ClassifyRequest, ApiError>,
+    s: &Result<ClassifyRequest, ApiError>,
+    text: &str,
+) {
+    match (t, s) {
+        (Ok(a), Ok(b)) => {
+            let ab: Vec<u32> = a.image.iter().map(|p| p.to_bits()).collect();
+            let bb: Vec<u32> = b.image.iter().map(|p| p.to_bits()).collect();
+            assert_eq!(ab, bb, "image bits diverged on {text:?}");
+            assert_eq!(a.top_k, b.top_k, "top_k diverged on {text:?}");
+            assert_eq!(a.backend, b.backend, "backend diverged on {text:?}");
+            assert_eq!(
+                a.return_features, b.return_features,
+                "return_features diverged on {text:?}"
+            );
+            assert_eq!(a.request_id, b.request_id, "request_id diverged on {text:?}");
+        }
+        (Err(a), Err(b)) => {
+            assert_eq!(err_parts(a), err_parts(b), "error diverged on {text:?}");
+        }
+        (a, b) => panic!("accept/reject diverged on {text:?}: tree={a:?} stream={b:?}"),
+    }
+}
+
+#[test]
+fn fuzz_streaming_single_decode_matches_tree_decode() {
+    let mut rng = Rng::new(0x19e5_7000_0002);
+    for case in 0..cases(800) {
+        let text = fuzz_inputs(&mut rng, case);
+        let tree = jsonlite::parse(&text)
+            .map_err(malformed)
+            .and_then(|v| ClassifyRequest::from_value(&v));
+        let streamed = decode_classify_request(&text, 16);
+        assert_item_parity(&tree, &streamed, &text);
+    }
+}
+
+#[test]
+fn fuzz_streaming_batch_decode_matches_tree_decode() {
+    fn tree_batch(text: &str) -> Result<Vec<Result<ClassifyRequest, ApiError>>, ApiError> {
+        let doc = jsonlite::parse(text).map_err(malformed)?;
+        let items = doc
+            .get("requests")
+            .and_then(jsonlite::Value::as_array)
+            .ok_or_else(|| {
+                ApiError::new(
+                    ErrorCode::InvalidArgument,
+                    "body must be {\"requests\": [...]}",
+                )
+            })?;
+        Ok(items.iter().map(ClassifyRequest::from_value).collect())
+    }
+
+    let mut rng = Rng::new(0x19e5_7000_0003);
+    for case in 0..cases(800) {
+        let text = fuzz_inputs(&mut rng, case);
+        let tree = tree_batch(&text);
+        let streamed = decode_batch_envelope(&text, 16, |r| r);
+        match (&tree, &streamed) {
+            (Ok(ti), Ok(si)) => {
+                assert_eq!(ti.len(), si.len(), "batch len diverged on {text:?}");
+                for (t, s) in ti.iter().zip(si) {
+                    assert_item_parity(t, s, &text);
+                }
+            }
+            (Err(a), Err(b)) => {
+                assert_eq!(err_parts(a), err_parts(b), "batch error diverged on {text:?}");
+            }
+            (a, b) => panic!("batch accept/reject diverged on {text:?}: tree={a:?} stream={b:?}"),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Group 2: chunked transfer-encoding
+// ---------------------------------------------------------------------------
+
+/// A reader that hands out the underlying bytes in a seeded, irregular
+/// fragment schedule, so chunk-size lines and CRLF terminators straddle
+/// `fill_buf` boundaries in every way.
+struct Chopper {
+    data: Vec<u8>,
+    pos: usize,
+    sizes: Vec<usize>,
+    k: usize,
+}
+
+impl Chopper {
+    fn new(data: Vec<u8>, rng: &mut Rng) -> Self {
+        let sizes = (0..17).map(|_| 1 + rng.below(13)).collect();
+        Chopper {
+            data,
+            pos: 0,
+            sizes,
+            k: 0,
+        }
+    }
+}
+
+impl Read for Chopper {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        if self.pos >= self.data.len() {
+            return Ok(0);
+        }
+        let want = self.sizes[self.k % self.sizes.len()];
+        self.k += 1;
+        let n = want.min(buf.len()).min(self.data.len() - self.pos);
+        buf[..n].copy_from_slice(&self.data[self.pos..self.pos + n]);
+        self.pos += n;
+        Ok(n)
+    }
+}
+
+const CHUNKED_HEAD: &[u8] = b"POST /v1/classify HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n";
+
+/// Encode `payload` as a chunked request with seeded chunk sizes, optional
+/// extensions and trailers.
+fn chunked_request(rng: &mut Rng, payload: &[u8]) -> Vec<u8> {
+    let mut out = CHUNKED_HEAD.to_vec();
+    let mut pos = 0;
+    while pos < payload.len() {
+        let n = (1 + rng.below(19)).min(payload.len() - pos);
+        out.extend_from_slice(format!("{n:x}").as_bytes());
+        if rng.below(4) == 0 {
+            out.extend_from_slice(b";ext=\"v;1\"");
+        }
+        out.extend_from_slice(b"\r\n");
+        out.extend_from_slice(&payload[pos..pos + n]);
+        out.extend_from_slice(b"\r\n");
+        pos += n;
+    }
+    out.extend_from_slice(b"0\r\n");
+    if rng.below(3) == 0 {
+        out.extend_from_slice(b"X-Trailer: ignored\r\nX-More: 2\r\n");
+    }
+    out.extend_from_slice(b"\r\n");
+    out
+}
+
+fn parse_fragmented(bytes: Vec<u8>, rng: &mut Rng) -> Result<hec::gateway::http::Request, ReadError> {
+    let cap = [1, 2, 3, 5, 8, 64][rng.below(6)];
+    let mut reader = BufReader::with_capacity(cap, Chopper::new(bytes, rng));
+    read_request(&mut reader)
+}
+
+#[test]
+fn fuzz_chunked_valid_bodies_reassemble_exactly() {
+    let mut rng = Rng::new(0x19e5_7000_0004);
+    for case in 0..cases(300) {
+        let len = rng.below(600);
+        let payload: Vec<u8> = (0..len).map(|_| rng.below(256) as u8).collect();
+        let wire = chunked_request(&mut rng, &payload);
+        match parse_fragmented(wire, &mut rng) {
+            Ok(req) => assert_eq!(req.body, payload, "case {case}: body mangled"),
+            Err(e) => panic!("case {case}: valid chunked request rejected: {e:?}"),
+        }
+    }
+}
+
+#[test]
+fn fuzz_chunked_corruptions_fail_cleanly() {
+    let mut rng = Rng::new(0x19e5_7000_0005);
+    for case in 0..cases(600) {
+        let len = rng.below(200);
+        let payload: Vec<u8> = (0..len).map(|_| b'a' + (rng.below(26) as u8)).collect();
+        let mut wire = chunked_request(&mut rng, &payload);
+        let head_len = CHUNKED_HEAD.len();
+        // Corrupt only the body framing; a mangled head is another test's
+        // problem and would mask the chunked-reader edges.
+        match rng.below(3) {
+            0 => {
+                // truncate anywhere inside the body (incl. mid size-line)
+                let cut = head_len + rng.below(wire.len() - head_len);
+                wire.truncate(cut);
+            }
+            1 => {
+                let i = head_len + rng.below(wire.len() - head_len);
+                wire[i] = INTERESTING[rng.below(INTERESTING.len())];
+            }
+            _ => {
+                let i = head_len + rng.below(wire.len() - head_len);
+                wire.insert(i, INTERESTING[rng.below(INTERESTING.len())]);
+            }
+        }
+        // Must terminate with Ok or a clean error — never panic.  (A
+        // corruption can still parse: e.g. flipping a payload byte.)
+        match parse_fragmented(wire, &mut rng) {
+            Ok(req) => assert!(req.body.len() <= MAX_BODY_BYTES),
+            Err(ReadError::Eof) | Err(ReadError::Bad(..)) => {}
+        }
+    }
+}
+
+#[test]
+fn fuzz_chunked_every_truncation_of_corpus_seed_errors() {
+    // The checked-in seed uses LF line endings (git-friendly); the wire
+    // format is CRLF.
+    let body = include_str!("corpus/chunked_ok.txt").replace('\n', "\r\n");
+    let mut wire = CHUNKED_HEAD.to_vec();
+    wire.extend_from_slice(body.as_bytes());
+
+    let mut rng = Rng::new(0x19e5_7000_0006);
+    let full = parse_fragmented(wire.clone(), &mut rng).expect("corpus seed parses");
+    assert_eq!(full.body, br#"{"image": [0.5], "top_k": 1}"#);
+
+    for cut in CHUNKED_HEAD.len()..wire.len() {
+        match parse_fragmented(wire[..cut].to_vec(), &mut rng) {
+            Err(ReadError::Eof) | Err(ReadError::Bad(..)) => {}
+            Ok(_) => panic!("truncation at {cut} still parsed"),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Group 3: raw-binary frames
+// ---------------------------------------------------------------------------
+
+fn random_request(rng: &mut Rng) -> ClassifyRequest {
+    let image: Vec<f32> = (0..rng.below(48))
+        .map(|_| rng.range(-4.0, 4.0) as f32)
+        .collect();
+    let mut req = ClassifyRequest::new(image);
+    req.top_k = 1 + rng.below(5);
+    if rng.below(3) == 0 {
+        req.backend = ["sim", "acam"][rng.below(2)].parse::<Backend>().ok();
+    }
+    if rng.below(3) == 0 {
+        req.return_features = true;
+    }
+    if rng.below(4) == 0 {
+        req.request_id = Some(format!("id-{}", rng.below(10_000)));
+    }
+    req
+}
+
+#[test]
+fn fuzz_binary_roundtrips_bit_exactly() {
+    let mut rng = Rng::new(0x19e5_7000_0007);
+    for case in 0..cases(300) {
+        let reqs: Vec<ClassifyRequest> = (0..rng.below(6)).map(|_| random_request(&mut rng)).collect();
+        let wire = binary::encode_batch(&reqs);
+        let back = binary::decode_batch(&wire)
+            .unwrap_or_else(|e| panic!("case {case}: own encoding rejected: {e:?}"));
+        assert_eq!(back.len(), reqs.len());
+        for (orig, item) in reqs.iter().zip(&back) {
+            let got = item.as_ref().expect("round-tripped item decodes");
+            assert_item_parity(&Ok(orig.clone()), &Ok(got.clone()), "binary roundtrip");
+        }
+    }
+}
+
+#[test]
+fn fuzz_binary_mutations_never_panic_and_truncations_error() {
+    let mut rng = Rng::new(0x19e5_7000_0008);
+    let reqs: Vec<ClassifyRequest> = (0..3).map(|_| random_request(&mut rng)).collect();
+    let wire = binary::encode_batch(&reqs);
+
+    // Every strict prefix is a framing error: the header commits to an
+    // item count the bytes can no longer satisfy.
+    for cut in 0..wire.len() {
+        let err = binary::decode_batch(&wire[..cut])
+            .err()
+            .unwrap_or_else(|| panic!("truncation at {cut} decoded"));
+        assert_eq!(err.code, ErrorCode::MalformedRequest, "truncation at {cut}");
+    }
+
+    // Byte flips: any outcome but a panic.  Flips inside a meta block may
+    // surface as per-item errors rather than whole-call ones.
+    for _ in 0..cases(600) {
+        let mut b = wire.clone();
+        match rng.below(3) {
+            0 => {
+                let i = rng.below(b.len());
+                b[i] = b[i].wrapping_add(1 + rng.below(255) as u8);
+            }
+            1 => b.truncate(rng.below(b.len() + 1)),
+            _ => {
+                let i = rng.below(b.len());
+                b.insert(i, rng.below(256) as u8);
+            }
+        }
+        let _ = binary::decode_batch(&b);
+        let _ = binary::decode_single(&b);
+    }
+}
+
+#[test]
+fn fuzz_binary_decode_single_enforces_item_count() {
+    let mut rng = Rng::new(0x19e5_7000_0009);
+    for n in [0usize, 2, 5] {
+        let reqs: Vec<ClassifyRequest> = (0..n).map(|_| random_request(&mut rng)).collect();
+        let err = binary::decode_single(&binary::encode_batch(&reqs))
+            .err()
+            .expect("multi/zero-item frame must be rejected for /v1/classify");
+        assert_eq!(err.code, ErrorCode::InvalidArgument);
+    }
+}
