@@ -1,0 +1,223 @@
+//! Drift-aware serving bench: ages the ACAM array mid-serving and measures
+//! the full degradation ladder end-to-end — accuracy decay after the fault,
+//! detection latency (in requests) until the canary probe catches it, the
+//! re-programming energy charged to the ledger, and post-recovery accuracy.
+//! Phase 2 injects unhealable stuck-at cells and shows the shard landing in
+//! `DigitalFallback` while every request keeps succeeding.
+//!
+//! Everything is deterministic under fixed seeds: serial blocking submits
+//! (`max_batch = 1`, `max_wait_us = 0`) make the fault/probe arithmetic
+//! exact, and per-request "accuracy" is agreement with a digital
+//! `FeatureCount` reference pipeline computed up front.  `HEC_BENCH_SMOKE=1`
+//! shrinks the request counts for CI; the JSON artifact (`BENCH_drift.json`)
+//! is the deliverable.
+
+use std::time::Instant;
+
+use hec::benchkit::{section, BenchResult};
+use hec::config::{Backend, ServeConfig};
+use hec::coordinator::{ClassifySurface, Pipeline, ShardSet};
+use hec::dataset::SyntheticDataset;
+use hec::faults::BackendState;
+use hec::jsonlite::Value;
+use hec::runtime::Meta;
+
+/// One serving phase under a fault plan: serial blocking requests against a
+/// single-shard ACAM deployment, scored per-request against `truth`.
+struct PhaseOut {
+    /// Per-request agreement with the digital reference.
+    agree: Vec<bool>,
+    /// First request index whose response carried `degraded: true`.
+    degraded_from: Option<usize>,
+    state: BackendState,
+    canary_accuracy: f64,
+    reprograms: u64,
+    energy_nj: f64,
+    secs: f64,
+    p50_us: u64,
+    p99_us: u64,
+}
+
+fn run_phase(plan: &str, canary_every: u64, images: &[Vec<f32>], truth: &[usize]) -> PhaseOut {
+    let mut cfg = ServeConfig {
+        artifacts_dir: "artifacts".into(),
+        backend: Backend::AcamSim,
+        ..Default::default()
+    };
+    cfg.batch.max_batch = 1; // serial submits -> exact fault/probe arithmetic
+    cfg.batch.max_wait_us = 0;
+    cfg.faults.plan = Some(plan.to_string());
+    cfg.faults.canary_every = canary_every;
+    let set = ShardSet::start(&cfg).unwrap();
+
+    let t0 = Instant::now();
+    let mut agree = Vec::with_capacity(images.len());
+    let mut degraded_from = None;
+    for (i, img) in images.iter().enumerate() {
+        let resp = set.handle.classify_blocking(img.clone()).unwrap();
+        if degraded_from.is_none() && resp.degraded == Some(true) {
+            degraded_from = Some(i);
+        }
+        agree.push(resp.predictions[0].class == truth[i]);
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    let snap = set.handle.snapshot();
+    let (state, canary_accuracy, reprograms) = set.handle.shard_ladder().unwrap()[0];
+    let energy_nj = set.handle.shard_metrics(0).energy_nj();
+    set.shutdown();
+    PhaseOut {
+        agree,
+        degraded_from,
+        state,
+        canary_accuracy,
+        reprograms,
+        energy_nj,
+        secs,
+        p50_us: snap.latency_p50_us,
+        p99_us: snap.latency_p99_us,
+    }
+}
+
+fn rate(agree: &[bool], lo: usize, hi: usize) -> f64 {
+    let window = &agree[lo.min(agree.len())..hi.min(agree.len())];
+    if window.is_empty() {
+        return f64::NAN;
+    }
+    window.iter().filter(|&&a| a).count() as f64 / window.len() as f64
+}
+
+/// Same field mapping as the e2e serving bench: `mean_us`/`min_us` =
+/// 1e6 / request throughput; `p50_us`/`p99_us` = end-to-end request
+/// latency percentile upper bounds.
+fn row(name: &str, requests: usize, secs: f64, p50_us: u64, p99_us: u64) -> BenchResult {
+    let tput = requests as f64 / secs;
+    let inv = std::time::Duration::from_secs_f64(if tput > 0.0 { 1.0 / tput } else { 0.0 });
+    BenchResult {
+        name: name.to_string(),
+        iters: requests,
+        mean: inv,
+        p50: std::time::Duration::from_micros(p50_us),
+        p99: std::time::Duration::from_micros(p99_us),
+        min: inv,
+    }
+}
+
+fn main() {
+    let smoke = std::env::var("HEC_BENCH_SMOKE").is_ok();
+    // `fault_at` is a multiple of `every`, so the probe arithmetic is exact:
+    // the fault strikes right after a clean probe, and the next probe (one
+    // full cadence later) is the one that catches it.
+    let (total, fault_at, every) = if smoke { (60usize, 20usize, 10u64) } else { (200, 80, 40) };
+    let recover_at = fault_at + every as usize;
+    let have_artifacts = std::path::Path::new("artifacts/meta.json").is_file();
+    if !have_artifacts {
+        println!("drift_serving: no artifacts/ — serving the synthetic fallback deployment");
+    }
+
+    // Workload + digital ground truth, computed up front so the serve loops
+    // time only the deployment under test.  At the ideal corner the analogue
+    // back-end agrees with this reference exactly (the calibration
+    // contract), so "agreement" reads directly as relative accuracy.
+    let meta = Meta::load_or_synthetic("artifacts").unwrap();
+    let ds = SyntheticDataset::new(3_141_593, total, meta.norm.mean as f32, meta.norm.std as f32);
+    let images: Vec<Vec<f32>> = (0..total).map(|i| ds.image(i)).collect();
+    let ref_cfg = ServeConfig {
+        artifacts_dir: "artifacts".into(),
+        backend: Backend::FeatureCount,
+        ..Default::default()
+    };
+    let mut reference = Pipeline::new(&ref_cfg).unwrap();
+    let truth: Vec<usize> = images
+        .iter()
+        .map(|img| reference.classify_batch(img, 1).unwrap().remove(0).top1().class)
+        .collect();
+    let s = reference.store.set(1).unwrap();
+    let expected_reprogram_nj = hec::energy::EnergyModel::default()
+        .reprogram_nj(s.num_templates() as u64, s.num_features() as u64);
+
+    section(&format!(
+        "phase 1: drift at request {fault_at}, canary every {every} -> demote, re-program, recover"
+    ));
+    let drift = run_phase(&format!("drift@{fault_at}=500"), every, &images, &truth);
+    let pre = rate(&drift.agree, 0, fault_at);
+    let during = rate(&drift.agree, fault_at, recover_at);
+    let post = rate(&drift.agree, recover_at, total);
+    // Detection latency: requests served on the degraded array before the
+    // ladder healed it = distance from the fault to the last misagreement.
+    let last_bad = drift.agree.iter().rposition(|&a| !a);
+    let detection = last_bad.map_or(0, |i| i + 1 - fault_at);
+    println!("  accuracy pre/during/post: {pre:.3} / {during:.3} / {post:.3}");
+    println!("  detection latency: {detection} requests (cadence {every})");
+    println!("  reprograms: {} (+{expected_reprogram_nj:.1} nJ each)", drift.reprograms);
+    assert_eq!(drift.state, BackendState::Healthy, "ladder must recover");
+    assert_eq!(drift.canary_accuracy, 1.0, "verify probe on the re-programmed array");
+    assert_eq!(drift.reprograms, 1, "exactly one re-program");
+    assert_eq!(pre, 1.0, "ideal-corner serving must match the digital reference");
+    assert_eq!(post, 1.0, "recovered serving must match the digital reference");
+    assert!(during < 0.9, "drifted window should misclassify (got {during})");
+    assert!(detection <= every as usize, "detection within one canary cadence");
+    assert!(
+        drift.degraded_from.is_none(),
+        "sub-cadence recovery never flags a response degraded"
+    );
+
+    section(&format!(
+        "phase 2: all cells stuck at request {fault_at} -> re-program fails, digital fallback"
+    ));
+    let stuck = run_phase(&format!("stuck@{fault_at}=1.0"), every, &images, &truth);
+    let stuck_pre = rate(&stuck.agree, 0, fault_at);
+    let stuck_during = rate(&stuck.agree, fault_at, recover_at);
+    let stuck_post = rate(&stuck.agree, recover_at, total);
+    println!("  accuracy pre/during/post: {stuck_pre:.3} / {stuck_during:.3} / {stuck_post:.3}");
+    println!("  fallback from request: {:?}", stuck.degraded_from);
+    assert_eq!(stuck.state, BackendState::DigitalFallback);
+    assert_eq!(stuck.reprograms, 1, "the one failed re-program attempt");
+    assert!(stuck.canary_accuracy < 0.9, "stuck array cannot verify clean");
+    assert_eq!(stuck_pre, 1.0);
+    assert_eq!(
+        stuck.degraded_from,
+        Some(recover_at),
+        "fallback onset is exactly one cadence after the fault"
+    );
+    assert_eq!(stuck_post, 1.0, "digital fallback serves the reference answers");
+
+    let rows_owned = [
+        row("drift_recovery", total, drift.secs, drift.p50_us, drift.p99_us),
+        row("stuck_fallback", total, stuck.secs, stuck.p50_us, stuck.p99_us),
+    ];
+    let rows: Vec<&BenchResult> = rows_owned.iter().collect();
+    hec::benchkit::write_json_report(
+        "BENCH_drift.json",
+        "hec/drift_serving/v1",
+        &[
+            ("requests", Value::Num(total as f64)),
+            ("fault_at_request", Value::Num(fault_at as f64)),
+            ("canary_every", Value::Num(every as f64)),
+            ("smoke", Value::Bool(smoke)),
+            ("artifacts", Value::Bool(have_artifacts)),
+            ("drift_accuracy_pre", Value::Num(pre)),
+            ("drift_accuracy_during", Value::Num(during)),
+            ("drift_accuracy_post", Value::Num(post)),
+            ("drift_detection_requests", Value::Num(detection as f64)),
+            ("drift_reprograms", Value::Num(drift.reprograms as f64)),
+            ("drift_energy_nj", Value::Num(drift.energy_nj)),
+            ("reprogram_nj", Value::Num(expected_reprogram_nj)),
+            ("stuck_accuracy_during", Value::Num(stuck_during)),
+            ("stuck_accuracy_post", Value::Num(stuck_post)),
+            ("stuck_fallback_from", Value::Num(recover_at as f64)),
+            ("stuck_energy_nj", Value::Num(stuck.energy_nj)),
+            (
+                "row_semantics",
+                Value::Str(
+                    "mean_us/min_us = 1e6/req_throughput; p50_us/p99_us = \
+                     end-to-end request latency upper bounds"
+                        .to_string(),
+                ),
+            ),
+        ],
+        &rows,
+    )
+    .expect("write BENCH_drift.json");
+    println!("\nwrote BENCH_drift.json ({} rows)", rows.len());
+    println!("drift_serving: PASS");
+}

@@ -180,6 +180,23 @@ impl AcamArray {
         }
     }
 
+    /// Stuck-at-G fault injection: freeze each listed `(row, col)` cell's
+    /// RRAM devices at conductance `g` (see [`AcamCell::stick_at`]).
+    /// Out-of-range coordinates are ignored; returns the number of cells
+    /// actually stuck.  Selection is the caller's job (the fault injector
+    /// draws coordinates from its own RNG so the array's search stream is
+    /// untouched).
+    pub fn stick_cells(&mut self, cells: &[(usize, usize)], g: f64) -> usize {
+        let mut stuck = 0;
+        for &(r, c) in cells {
+            if let Some(cell) = self.rows.get_mut(r).and_then(|row| row.get_mut(c)) {
+                cell.stick_at(g);
+                stuck += 1;
+            }
+        }
+        stuck
+    }
+
     /// Full-row charge saturation check: with all `width` cells matching and
     /// the default periphery, the matchline must reach the sense reference
     /// within the evaluation window (design-point sanity, used in tests and
@@ -285,6 +302,20 @@ mod tests {
         let templates = vec![vec![1u8; 784]];
         let arr = ideal_array(&templates, CellKind::Charging6T4R);
         assert!(arr.full_match_headroom() >= 1.0);
+    }
+
+    #[test]
+    fn stuck_cells_stop_matching_either_bit() {
+        let t = vec![1u8; 16];
+        let mut arr = ideal_array(&[t.clone()], CellKind::Charging6T4R);
+        let qv: Vec<f64> = t.iter().map(|&b| super::super::feature_to_voltage(b as f32)).collect();
+        assert_eq!(arr.search(&qv).match_counts, vec![16]);
+        let coords: Vec<(usize, usize)> = (0..8).map(|c| (0, c)).collect();
+        assert_eq!(arr.stick_cells(&coords, super::super::rram::G_MIN), 8);
+        let out = arr.search(&qv);
+        assert_eq!(out.match_counts, vec![8], "stuck cells must reject the query bit");
+        // Out-of-range coordinates are ignored, not a panic.
+        assert_eq!(arr.stick_cells(&[(5, 0), (0, 99)], super::super::rram::G_MIN), 0);
     }
 
     #[test]

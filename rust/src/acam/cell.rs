@@ -116,6 +116,18 @@ impl AcamCell {
         }
     }
 
+    /// Stuck-at fault: freeze all four RRAM devices at conductance `g`.
+    ///
+    /// With `g_up == g_dn` both inverter thresholds collapse to VDD/2, so
+    /// the stored window degenerates to a point far from both binary query
+    /// voltages — the cell stops matching either bit value.
+    pub fn stick_at(&mut self, g: f64) {
+        self.lo_up.force_conductance(g);
+        self.lo_dn.force_conductance(g);
+        self.hi_up.force_conductance(g);
+        self.hi_dn.force_conductance(g);
+    }
+
     /// The effective window at read time (after read noise / drift).
     pub fn window(&self, var: &Variability, rng: &mut crate::rng::Rng) -> (f64, f64) {
         let lo = conductances_to_threshold(

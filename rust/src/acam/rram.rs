@@ -57,6 +57,14 @@ impl RramDevice {
         g.clamp(G_MIN, G_MAX)
     }
 
+    /// Force the stored conductance to `g` (clamped to the device window),
+    /// leaving the programming target untouched.  Models a stuck-at fault:
+    /// the filament is frozen at `g` and subsequent re-programming cannot
+    /// move it (fault injection re-applies this after every re-program).
+    pub fn force_conductance(&mut self, g: f64) {
+        self.g = g.clamp(G_MIN, G_MAX);
+    }
+
     /// Programmed conductance without noise (diagnostics).
     pub fn conductance(&self) -> f64 {
         self.g

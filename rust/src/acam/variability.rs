@@ -59,13 +59,22 @@ impl Variability {
 
     /// Scale all non-idealities by `level` (0 = ideal, 1 = typical,
     /// >1 = worst-case sweeps for the variability ablation).
+    ///
+    /// Endpoint contract (pinned by the property tests below, relied on
+    /// by the fault-injection drift schedule): `at_level(0.0)` equals
+    /// [`Variability::ideal`] field-for-field — including `age_hours`,
+    /// which previously stayed at the typical corner's 24 h and made
+    /// "level 0" carry latent drift state — and `at_level(1.0)` equals
+    /// [`Variability::typical`].  Every field is monotone non-decreasing
+    /// in `level`, so a drift schedule stepping the level upward can
+    /// never make the device corner *less* severe.
     pub fn at_level(level: f64) -> Self {
         let t = Self::typical();
         Variability {
             program_sigma: t.program_sigma * level,
             read_sigma: t.read_sigma * level,
             drift_nu: t.drift_nu * level,
-            age_hours: t.age_hours,
+            age_hours: t.age_hours * level,
             sense_offset_sigma: t.sense_offset_sigma * level,
             wta_offset_v: t.wta_offset_v * level,
         }
@@ -95,5 +104,62 @@ mod tests {
         let v1 = Variability::at_level(1.0);
         let v2 = Variability::at_level(2.0);
         assert!((v2.program_sigma - 2.0 * v1.program_sigma).abs() < 1e-12);
+    }
+
+    fn fields(v: &Variability) -> [f64; 6] {
+        [
+            v.program_sigma,
+            v.read_sigma,
+            v.drift_nu,
+            v.age_hours,
+            v.sense_offset_sigma,
+            v.wta_offset_v,
+        ]
+    }
+
+    #[test]
+    fn level_zero_equals_ideal_every_field() {
+        assert_eq!(fields(&Variability::at_level(0.0)), fields(&Variability::ideal()));
+    }
+
+    #[test]
+    fn level_one_equals_typical_every_field() {
+        assert_eq!(fields(&Variability::at_level(1.0)), fields(&Variability::typical()));
+    }
+
+    #[test]
+    fn every_field_is_monotone_in_level() {
+        let sweep: Vec<f64> = (0..=32).map(|i| i as f64 * 0.125).collect();
+        for pair in sweep.windows(2) {
+            let lo = fields(&Variability::at_level(pair[0]));
+            let hi = fields(&Variability::at_level(pair[1]));
+            for (a, b) in lo.iter().zip(hi.iter()) {
+                assert!(b >= a, "field regressed between levels {} and {}", pair[0], pair[1]);
+            }
+        }
+    }
+
+    #[test]
+    fn drift_severity_is_monotone_in_level() {
+        // The retention factor G(t)/G0 = age^-nu must only shrink (more
+        // drift) as the level rises past the point where drift engages
+        // (age_hours > 1, i.e. level > 1/24).
+        let factor = |level: f64| {
+            let v = Variability::at_level(level);
+            if v.drift_nu > 0.0 && v.age_hours > 1.0 {
+                v.age_hours.powf(-v.drift_nu)
+            } else {
+                1.0
+            }
+        };
+        let sweep: Vec<f64> = (0..=40).map(|i| i as f64 * 0.1).collect();
+        for pair in sweep.windows(2) {
+            assert!(
+                factor(pair[1]) <= factor(pair[0]) + 1e-15,
+                "drift factor rose between levels {} and {}",
+                pair[0],
+                pair[1]
+            );
+        }
     }
 }

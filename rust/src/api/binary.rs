@@ -69,6 +69,7 @@ fn encode_meta(req: &ClassifyRequest) -> String {
         && req.backend.is_none()
         && !req.return_features
         && req.request_id.is_none()
+        && req.deadline_ms.is_none()
     {
         return String::new();
     }
@@ -82,6 +83,9 @@ fn encode_meta(req: &ClassifyRequest) -> String {
     }
     if let Some(id) = &req.request_id {
         m.insert("request_id".to_string(), Value::Str(id.clone()));
+    }
+    if let Some(d) = req.deadline_ms {
+        m.insert("deadline_ms".to_string(), Value::Num(d as f64));
     }
     Value::Obj(m).to_json()
 }

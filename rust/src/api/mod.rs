@@ -88,6 +88,12 @@ pub struct ClassifyRequest {
     pub return_features: bool,
     /// Client-chosen correlation id, echoed verbatim in the response.
     pub request_id: Option<String>,
+    /// Queue deadline in milliseconds, measured from submit.  A request
+    /// still queued when its deadline elapses fails fast with
+    /// `DEADLINE_EXCEEDED` instead of being computed for a caller that has
+    /// already given up (`0` means "already too late" — it always expires).
+    /// Additive v1 field; `None` (the default) never expires.
+    pub deadline_ms: Option<u64>,
 }
 
 impl ClassifyRequest {
@@ -99,6 +105,7 @@ impl ClassifyRequest {
             backend: None,
             return_features: false,
             request_id: None,
+            deadline_ms: None,
         }
     }
 
@@ -173,6 +180,15 @@ pub struct ClassifyResponse {
     /// runs a `ShardSet`, so over HTTP this is present even at
     /// `--shards 1` (as `0`).
     pub shard: Option<usize>,
+    /// Whether the serving shard's ACAM back-end was degraded (not
+    /// `healthy` on the degradation ladder) when this request dispatched.
+    /// Additive v1 field; `None` whenever the canary ladder is inactive —
+    /// in that case the wire form is byte-identical to pre-faults builds.
+    pub degraded: Option<bool>,
+    /// The serving shard's degradation-ladder state at dispatch
+    /// (`"healthy"`, `"reprogramming"`, `"digital_fallback"`).  Additive v1
+    /// field; `None` whenever the canary ladder is inactive.
+    pub backend_state: Option<String>,
 }
 
 impl ClassifyResponse {
@@ -203,6 +219,9 @@ pub enum ErrorCode {
     NotFound,
     /// Route exists, method does not.
     MethodNotAllowed,
+    /// The request's `deadline_ms` elapsed before compute dispatched (or,
+    /// at the gateway, the client stalled past the body-read deadline).
+    DeadlineExceeded,
     /// Unexpected internal failure (engine error, dropped response, ...).
     Internal,
 }
@@ -218,6 +237,7 @@ impl ErrorCode {
             ErrorCode::ServerStopped => "SERVER_STOPPED",
             ErrorCode::NotFound => "NOT_FOUND",
             ErrorCode::MethodNotAllowed => "METHOD_NOT_ALLOWED",
+            ErrorCode::DeadlineExceeded => "DEADLINE_EXCEEDED",
             ErrorCode::Internal => "INTERNAL",
         }
     }
@@ -233,18 +253,21 @@ impl ErrorCode {
             "SERVER_STOPPED" => ErrorCode::ServerStopped,
             "NOT_FOUND" => ErrorCode::NotFound,
             "METHOD_NOT_ALLOWED" => ErrorCode::MethodNotAllowed,
+            "DEADLINE_EXCEEDED" => ErrorCode::DeadlineExceeded,
             "INTERNAL" => ErrorCode::Internal,
             _ => return None,
         })
     }
 
     /// The HTTP status the gateway maps this code onto for API-level
-    /// failures.  One documented exception: transport-level protocol
-    /// rejections (oversized head/body, unsupported transfer encoding)
-    /// carry `MALFORMED_REQUEST` with the more specific RFC status
-    /// (431/413/501) instead of this mapping — the code tells the client
-    /// *what kind* of failure it is, the status carries the HTTP-level
-    /// detail.
+    /// failures.  Two documented exceptions where the transport carries a
+    /// more specific RFC status than this mapping: protocol rejections
+    /// (oversized head/body, unsupported transfer encoding) carry
+    /// `MALFORMED_REQUEST` with 431/413/501, and a client that stalls past
+    /// the gateway's body-read deadline gets `DEADLINE_EXCEEDED` with 408
+    /// (the queue-side deadline keeps the 504 below) — the code tells the
+    /// client *what kind* of failure it is, the status carries the
+    /// HTTP-level detail.
     pub fn http_status(&self) -> u16 {
         match self {
             ErrorCode::InvalidShape
@@ -254,6 +277,7 @@ impl ErrorCode {
             ErrorCode::MethodNotAllowed => 405,
             ErrorCode::QueueFull => 429,
             ErrorCode::BackendUnavailable | ErrorCode::ServerStopped => 503,
+            ErrorCode::DeadlineExceeded => 504,
             ErrorCode::Internal => 500,
         }
     }
@@ -307,6 +331,7 @@ mod tests {
             ErrorCode::ServerStopped,
             ErrorCode::NotFound,
             ErrorCode::MethodNotAllowed,
+            ErrorCode::DeadlineExceeded,
             ErrorCode::Internal,
         ] {
             assert_eq!(ErrorCode::parse(code.as_str()), Some(code));
@@ -329,6 +354,7 @@ mod tests {
         assert!(r.backend.is_none());
         assert!(!r.return_features);
         assert!(r.request_id.is_none());
+        assert!(r.deadline_ms.is_none());
         let o = r.options();
         assert_eq!(o.top_k, 1);
     }

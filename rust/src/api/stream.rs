@@ -20,8 +20,8 @@
 //!   schema errors: it keeps scanning (and validating) to the end of the
 //!   document and only then reports them.
 //! * **Fixed error priority.**  `from_value` checks image → top_k → backend
-//!   → return_features → request_id regardless of document order; the
-//!   per-field result slots here are read out in that same order.
+//!   → return_features → request_id → deadline_ms regardless of document
+//!   order; the per-field result slots here are read out in that same order.
 //! * **Duplicate keys are last-wins** (the tree's `BTreeMap::insert`): a
 //!   later occurrence of a key replaces the earlier value *or error* in its
 //!   slot.
@@ -151,6 +151,7 @@ struct Slots {
     backend: Option<Result<Backend, ApiError>>,
     return_features: Option<Result<bool, ApiError>>,
     request_id: Option<Result<String, ApiError>>,
+    deadline_ms: Option<Result<u64, ApiError>>,
 }
 
 impl Slots {
@@ -172,6 +173,9 @@ impl Slots {
         }
         if let Some(r) = self.request_id {
             req.request_id = Some(r?);
+        }
+        if let Some(r) = self.deadline_ms {
+            req.deadline_ms = Some(r?);
         }
         Ok(req)
     }
@@ -213,6 +217,7 @@ fn decode_request_mode(
             "backend" => slots.backend = Some(read_backend(p)?),
             "return_features" => slots.return_features = Some(read_return_features(p)?),
             "request_id" => slots.request_id = Some(read_request_id(p)?),
+            "deadline_ms" => slots.deadline_ms = Some(read_deadline_ms(p)?),
             // Unknown fields: ignored (additive evolution) but still
             // syntax-validated.
             _ => p.skip_value()?,
@@ -295,6 +300,19 @@ fn read_request_id(p: &mut PullParser) -> Result<Result<String, ApiError>, Parse
     Ok(Ok(p.read_string()?))
 }
 
+fn read_deadline_ms(p: &mut PullParser) -> Result<Result<u64, ApiError>, ParseError> {
+    if p.peek_kind()? != Kind::Num {
+        p.skip_value()?;
+        return Ok(Err(bad("'deadline_ms' must be a non-negative integer")));
+    }
+    let f = p.read_f64()?;
+    // Same predicate as the tree path's filter.
+    if !(f.fract() == 0.0 && f >= 0.0) {
+        return Ok(Err(bad("'deadline_ms' must be a non-negative integer")));
+    }
+    Ok(Ok(f as u64))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -324,6 +342,7 @@ mod tests {
         assert_eq!(a.backend, b.backend, "backend on {ctx}");
         assert_eq!(a.return_features, b.return_features, "return_features on {ctx}");
         assert_eq!(a.request_id, b.request_id, "request_id on {ctx}");
+        assert_eq!(a.deadline_ms, b.deadline_ms, "deadline_ms on {ctx}");
     }
 
     fn assert_parity(text: &str) {
@@ -363,6 +382,11 @@ mod tests {
             r#"{"image": [1], "backend": 7}"#,
             r#"{"image": [1], "return_features": "yes"}"#,
             r#"{"image": [1], "request_id": 7}"#,
+            r#"{"image": [1], "deadline_ms": 250}"#,
+            r#"{"image": [1], "deadline_ms": 0}"#,
+            r#"{"image": [1], "deadline_ms": -5}"#,
+            r#"{"image": [1], "deadline_ms": 1.5}"#,
+            r#"{"image": [1], "deadline_ms": "soon"}"#,
             r#"[1, 2]"#,
             r#""just a string""#,
             "5",

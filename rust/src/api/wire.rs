@@ -65,6 +65,14 @@ impl ClassifyRequest {
                     .to_string(),
             );
         }
+        if let Some(d) = obj.get("deadline_ms") {
+            req.deadline_ms = Some(
+                d.as_f64()
+                    .filter(|f| f.fract() == 0.0 && *f >= 0.0)
+                    .ok_or_else(|| bad("'deadline_ms' must be a non-negative integer"))?
+                    as u64,
+            );
+        }
         Ok(req)
     }
 
@@ -84,6 +92,9 @@ impl ClassifyRequest {
         }
         if let Some(id) = &self.request_id {
             m.insert("request_id".to_string(), Value::Str(id.clone()));
+        }
+        if let Some(d) = self.deadline_ms {
+            m.insert("deadline_ms".to_string(), Value::Num(d as f64));
         }
         Value::Obj(m)
     }
@@ -151,6 +162,12 @@ impl ClassifyResponse {
         if let Some(shard) = self.shard {
             m.insert("shard".to_string(), Value::Num(shard as f64));
         }
+        if let Some(d) = self.degraded {
+            m.insert("degraded".to_string(), Value::Bool(d));
+        }
+        if let Some(s) = &self.backend_state {
+            m.insert("backend_state".to_string(), Value::Str(s.clone()));
+        }
         Value::Obj(m)
     }
 
@@ -217,6 +234,11 @@ impl ClassifyResponse {
             backend,
             features: obj.get("features").and_then(Value::as_f32_vec),
             shard: obj.get("shard").and_then(Value::as_usize),
+            degraded: obj.get("degraded").and_then(Value::as_bool),
+            backend_state: obj
+                .get("backend_state")
+                .and_then(Value::as_str)
+                .map(str::to_string),
         })
     }
 }
@@ -258,6 +280,7 @@ mod tests {
         req.backend = Some(Backend::Similarity);
         req.return_features = true;
         req.request_id = Some("req-7".into());
+        req.deadline_ms = Some(250);
         let back =
             ClassifyRequest::from_value(&jsonlite::parse(&req.to_value().to_json()).unwrap())
                 .unwrap();
@@ -266,6 +289,7 @@ mod tests {
         assert_eq!(back.backend, Some(Backend::Similarity));
         assert!(back.return_features);
         assert_eq!(back.request_id.as_deref(), Some("req-7"));
+        assert_eq!(back.deadline_ms, Some(250));
     }
 
     #[test]
@@ -286,6 +310,8 @@ mod tests {
             (r#"{"image": [1], "top_k": 1.5}"#, "top_k"),
             (r#"{"image": [1], "backend": "cuda"}"#, "backend"),
             (r#"{"image": [1], "request_id": 7}"#, "request_id"),
+            (r#"{"image": [1], "deadline_ms": -5}"#, "deadline_ms"),
+            (r#"{"image": [1], "deadline_ms": 1.5}"#, "deadline_ms"),
             (r#"[1, 2]"#, "object"),
         ] {
             let err = ClassifyRequest::from_value(&jsonlite::parse(body).unwrap())
@@ -321,6 +347,8 @@ mod tests {
             backend: Backend::FeatureCount,
             features: Some(vec![0.5, 1.5]),
             shard: Some(2),
+            degraded: Some(true),
+            backend_state: Some("digital_fallback".into()),
         };
         let text = resp.to_value().to_json();
         let v = jsonlite::parse(&text).unwrap();
@@ -335,13 +363,22 @@ mod tests {
         assert_eq!(back.timing, resp.timing);
         assert_eq!(back.features, resp.features);
         assert_eq!(back.shard, Some(2));
-        // Un-sharded responses omit the field and decode back to None
-        // (v1 wire compatibility is additive).
+        assert_eq!(back.degraded, Some(true));
+        assert_eq!(back.backend_state.as_deref(), Some("digital_fallback"));
+        // Un-sharded / ladder-off responses omit the optional fields and
+        // decode back to None (v1 wire compatibility is additive).
         let mut unsharded = resp;
         unsharded.shard = None;
+        unsharded.degraded = None;
+        unsharded.backend_state = None;
         let v = jsonlite::parse(&unsharded.to_value().to_json()).unwrap();
         assert!(v.get("shard").is_none());
-        assert_eq!(ClassifyResponse::from_value(&v).unwrap().shard, None);
+        assert!(v.get("degraded").is_none());
+        assert!(v.get("backend_state").is_none());
+        let back = ClassifyResponse::from_value(&v).unwrap();
+        assert_eq!(back.shard, None);
+        assert_eq!(back.degraded, None);
+        assert_eq!(back.backend_state, None);
     }
 
     #[test]

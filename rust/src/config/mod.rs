@@ -192,6 +192,43 @@ impl Default for HttpConfig {
     }
 }
 
+/// Fault injection + canary health ladder (`crate::faults`,
+/// `crate::coordinator::shard`).  Everything defaults to *off*: with no
+/// plan and `canary_every == 0`, serving is bitwise identical to a build
+/// without this module.
+#[derive(Debug, Clone)]
+pub struct FaultsConfig {
+    /// Fault plan spec (see [`crate::faults::FaultPlan::parse`]), e.g.
+    /// `"drift@500=2.0,noise@800=0.05,stuck@1200=0.02"`.  `None` falls back
+    /// to the `HEC_FAULT_PLAN` env var; empty/absent disables injection.
+    pub plan: Option<String>,
+    /// Seed for the fault injector's RNG streams (stuck-cell placement);
+    /// independent of `acam.seed` so fault placement does not perturb
+    /// serving RNG.
+    pub seed: u64,
+    /// Canary probe cadence in served requests per shard; `0` disables the
+    /// health ladder (falls back to `HEC_CANARY_EVERY`, else off).  The
+    /// ladder only arms on the `acam` backend — digital backends have no
+    /// analogue array to age.
+    pub canary_every: u64,
+    /// Canary probes per class (bootstrap samples with known labels).
+    pub canary_per_class: usize,
+    /// Canary accuracy below which the shard demotes to `Reprogramming`.
+    pub canary_threshold: f64,
+}
+
+impl Default for FaultsConfig {
+    fn default() -> Self {
+        FaultsConfig {
+            plan: None,
+            seed: 7,
+            canary_every: 0,
+            canary_per_class: 2,
+            canary_threshold: 0.9,
+        }
+    }
+}
+
 /// ACAM back-end knobs.
 #[derive(Debug, Clone)]
 pub struct AcamConfig {
@@ -241,6 +278,7 @@ pub struct ServeConfig {
     pub acam: AcamConfig,
     pub http: HttpConfig,
     pub shards: ShardsConfig,
+    pub faults: FaultsConfig,
 }
 
 impl Default for ServeConfig {
@@ -256,6 +294,7 @@ impl Default for ServeConfig {
             acam: AcamConfig::default(),
             http: HttpConfig::default(),
             shards: ShardsConfig::default(),
+            faults: FaultsConfig::default(),
         }
     }
 }
@@ -311,6 +350,23 @@ impl ServeConfig {
             }
             if let Some(v) = s.get("spill").and_then(|v| v.as_bool()) {
                 cfg.shards.spill = v;
+            }
+        }
+        if let Some(f) = doc.get("faults") {
+            if let Some(v) = f.get("plan").and_then(|v| v.as_str()) {
+                cfg.faults.plan = Some(v.to_string());
+            }
+            if let Some(v) = f.get("seed").and_then(|v| v.as_u64()) {
+                cfg.faults.seed = v;
+            }
+            if let Some(v) = f.get("canary_every").and_then(|v| v.as_u64()) {
+                cfg.faults.canary_every = v;
+            }
+            if let Some(v) = f.get("canary_per_class").and_then(|v| v.as_usize()) {
+                cfg.faults.canary_per_class = v;
+            }
+            if let Some(v) = f.get("canary_threshold").and_then(|v| v.as_f64()) {
+                cfg.faults.canary_threshold = v;
             }
         }
         if let Some(a) = doc.get("acam") {
@@ -385,6 +441,39 @@ impl ServeConfig {
         })
     }
 
+    /// Effective fault plan.  Precedence: explicit `faults.plan` (config
+    /// file) > `HEC_FAULT_PLAN` env > none.  The spec is parsed with
+    /// `faults.seed`; a malformed spec is a config error either way (a
+    /// typo'd chaos experiment must fail loudly at startup, not silently
+    /// serve fault-free).
+    pub fn resolve_fault_plan(&self) -> Result<Option<crate::faults::FaultPlan>> {
+        let spec = self.faults.plan.clone().or_else(|| {
+            std::env::var("HEC_FAULT_PLAN")
+                .ok()
+                .map(|v| v.trim().to_string())
+                .filter(|v| !v.is_empty())
+        });
+        match spec {
+            Some(s) => crate::faults::FaultPlan::parse(&s, self.faults.seed)
+                .map(Some)
+                .map_err(|e| Error::Config(format!("bad fault plan: {e}"))),
+            None => Ok(None),
+        }
+    }
+
+    /// Effective canary cadence (requests between probes per shard).
+    /// Precedence: explicit `faults.canary_every` > `HEC_CANARY_EVERY` env
+    /// > 0 (ladder off).
+    pub fn resolve_canary_every(&self) -> u64 {
+        if self.faults.canary_every != 0 {
+            return self.faults.canary_every;
+        }
+        std::env::var("HEC_CANARY_EVERY")
+            .ok()
+            .and_then(|v| v.trim().parse::<u64>().ok())
+            .unwrap_or(0)
+    }
+
     pub fn validate(&self) -> Result<()> {
         if !(1..=3).contains(&self.templates_per_class) {
             return Err(Error::Config(format!(
@@ -407,6 +496,19 @@ impl ServeConfig {
                 self.shards.count
             )));
         }
+        if self.faults.canary_per_class == 0 {
+            return Err(Error::Config(
+                "faults.canary_per_class must be positive".into(),
+            ));
+        }
+        if !(0.0..=1.0).contains(&self.faults.canary_threshold) {
+            return Err(Error::Config(format!(
+                "faults.canary_threshold must be in [0, 1], got {}",
+                self.faults.canary_threshold
+            )));
+        }
+        // Surface a malformed plan spec at load time, not first use.
+        self.resolve_fault_plan()?;
         Ok(())
     }
 }
@@ -558,6 +660,46 @@ mod tests {
         assert_eq!(c.resolve_shards(), 7);
         c.shards.count = MAX_SHARDS;
         assert_eq!(c.resolve_shards(), MAX_SHARDS);
+    }
+
+    #[test]
+    fn faults_config_loads_resolves_and_validates() {
+        let dir = std::env::temp_dir().join(format!("hec-faultcfg-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("serve.json");
+        std::fs::write(
+            &path,
+            r#"{"faults": {"plan": "drift@100=2.0,stuck@200=0.05", "seed": 11,
+                           "canary_every": 50, "canary_per_class": 3,
+                           "canary_threshold": 0.8}}"#,
+        )
+        .unwrap();
+        let cfg = ServeConfig::load(&path).unwrap();
+        assert_eq!(cfg.faults.plan.as_deref(), Some("drift@100=2.0,stuck@200=0.05"));
+        assert_eq!(cfg.faults.seed, 11);
+        assert_eq!(cfg.faults.canary_every, 50);
+        assert_eq!(cfg.faults.canary_per_class, 3);
+        assert!((cfg.faults.canary_threshold - 0.8).abs() < 1e-12);
+        let plan = cfg.resolve_fault_plan().unwrap().expect("plan configured");
+        assert_eq!(plan.events.len(), 2);
+        assert_eq!(cfg.resolve_canary_every(), 50);
+
+        // Defaults: everything off, plan resolves to None (unless the test
+        // environment sets HEC_FAULT_PLAN, which the suite never does).
+        let d = ServeConfig::default();
+        assert_eq!(d.resolve_canary_every(), 0);
+
+        // Malformed plans fail at validate(), not first use.
+        let mut bad = ServeConfig::default();
+        bad.faults.plan = Some("warp@10=1".to_string());
+        assert!(bad.validate().is_err());
+        let mut bad = ServeConfig::default();
+        bad.faults.canary_per_class = 0;
+        assert!(bad.validate().is_err());
+        let mut bad = ServeConfig::default();
+        bad.faults.canary_threshold = 1.5;
+        assert!(bad.validate().is_err());
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -356,6 +356,46 @@ pub fn prometheus_shards(shards: &[(Snapshot, bool)]) -> String {
     out
 }
 
+/// Render the degradation-ladder Prometheus series (`shard`-labelled), one
+/// tuple per shard: `(backend_state, last canary accuracy, re-programs)`.
+/// Appended after [`prometheus_shards`] by the sharded `/metrics` — but
+/// **only when the canary ladder is active**, so a faults-off deployment's
+/// exposition text stays byte-identical to pre-faults builds.  Accuracy is
+/// NaN until a shard's first probe (the Prometheus convention for
+/// "no data yet").
+pub fn prometheus_ladder(shards: &[(crate::faults::BackendState, f64, u64)]) -> String {
+    use std::fmt::Write as _;
+    let mut out = String::new();
+    let name = "hec_shard_backend_state";
+    let _ = writeln!(
+        out,
+        "# HELP {name} Degradation ladder state (0=healthy, 1=reprogramming, 2=digital_fallback)"
+    );
+    let _ = writeln!(out, "# TYPE {name} gauge");
+    for (i, (state, _, _)) in shards.iter().enumerate() {
+        let _ = writeln!(out, "{name}{{shard=\"{i}\"}} {}", *state as u8);
+    }
+    let name = "hec_canary_accuracy";
+    let _ = writeln!(
+        out,
+        "# HELP {name} Latest canary-probe accuracy vs the digital reference (NaN before the first probe)"
+    );
+    let _ = writeln!(out, "# TYPE {name} gauge");
+    for (i, (_, accuracy, _)) in shards.iter().enumerate() {
+        let _ = writeln!(out, "{name}{{shard=\"{i}\"}} {accuracy}");
+    }
+    let name = "hec_reprogram_total";
+    let _ = writeln!(
+        out,
+        "# HELP {name} Completed ACAM array re-programs on this shard"
+    );
+    let _ = writeln!(out, "# TYPE {name} counter");
+    for (i, (_, _, reprograms)) in shards.iter().enumerate() {
+        let _ = writeln!(out, "{name}{{shard=\"{i}\"}} {reprograms}");
+    }
+    out
+}
+
 impl std::fmt::Display for Snapshot {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         writeln!(
@@ -545,6 +585,35 @@ mod tests {
         for line in text.lines().filter(|l| !l.starts_with('#')) {
             let (name, value) = line.split_once(' ').unwrap();
             assert!(name.starts_with("hec_shard_"), "bad name in {line:?}");
+            assert!(name.contains("{shard=\""), "unlabelled sample {line:?}");
+            assert!(value.parse::<f64>().is_ok(), "bad value in {line:?}");
+        }
+    }
+
+    #[test]
+    fn prometheus_ladder_block_labels_states_and_counters() {
+        use crate::faults::BackendState;
+        let text = prometheus_ladder(&[
+            (BackendState::Healthy, 1.0, 0),
+            (BackendState::DigitalFallback, 0.55, 2),
+            (BackendState::Reprogramming, f64::NAN, 1),
+        ]);
+        for needle in [
+            "hec_shard_backend_state{shard=\"0\"} 0",
+            "hec_shard_backend_state{shard=\"1\"} 2",
+            "hec_shard_backend_state{shard=\"2\"} 1",
+            "hec_canary_accuracy{shard=\"0\"} 1",
+            "hec_canary_accuracy{shard=\"1\"} 0.55",
+            "hec_canary_accuracy{shard=\"2\"} NaN",
+            "hec_reprogram_total{shard=\"1\"} 2",
+            "# TYPE hec_shard_backend_state gauge",
+            "# TYPE hec_reprogram_total counter",
+        ] {
+            assert!(text.contains(needle), "missing {needle:?} in:\n{text}");
+        }
+        // Every sample line stays machine-parseable (NaN included).
+        for line in text.lines().filter(|l| !l.starts_with('#')) {
+            let (name, value) = line.split_once(' ').unwrap();
             assert!(name.contains("{shard=\""), "unlabelled sample {line:?}");
             assert!(value.parse::<f64>().is_ok(), "bad value in {line:?}");
         }

@@ -45,11 +45,16 @@ pub struct ShardStatus {
     pub restarts: u64,
     pub queue_depth: u64,
     pub in_flight: u64,
+    /// Degradation-ladder state (`"healthy"`, `"reprogramming"`,
+    /// `"digital_fallback"`); `None` when the canary ladder is inactive,
+    /// in which case `/healthz` omits the key entirely (additive v1).
+    pub backend_state: Option<&'static str>,
 }
 
-/// Deployment health: degraded while any shard is down.  Un-sharded
-/// deployments report an empty shard list and are never degraded (a dead
-/// single worker is `SERVER_STOPPED` at submit time, not a health state).
+/// Deployment health: degraded while any shard is down **or** any shard's
+/// degradation ladder has left `Healthy`.  Un-sharded deployments report an
+/// empty shard list and are never degraded (a dead single worker is
+/// `SERVER_STOPPED` at submit time, not a health state).
 #[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct HealthReport {
     pub degraded: bool,

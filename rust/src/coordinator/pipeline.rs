@@ -22,6 +22,7 @@ use crate::api::{ClassifyOptions, ClassifyResult, EnergyBreakdown, Prediction};
 use crate::config::{Backend, ServeConfig};
 use crate::energy::{EnergyModel, Scale};
 use crate::error::{Error, Result};
+use crate::faults::{FaultInjector, FaultKind};
 use crate::matching;
 use crate::runtime::{backend, FrontEnd, Meta};
 use crate::templates::TemplateStore;
@@ -45,11 +46,40 @@ pub struct Pipeline {
     k: usize,
     acam: Option<AcamArray>,
     acam_var: Variability,
+    /// The configured (baseline) variability corner — what fault injection
+    /// escalates away from and re-programming restores.
+    base_var: Variability,
+    /// Seed the array was programmed with (re-programming derives fresh,
+    /// deterministic per-attempt seeds from it).
+    acam_seed: u64,
+    /// Completed re-programming attempts (salts the re-program seed).
+    reprograms: u32,
+    /// Degradation-ladder override: when set, ACAM-routed requests are
+    /// served by the digital matching reference instead of the array.
+    digital_fallback: bool,
     energy: EnergyModel,
     /// Per-inference front-end energy (nJ), precomputed from the as-built
     /// effective MAC count.
     e_frontend_nj: f64,
     rng: crate::rng::Rng,
+}
+
+/// One canary sweep's health evidence (see [`Pipeline::canary_probe`]).
+#[derive(Debug, Clone)]
+pub struct CanaryReport {
+    /// Probes evaluated.
+    pub probes: usize,
+    /// Probes where the analogue top-1 agreed with the digital reference.
+    pub agree: usize,
+    /// `agree / probes` (1.0 for an empty probe set).
+    pub accuracy: f64,
+    /// Mean top-1 matchline similarity scaled by the array's full-match
+    /// headroom — the analogue match margin; decays as devices drift.
+    pub margin: f64,
+    /// The array's static full-match headroom at its design point.
+    pub headroom: f64,
+    /// Analogue search energy spent probing (nJ) — charged to the shard.
+    pub energy_nj: f64,
 }
 
 impl Pipeline {
@@ -102,6 +132,10 @@ impl Pipeline {
             k: cfg.templates_per_class,
             acam,
             acam_var: Variability::at_level(cfg.acam.variability_level),
+            base_var: Variability::at_level(cfg.acam.variability_level),
+            acam_seed: cfg.acam.seed,
+            reprograms: 0,
+            digital_fallback: false,
             energy,
             e_frontend_nj,
             rng: crate::rng::Rng::new(cfg.acam.seed ^ 0x5EED),
@@ -319,6 +353,18 @@ impl Pipeline {
                         .backend_nj(set.num_templates() as u64, set.num_features() as u64),
                 )
             }
+            Backend::AcamSim if self.digital_fallback => {
+                // Degradation-ladder fallback: the array is untrustworthy,
+                // so ACAM-routed requests are answered by the digital Eq. 8
+                // reference.  Correct, and costed at the digital matcher's
+                // envelope — the analogue array contributes nothing.
+                let top = matching::classify_feature_count_topk(&bits, set, num_classes, k);
+                (
+                    top.into_iter().map(|(c, s)| (c, s as f64)).collect(),
+                    self.energy
+                        .backend_nj(set.num_templates() as u64, set.num_features() as u64),
+                )
+            }
             Backend::AcamSim => {
                 let arr = self
                     .acam
@@ -383,6 +429,157 @@ impl Pipeline {
             wall_secs: t0.elapsed().as_secs_f64(),
             n,
         })
+    }
+
+    /// Whether ACAM-routed requests are currently served by the digital
+    /// fallback (the ladder's `DigitalFallback` state).
+    pub fn digital_fallback(&self) -> bool {
+        self.digital_fallback
+    }
+
+    /// Enter/leave the digital-fallback routing (set by the degradation
+    /// ladder in `coordinator/shard.rs`; a no-op for non-ACAM deployments).
+    pub fn set_digital_fallback(&mut self, on: bool) {
+        self.digital_fallback = on;
+    }
+
+    /// Build the canary probe set: the first `per_class * NUM_CLASSES`
+    /// bootstrap samples (labels interleave `i % NUM_CLASSES`, so the set
+    /// is exactly class-balanced), pushed through the front-end and
+    /// binarised once.  Returns `(bit_vectors, labels)`.  Runs only the
+    /// deterministic engine — no RNG stream is touched, so building the
+    /// probe set never perturbs served predictions.
+    pub fn canary_bits(&mut self, per_class: usize) -> Result<(Vec<Vec<u8>>, Vec<usize>)> {
+        let classes = crate::dataset::NUM_CLASSES;
+        let n = (per_class * classes).max(1);
+        let ds = crate::dataset::SyntheticDataset::new(
+            BOOTSTRAP_DATA_SEED,
+            n,
+            self.meta.norm.mean as f32,
+            self.meta.norm.std as f32,
+        );
+        let (images, labels) = ds.batch(0, n);
+        let feats = self.extract_features(&images, n)?;
+        let nf = self.meta.artifacts.n_features;
+        let bits = (0..n)
+            .map(|i| self.store.binarize(&feats[i * nf..(i + 1) * nf]))
+            .collect();
+        Ok((bits, labels))
+    }
+
+    /// Probe the analogue array's health against the digital reference.
+    ///
+    /// For each probe bit-vector the array is searched for real (the probe
+    /// consumes the array's RNG stream and search energy — the ladder only
+    /// runs probes when canary scoring is enabled, keeping the default
+    /// deployment bitwise identical to a canary-free one) and the analogue
+    /// top-1 is compared with the digital Eq. 8 top-1 on the same bits —
+    /// the calibration contract says they agree exactly on ideal devices,
+    /// so disagreement is direct evidence of device decay.
+    pub fn canary_probe(&mut self, probes: &[Vec<u8>]) -> Result<CanaryReport> {
+        let num_classes = self.store.num_classes;
+        let set = self.store.set(self.k)?;
+        let arr = self
+            .acam
+            .as_mut()
+            .ok_or_else(|| Error::Config("ACAM array not programmed".into()))?;
+        let mut agree = 0usize;
+        let mut margin_sum = 0f64;
+        let mut energy_nj = 0f64;
+        for bits in probes {
+            let digital = matching::classify_feature_count_topk(bits, set, num_classes, 1)[0].0;
+            let search = arr.search(&binary_query_voltages(bits));
+            energy_nj += search.energy_nj;
+            let ranked = wta::rank_classes(
+                &search.similarity,
+                &set.class_of,
+                num_classes,
+                &self.acam_var,
+                &mut self.rng,
+            );
+            agree += usize::from(ranked[0].0 == digital);
+            margin_sum += search.similarity.iter().cloned().fold(0.0, f64::max);
+        }
+        let headroom = arr.full_match_headroom();
+        let n = probes.len();
+        Ok(CanaryReport {
+            probes: n,
+            agree,
+            accuracy: if n == 0 { 1.0 } else { agree as f64 / n as f64 },
+            margin: if n == 0 {
+                headroom
+            } else {
+                (margin_sum / n as f64) * headroom
+            },
+            headroom,
+            energy_nj,
+        })
+    }
+
+    /// Re-fit the ACAM array: re-program every cell from the template store
+    /// at the baseline variability corner (clearing injected drift and
+    /// read-noise escalations — but NOT stuck cells, which the caller
+    /// re-applies via [`Pipeline::apply_sticky`]).  Each attempt programs
+    /// with a fresh deterministic seed.  Returns the programming energy
+    /// charged (nJ).
+    pub fn reprogram(&mut self) -> Result<f64> {
+        let set = self.store.set(self.k)?;
+        let config = self
+            .acam
+            .as_ref()
+            .ok_or_else(|| Error::Config("ACAM array not programmed".into()))?
+            .config
+            .clone();
+        let energy_nj = self
+            .energy
+            .reprogram_nj(set.num_templates() as u64, set.num_features() as u64);
+        self.reprograms += 1;
+        let seed = self.acam_seed.wrapping_add((self.reprograms as u64) << 32);
+        let fresh = program_array(set, WindowMode::Binary, config, self.base_var.clone(), seed);
+        self.acam = Some(fresh);
+        self.acam_var = self.base_var.clone();
+        Ok(energy_nj)
+    }
+
+    /// Completed re-programming attempts.
+    pub fn reprogram_count(&self) -> u32 {
+        self.reprograms
+    }
+
+    /// Apply one injected fault to this pipeline's ACAM state.  Stall
+    /// faults are the worker loop's business and are ignored here; every
+    /// fault kind is a no-op on deployments without a programmed array.
+    pub fn apply_fault(&mut self, kind: &FaultKind, inj: &mut FaultInjector) {
+        match kind {
+            FaultKind::Drift { level } => {
+                let var = Variability::at_level(*level);
+                self.acam_var = var.clone();
+                if let Some(arr) = self.acam.as_mut() {
+                    arr.variability = var;
+                }
+            }
+            FaultKind::ReadNoise { sigma } => {
+                if let Some(arr) = self.acam.as_mut() {
+                    arr.variability.read_sigma = *sigma;
+                }
+            }
+            FaultKind::StuckCells { fraction, g } => {
+                if let Some(arr) = self.acam.as_mut() {
+                    let set = inj.materialize_stuck(arr.num_rows(), arr.width(), *fraction, *g);
+                    arr.stick_cells(&set.cells, set.g);
+                }
+            }
+            FaultKind::Stall { .. } => {}
+        }
+    }
+
+    /// Re-apply sticky stuck-cell sets (after a re-programming).  Returns
+    /// the number of cells stuck.
+    pub fn apply_sticky(&mut self, sets: &[crate::faults::StuckSet]) -> usize {
+        match self.acam.as_mut() {
+            Some(arr) => sets.iter().map(|s| arr.stick_cells(&s.cells, s.g)).sum(),
+            None => 0,
+        }
     }
 
     /// The §V.D report for this deployment (as-built scale).

@@ -115,10 +115,58 @@ pub(crate) fn pack_batch_into(
     }
 }
 
+/// Drop queue-expired jobs from an assembled batch before compute: a job
+/// whose `deadline_ms` has already elapsed fails fast with
+/// `DEADLINE_EXCEEDED` instead of burning the pipeline on an answer its
+/// caller has abandoned.  The caller has already decremented `queue_depth`
+/// for the whole assembled batch (the batcher drained these jobs from the
+/// channel), so only [`fail_job`]'s accounting applies here.  Jobs without
+/// a deadline never expire, and a deadline-free batch takes the early
+/// return — zero extra work on the common path.
+pub(crate) fn drop_expired_jobs(batch: &mut Vec<Job>, m: &Metrics) {
+    if batch.iter().all(|j| j.req.deadline_ms.is_none()) {
+        return;
+    }
+    let now = Instant::now();
+    let mut kept = Vec::with_capacity(batch.len());
+    for job in batch.drain(..) {
+        let waited = now.duration_since(job.enqueued);
+        // `>=` so `deadline_ms: 0` always expires — the deterministic
+        // "already too late" probe the tests lean on.
+        let expired = job
+            .req
+            .deadline_ms
+            .is_some_and(|d| waited >= Duration::from_millis(d));
+        if expired {
+            let d = job.req.deadline_ms.unwrap_or(0);
+            fail_job(
+                job,
+                ApiError::new(
+                    ErrorCode::DeadlineExceeded,
+                    format!(
+                        "deadline of {d}ms exceeded after {}ms in queue",
+                        waited.as_millis()
+                    ),
+                ),
+                m,
+            );
+        } else {
+            kept.push(job);
+        }
+    }
+    *batch = kept;
+}
+
 /// Deliver one computed batch back to its waiters (or fail them all with
 /// the same error), maintaining the response/error counters, the energy
 /// ledger, and the `in_flight` gauge — the back half of the worker body,
 /// shared with [`super::shard`].
+///
+/// `ladder` carries the shard's degradation-ladder observation at dispatch
+/// time as `(degraded, backend_state)`; `None` (every deployment without an
+/// active ladder) leaves the new v1 fields unset so the wire output is
+/// byte-identical to pre-faults builds.
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn deliver_batch(
     batch: Vec<Job>,
     results: std::result::Result<Vec<ClassifyResult>, ApiError>,
@@ -127,6 +175,7 @@ pub(crate) fn deliver_batch(
     dispatched: Instant,
     compute_us: u64,
     shard: Option<usize>,
+    ladder: Option<(bool, &'static str)>,
 ) {
     use std::sync::atomic::Ordering::Relaxed;
     match results {
@@ -150,6 +199,8 @@ pub(crate) fn deliver_batch(
                     backend: res.backend,
                     features: res.features,
                     shard,
+                    degraded: ladder.map(|(d, _)| d),
+                    backend_state: ladder.map(|(_, s)| s.to_string()),
                 }));
             }
         }
@@ -294,9 +345,14 @@ impl Server {
                 let image_len = pipeline.image_len();
                 let mut buf: Vec<f32> = Vec::new();
                 let mut opts: Vec<ClassifyOptions> = Vec::new();
-                while let Some(batch) = batcher::assemble(&rx, max_batch, max_wait) {
+                while let Some(mut batch) = batcher::assemble(&rx, max_batch, max_wait) {
+                    let assembled = batch.len();
+                    Metrics::gauge_dec(&m.queue_depth, assembled as u64);
+                    drop_expired_jobs(&mut batch, &m);
+                    if batch.is_empty() {
+                        continue;
+                    }
                     let n = batch.len();
-                    Metrics::gauge_dec(&m.queue_depth, n as u64);
                     m.batches.fetch_add(1, Relaxed);
                     m.batched_items.fetch_add(n as u64, Relaxed);
 
@@ -310,7 +366,9 @@ impl Server {
                         .map_err(ApiError::from);
                     let compute_us = dispatched.elapsed().as_micros() as u64;
                     m.execute.record_us(compute_us);
-                    deliver_batch(batch, results, &m, engine, dispatched, compute_us, None);
+                    deliver_batch(
+                        batch, results, &m, engine, dispatched, compute_us, None, None,
+                    );
                 }
             })
             .expect("spawn serving worker");

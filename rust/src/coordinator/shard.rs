@@ -32,21 +32,24 @@
 //! panic on a chosen request, replacing sleeps with explicit barriers.
 
 use std::panic::AssertUnwindSafe;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::api::{ApiError, ClassifyRequest, ClassifyResponse, ErrorCode};
-use crate::config::{RoutePolicy, ServeConfig};
+use crate::config::{Backend, RoutePolicy, ServeConfig};
 use crate::error::Result;
+use crate::faults::{BackendState, FaultInjector, FaultKind, FaultPlan};
 
 use super::batcher;
-use super::metrics::{prometheus_shards, Metrics, Snapshot};
+use super::metrics::{prometheus_ladder, prometheus_shards, Metrics, Snapshot};
 use super::oneshot;
 use super::pipeline::Pipeline;
-use super::server::{deliver_batch, fail_job, pack_batch_into, validate_request, Caps, Job};
+use super::server::{
+    deliver_batch, drop_expired_jobs, fail_job, pack_batch_into, validate_request, Caps, Job,
+};
 use super::{ClassifySurface, HealthReport, ShardStatus};
 
 // ---------------------------------------------------------------------------
@@ -129,6 +132,13 @@ pub struct ShardHooks {
     /// (letting tests observe the degraded window) and `arrive_only()`s
     /// once healthy again (letting tests await recovery).
     pub restart_gate: Option<Arc<Gate>>,
+    /// When set, the worker `arrive_only()`s after every completed canary
+    /// probe, so tests can await "N probes have happened" without sleeps.
+    pub canary_gate: Option<Arc<Gate>>,
+    /// When set, a demoting worker `pass()`es this gate immediately after
+    /// publishing `Reprogramming` (before re-fitting the array), so tests
+    /// can observe the intermediate ladder state deterministically.
+    pub reprogram_gate: Option<Arc<Gate>>,
 }
 
 // ---------------------------------------------------------------------------
@@ -195,10 +205,58 @@ pub fn plan_route(
 // The shard set
 // ---------------------------------------------------------------------------
 
+/// Lock-free ladder observations shared between a shard worker (the only
+/// writer) and the handle (readers: `/healthz`, `/metrics`, tests).
+#[derive(Clone)]
+struct LadderCells {
+    /// `BackendState` as its `u8` repr.
+    state: Arc<AtomicU8>,
+    /// Most recent canary accuracy as `f64` bits; NaN until the first probe.
+    accuracy: Arc<AtomicU64>,
+    /// Completed array re-programs.
+    reprograms: Arc<AtomicU64>,
+}
+
+impl LadderCells {
+    fn new() -> LadderCells {
+        LadderCells {
+            state: Arc::new(AtomicU8::new(BackendState::Healthy as u8)),
+            accuracy: Arc::new(AtomicU64::new(f64::NAN.to_bits())),
+            reprograms: Arc::new(AtomicU64::new(0)),
+        }
+    }
+
+    fn state(&self) -> BackendState {
+        BackendState::from_u8(self.state.load(Ordering::SeqCst))
+    }
+}
+
+/// Canary knobs resolved once at startup; `Some` iff the degradation ladder
+/// is active for this deployment (ACAM backend + `canary_every > 0`).
+#[derive(Clone)]
+struct LadderParams {
+    /// Probe after every this-many served requests.
+    canary_every: u64,
+    /// Canary probes per class (probe set size = `per_class * num_classes`).
+    per_class: usize,
+    /// Canary accuracy below this demotes the shard.
+    threshold: f64,
+}
+
+/// Fault/ladder context threaded into one shard worker.
+struct ShardFaultCtx {
+    /// Deterministic fault schedule (injector seed derives from the shard
+    /// index, so shards age independently but reproducibly).
+    plan: Option<FaultPlan>,
+    ladder: Option<LadderParams>,
+    cells: LadderCells,
+}
+
 struct ShardSlot {
     tx: SyncSender<Job>,
     metrics: Arc<Metrics>,
     healthy: Arc<AtomicBool>,
+    ladder: LadderCells,
 }
 
 struct Inner {
@@ -214,6 +272,11 @@ struct Inner {
     /// shard's `requests`/`errors` series.
     rejected: AtomicU64,
     caps: Caps,
+    /// Whether the canary/degradation ladder is active for this deployment.
+    /// When false, no ladder series/fields are ever surfaced — keeping the
+    /// `/metrics` text and v1 responses bitwise identical to a build without
+    /// the faults subsystem.
+    ladder_active: bool,
 }
 
 /// Cloneable submit surface over the shard set — the sharded counterpart
@@ -242,6 +305,18 @@ impl ShardSet {
         cfg.validate()?;
         let count = cfg.resolve_shards();
         let max_wait = Duration::from_micros(cfg.batch.max_wait_us);
+        // Faults/ladder wiring resolved once: every shard shares the plan
+        // (each derives its own injector stream from its index) and the
+        // canary knobs.  The ladder only arms on the ACAM backend — the
+        // digital backends have no analogue hardware to age or re-program.
+        let plan = cfg.resolve_fault_plan()?;
+        let canary_every = cfg.resolve_canary_every();
+        let ladder = (canary_every > 0 && cfg.backend == Backend::AcamSim).then(|| LadderParams {
+            canary_every,
+            per_class: cfg.faults.canary_per_class,
+            threshold: cfg.faults.canary_threshold,
+        });
+        let ladder_active = ladder.is_some();
         let mut slots = Vec::with_capacity(count);
         let mut workers = Vec::with_capacity(count);
         let mut caps: Option<Caps> = None;
@@ -251,15 +326,32 @@ impl ShardSet {
             let (tx, rx) = sync_channel::<Job>(cfg.batch.queue_depth);
             let metrics = Arc::new(Metrics::default());
             let healthy = Arc::new(AtomicBool::new(true));
+            let cells = LadderCells::new();
             let (ready_tx, ready_rx) = oneshot::channel::<Result<Caps>>();
             let m = Arc::clone(&metrics);
             let h = Arc::clone(&healthy);
             let shard_hooks = hooks.clone();
             let max_batch = cfg.batch.max_batch;
+            let fctx = ShardFaultCtx {
+                plan: plan.clone(),
+                ladder: ladder.clone(),
+                cells: cells.clone(),
+            };
             let worker = std::thread::Builder::new()
                 .name(format!("hec-shard-{index}"))
                 .spawn(move || {
-                    shard_worker(index, scfg, rx, m, h, shard_hooks, max_batch, max_wait, ready_tx)
+                    shard_worker(
+                        index,
+                        scfg,
+                        rx,
+                        m,
+                        h,
+                        shard_hooks,
+                        max_batch,
+                        max_wait,
+                        fctx,
+                        ready_tx,
+                    )
                 })
                 .expect("spawn shard worker");
             let shard_caps = ready_rx.recv().map_err(|_| {
@@ -282,6 +374,7 @@ impl ShardSet {
                 tx,
                 metrics,
                 healthy,
+                ladder: cells,
             });
             workers.push(worker);
         }
@@ -294,6 +387,7 @@ impl ShardSet {
                     rr: AtomicU64::new(0),
                     rejected: AtomicU64::new(0),
                     caps: caps.expect("count >= 1"),
+                    ladder_active,
                 }),
             },
             workers,
@@ -354,6 +448,31 @@ impl ShardHandle {
     /// candidate queue full).
     pub fn router_rejections(&self) -> u64 {
         self.inner.rejected.load(Ordering::Relaxed)
+    }
+
+    /// Per-shard degradation-ladder observations, in shard order:
+    /// `(backend_state, last canary accuracy, completed re-programs)`.
+    /// `None` when the ladder is inactive (no canary configured, or a
+    /// digital backend) — callers must surface nothing in that case so the
+    /// faults-off wire/metrics output stays byte-identical.  Accuracy is
+    /// NaN until a shard's first probe.
+    pub fn shard_ladder(&self) -> Option<Vec<(BackendState, f64, u64)>> {
+        if !self.inner.ladder_active {
+            return None;
+        }
+        Some(
+            self.inner
+                .shards
+                .iter()
+                .map(|s| {
+                    (
+                        s.ladder.state(),
+                        f64::from_bits(s.ladder.accuracy.load(Ordering::SeqCst)),
+                        s.ladder.reprograms.load(Ordering::Relaxed),
+                    )
+                })
+                .collect(),
+        )
     }
 
     /// Convenience for synchronous callers: top-1 classify on the
@@ -455,6 +574,7 @@ impl ClassifySurface for ShardHandle {
     }
 
     fn health(&self) -> HealthReport {
+        let ladder_active = self.inner.ladder_active;
         let shards: Vec<ShardStatus> = self
             .inner
             .shards
@@ -468,11 +588,18 @@ impl ClassifySurface for ShardHandle {
                     restarts: snap.restarts,
                     queue_depth: snap.queue_depth,
                     in_flight: snap.in_flight,
+                    backend_state: ladder_active.then(|| s.ladder.state().as_str()),
                 }
             })
             .collect();
+        let ladder_degraded = ladder_active
+            && self
+                .inner
+                .shards
+                .iter()
+                .any(|s| s.ladder.state() != BackendState::Healthy);
         HealthReport {
-            degraded: shards.iter().any(|s| !s.healthy),
+            degraded: shards.iter().any(|s| !s.healthy) || ladder_degraded,
             shards,
         }
     }
@@ -488,6 +615,9 @@ impl ClassifySurface for ShardHandle {
         let _ = writeln!(out, "# TYPE {name} counter");
         let _ = writeln!(out, "{name} {}", self.router_rejections());
         out.push_str(&prometheus_shards(&self.shard_snapshots()));
+        if let Some(ladder) = self.shard_ladder() {
+            out.push_str(&prometheus_ladder(&ladder));
+        }
         out
     }
 }
@@ -496,10 +626,91 @@ impl ClassifySurface for ShardHandle {
 // The shard worker
 // ---------------------------------------------------------------------------
 
+/// One canary cycle for a shard that just crossed its probe interval:
+/// score the canary set, publish accuracy, and — below threshold — walk
+/// the ladder: `Reprogramming` (re-fit + re-program the array, charging
+/// the RRAM programming energy) then re-probe; a verify pass promotes back
+/// to `Healthy`, a verify failure (e.g. sticky stuck-at cells the
+/// re-program cannot heal) lands in `DigitalFallback` and routes matching
+/// through the digital back-end from then on.
+fn ladder_step(
+    pipeline: &mut Pipeline,
+    canary_bits: &[Vec<u8>],
+    params: &LadderParams,
+    cells: &LadderCells,
+    injector: Option<&mut FaultInjector>,
+    m: &Metrics,
+    hooks: &ShardHooks,
+) {
+    let report = match pipeline.canary_probe(canary_bits) {
+        Ok(r) => r,
+        Err(_) => return, // no array programmed — nothing to score
+    };
+    m.add_energy_nj(report.energy_nj);
+    cells
+        .accuracy
+        .store(report.accuracy.to_bits(), Ordering::SeqCst);
+    if let Some(g) = &hooks.canary_gate {
+        g.arrive_only();
+    }
+    if report.accuracy >= params.threshold {
+        return;
+    }
+    // Demote.  The intermediate state is published (and gate-observable)
+    // before the expensive re-fit starts.
+    cells
+        .state
+        .store(BackendState::Reprogramming as u8, Ordering::SeqCst);
+    if let Some(g) = &hooks.reprogram_gate {
+        g.pass();
+    }
+    let recovered = match pipeline.reprogram() {
+        Ok(energy_nj) => {
+            m.add_energy_nj(energy_nj);
+            cells.reprograms.fetch_add(1, Ordering::Relaxed);
+            // Stuck filaments do not heal: re-apply every sticky fault the
+            // injector has materialised, then verify against the canaries.
+            if let Some(inj) = injector {
+                pipeline.apply_sticky(inj.sticky_sets());
+            }
+            match pipeline.canary_probe(canary_bits) {
+                Ok(verify) => {
+                    m.add_energy_nj(verify.energy_nj);
+                    cells
+                        .accuracy
+                        .store(verify.accuracy.to_bits(), Ordering::SeqCst);
+                    verify.accuracy >= params.threshold
+                }
+                Err(_) => false,
+            }
+        }
+        Err(_) => false,
+    };
+    if recovered {
+        cells
+            .state
+            .store(BackendState::Healthy as u8, Ordering::SeqCst);
+    } else {
+        // Terminal until restart: correct digital matching, without the
+        // analogue back-end's 1.45 nJ budget.
+        pipeline.set_digital_fallback(true);
+        cells
+            .state
+            .store(BackendState::DigitalFallback as u8, Ordering::SeqCst);
+    }
+}
+
 /// One shard's serving loop: the single-pipeline worker body plus the
 /// panic boundary.  Compute runs inside `catch_unwind`; the job batch stays
 /// outside, so a panic fails every affected request with an explicit
 /// `INTERNAL` error (never a hung waiter) and the gauges stay exact.
+///
+/// With faults armed, the worker additionally keeps a served-request clock:
+/// due [`FaultPlan`] events apply to the array *before* the batch that
+/// crosses their trigger, and a canary probe (plus ladder step) runs after
+/// every `canary_every` served requests.  With no plan and no canary, none
+/// of this code touches the pipeline or its RNG streams — the faults-off
+/// path is bitwise identical to a build without the subsystem.
 #[allow(clippy::too_many_arguments)]
 fn shard_worker(
     index: usize,
@@ -510,11 +721,23 @@ fn shard_worker(
     hooks: ShardHooks,
     max_batch: usize,
     max_wait: Duration,
+    fctx: ShardFaultCtx,
     ready_tx: oneshot::Sender<Result<Caps>>,
 ) {
     use std::sync::atomic::Ordering::Relaxed;
-    let mut pipeline = match Pipeline::new(&cfg) {
-        Ok(p) => {
+    // Pipeline + canary probe set, together: building the canary bits runs
+    // the front-end once over the bootstrap samples (deterministic, no
+    // shared RNG), and a panic-restart must rebuild both.
+    let build = |cfg: &ServeConfig| -> Result<(Pipeline, Vec<Vec<u8>>)> {
+        let mut p = Pipeline::new(cfg)?;
+        let canary = match &fctx.ladder {
+            Some(l) => p.canary_bits(l.per_class)?.0,
+            None => Vec::new(),
+        };
+        Ok((p, canary))
+    };
+    let (mut pipeline, mut canary_bits) = match build(&cfg) {
+        Ok((p, c)) => {
             let caps = Caps {
                 image_len: p.image_len(),
                 num_classes: p.store.num_classes,
@@ -523,7 +746,7 @@ fn shard_worker(
                 acam_available: p.backend_available(crate::config::Backend::AcamSim),
             };
             let _ = ready_tx.send(Ok(caps));
-            p
+            (p, c)
         }
         Err(e) => {
             let _ = ready_tx.send(Err(e));
@@ -532,11 +755,20 @@ fn shard_worker(
     };
     let engine = pipeline.engine_name();
     let image_len = pipeline.image_len();
+    let mut injector = fctx.plan.clone().map(|p| FaultInjector::new(p, index));
+    // Served-request clock for the fault schedule and canary cadence.
+    let mut served: u64 = 0;
+    let mut since_probe: u64 = 0;
     let mut buf: Vec<f32> = Vec::new();
     let mut opts: Vec<crate::api::ClassifyOptions> = Vec::new();
-    while let Some(batch) = batcher::assemble(&rx, max_batch, max_wait) {
+    while let Some(mut batch) = batcher::assemble(&rx, max_batch, max_wait) {
+        let assembled = batch.len();
+        Metrics::gauge_dec(&m.queue_depth, assembled as u64);
+        drop_expired_jobs(&mut batch, &m);
+        if batch.is_empty() {
+            continue;
+        }
         let n = batch.len();
-        Metrics::gauge_dec(&m.queue_depth, n as u64);
         m.batches.fetch_add(1, Relaxed);
         m.batched_items.fetch_add(n as u64, Relaxed);
 
@@ -557,6 +789,25 @@ fn shard_worker(
             .as_deref()
             .is_some_and(|p| batch.iter().any(|j| j.req.request_id.as_deref() == Some(p)));
 
+        // Due fault events strike before the batch that crosses their
+        // trigger ("fires once the shard has served `at_request` requests").
+        if let Some(inj) = injector.as_mut() {
+            for kind in inj.due(served) {
+                if let FaultKind::Stall { millis } = kind {
+                    // A wedged worker, not an array fault: the shard simply
+                    // stops draining its queue for a while (deadline and
+                    // spill behaviour take it from there).
+                    std::thread::sleep(Duration::from_millis(millis));
+                } else {
+                    pipeline.apply_fault(&kind, inj);
+                }
+            }
+        }
+        let ladder_state = fctx.ladder.as_ref().map(|_| {
+            let s = fctx.cells.state();
+            (s != BackendState::Healthy, s.as_str())
+        });
+
         let dispatched = Instant::now();
         let result = std::panic::catch_unwind(AssertUnwindSafe(|| {
             if inject {
@@ -568,15 +819,36 @@ fn shard_worker(
         m.execute.record_us(compute_us);
 
         match result {
-            Ok(res) => deliver_batch(
-                batch,
-                res.map_err(ApiError::from),
-                &m,
-                engine,
-                dispatched,
-                compute_us,
-                Some(index),
-            ),
+            Ok(res) => {
+                deliver_batch(
+                    batch,
+                    res.map_err(ApiError::from),
+                    &m,
+                    engine,
+                    dispatched,
+                    compute_us,
+                    Some(index),
+                    ladder_state,
+                );
+                served += n as u64;
+                since_probe += n as u64;
+                if let Some(params) = &fctx.ladder {
+                    if since_probe >= params.canary_every
+                        && fctx.cells.state() != BackendState::DigitalFallback
+                    {
+                        since_probe = 0;
+                        ladder_step(
+                            &mut pipeline,
+                            &canary_bits,
+                            params,
+                            &fctx.cells,
+                            injector.as_mut(),
+                            &m,
+                            &hooks,
+                        );
+                    }
+                }
+            }
             Err(_panic) => {
                 // Unhealthy BEFORE the failures are answered: a caller that
                 // observes INTERNAL is guaranteed to find /healthz already
@@ -604,9 +876,18 @@ fn shard_worker(
                 // Restart: rebuild the pipeline from config.  A rebuild
                 // failure (or panic) leaves the shard permanently unhealthy
                 // and closes its queue — the other shards keep serving.
-                match std::panic::catch_unwind(AssertUnwindSafe(|| Pipeline::new(&cfg))) {
-                    Ok(Ok(p)) => {
+                match std::panic::catch_unwind(AssertUnwindSafe(|| build(&cfg))) {
+                    Ok(Ok((p, c))) => {
                         pipeline = p;
+                        canary_bits = c;
+                        // A restart re-programs a clean array, so the ladder
+                        // returns to Healthy; the fault schedule keeps its
+                        // cursor (already-fired events died with the old
+                        // array) and sticky stuck sets re-apply on the next
+                        // ladder re-program, not here.
+                        fctx.cells
+                            .state
+                            .store(BackendState::Healthy as u8, Ordering::SeqCst);
                         healthy.store(true, Ordering::SeqCst);
                         if let Some(g) = &hooks.restart_gate {
                             g.arrive_only();

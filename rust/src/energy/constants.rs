@@ -45,6 +45,14 @@ pub const SPARSITY: f64 = 0.80;
 /// TXL-ACAM energy per similarity-search operation per cell (Section III-B).
 pub const ACAM_CELL_ENERGY_FJ: f64 = 185.0;
 
+/// RRAM (re-)programming energy per ACAM cell (pJ): each TXL pixel holds
+/// four filamentary devices, each SET with program-and-verify pulses in the
+/// ~2 V x ~100 µA x ~100 ns regime (~20 pJ per device).  Re-programming the
+/// deployed 10 x 784 array therefore charges ~627 nJ — hundreds of search
+/// energies, which is why the degradation ladder re-programs on canary
+/// evidence instead of every few requests.
+pub const RRAM_PROGRAM_CELL_PJ: f64 = 80.0;
+
 /// Deployed back-end geometry: 10 templates x 784 features.
 pub const N_TEMPLATES: u64 = 10;
 pub const N_FEATURES: u64 = 784;

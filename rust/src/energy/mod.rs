@@ -61,6 +61,14 @@ impl EnergyModel {
         (n_templates * n_features) as f64 * self.acam_cell_fj * 1e-6
     }
 
+    /// Energy to (re-)program the whole array, in nJ: one program-and-verify
+    /// sequence for every cell's RRAM devices (see
+    /// [`RRAM_PROGRAM_CELL_PJ`]).  Charged by the degradation ladder when a
+    /// shard re-fits its array after canary evidence of drift.
+    pub fn reprogram_nj(&self, n_templates: u64, n_features: u64) -> f64 {
+        (n_templates * n_features) as f64 * RRAM_PROGRAM_CELL_PJ * 1e-3
+    }
+
     /// §V.D front-end total in nJ, following the paper's published
     /// arithmetic (per-MAC figure applied as fJ — see the unit-slip note).
     pub fn frontend_nj(&self, ops: u64) -> f64 {

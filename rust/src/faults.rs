@@ -1,0 +1,369 @@
+//! Deterministic fault injection and the back-end degradation ladder.
+//!
+//! RRAM conductances drift, stick, and get noisier with age; the 792x
+//! energy win of the analogue back-end is only real while the array still
+//! classifies correctly.  This module gives the serving stack a seeded,
+//! replayable way to *inject* those failures while traffic is flowing, and
+//! names the degradation states the coordinator walks through when its
+//! canary probes detect them:
+//!
+//! * [`FaultPlan`] — a schedule of [`FaultEvent`]s keyed on the shard's
+//!   served-request counter (a deterministic, sleep-free clock), parsed
+//!   from a compact spec string (`HEC_FAULT_PLAN` / `faults.plan`);
+//! * [`FaultInjector`] — the per-shard cursor over the plan: pops due
+//!   events, owns its own RNG stream (never the array's — with faults
+//!   disabled every existing RNG stream stays bitwise identical), and
+//!   remembers stuck-cell sets so they survive re-programming (a stuck
+//!   filament does not heal because you re-programmed the row);
+//! * [`BackendState`] — the three-state ladder `Healthy` →
+//!   `Reprogramming` → `DigitalFallback` driven by the canary state
+//!   machine in `coordinator/shard.rs`.
+//!
+//! The module is deliberately free of coordinator/pipeline dependencies:
+//! fault *application* (mutating the array, charging re-programming
+//! energy) lives with the owners of that state.
+
+use crate::acam::rram::{G_MAX, G_MIN};
+use crate::rng::Rng;
+
+/// One injectable failure mode.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FaultKind {
+    /// Age the device corner: set the array + periphery variability to
+    /// `Variability::at_level(level)` (retention drift, read noise, sense
+    /// and WTA offsets all scale together; level 0 = ideal, 1 = typical).
+    Drift { level: f64 },
+    /// Escalate only the multiplicative conductance read noise to `sigma`
+    /// (relative), leaving the rest of the corner untouched.
+    ReadNoise { sigma: f64 },
+    /// Stick `fraction` of all cells (drawn from the injector's RNG) at
+    /// conductance `g`.  Sticky: re-applied after every re-programming.
+    StuckCells { fraction: f64, g: f64 },
+    /// Cooperative worker stall of `millis` before the next batch — the
+    /// "wedged shard" scenario for deadline / spill testing.
+    Stall { millis: u64 },
+}
+
+/// A [`FaultKind`] that fires once the shard has served `at_request`
+/// requests.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultEvent {
+    pub at_request: u64,
+    pub kind: FaultKind,
+}
+
+/// A seeded, ordered schedule of fault events.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct FaultPlan {
+    /// Base seed for stuck-cell coordinate draws (mixed per shard).
+    pub seed: u64,
+    /// Events sorted by `at_request` (stable for equal keys).
+    pub events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    /// Parse a compact spec string: comma-separated `kind@request[=args]`
+    /// events.
+    ///
+    /// * `drift@N=LEVEL` — variability corner to `at_level(LEVEL)`;
+    /// * `noise@N=SIGMA` — read noise escalation;
+    /// * `stuck@N=FRACTION[:G]` — stick cells (G in siemens, default
+    ///   `G_MIN`, the high-resistance stuck state);
+    /// * `stall@N=MILLIS` — worker stall.
+    ///
+    /// Whitespace around tokens is ignored; an all-whitespace spec is an
+    /// empty plan.  Errors name the offending token.
+    pub fn parse(spec: &str, seed: u64) -> Result<FaultPlan, String> {
+        let mut events = Vec::new();
+        for tok in spec.split(',') {
+            let tok = tok.trim();
+            if tok.is_empty() {
+                continue;
+            }
+            events.push(parse_event(tok)?);
+        }
+        events.sort_by_key(|e| e.at_request);
+        Ok(FaultPlan { seed, events })
+    }
+}
+
+fn parse_event(tok: &str) -> Result<FaultEvent, String> {
+    let err = |why: &str| format!("fault event '{tok}': {why}");
+    let (kind_s, rest) = tok
+        .split_once('@')
+        .ok_or_else(|| err("expected kind@request[=args]"))?;
+    let (at_s, args) = match rest.split_once('=') {
+        Some((a, b)) => (a, Some(b.trim())),
+        None => (rest, None),
+    };
+    let at_request: u64 = at_s
+        .trim()
+        .parse()
+        .map_err(|_| err("request index must be a non-negative integer"))?;
+    let num = |name: &str| -> Result<f64, String> {
+        let v: f64 = args
+            .ok_or_else(|| err("missing '=args'"))?
+            .parse()
+            .map_err(|_| err("argument must be a number"))?;
+        if !v.is_finite() || v < 0.0 {
+            return Err(err(&format!("{name} must be finite and >= 0")));
+        }
+        Ok(v)
+    };
+    let kind = match kind_s.trim() {
+        "drift" => FaultKind::Drift { level: num("level")? },
+        "noise" => FaultKind::ReadNoise { sigma: num("sigma")? },
+        "stuck" => {
+            let args = args.ok_or_else(|| err("missing '=fraction[:g]'"))?;
+            let (frac_s, g_s) = match args.split_once(':') {
+                Some((f, g)) => (f, Some(g)),
+                None => (args, None),
+            };
+            let fraction: f64 = frac_s
+                .trim()
+                .parse()
+                .map_err(|_| err("fraction must be a number"))?;
+            if !(0.0..=1.0).contains(&fraction) {
+                return Err(err("fraction must be in [0, 1]"));
+            }
+            let g = match g_s {
+                Some(g_s) => {
+                    let g: f64 = g_s
+                        .trim()
+                        .parse()
+                        .map_err(|_| err("conductance must be a number"))?;
+                    if !(G_MIN..=G_MAX).contains(&g) {
+                        return Err(err("conductance must be within the device window"));
+                    }
+                    g
+                }
+                None => G_MIN,
+            };
+            FaultKind::StuckCells { fraction, g }
+        }
+        "stall" => {
+            let millis: u64 = args
+                .ok_or_else(|| err("missing '=millis'"))?
+                .parse()
+                .map_err(|_| err("millis must be a non-negative integer"))?;
+            FaultKind::Stall { millis }
+        }
+        other => return Err(err(&format!("unknown fault kind '{other}'"))),
+    };
+    Ok(FaultEvent { at_request, kind })
+}
+
+/// A stuck-cell set that has fired: coordinates plus the stuck conductance,
+/// re-applied after every re-programming attempt.
+#[derive(Debug, Clone)]
+pub struct StuckSet {
+    pub cells: Vec<(usize, usize)>,
+    pub g: f64,
+}
+
+/// Per-shard cursor over a [`FaultPlan`].
+///
+/// Owns an RNG stream derived from `(plan.seed, shard)` so coordinate
+/// draws never touch the array's search RNG.
+#[derive(Debug, Clone)]
+pub struct FaultInjector {
+    plan: FaultPlan,
+    next: usize,
+    rng: Rng,
+    sticky: Vec<StuckSet>,
+}
+
+impl FaultInjector {
+    pub fn new(plan: FaultPlan, shard: usize) -> Self {
+        let seed = plan
+            .seed
+            .wrapping_add(0x9E37_79B9_7F4A_7C15)
+            .wrapping_mul(2 * shard as u64 + 1);
+        FaultInjector {
+            plan,
+            next: 0,
+            rng: Rng::new(seed),
+            sticky: Vec::new(),
+        }
+    }
+
+    /// Pop every event whose `at_request` has been reached.
+    pub fn due(&mut self, served: u64) -> Vec<FaultKind> {
+        let mut fired = Vec::new();
+        while let Some(e) = self.plan.events.get(self.next) {
+            if e.at_request > served {
+                break;
+            }
+            fired.push(e.kind.clone());
+            self.next += 1;
+        }
+        fired
+    }
+
+    /// True once every event has fired.
+    pub fn exhausted(&self) -> bool {
+        self.next >= self.plan.events.len()
+    }
+
+    /// Draw the coordinate set for a `StuckCells` event over an
+    /// `n_rows x width` array, record it as sticky, and return it.
+    pub fn materialize_stuck(
+        &mut self,
+        n_rows: usize,
+        width: usize,
+        fraction: f64,
+        g: f64,
+    ) -> StuckSet {
+        let mut cells = Vec::new();
+        for r in 0..n_rows {
+            for c in 0..width {
+                if self.rng.u01() < fraction {
+                    cells.push((r, c));
+                }
+            }
+        }
+        let set = StuckSet { cells, g };
+        self.sticky.push(set.clone());
+        set
+    }
+
+    /// Stuck-cell sets that must be re-applied after a re-programming.
+    pub fn sticky_sets(&self) -> &[StuckSet] {
+        &self.sticky
+    }
+}
+
+/// The per-shard back-end degradation ladder.
+///
+/// `Healthy` serves through the configured analogue back-end.  When the
+/// canary probe drops below threshold the shard enters `Reprogramming`
+/// (re-fits the array, charging re-programming energy); a successful
+/// verify promotes it back to `Healthy`, a failed one demotes it to
+/// `DigitalFallback`, where ACAM-backed requests are served by the digital
+/// matching reference — correct, but without the 1.45 nJ back-end.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum BackendState {
+    Healthy = 0,
+    Reprogramming = 1,
+    DigitalFallback = 2,
+}
+
+impl BackendState {
+    /// Stable wire / metrics spelling.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            BackendState::Healthy => "healthy",
+            BackendState::Reprogramming => "reprogramming",
+            BackendState::DigitalFallback => "digital_fallback",
+        }
+    }
+
+    /// Inverse of the `repr(u8)` discriminant (atomics store the state as
+    /// a `u8`); out-of-range values clamp to `DigitalFallback`, the most
+    /// conservative reading.
+    pub fn from_u8(v: u8) -> Self {
+        match v {
+            0 => BackendState::Healthy,
+            1 => BackendState::Reprogramming,
+            _ => BackendState::DigitalFallback,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_every_kind_and_sorts() {
+        let p = FaultPlan::parse(" noise@40=0.2, drift@10=2.5 ,stuck@20=0.25:1e-5,stall@5=7 ", 9)
+            .unwrap();
+        assert_eq!(p.seed, 9);
+        let at: Vec<u64> = p.events.iter().map(|e| e.at_request).collect();
+        assert_eq!(at, vec![5, 10, 20, 40]);
+        assert_eq!(p.events[0].kind, FaultKind::Stall { millis: 7 });
+        assert_eq!(p.events[1].kind, FaultKind::Drift { level: 2.5 });
+        assert_eq!(
+            p.events[2].kind,
+            FaultKind::StuckCells { fraction: 0.25, g: 1e-5 }
+        );
+        assert_eq!(p.events[3].kind, FaultKind::ReadNoise { sigma: 0.2 });
+    }
+
+    #[test]
+    fn stuck_conductance_defaults_to_g_min() {
+        let p = FaultPlan::parse("stuck@3=0.5", 0).unwrap();
+        assert_eq!(
+            p.events[0].kind,
+            FaultKind::StuckCells { fraction: 0.5, g: G_MIN }
+        );
+    }
+
+    #[test]
+    fn empty_spec_is_empty_plan() {
+        let p = FaultPlan::parse("  ", 1).unwrap();
+        assert!(p.events.is_empty());
+    }
+
+    #[test]
+    fn rejects_malformed_events() {
+        for bad in [
+            "drift",
+            "drift@x=1",
+            "drift@5",
+            "drift@5=abc",
+            "drift@5=-1",
+            "noise@5=inf",
+            "stuck@5=1.5",
+            "stuck@5=0.5:1.0",
+            "stall@5=-2",
+            "melt@5=1",
+        ] {
+            let e = FaultPlan::parse(bad, 0).unwrap_err();
+            assert!(e.contains("fault event"), "{bad}: {e}");
+        }
+    }
+
+    #[test]
+    fn injector_pops_due_events_once() {
+        let p = FaultPlan::parse("drift@10=2.0,noise@10=0.1,stall@30=1", 3).unwrap();
+        let mut inj = FaultInjector::new(p, 0);
+        assert!(inj.due(9).is_empty());
+        let fired = inj.due(10);
+        assert_eq!(fired.len(), 2);
+        assert!(inj.due(10).is_empty(), "events fire exactly once");
+        assert!(!inj.exhausted());
+        assert_eq!(inj.due(1000).len(), 1);
+        assert!(inj.exhausted());
+    }
+
+    #[test]
+    fn stuck_draws_are_deterministic_per_shard_and_sticky() {
+        let p = FaultPlan::parse("stuck@1=0.3", 42).unwrap();
+        let mut a = FaultInjector::new(p.clone(), 0);
+        let mut b = FaultInjector::new(p.clone(), 0);
+        let sa = a.materialize_stuck(10, 64, 0.3, G_MIN);
+        let sb = b.materialize_stuck(10, 64, 0.3, G_MIN);
+        assert_eq!(sa.cells, sb.cells, "same shard, same coordinates");
+        assert!(!sa.cells.is_empty() && sa.cells.len() < 640);
+        let mut c = FaultInjector::new(p, 1);
+        let sc = c.materialize_stuck(10, 64, 0.3, G_MIN);
+        assert_ne!(sa.cells, sc.cells, "different shards draw differently");
+        assert_eq!(a.sticky_sets().len(), 1, "stuck sets are remembered");
+    }
+
+    #[test]
+    fn backend_state_roundtrip() {
+        for s in [
+            BackendState::Healthy,
+            BackendState::Reprogramming,
+            BackendState::DigitalFallback,
+        ] {
+            assert_eq!(BackendState::from_u8(s as u8), s);
+        }
+        assert_eq!(BackendState::from_u8(7), BackendState::DigitalFallback);
+        assert_eq!(BackendState::Healthy.as_str(), "healthy");
+        assert_eq!(BackendState::DigitalFallback.as_str(), "digital_fallback");
+    }
+}

@@ -18,6 +18,7 @@
 //! sequential keep-alive.
 
 use std::io::{BufRead, Write};
+use std::time::{Duration, Instant};
 
 /// Largest accepted request head (request line + headers).
 pub const MAX_HEAD_BYTES: usize = 16 * 1024;
@@ -61,9 +62,23 @@ pub enum ReadError {
     Bad(u16, &'static str),
 }
 
-/// Read one request from a buffered stream.  Blocks until a full head is
-/// available (the caller sets a socket read timeout to bound this).
+/// Read one request with no body-read deadline (tests and non-network
+/// callers).  The gateway itself uses [`read_request_with_deadline`].
 pub fn read_request<R: BufRead>(reader: &mut R) -> Result<Request, ReadError> {
+    read_request_with_deadline(reader, None)
+}
+
+/// The wall-clock budget for a body read, measured from the end of the
+/// head.  `None` = unbounded.  The per-`read` socket timeout alone cannot
+/// bound a slow-drip upload (a byte every 29 s keeps resetting it); this
+/// deadline caps the *total* body transfer so a wedged or hostile client
+/// cannot pin a connection thread.  Tripping it fails with 408 (mapped to
+/// the stable `DEADLINE_EXCEEDED` code by the gateway) and closes the
+/// connection.
+pub fn read_request_with_deadline<R: BufRead>(
+    reader: &mut R,
+    body_budget: Option<Duration>,
+) -> Result<Request, ReadError> {
     // -- head: read until CRLFCRLF with a hard cap ------------------------
     let mut head = Vec::with_capacity(512);
     loop {
@@ -146,6 +161,10 @@ pub fn read_request<R: BufRead>(reader: &mut R) -> Result<Request, ReadError> {
             return Err(ReadError::Bad(501, "unsupported transfer encoding"));
         }
     }
+    // The deadline clock starts once the head is parsed: idle keep-alive
+    // time is the socket timeout's problem, body transfer time is this
+    // deadline's.
+    let deadline = body_budget.map(|d| Instant::now() + d);
     let body = if chunked {
         // RFC 9112 §6.3: a message with both framings is a smuggling
         // vector; reject instead of picking one.
@@ -155,7 +174,7 @@ pub fn read_request<R: BufRead>(reader: &mut R) -> Result<Request, ReadError> {
                 "Content-Length with chunked transfer encoding",
             ));
         }
-        read_chunked_body(reader)?
+        read_chunked_body(reader, deadline)?
     } else {
         let content_length = content_length.unwrap_or(0);
         if content_length > MAX_BODY_BYTES {
@@ -163,8 +182,12 @@ pub fn read_request<R: BufRead>(reader: &mut R) -> Result<Request, ReadError> {
         }
         let mut body = vec![0u8; content_length];
         if content_length > 0 {
-            std::io::Read::read_exact(reader, &mut body)
-                .map_err(|_| ReadError::Bad(400, "body shorter than Content-Length"))?;
+            read_body_exact(
+                reader,
+                &mut body,
+                deadline,
+                "body shorter than Content-Length",
+            )?;
         }
         body
     };
@@ -192,14 +215,77 @@ fn find_crlfcrlf(buf: &[u8]) -> Option<usize> {
     buf.windows(4).position(|w| w == b"\r\n\r\n")
 }
 
+/// The 408 every stalled body read maps to (deadline elapsed, or the
+/// socket read timeout fired mid-body).
+fn stalled_read_error() -> ReadError {
+    ReadError::Bad(408, "body read deadline exceeded (stalled upload)")
+}
+
+/// Fail with 408 once the body deadline has passed.  Checked between
+/// `fill_buf` chunks, so the check itself never blocks: progress is only
+/// ever interrupted at a chunk boundary.
+fn check_deadline(deadline: Option<Instant>) -> Result<(), ReadError> {
+    match deadline {
+        Some(d) if Instant::now() >= d => Err(stalled_read_error()),
+        _ => Ok(()),
+    }
+}
+
+/// Whether an IO error is the socket read timeout (a stalled peer), as
+/// opposed to a real transport failure.
+fn is_stall(e: &std::io::Error) -> bool {
+    matches!(
+        e.kind(),
+        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+    )
+}
+
+/// Deadline-aware `read_exact` built on `fill_buf` chunks: the body
+/// deadline is re-checked between chunks (a slow-drip upload cannot ride
+/// one blocking `read_exact` past it), a mid-body socket timeout maps to
+/// the same 408, and truncation maps to `truncated` at 400.
+fn read_body_exact<R: BufRead>(
+    reader: &mut R,
+    out: &mut [u8],
+    deadline: Option<Instant>,
+    truncated: &'static str,
+) -> Result<(), ReadError> {
+    let mut filled = 0;
+    while filled < out.len() {
+        check_deadline(deadline)?;
+        let buf = match reader.fill_buf() {
+            Ok(b) => b,
+            Err(e) if is_stall(&e) => return Err(stalled_read_error()),
+            Err(_) => return Err(ReadError::Bad(400, truncated)),
+        };
+        if buf.is_empty() {
+            return Err(ReadError::Bad(400, truncated));
+        }
+        let take = buf.len().min(out.len() - filled);
+        out[filled..filled + take].copy_from_slice(&buf[..take]);
+        reader.consume(take);
+        filled += take;
+    }
+    Ok(())
+}
+
 /// Read a chunked body: size-line / data / CRLF repeated until the zero
 /// chunk, then trailers up to the blank line (consumed, ignored, budgeted).
 /// Every failure mode — truncation, over-cap, bad framing — maps to a
 /// status + message, never a hang or an unbounded buffer.
-fn read_chunked_body<R: BufRead>(reader: &mut R) -> Result<Vec<u8>, ReadError> {
+fn read_chunked_body<R: BufRead>(
+    reader: &mut R,
+    deadline: Option<Instant>,
+) -> Result<Vec<u8>, ReadError> {
     let mut body = Vec::new();
     loop {
-        let line = read_crlf_line(reader, MAX_CHUNK_LINE, (400, "oversized chunk-size line"))?;
+        check_deadline(deadline)?;
+        let line = read_crlf_line(
+            reader,
+            MAX_CHUNK_LINE,
+            (400, "oversized chunk-size line"),
+            deadline,
+        )?;
         let size = parse_chunk_size(&line)?;
         if size == 0 {
             break;
@@ -212,11 +298,14 @@ fn read_chunked_body<R: BufRead>(reader: &mut R) -> Result<Vec<u8>, ReadError> {
         }
         let old_len = body.len();
         body.resize(old_len + size, 0);
-        std::io::Read::read_exact(reader, &mut body[old_len..])
-            .map_err(|_| ReadError::Bad(400, "truncated chunked body"))?;
+        read_body_exact(
+            reader,
+            &mut body[old_len..],
+            deadline,
+            "truncated chunked body",
+        )?;
         let mut crlf = [0u8; 2];
-        std::io::Read::read_exact(reader, &mut crlf)
-            .map_err(|_| ReadError::Bad(400, "truncated chunked body"))?;
+        read_body_exact(reader, &mut crlf, deadline, "truncated chunked body")?;
         if &crlf != b"\r\n" {
             return Err(ReadError::Bad(400, "bad chunk terminator"));
         }
@@ -226,7 +315,12 @@ fn read_chunked_body<R: BufRead>(reader: &mut R) -> Result<Vec<u8>, ReadError> {
     // at the next keep-alive request.
     let mut trailer_bytes = 0usize;
     loop {
-        let line = read_crlf_line(reader, MAX_HEAD_BYTES, (431, "trailers too large"))?;
+        let line = read_crlf_line(
+            reader,
+            MAX_HEAD_BYTES,
+            (431, "trailers too large"),
+            deadline,
+        )?;
         if line.is_empty() {
             break;
         }
@@ -239,17 +333,21 @@ fn read_chunked_body<R: BufRead>(reader: &mut R) -> Result<Vec<u8>, ReadError> {
 }
 
 /// Read one CRLF-terminated line (CRLF stripped), bounded by `max`; lines
-/// over the bound fail with `too_long`, truncation/bare-LF with a 400.
-/// Handles terminators straddling `fill_buf` boundaries.
+/// over the bound fail with `too_long`, truncation/bare-LF with a 400,
+/// stalls against `deadline` with a 408.  Handles terminators straddling
+/// `fill_buf` boundaries.
 fn read_crlf_line<R: BufRead>(
     reader: &mut R,
     max: usize,
     too_long: (u16, &'static str),
+    deadline: Option<Instant>,
 ) -> Result<Vec<u8>, ReadError> {
     let mut line = Vec::new();
     loop {
+        check_deadline(deadline)?;
         let buf = match reader.fill_buf() {
             Ok(b) => b,
+            Err(e) if is_stall(&e) => return Err(stalled_read_error()),
             Err(_) => return Err(ReadError::Bad(400, "truncated chunked body")),
         };
         if buf.is_empty() {
@@ -320,12 +418,14 @@ pub fn reason_phrase(status: u16) -> &'static str {
         400 => "Bad Request",
         404 => "Not Found",
         405 => "Method Not Allowed",
+        408 => "Request Timeout",
         413 => "Payload Too Large",
         429 => "Too Many Requests",
         431 => "Request Header Fields Too Large",
         500 => "Internal Server Error",
         501 => "Not Implemented",
         503 => "Service Unavailable",
+        504 => "Gateway Timeout",
         _ => "Unknown",
     }
 }
@@ -568,6 +668,74 @@ mod tests {
         assert!(matches!(
             parse(&chunked(&frames)),
             Err(ReadError::Bad(431, _))
+        ));
+    }
+
+    // ---- body-read deadline ---------------------------------------------
+
+    #[test]
+    fn expired_deadline_fails_body_reads_with_408() {
+        // Duration::ZERO expires the moment the body read starts — a
+        // deterministic stand-in for a stalled upload (no sleeps).
+        let post = b"POST /v1/classify HTTP/1.1\r\nContent-Length: 4\r\n\r\n{\"a\"";
+        assert!(matches!(
+            read_request_with_deadline(&mut BufReader::new(&post[..]), Some(Duration::ZERO)),
+            Err(ReadError::Bad(408, _))
+        ));
+        let chunked = chunked("4\r\nWiki\r\n0\r\n\r\n");
+        assert!(matches!(
+            read_request_with_deadline(&mut BufReader::new(&chunked[..]), Some(Duration::ZERO)),
+            Err(ReadError::Bad(408, _))
+        ));
+    }
+
+    #[test]
+    fn deadline_only_governs_the_body() {
+        // Bodyless requests never consult the deadline: the head is under
+        // the socket timeout's jurisdiction, not the body budget's.
+        let get = b"GET /healthz HTTP/1.1\r\n\r\n";
+        let r = read_request_with_deadline(&mut BufReader::new(&get[..]), Some(Duration::ZERO))
+            .unwrap();
+        assert_eq!(r.path, "/healthz");
+        // An ample budget leaves fully-buffered bodies untouched.
+        let post = b"POST / HTTP/1.1\r\nContent-Length: 2\r\n\r\nhi";
+        let r = read_request_with_deadline(
+            &mut BufReader::new(&post[..]),
+            Some(Duration::from_secs(60)),
+        )
+        .unwrap();
+        assert_eq!(r.body, b"hi");
+    }
+
+    #[test]
+    fn stalled_socket_timeout_maps_to_408() {
+        // A reader whose fill_buf fails with TimedOut mid-body models the
+        // per-read socket timeout firing on a wedged peer.
+        struct Stall<'a> {
+            head: &'a [u8],
+        }
+        impl std::io::Read for Stall<'_> {
+            fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+                if self.head.is_empty() {
+                    return Err(std::io::Error::new(std::io::ErrorKind::TimedOut, "stall"));
+                }
+                let n = buf.len().min(self.head.len());
+                buf[..n].copy_from_slice(&self.head[..n]);
+                self.head = &self.head[n..];
+                Ok(n)
+            }
+        }
+        let head = b"POST / HTTP/1.1\r\nContent-Length: 4\r\n\r\n";
+        let mut reader = BufReader::new(Stall { head });
+        assert!(matches!(
+            read_request_with_deadline(&mut reader, Some(Duration::from_secs(60))),
+            Err(ReadError::Bad(408, _))
+        ));
+        // Without a budget the stall still maps to 408 (socket timeout).
+        let mut reader = BufReader::new(Stall { head });
+        assert!(matches!(
+            read_request(&mut reader),
+            Err(ReadError::Bad(408, _))
         ));
     }
 

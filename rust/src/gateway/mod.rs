@@ -40,11 +40,18 @@ use crate::coordinator::ClassifySurface;
 use crate::error::Result;
 use crate::jsonlite::Value;
 
-use http::{read_request, write_response, ReadError, Request};
+use http::{read_request_with_deadline, write_response, ReadError, Request};
 
 /// Per-connection socket read timeout: bounds how long an idle keep-alive
 /// connection pins its thread.
 const READ_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Wall-clock budget for one request *body* transfer.  The socket timeout
+/// alone cannot bound a slow-drip upload (a byte every 29 s keeps resetting
+/// it); this deadline caps total body time so a wedged client cannot pin a
+/// connection thread indefinitely.  Tripping it is a 408 carrying the
+/// stable `DEADLINE_EXCEEDED` code, then close.
+const BODY_READ_DEADLINE: Duration = Duration::from_secs(30);
 
 /// The running gateway (accept thread + connection threads).
 pub struct Gateway {
@@ -153,10 +160,19 @@ fn serve_connection<S: ClassifySurface>(stream: TcpStream, handle: &S) {
     let mut reader = BufReader::new(read_half);
     let mut writer = stream;
     loop {
-        match read_request(&mut reader) {
+        match read_request_with_deadline(&mut reader, Some(BODY_READ_DEADLINE)) {
             Err(ReadError::Eof) => return,
             Err(ReadError::Bad(status, msg)) => {
-                let err = ApiError::new(ErrorCode::MalformedRequest, msg);
+                // 408 is the body-read deadline tripping (a stalled upload
+                // pinning the connection thread), not a malformed request —
+                // it carries the deadline code so clients can distinguish
+                // "send faster" from "fix the request".
+                let code = if status == 408 {
+                    ErrorCode::DeadlineExceeded
+                } else {
+                    ErrorCode::MalformedRequest
+                };
+                let err = ApiError::new(code, msg);
                 let _ = write_response(
                     &mut writer,
                     status,
@@ -336,7 +352,7 @@ fn healthz<S: ClassifySurface>(handle: &S) -> Value {
                     .shards
                     .iter()
                     .map(|s| {
-                        Value::Obj(BTreeMap::from([
+                        let mut fields = BTreeMap::from([
                             ("index".to_string(), Value::Num(s.index as f64)),
                             ("healthy".to_string(), Value::Bool(s.healthy)),
                             ("restarts".to_string(), Value::Num(s.restarts as f64)),
@@ -345,7 +361,14 @@ fn healthz<S: ClassifySurface>(handle: &S) -> Value {
                                 Value::Num(s.queue_depth as f64),
                             ),
                             ("in_flight".to_string(), Value::Num(s.in_flight as f64)),
-                        ]))
+                        ]);
+                        if let Some(state) = s.backend_state {
+                            fields.insert(
+                                "backend_state".to_string(),
+                                Value::Str(state.to_string()),
+                            );
+                        }
+                        Value::Obj(fields)
                     })
                     .collect(),
             ),

@@ -31,6 +31,11 @@
 //!   (`POST /v1/classify`, `/v1/classify/batch`, `GET /healthz`,
 //!   `GET /metrics`) funneling into the same bounded queue as in-process
 //!   callers.
+//! * [`faults`] is the deterministic fault-injection subsystem: seeded
+//!   [`faults::FaultPlan`] schedules (conductance drift, stuck-at-G cells,
+//!   read-noise escalation, worker stalls) replayed against live shards,
+//!   and the [`faults::BackendState`] degradation ladder the canary state
+//!   machine walks (`Healthy` → `Reprogramming` → `DigitalFallback`).
 //! * [`energy`] is the Horowitz-constant energy ledger behind §V.D.
 //! * [`dataset`], [`templates`], [`kmeans`], [`config`] are supporting
 //!   substrates (synthetic workload generator mirrored from Python, template
@@ -52,6 +57,7 @@ pub mod coordinator;
 pub mod dataset;
 pub mod energy;
 pub mod error;
+pub mod faults;
 pub mod gateway;
 pub mod jsonlite;
 pub mod kmeans;

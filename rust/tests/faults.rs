@@ -1,0 +1,403 @@
+//! Fault-injection and degradation-ladder tests (ISSUE 7's acceptance
+//! suite): deterministic, sleep-free, Gate-synchronised — the style of
+//! `rust/tests/shard.rs`.
+//!
+//! The contract under test, in order:
+//!
+//! 1. **Zero-cost seam**: with no `FaultPlan` and no canary configured,
+//!    served predictions, RNG streams, response JSON, and the `/metrics`
+//!    payload are bitwise/textually identical to a build without the
+//!    faults subsystem.
+//! 2. **Demotion + recovery**: an injected drift event drops the canary
+//!    accuracy below threshold; the shard publishes `Reprogramming`
+//!    (gate-observable), re-programs the array (energy charged), verifies,
+//!    and promotes back to `Healthy`.
+//! 3. **Demotion + failure**: sticky stuck-at cells survive the re-program,
+//!    the verify probe fails, and the shard lands in `DigitalFallback` —
+//!    still serving correct (digital-reference) answers while `/healthz`
+//!    reports degraded.
+//! 4. **Deadlines**: a queue-expired `deadline_ms` fails fast with
+//!    `DEADLINE_EXCEEDED` and leaves the gauges exactly zero.
+
+use std::sync::Arc;
+
+use hec::api::{ClassifyRequest, ErrorCode};
+use hec::config::{Backend, Engine, RoutePolicy, ServeConfig};
+use hec::coordinator::shard::{Gate, ShardHooks};
+use hec::coordinator::{ClassifySurface, Pipeline, ShardSet};
+use hec::dataset::SyntheticDataset;
+use hec::faults::BackendState;
+
+/// An artifacts directory that never exists -> synthetic fallback.
+const NO_ARTIFACTS: &str = "/nonexistent-hec-artifacts";
+
+fn cfg(backend: Backend, shards: usize) -> ServeConfig {
+    let mut c = ServeConfig {
+        artifacts_dir: NO_ARTIFACTS.into(),
+        backend,
+        engine: Engine::Interp,
+        ..Default::default()
+    };
+    c.batch.max_batch = 1; // serial submits -> singleton batches, no timing
+    c.batch.max_wait_us = 0;
+    c.shards.count = shards;
+    c.shards.policy = RoutePolicy::RoundRobin;
+    c
+}
+
+fn workload(n: usize, seed: u64) -> (Vec<f32>, usize) {
+    let meta = hec::runtime::Meta::synthetic();
+    let ds = SyntheticDataset::new(seed, n, meta.norm.mean as f32, meta.norm.std as f32);
+    let (images, _) = ds.batch(0, n);
+    let s = meta.artifacts.image_size;
+    (images, s * s)
+}
+
+// ---------------------------------------------------------------------------
+// 1. Zero-cost-when-disabled seam
+// ---------------------------------------------------------------------------
+
+/// Faults off (no plan, no canary): an ACAM shard set with full device
+/// variability serves bitwise-identically to an independent pipeline — the
+/// faults subsystem consumed no RNG draw, ran no probe, touched nothing.
+#[test]
+fn faults_off_is_bitwise_identical_to_plain_serving() {
+    let requests = 10;
+    let mut c = cfg(Backend::AcamSim, 1);
+    c.acam.variability_level = 1.0; // exercise programming + read noise RNG
+    let (images, img_len) = workload(requests, 909_091);
+    let set = ShardSet::start(&c).unwrap();
+    let mut got = Vec::new();
+    for i in 0..requests {
+        let resp = set
+            .handle
+            .classify_blocking(images[i * img_len..(i + 1) * img_len].to_vec())
+            .unwrap();
+        // The additive v1 fields stay unset -> the encoded wire form
+        // carries no trace of the ladder.
+        assert_eq!(resp.degraded, None);
+        assert_eq!(resp.backend_state, None);
+        let json = resp.to_value().to_json();
+        assert!(!json.contains("degraded"), "ladder leaked into: {json}");
+        assert!(!json.contains("backend_state"), "ladder leaked into: {json}");
+        got.push((resp.predictions[0].class, resp.predictions[0].score));
+    }
+
+    // No ladder series in /metrics, no backend_state key in health.
+    let text = set.handle.prometheus_text();
+    for absent in [
+        "hec_shard_backend_state",
+        "hec_canary_accuracy",
+        "hec_reprogram_total",
+    ] {
+        assert!(!text.contains(absent), "{absent} leaked into:\n{text}");
+    }
+    assert!(set.handle.shard_ladder().is_none());
+    let health = set.handle.health();
+    assert!(!health.degraded);
+    assert_eq!(health.shards[0].backend_state, None);
+    set.shutdown();
+
+    // Bitwise parity with a plain pipeline fed the same sequence: the RNG
+    // stream position after each request must be untouched by the (inert)
+    // fault machinery.
+    let mut p = Pipeline::new(&c).unwrap();
+    for (i, &(class, score)) in got.iter().enumerate() {
+        let want = p
+            .classify_batch(&images[i * img_len..(i + 1) * img_len], 1)
+            .unwrap()
+            .remove(0);
+        assert_eq!(
+            (class, score),
+            (want.top1().class, want.top1().score),
+            "request {i}: faults-off serving diverged from a plain pipeline"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 2. Drift -> demote -> re-program -> promote
+// ---------------------------------------------------------------------------
+
+/// A drift event ages the array until the canary probe fails; the shard
+/// walks `Healthy -> Reprogramming -> Healthy`: the intermediate state is
+/// observable through the gate, the re-program is charged to the energy
+/// ledger and counted in `hec_reprogram_total`, and the verify probe
+/// (ideal re-programmed devices) restores full canary accuracy.
+#[test]
+fn drift_demotes_then_reprogram_recovers() {
+    let canary_gate = Gate::new();
+    let reprogram_gate = Gate::new();
+    let mut c = cfg(Backend::AcamSim, 1);
+    // Severe drift after 2 served requests; probe every 4.
+    c.faults.plan = Some("drift@2=1000".into());
+    c.faults.canary_every = 4;
+    let (images, img_len) = workload(12, 616_161);
+    let img = |i: usize| images[i * img_len..(i + 1) * img_len].to_vec();
+    let set = ShardSet::start_with_hooks(
+        &c,
+        ShardHooks {
+            canary_gate: Some(Arc::clone(&canary_gate)),
+            reprogram_gate: Some(Arc::clone(&reprogram_gate)),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+
+    // Ladder surfaces are live from the start: healthy, no probe yet (NaN).
+    let ladder = set.handle.shard_ladder().expect("ladder armed");
+    assert_eq!(ladder[0].0, BackendState::Healthy);
+    assert!(ladder[0].1.is_nan(), "accuracy must be NaN before any probe");
+    assert_eq!(set.handle.health().shards[0].backend_state, Some("healthy"));
+    let text = set.handle.prometheus_text();
+    assert!(text.contains("hec_canary_accuracy{shard=\"0\"} NaN"), "{text}");
+
+    // Requests 1-2 serve pre-drift; the event fires before request 3's
+    // batch; the probe runs after request 4 and demotes the shard, parking
+    // the worker on the reprogram gate with `Reprogramming` published.
+    for i in 0..3 {
+        let resp = set.handle.classify_blocking(img(i)).unwrap();
+        assert_eq!(resp.degraded, Some(false));
+        assert_eq!(resp.backend_state.as_deref(), Some("healthy"));
+    }
+    let fourth = set.handle.submit(ClassifyRequest::new(img(3))).unwrap();
+    reprogram_gate.await_arrivals(1);
+    assert_eq!(canary_gate.arrivals(), 1, "exactly one probe so far");
+    // Request 4 itself dispatched while still Healthy...
+    assert_eq!(
+        fourth.recv().unwrap().unwrap().backend_state.as_deref(),
+        Some("healthy")
+    );
+    // ...but the probe it triggered has published the demotion.
+    let ladder = set.handle.shard_ladder().unwrap();
+    assert_eq!(ladder[0].0, BackendState::Reprogramming);
+    assert!(ladder[0].1 < 0.9, "drifted canary accuracy: {}", ladder[0].1);
+    let health = set.handle.health();
+    assert!(health.degraded, "reprogramming shard must degrade /healthz");
+    assert!(health.shards[0].healthy, "worker itself is fine");
+    assert_eq!(health.shards[0].backend_state, Some("reprogramming"));
+    let text = set.handle.prometheus_text();
+    assert!(text.contains("hec_shard_backend_state{shard=\"0\"} 1"), "{text}");
+
+    let energy_before = set.handle.shard_metrics(0).energy_nj();
+
+    // Release: re-program (fresh seed, baseline corner), verify on ideal
+    // devices -> accuracy 1.0 -> promote.  Request 5 observes the recovery.
+    reprogram_gate.release();
+    let resp = set.handle.classify_blocking(img(4)).unwrap();
+    assert_eq!(resp.degraded, Some(false));
+    assert_eq!(resp.backend_state.as_deref(), Some("healthy"));
+    let ladder = set.handle.shard_ladder().unwrap();
+    assert_eq!(ladder[0].0, BackendState::Healthy);
+    assert_eq!(ladder[0].1, 1.0, "ideal re-programmed array must verify clean");
+    assert_eq!(ladder[0].2, 1, "one completed re-program");
+    assert!(!set.handle.health().degraded);
+
+    // The re-programming energy (plus the verify probe) hit the ledger.
+    let p = Pipeline::new(&c).unwrap();
+    let s = p.store.set(1).unwrap();
+    let reprogram_nj = hec::energy::EnergyModel::default()
+        .reprogram_nj(s.num_templates() as u64, s.num_features() as u64);
+    let energy_after = set.handle.shard_metrics(0).energy_nj();
+    assert!(
+        energy_after - energy_before >= reprogram_nj,
+        "re-program energy not charged: before {energy_before}, after {energy_after}, \
+         expected at least +{reprogram_nj}"
+    );
+    let text = set.handle.prometheus_text();
+    assert!(text.contains("hec_reprogram_total{shard=\"0\"} 1"), "{text}");
+    assert!(text.contains("hec_canary_accuracy{shard=\"0\"} 1"), "{text}");
+
+    // Next probe (after request 8) scores the healthy array clean.
+    for i in 5..8 {
+        set.handle.classify_blocking(img(i)).unwrap();
+    }
+    canary_gate.await_arrivals(2);
+    let ladder = set.handle.shard_ladder().unwrap();
+    assert_eq!(ladder[0].0, BackendState::Healthy);
+    assert_eq!(ladder[0].1, 1.0);
+
+    // Gauges exact after the whole episode.
+    let snap = set.handle.shard_metrics(0).snapshot();
+    assert_eq!(snap.queue_depth, 0);
+    assert_eq!(snap.in_flight, 0);
+    set.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// 3. Stuck cells -> re-program fails -> DigitalFallback
+// ---------------------------------------------------------------------------
+
+/// Stuck-at cells are sticky: the re-program cannot heal them, the verify
+/// probe fails, and the shard lands in `DigitalFallback` — `/healthz`
+/// degraded, requests still succeeding with answers bitwise-equal to the
+/// digital reference, and no further probes burned on a dead array.
+#[test]
+fn stuck_cells_survive_reprogram_and_land_in_digital_fallback() {
+    let canary_gate = Gate::new();
+    let mut c = cfg(Backend::AcamSim, 1);
+    // Every cell stuck at G_MIN after 2 served requests; probe every 4.
+    c.faults.plan = Some("stuck@2=1.0".into());
+    c.faults.canary_every = 4;
+    let (images, img_len) = workload(12, 323_232);
+    let img = |i: usize| images[i * img_len..(i + 1) * img_len].to_vec();
+    let set = ShardSet::start_with_hooks(
+        &c,
+        ShardHooks {
+            canary_gate: Some(Arc::clone(&canary_gate)),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+
+    // Serve through the probe: demote -> re-program -> sticky re-applied ->
+    // verify fails -> DigitalFallback, all before request 5 is served.
+    for i in 0..5 {
+        set.handle.classify_blocking(img(i)).unwrap();
+    }
+    let ladder = set.handle.shard_ladder().unwrap();
+    assert_eq!(ladder[0].0, BackendState::DigitalFallback);
+    assert!(ladder[0].1 < 0.9, "verify accuracy: {}", ladder[0].1);
+    assert_eq!(ladder[0].2, 1, "the one failed re-program attempt");
+    let health = set.handle.health();
+    assert!(health.degraded);
+    assert!(health.shards[0].healthy, "fallback is not a dead worker");
+    assert_eq!(health.shards[0].backend_state, Some("digital_fallback"));
+    let text = set.handle.prometheus_text();
+    assert!(text.contains("hec_shard_backend_state{shard=\"0\"} 2"), "{text}");
+    assert!(text.contains("hec_reprogram_total{shard=\"0\"} 1"), "{text}");
+
+    // Requests keep succeeding, flagged degraded, and the answers are
+    // bitwise the digital Eq. 8 reference (same store, same energy
+    // envelope as a FeatureCount deployment).
+    let mut reference = Pipeline::new(&cfg(Backend::FeatureCount, 1)).unwrap();
+    let probes_before = canary_gate.arrivals();
+    for i in 5..10 {
+        let resp = set.handle.classify_blocking(img(i)).unwrap();
+        assert_eq!(resp.degraded, Some(true));
+        assert_eq!(resp.backend_state.as_deref(), Some("digital_fallback"));
+        let want = reference
+            .classify_batch(&images[i * img_len..(i + 1) * img_len], 1)
+            .unwrap()
+            .remove(0);
+        assert_eq!(resp.predictions[0].class, want.top1().class);
+        assert_eq!(resp.predictions[0].score, want.top1().score);
+        assert_eq!(resp.energy.back_end_nj, want.energy.back_end_nj);
+    }
+    assert_eq!(
+        canary_gate.arrivals(),
+        probes_before,
+        "DigitalFallback must stop burning canary probes"
+    );
+    set.shutdown();
+}
+
+/// A panic-restart rebuilds a clean array and resets the ladder to
+/// `Healthy` — the restart is the operator's escape hatch from
+/// `DigitalFallback` without bouncing the deployment.
+#[test]
+fn restart_resets_the_ladder_from_digital_fallback() {
+    let restart_gate = Gate::new();
+    let mut c = cfg(Backend::AcamSim, 1);
+    c.faults.plan = Some("stuck@1=1.0".into());
+    c.faults.canary_every = 2;
+    let (images, img_len) = workload(8, 747_474);
+    let img = |i: usize| images[i * img_len..(i + 1) * img_len].to_vec();
+    let set = ShardSet::start_with_hooks(
+        &c,
+        ShardHooks {
+            panic_on: Some("boom".into()),
+            restart_gate: Some(Arc::clone(&restart_gate)),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+
+    // Drive into DigitalFallback (stuck fires before request 2, probe
+    // after request 2 fails, re-program + verify fails).
+    for i in 0..3 {
+        set.handle.classify_blocking(img(i)).unwrap();
+    }
+    assert_eq!(
+        set.handle.shard_ladder().unwrap()[0].0,
+        BackendState::DigitalFallback
+    );
+
+    // Panic the worker; the restart rebuilds pipeline + canary set and
+    // returns the ladder to Healthy.
+    let mut req = ClassifyRequest::new(img(3));
+    req.request_id = Some("boom".into());
+    assert_eq!(
+        set.handle.submit_blocking(req).err().map(|e| e.code),
+        Some(ErrorCode::Internal)
+    );
+    restart_gate.await_arrivals(1);
+    restart_gate.release();
+    restart_gate.await_arrivals(2);
+    assert_eq!(
+        set.handle.shard_ladder().unwrap()[0].0,
+        BackendState::Healthy,
+        "restart must reset the ladder (clean array)"
+    );
+    assert!(!set.handle.health().degraded);
+    set.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// 4. Per-request deadlines
+// ---------------------------------------------------------------------------
+
+/// A job whose `deadline_ms` expired in the queue fails fast with
+/// `DEADLINE_EXCEEDED` before compute, and the PR 4 drain discipline
+/// holds: `queue_depth`/`in_flight` return to exactly zero.
+#[test]
+fn queue_expired_deadline_fails_fast_and_zeroes_gauges() {
+    let hold_gate = Gate::new();
+    let c = {
+        let mut c = cfg(Backend::FeatureCount, 1);
+        c.batch.queue_depth = 8;
+        c
+    };
+    let (images, img_len) = workload(1, 111_213);
+    let img = images[..img_len].to_vec();
+    let set = ShardSet::start_with_hooks(
+        &c,
+        ShardHooks {
+            hold: Some(("hold".into(), Arc::clone(&hold_gate))),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+
+    // Park the worker, then queue one already-expired job (`deadline_ms:
+    // 0` expires by definition — the deterministic probe) and one without
+    // a deadline behind it.
+    let mut req = ClassifyRequest::new(img.clone());
+    req.request_id = Some("hold".into());
+    let hold_rx = set.handle.submit(req).unwrap();
+    hold_gate.await_arrivals(1);
+    let mut expired = ClassifyRequest::new(img.clone());
+    expired.deadline_ms = Some(0);
+    let expired_rx = set.handle.submit(expired).unwrap();
+    let mut patient = ClassifyRequest::new(img.clone());
+    patient.deadline_ms = Some(u64::MAX / 2);
+    let patient_rx = set.handle.submit(patient).unwrap();
+
+    hold_gate.release();
+    assert!(hold_rx.recv().unwrap().is_ok());
+    let err = expired_rx.recv().unwrap().err().expect("must expire");
+    assert_eq!(err.code, ErrorCode::DeadlineExceeded);
+    assert_eq!(err.code.as_str(), "DEADLINE_EXCEEDED");
+    assert!(err.message.contains("deadline"), "{}", err.message);
+    // The un-expired deadline job behind it computes normally.
+    assert!(patient_rx.recv().unwrap().is_ok());
+
+    // Accounting: the expired job is an error, not a response, and every
+    // gauge is exactly zero once the waiters resolved.
+    let snap = set.handle.shard_metrics(0).snapshot();
+    assert_eq!(snap.queue_depth, 0, "queue_depth leaked past the drop");
+    assert_eq!(snap.in_flight, 0, "in_flight leaked past the drop");
+    assert_eq!(snap.responses, 2);
+    assert_eq!(snap.errors, 1);
+    set.shutdown();
+}

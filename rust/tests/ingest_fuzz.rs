@@ -133,6 +133,7 @@ fn assert_item_parity(
                 "return_features diverged on {text:?}"
             );
             assert_eq!(a.request_id, b.request_id, "request_id diverged on {text:?}");
+            assert_eq!(a.deadline_ms, b.deadline_ms, "deadline_ms diverged on {text:?}");
         }
         (Err(a), Err(b)) => {
             assert_eq!(err_parts(a), err_parts(b), "error diverged on {text:?}");
@@ -348,6 +349,9 @@ fn random_request(rng: &mut Rng) -> ClassifyRequest {
     }
     if rng.below(4) == 0 {
         req.request_id = Some(format!("id-{}", rng.below(10_000)));
+    }
+    if rng.below(4) == 0 {
+        req.deadline_ms = Some(rng.below(5_000) as u64);
     }
     req
 }

@@ -450,6 +450,7 @@ fn panic_drain_fails_queued_jobs_and_zeroes_gauges() {
             panic_on: Some("boom".into()),
             hold: Some(("hold".into(), std::sync::Arc::clone(&hold_gate))),
             restart_gate: Some(std::sync::Arc::clone(&restart_gate)),
+            ..Default::default()
         },
     )
     .unwrap();
