@@ -1,0 +1,232 @@
+//! Multi-tenant serving bench: two tenants on one shard — `t1` on the
+//! deployment's default store, `t2` pinned to its own — with a live store
+//! publish landing mid-load and an online re-fit after.  Measures what the
+//! registry actually costs and guarantees:
+//!
+//! * **Swap latency**: wall time of `publish()` itself (registry mutex +
+//!   geometry validation) and how many requests it takes a serving shard
+//!   to adopt the new version (must be the very next batch).
+//! * **Tenant isolation**: publishing `t2`'s store never perturbs `t1` —
+//!   every `t1` response before and after the swap is tagged with the
+//!   identical `(store, version)`, and per-tenant served counters are
+//!   exact.
+//! * **Re-programming energy**: adopting a published store on an ACAM
+//!   deployment charges the 80 pJ/cell re-program to the shard's energy
+//!   meter; the bench asserts the ledger jump and reports the figure.
+//!
+//! Deterministic under fixed seeds: serial blocking submits
+//! (`max_batch = 1`, `max_wait_us = 0`) pin the adopt-at-batch-boundary
+//! arithmetic exactly.  `HEC_BENCH_SMOKE=1` shrinks request counts for CI;
+//! the JSON artifact (`BENCH_multitenant.json`) is the deliverable.
+
+use std::time::Instant;
+
+use hec::benchkit::{section, BenchResult};
+use hec::config::{Backend, ServeConfig, TenantSpec};
+use hec::coordinator::{ClassifySurface, ShardSet};
+use hec::dataset::SyntheticDataset;
+use hec::energy::EnergyModel;
+use hec::jsonlite::Value;
+use hec::runtime::Meta;
+use hec::store::StoreRegistry;
+use hec::templates::TemplateStore;
+
+/// Class-separable labelled rows matching the registry's geometry.
+fn sample_store(reg: &StoreRegistry, seed: u64) -> TemplateStore {
+    let (num_classes, n_features, _) = reg.geometry();
+    let per_class = 4;
+    let n = per_class * num_classes;
+    let labels: Vec<usize> = (0..n).map(|i| i % num_classes).collect();
+    let mut rng = hec::rng::Rng::new(seed);
+    let mut feats = vec![0.0f32; n * n_features];
+    for (i, l) in labels.iter().enumerate() {
+        for j in 0..n_features {
+            feats[i * n_features + j] = (*l as f32) * 0.3
+                + rng.u01() as f32
+                + if j % num_classes == *l { 1.5 } else { 0.0 };
+        }
+    }
+    TemplateStore::from_features(&feats, &labels, n_features, num_classes, seed).unwrap()
+}
+
+/// Same field mapping as the other serving benches: `mean_us`/`min_us` =
+/// 1e6 / request throughput; `p50_us`/`p99_us` = end-to-end latency
+/// percentile upper bounds.
+fn row(name: &str, requests: usize, secs: f64, p50_us: u64, p99_us: u64) -> BenchResult {
+    let tput = requests as f64 / secs;
+    let inv = std::time::Duration::from_secs_f64(if tput > 0.0 { 1.0 / tput } else { 0.0 });
+    BenchResult {
+        name: name.to_string(),
+        iters: requests,
+        mean: inv,
+        p50: std::time::Duration::from_micros(p50_us),
+        p99: std::time::Duration::from_micros(p99_us),
+        min: inv,
+    }
+}
+
+fn main() {
+    let smoke = std::env::var("HEC_BENCH_SMOKE").is_ok();
+    // Alternating t1/t2 traffic; the publish lands exactly halfway.
+    let total = if smoke { 24usize } else { 120 };
+    let swap_at = total / 2;
+    let have_artifacts = std::path::Path::new("artifacts/meta.json").is_file();
+    if !have_artifacts {
+        println!("multitenant_serving: no artifacts/ — serving the synthetic fallback deployment");
+    }
+
+    let mut cfg = ServeConfig {
+        artifacts_dir: "artifacts".into(),
+        backend: Backend::AcamSim,
+        ..Default::default()
+    };
+    cfg.batch.max_batch = 1; // serial submits -> exact swap-boundary arithmetic
+    cfg.batch.max_wait_us = 0;
+    cfg.shards.count = 1; // pin: default 0 = auto (HEC_SHARDS-sensitive)
+    cfg.stores.refit_min_accuracy = 0.0; // re-fit phase publishes unconditionally
+    cfg.stores.tenants = vec![
+        TenantSpec {
+            name: "t1".into(),
+            store: "default".into(),
+            quota: 0,
+        },
+        TenantSpec {
+            name: "t2".into(),
+            store: "t2store".into(),
+            quota: 0,
+        },
+    ];
+
+    let meta = Meta::load_or_synthetic("artifacts").unwrap();
+    let ds = SyntheticDataset::new(2_718_281, total, meta.norm.mean as f32, meta.norm.std as f32);
+    let images: Vec<Vec<f32>> = (0..total).map(|i| ds.image(i)).collect();
+
+    let set = ShardSet::start(&cfg).unwrap();
+    let admin = set.handle.store_admin().expect("registry-backed surface");
+    let reg = admin.registry().clone();
+    let t2_store = sample_store(&reg, 0xBEEF);
+    let expected_t2_nj = {
+        let s = t2_store.set(cfg.templates_per_class).unwrap();
+        EnergyModel::default().reprogram_nj(s.num_templates() as u64, s.num_features() as u64)
+    };
+
+    section(&format!(
+        "phase 1+2: {total} alternating t1/t2 requests, t2store published at request {swap_at}"
+    ));
+    let serve = |i: usize| {
+        let mut req = hec::api::ClassifyRequest::new(images[i].clone());
+        req.request_id = Some(format!("t{}/{i}", 1 + i % 2));
+        set.handle.submit_blocking(req).unwrap()
+    };
+
+    let t0 = Instant::now();
+    for i in 0..swap_at {
+        let resp = serve(i);
+        let want = if i % 2 == 0 { ("default", 0) } else { ("t2store", 0) };
+        assert_eq!(resp.store.as_deref(), Some(want.0), "request {i}");
+        assert_eq!(resp.store_version, Some(want.1), "request {i}: pre-swap version");
+    }
+    let pre_secs = t0.elapsed().as_secs_f64();
+
+    // The live swap: energy meter before, publish wall time, then keep
+    // serving — t2 must flip to v1 on its next batch, t1 must not move.
+    let energy_before_nj = set.handle.shard_metrics(0).energy_nj();
+    let t_pub = Instant::now();
+    let snap = reg.publish("t2store", t2_store, "put").unwrap();
+    let swap_publish_us = t_pub.elapsed().as_micros() as u64;
+    assert_eq!(snap.version, 1);
+
+    let t1 = Instant::now();
+    for i in swap_at..total {
+        let resp = serve(i);
+        let want = if i % 2 == 0 { ("default", 0) } else { ("t2store", 1) };
+        assert_eq!(resp.store.as_deref(), Some(want.0), "request {i}");
+        assert_eq!(
+            resp.store_version,
+            Some(want.1),
+            "request {i}: adoption must land on the first post-publish batch \
+             and never disturb the other tenant"
+        );
+    }
+    let post_secs = t1.elapsed().as_secs_f64();
+    let energy_after_nj = set.handle.shard_metrics(0).energy_nj();
+    let swap_energy_nj = energy_after_nj - energy_before_nj;
+    assert!(
+        swap_energy_nj >= expected_t2_nj,
+        "adopting t2store must charge its re-program ({swap_energy_nj:.1} nJ < {expected_t2_nj:.1} nJ)"
+    );
+    println!("  publish latency: {swap_publish_us} us");
+    println!("  t2 adoption: first post-publish t2 batch (deterministic)");
+    println!("  re-program charged: {expected_t2_nj:.1} nJ of {swap_energy_nj:.1} nJ window");
+
+    // Per-tenant accounting is exact under alternating traffic.
+    let served: Vec<(String, u64, u64)> = reg
+        .tenants()
+        .iter()
+        .map(|t| (t.name.clone(), t.served(), t.rejected()))
+        .collect();
+    for (name, s, r) in &served {
+        println!("  tenant {name}: served {s}, rejected {r}");
+        assert_eq!(*s as usize, total / 2, "tenant {name} served count");
+        assert_eq!(*r, 0, "tenant {name} rejections");
+    }
+
+    section("phase 3: online re-fit of the default store");
+    let t_refit = Instant::now();
+    let outcome = admin.refit("default").unwrap();
+    let refit_us = t_refit.elapsed().as_micros() as u64;
+    assert!(outcome.published, "min_accuracy 0 publishes unconditionally");
+    assert_eq!(outcome.version, Some(1));
+    // t1's next response serves the re-fit store; t2 is again untouched.
+    let resp = serve(0);
+    assert_eq!(resp.store.as_deref(), Some("default"));
+    assert_eq!(resp.store_version, Some(1), "t1 must adopt the re-fit publish");
+    let resp = serve(1);
+    assert_eq!((resp.store.as_deref(), resp.store_version), (Some("t2store"), Some(1)));
+    println!(
+        "  refit: accuracy {:.3}, version {:?}, {refit_us} us, re-program {:.1} nJ/array",
+        outcome.accuracy, outcome.version, outcome.reprogram_nj
+    );
+
+    let snap_all = set.handle.snapshot();
+    let total_energy_nj = set.handle.shard_metrics(0).energy_nj();
+    set.shutdown();
+
+    let rows_owned = [
+        row("pre_swap_serving", swap_at, pre_secs, snap_all.latency_p50_us, snap_all.latency_p99_us),
+        row("post_swap_serving", total - swap_at, post_secs, snap_all.latency_p50_us, snap_all.latency_p99_us),
+    ];
+    let rows: Vec<&BenchResult> = rows_owned.iter().collect();
+    hec::benchkit::write_json_report(
+        "BENCH_multitenant.json",
+        "hec/multitenant_serving/v1",
+        &[
+            ("requests", Value::Num(total as f64)),
+            ("swap_at_request", Value::Num(swap_at as f64)),
+            ("tenants", Value::Num(2.0)),
+            ("smoke", Value::Bool(smoke)),
+            ("artifacts", Value::Bool(have_artifacts)),
+            ("swap_publish_us", Value::Num(swap_publish_us as f64)),
+            ("swap_adoption_batches", Value::Num(1.0)),
+            ("swap_reprogram_nj", Value::Num(expected_t2_nj)),
+            ("refit_publish_us", Value::Num(refit_us as f64)),
+            ("refit_accuracy", Value::Num(outcome.accuracy)),
+            ("refit_reprogram_nj", Value::Num(outcome.reprogram_nj)),
+            ("t1_served", Value::Num(served[0].1 as f64)),
+            ("t2_served", Value::Num(served[1].1 as f64)),
+            ("total_energy_nj", Value::Num(total_energy_nj)),
+            (
+                "row_semantics",
+                Value::Str(
+                    "mean_us/min_us = 1e6/req_throughput; p50_us/p99_us = \
+                     end-to-end request latency upper bounds"
+                        .to_string(),
+                ),
+            ),
+        ],
+        &rows,
+    )
+    .expect("write BENCH_multitenant.json");
+    println!("\nwrote BENCH_multitenant.json ({} rows)", rows.len());
+    println!("multitenant_serving: PASS");
+}

@@ -76,8 +76,10 @@ pub struct ClassifyRequest {
     /// Row-major grayscale pixels, `image_size^2` floats (the deployment's
     /// `/healthz` reports the expected length).
     pub image: Vec<f32>,
-    /// How many ranked classes to return (clamped to the class count;
-    /// 0 is rejected as `INVALID_ARGUMENT`).
+    /// How many ranked classes to return.  Must be in
+    /// `1..=num_classes` — `0` and values above the deployment's class
+    /// count are both rejected as `INVALID_ARGUMENT` (uniformly across
+    /// the JSON, streaming, and binary ingest paths).
     pub top_k: usize,
     /// Per-request backend override; `None` serves on the deployment
     /// backend.  Overrides the deployment did not provision for (e.g.
@@ -150,6 +152,11 @@ pub struct ClassifyResult {
     pub backend: Backend,
     /// Raw front-end features, when requested.
     pub features: Option<Vec<f32>>,
+    /// Template store that scored this item, as `(id, version)`.  `None`
+    /// when the deployment's store registry is in single-default-store
+    /// mode (no tenants, nothing published) — the pre-registry serving
+    /// shape.
+    pub store: Option<(std::sync::Arc<str>, u64)>,
 }
 
 impl ClassifyResult {
@@ -189,6 +196,16 @@ pub struct ClassifyResponse {
     /// (`"healthy"`, `"reprogramming"`, `"digital_fallback"`).  Additive v1
     /// field; `None` whenever the canary ladder is inactive.
     pub backend_state: Option<String>,
+    /// Id of the template store that scored this request.  Additive v1
+    /// field; `None` whenever the store registry is in
+    /// single-default-store mode (no tenant config, nothing published) —
+    /// in that case the wire form is byte-identical to pre-registry
+    /// builds.
+    pub store: Option<String>,
+    /// Version of the template store that scored this request (`0` is the
+    /// bootstrap store a shard built itself).  Additive v1 field; same
+    /// `None` rule as [`ClassifyResponse::store`].
+    pub store_version: Option<u64>,
 }
 
 impl ClassifyResponse {
@@ -222,6 +239,9 @@ pub enum ErrorCode {
     /// The request's `deadline_ms` elapsed before compute dispatched (or,
     /// at the gateway, the client stalled past the body-read deadline).
     DeadlineExceeded,
+    /// The resolved tenant is at its configured in-flight quota — retry
+    /// after an outstanding request resolves.
+    QuotaExceeded,
     /// Unexpected internal failure (engine error, dropped response, ...).
     Internal,
 }
@@ -238,6 +258,7 @@ impl ErrorCode {
             ErrorCode::NotFound => "NOT_FOUND",
             ErrorCode::MethodNotAllowed => "METHOD_NOT_ALLOWED",
             ErrorCode::DeadlineExceeded => "DEADLINE_EXCEEDED",
+            ErrorCode::QuotaExceeded => "QUOTA_EXCEEDED",
             ErrorCode::Internal => "INTERNAL",
         }
     }
@@ -254,6 +275,7 @@ impl ErrorCode {
             "NOT_FOUND" => ErrorCode::NotFound,
             "METHOD_NOT_ALLOWED" => ErrorCode::MethodNotAllowed,
             "DEADLINE_EXCEEDED" => ErrorCode::DeadlineExceeded,
+            "QUOTA_EXCEEDED" => ErrorCode::QuotaExceeded,
             "INTERNAL" => ErrorCode::Internal,
             _ => return None,
         })
@@ -275,7 +297,7 @@ impl ErrorCode {
             | ErrorCode::MalformedRequest => 400,
             ErrorCode::NotFound => 404,
             ErrorCode::MethodNotAllowed => 405,
-            ErrorCode::QueueFull => 429,
+            ErrorCode::QueueFull | ErrorCode::QuotaExceeded => 429,
             ErrorCode::BackendUnavailable | ErrorCode::ServerStopped => 503,
             ErrorCode::DeadlineExceeded => 504,
             ErrorCode::Internal => 500,
@@ -332,6 +354,7 @@ mod tests {
             ErrorCode::NotFound,
             ErrorCode::MethodNotAllowed,
             ErrorCode::DeadlineExceeded,
+            ErrorCode::QuotaExceeded,
             ErrorCode::Internal,
         ] {
             assert_eq!(ErrorCode::parse(code.as_str()), Some(code));

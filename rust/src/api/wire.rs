@@ -168,6 +168,12 @@ impl ClassifyResponse {
         if let Some(s) = &self.backend_state {
             m.insert("backend_state".to_string(), Value::Str(s.clone()));
         }
+        if let Some(s) = &self.store {
+            m.insert("store".to_string(), Value::Str(s.clone()));
+        }
+        if let Some(v) = self.store_version {
+            m.insert("store_version".to_string(), Value::Num(v as f64));
+        }
         Value::Obj(m)
     }
 
@@ -239,6 +245,8 @@ impl ClassifyResponse {
                 .get("backend_state")
                 .and_then(Value::as_str)
                 .map(str::to_string),
+            store: obj.get("store").and_then(Value::as_str).map(str::to_string),
+            store_version: obj.get("store_version").and_then(Value::as_u64),
         })
     }
 }
@@ -349,6 +357,8 @@ mod tests {
             shard: Some(2),
             degraded: Some(true),
             backend_state: Some("digital_fallback".into()),
+            store: Some("default".into()),
+            store_version: Some(3),
         };
         let text = resp.to_value().to_json();
         let v = jsonlite::parse(&text).unwrap();
@@ -365,20 +375,29 @@ mod tests {
         assert_eq!(back.shard, Some(2));
         assert_eq!(back.degraded, Some(true));
         assert_eq!(back.backend_state.as_deref(), Some("digital_fallback"));
-        // Un-sharded / ladder-off responses omit the optional fields and
-        // decode back to None (v1 wire compatibility is additive).
+        assert_eq!(back.store.as_deref(), Some("default"));
+        assert_eq!(back.store_version, Some(3));
+        // Un-sharded / ladder-off / single-default-store responses omit the
+        // optional fields and decode back to None (v1 wire compatibility is
+        // additive).
         let mut unsharded = resp;
         unsharded.shard = None;
         unsharded.degraded = None;
         unsharded.backend_state = None;
+        unsharded.store = None;
+        unsharded.store_version = None;
         let v = jsonlite::parse(&unsharded.to_value().to_json()).unwrap();
         assert!(v.get("shard").is_none());
         assert!(v.get("degraded").is_none());
         assert!(v.get("backend_state").is_none());
+        assert!(v.get("store").is_none());
+        assert!(v.get("store_version").is_none());
         let back = ClassifyResponse::from_value(&v).unwrap();
         assert_eq!(back.shard, None);
         assert_eq!(back.degraded, None);
         assert_eq!(back.backend_state, None);
+        assert_eq!(back.store, None);
+        assert_eq!(back.store_version, None);
     }
 
     #[test]

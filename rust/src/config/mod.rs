@@ -229,6 +229,111 @@ impl Default for FaultsConfig {
     }
 }
 
+/// One tenant binding: requests whose `request_id` starts with
+/// `"{name}/"` serve from `store` under a concurrent-in-flight `quota`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenantSpec {
+    pub name: String,
+    /// Template-store id this tenant is pinned to (`"default"` shares the
+    /// deployment store).
+    pub store: String,
+    /// Max concurrent in-flight requests; `0` = unlimited.
+    pub quota: u64,
+}
+
+/// Template-store registry configuration (see `crate::store`).  Everything
+/// defaults to *off*: with no tenants and no stores dir, the registry is
+/// inert and serving is bitwise identical to a build without it.
+#[derive(Debug, Clone)]
+pub struct StoresConfig {
+    /// Directory of `<id>.json` template stores published at startup
+    /// (version 1, origin `"dir"`).  `None` falls back to the
+    /// `HEC_STORES_DIR` env var.
+    pub dir: Option<String>,
+    /// Digital-matcher accuracy a re-fit candidate must reach on the
+    /// held-out probe set before it is published.
+    pub refit_min_accuracy: f64,
+    /// Labelled probes per class drawn for each online re-fit.
+    pub refit_per_class: usize,
+    /// Tenant bindings; empty falls back to the `HEC_TENANTS` env var
+    /// (`"name=store:quota,name2=store2"`).
+    pub tenants: Vec<TenantSpec>,
+}
+
+impl Default for StoresConfig {
+    fn default() -> Self {
+        StoresConfig {
+            dir: None,
+            refit_min_accuracy: 0.8,
+            refit_per_class: 8,
+            tenants: Vec::new(),
+        }
+    }
+}
+
+/// Identifier charset shared by tenant names and store ids:
+/// `[A-Za-z0-9_-]+`, non-empty, at most 64 bytes.  Keeps them safe for URL
+/// path segments, Prometheus label values, and the `request_id` tenant
+/// prefix (which reserves `/`).
+fn ident_ok(s: &str) -> bool {
+    !s.is_empty()
+        && s.len() <= 64
+        && s.bytes()
+            .all(|b| b.is_ascii_alphanumeric() || b == b'_' || b == b'-')
+}
+
+/// Parse a `HEC_TENANTS`/`--tenants`-style spec: comma-separated
+/// `name=store[:quota]` (quota 0 / omitted = unlimited).
+pub fn parse_tenant_list(spec: &str) -> Result<Vec<TenantSpec>> {
+    let mut out = Vec::new();
+    for part in spec.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        let (name, rest) = part
+            .split_once('=')
+            .ok_or_else(|| Error::Config(format!("tenant spec '{part}': expected name=store")))?;
+        let (store, quota) = match rest.split_once(':') {
+            Some((s, q)) => (
+                s,
+                q.trim()
+                    .parse::<u64>()
+                    .map_err(|_| Error::Config(format!("tenant spec '{part}': bad quota")))?,
+            ),
+            None => (rest, 0),
+        };
+        out.push(TenantSpec {
+            name: name.trim().to_string(),
+            store: store.trim().to_string(),
+            quota,
+        });
+    }
+    Ok(out)
+}
+
+fn validate_tenants(tenants: &[TenantSpec]) -> Result<()> {
+    let mut seen = std::collections::BTreeSet::new();
+    for t in tenants {
+        if !ident_ok(&t.name) {
+            return Err(Error::Config(format!(
+                "tenant name '{}' must be non-empty [A-Za-z0-9_-]",
+                t.name
+            )));
+        }
+        if !ident_ok(&t.store) {
+            return Err(Error::Config(format!(
+                "tenant '{}': store id '{}' must be non-empty [A-Za-z0-9_-]",
+                t.name, t.store
+            )));
+        }
+        if !seen.insert(t.name.as_str()) {
+            return Err(Error::Config(format!("duplicate tenant name '{}'", t.name)));
+        }
+    }
+    Ok(())
+}
+
 /// ACAM back-end knobs.
 #[derive(Debug, Clone)]
 pub struct AcamConfig {
@@ -279,6 +384,7 @@ pub struct ServeConfig {
     pub http: HttpConfig,
     pub shards: ShardsConfig,
     pub faults: FaultsConfig,
+    pub stores: StoresConfig,
 }
 
 impl Default for ServeConfig {
@@ -295,6 +401,7 @@ impl Default for ServeConfig {
             http: HttpConfig::default(),
             shards: ShardsConfig::default(),
             faults: FaultsConfig::default(),
+            stores: StoresConfig::default(),
         }
     }
 }
@@ -367,6 +474,35 @@ impl ServeConfig {
             }
             if let Some(v) = f.get("canary_threshold").and_then(|v| v.as_f64()) {
                 cfg.faults.canary_threshold = v;
+            }
+        }
+        if let Some(s) = doc.get("stores") {
+            if let Some(v) = s.get("dir").and_then(|v| v.as_str()) {
+                cfg.stores.dir = Some(v.to_string());
+            }
+            if let Some(v) = s.get("refit_min_accuracy").and_then(|v| v.as_f64()) {
+                cfg.stores.refit_min_accuracy = v;
+            }
+            if let Some(v) = s.get("refit_per_class").and_then(|v| v.as_usize()) {
+                cfg.stores.refit_per_class = v;
+            }
+            if let Some(ts) = s.get("tenants").and_then(|v| v.as_array()) {
+                for t in ts {
+                    let name = t
+                        .get("name")
+                        .and_then(|v| v.as_str())
+                        .ok_or_else(|| Error::Config("tenant entry needs a name".into()))?;
+                    let store = t
+                        .get("store")
+                        .and_then(|v| v.as_str())
+                        .unwrap_or("default");
+                    let quota = t.get("quota").and_then(|v| v.as_u64()).unwrap_or(0);
+                    cfg.stores.tenants.push(TenantSpec {
+                        name: name.to_string(),
+                        store: store.to_string(),
+                        quota,
+                    });
+                }
             }
         }
         if let Some(a) = doc.get("acam") {
@@ -474,6 +610,36 @@ impl ServeConfig {
             .unwrap_or(0)
     }
 
+    /// Effective template-store directory.  Precedence: explicit
+    /// `stores.dir` (config file / `--stores-dir`) > `HEC_STORES_DIR` env >
+    /// none.
+    pub fn resolve_stores_dir(&self) -> Option<String> {
+        self.stores.dir.clone().or_else(|| {
+            std::env::var("HEC_STORES_DIR")
+                .ok()
+                .map(|v| v.trim().to_string())
+                .filter(|v| !v.is_empty())
+        })
+    }
+
+    /// Effective tenant bindings.  Precedence: explicit `stores.tenants`
+    /// (config file / `--tenants`) > `HEC_TENANTS` env
+    /// (`"name=store[:quota],..."`) > none.  A malformed spec is a config
+    /// error either way — a typo'd quota must fail loudly at startup, not
+    /// silently admit unlimited traffic.
+    pub fn resolve_tenants(&self) -> Result<Vec<TenantSpec>> {
+        let tenants = if !self.stores.tenants.is_empty() {
+            self.stores.tenants.clone()
+        } else {
+            match std::env::var("HEC_TENANTS") {
+                Ok(spec) if !spec.trim().is_empty() => parse_tenant_list(&spec)?,
+                _ => Vec::new(),
+            }
+        };
+        validate_tenants(&tenants)?;
+        Ok(tenants)
+    }
+
     pub fn validate(&self) -> Result<()> {
         if !(1..=3).contains(&self.templates_per_class) {
             return Err(Error::Config(format!(
@@ -507,6 +673,18 @@ impl ServeConfig {
                 self.faults.canary_threshold
             )));
         }
+        if !(0.0..=1.0).contains(&self.stores.refit_min_accuracy) {
+            return Err(Error::Config(format!(
+                "stores.refit_min_accuracy must be in [0, 1], got {}",
+                self.stores.refit_min_accuracy
+            )));
+        }
+        if self.stores.refit_per_class == 0 {
+            return Err(Error::Config(
+                "stores.refit_per_class must be positive".into(),
+            ));
+        }
+        validate_tenants(&self.stores.tenants)?;
         // Surface a malformed plan spec at load time, not first use.
         self.resolve_fault_plan()?;
         Ok(())
@@ -698,6 +876,82 @@ mod tests {
         assert!(bad.validate().is_err());
         let mut bad = ServeConfig::default();
         bad.faults.canary_threshold = 1.5;
+        assert!(bad.validate().is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn stores_config_loads_parses_and_validates() {
+        let dir = std::env::temp_dir().join(format!("hec-storecfg-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("serve.json");
+        std::fs::write(
+            &path,
+            r#"{"stores": {"dir": "/tmp/stores", "refit_min_accuracy": 0.75,
+                           "refit_per_class": 4,
+                           "tenants": [{"name": "acme", "store": "acme-store", "quota": 16},
+                                       {"name": "beta"}]}}"#,
+        )
+        .unwrap();
+        let cfg = ServeConfig::load(&path).unwrap();
+        assert_eq!(cfg.stores.dir.as_deref(), Some("/tmp/stores"));
+        assert!((cfg.stores.refit_min_accuracy - 0.75).abs() < 1e-12);
+        assert_eq!(cfg.stores.refit_per_class, 4);
+        assert_eq!(cfg.stores.tenants.len(), 2);
+        assert_eq!(cfg.stores.tenants[0].name, "acme");
+        assert_eq!(cfg.stores.tenants[0].store, "acme-store");
+        assert_eq!(cfg.stores.tenants[0].quota, 16);
+        // Omitted store/quota default to the shared store, unlimited.
+        assert_eq!(cfg.stores.tenants[1].store, "default");
+        assert_eq!(cfg.stores.tenants[1].quota, 0);
+        assert_eq!(cfg.resolve_stores_dir().as_deref(), Some("/tmp/stores"));
+        assert_eq!(cfg.resolve_tenants().unwrap(), cfg.stores.tenants);
+
+        // Env-style spec string parsing.
+        let parsed = parse_tenant_list("t1=default:100, t2=storeA").unwrap();
+        assert_eq!(
+            parsed,
+            vec![
+                TenantSpec {
+                    name: "t1".into(),
+                    store: "default".into(),
+                    quota: 100
+                },
+                TenantSpec {
+                    name: "t2".into(),
+                    store: "storeA".into(),
+                    quota: 0
+                },
+            ]
+        );
+        assert!(parse_tenant_list("justaname").is_err());
+        assert!(parse_tenant_list("t=s:notanumber").is_err());
+
+        // Validation: bad idents, duplicates, bad refit knobs.
+        let mut bad = ServeConfig::default();
+        bad.stores.tenants.push(TenantSpec {
+            name: "a/b".into(),
+            store: "default".into(),
+            quota: 0,
+        });
+        assert!(bad.validate().is_err());
+        let mut bad = ServeConfig::default();
+        bad.stores.tenants.push(TenantSpec {
+            name: "t".into(),
+            store: "default".into(),
+            quota: 0,
+        });
+        bad.stores.tenants.push(TenantSpec {
+            name: "t".into(),
+            store: "other".into(),
+            quota: 1,
+        });
+        assert!(bad.validate().is_err());
+        let mut bad = ServeConfig::default();
+        bad.stores.refit_min_accuracy = 1.5;
+        assert!(bad.validate().is_err());
+        let mut bad = ServeConfig::default();
+        bad.stores.refit_per_class = 0;
         assert!(bad.validate().is_err());
         std::fs::remove_dir_all(&dir).ok();
     }

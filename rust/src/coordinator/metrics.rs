@@ -52,6 +52,56 @@ impl Histogram {
         }
         1u64 << BUCKETS
     }
+
+    /// Render as Prometheus `_bucket`/`_sum`/`_count` series (cumulative
+    /// fixed buckets).  Observations are integer microseconds, so bucket i
+    /// — which covers `[2^i, 2^(i+1))` — has the inclusive upper bound
+    /// `le="2^(i+1)-1"`.  `labels` is a pre-formatted label list without
+    /// braces (`""`, `shard="0"`, `backend="fc",shard="0"`); the caller
+    /// emits the one `# HELP`/`# TYPE histogram` header per family.  The
+    /// `_count` line repeats the `+Inf` bucket so the rendered series is
+    /// self-consistent even against concurrent recording.
+    pub fn render_prometheus(&self, name: &str, labels: &str, out: &mut String) {
+        use std::fmt::Write as _;
+        let with = |extra: &str| {
+            if labels.is_empty() {
+                format!("{{{extra}}}")
+            } else {
+                format!("{{{labels},{extra}}}")
+            }
+        };
+        let plain = if labels.is_empty() {
+            String::new()
+        } else {
+            format!("{{{labels}}}")
+        };
+        let mut cum = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            cum += b.load(Ordering::Relaxed);
+            let le = (1u64 << (i + 1)) - 1;
+            let _ = writeln!(out, "{name}_bucket{} {cum}", with(&format!("le=\"{le}\"")));
+        }
+        let _ = writeln!(out, "{name}_bucket{} {cum}", with("le=\"+Inf\""));
+        let _ = writeln!(
+            out,
+            "{name}_sum{plain} {}",
+            self.sum_us.load(Ordering::Relaxed)
+        );
+        let _ = writeln!(out, "{name}_count{plain} {cum}");
+    }
+}
+
+/// Label values for the per-backend latency histograms, indexed like
+/// [`Metrics::latency_for`] (the canonical v1 wire names).
+pub const BACKEND_LABELS: [&str; 4] = ["acam", "fc", "sim", "softmax"];
+
+fn backend_index(b: crate::config::Backend) -> usize {
+    match b {
+        crate::config::Backend::AcamSim => 0,
+        crate::config::Backend::FeatureCount => 1,
+        crate::config::Backend::Similarity => 2,
+        crate::config::Backend::Softmax => 3,
+    }
 }
 
 /// All serving counters.
@@ -77,11 +127,19 @@ pub struct Metrics {
     pub execute: Histogram,
     /// Back-end (ACAM / matcher) time per batch.
     pub backend: Histogram,
+    /// End-to-end request latency split by serving backend (indexed by
+    /// [`backend_index`]; see [`BACKEND_LABELS`]).
+    latency_by_backend: [Histogram; 4],
     /// Modelled energy, micro-nJ integer (nJ * 1e3) to stay in atomics.
     energy_mnj: AtomicU64,
 }
 
 impl Metrics {
+    /// The per-backend end-to-end latency histogram for `b`.
+    pub fn latency_for(&self, b: crate::config::Backend) -> &Histogram {
+        &self.latency_by_backend[backend_index(b)]
+    }
+
     pub fn add_energy_nj(&self, nj: f64) {
         self.energy_mnj
             .fetch_add((nj * 1e3).round() as u64, Ordering::Relaxed);
@@ -356,6 +414,67 @@ pub fn prometheus_shards(shards: &[(Snapshot, bool)]) -> String {
     out
 }
 
+/// Render the fixed-bucket latency histogram families for `GET /metrics`:
+/// end-to-end request latency, per-batch engine execute time, and
+/// end-to-end latency split by serving backend.  `labeled` adds a
+/// `shard="i"` label per entry (the sharded surface); `false` renders the
+/// single-pipeline surface unlabeled.  One `HELP`/`TYPE` header per family.
+pub fn prometheus_histograms(
+    shards: &[std::sync::Arc<Metrics>],
+    labeled: bool,
+    out: &mut String,
+) {
+    use std::fmt::Write as _;
+    fn fam(out: &mut String, name: &str, help: &str) {
+        let _ = writeln!(out, "# HELP {name} {help}");
+        let _ = writeln!(out, "# TYPE {name} histogram");
+    }
+    let shard_label = |i: usize| {
+        if labeled {
+            format!("shard=\"{i}\"")
+        } else {
+            String::new()
+        }
+    };
+    fam(
+        out,
+        "hec_latency_microseconds",
+        "End-to-end request latency (us), power-of-two buckets",
+    );
+    for (i, m) in shards.iter().enumerate() {
+        m.latency
+            .render_prometheus("hec_latency_microseconds", &shard_label(i), out);
+    }
+    fam(
+        out,
+        "hec_execute_microseconds",
+        "Per-batch engine execute time (us), power-of-two buckets",
+    );
+    for (i, m) in shards.iter().enumerate() {
+        m.execute
+            .render_prometheus("hec_execute_microseconds", &shard_label(i), out);
+    }
+    fam(
+        out,
+        "hec_backend_latency_microseconds",
+        "End-to-end request latency by serving backend (us), power-of-two buckets",
+    );
+    for (i, m) in shards.iter().enumerate() {
+        for (bi, backend) in BACKEND_LABELS.iter().enumerate() {
+            let labels = if labeled {
+                format!("backend=\"{backend}\",shard=\"{i}\"")
+            } else {
+                format!("backend=\"{backend}\"")
+            };
+            m.latency_by_backend[bi].render_prometheus(
+                "hec_backend_latency_microseconds",
+                &labels,
+                out,
+            );
+        }
+    }
+}
+
 /// Render the degradation-ladder Prometheus series (`shard`-labelled), one
 /// tuple per shard: `(backend_state, last canary accuracy, re-programs)`.
 /// Appended after [`prometheus_shards`] by the sharded `/metrics` — but
@@ -617,6 +736,76 @@ mod tests {
             assert!(name.contains("{shard=\""), "unlabelled sample {line:?}");
             assert!(value.parse::<f64>().is_ok(), "bad value in {line:?}");
         }
+    }
+
+    #[test]
+    fn histogram_prometheus_block_is_cumulative_and_consistent() {
+        let h = Histogram::default();
+        for us in [1u64, 2, 4, 8, 1000] {
+            h.record_us(us);
+        }
+        let mut out = String::new();
+        h.render_prometheus("hec_latency_microseconds", "", &mut out);
+        for needle in [
+            "hec_latency_microseconds_bucket{le=\"1\"} 1",
+            "hec_latency_microseconds_bucket{le=\"3\"} 2",
+            "hec_latency_microseconds_bucket{le=\"7\"} 3",
+            "hec_latency_microseconds_bucket{le=\"15\"} 4",
+            "hec_latency_microseconds_bucket{le=\"+Inf\"} 5",
+            "hec_latency_microseconds_sum 1015",
+            "hec_latency_microseconds_count 5",
+        ] {
+            assert!(out.contains(needle), "missing {needle:?} in:\n{out}");
+        }
+        // Cumulative counts never decrease down the bucket ladder.
+        let mut prev = 0u64;
+        for line in out.lines().filter(|l| l.contains("_bucket")) {
+            let (_, value) = line.split_once(' ').unwrap();
+            let v: u64 = value.parse().unwrap();
+            assert!(v >= prev, "non-monotone bucket in {line:?}");
+            prev = v;
+        }
+        // Labelled rendering nests le inside the existing label set.
+        let mut labelled = String::new();
+        h.render_prometheus("hec_x", "shard=\"3\"", &mut labelled);
+        assert!(labelled.contains("hec_x_bucket{shard=\"3\",le=\"+Inf\"} 5"), "{labelled}");
+        assert!(labelled.contains("hec_x_sum{shard=\"3\"} 1015"), "{labelled}");
+    }
+
+    #[test]
+    fn prometheus_histograms_cover_backends_and_shards() {
+        use crate::config::Backend;
+        let a = std::sync::Arc::new(Metrics::default());
+        a.latency.record_us(10);
+        a.execute.record_us(5);
+        a.latency_for(Backend::AcamSim).record_us(10);
+        let b = std::sync::Arc::new(Metrics::default());
+        b.latency_for(Backend::FeatureCount).record_us(100);
+        let mut out = String::new();
+        prometheus_histograms(&[a.clone(), b.clone()], true, &mut out);
+        for needle in [
+            "# TYPE hec_latency_microseconds histogram",
+            "# TYPE hec_execute_microseconds histogram",
+            "# TYPE hec_backend_latency_microseconds histogram",
+            "hec_latency_microseconds_count{shard=\"0\"} 1",
+            "hec_latency_microseconds_count{shard=\"1\"} 0",
+            "hec_backend_latency_microseconds_count{backend=\"acam\",shard=\"0\"} 1",
+            "hec_backend_latency_microseconds_count{backend=\"fc\",shard=\"1\"} 1",
+            "hec_backend_latency_microseconds_count{backend=\"sim\",shard=\"0\"} 0",
+        ] {
+            assert!(out.contains(needle), "missing {needle:?} in:\n{out}");
+        }
+        // One TYPE header per family, not per shard or backend.
+        assert_eq!(out.matches("# TYPE hec_backend_latency_microseconds").count(), 1);
+        // Unlabelled single-shard rendering drops the shard label entirely.
+        let mut single = String::new();
+        prometheus_histograms(&[a], false, &mut single);
+        assert!(single.contains("hec_latency_microseconds_count 1"), "{single}");
+        assert!(
+            single.contains("hec_backend_latency_microseconds_count{backend=\"acam\"} 1"),
+            "{single}"
+        );
+        assert!(!single.contains("shard="), "{single}");
     }
 
     #[test]

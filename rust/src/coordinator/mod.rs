@@ -85,6 +85,14 @@ pub trait ClassifySurface {
     /// The `/metrics` payload (Prometheus text exposition format).
     fn prometheus_text(&self) -> String;
 
+    /// The template-store admin surface behind `/v1/stores`, when this
+    /// deployment carries a [`crate::store::StoreRegistry`].  Defaults to
+    /// `None` so transport-only test doubles keep compiling and the gateway
+    /// answers 404 for store routes on registry-less surfaces.
+    fn store_admin(&self) -> Option<crate::store::StoreAdmin> {
+        None
+    }
+
     /// Submit and block for the response.
     fn submit_blocking(
         &self,

@@ -14,6 +14,8 @@
 //! store bootstrapped from the synthetic dataset through the same engine —
 //! a fully self-consistent deployment that needs zero build-time steps.
 
+use std::collections::BTreeMap;
+use std::sync::Arc;
 use std::time::Instant;
 
 use crate::acam::program::{binary_query_voltages, program_array, WindowMode};
@@ -25,6 +27,7 @@ use crate::error::{Error, Result};
 use crate::faults::{FaultInjector, FaultKind};
 use crate::matching;
 use crate::runtime::{backend, FrontEnd, Meta};
+use crate::store::{StoreRegistry, DEFAULT_STORE_ID};
 use crate::templates::TemplateStore;
 
 /// Samples drawn per class when bootstrapping templates without artifacts
@@ -62,6 +65,31 @@ pub struct Pipeline {
     /// effective MAC count.
     e_frontend_nj: f64,
     rng: crate::rng::Rng,
+    /// Template-store registry (see `crate::store`); `None` outside the
+    /// serving coordinator (CLI eval paths, unit tests).
+    registry: Option<Arc<StoreRegistry>>,
+    /// Registry epoch this pipeline last synchronised against
+    /// (`u64::MAX` forces the first [`Pipeline::sync_stores`] to run).
+    registry_epoch: u64,
+    /// Whether responses advertise store tags (mirrors
+    /// [`StoreRegistry::advertises`]; false keeps wire bytes identical to a
+    /// registry-free build).
+    advertise: bool,
+    /// `(id, version)` of the default binding; version 0 until a publish
+    /// replaces the shard's bootstrap store.
+    default_tag: (Arc<str>, u64),
+    /// Non-default store bindings (tenant-pinned stores), each with its own
+    /// programmed array when the deployment backend is `acam`.
+    extras: BTreeMap<Arc<str>, StoreBinding>,
+}
+
+/// One adopted non-default store: the immutable snapshot plus the ACAM
+/// array programmed from it (mirroring the default binding's array
+/// availability).
+struct StoreBinding {
+    version: u64,
+    store: Arc<TemplateStore>,
+    acam: Option<AcamArray>,
 }
 
 /// One canary sweep's health evidence (see [`Pipeline::canary_probe`]).
@@ -141,7 +169,104 @@ impl Pipeline {
             rng: crate::rng::Rng::new(cfg.acam.seed ^ 0x5EED),
             meta,
             store,
+            registry: None,
+            registry_epoch: u64::MAX,
+            advertise: false,
+            default_tag: (Arc::from(DEFAULT_STORE_ID), 0),
+            extras: BTreeMap::new(),
         })
+    }
+
+    /// Attach the shared template-store registry.  Until the first publish
+    /// the registry is inert: the pipeline keeps serving the store it built
+    /// at construction and responses carry no store tags.
+    pub fn attach_registry(&mut self, registry: Arc<StoreRegistry>) {
+        self.registry = Some(registry);
+        self.registry_epoch = u64::MAX;
+    }
+
+    /// Synchronise against the registry's publish epoch.  Called once per
+    /// batch by the serving workers — a single atomic load when nothing
+    /// changed, so in-flight batches finish on the version they resolved
+    /// and the next batch sees the new one (the hot-swap barrier).
+    ///
+    /// Adopting a publish re-programs the affected ACAM array from the new
+    /// store at 80 pJ/cell; the returned energy (nJ) is charged to the
+    /// worker's meter.  Digital backends adopt stores without a
+    /// re-programming charge.
+    pub fn sync_stores(&mut self) -> Result<f64> {
+        let Some(reg) = self.registry.clone() else {
+            return Ok(0.0);
+        };
+        let epoch = reg.epoch();
+        self.advertise = reg.advertises();
+        if epoch == self.registry_epoch {
+            return Ok(0.0);
+        }
+        self.registry_epoch = epoch;
+        let mut charged = 0.0;
+        let serving = reg.serving_set();
+        for snap in &serving {
+            if &*snap.id == DEFAULT_STORE_ID {
+                if snap.version != self.default_tag.1 {
+                    if let Some(new_store) = &snap.store {
+                        self.store = (**new_store).clone();
+                        if self.acam.is_some() {
+                            charged += self.reprogram()?;
+                        }
+                        self.default_tag = (Arc::clone(&snap.id), snap.version);
+                    }
+                }
+                continue;
+            }
+            let fresh = match self.extras.get(&*snap.id) {
+                Some(b) => b.version != snap.version,
+                None => true,
+            };
+            if !fresh {
+                continue;
+            }
+            match &snap.store {
+                None => {
+                    self.extras.remove(&*snap.id);
+                }
+                Some(new_store) => {
+                    let acam = match self.acam.as_ref() {
+                        Some(arr) => {
+                            let set = new_store.set(self.k)?;
+                            charged += self
+                                .energy
+                                .reprogram_nj(set.num_templates() as u64, set.num_features() as u64);
+                            // Per-(store, version) deterministic seed, in
+                            // the same stream family as the default array.
+                            let seed = self.acam_seed
+                                ^ crate::coordinator::shard::fnv1a(&snap.id)
+                                ^ (snap.version << 32);
+                            Some(program_array(
+                                set,
+                                WindowMode::Binary,
+                                arr.config.clone(),
+                                self.base_var.clone(),
+                                seed,
+                            ))
+                        }
+                        None => None,
+                    };
+                    self.extras.insert(
+                        Arc::clone(&snap.id),
+                        StoreBinding {
+                            version: snap.version,
+                            store: Arc::clone(new_store),
+                            acam,
+                        },
+                    );
+                }
+            }
+        }
+        // Drop bindings whose store id left the serving set entirely.
+        self.extras
+            .retain(|id, _| serving.iter().any(|s| s.id == *id));
+        Ok(charged)
     }
 
     /// Pixels per image.
@@ -215,6 +340,22 @@ impl Pipeline {
         n: usize,
         opts: &[ClassifyOptions],
     ) -> Result<Vec<ClassifyResult>> {
+        self.classify_batch_routed(images, n, opts, &[])
+    }
+
+    /// [`Pipeline::classify_batch_with`] with per-item store routing: item
+    /// `i` serves from the binding named by `routes[i]` (`None`, a missing
+    /// entry, or an empty `routes` means the default store).  A routed id
+    /// whose store has not been published yet (version 0) falls back to the
+    /// default binding — the tenant simply shares the deployment store
+    /// until its own is uploaded.
+    pub fn classify_batch_routed(
+        &mut self,
+        images: &[f32],
+        n: usize,
+        opts: &[ClassifyOptions],
+        routes: &[Option<Arc<str>>],
+    ) -> Result<Vec<ClassifyResult>> {
         if opts.len() != n {
             return Err(Error::Request(format!(
                 "{} option sets for a batch of {n}",
@@ -262,8 +403,10 @@ impl Pipeline {
 
         let nf = self.meta.artifacts.n_features;
         let mut out = Vec::with_capacity(n);
+        let this = &mut *self;
         for (i, (o, &backend)) in opts.iter().zip(&resolved).enumerate() {
             let k = o.top_k.clamp(1, num_classes);
+            let route = routes.get(i).and_then(|r| r.as_ref());
             let (predictions, energy) = match backend {
                 Backend::Softmax => {
                     let row = &logits.as_ref().expect("logits computed")
@@ -280,9 +423,9 @@ impl Pipeline {
                     // Softmax baseline pays for the dense head: no back-end
                     // term, head ops not removed (they are excluded from
                     // student_effective, which covers the pruned conv stack).
-                    let e = self.energy.frontend_nj(
-                        self.meta.macs.as_built.student_effective
-                            + self.meta.macs.as_built.head_ops,
+                    let e = this.energy.frontend_nj(
+                        this.meta.macs.as_built.student_effective
+                            + this.meta.macs.as_built.head_ops,
                     );
                     (
                         predictions,
@@ -295,13 +438,54 @@ impl Pipeline {
                 _ => {
                     let row =
                         &feats.as_ref().expect("features computed")[i * nf..(i + 1) * nf];
-                    self.score_features(row, backend, k)?
+                    match route.and_then(|id| this.extras.get_mut(&**id)) {
+                        Some(b) => score_binding(
+                            &b.store,
+                            this.k,
+                            &mut b.acam,
+                            this.digital_fallback,
+                            &this.energy,
+                            this.e_frontend_nj,
+                            &this.acam_var,
+                            &mut this.rng,
+                            row,
+                            backend,
+                            k,
+                        )?,
+                        None => score_binding(
+                            &this.store,
+                            this.k,
+                            &mut this.acam,
+                            this.digital_fallback,
+                            &this.energy,
+                            this.e_frontend_nj,
+                            &this.acam_var,
+                            &mut this.rng,
+                            row,
+                            backend,
+                            k,
+                        )?,
+                    }
+                }
+            };
+            let store_tag = if !this.advertise {
+                None
+            } else {
+                match route {
+                    None => Some(this.default_tag.clone()),
+                    Some(id) => match this.extras.get(&**id) {
+                        Some(b) => Some((Arc::clone(id), b.version)),
+                        // Unpublished tenant store: serving the default
+                        // binding, tagged version 0 (bootstrap).
+                        None => Some((Arc::clone(id), 0)),
+                    },
                 }
             };
             out.push(ClassifyResult {
                 predictions,
                 energy,
                 backend,
+                store: store_tag,
                 features: if o.return_features {
                     Some(
                         feats.as_ref().expect("features computed")[i * nf..(i + 1) * nf]
@@ -315,84 +499,28 @@ impl Pipeline {
         Ok(out)
     }
 
-    /// Score one already-extracted feature map on a feature-domain backend:
-    /// ranked top-k predictions plus the back-end energy term.
+    /// Score one already-extracted feature map on a feature-domain backend
+    /// against the default store binding: ranked top-k predictions plus the
+    /// back-end energy term.
     fn score_features(
         &mut self,
         features: &[f32],
         backend: Backend,
         k: usize,
     ) -> Result<(Vec<Prediction>, EnergyBreakdown)> {
-        let num_classes = self.store.num_classes;
-        let set = self.store.set(self.k)?;
-        let bits = self.store.binarize(features);
-        let (ranked, e_backend): (Vec<(usize, f64)>, f64) = match backend {
-            Backend::FeatureCount => {
-                let top = matching::classify_feature_count_topk(&bits, set, num_classes, k);
-                // Digital matcher modelled at the same ACAM energy envelope
-                // (it replaces the same head); report the Eq. 14 figure.
-                (
-                    top.into_iter().map(|(c, s)| (c, s as f64)).collect(),
-                    self.energy
-                        .backend_nj(set.num_templates() as u64, set.num_features() as u64),
-                )
-            }
-            Backend::Similarity => {
-                let qf: Vec<f32> = bits.iter().map(|&b| b as f32).collect();
-                let top = matching::classify_similarity_topk(
-                    &qf,
-                    set,
-                    self.store.similarity_alpha,
-                    num_classes,
-                    true,
-                    k,
-                );
-                (
-                    top.into_iter().map(|(c, s)| (c, s as f64)).collect(),
-                    self.energy
-                        .backend_nj(set.num_templates() as u64, set.num_features() as u64),
-                )
-            }
-            Backend::AcamSim if self.digital_fallback => {
-                // Degradation-ladder fallback: the array is untrustworthy,
-                // so ACAM-routed requests are answered by the digital Eq. 8
-                // reference.  Correct, and costed at the digital matcher's
-                // envelope — the analogue array contributes nothing.
-                let top = matching::classify_feature_count_topk(&bits, set, num_classes, k);
-                (
-                    top.into_iter().map(|(c, s)| (c, s as f64)).collect(),
-                    self.energy
-                        .backend_nj(set.num_templates() as u64, set.num_features() as u64),
-                )
-            }
-            Backend::AcamSim => {
-                let arr = self
-                    .acam
-                    .as_mut()
-                    .ok_or_else(|| Error::Config("ACAM array not programmed".into()))?;
-                let search = arr.search(&binary_query_voltages(&bits));
-                let mut ranked = wta::rank_classes(
-                    &search.similarity,
-                    &set.class_of,
-                    num_classes,
-                    &self.acam_var,
-                    &mut self.rng,
-                );
-                ranked.truncate(k);
-                (ranked, search.energy_nj)
-            }
-            Backend::Softmax => unreachable!("handled in classify_batch_with"),
-        };
-        Ok((
-            ranked
-                .into_iter()
-                .map(|(class, score)| Prediction { class, score })
-                .collect(),
-            EnergyBreakdown {
-                front_end_nj: self.e_frontend_nj,
-                back_end_nj: e_backend,
-            },
-        ))
+        score_binding(
+            &self.store,
+            self.k,
+            &mut self.acam,
+            self.digital_fallback,
+            &self.energy,
+            self.e_frontend_nj,
+            &self.acam_var,
+            &mut self.rng,
+            features,
+            backend,
+            k,
+        )
     }
 
     /// Evaluate accuracy + confusion matrix over a labelled workload.
@@ -592,6 +720,87 @@ impl Pipeline {
             n_features: set.num_features() as u64,
         })
     }
+}
+
+/// Score one already-extracted feature map against an arbitrary store
+/// binding.  Free function over the binding's disjoint parts so the routed
+/// batch loop can borrow a tenant binding out of `Pipeline::extras` while
+/// still passing the pipeline's shared energy model and RNG stream.
+#[allow(clippy::too_many_arguments)]
+fn score_binding(
+    store: &TemplateStore,
+    k_templates: usize,
+    acam: &mut Option<AcamArray>,
+    digital_fallback: bool,
+    energy: &EnergyModel,
+    e_frontend_nj: f64,
+    acam_var: &Variability,
+    rng: &mut crate::rng::Rng,
+    features: &[f32],
+    backend: Backend,
+    k: usize,
+) -> Result<(Vec<Prediction>, EnergyBreakdown)> {
+    let num_classes = store.num_classes;
+    let set = store.set(k_templates)?;
+    let bits = store.binarize(features);
+    let (ranked, e_backend): (Vec<(usize, f64)>, f64) = match backend {
+        Backend::FeatureCount => {
+            let top = matching::classify_feature_count_topk(&bits, set, num_classes, k);
+            // Digital matcher modelled at the same ACAM energy envelope
+            // (it replaces the same head); report the Eq. 14 figure.
+            (
+                top.into_iter().map(|(c, s)| (c, s as f64)).collect(),
+                energy.backend_nj(set.num_templates() as u64, set.num_features() as u64),
+            )
+        }
+        Backend::Similarity => {
+            let qf: Vec<f32> = bits.iter().map(|&b| b as f32).collect();
+            let top = matching::classify_similarity_topk(
+                &qf,
+                set,
+                store.similarity_alpha,
+                num_classes,
+                true,
+                k,
+            );
+            (
+                top.into_iter().map(|(c, s)| (c, s as f64)).collect(),
+                energy.backend_nj(set.num_templates() as u64, set.num_features() as u64),
+            )
+        }
+        Backend::AcamSim if digital_fallback => {
+            // Degradation-ladder fallback: the array is untrustworthy,
+            // so ACAM-routed requests are answered by the digital Eq. 8
+            // reference.  Correct, and costed at the digital matcher's
+            // envelope — the analogue array contributes nothing.
+            let top = matching::classify_feature_count_topk(&bits, set, num_classes, k);
+            (
+                top.into_iter().map(|(c, s)| (c, s as f64)).collect(),
+                energy.backend_nj(set.num_templates() as u64, set.num_features() as u64),
+            )
+        }
+        Backend::AcamSim => {
+            let arr = acam
+                .as_mut()
+                .ok_or_else(|| Error::Config("ACAM array not programmed".into()))?;
+            let search = arr.search(&binary_query_voltages(&bits));
+            let mut ranked =
+                wta::rank_classes(&search.similarity, &set.class_of, num_classes, acam_var, rng);
+            ranked.truncate(k);
+            (ranked, search.energy_nj)
+        }
+        Backend::Softmax => unreachable!("handled in classify_batch_with"),
+    };
+    Ok((
+        ranked
+            .into_iter()
+            .map(|(class, score)| Prediction { class, score })
+            .collect(),
+        EnergyBreakdown {
+            front_end_nj: e_frontend_nj,
+            back_end_nj: e_backend,
+        },
+    ))
 }
 
 /// Bootstrap a template store from the synthetic dataset through the

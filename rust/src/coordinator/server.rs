@@ -16,6 +16,8 @@ use crate::api::{
 };
 use crate::config::{Backend, ServeConfig};
 use crate::error::Result;
+use crate::runtime::Meta;
+use crate::store::{StoreAdmin, StoreRegistry, TenantTicket, DEFAULT_STORE_ID};
 
 use super::oneshot;
 
@@ -29,6 +31,34 @@ pub(crate) struct Job {
     pub(crate) req: ClassifyRequest,
     pub(crate) enqueued: Instant,
     pub(crate) resp: oneshot::Sender<std::result::Result<ClassifyResponse, ApiError>>,
+    /// Tenant admission ticket (holds one quota slot until the job is
+    /// delivered, failed, or dropped — the ticket's `Drop` keeps the
+    /// per-tenant `in_flight` gauge drift-free on every path).
+    pub(crate) tenant: Option<TenantTicket>,
+    /// Non-default store binding this job serves from (`None` = default).
+    pub(crate) route: Option<Arc<str>>,
+}
+
+/// Resolve a request's tenant against the registry and claim a quota slot.
+/// Returns the admission ticket plus the store route for the worker
+/// (`None` when the tenant is pinned to the default store).
+#[allow(clippy::type_complexity)]
+pub(crate) fn admit_tenant(
+    registry: &StoreRegistry,
+    req: &ClassifyRequest,
+) -> std::result::Result<(Option<TenantTicket>, Option<Arc<str>>), ApiError> {
+    match registry.resolve_tenant(req.request_id.as_deref()) {
+        Some(t) => {
+            let ticket = t.admit()?;
+            let route = if &**ticket.store_id() == DEFAULT_STORE_ID {
+                None
+            } else {
+                Some(Arc::clone(ticket.store_id()))
+            };
+            Ok((Some(ticket), route))
+        }
+        None => Ok((None, None)),
+    }
 }
 
 /// What the deployed pipeline can do — shared with every [`Handle`] clone so
@@ -77,6 +107,17 @@ pub(crate) fn validate_request(
     }
     if req.top_k == 0 {
         return Err(ApiError::new(ErrorCode::InvalidArgument, "top_k must be >= 1"));
+    }
+    if req.top_k > caps.num_classes {
+        // Same stable code as top_k == 0: every out-of-range top_k is an
+        // INVALID_ARGUMENT, never a silent clamp.
+        return Err(ApiError::new(
+            ErrorCode::InvalidArgument,
+            format!(
+                "top_k must be <= num_classes ({}), got {}",
+                caps.num_classes, req.top_k
+            ),
+        ));
     }
     if let Some(b) = req.backend {
         if !caps.backend_available(b) {
@@ -182,11 +223,15 @@ pub(crate) fn deliver_batch(
         Ok(results) => {
             for (job, res) in batch.into_iter().zip(results) {
                 let queue_us = dispatched.duration_since(job.enqueued).as_micros() as u64;
-                m.latency
-                    .record_us(job.enqueued.elapsed().as_micros() as u64);
+                let total_us = job.enqueued.elapsed().as_micros() as u64;
+                m.latency.record_us(total_us);
+                m.latency_for(res.backend).record_us(total_us);
                 m.add_energy_nj(res.energy.total_nj());
                 m.responses.fetch_add(1, Relaxed);
                 Metrics::gauge_dec(&m.in_flight, 1);
+                if let Some(t) = &job.tenant {
+                    t.mark_served();
+                }
                 let _ = job.resp.send(Ok(ClassifyResponse {
                     request_id: job.req.request_id,
                     predictions: res.predictions,
@@ -201,6 +246,8 @@ pub(crate) fn deliver_batch(
                     shard,
                     degraded: ladder.map(|(d, _)| d),
                     backend_state: ladder.map(|(_, s)| s.to_string()),
+                    store: res.store.as_ref().map(|(id, _)| id.to_string()),
+                    store_version: res.store.as_ref().map(|(_, v)| *v),
                 }));
             }
         }
@@ -226,6 +273,7 @@ pub struct Handle {
     tx: SyncSender<Job>,
     pub metrics: Arc<Metrics>,
     caps: Arc<Caps>,
+    admin: StoreAdmin,
 }
 
 impl Handle {
@@ -247,6 +295,7 @@ impl Handle {
     > {
         use std::sync::atomic::Ordering::Relaxed;
         validate_request(&self.caps, &req)?;
+        let (tenant, route) = admit_tenant(self.admin.registry(), &req)?;
         let (tx, rx) = oneshot::channel();
         self.metrics.requests.fetch_add(1, Relaxed);
         // Gauges go up BEFORE the job becomes visible to the worker: if they
@@ -259,6 +308,8 @@ impl Handle {
             req,
             enqueued: Instant::now(),
             resp: tx,
+            tenant,
+            route,
         }) {
             Ok(()) => Ok(rx),
             Err(e) => {
@@ -320,6 +371,14 @@ impl Server {
         let m = Arc::clone(&metrics);
         let (ready_tx, ready_rx) = oneshot::channel::<Result<Caps>>();
 
+        // The registry is built on the caller thread (it is Send; the
+        // pipeline is not) so the admin surface exists even while the
+        // worker is busy, and publish/admit never block on compute.
+        let meta = Meta::load_or_synthetic(&cfg.artifacts_dir)?;
+        let registry = StoreRegistry::from_config(&cfg, &meta)?;
+        let admin = StoreAdmin::new(Arc::clone(&registry), Arc::new(cfg.clone()));
+        let reg_worker = Arc::clone(&registry);
+
         let worker = std::thread::Builder::new()
             .name("hec-serve".into())
             .spawn(move || {
@@ -341,10 +400,12 @@ impl Server {
                         return;
                     }
                 };
+                pipeline.attach_registry(reg_worker);
                 let engine = pipeline.engine_name();
                 let image_len = pipeline.image_len();
                 let mut buf: Vec<f32> = Vec::new();
                 let mut opts: Vec<ClassifyOptions> = Vec::new();
+                let mut routes: Vec<Option<Arc<str>>> = Vec::new();
                 while let Some(mut batch) = batcher::assemble(&rx, max_batch, max_wait) {
                     let assembled = batch.len();
                     Metrics::gauge_dec(&m.queue_depth, assembled as u64);
@@ -357,12 +418,26 @@ impl Server {
                     m.batched_items.fetch_add(n as u64, Relaxed);
 
                     pack_batch_into(&batch, image_len, &mut buf, &mut opts);
+                    routes.clear();
+                    if batch.iter().any(|j| j.route.is_some()) {
+                        routes.extend(batch.iter().map(|j| j.route.clone()));
+                    }
                     let padded = pipeline.padding_for(n);
                     m.padded_slots.fetch_add(padded as u64, Relaxed);
 
+                    // Hot-swap barrier: adopt pending publishes between
+                    // batches, never within one.  Publish-time validation
+                    // makes adoption infallible; a failure keeps serving
+                    // the previous store.
+                    if let Ok(nj) = pipeline.sync_stores() {
+                        if nj > 0.0 {
+                            m.add_energy_nj(nj);
+                        }
+                    }
+
                     let dispatched = Instant::now();
                     let results = pipeline
-                        .classify_batch_with(&buf, n, &opts)
+                        .classify_batch_routed(&buf, n, &opts, &routes)
                         .map_err(ApiError::from);
                     let compute_us = dispatched.elapsed().as_micros() as u64;
                     m.execute.record_us(compute_us);
@@ -381,6 +456,7 @@ impl Server {
                 tx,
                 metrics,
                 caps: Arc::new(caps),
+                admin,
             },
             worker: Some(worker),
         })
@@ -419,6 +495,16 @@ impl super::ClassifySurface for Handle {
     }
 
     fn prometheus_text(&self) -> String {
-        self.metrics.snapshot().prometheus()
+        let mut out = self.metrics.snapshot().prometheus();
+        super::metrics::prometheus_histograms(std::slice::from_ref(&self.metrics), false, &mut out);
+        let reg = self.admin.registry();
+        if reg.advertises() {
+            reg.prometheus(&mut out);
+        }
+        out
+    }
+
+    fn store_admin(&self) -> Option<StoreAdmin> {
+        Some(self.admin.clone())
     }
 }

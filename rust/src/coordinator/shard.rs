@@ -42,13 +42,16 @@ use crate::api::{ApiError, ClassifyRequest, ClassifyResponse, ErrorCode};
 use crate::config::{Backend, RoutePolicy, ServeConfig};
 use crate::error::Result;
 use crate::faults::{BackendState, FaultInjector, FaultKind, FaultPlan};
+use crate::runtime::Meta;
+use crate::store::{StoreAdmin, StoreRegistry};
 
 use super::batcher;
-use super::metrics::{prometheus_ladder, prometheus_shards, Metrics, Snapshot};
+use super::metrics::{prometheus_histograms, prometheus_ladder, prometheus_shards, Metrics, Snapshot};
 use super::oneshot;
 use super::pipeline::Pipeline;
 use super::server::{
-    deliver_batch, drop_expired_jobs, fail_job, pack_batch_into, validate_request, Caps, Job,
+    admit_tenant, deliver_batch, drop_expired_jobs, fail_job, pack_batch_into, validate_request,
+    Caps, Job,
 };
 use super::{ClassifySurface, HealthReport, ShardStatus};
 
@@ -277,6 +280,10 @@ struct Inner {
     /// `/metrics` text and v1 responses bitwise identical to a build without
     /// the faults subsystem.
     ladder_active: bool,
+    /// Template-store admin surface (`/v1/stores`); also the tenant
+    /// admission point.  Every shard shares the one registry — a publish is
+    /// adopted by each shard at its next batch boundary.
+    admin: StoreAdmin,
 }
 
 /// Cloneable submit surface over the shard set — the sharded counterpart
@@ -317,6 +324,12 @@ impl ShardSet {
             threshold: cfg.faults.canary_threshold,
         });
         let ladder_active = ladder.is_some();
+        // One registry for the whole deployment: shards resolve the active
+        // store per batch via the epoch counter, so a publish lands on every
+        // shard at its next batch boundary (never mid-batch).
+        let meta = Meta::load_or_synthetic(&cfg.artifacts_dir)?;
+        let registry = StoreRegistry::from_config(cfg, &meta)?;
+        let admin = StoreAdmin::new(Arc::clone(&registry), Arc::new(cfg.clone()));
         let mut slots = Vec::with_capacity(count);
         let mut workers = Vec::with_capacity(count);
         let mut caps: Option<Caps> = None;
@@ -337,6 +350,7 @@ impl ShardSet {
                 ladder: ladder.clone(),
                 cells: cells.clone(),
             };
+            let reg = Arc::clone(&registry);
             let worker = std::thread::Builder::new()
                 .name(format!("hec-shard-{index}"))
                 .spawn(move || {
@@ -350,6 +364,7 @@ impl ShardSet {
                         max_batch,
                         max_wait,
                         fctx,
+                        reg,
                         ready_tx,
                     )
                 })
@@ -388,6 +403,7 @@ impl ShardSet {
                     rejected: AtomicU64::new(0),
                     caps: caps.expect("count >= 1"),
                     ladder_active,
+                    admin,
                 }),
             },
             workers,
@@ -500,6 +516,12 @@ impl ClassifySurface for ShardHandle {
     > {
         let inner = &self.inner;
         validate_request(&inner.caps, &req)?;
+        // Tenant admission before routing: a quota-exceeded submit is
+        // rejected here (QUOTA_EXCEEDED) without consuming a round-robin
+        // ticket or touching any shard queue.  The ticket rides the job
+        // through spills — if every candidate queue is full the job (and
+        // its quota slot) is dropped together.
+        let (tenant, route) = admit_tenant(inner.admin.registry(), &req)?;
         let depths: Vec<u64> = inner
             .shards
             .iter()
@@ -538,6 +560,8 @@ impl ClassifySurface for ShardHandle {
             req,
             enqueued: Instant::now(),
             resp: tx,
+            tenant,
+            route,
         };
         for &s in &plan {
             let slot = &inner.shards[s];
@@ -615,10 +639,28 @@ impl ClassifySurface for ShardHandle {
         let _ = writeln!(out, "# TYPE {name} counter");
         let _ = writeln!(out, "{name} {}", self.router_rejections());
         out.push_str(&prometheus_shards(&self.shard_snapshots()));
+        let shard_metrics: Vec<Arc<Metrics>> = self
+            .inner
+            .shards
+            .iter()
+            .map(|s| Arc::clone(&s.metrics))
+            .collect();
+        prometheus_histograms(&shard_metrics, true, &mut out);
         if let Some(ladder) = self.shard_ladder() {
             out.push_str(&prometheus_ladder(&ladder));
         }
+        // Store/tenant series only once the registry advertises (a publish
+        // happened or tenants are configured) — a default deployment's
+        // exposition stays byte-identical to a registry-less build.
+        let reg = self.inner.admin.registry();
+        if reg.advertises() {
+            reg.prometheus(&mut out);
+        }
         out
+    }
+
+    fn store_admin(&self) -> Option<StoreAdmin> {
+        Some(self.inner.admin.clone())
     }
 }
 
@@ -722,14 +764,18 @@ fn shard_worker(
     max_batch: usize,
     max_wait: Duration,
     fctx: ShardFaultCtx,
+    registry: Arc<StoreRegistry>,
     ready_tx: oneshot::Sender<Result<Caps>>,
 ) {
     use std::sync::atomic::Ordering::Relaxed;
     // Pipeline + canary probe set, together: building the canary bits runs
     // the front-end once over the bootstrap samples (deterministic, no
-    // shared RNG), and a panic-restart must rebuild both.
+    // shared RNG), and a panic-restart must rebuild both.  The registry is
+    // re-attached on every rebuild so a restarted shard re-adopts the
+    // current store versions on its first batch.
     let build = |cfg: &ServeConfig| -> Result<(Pipeline, Vec<Vec<u8>>)> {
         let mut p = Pipeline::new(cfg)?;
+        p.attach_registry(Arc::clone(&registry));
         let canary = match &fctx.ladder {
             Some(l) => p.canary_bits(l.per_class)?.0,
             None => Vec::new(),
@@ -761,6 +807,7 @@ fn shard_worker(
     let mut since_probe: u64 = 0;
     let mut buf: Vec<f32> = Vec::new();
     let mut opts: Vec<crate::api::ClassifyOptions> = Vec::new();
+    let mut routes: Vec<Option<Arc<str>>> = Vec::new();
     while let Some(mut batch) = batcher::assemble(&rx, max_batch, max_wait) {
         let assembled = batch.len();
         Metrics::gauge_dec(&m.queue_depth, assembled as u64);
@@ -773,8 +820,25 @@ fn shard_worker(
         m.batched_items.fetch_add(n as u64, Relaxed);
 
         pack_batch_into(&batch, image_len, &mut buf, &mut opts);
+        routes.clear();
+        if batch.iter().any(|j| j.route.is_some()) {
+            routes.extend(batch.iter().map(|j| j.route.clone()));
+        }
         let padded = pipeline.padding_for(n);
         m.padded_slots.fetch_add(padded as u64, Relaxed);
+
+        // Hot-swap barrier: adopt pending store publishes between batches,
+        // never within one — every request in this batch serves one
+        // consistent (store, version) pair.  This runs *before* the hold
+        // hook, so a gate-parked batch is already pinned to its version and
+        // a publish while it is parked lands on the next batch.
+        // Publish-time validation makes adoption infallible; a failure
+        // keeps the previous store.
+        if let Ok(nj) = pipeline.sync_stores() {
+            if nj > 0.0 {
+                m.add_energy_nj(nj);
+            }
+        }
 
         if let Some((id, gate)) = &hooks.hold {
             if batch
@@ -813,7 +877,7 @@ fn shard_worker(
             if inject {
                 panic!("injected shard panic (ShardHooks::panic_on)");
             }
-            pipeline.classify_batch_with(&buf, n, &opts)
+            pipeline.classify_batch_routed(&buf, n, &opts, &routes)
         }));
         let compute_us = dispatched.elapsed().as_micros() as u64;
         m.execute.record_us(compute_us);

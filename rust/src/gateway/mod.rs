@@ -16,6 +16,13 @@
 //! | `POST /v1/classify/batch` | `{"requests": [...]}`  | `{"responses": [...]}` (per-item response or error envelope) |
 //! | `GET /healthz`         | —                         | deployment facts (engine, backend, image_len, ...) |
 //! | `GET /metrics`         | —                         | Prometheus text ([`crate::coordinator::Snapshot::prometheus`]) |
+//! | `GET /v1/stores`       | —                         | registered template stores (id, version, origin) |
+//! | `GET /v1/stores/{id}`  | —                         | one store snapshot |
+//! | `PUT /v1/stores/{id}`  | templates JSON, or labelled features as `application/x-hec-f32` | published snapshot (new version) |
+//! | `POST /v1/stores/{id}/refit` | —                   | re-fit outcome (accuracy, published version, re-programming energy) |
+//!
+//! Store routes 404 on surfaces without a registry (see
+//! [`ClassifySurface::store_admin`]).
 //!
 //! Concurrency model: a dedicated accept thread plus one thread per live
 //! connection (keep-alive), capped at `max_connections`; connections over
@@ -209,6 +216,9 @@ fn respond<W: Write, S: ClassifySurface>(
 
 /// The routing table: returns (status, content type, body).
 fn route<S: ClassifySurface>(req: &Request, handle: &S) -> (u16, &'static str, String) {
+    if req.path == "/v1/stores" || req.path.starts_with("/v1/stores/") {
+        return store_route(req, handle);
+    }
     match (req.method.as_str(), req.path.as_str()) {
         ("POST", "/v1/classify") => match classify_one(req, handle) {
             Ok(resp) => (200, "application/json", resp.to_value().to_json()),
@@ -238,6 +248,88 @@ fn route<S: ClassifySurface>(req: &Request, handle: &S) -> (u16, &'static str, S
             );
             (404, "application/json", e.to_value().to_json())
         }
+    }
+}
+
+/// `/v1/stores` admin routes: list / inspect / upload / re-fit template
+/// stores on the surface's [`crate::store::StoreRegistry`].  Surfaces
+/// without a registry (`store_admin() == None`, e.g. transport-only test
+/// doubles) answer 404 for the whole subtree, exactly as if the routes did
+/// not exist.
+fn store_route<S: ClassifySurface>(req: &Request, handle: &S) -> (u16, &'static str, String) {
+    let json = "application/json";
+    let fail = |e: ApiError| (e.code.http_status(), json, e.to_value().to_json());
+    let Some(admin) = handle.store_admin() else {
+        return fail(ApiError::new(
+            ErrorCode::NotFound,
+            format!("no route for {}", req.path),
+        ));
+    };
+    // Split "/v1/stores[/{id}[/refit]]" into its (id, action) tail.
+    let tail = req.path.strip_prefix("/v1/stores").unwrap_or("");
+    let (id, action) = match tail.strip_prefix('/') {
+        None => ("", ""),
+        Some(rest) => match rest.split_once('/') {
+            None => (rest, ""),
+            Some((id, action)) => (id, action),
+        },
+    };
+    let wrap = |mut fields: BTreeMap<String, Value>| {
+        fields.insert("api".to_string(), Value::Str(API_VERSION.to_string()));
+        Value::Obj(fields)
+    };
+    // Stamp the API version onto an object-shaped payload (snapshots and
+    // re-fit outcomes always render as objects).
+    let stamped = |v: Value| match v {
+        Value::Obj(fields) => wrap(fields).to_json(),
+        other => other.to_json(),
+    };
+    match (req.method.as_str(), id, action) {
+        ("GET", "", "") => {
+            let stores: Vec<Value> = admin.list().iter().map(|s| s.to_value()).collect();
+            (
+                200,
+                json,
+                wrap(BTreeMap::from([(
+                    "stores".to_string(),
+                    Value::Arr(stores),
+                )]))
+                .to_json(),
+            )
+        }
+        ("GET", id, "") => match admin.get(id) {
+            Some(snap) => (200, json, stamped(snap.to_value())),
+            None => fail(ApiError::new(
+                ErrorCode::NotFound,
+                format!("no store '{id}'"),
+            )),
+        },
+        ("PUT", id, "") => {
+            let published = if is_binary(req) {
+                admin.put_binary(id, &req.body)
+            } else {
+                match body_text(&req.body) {
+                    Ok(text) => admin.put_json(id, text),
+                    Err(e) => Err(e),
+                }
+            };
+            match published {
+                Ok(snap) => (200, json, stamped(snap.to_value())),
+                Err(e) => fail(e),
+            }
+        }
+        ("POST", id, "refit") => match admin.refit(id) {
+            Ok(outcome) => (200, json, stamped(outcome.to_value())),
+            Err(e) => fail(e),
+        },
+        (_, _, "") | (_, _, "refit") => fail(ApiError::new(
+            ErrorCode::MethodNotAllowed,
+            format!("method {} not allowed on {}", req.method, req.path),
+        )),
+        _ => fail(ApiError::new(
+            ErrorCode::NotFound,
+            format!("no route for {}", req.path),
+        )),
     }
 }
 
@@ -344,6 +436,17 @@ fn healthz<S: ClassifySurface>(handle: &S) -> Value {
             Value::Bool(caps.acam_available),
         ),
     ]);
+    // Registry-backed deployments additionally publish the template-store
+    // geometry, so a `PUT /v1/stores/{id}` client can build a valid HECT
+    // frame (n_features rows) from `/healthz` alone.
+    if let Some(admin) = handle.store_admin() {
+        let (_, n_features, k) = admin.registry().geometry();
+        m.insert("n_features".to_string(), Value::Num(n_features as f64));
+        m.insert(
+            "templates_per_class".to_string(),
+            Value::Num(k as f64),
+        );
+    }
     if !health.shards.is_empty() {
         m.insert(
             "shards".to_string(),

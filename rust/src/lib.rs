@@ -36,6 +36,11 @@
 //!   read-noise escalation, worker stalls) replayed against live shards,
 //!   and the [`faults::BackendState`] degradation ladder the canary state
 //!   machine walks (`Healthy` → `Reprogramming` → `DigitalFallback`).
+//! * [`store`] is the multi-tenant template-store registry: versioned
+//!   immutable [`templates::TemplateStore`] snapshots behind an atomic
+//!   epoch-swap (shards adopt a publish at batch boundaries, never
+//!   mid-batch), per-tenant admission quotas, and online re-fit from
+//!   labelled probes — surfaced over `PUT/GET /v1/stores/{id}`.
 //! * [`energy`] is the Horowitz-constant energy ledger behind §V.D.
 //! * [`dataset`], [`templates`], [`kmeans`], [`config`] are supporting
 //!   substrates (synthetic workload generator mirrored from Python, template
@@ -64,6 +69,7 @@ pub mod kmeans;
 pub mod matching;
 pub mod rng;
 pub mod runtime;
+pub mod store;
 pub mod templates;
 
 pub use error::{Error, Result};

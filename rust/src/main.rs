@@ -43,6 +43,7 @@ const USAGE: &str = "usage: hec [--artifacts DIR] [--engine interp|interp-fast|p
 [--backend acam|fc|sim|softmax] [--templates K] [--threads N] [--variability L] \
 [--frontend fast|pallas] [--config FILE] \
 [--shards N] [--shard-policy round_robin|least_queue_depth|hash] \
+[--stores-dir DIR] [--tenants name=store[:quota],...] \
 <serve|classify|eval|energy|acam-sim|info> [--requests N] [--concurrency N] \
 [--http ADDR] [--max-connections N] \
 [--count N] [--samples N] [--batch N] [--levels 0,1,2]";
@@ -128,6 +129,12 @@ fn serve_config(args: &Args) -> hec::Result<ServeConfig> {
     cfg.shards.count = args.get("shards", cfg.shards.count).map_err(Error::Config)?;
     if let Some(p) = args.flags.get("shard-policy") {
         cfg.shards.policy = p.parse::<hec::config::RoutePolicy>()?;
+    }
+    if let Some(dir) = args.flags.get("stores-dir") {
+        cfg.stores.dir = Some(dir.clone());
+    }
+    if let Some(spec) = args.flags.get("tenants") {
+        cfg.stores.tenants = hec::config::parse_tenant_list(spec)?;
     }
     if let Some(addr) = args.flags.get("http") {
         cfg.http.addr = Some(addr.clone());
@@ -313,7 +320,8 @@ fn main() -> hec::Result<()> {
                     if cfg.shards.spill { ", spill" } else { "" },
                 );
                 println!(
-                    "routes: POST /v1/classify  POST /v1/classify/batch  GET /healthz  GET /metrics"
+                    "routes: POST /v1/classify  POST /v1/classify/batch  GET /healthz  GET /metrics  \
+                     GET|PUT /v1/stores/{{id}}  POST /v1/stores/{{id}}/refit"
                 );
                 use std::io::Write as _;
                 let _ = std::io::stdout().flush();

@@ -1,0 +1,1007 @@
+//! Multi-tenant template-store registry with atomic hot-swap and online
+//! re-fit.
+//!
+//! The paper's energy asymmetry (96.23 nJ front-end vs 1.45 nJ back-end,
+//! re-programming at ~80 pJ/cell, Section IV) means a deployed device can
+//! cheaply carry *many* template sets and retarget the ACAM back-end per
+//! workload.  This module is the control plane for that versatility:
+//!
+//! * [`StoreRegistry`] — versioned, immutable [`TemplateStore`] snapshots
+//!   (id + monotonically increasing version).  Shards observe publishes via
+//!   a single atomic epoch load per batch ([`StoreRegistry::epoch`]); the
+//!   registry mutex is only taken on publish and on the (per-epoch-change)
+//!   snapshot read, never per request.  In-flight batches finish on the old
+//!   version, the next batch sees the new one — the swap barrier is pinned
+//!   deterministically by the Gate harness in `rust/tests/store.rs`.
+//! * Per-tenant stores keyed off the existing `request_id` routing seam
+//!   (`"tenant/rest"` prefix), with concurrent-in-flight quotas
+//!   ([`TenantState::admit`], `QUOTA_EXCEEDED`) and served/rejected
+//!   counters surfaced as `hec_tenant_*` metrics.
+//! * Online re-fit ([`StoreAdmin::refit`]) — builds a candidate store from
+//!   fresh labelled probes via the existing k-means template builder,
+//!   verifies it against the digital matcher, and publishes it through the
+//!   same swap path.  Adoption charges re-programming energy at
+//!   `RRAM_PROGRAM_CELL_PJ` (80 pJ/cell) per ACAM array actually
+//!   re-programmed.
+//!
+//! Version 0 marks the bootstrap store each shard builds for itself at
+//! startup; until something is published (version >= 1) or tenants are
+//! configured, the registry is inert and serving is byte-identical to a
+//! registry-free build ([`StoreRegistry::advertises`]).
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::api::{ApiError, ErrorCode};
+use crate::config::{ServeConfig, TenantSpec};
+use crate::coordinator::pipeline::BOOTSTRAP_DATA_SEED;
+use crate::coordinator::shard::fnv1a;
+use crate::energy::EnergyModel;
+use crate::jsonlite::Value;
+use crate::matching;
+use crate::runtime::Meta;
+use crate::templates::TemplateStore;
+use crate::{Error, Result};
+
+/// Store id charset: `[A-Za-z0-9_-]+`, non-empty.  Keeps ids safe for URL
+/// path segments, Prometheus label values, and `<id>.json` filenames.
+pub fn valid_store_id(id: &str) -> bool {
+    !id.is_empty()
+        && id.len() <= 64
+        && id
+            .bytes()
+            .all(|b| b.is_ascii_alphanumeric() || b == b'_' || b == b'-')
+}
+
+/// The registry entry for the default single-store serving path.
+pub const DEFAULT_STORE_ID: &str = "default";
+
+/// An immutable view of one registry entry at a point in time.
+///
+/// `store` is `None` at version 0: the bootstrap marker.  Each shard keeps
+/// serving the store it built for itself at startup, so the pre-registry
+/// byte-for-byte behaviour is preserved; shards converge on a shared
+/// snapshot only after an explicit publish.
+#[derive(Clone)]
+pub struct StoreSnapshot {
+    pub id: Arc<str>,
+    pub version: u64,
+    /// Where this version came from: `"bootstrap"`, `"dir"`, `"put"`,
+    /// `"refit"`.
+    pub origin: &'static str,
+    pub store: Option<Arc<TemplateStore>>,
+}
+
+impl StoreSnapshot {
+    /// Admin-API JSON form (`GET /v1/stores/{id}`).
+    pub fn to_value(&self) -> Value {
+        let mut m = BTreeMap::new();
+        m.insert("id".to_string(), Value::Str(self.id.to_string()));
+        m.insert("version".to_string(), Value::Num(self.version as f64));
+        m.insert("origin".to_string(), Value::Str(self.origin.to_string()));
+        m.insert("resident".to_string(), Value::Bool(self.store.is_some()));
+        if let Some(s) = &self.store {
+            m.insert("num_classes".to_string(), Value::Num(s.num_classes as f64));
+            m.insert("n_features".to_string(), Value::Num(s.n_features as f64));
+            let templates: usize = s.sets.values().map(|t| t.num_templates()).sum();
+            m.insert("templates".to_string(), Value::Num(templates as f64));
+        }
+        Value::Obj(m)
+    }
+}
+
+struct StoreEntry {
+    version: u64,
+    origin: &'static str,
+    store: Option<Arc<TemplateStore>>,
+}
+
+/// Per-tenant admission state.  `quota` bounds *concurrent in-flight*
+/// requests (0 = unlimited); `served`/`rejected` are lifetime counters
+/// surfaced on `/metrics`.
+pub struct TenantState {
+    pub name: String,
+    pub store_id: Arc<str>,
+    pub quota: u64,
+    in_flight: AtomicU64,
+    served: AtomicU64,
+    rejected: AtomicU64,
+}
+
+impl TenantState {
+    fn new(spec: &TenantSpec) -> Arc<Self> {
+        Arc::new(TenantState {
+            name: spec.name.clone(),
+            store_id: Arc::from(spec.store.as_str()),
+            quota: spec.quota,
+            in_flight: AtomicU64::new(0),
+            served: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+        })
+    }
+
+    /// Admit one request under the quota, or reject with `QUOTA_EXCEEDED`.
+    ///
+    /// The returned [`TenantTicket`] decrements `in_flight` on drop, so the
+    /// gauge stays drift-free across delivery, expiry, panic-drain, and
+    /// queue-full rollback alike.
+    pub fn admit(self: &Arc<Self>) -> std::result::Result<TenantTicket, ApiError> {
+        loop {
+            let cur = self.in_flight.load(Ordering::Acquire);
+            if self.quota > 0 && cur >= self.quota {
+                self.rejected.fetch_add(1, Ordering::Relaxed);
+                return Err(ApiError::new(
+                    ErrorCode::QuotaExceeded,
+                    format!(
+                        "tenant '{}' quota exceeded ({} in flight, quota {})",
+                        self.name, cur, self.quota
+                    ),
+                ));
+            }
+            if self
+                .in_flight
+                .compare_exchange(cur, cur + 1, Ordering::AcqRel, Ordering::Acquire)
+                .is_ok()
+            {
+                return Ok(TenantTicket(Arc::clone(self)));
+            }
+        }
+    }
+
+    pub fn in_flight(&self) -> u64 {
+        self.in_flight.load(Ordering::Acquire)
+    }
+    pub fn served(&self) -> u64 {
+        self.served.load(Ordering::Relaxed)
+    }
+    pub fn rejected(&self) -> u64 {
+        self.rejected.load(Ordering::Relaxed)
+    }
+}
+
+/// RAII admission ticket: holds one `in_flight` slot for its tenant.
+pub struct TenantTicket(Arc<TenantState>);
+
+impl TenantTicket {
+    /// The store id this tenant is pinned to.
+    pub fn store_id(&self) -> &Arc<str> {
+        &self.0.store_id
+    }
+    pub fn tenant_name(&self) -> &str {
+        &self.0.name
+    }
+    /// Count one successfully delivered response for this tenant.
+    pub fn mark_served(&self) {
+        self.0.served.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+impl Drop for TenantTicket {
+    fn drop(&mut self) {
+        self.0.in_flight.fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
+impl std::fmt::Debug for TenantTicket {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "TenantTicket({})", self.0.name)
+    }
+}
+
+/// Versioned template-store registry shared by every shard and the gateway
+/// admin surface.
+pub struct StoreRegistry {
+    /// Bumped on every publish; shards compare against their cached value
+    /// once per batch — the entire hot-path cost of the registry.
+    epoch: AtomicU64,
+    swaps: AtomicU64,
+    advertise: AtomicBool,
+    inner: Mutex<BTreeMap<Arc<str>, StoreEntry>>,
+    tenants: Vec<Arc<TenantState>>,
+    num_classes: usize,
+    n_features: usize,
+    /// `templates_per_class` — every published store must carry this set.
+    k: usize,
+}
+
+impl StoreRegistry {
+    /// Build the registry from serve config + model geometry.  Entries are
+    /// created at version 0 for `"default"` and every tenant-referenced
+    /// store id; `stores.dir` files (`<id>.json`) are published at
+    /// version 1 with origin `"dir"`.
+    pub fn from_config(cfg: &ServeConfig, meta: &Meta) -> Result<Arc<Self>> {
+        let tenants: Vec<Arc<TenantState>> = cfg
+            .resolve_tenants()?
+            .iter()
+            .map(TenantState::new)
+            .collect();
+        let mut entries: BTreeMap<Arc<str>, StoreEntry> = BTreeMap::new();
+        let mut seed_entry = |id: &str| {
+            entries.entry(Arc::from(id)).or_insert(StoreEntry {
+                version: 0,
+                origin: "bootstrap",
+                store: None,
+            });
+        };
+        seed_entry(DEFAULT_STORE_ID);
+        for t in &tenants {
+            seed_entry(&t.store_id);
+        }
+        let reg = Arc::new(StoreRegistry {
+            epoch: AtomicU64::new(0),
+            swaps: AtomicU64::new(0),
+            advertise: AtomicBool::new(!tenants.is_empty()),
+            inner: Mutex::new(entries),
+            tenants,
+            num_classes: crate::dataset::NUM_CLASSES,
+            n_features: meta.artifacts.n_features,
+            k: cfg.templates_per_class,
+        });
+        if let Some(dir) = cfg.resolve_stores_dir() {
+            let mut names: Vec<String> = Vec::new();
+            for e in std::fs::read_dir(&dir)
+                .map_err(|e| Error::Config(format!("stores dir {dir}: {e}")))?
+            {
+                let p = e
+                    .map_err(|e| Error::Config(format!("stores dir {dir}: {e}")))?
+                    .path();
+                if p.extension().and_then(|x| x.to_str()) == Some("json") {
+                    if let Some(stem) = p.file_stem().and_then(|x| x.to_str()) {
+                        names.push(stem.to_string());
+                    }
+                }
+            }
+            names.sort();
+            for id in names {
+                if !valid_store_id(&id) {
+                    return Err(Error::Config(format!(
+                        "stores dir {dir}: invalid store id '{id}'"
+                    )));
+                }
+                let path = std::path::Path::new(&dir).join(format!("{id}.json"));
+                let store = TemplateStore::load(&path)?;
+                reg.publish(&id, store, "dir")?;
+            }
+        }
+        Ok(reg)
+    }
+
+    /// A registry with no tenants, no dir, default geometry — the inert
+    /// single-default-store configuration.
+    pub fn single_default(cfg: &ServeConfig, meta: &Meta) -> Result<Arc<Self>> {
+        Self::from_config(cfg, meta)
+    }
+
+    /// Current publish epoch.  One relaxed load; shards poll this per batch.
+    pub fn epoch(&self) -> u64 {
+        self.epoch.load(Ordering::Acquire)
+    }
+
+    /// Total successful publishes (`hec_store_swaps_total`).
+    pub fn swaps(&self) -> u64 {
+        self.swaps.load(Ordering::Relaxed)
+    }
+
+    /// Whether the registry changes observable output: true once tenants
+    /// are configured or any store has been published.  While false, wire
+    /// bytes and `/metrics` are identical to a registry-free build.
+    pub fn advertises(&self) -> bool {
+        self.advertise.load(Ordering::Relaxed)
+    }
+
+    /// Registry geometry `(num_classes, n_features, templates_per_class)`.
+    pub fn geometry(&self) -> (usize, usize, usize) {
+        (self.num_classes, self.n_features, self.k)
+    }
+
+    /// Resolve the tenant from a request id of the form `"tenant/rest"`.
+    /// No separator, or an unknown prefix, means the anonymous default
+    /// tenant (no quota, default store).
+    pub fn resolve_tenant(&self, request_id: Option<&str>) -> Option<Arc<TenantState>> {
+        let id = request_id?;
+        let prefix = id.split_once('/')?.0;
+        self.tenants
+            .iter()
+            .find(|t| t.name == prefix)
+            .map(Arc::clone)
+    }
+
+    pub fn tenants(&self) -> &[Arc<TenantState>] {
+        &self.tenants
+    }
+
+    /// Store ids referenced by at least one tenant (excluding `default`).
+    pub fn tenant_store_ids(&self) -> BTreeSet<Arc<str>> {
+        self.tenants
+            .iter()
+            .filter(|t| &*t.store_id != DEFAULT_STORE_ID)
+            .map(|t| Arc::clone(&t.store_id))
+            .collect()
+    }
+
+    /// Snapshot one entry.
+    pub fn get(&self, id: &str) -> Option<StoreSnapshot> {
+        let inner = self.inner.lock().unwrap();
+        inner.get_key_value(id).map(|(key, e)| StoreSnapshot {
+            id: Arc::clone(key),
+            version: e.version,
+            origin: e.origin,
+            store: e.store.clone(),
+        })
+    }
+
+    /// Snapshot every entry, id-sorted.
+    pub fn list(&self) -> Vec<StoreSnapshot> {
+        let inner = self.inner.lock().unwrap();
+        inner
+            .iter()
+            .map(|(key, e)| StoreSnapshot {
+                id: Arc::clone(key),
+                version: e.version,
+                origin: e.origin,
+                store: e.store.clone(),
+            })
+            .collect()
+    }
+
+    /// Snapshot the serving set — `default` plus every tenant-referenced
+    /// id — under a single lock, so one shard sync observes one consistent
+    /// registry state.
+    pub fn serving_set(&self) -> Vec<StoreSnapshot> {
+        let mut ids: BTreeSet<&str> = BTreeSet::new();
+        ids.insert(DEFAULT_STORE_ID);
+        for t in &self.tenants {
+            ids.insert(&t.store_id);
+        }
+        let inner = self.inner.lock().unwrap();
+        ids.iter()
+            .filter_map(|id| {
+                inner.get_key_value(*id).map(|(key, e)| StoreSnapshot {
+                    id: Arc::clone(key),
+                    version: e.version,
+                    origin: e.origin,
+                    store: e.store.clone(),
+                })
+            })
+            .collect()
+    }
+
+    /// Publish a new immutable version of `id` and bump the swap epoch.
+    ///
+    /// Validates the store against registry geometry before anything
+    /// becomes visible; on success the previous version is unreachable for
+    /// new batches while in-flight batches finish on the snapshot they
+    /// already resolved.
+    pub fn publish(
+        &self,
+        id: &str,
+        store: TemplateStore,
+        origin: &'static str,
+    ) -> Result<StoreSnapshot> {
+        if !valid_store_id(id) {
+            return Err(Error::Request(format!("invalid store id '{id}'")));
+        }
+        if store.num_classes != self.num_classes || store.n_features != self.n_features {
+            return Err(Error::Request(format!(
+                "store geometry {}x{} does not match deployment {}x{}",
+                store.num_classes, store.n_features, self.num_classes, self.n_features
+            )));
+        }
+        if store.set(self.k).is_err() {
+            return Err(Error::Request(format!(
+                "store has no k={} template set (templates_per_class)",
+                self.k
+            )));
+        }
+        let store = Arc::new(store);
+        let snap = {
+            let mut inner = self.inner.lock().unwrap();
+            let key: Arc<str> = match inner.get_key_value(id) {
+                Some((k, _)) => Arc::clone(k),
+                None => Arc::from(id),
+            };
+            let e = inner.entry(Arc::clone(&key)).or_insert(StoreEntry {
+                version: 0,
+                origin: "bootstrap",
+                store: None,
+            });
+            e.version += 1;
+            e.origin = origin;
+            e.store = Some(Arc::clone(&store));
+            StoreSnapshot {
+                id: key,
+                version: e.version,
+                origin,
+                store: Some(store),
+            }
+        };
+        self.advertise.store(true, Ordering::Relaxed);
+        self.swaps.fetch_add(1, Ordering::Relaxed);
+        // Epoch bump is the release edge shards synchronise on; it must
+        // happen after the entry is in place.
+        self.epoch.fetch_add(1, Ordering::Release);
+        Ok(snap)
+    }
+
+    /// Render `hec_store_*` / `hec_tenant_*` metrics.  Callers gate this on
+    /// [`Self::advertises`] so the default configuration's `/metrics` stays
+    /// byte-identical to pre-registry builds.
+    pub fn prometheus(&self, out: &mut String) {
+        use std::fmt::Write;
+        out.push_str("# HELP hec_store_version Published version of each template store (0 = per-shard bootstrap).\n");
+        out.push_str("# TYPE hec_store_version gauge\n");
+        for s in self.list() {
+            let _ = writeln!(out, "hec_store_version{{store=\"{}\"}} {}", s.id, s.version);
+        }
+        out.push_str("# HELP hec_store_swaps_total Successful store publishes (hot swaps).\n");
+        out.push_str("# TYPE hec_store_swaps_total counter\n");
+        let _ = writeln!(out, "hec_store_swaps_total {}", self.swaps());
+        if !self.tenants.is_empty() {
+            out.push_str("# HELP hec_tenant_served_total Responses delivered per tenant.\n");
+            out.push_str("# TYPE hec_tenant_served_total counter\n");
+            for t in &self.tenants {
+                let _ = writeln!(
+                    out,
+                    "hec_tenant_served_total{{tenant=\"{}\"}} {}",
+                    t.name,
+                    t.served()
+                );
+            }
+            out.push_str("# HELP hec_tenant_rejected_total Requests rejected by tenant quota.\n");
+            out.push_str("# TYPE hec_tenant_rejected_total counter\n");
+            for t in &self.tenants {
+                let _ = writeln!(
+                    out,
+                    "hec_tenant_rejected_total{{tenant=\"{}\"}} {}",
+                    t.name,
+                    t.rejected()
+                );
+            }
+            out.push_str("# HELP hec_tenant_in_flight Requests currently admitted per tenant.\n");
+            out.push_str("# TYPE hec_tenant_in_flight gauge\n");
+            for t in &self.tenants {
+                let _ = writeln!(
+                    out,
+                    "hec_tenant_in_flight{{tenant=\"{}\"}} {}",
+                    t.name,
+                    t.in_flight()
+                );
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Raw template upload: `application/x-hec-f32`, magic "HECT".
+// ---------------------------------------------------------------------------
+
+/// Magic for the raw template-upload frame (the classify frame uses
+/// `"HECB"`; both travel as `application/x-hec-f32`).
+pub const HECT_MAGIC: &[u8; 4] = b"HECT";
+const HECT_VERSION: u8 = 1;
+const HECT_MAX_ROWS: u32 = 65_536;
+const HECT_MAX_FEATURES: u32 = 1 << 20;
+
+/// Encode labelled feature rows as a `HECT` upload frame:
+/// `"HECT"` · `u8` version (=1) · `u32` num_classes · `u32` n_features ·
+/// `u32` rows · rows × (`u32` label · n_features × `f32`), all
+/// little-endian.  The server re-fits thresholds/windows and k-means
+/// templates from the rows via [`TemplateStore::from_features`].
+pub fn encode_hect(num_classes: u32, n_features: u32, labels: &[u32], feats: &[f32]) -> Vec<u8> {
+    assert_eq!(feats.len(), labels.len() * n_features as usize);
+    let mut out = Vec::with_capacity(17 + labels.len() * (4 + 4 * n_features as usize));
+    out.extend_from_slice(HECT_MAGIC);
+    out.push(HECT_VERSION);
+    out.extend_from_slice(&num_classes.to_le_bytes());
+    out.extend_from_slice(&n_features.to_le_bytes());
+    out.extend_from_slice(&(labels.len() as u32).to_le_bytes());
+    for (i, label) in labels.iter().enumerate() {
+        out.extend_from_slice(&label.to_le_bytes());
+        for f in &feats[i * n_features as usize..(i + 1) * n_features as usize] {
+            out.extend_from_slice(&f.to_le_bytes());
+        }
+    }
+    out
+}
+
+/// Decode a `HECT` frame and build a [`TemplateStore`] from its rows.
+pub fn decode_hect(body: &[u8], seed: u64) -> Result<TemplateStore> {
+    let err = |m: &str| Error::Request(format!("HECT frame: {m}"));
+    if body.len() < 17 {
+        return Err(err("truncated header"));
+    }
+    if &body[0..4] != HECT_MAGIC {
+        return Err(err("bad magic (expected \"HECT\")"));
+    }
+    if body[4] != HECT_VERSION {
+        return Err(err("unsupported version"));
+    }
+    let u32_at = |o: usize| u32::from_le_bytes([body[o], body[o + 1], body[o + 2], body[o + 3]]);
+    let num_classes = u32_at(5);
+    let n_features = u32_at(9);
+    let rows = u32_at(13);
+    if rows == 0 || rows > HECT_MAX_ROWS {
+        return Err(err("row count out of range"));
+    }
+    if n_features == 0 || n_features > HECT_MAX_FEATURES {
+        return Err(err("n_features out of range"));
+    }
+    if num_classes == 0 {
+        return Err(err("num_classes must be >= 1"));
+    }
+    let row_bytes = 4 + 4 * n_features as usize;
+    let expect = 17 + rows as usize * row_bytes;
+    if body.len() != expect {
+        return Err(err(&format!(
+            "length {} does not match {} rows x {} features ({} bytes)",
+            body.len(),
+            rows,
+            n_features,
+            expect
+        )));
+    }
+    let mut labels = Vec::with_capacity(rows as usize);
+    let mut feats = Vec::with_capacity(rows as usize * n_features as usize);
+    for r in 0..rows as usize {
+        let o = 17 + r * row_bytes;
+        let label = u32_at(o);
+        if label >= num_classes {
+            return Err(err(&format!("row {r} label {label} >= num_classes")));
+        }
+        labels.push(label as usize);
+        for j in 0..n_features as usize {
+            let fo = o + 4 + 4 * j;
+            feats.push(f32::from_le_bytes([
+                body[fo],
+                body[fo + 1],
+                body[fo + 2],
+                body[fo + 3],
+            ]));
+        }
+    }
+    TemplateStore::from_features(
+        &feats,
+        &labels,
+        n_features as usize,
+        num_classes as usize,
+        seed,
+    )
+}
+
+// ---------------------------------------------------------------------------
+// Admin surface + online re-fit.
+// ---------------------------------------------------------------------------
+
+/// Outcome of one [`StoreAdmin::refit`] pass.
+#[derive(Debug, Clone)]
+pub struct RefitOutcome {
+    pub id: String,
+    /// Whether the candidate passed digital verification and was published.
+    pub published: bool,
+    /// Digital-matcher accuracy of the candidate on the held-out probe set.
+    pub accuracy: f64,
+    /// New version when published.
+    pub version: Option<u64>,
+    /// Expected re-programming energy per ACAM array that adopts the new
+    /// store: cells x 80 pJ/cell, in nJ.
+    pub reprogram_nj: f64,
+}
+
+impl RefitOutcome {
+    pub fn to_value(&self) -> Value {
+        let mut m = BTreeMap::new();
+        m.insert("id".to_string(), Value::Str(self.id.clone()));
+        m.insert("published".to_string(), Value::Bool(self.published));
+        m.insert("accuracy".to_string(), Value::Num(self.accuracy));
+        m.insert(
+            "version".to_string(),
+            match self.version {
+                Some(v) => Value::Num(v as f64),
+                None => Value::Null,
+            },
+        );
+        m.insert("reprogram_nj".to_string(), Value::Num(self.reprogram_nj));
+        Value::Obj(m)
+    }
+}
+
+/// Gateway-facing handle for the store admin API (`/v1/stores`).  Cloned
+/// per connection; all state lives behind the shared registry.
+#[derive(Clone)]
+pub struct StoreAdmin {
+    registry: Arc<StoreRegistry>,
+    cfg: Arc<ServeConfig>,
+}
+
+impl StoreAdmin {
+    pub fn new(registry: Arc<StoreRegistry>, cfg: Arc<ServeConfig>) -> Self {
+        StoreAdmin { registry, cfg }
+    }
+
+    pub fn registry(&self) -> &Arc<StoreRegistry> {
+        &self.registry
+    }
+
+    pub fn get(&self, id: &str) -> Option<StoreSnapshot> {
+        self.registry.get(id)
+    }
+
+    pub fn list(&self) -> Vec<StoreSnapshot> {
+        self.registry.list()
+    }
+
+    /// `PUT /v1/stores/{id}` with a JSON body in the `templates.json`
+    /// schema.
+    pub fn put_json(&self, id: &str, body: &str) -> std::result::Result<StoreSnapshot, ApiError> {
+        let store = TemplateStore::from_json_str(body)
+            .map_err(|e| ApiError::new(ErrorCode::InvalidArgument, e.to_string()))?;
+        self.publish(id, store, "put")
+    }
+
+    /// `PUT /v1/stores/{id}` with a raw `application/x-hec-f32` `HECT`
+    /// frame of labelled feature rows; templates are re-fit server-side.
+    pub fn put_binary(&self, id: &str, body: &[u8]) -> std::result::Result<StoreSnapshot, ApiError> {
+        let store = decode_hect(body, self.cfg.acam.seed)
+            .map_err(|e| ApiError::new(ErrorCode::InvalidArgument, e.to_string()))?;
+        self.publish(id, store, "put")
+    }
+
+    fn publish(
+        &self,
+        id: &str,
+        store: TemplateStore,
+        origin: &'static str,
+    ) -> std::result::Result<StoreSnapshot, ApiError> {
+        self.registry
+            .publish(id, store, origin)
+            .map_err(|e| ApiError::new(ErrorCode::InvalidArgument, e.to_string()))
+    }
+
+    /// Online re-fit: draw fresh labelled probes, build a candidate store
+    /// with the k-means template builder, verify it against the digital
+    /// feature-count matcher on a held-out probe set, and publish iff the
+    /// accuracy clears `stores.refit_min_accuracy`.
+    ///
+    /// Deterministic: probe data, k-means seed, and the verification set
+    /// depend only on config, store id, and the candidate version.
+    pub fn refit(&self, id: &str) -> std::result::Result<RefitOutcome, ApiError> {
+        let arg = |m: String| ApiError::new(ErrorCode::InvalidArgument, m);
+        let internal = |m: String| ApiError::new(ErrorCode::Internal, m);
+        if !valid_store_id(id) {
+            return Err(arg(format!("invalid store id '{id}'")));
+        }
+        let (num_classes, n_features, k) = self.registry.geometry();
+        let next_version = self.registry.get(id).map(|s| s.version).unwrap_or(0) + 1;
+        let meta = Meta::load_or_synthetic(&self.cfg.artifacts_dir)
+            .map_err(|e| internal(e.to_string()))?;
+        let mut engine = crate::runtime::create_backend(&self.cfg, &meta)
+            .map_err(|e| internal(e.to_string()))?;
+
+        // "Recent labelled probes": a fresh draw per (id, version) so
+        // successive re-fits track drift rather than replaying one batch.
+        let per_class = self.cfg.stores.refit_per_class;
+        let n = per_class * num_classes;
+        let probe_seed = BOOTSTRAP_DATA_SEED ^ fnv1a(id) ^ (next_version << 8);
+        let ds = crate::dataset::SyntheticDataset::new(
+            probe_seed,
+            n,
+            meta.norm.mean as f32,
+            meta.norm.std as f32,
+        );
+        let (images, labels) = ds.batch(0, n);
+        let feats = engine
+            .extract_features(&images, n)
+            .map_err(|e| internal(e.to_string()))?;
+        let kmeans_seed = self
+            .cfg
+            .acam
+            .seed
+            .wrapping_add(fnv1a(id))
+            .wrapping_add(next_version);
+        let candidate =
+            TemplateStore::from_features(&feats, &labels, n_features, num_classes, kmeans_seed)
+                .map_err(|e| arg(e.to_string()))?;
+
+        // Held-out digital verification (Eq. 8 feature-count matcher).
+        let n_eval = (2 * per_class).max(4) * num_classes;
+        let eval = crate::dataset::SyntheticDataset::new(
+            BOOTSTRAP_DATA_SEED ^ 0xE7A1,
+            n_eval,
+            meta.norm.mean as f32,
+            meta.norm.std as f32,
+        );
+        let (eval_images, eval_labels) = eval.batch(0, n_eval);
+        let eval_feats = engine
+            .extract_features(&eval_images, n_eval)
+            .map_err(|e| internal(e.to_string()))?;
+        let set = candidate
+            .set(k)
+            .map_err(|e| internal(e.to_string()))?;
+        let mut correct = 0usize;
+        for (i, label) in eval_labels.iter().enumerate() {
+            let bits = candidate.binarize(&eval_feats[i * n_features..(i + 1) * n_features]);
+            let top = matching::classify_feature_count_topk(&bits, set, num_classes, 1);
+            if top.first().map(|(c, _)| *c) == Some(*label) {
+                correct += 1;
+            }
+        }
+        let accuracy = correct as f64 / n_eval as f64;
+        let reprogram_nj = EnergyModel::default()
+            .reprogram_nj(set.num_templates() as u64, n_features as u64);
+
+        if accuracy < self.cfg.stores.refit_min_accuracy {
+            return Ok(RefitOutcome {
+                id: id.to_string(),
+                published: false,
+                accuracy,
+                version: None,
+                reprogram_nj,
+            });
+        }
+        let snap = self.publish(id, candidate, "refit")?;
+        Ok(RefitOutcome {
+            id: id.to_string(),
+            published: true,
+            accuracy,
+            version: Some(snap.version),
+            reprogram_nj,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::TenantSpec;
+
+    fn test_cfg() -> ServeConfig {
+        let mut cfg = ServeConfig::default();
+        cfg.artifacts_dir = std::path::PathBuf::from("/nonexistent-hec-artifacts");
+        cfg
+    }
+
+    fn registry_with(tenants: Vec<TenantSpec>) -> Arc<StoreRegistry> {
+        let mut cfg = test_cfg();
+        cfg.stores.tenants = tenants;
+        let meta = Meta::load_or_synthetic(&cfg.artifacts_dir).unwrap();
+        StoreRegistry::from_config(&cfg, &meta).unwrap()
+    }
+
+    fn sample_store(reg: &StoreRegistry) -> TemplateStore {
+        let (num_classes, n_features, _) = reg.geometry();
+        let per_class = 4;
+        let n = per_class * num_classes;
+        let mut rng = crate::rng::Rng::new(7);
+        let mut feats = vec![0f32; n * n_features];
+        let mut labels = vec![0usize; n];
+        for (i, l) in labels.iter_mut().enumerate() {
+            *l = i % num_classes;
+            for j in 0..n_features {
+                // Class-dependent mean so templates are separable.
+                feats[i * n_features + j] =
+                    (*l as f32) * 0.3 + rng.u01() as f32 + if j % num_classes == *l { 1.5 } else { 0.0 };
+            }
+        }
+        TemplateStore::from_features(&feats, &labels, n_features, num_classes, 11).unwrap()
+    }
+
+    #[test]
+    fn bootstrap_registry_is_inert() {
+        let reg = registry_with(vec![]);
+        assert!(!reg.advertises());
+        assert_eq!(reg.epoch(), 0);
+        assert_eq!(reg.swaps(), 0);
+        let d = reg.get(DEFAULT_STORE_ID).unwrap();
+        assert_eq!(d.version, 0);
+        assert_eq!(d.origin, "bootstrap");
+        assert!(d.store.is_none());
+        assert_eq!(reg.list().len(), 1);
+        assert!(reg.resolve_tenant(Some("t1/abc")).is_none());
+    }
+
+    #[test]
+    fn publish_bumps_version_epoch_and_advertises() {
+        let reg = registry_with(vec![]);
+        let store = sample_store(&reg);
+        let snap = reg.publish("default", store.clone(), "put").unwrap();
+        assert_eq!(snap.version, 1);
+        assert_eq!(reg.epoch(), 1);
+        assert_eq!(reg.swaps(), 1);
+        assert!(reg.advertises());
+        let snap2 = reg.publish("default", store.clone(), "refit").unwrap();
+        assert_eq!(snap2.version, 2);
+        assert_eq!(reg.get("default").unwrap().origin, "refit");
+        // New id starts at version 1.
+        let snap3 = reg.publish("alt", store, "put").unwrap();
+        assert_eq!(snap3.version, 1);
+        assert_eq!(reg.list().len(), 2);
+    }
+
+    #[test]
+    fn publish_rejects_geometry_and_id_mismatches() {
+        let reg = registry_with(vec![]);
+        let store = sample_store(&reg);
+        assert!(reg.publish("bad/id", store.clone(), "put").is_err());
+        assert!(reg.publish("", store.clone(), "put").is_err());
+        let mut wrong = store.clone();
+        wrong.n_features += 1;
+        assert!(reg.publish("default", wrong, "put").is_err());
+        let mut no_set = store;
+        no_set.sets.remove(&1);
+        assert!(reg.publish("default", no_set, "put").is_err());
+        // Nothing leaked into the registry.
+        assert_eq!(reg.epoch(), 0);
+        assert_eq!(reg.swaps(), 0);
+    }
+
+    #[test]
+    fn tenant_resolution_uses_request_id_prefix() {
+        let reg = registry_with(vec![
+            TenantSpec {
+                name: "acme".into(),
+                store: "acme-store".into(),
+                quota: 2,
+            },
+            TenantSpec {
+                name: "beta".into(),
+                store: "default".into(),
+                quota: 0,
+            },
+        ]);
+        assert!(reg.advertises());
+        assert_eq!(reg.list().len(), 2); // default + acme-store
+        let t = reg.resolve_tenant(Some("acme/req-1")).unwrap();
+        assert_eq!(t.name, "acme");
+        assert_eq!(&*t.store_id, "acme-store");
+        assert!(reg.resolve_tenant(Some("acme")).is_none()); // no '/'
+        assert!(reg.resolve_tenant(Some("other/x")).is_none());
+        assert!(reg.resolve_tenant(None).is_none());
+        let ids = reg.tenant_store_ids();
+        assert_eq!(ids.len(), 1);
+        assert!(ids.iter().any(|i| &**i == "acme-store"));
+    }
+
+    #[test]
+    fn quota_admission_and_ticket_drop_are_drift_free() {
+        let reg = registry_with(vec![TenantSpec {
+            name: "t".into(),
+            store: "default".into(),
+            quota: 2,
+        }]);
+        let t = reg.resolve_tenant(Some("t/a")).unwrap();
+        let a = t.admit().unwrap();
+        let b = t.admit().unwrap();
+        assert_eq!(t.in_flight(), 2);
+        let err = t.admit().unwrap_err();
+        assert_eq!(err.code, ErrorCode::QuotaExceeded);
+        assert_eq!(t.rejected(), 1);
+        drop(a);
+        assert_eq!(t.in_flight(), 1);
+        let c = t.admit().unwrap();
+        c.mark_served();
+        drop(c);
+        drop(b);
+        assert_eq!(t.in_flight(), 0);
+        assert_eq!(t.served(), 1);
+        assert_eq!(t.rejected(), 1);
+    }
+
+    #[test]
+    fn hect_roundtrip_and_rejections() {
+        let num_classes = 4u32;
+        let n_features = 8u32;
+        let rows = 16usize;
+        let mut rng = crate::rng::Rng::new(3);
+        let labels: Vec<u32> = (0..rows).map(|i| (i as u32) % num_classes).collect();
+        let mut feats = vec![0f32; rows * n_features as usize];
+        for (i, f) in feats.iter_mut().enumerate() {
+            let class = labels[i / n_features as usize] as f32;
+            *f = class * 0.5 + rng.u01() as f32;
+        }
+        let frame = encode_hect(num_classes, n_features, &labels, &feats);
+        let store = decode_hect(&frame, 42).unwrap();
+        assert_eq!(store.num_classes, 4);
+        assert_eq!(store.n_features, 8);
+        assert!(store.set(1).is_ok());
+
+        assert!(decode_hect(b"HECB", 42).is_err()); // classify magic
+        assert!(decode_hect(&frame[..frame.len() - 1], 42).is_err());
+        let mut bad_label = frame.clone();
+        bad_label[17..21].copy_from_slice(&99u32.to_le_bytes());
+        assert!(decode_hect(&bad_label, 42).is_err());
+        let mut bad_ver = frame;
+        bad_ver[4] = 9;
+        assert!(decode_hect(&bad_ver, 42).is_err());
+    }
+
+    #[test]
+    fn prometheus_block_renders_store_and_tenant_series() {
+        let reg = registry_with(vec![TenantSpec {
+            name: "t1".into(),
+            store: "default".into(),
+            quota: 4,
+        }]);
+        let t = reg.resolve_tenant(Some("t1/x")).unwrap();
+        let ticket = t.admit().unwrap();
+        ticket.mark_served();
+        let store = sample_store(&reg);
+        reg.publish("default", store, "put").unwrap();
+        let mut out = String::new();
+        reg.prometheus(&mut out);
+        assert!(out.contains("hec_store_version{store=\"default\"} 1"));
+        assert!(out.contains("hec_store_swaps_total 1"));
+        assert!(out.contains("hec_tenant_served_total{tenant=\"t1\"} 1"));
+        assert!(out.contains("hec_tenant_rejected_total{tenant=\"t1\"} 0"));
+        assert!(out.contains("hec_tenant_in_flight{tenant=\"t1\"} 1"));
+        drop(ticket);
+        let mut out2 = String::new();
+        reg.prometheus(&mut out2);
+        assert!(out2.contains("hec_tenant_in_flight{tenant=\"t1\"} 0"));
+    }
+
+    #[test]
+    fn serving_set_covers_default_and_tenant_stores() {
+        let reg = registry_with(vec![TenantSpec {
+            name: "acme".into(),
+            store: "acme-store".into(),
+            quota: 0,
+        }]);
+        let set = reg.serving_set();
+        let ids: Vec<&str> = set.iter().map(|s| &*s.id).collect();
+        assert_eq!(ids, vec!["acme-store", "default"]);
+        assert!(set.iter().all(|s| s.version == 0 && s.store.is_none()));
+    }
+
+    #[test]
+    fn admin_put_json_and_refit_lifecycle() {
+        let cfg = Arc::new({
+            let mut c = test_cfg();
+            c.stores.refit_per_class = 4;
+            c.stores.refit_min_accuracy = 0.0; // always publish
+            c
+        });
+        let meta = Meta::load_or_synthetic(&cfg.artifacts_dir).unwrap();
+        let reg = StoreRegistry::from_config(&cfg, &meta).unwrap();
+        let admin = StoreAdmin::new(Arc::clone(&reg), Arc::clone(&cfg));
+
+        let bad = admin.put_json("default", "{not json");
+        assert_eq!(bad.unwrap_err().code, ErrorCode::InvalidArgument);
+
+        let o1 = admin.refit("default").unwrap();
+        assert!(o1.published);
+        assert_eq!(o1.version, Some(1));
+        assert!(o1.reprogram_nj > 0.0);
+        // Deterministic accuracy: a second registry replaying the same
+        // refit sequence reports the identical outcome.
+        let reg2 = StoreRegistry::from_config(&cfg, &meta).unwrap();
+        let admin2 = StoreAdmin::new(Arc::clone(&reg2), Arc::clone(&cfg));
+        let o1b = admin2.refit("default").unwrap();
+        assert_eq!(o1.accuracy, o1b.accuracy);
+        assert_eq!(o1.reprogram_nj, o1b.reprogram_nj);
+
+        // Next refit draws different probes (version-salted) and bumps to 2.
+        let o2 = admin.refit("default").unwrap();
+        assert_eq!(o2.version, Some(2));
+        assert_eq!(reg.get("default").unwrap().origin, "refit");
+        assert_eq!(reg.swaps(), 2);
+    }
+
+    #[test]
+    fn refit_below_threshold_is_not_published() {
+        let cfg = Arc::new({
+            let mut c = test_cfg();
+            c.stores.refit_per_class = 2;
+            c.stores.refit_min_accuracy = 1.01; // unreachable
+            c
+        });
+        let meta = Meta::load_or_synthetic(&cfg.artifacts_dir).unwrap();
+        let reg = StoreRegistry::from_config(&cfg, &meta).unwrap();
+        let admin = StoreAdmin::new(Arc::clone(&reg), cfg);
+        let o = admin.refit("default").unwrap();
+        assert!(!o.published);
+        assert!(o.version.is_none());
+        assert_eq!(reg.get("default").unwrap().version, 0);
+        assert_eq!(reg.swaps(), 0);
+    }
+}

@@ -217,7 +217,14 @@ fn parse_raw_set(v: &Value) -> Result<RawSet> {
 impl TemplateStore {
     /// Load and validate `templates.json`.
     pub fn load<P: AsRef<Path>>(path: P) -> Result<Self> {
-        let doc = jsonlite::parse(&std::fs::read_to_string(path)?)?;
+        Self::from_json_str(&std::fs::read_to_string(path)?)
+    }
+
+    /// Parse and validate a store from JSON text in the `templates.json`
+    /// schema.  Shared by [`TemplateStore::load`] and the store-registry
+    /// admin upload path, which receives the same document over HTTP.
+    pub fn from_json_str(text: &str) -> Result<Self> {
+        let doc = jsonlite::parse(text)?;
         let f32_vec = |name: &str| -> Result<Vec<f32>> {
             field(doc.get(name), name)?
                 .as_f32_vec()

@@ -25,6 +25,7 @@ use std::io::{BufReader, Read};
 use hec::api::stream::{decode_batch_envelope, decode_classify_request};
 use hec::api::{binary, ApiError, ClassifyRequest, ErrorCode};
 use hec::config::Backend;
+use hec::coordinator::ClassifySurface;
 use hec::gateway::http::{read_request, ReadError, MAX_BODY_BYTES};
 use hec::jsonlite::stream::PullParser;
 use hec::jsonlite::{self};
@@ -417,4 +418,88 @@ fn fuzz_binary_decode_single_enforces_item_count() {
             .expect("multi/zero-item frame must be rejected for /v1/classify");
         assert_eq!(err.code, ErrorCode::InvalidArgument);
     }
+}
+
+// ---------------------------------------------------------------------------
+// Group 4: top_k validation parity across decoders
+// ---------------------------------------------------------------------------
+
+/// `top_k == 0` is rejected at decode time with the same
+/// `INVALID_ARGUMENT` everywhere a request can enter: the tree decoder,
+/// the streaming decoder, and the binary frame's meta block — same code,
+/// same message, no path silently clamping to 1.
+#[test]
+fn top_k_zero_rejects_identically_across_all_decoders() {
+    let text = r#"{"image": [0.5], "top_k": 0}"#;
+    let tree = jsonlite::parse(text)
+        .map_err(malformed)
+        .and_then(|v| ClassifyRequest::from_value(&v))
+        .err()
+        .expect("tree decoder must reject top_k=0");
+    let streamed = decode_classify_request(text, 16)
+        .err()
+        .expect("streaming decoder must reject top_k=0");
+
+    // Binary: hand-build the frame — `encode_batch` could never emit a
+    // zero top_k, but a client can, and the wire must reject it.
+    let meta = br#"{"top_k": 0}"#;
+    let mut frame = b"HECB\x01".to_vec();
+    frame.extend_from_slice(&1u32.to_le_bytes());
+    frame.extend_from_slice(&(meta.len() as u32).to_le_bytes());
+    frame.extend_from_slice(meta);
+    frame.extend_from_slice(&1u32.to_le_bytes());
+    frame.extend_from_slice(&0.5f32.to_le_bytes());
+    let items = binary::decode_batch(&frame).expect("framing itself is valid");
+    let bin = items[0]
+        .as_ref()
+        .err()
+        .expect("binary meta must reject top_k=0")
+        .clone();
+
+    for (name, err) in [("tree", &tree), ("stream", &streamed), ("binary", &bin)] {
+        assert_eq!(err.code, ErrorCode::InvalidArgument, "{name}: wrong code");
+    }
+    assert_eq!(err_parts(&tree), err_parts(&streamed));
+    assert_eq!(err_parts(&tree), err_parts(&bin));
+}
+
+/// The out-of-range half of the same contract: `top_k > num_classes` is
+/// only checkable where the deployment bound is known, and both live
+/// surfaces (single-pipeline server, sharded set) answer with the same
+/// stable `INVALID_ARGUMENT` — never a silent clamp — while the boundary
+/// value `top_k == num_classes` still serves.
+#[test]
+fn top_k_out_of_range_is_invalid_argument_at_submit() {
+    let mut c = hec::config::ServeConfig {
+        artifacts_dir: "/nonexistent-hec-artifacts".into(),
+        backend: Backend::FeatureCount,
+        ..Default::default()
+    };
+    c.batch.max_wait_us = 0;
+
+    let server = hec::coordinator::Server::start(c.clone()).unwrap();
+    let img_len = server.handle.caps().image_len;
+    let num_classes = server.handle.caps().num_classes;
+    let mut req = ClassifyRequest::new(vec![0.0; img_len]);
+    req.top_k = num_classes + 1;
+    let err = server
+        .handle
+        .submit_blocking(req.clone())
+        .err()
+        .expect("out-of-range top_k must be rejected");
+    assert_eq!(err.code, ErrorCode::InvalidArgument);
+    req.top_k = num_classes;
+    let resp = server.handle.submit_blocking(req.clone()).unwrap();
+    assert_eq!(resp.predictions.len(), num_classes);
+    server.shutdown();
+
+    let set = hec::coordinator::ShardSet::start(&c).unwrap();
+    req.top_k = num_classes + 1;
+    let err = set
+        .handle
+        .submit_blocking(req)
+        .err()
+        .expect("sharded surface must reject identically");
+    assert_eq!(err.code, ErrorCode::InvalidArgument);
+    set.shutdown();
 }

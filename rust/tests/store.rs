@@ -1,0 +1,575 @@
+//! Template-store registry tests — the multi-tenant hot-swap acceptance
+//! gate.
+//!
+//! Everything runs artifact-free under fixed seeds with **no sleeps**:
+//! orderings are forced with the [`hec::coordinator::shard::Gate`]
+//! rendezvous, never raced against wall-clock time.  The suite pins four
+//! properties:
+//!
+//! 1. The default single-store, no-tenant configuration is **bitwise
+//!    invisible**: predictions, RNG streams, wire JSON, and `/metrics`
+//!    are identical to a registry-free build (the registry is attached to
+//!    every shard, but inert until a publish or a tenant appears).
+//! 2. A publish swaps **atomically at batch boundaries**: a batch parked
+//!    mid-flight (Gate) finishes on the version it resolved before
+//!    parking; the very next batch serves the published version.
+//! 3. Tenant quotas reject with `QUOTA_EXCEEDED` without consuming
+//!    queue slots, and the per-tenant gauges stay drift-free across
+//!    delivery and panic-restart alike.
+//! 4. The `/v1/stores` admin surface round-trips over a real socket:
+//!    JSON and raw `HECT` uploads, online re-fit, and tagged classify
+//!    responses.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::Arc;
+
+use hec::api::{binary, ApiError, ClassifyRequest, ErrorCode};
+use hec::config::{Backend, Engine, HttpConfig, RoutePolicy, ServeConfig, TenantSpec};
+use hec::coordinator::shard::{Gate, ShardHooks};
+use hec::coordinator::{ClassifySurface, Pipeline, Server, ShardSet};
+use hec::dataset::SyntheticDataset;
+use hec::gateway::Gateway;
+use hec::jsonlite;
+use hec::store::{encode_hect, StoreRegistry};
+use hec::templates::TemplateStore;
+
+/// An artifacts directory that never exists -> synthetic fallback.
+const NO_ARTIFACTS: &str = "/nonexistent-hec-artifacts";
+
+fn cfg(backend: Backend, shards: usize) -> ServeConfig {
+    let mut c = ServeConfig {
+        artifacts_dir: NO_ARTIFACTS.into(),
+        backend,
+        engine: Engine::Interp,
+        ..Default::default()
+    };
+    c.batch.max_batch = 4;
+    c.batch.max_wait_us = 0; // serial submits -> singleton batches, no timing
+    c.shards.count = shards;
+    c.shards.policy = RoutePolicy::RoundRobin;
+    c
+}
+
+fn workload(n: usize, seed: u64) -> (Vec<f32>, usize) {
+    let meta = hec::runtime::Meta::synthetic();
+    let ds = SyntheticDataset::new(seed, n, meta.norm.mean as f32, meta.norm.std as f32);
+    let (images, _) = ds.batch(0, n);
+    let s = meta.artifacts.image_size;
+    (images, s * s)
+}
+
+/// Class-separable labelled rows matching the registry's geometry, for
+/// building publishable stores and `HECT` upload frames.
+fn labelled_rows(reg: &StoreRegistry, seed: u64) -> (Vec<usize>, Vec<f32>) {
+    let (num_classes, n_features, _) = reg.geometry();
+    let per_class = 4;
+    let n = per_class * num_classes;
+    let labels: Vec<usize> = (0..n).map(|i| i % num_classes).collect();
+    let mut rng = hec::rng::Rng::new(seed);
+    let mut feats = vec![0.0f32; n * n_features];
+    for (i, l) in labels.iter().enumerate() {
+        for j in 0..n_features {
+            feats[i * n_features + j] = (*l as f32) * 0.3
+                + rng.u01() as f32
+                + if j % num_classes == *l { 1.5 } else { 0.0 };
+        }
+    }
+    (labels, feats)
+}
+
+fn publishable_store(reg: &StoreRegistry, seed: u64) -> TemplateStore {
+    let (num_classes, n_features, _) = reg.geometry();
+    let (labels, feats) = labelled_rows(reg, seed);
+    TemplateStore::from_features(&feats, &labels, n_features, num_classes, seed).unwrap()
+}
+
+/// Everything parity needs from one response, compared bitwise.
+#[derive(Debug, PartialEq)]
+struct Outcome {
+    predictions: Vec<(usize, f64)>,
+    front_end_nj: f64,
+    back_end_nj: f64,
+}
+
+/// Property 1, digital path: a ShardSet (which now always carries the
+/// registry) under the default configuration is bitwise identical to
+/// independent registry-free [`Pipeline`]s, responses carry no store
+/// fields on the wire, and `/metrics` has no `hec_store_*`/`hec_tenant_*`
+/// series — while the (additive-by-design) latency histograms are there.
+#[test]
+fn default_registry_is_bitwise_invisible() {
+    let requests = 8;
+    let n_shards = 2;
+    let c = cfg(Backend::FeatureCount, n_shards);
+    let (images, img_len) = workload(requests, 1_000_003);
+    let set = ShardSet::start(&c).unwrap();
+
+    let mut got: Vec<(usize, Outcome)> = Vec::new();
+    for i in 0..requests {
+        let mut req = ClassifyRequest::new(images[i * img_len..(i + 1) * img_len].to_vec());
+        req.top_k = 3;
+        let resp = set.handle.submit_blocking(req).unwrap();
+        assert_eq!(resp.shard, Some(i % n_shards));
+        assert_eq!(resp.store, None, "default config must not tag stores");
+        assert_eq!(resp.store_version, None);
+        let wire = resp.to_value().to_json();
+        assert!(
+            !wire.contains("\"store\"") && !wire.contains("\"store_version\""),
+            "default-config wire bytes changed: {wire}"
+        );
+        got.push((
+            resp.shard.unwrap(),
+            Outcome {
+                predictions: resp.predictions.iter().map(|p| (p.class, p.score)).collect(),
+                front_end_nj: resp.energy.front_end_nj,
+                back_end_nj: resp.energy.back_end_nj,
+            },
+        ));
+    }
+
+    let text = set.handle.prometheus_text();
+    assert!(
+        !text.contains("hec_store_") && !text.contains("hec_tenant_"),
+        "inert registry must not render metrics:\n{text}"
+    );
+    for needle in [
+        "# TYPE hec_latency_microseconds histogram",
+        "hec_latency_microseconds_count{shard=\"0\"} 4",
+        "hec_latency_microseconds_count{shard=\"1\"} 4",
+        "hec_backend_latency_microseconds_count{backend=\"fc\",shard=\"0\"} 4",
+        "hec_latency_microseconds_bucket{shard=\"0\",le=\"+Inf\"} 4",
+    ] {
+        assert!(text.contains(needle), "missing {needle:?} in:\n{text}");
+    }
+    set.shutdown();
+
+    // N independent single-pipeline runs (no registry anywhere near them),
+    // seeds base + shard index, each fed its routed subsequence in order.
+    for s in 0..n_shards {
+        let mut sc = c.clone();
+        sc.shards.count = 1;
+        sc.acam.seed = c.acam.seed.wrapping_add(s as u64);
+        let mut p = Pipeline::new(&sc).unwrap();
+        let mut routed = got.iter().filter(|(shard, _)| *shard == s);
+        for i in (0..requests).filter(|i| i % n_shards == s) {
+            let opts = hec::api::ClassifyOptions {
+                top_k: 3,
+                backend: None,
+                return_features: false,
+            };
+            let want = p
+                .classify_batch_with(&images[i * img_len..(i + 1) * img_len], 1, &[opts])
+                .unwrap()
+                .remove(0);
+            let want = Outcome {
+                predictions: want.predictions.iter().map(|pr| (pr.class, pr.score)).collect(),
+                front_end_nj: want.energy.front_end_nj,
+                back_end_nj: want.energy.back_end_nj,
+            };
+            let (_, sharded) = routed.next().expect("subsequence length mismatch");
+            assert_eq!(sharded, &want, "request {i} diverged on shard {s}");
+        }
+        assert!(routed.next().is_none(), "extra responses on shard {s}");
+    }
+}
+
+/// Property 1, stochastic path: the per-shard ACAM RNG streams advance
+/// exactly as a registry-free pipeline's would — attaching the registry
+/// must not consume or reorder a single draw.
+#[test]
+fn acam_rng_streams_unchanged_by_registry() {
+    let requests = 8;
+    let n_shards = 2;
+    let mut c = cfg(Backend::AcamSim, n_shards);
+    c.acam.variability_level = 1.0; // exercise programming + read noise
+    let (images, img_len) = workload(requests, 424_243);
+    let set = ShardSet::start(&c).unwrap();
+    let mut got = Vec::new();
+    for i in 0..requests {
+        let resp = set
+            .handle
+            .classify_blocking(images[i * img_len..(i + 1) * img_len].to_vec())
+            .unwrap();
+        assert_eq!(resp.shard, Some(i % n_shards));
+        assert_eq!(resp.store, None);
+        got.push((
+            resp.predictions[0].class,
+            resp.predictions[0].score,
+            resp.energy.back_end_nj,
+        ));
+    }
+    set.shutdown();
+    for s in 0..n_shards {
+        let mut sc = c.clone();
+        sc.shards.count = 1;
+        sc.acam.seed = c.acam.seed.wrapping_add(s as u64);
+        let mut p = Pipeline::new(&sc).unwrap();
+        for i in (0..requests).filter(|i| i % n_shards == s) {
+            let want = p
+                .classify_batch(&images[i * img_len..(i + 1) * img_len], 1)
+                .unwrap()
+                .remove(0);
+            assert_eq!(
+                got[i],
+                (want.top1().class, want.top1().score, want.energy.back_end_nj),
+                "request {i}: ACAM RNG stream diverged on shard {s}"
+            );
+        }
+    }
+}
+
+/// Property 2: the swap barrier, pinned deterministically.  A batch parked
+/// mid-flight on the hold gate has already synchronised against the
+/// registry (`sync_stores` runs before the hold hook), so a publish while
+/// it is parked cannot touch it — it finishes untagged on the bootstrap
+/// store, and the very next batch serves the published version.  No batch
+/// can ever mix versions: the (store, version) binding is resolved once
+/// per batch, never per item.
+#[test]
+fn publish_swaps_at_batch_boundaries_never_mid_batch() {
+    let gate = Gate::new();
+    let mut c = cfg(Backend::FeatureCount, 1);
+    c.batch.queue_depth = 8;
+    let (images, img_len) = workload(1, 55);
+    let img = images[..img_len].to_vec();
+    let set = ShardSet::start_with_hooks(
+        &c,
+        ShardHooks {
+            hold: Some(("hold".into(), Arc::clone(&gate))),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+
+    // Park the worker mid-batch: the held batch is pinned to the
+    // pre-publish registry state.
+    let mut req = ClassifyRequest::new(img.clone());
+    req.request_id = Some("hold".into());
+    let hold_rx = set.handle.submit(req).unwrap();
+    gate.await_arrivals(1);
+
+    // Queue traffic behind the parked batch, then publish while parked.
+    let queued: Vec<_> = (0..2)
+        .map(|_| set.handle.submit(ClassifyRequest::new(img.clone())).unwrap())
+        .collect();
+    let admin = set.handle.store_admin().expect("sharded surface carries the admin");
+    let reg = admin.registry();
+    assert_eq!(reg.swaps(), 0);
+    let snap = reg
+        .publish("default", publishable_store(reg, 4242), "put")
+        .unwrap();
+    assert_eq!(snap.version, 1);
+    assert_eq!(reg.swaps(), 1);
+
+    // Release: the parked batch finishes on its pinned (inert) state — no
+    // store tag — and the queued requests form the next batch, which
+    // adopts and advertises v1.
+    gate.release();
+    let hold = hold_rx.recv().unwrap().unwrap();
+    assert_eq!(
+        hold.store, None,
+        "in-flight batch must finish on the version it resolved"
+    );
+    assert_eq!(hold.store_version, None);
+    for rx in queued {
+        let resp = rx.recv().unwrap().unwrap();
+        assert_eq!(resp.store.as_deref(), Some("default"));
+        assert_eq!(resp.store_version, Some(1), "post-publish batch must serve v1");
+    }
+
+    // The swap is visible on /metrics once (and only once) advertised.
+    let text = set.handle.prometheus_text();
+    for needle in [
+        "hec_store_version{store=\"default\"} 1",
+        "hec_store_swaps_total 1",
+    ] {
+        assert!(text.contains(needle), "missing {needle:?} in:\n{text}");
+    }
+    set.shutdown();
+}
+
+/// Property 3: quota admission and gauge integrity.  The quota bounds
+/// concurrent in-flight requests; a rejection consumes no queue slot and
+/// no ticket; delivery, panic-drain, and restart all release tickets, so
+/// `hec_tenant_in_flight` returns to zero whenever the tenant is idle.
+#[test]
+fn tenant_quota_rejects_and_gauges_stay_drift_free() {
+    let hold_gate = Gate::new();
+    let restart_gate = Gate::new();
+    let mut c = cfg(Backend::FeatureCount, 1);
+    c.batch.max_batch = 1;
+    c.batch.queue_depth = 8;
+    c.stores.tenants = vec![TenantSpec {
+        name: "t1".into(),
+        store: "default".into(),
+        quota: 2,
+    }];
+    let (images, img_len) = workload(1, 31);
+    let img = images[..img_len].to_vec();
+    let set = ShardSet::start_with_hooks(
+        &c,
+        ShardHooks {
+            panic_on: Some("t1/boom".into()),
+            hold: Some(("t1/hold".into(), Arc::clone(&hold_gate))),
+            restart_gate: Some(Arc::clone(&restart_gate)),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let admin = set.handle.store_admin().unwrap();
+    let t1 = admin
+        .registry()
+        .resolve_tenant(Some("t1/any"))
+        .expect("configured tenant must resolve from the request-id prefix");
+
+    // Park t1's first request mid-batch, fill the quota with a second.
+    let mut req = ClassifyRequest::new(img.clone());
+    req.request_id = Some("t1/hold".into());
+    let hold_rx = set.handle.submit(req).unwrap();
+    hold_gate.await_arrivals(1);
+    let mut req = ClassifyRequest::new(img.clone());
+    req.request_id = Some("t1/fill".into());
+    let fill_rx = set.handle.submit(req).unwrap();
+    assert_eq!(t1.in_flight(), 2);
+
+    // Quota full: the third submit is rejected before touching any queue.
+    let mut req = ClassifyRequest::new(img.clone());
+    req.request_id = Some("t1/over".into());
+    let err = set.handle.submit(req).err().expect("quota must reject");
+    assert_eq!(err.code, ErrorCode::QuotaExceeded);
+    assert_eq!(err.code.http_status(), 429);
+    assert_eq!(t1.in_flight(), 2, "a rejected submit must not consume a slot");
+    assert_eq!(t1.rejected(), 1);
+
+    // Drain: both admitted requests complete, tagged with the tenant's
+    // store (version 0 — nothing published; tenants alone advertise).
+    hold_gate.release();
+    let hold = hold_rx.recv().unwrap().unwrap();
+    assert_eq!(hold.store.as_deref(), Some("default"));
+    assert_eq!(hold.store_version, Some(0));
+    assert!(fill_rx.recv().unwrap().is_ok());
+    // An untenanted round-trip both proves other traffic is outside t1's
+    // quota and serialises past the worker's ticket drops.
+    assert!(set.handle.classify_blocking(img.clone()).is_ok());
+    assert_eq!(t1.in_flight(), 0, "tickets must release on delivery");
+    assert_eq!(t1.served(), 2);
+
+    // A worker panic must release the ticket too, not leak it: the drain
+    // completes before the restart gate is passed, so this is race-free.
+    let mut req = ClassifyRequest::new(img.clone());
+    req.request_id = Some("t1/boom".into());
+    let err = set.handle.submit_blocking(req).err().expect("panic fails the request");
+    assert_eq!(err.code, ErrorCode::Internal);
+    restart_gate.await_arrivals(1);
+    assert_eq!(t1.in_flight(), 0, "panicked request must release its ticket");
+    assert_eq!(t1.served(), 2, "a failed request is not served");
+    restart_gate.release();
+    restart_gate.await_arrivals(2);
+
+    // Post-restart the tenant serves again and the counters add up.
+    let mut req = ClassifyRequest::new(img.clone());
+    req.request_id = Some("t1/after".into());
+    let resp = set.handle.submit_blocking(req).unwrap();
+    assert_eq!(resp.store.as_deref(), Some("default"));
+    assert!(set.handle.classify_blocking(img).is_ok());
+    assert_eq!((t1.served(), t1.rejected(), t1.in_flight()), (3, 1, 0));
+
+    let text = set.handle.prometheus_text();
+    for needle in [
+        "hec_tenant_served_total{tenant=\"t1\"} 3",
+        "hec_tenant_rejected_total{tenant=\"t1\"} 1",
+        "hec_tenant_in_flight{tenant=\"t1\"} 0",
+        "hec_store_version{store=\"default\"} 0",
+        "hec_store_swaps_total 0",
+    ] {
+        assert!(text.contains(needle), "missing {needle:?} in:\n{text}");
+    }
+    set.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// HTTP plumbing (mirrors rust/tests/gateway.rs).
+// ---------------------------------------------------------------------------
+
+/// Read one HTTP/1.1 response (status, body) using Content-Length framing.
+fn read_response(stream: &mut TcpStream) -> (u16, String) {
+    let mut head = Vec::new();
+    let mut byte = [0u8; 1];
+    while !head.ends_with(b"\r\n\r\n") {
+        stream.read_exact(&mut byte).unwrap();
+        head.push(byte[0]);
+        assert!(head.len() < 64 * 1024, "unterminated response head");
+    }
+    let head = String::from_utf8(head).unwrap();
+    let status: u16 = head.split(' ').nth(1).unwrap().parse().unwrap();
+    let content_length: usize = head
+        .lines()
+        .find_map(|l| {
+            let (k, v) = l.split_once(':')?;
+            k.eq_ignore_ascii_case("content-length")
+                .then(|| v.trim().parse().unwrap())
+        })
+        .expect("response must carry Content-Length");
+    let mut body = vec![0u8; content_length];
+    stream.read_exact(&mut body).unwrap();
+    (status, String::from_utf8(body).unwrap())
+}
+
+/// One-shot JSON request (Connection: close).
+fn http(addr: SocketAddr, method: &str, path: &str, body: Option<&str>) -> (u16, String) {
+    let mut req = format!("{method} {path} HTTP/1.1\r\nHost: hec-test\r\nConnection: close\r\n");
+    if let Some(b) = body {
+        req.push_str(&format!(
+            "Content-Type: application/json\r\nContent-Length: {}\r\n",
+            b.len()
+        ));
+    }
+    req.push_str("\r\n");
+    if let Some(b) = body {
+        req.push_str(b);
+    }
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream.write_all(req.as_bytes()).unwrap();
+    read_response(&mut stream)
+}
+
+/// One-shot request with an arbitrary (possibly binary) body.
+fn http_raw(
+    addr: SocketAddr,
+    method: &str,
+    path: &str,
+    content_type: &str,
+    body: &[u8],
+) -> (u16, String) {
+    let mut req = format!(
+        "{method} {path} HTTP/1.1\r\nHost: hec-test\r\nConnection: close\r\n\
+         Content-Type: {content_type}\r\nContent-Length: {}\r\n\r\n",
+        body.len()
+    )
+    .into_bytes();
+    req.extend_from_slice(body);
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream.write_all(&req).unwrap();
+    read_response(&mut stream)
+}
+
+/// Property 4: the `/v1/stores` admin surface over a real socket — list,
+/// snapshot, 404, malformed JSON, raw `HECT` upload, 405, online re-fit,
+/// tagged tenant classification, and the registry's `/metrics` series.
+#[test]
+fn store_admin_round_trips_over_http() {
+    let mut c = cfg(Backend::FeatureCount, 1);
+    c.batch.max_batch = 8;
+    c.batch.max_wait_us = 500;
+    c.stores.refit_min_accuracy = 0.0; // publish every candidate: deterministic
+    c.stores.tenants = vec![TenantSpec {
+        name: "acme".into(),
+        store: "default".into(),
+        quota: 0,
+    }];
+    let server = Server::start(c).unwrap();
+    let http_cfg = HttpConfig {
+        addr: Some("127.0.0.1:0".to_string()),
+        max_connections: 32,
+    };
+    let gateway = Gateway::start(server.handle.clone(), &http_cfg).unwrap();
+    let addr = gateway.local_addr();
+    let assert_err = |(status, text): (u16, String), want_status: u16, want_code: ErrorCode| {
+        assert_eq!(status, want_status, "{text}");
+        let err = ApiError::from_value(&jsonlite::parse(&text).unwrap()).unwrap();
+        assert_eq!(err.code, want_code, "{text}");
+    };
+
+    // List: the seeded default entry at version 0.
+    let (status, body) = http(addr, "GET", "/v1/stores", None);
+    assert_eq!(status, 200, "{body}");
+    let v = jsonlite::parse(&body).unwrap();
+    assert_eq!(v.get("api").unwrap().as_str(), Some("v1"));
+    let stores = v.get("stores").unwrap().as_array().unwrap();
+    assert!(
+        stores.iter().any(|s| s.get("id").unwrap().as_str() == Some("default")),
+        "{body}"
+    );
+
+    // Snapshot one store; unknown id is 404 NOT_FOUND.
+    let (status, body) = http(addr, "GET", "/v1/stores/default", None);
+    assert_eq!(status, 200, "{body}");
+    let v = jsonlite::parse(&body).unwrap();
+    assert_eq!(v.get("version").unwrap().as_u64(), Some(0));
+    assert_eq!(v.get("origin").unwrap().as_str(), Some("bootstrap"));
+    assert_eq!(v.get("resident").unwrap().as_bool(), Some(false));
+    assert_err(http(addr, "GET", "/v1/stores/nope", None), 404, ErrorCode::NotFound);
+
+    // Malformed JSON body -> 400 INVALID_ARGUMENT; wrong method -> 405.
+    assert_err(
+        http(addr, "PUT", "/v1/stores/default", Some("{\"not\": \"templates\"}")),
+        400,
+        ErrorCode::InvalidArgument,
+    );
+    assert_err(
+        http(addr, "DELETE", "/v1/stores/default", None),
+        405,
+        ErrorCode::MethodNotAllowed,
+    );
+
+    // Raw HECT upload: labelled feature rows, re-fit server-side -> v1.
+    let reg = server.handle.store_admin().unwrap().registry().clone();
+    let (num_classes, n_features, _) = reg.geometry();
+    let (labels, feats) = labelled_rows(&reg, 777);
+    let labels_u32: Vec<u32> = labels.iter().map(|&l| l as u32).collect();
+    let frame = encode_hect(num_classes as u32, n_features as u32, &labels_u32, &feats);
+    let (status, body) = http_raw(addr, "PUT", "/v1/stores/default", binary::CONTENT_TYPE, &frame);
+    assert_eq!(status, 200, "{body}");
+    let v = jsonlite::parse(&body).unwrap();
+    assert_eq!(v.get("version").unwrap().as_u64(), Some(1));
+    assert_eq!(v.get("origin").unwrap().as_str(), Some("put"));
+    assert_eq!(v.get("resident").unwrap().as_bool(), Some(true));
+    // A corrupt frame is rejected without disturbing the published store.
+    assert_err(
+        http_raw(addr, "PUT", "/v1/stores/default", binary::CONTENT_TYPE, &frame[..13]),
+        400,
+        ErrorCode::InvalidArgument,
+    );
+
+    // Online re-fit: probes drawn, candidate verified digitally, published
+    // as v2 (min accuracy 0 makes the publish unconditional).
+    let (status, body) = http(addr, "POST", "/v1/stores/default/refit", None);
+    assert_eq!(status, 200, "{body}");
+    let v = jsonlite::parse(&body).unwrap();
+    assert_eq!(v.get("published").unwrap().as_bool(), Some(true));
+    assert_eq!(v.get("version").unwrap().as_u64(), Some(2));
+    let acc = v.get("accuracy").unwrap().as_f64().unwrap();
+    assert!((0.0..=1.0).contains(&acc), "accuracy {acc} out of range");
+    assert!(
+        v.get("reprogram_nj").unwrap().as_f64().unwrap() > 0.0,
+        "re-programming energy must be charged"
+    );
+
+    // Classify as the tenant: the response advertises the serving store.
+    let img_len = server.handle.caps().image_len;
+    let mut req = ClassifyRequest::new(vec![0.25f32; img_len]);
+    req.request_id = Some("acme/1".into());
+    let (status, body) = http(addr, "POST", "/v1/classify", Some(&req.to_value().to_json()));
+    assert_eq!(status, 200, "{body}");
+    let v = jsonlite::parse(&body).unwrap();
+    assert_eq!(v.get("store").unwrap().as_str(), Some("default"));
+    assert_eq!(v.get("store_version").unwrap().as_u64(), Some(2));
+
+    // Registry series on /metrics (the single-pipeline Server path).
+    let (status, text) = http(addr, "GET", "/metrics", None);
+    assert_eq!(status, 200);
+    for needle in [
+        "hec_store_version{store=\"default\"} 2",
+        "hec_store_swaps_total 2",
+        "hec_tenant_served_total{tenant=\"acme\"} 1",
+        "hec_tenant_in_flight{tenant=\"acme\"} 0",
+        "# TYPE hec_latency_microseconds histogram",
+        "hec_latency_microseconds_bucket{le=\"+Inf\"} 1",
+    ] {
+        assert!(text.contains(needle), "missing {needle:?} in:\n{text}");
+    }
+
+    gateway.shutdown();
+    server.shutdown();
+}
