@@ -1,0 +1,337 @@
+//! Open-loop tail-latency load harness against a live gateway.
+//!
+//! Drives the mixed-traffic schedule from `hec::loadgen` — Zipf hot-key
+//! skew over a seeded image pool, bursts, slow/chunked clients,
+//! per-request deadlines — at the HTTP front door, then reconciles three
+//! views of the run into `BENCH_loadtest.json`:
+//!
+//! * **client-side** open-loop latency percentiles (p50/p90/p99/p99.9),
+//!   measured from each request's *scheduled* arrival so server queueing
+//!   under bursts is charged to the tail (no coordinated omission);
+//! * **server-side** percentile upper bounds recovered from the
+//!   `hec_latency_microseconds` histogram buckets on `/metrics`;
+//! * **cache behaviour**: `hec_cache_{hits,misses}_total` before/after the
+//!   run.  With Zipf skew and per-shard capacity >= pool, each shard can
+//!   miss each distinct image at most once — the bench asserts that miss
+//!   budget (equivalently, hit rate >= the Zipf-implied floor) and that
+//!   hits actually skip the front-end.
+//!
+//! By default the harness boots its own in-process 3-shard gateway with
+//! the feature cache enabled (artifact-free synthetic deployment).  Set
+//! `HEC_LOADTEST_ADDR=host:port` to aim at an externally-booted server
+//! (the CI `loadtest` job does this with the release binary) and
+//! `HEC_LOADTEST_SHARDS` to its shard count (default 3; the miss budget
+//! scales with it).  `HEC_BENCH_SMOKE=1` shrinks the schedule for CI;
+//! `HEC_BENCH_OUT` overrides the report path.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::Duration;
+
+use hec::benchkit::{self, section, BenchResult};
+use hec::config::{Backend, HttpConfig, ServeConfig};
+use hec::coordinator::ShardSet;
+use hec::dataset::SyntheticDataset;
+use hec::gateway::Gateway;
+use hec::jsonlite::Value;
+use hec::loadgen::{self, LoadgenConfig};
+use hec::runtime::Meta;
+
+const SHARDS: usize = 3;
+const CACHE_CAPACITY: usize = 256;
+
+/// One-shot GET over a fresh connection (for `/metrics`).
+fn http_get(addr: SocketAddr, path: &str) -> (u16, String) {
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    stream
+        .set_read_timeout(Some(Duration::from_secs(10)))
+        .unwrap();
+    let req = format!("GET {path} HTTP/1.1\r\nHost: hec-loadtest\r\nConnection: close\r\n\r\n");
+    stream.write_all(req.as_bytes()).unwrap();
+    let mut head = Vec::new();
+    let mut byte = [0u8; 1];
+    while !head.ends_with(b"\r\n\r\n") {
+        stream.read_exact(&mut byte).expect("response head");
+        head.push(byte[0]);
+        assert!(head.len() < 64 * 1024);
+    }
+    let head = String::from_utf8(head).unwrap();
+    let status: u16 = head.split(' ').nth(1).unwrap().parse().unwrap();
+    let content_length: usize = head
+        .lines()
+        .find_map(|l| {
+            let (k, v) = l.split_once(':')?;
+            k.eq_ignore_ascii_case("content-length")
+                .then(|| v.trim().parse().unwrap())
+        })
+        .expect("Content-Length");
+    let mut body = vec![0u8; content_length];
+    stream.read_exact(&mut body).unwrap();
+    (status, String::from_utf8_lossy(&body).into_owned())
+}
+
+/// Aggregate the `hec_latency_microseconds` cumulative buckets across
+/// shard labels: `le upper edge -> cumulative count`.
+fn latency_buckets(prom: &str) -> BTreeMap<u64, u64> {
+    let mut by_le: BTreeMap<u64, u64> = BTreeMap::new();
+    for line in prom.lines() {
+        if !line.starts_with("hec_latency_microseconds_bucket") {
+            continue;
+        }
+        let Some(le_start) = line.find("le=\"") else {
+            continue;
+        };
+        let rest = &line[le_start + 4..];
+        let Some(le_end) = rest.find('"') else {
+            continue;
+        };
+        let le = match &rest[..le_end] {
+            "+Inf" => u64::MAX,
+            s => s.parse().unwrap_or(u64::MAX),
+        };
+        let Some(count) = line.rsplit(' ').next().and_then(|t| t.parse::<u64>().ok()) else {
+            continue;
+        };
+        *by_le.entry(le).or_insert(0) += count;
+    }
+    by_le
+}
+
+/// Percentile upper bound from cumulative buckets: the smallest upper
+/// edge whose cumulative count covers the rank (finite edges only; +Inf
+/// falls back to the largest finite edge).
+fn bucket_percentile(buckets: &BTreeMap<u64, u64>, q: f64) -> u64 {
+    let total = buckets.values().max().copied().unwrap_or(0);
+    if total == 0 {
+        return 0;
+    }
+    let rank = (total as f64 * q).ceil() as u64;
+    let mut last_finite = 0;
+    for (&le, &cum) in buckets {
+        if le != u64::MAX {
+            last_finite = le;
+        }
+        if cum >= rank {
+            return if le == u64::MAX { last_finite } else { le };
+        }
+    }
+    last_finite
+}
+
+fn duration_row(name: &str, sorted_us: &[u64]) -> BenchResult {
+    let n = sorted_us.len().max(1);
+    let mean_us = sorted_us.iter().sum::<u64>() as f64 / n as f64;
+    let at = |q: f64| Duration::from_micros(loadgen::percentile_us(sorted_us, q));
+    BenchResult {
+        name: name.to_string(),
+        iters: sorted_us.len(),
+        mean: Duration::from_secs_f64(mean_us / 1e6),
+        p50: at(0.50),
+        p99: at(0.99),
+        min: Duration::from_micros(sorted_us.first().copied().unwrap_or(0)),
+    }
+}
+
+fn main() {
+    let smoke = std::env::var("HEC_BENCH_SMOKE").is_ok();
+    let external = std::env::var("HEC_LOADTEST_ADDR").ok();
+    let shards: usize = std::env::var("HEC_LOADTEST_SHARDS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(SHARDS);
+
+    let mut cfg = if smoke {
+        LoadgenConfig::smoke()
+    } else {
+        LoadgenConfig::default()
+    };
+    // Keep the miss budget meaningful: capacity must cover the pool so a
+    // shard can never evict a key it will see again.
+    assert!(cfg.pool <= CACHE_CAPACITY);
+
+    // Boot an in-process sharded gateway with the cache on, unless aimed
+    // at an external server.
+    let (addr, booted) = match &external {
+        Some(a) => (a.parse::<SocketAddr>().expect("HEC_LOADTEST_ADDR"), None),
+        None => {
+            let mut sc = ServeConfig {
+                artifacts_dir: "/nonexistent-hec-artifacts".into(),
+                backend: Backend::FeatureCount,
+                ..Default::default()
+            };
+            sc.shards.count = shards;
+            sc.cache.enabled = true;
+            sc.cache.capacity = CACHE_CAPACITY;
+            sc.batch.max_batch = 8;
+            sc.batch.max_wait_us = 500;
+            let set = ShardSet::start(&sc).expect("boot shards");
+            let gw = Gateway::start(
+                set.handle.clone(),
+                &HttpConfig {
+                    addr: Some("127.0.0.1:0".to_string()),
+                    max_connections: 64,
+                },
+            )
+            .expect("boot gateway");
+            (gw.local_addr(), Some((set, gw)))
+        }
+    };
+
+    // Seeded image pool rendered once as JSON fragments — identical pool
+    // slots produce byte-identical bodies, hence identical content hashes
+    // server-side.
+    let meta = Meta::load_or_synthetic("/nonexistent-hec-artifacts").unwrap();
+    let ds = SyntheticDataset::new(
+        cfg.seed ^ 0x9001,
+        cfg.pool,
+        meta.norm.mean as f32,
+        meta.norm.std as f32,
+    );
+    let images_json: Vec<String> = (0..cfg.pool)
+        .map(|i| loadgen::image_json(&ds.image(i)))
+        .collect();
+
+    let (_, before) = http_get(addr, "/metrics");
+    let hits_before = loadgen::metric_total(&before, "hec_cache_hits_total");
+    let misses_before = loadgen::metric_total(&before, "hec_cache_misses_total");
+
+    section(&format!(
+        "open-loop load: {} arrivals at ~{:.0} rps, pool {}, zipf {:.2}, {} shards{}",
+        cfg.requests,
+        cfg.rps,
+        cfg.pool,
+        cfg.zipf_s,
+        shards,
+        if external.is_some() { " (external)" } else { "" },
+    ));
+    cfg.workers = cfg.workers.max(4);
+    let report = loadgen::run(addr, &cfg, &images_json);
+    println!(
+        "  outcomes: {} ok, {} http errors, {} deadline-exceeded, {} transport (of {})",
+        report.ok,
+        report.http_errors,
+        report.deadline_exceeded,
+        report.transport_errors,
+        report.scheduled
+    );
+    println!(
+        "  client e2e: p50 {} us, p90 {} us, p99 {} us, p99.9 {} us",
+        report.e2e_us.p50, report.e2e_us.p90, report.e2e_us.p99, report.e2e_us.p999
+    );
+
+    let (_, after) = http_get(addr, "/metrics");
+    let hits = loadgen::metric_total(&after, "hec_cache_hits_total") - hits_before;
+    let misses = loadgen::metric_total(&after, "hec_cache_misses_total") - misses_before;
+    let classified = hits + misses;
+    let hit_rate = if classified > 0.0 { hits / classified } else { 0.0 };
+    let floor = loadgen::hit_rate_floor(cfg.pool, shards, classified as usize);
+    println!(
+        "  cache: {hits:.0} hits / {misses:.0} misses (rate {:.1}%, floor {:.1}%)",
+        hit_rate * 100.0,
+        floor * 100.0
+    );
+
+    // Server-side percentile upper bounds from the histogram buckets.
+    let buckets = latency_buckets(&after);
+    let server_p = |q: f64| bucket_percentile(&buckets, q);
+    println!(
+        "  server (bucket upper bounds): p50 {} us, p90 {} us, p99 {} us, p99.9 {} us",
+        server_p(0.50),
+        server_p(0.90),
+        server_p(0.99),
+        server_p(0.999)
+    );
+
+    // ---- acceptance -----------------------------------------------------
+    assert!(report.ok > 0, "no request succeeded");
+    assert!(
+        report.transport_errors == 0,
+        "transport errors against a local gateway: {}",
+        report.transport_errors
+    );
+    assert!(hits > 0.0, "Zipf skew must produce cache hits:\n{after}");
+    assert!(
+        misses <= (cfg.pool * shards) as f64,
+        "each shard may miss each pool image at most once: \
+         {misses:.0} misses > {} x {}",
+        cfg.pool,
+        shards
+    );
+    assert!(
+        hit_rate >= floor,
+        "hit rate {hit_rate:.3} below the Zipf-implied floor {floor:.3}"
+    );
+
+    // ---- report ---------------------------------------------------------
+    let mut service: Vec<u64> = Vec::new();
+    let mut e2e: Vec<u64> = Vec::new();
+    // Percentiles are already folded; reconstruct representative rows from
+    // the summary figures for the BenchResult table.
+    for p in [
+        report.service_us.p50,
+        report.service_us.p90,
+        report.service_us.p99,
+        report.service_us.p999,
+    ] {
+        service.push(p);
+    }
+    for p in [
+        report.e2e_us.p50,
+        report.e2e_us.p90,
+        report.e2e_us.p99,
+        report.e2e_us.p999,
+    ] {
+        e2e.push(p);
+    }
+    let rows_owned = [
+        duration_row("client_service_percentiles", &service),
+        duration_row("client_e2e_percentiles", &e2e),
+        duration_row(
+            "server_bucket_percentiles",
+            &[server_p(0.50), server_p(0.90), server_p(0.99), server_p(0.999)],
+        ),
+    ];
+    let rows: Vec<&BenchResult> = rows_owned.iter().collect();
+    let out = std::env::var("HEC_BENCH_OUT").unwrap_or_else(|_| "BENCH_loadtest.json".into());
+    benchkit::write_json_report(
+        &out,
+        "hec/loadtest/v1",
+        &[
+            ("requests", Value::Num(cfg.requests as f64)),
+            ("offered_rps", Value::Num(cfg.rps)),
+            ("pool", Value::Num(cfg.pool as f64)),
+            ("zipf_s", Value::Num(cfg.zipf_s)),
+            ("shards", Value::Num(shards as f64)),
+            ("cache_capacity", Value::Num(CACHE_CAPACITY as f64)),
+            ("smoke", Value::Bool(smoke)),
+            ("external", Value::Bool(external.is_some())),
+            ("load", report.to_value()),
+            ("cache_hits", Value::Num(hits)),
+            ("cache_misses", Value::Num(misses)),
+            ("cache_hit_rate", Value::Num(hit_rate)),
+            ("cache_hit_rate_floor", Value::Num(floor)),
+            ("server_p50_us", Value::Num(server_p(0.50) as f64)),
+            ("server_p90_us", Value::Num(server_p(0.90) as f64)),
+            ("server_p99_us", Value::Num(server_p(0.99) as f64)),
+            ("server_p999_us", Value::Num(server_p(0.999) as f64)),
+            (
+                "row_semantics",
+                Value::Str(
+                    "rows summarise the percentile ladder (p50/p90/p99/p99.9) of each view; \
+                     authoritative figures are the load/client_* and server_*_us extras"
+                        .to_string(),
+                ),
+            ),
+        ],
+        &rows,
+    )
+    .expect("write BENCH_loadtest.json");
+    println!("\nwrote {out}");
+
+    if let Some((set, gw)) = booted {
+        gw.shutdown();
+        set.shutdown();
+    }
+    println!("loadtest: PASS (hit rate {:.1}% >= floor {:.1}%)", hit_rate * 100.0, floor * 100.0);
+}

@@ -93,7 +93,12 @@ pub struct ClassifyRequest {
     /// Queue deadline in milliseconds, measured from submit.  A request
     /// still queued when its deadline elapses fails fast with
     /// `DEADLINE_EXCEEDED` instead of being computed for a caller that has
-    /// already given up (`0` means "already too late" — it always expires).
+    /// already given up.  Must be `>= 1`: every ingest decoder (JSON tree,
+    /// streaming, binary meta) rejects an explicit `0` as
+    /// `INVALID_ARGUMENT` — a zero deadline is indistinguishable from a
+    /// client bug, not a request that could ever be served.  (In-process
+    /// callers constructing `Some(0)` directly still get the "already too
+    /// late" expiry semantics — the queue drop compares with `>=`.)
     /// Additive v1 field; `None` (the default) never expires.
     pub deadline_ms: Option<u64>,
 }
@@ -157,6 +162,12 @@ pub struct ClassifyResult {
     /// mode (no tenants, nothing published) — the pre-registry serving
     /// shape.
     pub store: Option<(std::sync::Arc<str>, u64)>,
+    /// Whether the feature cache served this item (`Some(true)` = hit, the
+    /// front-end was skipped and `front_end_nj` is 0; `Some(false)` = the
+    /// cold path ran).  `None` when the cache is disabled or the item was
+    /// not cache-eligible — the wire form then stays byte-identical to
+    /// cache-free builds.
+    pub cache: Option<bool>,
 }
 
 impl ClassifyResult {
@@ -206,6 +217,13 @@ pub struct ClassifyResponse {
     /// bootstrap store a shard built itself).  Additive v1 field; same
     /// `None` rule as [`ClassifyResponse::store`].
     pub store_version: Option<u64>,
+    /// Whether the per-shard feature cache served this request (`true` =
+    /// content-hash hit, the CNN front-end was skipped and `front_end_nj`
+    /// is 0).  Additive v1 field; `None` whenever the cache is disabled or
+    /// the request was not cache-eligible (softmax backend,
+    /// `return_features`, tenant-routed store) — in that case the wire
+    /// form is byte-identical to cache-free builds.
+    pub cache: Option<bool>,
 }
 
 impl ClassifyResponse {
@@ -242,6 +260,10 @@ pub enum ErrorCode {
     /// The resolved tenant is at its configured in-flight quota — retry
     /// after an outstanding request resolves.
     QuotaExceeded,
+    /// A bodied request (POST/PUT) arrived with neither `Content-Length`
+    /// nor `Transfer-Encoding: chunked` — the gateway cannot frame the
+    /// body, so it refuses instead of silently reading it as empty.
+    LengthRequired,
     /// Unexpected internal failure (engine error, dropped response, ...).
     Internal,
 }
@@ -259,6 +281,7 @@ impl ErrorCode {
             ErrorCode::MethodNotAllowed => "METHOD_NOT_ALLOWED",
             ErrorCode::DeadlineExceeded => "DEADLINE_EXCEEDED",
             ErrorCode::QuotaExceeded => "QUOTA_EXCEEDED",
+            ErrorCode::LengthRequired => "LENGTH_REQUIRED",
             ErrorCode::Internal => "INTERNAL",
         }
     }
@@ -276,6 +299,7 @@ impl ErrorCode {
             "METHOD_NOT_ALLOWED" => ErrorCode::MethodNotAllowed,
             "DEADLINE_EXCEEDED" => ErrorCode::DeadlineExceeded,
             "QUOTA_EXCEEDED" => ErrorCode::QuotaExceeded,
+            "LENGTH_REQUIRED" => ErrorCode::LengthRequired,
             "INTERNAL" => ErrorCode::Internal,
             _ => return None,
         })
@@ -298,6 +322,7 @@ impl ErrorCode {
             ErrorCode::NotFound => 404,
             ErrorCode::MethodNotAllowed => 405,
             ErrorCode::QueueFull | ErrorCode::QuotaExceeded => 429,
+            ErrorCode::LengthRequired => 411,
             ErrorCode::BackendUnavailable | ErrorCode::ServerStopped => 503,
             ErrorCode::DeadlineExceeded => 504,
             ErrorCode::Internal => 500,
@@ -355,6 +380,7 @@ mod tests {
             ErrorCode::MethodNotAllowed,
             ErrorCode::DeadlineExceeded,
             ErrorCode::QuotaExceeded,
+            ErrorCode::LengthRequired,
             ErrorCode::Internal,
         ] {
             assert_eq!(ErrorCode::parse(code.as_str()), Some(code));

@@ -310,7 +310,13 @@ fn read_deadline_ms(p: &mut PullParser) -> Result<Result<u64, ApiError>, ParseEr
     if !(f.fract() == 0.0 && f >= 0.0) {
         return Ok(Err(bad("'deadline_ms' must be a non-negative integer")));
     }
-    Ok(Ok(f as u64))
+    let d = f as u64;
+    if d == 0 {
+        return Ok(Err(bad(
+            "'deadline_ms' must be >= 1 (omit it for no deadline)",
+        )));
+    }
+    Ok(Ok(d))
 }
 
 #[cfg(test)]

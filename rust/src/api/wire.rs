@@ -66,12 +66,15 @@ impl ClassifyRequest {
             );
         }
         if let Some(d) = obj.get("deadline_ms") {
-            req.deadline_ms = Some(
-                d.as_f64()
-                    .filter(|f| f.fract() == 0.0 && *f >= 0.0)
-                    .ok_or_else(|| bad("'deadline_ms' must be a non-negative integer"))?
-                    as u64,
-            );
+            let d = d
+                .as_f64()
+                .filter(|f| f.fract() == 0.0 && *f >= 0.0)
+                .ok_or_else(|| bad("'deadline_ms' must be a non-negative integer"))?
+                as u64;
+            if d == 0 {
+                return Err(bad("'deadline_ms' must be >= 1 (omit it for no deadline)"));
+            }
+            req.deadline_ms = Some(d);
         }
         Ok(req)
     }
@@ -174,6 +177,9 @@ impl ClassifyResponse {
         if let Some(v) = self.store_version {
             m.insert("store_version".to_string(), Value::Num(v as f64));
         }
+        if let Some(c) = self.cache {
+            m.insert("cache".to_string(), Value::Bool(c));
+        }
         Value::Obj(m)
     }
 
@@ -247,6 +253,7 @@ impl ClassifyResponse {
                 .map(str::to_string),
             store: obj.get("store").and_then(Value::as_str).map(str::to_string),
             store_version: obj.get("store_version").and_then(Value::as_u64),
+            cache: obj.get("cache").and_then(Value::as_bool),
         })
     }
 }
@@ -320,6 +327,7 @@ mod tests {
             (r#"{"image": [1], "request_id": 7}"#, "request_id"),
             (r#"{"image": [1], "deadline_ms": -5}"#, "deadline_ms"),
             (r#"{"image": [1], "deadline_ms": 1.5}"#, "deadline_ms"),
+            (r#"{"image": [1], "deadline_ms": 0}"#, "deadline_ms"),
             (r#"[1, 2]"#, "object"),
         ] {
             let err = ClassifyRequest::from_value(&jsonlite::parse(body).unwrap())
@@ -359,6 +367,7 @@ mod tests {
             backend_state: Some("digital_fallback".into()),
             store: Some("default".into()),
             store_version: Some(3),
+            cache: Some(true),
         };
         let text = resp.to_value().to_json();
         let v = jsonlite::parse(&text).unwrap();
@@ -377,6 +386,7 @@ mod tests {
         assert_eq!(back.backend_state.as_deref(), Some("digital_fallback"));
         assert_eq!(back.store.as_deref(), Some("default"));
         assert_eq!(back.store_version, Some(3));
+        assert_eq!(back.cache, Some(true));
         // Un-sharded / ladder-off / single-default-store responses omit the
         // optional fields and decode back to None (v1 wire compatibility is
         // additive).
@@ -386,18 +396,21 @@ mod tests {
         unsharded.backend_state = None;
         unsharded.store = None;
         unsharded.store_version = None;
+        unsharded.cache = None;
         let v = jsonlite::parse(&unsharded.to_value().to_json()).unwrap();
         assert!(v.get("shard").is_none());
         assert!(v.get("degraded").is_none());
         assert!(v.get("backend_state").is_none());
         assert!(v.get("store").is_none());
         assert!(v.get("store_version").is_none());
+        assert!(v.get("cache").is_none());
         let back = ClassifyResponse::from_value(&v).unwrap();
         assert_eq!(back.shard, None);
         assert_eq!(back.degraded, None);
         assert_eq!(back.backend_state, None);
         assert_eq!(back.store, None);
         assert_eq!(back.store_version, None);
+        assert_eq!(back.cache, None);
     }
 
     #[test]

@@ -334,6 +334,28 @@ fn validate_tenants(tenants: &[TenantSpec]) -> Result<()> {
     Ok(())
 }
 
+/// Per-shard feature cache (see `crate::coordinator::cache`).  Defaults to
+/// *off*: with `enabled == false` serving is bitwise identical to a build
+/// without the cache — no extra RNG draws, no response field, no metrics
+/// series.
+#[derive(Debug, Clone)]
+pub struct CacheConfig {
+    /// Whether repeated images (by content hash) skip the CNN front-end.
+    pub enabled: bool,
+    /// Max cached feature vectors per shard; a full cache evicts a
+    /// seeded-deterministic victim.
+    pub capacity: usize,
+}
+
+impl Default for CacheConfig {
+    fn default() -> Self {
+        CacheConfig {
+            enabled: false,
+            capacity: 1024,
+        }
+    }
+}
+
 /// ACAM back-end knobs.
 #[derive(Debug, Clone)]
 pub struct AcamConfig {
@@ -385,6 +407,7 @@ pub struct ServeConfig {
     pub shards: ShardsConfig,
     pub faults: FaultsConfig,
     pub stores: StoresConfig,
+    pub cache: CacheConfig,
 }
 
 impl Default for ServeConfig {
@@ -402,6 +425,7 @@ impl Default for ServeConfig {
             shards: ShardsConfig::default(),
             faults: FaultsConfig::default(),
             stores: StoresConfig::default(),
+            cache: CacheConfig::default(),
         }
     }
 }
@@ -503,6 +527,14 @@ impl ServeConfig {
                         quota,
                     });
                 }
+            }
+        }
+        if let Some(c) = doc.get("cache") {
+            if let Some(v) = c.get("enabled").and_then(|v| v.as_bool()) {
+                cfg.cache.enabled = v;
+            }
+            if let Some(v) = c.get("capacity").and_then(|v| v.as_usize()) {
+                cfg.cache.capacity = v;
             }
         }
         if let Some(a) = doc.get("acam") {
@@ -610,6 +642,20 @@ impl ServeConfig {
             .unwrap_or(0)
     }
 
+    /// Effective feature-cache capacity: `Some(capacity)` when the cache is
+    /// on, `None` when off.  Precedence: explicit `cache.enabled` (config
+    /// file / `--cache`) > `HEC_CACHE` env (a positive capacity enables; `0`
+    /// or unset leaves it off) > off.
+    pub fn resolve_cache(&self) -> Option<usize> {
+        if self.cache.enabled {
+            return Some(self.cache.capacity);
+        }
+        std::env::var("HEC_CACHE")
+            .ok()
+            .and_then(|v| v.trim().parse::<usize>().ok())
+            .filter(|&n| n > 0)
+    }
+
     /// Effective template-store directory.  Precedence: explicit
     /// `stores.dir` (config file / `--stores-dir`) > `HEC_STORES_DIR` env >
     /// none.
@@ -683,6 +729,9 @@ impl ServeConfig {
             return Err(Error::Config(
                 "stores.refit_per_class must be positive".into(),
             ));
+        }
+        if self.cache.enabled && self.cache.capacity == 0 {
+            return Err(Error::Config("cache.capacity must be positive".into()));
         }
         validate_tenants(&self.stores.tenants)?;
         // Surface a malformed plan spec at load time, not first use.
@@ -952,6 +1001,30 @@ mod tests {
         assert!(bad.validate().is_err());
         let mut bad = ServeConfig::default();
         bad.stores.refit_per_class = 0;
+        assert!(bad.validate().is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn cache_config_loads_resolves_and_validates() {
+        let dir = std::env::temp_dir().join(format!("hec-cachecfg-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("serve.json");
+        std::fs::write(&path, r#"{"cache": {"enabled": true, "capacity": 64}}"#).unwrap();
+        let cfg = ServeConfig::load(&path).unwrap();
+        assert!(cfg.cache.enabled);
+        assert_eq!(cfg.cache.capacity, 64);
+        assert_eq!(cfg.resolve_cache(), Some(64));
+
+        // Defaults: off (unless HEC_CACHE is set, which the suite never
+        // does — same caveat as the other env-resolved knobs).
+        let d = ServeConfig::default();
+        assert!(!d.cache.enabled);
+        assert_eq!(d.cache.capacity, 1024);
+
+        let mut bad = ServeConfig::default();
+        bad.cache.enabled = true;
+        bad.cache.capacity = 0;
         assert!(bad.validate().is_err());
         std::fs::remove_dir_all(&dir).ok();
     }

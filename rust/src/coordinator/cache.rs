@@ -1,0 +1,251 @@
+//! Content-hash feature cache: skip the expensive CNN front-end on repeats.
+//!
+//! The paper's energy split is the whole story here: the CNN front-end
+//! costs 96.23 nJ per classification while the ACAM back-end costs 1.45 nJ
+//! (PAPER.md).  A repeated image recognised by content hash therefore skips
+//! ~98.5% of the modelled energy and nearly all of the compute — but only
+//! the *front half*.  The cache stores the **binarised feature vector**
+//! (the packed bits the matcher consumes), and the back-end always re-runs
+//! against the live template store, so:
+//!
+//! * template-store hot-swaps (PR 8) serve the new templates on the very
+//!   next request, hit or miss;
+//! * the degradation ladder (PR 7) scores hits through whatever backend
+//!   state the shard is in (`digital_fallback` included);
+//! * the ACAM variability model draws from the shard RNG in the same order
+//!   on a hit as on a miss, keeping hit-vs-miss predictions bitwise equal.
+//!
+//! Keys are an FNV-1a 64-bit hash of the raw little-endian pixel bytes —
+//! content, not identity, so the same image uploaded twice hits regardless
+//! of which connection or batch it arrived in.  Capacity is bounded;
+//! eviction picks a seeded-deterministic random victim (no recency
+//! bookkeeping on the hot path, reproducible across reruns).  The cached
+//! bits are a function of the *current* store's thresholds, so the owner
+//! must [`FeatureCache::flush`] whenever the default store's version (or
+//! the engine itself) changes.
+//!
+//! Determinism contract: with the cache **off** nothing here runs — serving
+//! is bitwise identical to a build without this module.  With the cache
+//! **on**, lookups never touch any RNG shared with scoring; the eviction
+//! RNG is private to the cache.
+
+use std::collections::HashMap;
+
+use crate::rng::Rng;
+
+/// FNV-1a 64-bit over raw bytes (the byte-slice sibling of
+/// [`crate::coordinator::shard::fnv1a`], which hashes routing-key strings).
+pub fn fnv1a_bytes(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Content hash of an image: FNV-1a over the pixel buffer's little-endian
+/// `f32` bytes.  Byte-exact, so `-0.0` and `0.0` hash differently — two
+/// buffers collide only when their wire representations are identical,
+/// which is exactly when the front-end would produce identical features.
+pub fn content_hash(image: &[f32]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for px in image {
+        for b in px.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    h
+}
+
+/// Bounded map from content hash to the binarised feature vector, with
+/// seeded-deterministic random eviction and local hit/miss/eviction
+/// counters (the worker copies them into the shared atomic
+/// [`crate::coordinator::Metrics`] after each batch).
+pub struct FeatureCache {
+    capacity: usize,
+    map: HashMap<u64, Vec<u8>>,
+    /// Insertion-order key list backing O(1) random eviction
+    /// (`swap_remove`); always mirrors `map`'s key set.
+    keys: Vec<u64>,
+    rng: Rng,
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+}
+
+impl FeatureCache {
+    /// `capacity` must be positive (enforced upstream by
+    /// `ServeConfig::validate` / `resolve_cache`); `seed` makes the
+    /// eviction sequence reproducible (per-shard seeds keep shards'
+    /// victim choices independent).
+    pub fn new(capacity: usize, seed: u64) -> FeatureCache {
+        FeatureCache {
+            capacity: capacity.max(1),
+            map: HashMap::with_capacity(capacity.max(1).min(4096)),
+            keys: Vec::new(),
+            rng: Rng::new(seed),
+            hits: 0,
+            misses: 0,
+            evictions: 0,
+        }
+    }
+
+    /// Look up cached binarised bits by content hash, counting the hit or
+    /// miss.  Returns a clone (a few dozen bytes — `n_features / 8`), so
+    /// the caller never borrows across the subsequent insert.
+    pub fn lookup(&mut self, key: u64) -> Option<Vec<u8>> {
+        match self.map.get(&key) {
+            Some(bits) => {
+                self.hits += 1;
+                Some(bits.clone())
+            }
+            None => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Insert freshly-computed bits, evicting one seeded-random resident
+    /// entry when at capacity.  Re-inserting a resident key overwrites in
+    /// place (no eviction, no growth).
+    pub fn insert(&mut self, key: u64, bits: Vec<u8>) {
+        if self.map.insert(key, bits).is_some() {
+            return; // overwrite: key list already holds it
+        }
+        self.keys.push(key);
+        if self.keys.len() > self.capacity {
+            // Evict a random *other* entry: the victim index is drawn over
+            // the old residents so the just-inserted key survives.
+            let victim_idx = self.rng.below(self.keys.len() - 1);
+            let victim = self.keys.swap_remove(victim_idx);
+            self.map.remove(&victim);
+            self.evictions += 1;
+        }
+    }
+
+    /// Drop every entry (counters survive — they are monotone totals).
+    /// Called on engine rebuild and whenever the default template store's
+    /// version changes: cached bits are a function of the store's
+    /// binarisation thresholds, so a swap invalidates them all.
+    pub fn flush(&mut self) {
+        self.map.clear();
+        self.keys.clear();
+    }
+
+    /// Copy the local counters into the shared atomic metrics (single
+    /// writer — the worker thread — so plain `store` is exact).  The cache
+    /// outlives worker rebuilds in the shard loop, so the counter totals
+    /// stay monotone across panic-restarts while the entries gauge drops to
+    /// the post-flush resident count.
+    pub fn publish_to(&self, m: &super::Metrics) {
+        use std::sync::atomic::Ordering::Relaxed;
+        m.cache_hits.store(self.hits, Relaxed);
+        m.cache_misses.store(self.misses, Relaxed);
+        m.cache_evictions.store(self.evictions, Relaxed);
+        m.cache_entries.store(self.len() as u64, Relaxed);
+    }
+
+    /// Resident entries (the `hec_cache_entries` gauge).
+    pub fn len(&self) -> usize {
+        self.keys.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.keys.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv1a_bytes_matches_reference_vectors() {
+        // Standard FNV-1a 64 test vectors.
+        assert_eq!(fnv1a_bytes(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a_bytes(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a_bytes(b"foobar"), 0x8594_4171_f739_67e8);
+    }
+
+    #[test]
+    fn content_hash_is_byte_exact_over_le_f32() {
+        let img = [0.5f32, -1.25, 3.0];
+        let mut bytes = Vec::new();
+        for px in img {
+            bytes.extend_from_slice(&px.to_le_bytes());
+        }
+        assert_eq!(content_hash(&img), fnv1a_bytes(&bytes));
+        // Sign of zero is content: -0.0 differs from 0.0 on the wire.
+        assert_ne!(content_hash(&[0.0]), content_hash(&[-0.0]));
+        assert_ne!(content_hash(&[0.5, 0.25]), content_hash(&[0.25, 0.5]));
+    }
+
+    #[test]
+    fn lookup_counts_hits_and_misses() {
+        let mut c = FeatureCache::new(8, 1);
+        let k = content_hash(&[1.0, 2.0]);
+        assert!(c.lookup(k).is_none());
+        c.insert(k, vec![0b1010]);
+        assert_eq!(c.lookup(k).as_deref(), Some(&[0b1010u8][..]));
+        assert_eq!((c.hits, c.misses, c.evictions), (1, 1, 0));
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn capacity_bounds_and_eviction_is_deterministic() {
+        let run = |seed: u64| {
+            let mut c = FeatureCache::new(4, seed);
+            for i in 0..32u64 {
+                c.insert(i, vec![i as u8]);
+            }
+            let mut resident: Vec<u64> = c.keys.clone();
+            resident.sort_unstable();
+            (resident, c.evictions, c.len())
+        };
+        let (r1, ev1, len1) = run(7);
+        let (r2, ev2, len2) = run(7);
+        assert_eq!(r1, r2, "same seed, same victims");
+        assert_eq!(ev1, 32 - 4);
+        assert_eq!((len1, len2), (4, 4));
+        // A different seed picks a different victim sequence (astronomically
+        // likely for 28 draws).
+        let (r3, _, _) = run(8);
+        assert_ne!(r1, r3);
+    }
+
+    #[test]
+    fn newest_entry_survives_its_own_eviction() {
+        let mut c = FeatureCache::new(2, 3);
+        for i in 0..100u64 {
+            c.insert(i, vec![]);
+            assert!(c.lookup(i).is_some(), "entry {i} evicted itself");
+            c.hits = 0; // keep the probe out of the counters under test
+        }
+    }
+
+    #[test]
+    fn reinsert_overwrites_without_eviction() {
+        let mut c = FeatureCache::new(2, 1);
+        c.insert(1, vec![1]);
+        c.insert(2, vec![2]);
+        c.insert(1, vec![9]);
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.evictions, 0);
+        assert_eq!(c.lookup(1).as_deref(), Some(&[9u8][..]));
+    }
+
+    #[test]
+    fn flush_clears_entries_but_keeps_totals() {
+        let mut c = FeatureCache::new(4, 1);
+        c.insert(1, vec![1]);
+        c.lookup(1);
+        c.lookup(2);
+        c.flush();
+        assert!(c.is_empty());
+        assert_eq!((c.hits, c.misses), (1, 1));
+        assert!(c.lookup(1).is_none(), "flushed entries are gone");
+    }
+}

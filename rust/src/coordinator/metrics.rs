@@ -130,6 +130,14 @@ pub struct Metrics {
     /// End-to-end request latency split by serving backend (indexed by
     /// [`backend_index`]; see [`BACKEND_LABELS`]).
     latency_by_backend: [Histogram; 4],
+    /// Feature-cache hit/miss/eviction counters and the resident-entry
+    /// gauge.  Only rendered into `/metrics` when the cache is enabled
+    /// ([`prometheus_cache`]), so cache-off exposition text stays
+    /// byte-identical to a build without the cache.
+    pub cache_hits: AtomicU64,
+    pub cache_misses: AtomicU64,
+    pub cache_evictions: AtomicU64,
+    pub cache_entries: AtomicU64,
     /// Modelled energy, micro-nJ integer (nJ * 1e3) to stay in atomics.
     energy_mnj: AtomicU64,
 }
@@ -475,6 +483,58 @@ pub fn prometheus_histograms(
     }
 }
 
+/// Render the feature-cache Prometheus series: hit/miss/eviction counters
+/// plus the resident-entry gauge.  `labeled` adds a `shard="i"` label per
+/// entry (the sharded surface); `false` renders the single-pipeline surface
+/// unlabeled.  Appended by `/metrics` **only when the cache is enabled** so
+/// a cache-off deployment's exposition text stays byte-identical to a build
+/// without the cache.
+pub fn prometheus_cache(
+    shards: &[std::sync::Arc<Metrics>],
+    labeled: bool,
+    out: &mut String,
+) {
+    use std::fmt::Write as _;
+    type Pick = fn(&Metrics) -> u64;
+    let series: [(&str, &str, &str, Pick); 4] = [
+        (
+            "hec_cache_hits_total",
+            "counter",
+            "Feature-cache hits (CNN front-end skipped, front_end_nj charged 0)",
+            |m| m.cache_hits.load(Ordering::Relaxed),
+        ),
+        (
+            "hec_cache_misses_total",
+            "counter",
+            "Feature-cache misses (full front-end run, result inserted)",
+            |m| m.cache_misses.load(Ordering::Relaxed),
+        ),
+        (
+            "hec_cache_evictions_total",
+            "counter",
+            "Feature-cache evictions (capacity reached, seeded-random victim)",
+            |m| m.cache_evictions.load(Ordering::Relaxed),
+        ),
+        (
+            "hec_cache_entries",
+            "gauge",
+            "Feature-cache entries currently resident",
+            |m| m.cache_entries.load(Ordering::Relaxed),
+        ),
+    ];
+    for (name, kind, help, pick) in series {
+        let _ = writeln!(out, "# HELP {name} {help}");
+        let _ = writeln!(out, "# TYPE {name} {kind}");
+        for (i, m) in shards.iter().enumerate() {
+            if labeled {
+                let _ = writeln!(out, "{name}{{shard=\"{i}\"}} {}", pick(m));
+            } else {
+                let _ = writeln!(out, "{name} {}", pick(m));
+            }
+        }
+    }
+}
+
 /// Render the degradation-ladder Prometheus series (`shard`-labelled), one
 /// tuple per shard: `(backend_state, last canary accuracy, re-programs)`.
 /// Appended after [`prometheus_shards`] by the sharded `/metrics` — but
@@ -805,6 +865,35 @@ mod tests {
             single.contains("hec_backend_latency_microseconds_count{backend=\"acam\"} 1"),
             "{single}"
         );
+        assert!(!single.contains("shard="), "{single}");
+    }
+
+    #[test]
+    fn prometheus_cache_block_renders_both_shapes() {
+        let a = std::sync::Arc::new(Metrics::default());
+        a.cache_hits.fetch_add(7, Ordering::Relaxed);
+        a.cache_misses.fetch_add(3, Ordering::Relaxed);
+        a.cache_entries.fetch_add(3, Ordering::Relaxed);
+        let b = std::sync::Arc::new(Metrics::default());
+        b.cache_evictions.fetch_add(1, Ordering::Relaxed);
+        let mut out = String::new();
+        prometheus_cache(&[a.clone(), b], true, &mut out);
+        for needle in [
+            "hec_cache_hits_total{shard=\"0\"} 7",
+            "hec_cache_misses_total{shard=\"0\"} 3",
+            "hec_cache_evictions_total{shard=\"1\"} 1",
+            "hec_cache_entries{shard=\"0\"} 3",
+            "# TYPE hec_cache_hits_total counter",
+            "# TYPE hec_cache_entries gauge",
+        ] {
+            assert!(out.contains(needle), "missing {needle:?} in:\n{out}");
+        }
+        // One HELP header per metric name, not per shard.
+        assert_eq!(out.matches("# HELP hec_cache_hits_total").count(), 1);
+        // Unlabelled single-pipeline rendering drops the shard label.
+        let mut single = String::new();
+        prometheus_cache(&[a], false, &mut single);
+        assert!(single.contains("hec_cache_hits_total 7"), "{single}");
         assert!(!single.contains("shard="), "{single}");
     }
 

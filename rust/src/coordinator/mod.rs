@@ -6,6 +6,11 @@
 //!   PJRT, via the [`crate::runtime::FrontEnd`] trait) -> binarise ->
 //!   back-end (ACAM sim / digital matcher / softmax baseline) -> class +
 //!   energy;
+//! * [`cache`] — per-worker content-hash feature cache: a hit skips the
+//!   CNN front-end (96.23 nJ) and reuses the cached binarised feature
+//!   vector, while the cheap back-end (1.45 nJ) always re-runs against the
+//!   live template store so hot-swaps and the degradation ladder stay
+//!   correct;
 //! * [`server`] — the event loop: bounded request queue with backpressure, a
 //!   dedicated worker thread owning the engine state, async-friendly
 //!   handles speaking the v1 [`crate::api`] types;
@@ -22,6 +27,7 @@
 //! sharded [`shard::ShardHandle`] — without knowing which.
 
 pub mod batcher;
+pub mod cache;
 pub mod metrics;
 pub mod oneshot;
 pub mod pipeline;

@@ -494,9 +494,252 @@ impl Pipeline {
                 } else {
                     None
                 },
+                cache: None,
             });
         }
         Ok(out)
+    }
+
+    /// [`Pipeline::classify_batch_routed`] through a content-hash feature
+    /// cache (see [`crate::coordinator::cache`]): a hit skips the CNN
+    /// front-end entirely — the cached **binarised** feature vector goes
+    /// straight to the live matcher, `front_end_nj` is charged as 0, and
+    /// the result carries `cache: Some(true)`.  Misses run the cold path,
+    /// populate the cache, and carry `Some(false)`.
+    ///
+    /// Cache-eligible items are feature-path requests on the **default**
+    /// store with no raw-feature echo: softmax requests never touch the
+    /// matcher, `return_features` needs the real-valued maps a hit does not
+    /// retain, and tenant-routed stores binarise under their own thresholds
+    /// (all three bypass with `cache: None`).  The back-end consumes the
+    /// shard RNG in the same per-item order on hits as on misses, so
+    /// hit-vs-miss predictions are bitwise identical; only the engine
+    /// invocation (and its 96.23 nJ) disappears.
+    ///
+    /// The cache-off serving path never calls this method — it stays on
+    /// [`Pipeline::classify_batch_routed`], bitwise identical to a build
+    /// without the cache.
+    pub fn classify_batch_cached(
+        &mut self,
+        images: &[f32],
+        n: usize,
+        opts: &[ClassifyOptions],
+        routes: &[Option<Arc<str>>],
+        cache: &mut crate::coordinator::cache::FeatureCache,
+    ) -> Result<Vec<ClassifyResult>> {
+        if opts.len() != n {
+            return Err(Error::Request(format!(
+                "{} option sets for a batch of {n}",
+                opts.len()
+            )));
+        }
+        let num_classes = self.store.num_classes;
+        let resolved: Vec<Backend> = opts
+            .iter()
+            .map(|o| o.backend.unwrap_or(self.backend))
+            .collect();
+        for &b in &resolved {
+            if !self.backend_available(b) {
+                return Err(Error::Config(format!(
+                    "backend '{}' is not provisioned in this deployment",
+                    b.name()
+                )));
+            }
+        }
+        let img_len = self.image_len();
+
+        // Per-item cache consult (hits and misses both counted here, in
+        // item order, so the counters are deterministic too).
+        let mut keys: Vec<Option<u64>> = Vec::with_capacity(n);
+        let mut cached: Vec<Option<Vec<u8>>> = Vec::with_capacity(n);
+        for (i, (o, &b)) in opts.iter().zip(&resolved).enumerate() {
+            let route = routes.get(i).and_then(|r| r.as_ref());
+            let eligible = b != Backend::Softmax && !o.return_features && route.is_none();
+            if !eligible {
+                keys.push(None);
+                cached.push(None);
+                continue;
+            }
+            let key =
+                crate::coordinator::cache::content_hash(&images[i * img_len..(i + 1) * img_len]);
+            cached.push(cache.lookup(key));
+            keys.push(Some(key));
+        }
+
+        // Cold sub-batch: items still needing the engine's feature pass.
+        let cold: Vec<usize> = (0..n)
+            .filter(|&i| {
+                cached[i].is_none()
+                    && (opts[i].return_features || resolved[i] != Backend::Softmax)
+            })
+            .collect();
+        let cold_feats = if cold.is_empty() {
+            None
+        } else {
+            let mut buf = Vec::with_capacity(cold.len() * img_len);
+            for &i in &cold {
+                buf.extend_from_slice(&images[i * img_len..(i + 1) * img_len]);
+            }
+            Some(self.extract_features(&buf, cold.len())?)
+        };
+        // Engine column of item i inside the cold feature block.
+        let cold_col = |i: usize| cold.iter().position(|&c| c == i).expect("cold item");
+
+        let needs_logits = resolved.iter().any(|&b| b == Backend::Softmax);
+        let logits = if needs_logits {
+            let l = self.engine.logits(images, n, num_classes)?;
+            if l.len() != n * num_classes {
+                return Err(Error::Backend(format!(
+                    "{} head returned {} floats, expected {}",
+                    self.engine.name(),
+                    l.len(),
+                    n * num_classes
+                )));
+            }
+            Some(l)
+        } else {
+            None
+        };
+
+        let nf = self.meta.artifacts.n_features;
+        let mut out = Vec::with_capacity(n);
+        let this = &mut *self;
+        for (i, (o, &backend)) in opts.iter().zip(&resolved).enumerate() {
+            let k = o.top_k.clamp(1, num_classes);
+            let route = routes.get(i).and_then(|r| r.as_ref());
+            let (predictions, energy, was_hit) = match backend {
+                Backend::Softmax => {
+                    let row = &logits.as_ref().expect("logits computed")
+                        [i * num_classes..(i + 1) * num_classes];
+                    let ranked = matching::rank_scores(row);
+                    let predictions: Vec<Prediction> = ranked
+                        .into_iter()
+                        .take(k)
+                        .map(|(class, score)| Prediction {
+                            class,
+                            score: score as f64,
+                        })
+                        .collect();
+                    let e = this.energy.frontend_nj(
+                        this.meta.macs.as_built.student_effective
+                            + this.meta.macs.as_built.head_ops,
+                    );
+                    (
+                        predictions,
+                        EnergyBreakdown {
+                            front_end_nj: e,
+                            back_end_nj: 0.0,
+                        },
+                        None,
+                    )
+                }
+                _ => match &cached[i] {
+                    Some(bits) => {
+                        // Hit: front-end skipped, zero front-end charge,
+                        // live matcher on the cached bits.
+                        let (p, e) = score_bits(
+                            &this.store,
+                            this.k,
+                            &mut this.acam,
+                            this.digital_fallback,
+                            &this.energy,
+                            0.0,
+                            &this.acam_var,
+                            &mut this.rng,
+                            bits,
+                            backend,
+                            k,
+                        )?;
+                        (p, e, Some(true))
+                    }
+                    None => {
+                        let col = cold_col(i);
+                        let row = &cold_feats.as_ref().expect("features computed")
+                            [col * nf..(col + 1) * nf];
+                        match route.and_then(|id| this.extras.get_mut(&**id)) {
+                            Some(b) => {
+                                let (p, e) = score_binding(
+                                    &b.store,
+                                    this.k,
+                                    &mut b.acam,
+                                    this.digital_fallback,
+                                    &this.energy,
+                                    this.e_frontend_nj,
+                                    &this.acam_var,
+                                    &mut this.rng,
+                                    row,
+                                    backend,
+                                    k,
+                                )?;
+                                (p, e, None)
+                            }
+                            None => {
+                                let bits = this.store.binarize(row);
+                                let hit_flag = match keys[i] {
+                                    Some(key) => {
+                                        cache.insert(key, bits.clone());
+                                        Some(false)
+                                    }
+                                    None => None, // return_features bypass
+                                };
+                                let (p, e) = score_bits(
+                                    &this.store,
+                                    this.k,
+                                    &mut this.acam,
+                                    this.digital_fallback,
+                                    &this.energy,
+                                    this.e_frontend_nj,
+                                    &this.acam_var,
+                                    &mut this.rng,
+                                    &bits,
+                                    backend,
+                                    k,
+                                )?;
+                                (p, e, hit_flag)
+                            }
+                        }
+                    }
+                },
+            };
+            let store_tag = if !this.advertise {
+                None
+            } else {
+                match route {
+                    None => Some(this.default_tag.clone()),
+                    Some(id) => match this.extras.get(&**id) {
+                        Some(b) => Some((Arc::clone(id), b.version)),
+                        None => Some((Arc::clone(id), 0)),
+                    },
+                }
+            };
+            out.push(ClassifyResult {
+                predictions,
+                energy,
+                backend,
+                store: store_tag,
+                features: if o.return_features {
+                    let col = cold_col(i);
+                    Some(
+                        cold_feats.as_ref().expect("features computed")
+                            [col * nf..(col + 1) * nf]
+                            .to_vec(),
+                    )
+                } else {
+                    None
+                },
+                cache: was_hit,
+            });
+        }
+        Ok(out)
+    }
+
+    /// Version of the default store binding (0 until the first publish
+    /// replaces the bootstrap store).  The serving workers compare this
+    /// across [`Pipeline::sync_stores`] to flush the feature cache on a
+    /// hot-swap — cached bits are a function of the store's binarisation
+    /// thresholds.
+    pub fn default_store_version(&self) -> u64 {
+        self.default_tag.1
     }
 
     /// Score one already-extracted feature map on a feature-domain backend
@@ -740,12 +983,46 @@ fn score_binding(
     backend: Backend,
     k: usize,
 ) -> Result<(Vec<Prediction>, EnergyBreakdown)> {
+    let bits = store.binarize(features);
+    score_bits(
+        store,
+        k_templates,
+        acam,
+        digital_fallback,
+        energy,
+        e_frontend_nj,
+        acam_var,
+        rng,
+        &bits,
+        backend,
+        k,
+    )
+}
+
+/// The back half of [`score_binding`]: score an **already-binarised**
+/// feature vector.  Split out so the feature cache can inject cached bits
+/// (with `e_frontend_nj = 0`) while the cold path keeps binarising inline —
+/// both paths share every instruction from here down, including the RNG
+/// draw order, which is what makes hit-vs-miss predictions bitwise equal.
+#[allow(clippy::too_many_arguments)]
+fn score_bits(
+    store: &TemplateStore,
+    k_templates: usize,
+    acam: &mut Option<AcamArray>,
+    digital_fallback: bool,
+    energy: &EnergyModel,
+    e_frontend_nj: f64,
+    acam_var: &Variability,
+    rng: &mut crate::rng::Rng,
+    bits: &[u8],
+    backend: Backend,
+    k: usize,
+) -> Result<(Vec<Prediction>, EnergyBreakdown)> {
     let num_classes = store.num_classes;
     let set = store.set(k_templates)?;
-    let bits = store.binarize(features);
     let (ranked, e_backend): (Vec<(usize, f64)>, f64) = match backend {
         Backend::FeatureCount => {
-            let top = matching::classify_feature_count_topk(&bits, set, num_classes, k);
+            let top = matching::classify_feature_count_topk(bits, set, num_classes, k);
             // Digital matcher modelled at the same ACAM energy envelope
             // (it replaces the same head); report the Eq. 14 figure.
             (
@@ -773,7 +1050,7 @@ fn score_binding(
             // so ACAM-routed requests are answered by the digital Eq. 8
             // reference.  Correct, and costed at the digital matcher's
             // envelope — the analogue array contributes nothing.
-            let top = matching::classify_feature_count_topk(&bits, set, num_classes, k);
+            let top = matching::classify_feature_count_topk(bits, set, num_classes, k);
             (
                 top.into_iter().map(|(c, s)| (c, s as f64)).collect(),
                 energy.backend_nj(set.num_templates() as u64, set.num_features() as u64),
@@ -783,7 +1060,7 @@ fn score_binding(
             let arr = acam
                 .as_mut()
                 .ok_or_else(|| Error::Config("ACAM array not programmed".into()))?;
-            let search = arr.search(&binary_query_voltages(&bits));
+            let search = arr.search(&binary_query_voltages(bits));
             let mut ranked =
                 wta::rank_classes(&search.similarity, &set.class_of, num_classes, acam_var, rng);
             ranked.truncate(k);

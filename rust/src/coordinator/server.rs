@@ -248,6 +248,7 @@ pub(crate) fn deliver_batch(
                     backend_state: ladder.map(|(_, s)| s.to_string()),
                     store: res.store.as_ref().map(|(id, _)| id.to_string()),
                     store_version: res.store.as_ref().map(|(_, v)| *v),
+                    cache: res.cache,
                 }));
             }
         }
@@ -274,6 +275,10 @@ pub struct Handle {
     pub metrics: Arc<Metrics>,
     caps: Arc<Caps>,
     admin: StoreAdmin,
+    /// Whether the feature cache is enabled — gates the `hec_cache_*`
+    /// block in `/metrics` so cache-off exposition text stays byte-identical
+    /// to a cache-free build.
+    cache_on: bool,
 }
 
 impl Handle {
@@ -378,6 +383,7 @@ impl Server {
         let registry = StoreRegistry::from_config(&cfg, &meta)?;
         let admin = StoreAdmin::new(Arc::clone(&registry), Arc::new(cfg.clone()));
         let reg_worker = Arc::clone(&registry);
+        let cache_on = cfg.resolve_cache().is_some();
 
         let worker = std::thread::Builder::new()
             .name("hec-serve".into())
@@ -406,6 +412,11 @@ impl Server {
                 let mut buf: Vec<f32> = Vec::new();
                 let mut opts: Vec<ClassifyOptions> = Vec::new();
                 let mut routes: Vec<Option<Arc<str>>> = Vec::new();
+                // Content-hash feature cache (None = off: the serving loop
+                // below is then bitwise identical to a cache-free build).
+                let mut cache = cfg
+                    .resolve_cache()
+                    .map(|cap| super::cache::FeatureCache::new(cap, cfg.acam.seed ^ 0xCAC4E));
                 while let Some(mut batch) = batcher::assemble(&rx, max_batch, max_wait) {
                     let assembled = batch.len();
                     Metrics::gauge_dec(&m.queue_depth, assembled as u64);
@@ -429,16 +440,33 @@ impl Server {
                     // batches, never within one.  Publish-time validation
                     // makes adoption infallible; a failure keeps serving
                     // the previous store.
+                    let store_version = pipeline.default_store_version();
                     if let Ok(nj) = pipeline.sync_stores() {
                         if nj > 0.0 {
                             m.add_energy_nj(nj);
                         }
                     }
+                    if let Some(c) = cache.as_mut() {
+                        // Cached bits are binarised under the old store's
+                        // thresholds: a default-store swap invalidates all.
+                        if pipeline.default_store_version() != store_version {
+                            c.flush();
+                        }
+                    }
 
                     let dispatched = Instant::now();
-                    let results = pipeline
-                        .classify_batch_routed(&buf, n, &opts, &routes)
-                        .map_err(ApiError::from);
+                    let results = match cache.as_mut() {
+                        Some(c) => {
+                            let r = pipeline
+                                .classify_batch_cached(&buf, n, &opts, &routes, c)
+                                .map_err(ApiError::from);
+                            c.publish_to(&m);
+                            r
+                        }
+                        None => pipeline
+                            .classify_batch_routed(&buf, n, &opts, &routes)
+                            .map_err(ApiError::from),
+                    };
                     let compute_us = dispatched.elapsed().as_micros() as u64;
                     m.execute.record_us(compute_us);
                     deliver_batch(
@@ -457,6 +485,7 @@ impl Server {
                 metrics,
                 caps: Arc::new(caps),
                 admin,
+                cache_on,
             },
             worker: Some(worker),
         })
@@ -497,6 +526,9 @@ impl super::ClassifySurface for Handle {
     fn prometheus_text(&self) -> String {
         let mut out = self.metrics.snapshot().prometheus();
         super::metrics::prometheus_histograms(std::slice::from_ref(&self.metrics), false, &mut out);
+        if self.cache_on {
+            super::metrics::prometheus_cache(std::slice::from_ref(&self.metrics), false, &mut out);
+        }
         let reg = self.admin.registry();
         if reg.advertises() {
             reg.prometheus(&mut out);

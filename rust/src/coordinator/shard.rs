@@ -284,6 +284,10 @@ struct Inner {
     /// admission point.  Every shard shares the one registry — a publish is
     /// adopted by each shard at its next batch boundary.
     admin: StoreAdmin,
+    /// Whether the per-shard feature cache is enabled — gates the
+    /// `hec_cache_*` block in `/metrics` so cache-off exposition text stays
+    /// byte-identical to a cache-free build.
+    cache_on: bool,
 }
 
 /// Cloneable submit surface over the shard set — the sharded counterpart
@@ -404,6 +408,7 @@ impl ShardSet {
                     caps: caps.expect("count >= 1"),
                     ladder_active,
                     admin,
+                    cache_on: cfg.resolve_cache().is_some(),
                 }),
             },
             workers,
@@ -646,6 +651,9 @@ impl ClassifySurface for ShardHandle {
             .map(|s| Arc::clone(&s.metrics))
             .collect();
         prometheus_histograms(&shard_metrics, true, &mut out);
+        if self.inner.cache_on {
+            super::metrics::prometheus_cache(&shard_metrics, true, &mut out);
+        }
         if let Some(ladder) = self.shard_ladder() {
             out.push_str(&prometheus_ladder(&ladder));
         }
@@ -808,6 +816,13 @@ fn shard_worker(
     let mut buf: Vec<f32> = Vec::new();
     let mut opts: Vec<crate::api::ClassifyOptions> = Vec::new();
     let mut routes: Vec<Option<Arc<str>>> = Vec::new();
+    // Content-hash feature cache (None = off: the loop below is then
+    // bitwise identical to a cache-free build).  The cache outlives worker
+    // rebuilds so its counters stay monotone across panic-restarts; the
+    // restart path flushes the entries (the new engine invalidates them).
+    let mut cache = cfg
+        .resolve_cache()
+        .map(|cap| super::cache::FeatureCache::new(cap, cfg.acam.seed ^ 0xCAC4E));
     while let Some(mut batch) = batcher::assemble(&rx, max_batch, max_wait) {
         let assembled = batch.len();
         Metrics::gauge_dec(&m.queue_depth, assembled as u64);
@@ -834,9 +849,17 @@ fn shard_worker(
         // a publish while it is parked lands on the next batch.
         // Publish-time validation makes adoption infallible; a failure
         // keeps the previous store.
+        let store_version = pipeline.default_store_version();
         if let Ok(nj) = pipeline.sync_stores() {
             if nj > 0.0 {
                 m.add_energy_nj(nj);
+            }
+        }
+        if let Some(c) = cache.as_mut() {
+            // Cached bits are binarised under the old store's thresholds:
+            // a default-store hot-swap invalidates every entry.
+            if pipeline.default_store_version() != store_version {
+                c.flush();
             }
         }
 
@@ -877,10 +900,16 @@ fn shard_worker(
             if inject {
                 panic!("injected shard panic (ShardHooks::panic_on)");
             }
-            pipeline.classify_batch_routed(&buf, n, &opts, &routes)
+            match cache.as_mut() {
+                Some(c) => pipeline.classify_batch_cached(&buf, n, &opts, &routes, c),
+                None => pipeline.classify_batch_routed(&buf, n, &opts, &routes),
+            }
         }));
         let compute_us = dispatched.elapsed().as_micros() as u64;
         m.execute.record_us(compute_us);
+        if let Some(c) = cache.as_ref() {
+            c.publish_to(&m);
+        }
 
         match result {
             Ok(res) => {
@@ -944,6 +973,13 @@ fn shard_worker(
                     Ok(Ok((p, c))) => {
                         pipeline = p;
                         canary_bits = c;
+                        // The rebuilt engine invalidates cached bits; flush
+                        // and re-publish so the entries gauge drops to zero
+                        // while the hit/miss totals stay monotone.
+                        if let Some(fc) = cache.as_mut() {
+                            fc.flush();
+                            fc.publish_to(&m);
+                        }
                         // A restart re-programs a clean array, so the ladder
                         // returns to Healthy; the fault schedule keeps its
                         // cursor (already-fired events died with the old

@@ -176,7 +176,22 @@ pub fn read_request_with_deadline<R: BufRead>(
         }
         read_chunked_body(reader, deadline)?
     } else {
-        let content_length = content_length.unwrap_or(0);
+        // A bodied method with neither Content-Length nor chunked framing
+        // has no way to delimit its payload: reading it as empty would
+        // desync the keep-alive stream (the body bytes parse as the next
+        // request line) and surface as a misleading JSON error.  RFC 9110
+        // §8.6: 411 Length Required.  Bodyless methods (GET/HEAD/DELETE)
+        // keep their framing-free form.
+        let content_length = match content_length {
+            Some(n) => n,
+            None if method == "POST" || method == "PUT" => {
+                return Err(ReadError::Bad(
+                    411,
+                    "missing Content-Length (or chunked transfer encoding)",
+                ));
+            }
+            None => 0,
+        };
         if content_length > MAX_BODY_BYTES {
             return Err(ReadError::Bad(413, "body too large"));
         }
@@ -419,6 +434,7 @@ pub fn reason_phrase(status: u16) -> &'static str {
         404 => "Not Found",
         405 => "Method Not Allowed",
         408 => "Request Timeout",
+        411 => "Length Required",
         413 => "Payload Too Large",
         429 => "Too Many Requests",
         431 => "Request Header Fields Too Large",
@@ -531,6 +547,27 @@ mod tests {
             parse(huge.as_bytes()),
             Err(ReadError::Bad(431, _))
         ));
+    }
+
+    #[test]
+    fn bodied_method_without_framing_is_411() {
+        // POST/PUT with neither Content-Length nor chunked: 411, never a
+        // silent empty body (the stray payload would desync keep-alive).
+        assert!(matches!(
+            parse(b"POST /v1/classify HTTP/1.1\r\nHost: x\r\n\r\n{\"image\": [1]}"),
+            Err(ReadError::Bad(411, _))
+        ));
+        assert!(matches!(
+            parse(b"PUT /v1/stores/a HTTP/1.1\r\n\r\n"),
+            Err(ReadError::Bad(411, _))
+        ));
+        // Bodyless methods keep their framing-free form.
+        assert!(parse(b"GET /healthz HTTP/1.1\r\n\r\n").is_ok());
+        assert!(parse(b"DELETE /v1/stores/a HTTP/1.1\r\n\r\n").is_ok());
+        // Explicit zero-length POST stays valid.
+        let r = parse(b"POST /v1/classify HTTP/1.1\r\nContent-Length: 0\r\n\r\n").unwrap();
+        assert!(r.body.is_empty());
+        assert_eq!(reason_phrase(411), "Length Required");
     }
 
     // ---- chunked transfer encoding --------------------------------------

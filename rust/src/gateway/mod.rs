@@ -173,9 +173,14 @@ fn serve_connection<S: ClassifySurface>(stream: TcpStream, handle: &S) {
                 // 408 is the body-read deadline tripping (a stalled upload
                 // pinning the connection thread), not a malformed request —
                 // it carries the deadline code so clients can distinguish
-                // "send faster" from "fix the request".
+                // "send faster" from "fix the request".  411 is a bodied
+                // request with no framing header at all: its own stable
+                // code, because the fix (add Content-Length) differs from
+                // every other malformed-request repair.
                 let code = if status == 408 {
                     ErrorCode::DeadlineExceeded
+                } else if status == 411 {
+                    ErrorCode::LengthRequired
                 } else {
                     ErrorCode::MalformedRequest
                 };

@@ -31,6 +31,10 @@
 //!   (`POST /v1/classify`, `/v1/classify/batch`, `GET /healthz`,
 //!   `GET /metrics`) funneling into the same bounded queue as in-process
 //!   callers.
+//! * [`loadgen`] is the synthetic open-loop load generator behind the
+//!   `loadtest` bench: Zipf hot-key skew over a seeded image pool, bursty
+//!   arrivals, slow/chunked clients, per-request deadlines, and
+//!   client-side latency percentiles (`BENCH_loadtest.json`).
 //! * [`faults`] is the deterministic fault-injection subsystem: seeded
 //!   [`faults::FaultPlan`] schedules (conductance drift, stuck-at-G cells,
 //!   read-noise escalation, worker stalls) replayed against live shards,
@@ -66,6 +70,7 @@ pub mod faults;
 pub mod gateway;
 pub mod jsonlite;
 pub mod kmeans;
+pub mod loadgen;
 pub mod matching;
 pub mod rng;
 pub mod runtime;

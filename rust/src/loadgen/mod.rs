@@ -1,0 +1,619 @@
+//! Synthetic open-loop load generator for the HTTP gateway.
+//!
+//! Drives the tail-latency harness (`benches/loadtest.rs`): arrivals are
+//! scheduled on a seeded Poisson process with periodic bursts — **open
+//! loop**, so a slow server does not throttle the offered load and tail
+//! latencies include the queueing a closed loop would hide (coordinated
+//! omission).  Traffic is mixed the way the gateway actually sees it:
+//!
+//! * **Zipf hot-key skew** over a seeded pool of distinct images — repeats
+//!   are what the content-hash feature cache feeds on, and the skew pins a
+//!   predictable hit-rate floor ([`hit_rate_floor`]);
+//! * **bursts**: every `burst_every`-th arrival lands `burst_size` extra
+//!   requests at the same instant;
+//! * **slow and chunked clients**: a seeded fraction of requests dribble
+//!   their bytes or use chunked transfer encoding, exercising the
+//!   streaming decode paths under load;
+//! * **per-request deadlines** (`deadline_ms >= 1`) on a seeded fraction,
+//!   exercising the deadline-drop path.
+//!
+//! The schedule is fully determined by [`LoadgenConfig::seed`]; only wall
+//! time varies between runs.  Latency is recorded two ways per request:
+//! `service` (first byte written → response read) and `e2e` (scheduled
+//! arrival → response read), the open-loop figure the percentiles in
+//! `BENCH_loadtest.json` are built from.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::rng::Rng;
+
+/// Zipf(s) sampler over ranks `0..n` (rank 0 hottest): P(k) ∝ 1/(k+1)^s.
+/// Sampling is a binary search over the precomputed CDF — O(log n), no
+/// rejection loop, deterministic under the caller's [`Rng`].
+pub struct ZipfSampler {
+    cdf: Vec<f64>,
+}
+
+impl ZipfSampler {
+    pub fn new(n: usize, s: f64) -> ZipfSampler {
+        assert!(n > 0, "zipf over an empty pool");
+        let mut cdf = Vec::with_capacity(n);
+        let mut total = 0.0;
+        for k in 0..n {
+            total += 1.0 / ((k + 1) as f64).powf(s);
+            cdf.push(total);
+        }
+        for c in cdf.iter_mut() {
+            *c /= total;
+        }
+        ZipfSampler { cdf }
+    }
+
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        let u = rng.u01();
+        self.cdf.partition_point(|&c| c < u).min(self.cdf.len() - 1)
+    }
+}
+
+/// How one request travels: buffered JSON with Content-Length, chunked
+/// transfer encoding, or a slow client that dribbles the same buffered
+/// bytes in pieces.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Flavor {
+    Buffered,
+    Chunked,
+    Slow,
+}
+
+/// One scheduled arrival.
+#[derive(Debug, Clone)]
+pub struct Arrival {
+    /// Offset from harness start, microseconds.
+    pub at_us: u64,
+    /// Index into the image pool.
+    pub image: usize,
+    pub flavor: Flavor,
+    pub deadline_ms: Option<u64>,
+}
+
+/// Load-shape knobs.  Everything downstream of `seed` is deterministic.
+#[derive(Debug, Clone)]
+pub struct LoadgenConfig {
+    /// Distinct images in the pool (cache working-set size).
+    pub pool: usize,
+    /// Zipf exponent; 0 = uniform, ~1 = classic hot-key skew.
+    pub zipf_s: f64,
+    /// Total arrivals (bursts included).
+    pub requests: usize,
+    /// Mean offered load, requests/second (Poisson inter-arrivals).
+    pub rps: f64,
+    /// Every Nth arrival triggers a burst (0 disables bursts).
+    pub burst_every: usize,
+    /// Extra back-to-back arrivals per burst.
+    pub burst_size: usize,
+    /// Fraction of requests sent with chunked transfer encoding.
+    pub chunked_ratio: f64,
+    /// Fraction of requests sent by a deliberately slow client.
+    pub slow_ratio: f64,
+    /// Fraction of requests carrying a deadline.
+    pub deadline_ratio: f64,
+    /// The deadline those requests carry (must be >= 1).
+    pub deadline_ms: u64,
+    /// Client worker threads (arrivals are dealt round-robin).
+    pub workers: usize,
+    pub seed: u64,
+}
+
+impl Default for LoadgenConfig {
+    fn default() -> Self {
+        LoadgenConfig {
+            pool: 32,
+            zipf_s: 1.1,
+            requests: 400,
+            rps: 400.0,
+            burst_every: 50,
+            burst_size: 8,
+            chunked_ratio: 0.10,
+            slow_ratio: 0.05,
+            deadline_ratio: 0.15,
+            deadline_ms: 2_000,
+            workers: 8,
+            seed: 0x10AD,
+        }
+    }
+}
+
+impl LoadgenConfig {
+    /// A fast configuration for CI smoke runs.
+    pub fn smoke() -> Self {
+        LoadgenConfig {
+            pool: 8,
+            requests: 120,
+            rps: 300.0,
+            burst_every: 30,
+            burst_size: 4,
+            workers: 4,
+            ..Default::default()
+        }
+    }
+}
+
+/// Build the deterministic arrival schedule: Poisson inter-arrivals at
+/// `rps` with every `burst_every`-th arrival stapling `burst_size` extra
+/// requests to the same instant, Zipf-sampled image indices, and seeded
+/// flavor/deadline assignment.
+pub fn build_schedule(cfg: &LoadgenConfig) -> Vec<Arrival> {
+    assert!(cfg.deadline_ms >= 1, "deadline_ms 0 means 'expired on arrival'");
+    let zipf = ZipfSampler::new(cfg.pool, cfg.zipf_s);
+    let mut rng = Rng::new(cfg.seed);
+    let mut out = Vec::with_capacity(cfg.requests);
+    let mut t_us = 0f64;
+    let mut in_burst = 0usize;
+    for i in 0..cfg.requests {
+        if in_burst > 0 {
+            in_burst -= 1; // burst members share the arrival instant
+        } else {
+            // Exponential inter-arrival; clamp u away from 0 for ln().
+            let u = rng.u01().max(1e-12);
+            t_us += -u.ln() / cfg.rps * 1e6;
+            if cfg.burst_every > 0 && i > 0 && i % cfg.burst_every == 0 {
+                in_burst = cfg.burst_size;
+            }
+        }
+        let image = zipf.sample(&mut rng);
+        let f = rng.u01();
+        let flavor = if f < cfg.chunked_ratio {
+            Flavor::Chunked
+        } else if f < cfg.chunked_ratio + cfg.slow_ratio {
+            Flavor::Slow
+        } else {
+            Flavor::Buffered
+        };
+        let deadline_ms = (rng.u01() < cfg.deadline_ratio).then_some(cfg.deadline_ms);
+        out.push(Arrival {
+            at_us: t_us as u64,
+            image,
+            flavor,
+            deadline_ms,
+        });
+    }
+    out
+}
+
+/// The cache-hit-rate floor the schedule implies when the per-shard cache
+/// capacity covers the pool: each of `shards` workers misses each distinct
+/// image at most once, every later repeat hits.  Conservative — Zipf skew
+/// and routing locality only raise the real rate.
+pub fn hit_rate_floor(pool: usize, shards: usize, requests: usize) -> f64 {
+    if requests == 0 {
+        return 0.0;
+    }
+    (1.0 - (pool * shards) as f64 / requests as f64).max(0.0)
+}
+
+/// Latency percentile over a **sorted** sample set (nearest-rank on the
+/// scaled index, the same convention as `benchkit::summarize`).
+pub fn percentile_us(sorted: &[u64], q: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+/// Outcome tallies + client-side latency percentiles for one run.
+#[derive(Debug, Clone, Default)]
+pub struct LoadReport {
+    pub scheduled: usize,
+    pub ok: u64,
+    pub http_errors: u64,
+    pub deadline_exceeded: u64,
+    pub transport_errors: u64,
+    pub wall_secs: f64,
+    pub achieved_rps: f64,
+    /// Service-time percentiles, send → response (us).
+    pub service_us: Percentiles,
+    /// Open-loop end-to-end percentiles, scheduled arrival → response (us).
+    pub e2e_us: Percentiles,
+}
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Percentiles {
+    pub p50: u64,
+    pub p90: u64,
+    pub p99: u64,
+    pub p999: u64,
+    pub max: u64,
+}
+
+impl Percentiles {
+    pub fn from_sorted(sorted: &[u64]) -> Percentiles {
+        Percentiles {
+            p50: percentile_us(sorted, 0.50),
+            p90: percentile_us(sorted, 0.90),
+            p99: percentile_us(sorted, 0.99),
+            p999: percentile_us(sorted, 0.999),
+            max: sorted.last().copied().unwrap_or(0),
+        }
+    }
+}
+
+impl LoadReport {
+    /// JSON form for the `BENCH_loadtest.json` extras.
+    pub fn to_value(&self) -> crate::jsonlite::Value {
+        use crate::jsonlite::Value;
+        let pct = |p: &Percentiles| {
+            Value::Obj(std::collections::BTreeMap::from([
+                ("p50_us".to_string(), Value::Num(p.p50 as f64)),
+                ("p90_us".to_string(), Value::Num(p.p90 as f64)),
+                ("p99_us".to_string(), Value::Num(p.p99 as f64)),
+                ("p999_us".to_string(), Value::Num(p.p999 as f64)),
+                ("max_us".to_string(), Value::Num(p.max as f64)),
+            ]))
+        };
+        Value::Obj(std::collections::BTreeMap::from([
+            ("scheduled".to_string(), Value::Num(self.scheduled as f64)),
+            ("ok".to_string(), Value::Num(self.ok as f64)),
+            ("http_errors".to_string(), Value::Num(self.http_errors as f64)),
+            (
+                "deadline_exceeded".to_string(),
+                Value::Num(self.deadline_exceeded as f64),
+            ),
+            (
+                "transport_errors".to_string(),
+                Value::Num(self.transport_errors as f64),
+            ),
+            ("wall_secs".to_string(), Value::Num(self.wall_secs)),
+            ("achieved_rps".to_string(), Value::Num(self.achieved_rps)),
+            ("client_service".to_string(), pct(&self.service_us)),
+            ("client_e2e".to_string(), pct(&self.e2e_us)),
+        ]))
+    }
+}
+
+/// Sum every sample of a Prometheus metric family across its label sets
+/// (`hec_cache_hits_total` and `hec_cache_hits_total{shard="1"}` alike).
+/// Used by the bench and CI to assert cache behaviour from `/metrics`.
+pub fn metric_total(prom_text: &str, name: &str) -> f64 {
+    let mut total = 0.0;
+    for line in prom_text.lines() {
+        if line.starts_with('#') {
+            continue;
+        }
+        let matches = line
+            .strip_prefix(name)
+            .is_some_and(|rest| rest.starts_with(' ') || rest.starts_with('{'));
+        if !matches {
+            continue;
+        }
+        if let Some(v) = line.rsplit(' ').next().and_then(|t| t.parse::<f64>().ok()) {
+            total += v;
+        }
+    }
+    total
+}
+
+// ---------------------------------------------------------------------------
+// HTTP client side.
+// ---------------------------------------------------------------------------
+
+enum Outcome {
+    Ok,
+    HttpError,
+    DeadlineExceeded,
+    Transport,
+}
+
+/// Serialise one classify body from a pre-rendered image JSON array.
+fn body_for(img_json: &str, deadline_ms: Option<u64>) -> String {
+    match deadline_ms {
+        Some(d) => format!("{{\"image\": {img_json}, \"deadline_ms\": {d}}}"),
+        None => format!("{{\"image\": {img_json}}}"),
+    }
+}
+
+fn read_status_and_body(stream: &mut TcpStream) -> std::io::Result<(u16, String)> {
+    let bad = |m: &str| std::io::Error::new(std::io::ErrorKind::InvalidData, m.to_string());
+    let mut head = Vec::new();
+    let mut byte = [0u8; 1];
+    while !head.ends_with(b"\r\n\r\n") {
+        stream.read_exact(&mut byte)?;
+        head.push(byte[0]);
+        if head.len() > 64 * 1024 {
+            return Err(bad("unterminated response head"));
+        }
+    }
+    let head = String::from_utf8(head).map_err(|_| bad("non-utf8 head"))?;
+    let status: u16 = head
+        .split(' ')
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| bad("bad status line"))?;
+    let content_length: usize = head
+        .lines()
+        .find_map(|l| {
+            let (k, v) = l.split_once(':')?;
+            k.eq_ignore_ascii_case("content-length")
+                .then(|| v.trim().parse().ok())?
+        })
+        .ok_or_else(|| bad("missing Content-Length"))?;
+    let mut body = vec![0u8; content_length];
+    stream.read_exact(&mut body)?;
+    Ok((status, String::from_utf8_lossy(&body).into_owned()))
+}
+
+/// Send one request per the arrival's flavor on a fresh connection.
+fn fire(addr: SocketAddr, body: &str, flavor: Flavor) -> std::io::Result<(u16, String)> {
+    let mut stream = TcpStream::connect(addr)?;
+    stream.set_read_timeout(Some(Duration::from_secs(30)))?;
+    match flavor {
+        Flavor::Buffered => {
+            let wire = format!(
+                "POST /v1/classify HTTP/1.1\r\nHost: hec-loadgen\r\nConnection: close\r\n\
+                 Content-Type: application/json\r\nContent-Length: {}\r\n\r\n{body}",
+                body.len()
+            );
+            stream.write_all(wire.as_bytes())?;
+        }
+        Flavor::Slow => {
+            // Same bytes as Buffered, dribbled in thirds with short stalls.
+            let wire = format!(
+                "POST /v1/classify HTTP/1.1\r\nHost: hec-loadgen\r\nConnection: close\r\n\
+                 Content-Type: application/json\r\nContent-Length: {}\r\n\r\n{body}",
+                body.len()
+            );
+            let bytes = wire.as_bytes();
+            let third = bytes.len().div_ceil(3);
+            for piece in bytes.chunks(third) {
+                stream.write_all(piece)?;
+                stream.flush()?;
+                std::thread::sleep(Duration::from_millis(1));
+            }
+        }
+        Flavor::Chunked => {
+            let mut wire = String::from(
+                "POST /v1/classify HTTP/1.1\r\nHost: hec-loadgen\r\nConnection: close\r\n\
+                 Content-Type: application/json\r\nTransfer-Encoding: chunked\r\n\r\n",
+            );
+            for piece in body.as_bytes().chunks(512) {
+                wire.push_str(&format!("{:x}\r\n", piece.len()));
+                wire.push_str(std::str::from_utf8(piece).unwrap());
+                wire.push_str("\r\n");
+            }
+            wire.push_str("0\r\n\r\n");
+            stream.write_all(wire.as_bytes())?;
+        }
+    }
+    read_status_and_body(&mut stream)
+}
+
+fn classify_outcome(result: std::io::Result<(u16, String)>) -> Outcome {
+    match result {
+        Ok((200, _)) => Outcome::Ok,
+        Ok((_, body)) if body.contains("DEADLINE_EXCEEDED") => Outcome::DeadlineExceeded,
+        Ok(_) => Outcome::HttpError,
+        Err(_) => Outcome::Transport,
+    }
+}
+
+/// Run the open-loop harness against a live gateway: fire every scheduled
+/// arrival at its instant (workers never wait for responses before the
+/// next arrival is due on another worker), tally outcomes, and fold the
+/// client-side latency samples into percentiles.
+pub fn run(addr: SocketAddr, cfg: &LoadgenConfig, images_json: &[String]) -> LoadReport {
+    assert_eq!(images_json.len(), cfg.pool, "one JSON image per pool slot");
+    let schedule = Arc::new(build_schedule(cfg));
+    let images: Arc<Vec<String>> = Arc::new(images_json.to_vec());
+    let workers = cfg.workers.max(1);
+    let start = Instant::now();
+    let joins: Vec<_> = (0..workers)
+        .map(|w| {
+            let schedule = Arc::clone(&schedule);
+            let images = Arc::clone(&images);
+            std::thread::spawn(move || {
+                let mut service = Vec::new();
+                let mut e2e = Vec::new();
+                let mut tallies = [0u64; 4]; // ok, http, deadline, transport
+                for a in schedule.iter().skip(w).step_by(workers) {
+                    let due = Duration::from_micros(a.at_us);
+                    let now = start.elapsed();
+                    if due > now {
+                        std::thread::sleep(due - now);
+                    }
+                    let body = body_for(&images[a.image], a.deadline_ms);
+                    let t_send = Instant::now();
+                    let outcome = classify_outcome(fire(addr, &body, a.flavor));
+                    let done = start.elapsed();
+                    service.push(t_send.elapsed().as_micros() as u64);
+                    e2e.push(done.saturating_sub(due).as_micros() as u64);
+                    let slot = match outcome {
+                        Outcome::Ok => 0,
+                        Outcome::HttpError => 1,
+                        Outcome::DeadlineExceeded => 2,
+                        Outcome::Transport => 3,
+                    };
+                    tallies[slot] += 1;
+                }
+                (service, e2e, tallies)
+            })
+        })
+        .collect();
+
+    let mut service = Vec::with_capacity(schedule.len());
+    let mut e2e = Vec::with_capacity(schedule.len());
+    let mut tallies = [0u64; 4];
+    for j in joins {
+        let (s, e, t) = j.join().expect("loadgen worker panicked");
+        service.extend(s);
+        e2e.extend(e);
+        for (acc, v) in tallies.iter_mut().zip(t) {
+            *acc += v;
+        }
+    }
+    let wall_secs = start.elapsed().as_secs_f64();
+    service.sort_unstable();
+    e2e.sort_unstable();
+    LoadReport {
+        scheduled: schedule.len(),
+        ok: tallies[0],
+        http_errors: tallies[1],
+        deadline_exceeded: tallies[2],
+        transport_errors: tallies[3],
+        wall_secs,
+        achieved_rps: if wall_secs > 0.0 {
+            schedule.len() as f64 / wall_secs
+        } else {
+            0.0
+        },
+        service_us: Percentiles::from_sorted(&service),
+        e2e_us: Percentiles::from_sorted(&e2e),
+    }
+}
+
+/// Render one pool image as a JSON array fragment (`[0.1,0.2,...]`).
+pub fn image_json(image: &[f32]) -> String {
+    let mut s = String::with_capacity(image.len() * 10);
+    s.push('[');
+    for (i, px) in image.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        // f32 -> f64 is exact, and Display round-trips, so the gateway
+        // decodes bit-identical pixels; identical pool slots therefore
+        // produce identical content hashes server-side.
+        s.push_str(&format!("{}", *px as f64));
+    }
+    s.push(']');
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zipf_prefers_low_ranks() {
+        let z = ZipfSampler::new(16, 1.1);
+        let mut rng = Rng::new(1);
+        let mut counts = [0usize; 16];
+        for _ in 0..4000 {
+            counts[z.sample(&mut rng)] += 1;
+        }
+        assert!(counts[0] > counts[8] * 3, "{counts:?}");
+        assert!(counts[0] > 4000 / 16, "{counts:?}");
+        // Every draw lands in range (partition_point edge at u ~ 1.0).
+        assert_eq!(counts.iter().sum::<usize>(), 4000);
+    }
+
+    #[test]
+    fn zipf_zero_exponent_is_roughly_uniform() {
+        let z = ZipfSampler::new(8, 0.0);
+        let mut rng = Rng::new(2);
+        let mut counts = [0usize; 8];
+        for _ in 0..8000 {
+            counts[z.sample(&mut rng)] += 1;
+        }
+        for (k, &c) in counts.iter().enumerate() {
+            assert!((700..1300).contains(&c), "rank {k}: {c} of 8000");
+        }
+    }
+
+    #[test]
+    fn schedule_is_deterministic_and_monotone() {
+        let cfg = LoadgenConfig {
+            requests: 200,
+            ..Default::default()
+        };
+        let a = build_schedule(&cfg);
+        let b = build_schedule(&cfg);
+        assert_eq!(a.len(), 200);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.at_us, y.at_us);
+            assert_eq!(x.image, y.image);
+            assert_eq!(x.flavor, y.flavor);
+            assert_eq!(x.deadline_ms, y.deadline_ms);
+        }
+        assert!(a.windows(2).all(|w| w[0].at_us <= w[1].at_us), "non-monotone schedule");
+        assert!(a.iter().all(|x| x.image < cfg.pool));
+        assert!(a
+            .iter()
+            .all(|x| x.deadline_ms.map_or(true, |d| d >= 1)));
+    }
+
+    #[test]
+    fn schedule_contains_bursts_and_mixed_flavors() {
+        let cfg = LoadgenConfig {
+            requests: 400,
+            burst_every: 20,
+            burst_size: 5,
+            ..Default::default()
+        };
+        let sched = build_schedule(&cfg);
+        // Bursts: some arrival instants repeat burst_size+ times.
+        let max_same_instant = {
+            let mut best = 1;
+            let mut run = 1;
+            for w in sched.windows(2) {
+                if w[0].at_us == w[1].at_us {
+                    run += 1;
+                    best = best.max(run);
+                } else {
+                    run = 1;
+                }
+            }
+            best
+        };
+        assert!(max_same_instant > cfg.burst_size, "no burst found");
+        let chunked = sched.iter().filter(|a| a.flavor == Flavor::Chunked).count();
+        let slow = sched.iter().filter(|a| a.flavor == Flavor::Slow).count();
+        let with_deadline = sched.iter().filter(|a| a.deadline_ms.is_some()).count();
+        assert!(chunked > 0 && slow > 0 && with_deadline > 0);
+    }
+
+    #[test]
+    fn percentiles_are_order_statistics() {
+        let sorted: Vec<u64> = (1..=1000).collect();
+        assert_eq!(percentile_us(&sorted, 0.0), 1);
+        assert_eq!(percentile_us(&sorted, 1.0), 1000);
+        assert_eq!(percentile_us(&sorted, 0.5), 500);
+        assert!(percentile_us(&sorted, 0.999) >= 998);
+        assert_eq!(percentile_us(&[], 0.5), 0);
+        let p = Percentiles::from_sorted(&sorted);
+        assert!(p.p50 <= p.p90 && p.p90 <= p.p99 && p.p99 <= p.p999 && p.p999 <= p.max);
+    }
+
+    #[test]
+    fn hit_rate_floor_matches_miss_budget() {
+        assert_eq!(hit_rate_floor(8, 3, 120), 1.0 - 24.0 / 120.0);
+        assert_eq!(hit_rate_floor(100, 3, 120), 0.0); // more keys than requests
+        assert_eq!(hit_rate_floor(8, 3, 0), 0.0);
+    }
+
+    #[test]
+    fn metric_total_sums_labeled_and_bare_series() {
+        let text = "# HELP hec_cache_hits_total x\n\
+                    # TYPE hec_cache_hits_total counter\n\
+                    hec_cache_hits_total{shard=\"0\"} 3\n\
+                    hec_cache_hits_total{shard=\"1\"} 4\n\
+                    hec_cache_hits_totally_not 99\n\
+                    hec_cache_misses_total 7\n";
+        assert_eq!(metric_total(text, "hec_cache_hits_total"), 7.0);
+        assert_eq!(metric_total(text, "hec_cache_misses_total"), 7.0);
+        assert_eq!(metric_total(text, "hec_cache_evictions_total"), 0.0);
+    }
+
+    #[test]
+    fn image_json_round_trips_pixel_bits() {
+        let img = [0.5f32, -1.25, 0.1307, -0.0, 3.4e-5];
+        let frag = image_json(&img);
+        let v = crate::jsonlite::parse(&frag).unwrap();
+        let back = v.as_f32_vec().unwrap();
+        assert_eq!(back.len(), img.len());
+        for (a, b) in img.iter().zip(&back) {
+            assert_eq!(a.to_bits(), b.to_bits(), "{a} vs {b}");
+        }
+    }
+}

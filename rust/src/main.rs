@@ -43,7 +43,7 @@ const USAGE: &str = "usage: hec [--artifacts DIR] [--engine interp|interp-fast|p
 [--backend acam|fc|sim|softmax] [--templates K] [--threads N] [--variability L] \
 [--frontend fast|pallas] [--config FILE] \
 [--shards N] [--shard-policy round_robin|least_queue_depth|hash] \
-[--stores-dir DIR] [--tenants name=store[:quota],...] \
+[--stores-dir DIR] [--tenants name=store[:quota],...] [--cache CAPACITY] \
 <serve|classify|eval|energy|acam-sim|info> [--requests N] [--concurrency N] \
 [--http ADDR] [--max-connections N] \
 [--count N] [--samples N] [--batch N] [--levels 0,1,2]";
@@ -135,6 +135,10 @@ fn serve_config(args: &Args) -> hec::Result<ServeConfig> {
     }
     if let Some(spec) = args.flags.get("tenants") {
         cfg.stores.tenants = hec::config::parse_tenant_list(spec)?;
+    }
+    if args.flags.contains_key("cache") {
+        cfg.cache.enabled = true;
+        cfg.cache.capacity = args.get("cache", cfg.cache.capacity).map_err(Error::Config)?;
     }
     if let Some(addr) = args.flags.get("http") {
         cfg.http.addr = Some(addr.clone());

@@ -653,9 +653,43 @@ impl StoreAdmin {
         store: TemplateStore,
         origin: &'static str,
     ) -> std::result::Result<StoreSnapshot, ApiError> {
-        self.registry
+        let snap = self
+            .registry
             .publish(id, store, origin)
-            .map_err(|e| ApiError::new(ErrorCode::InvalidArgument, e.to_string()))
+            .map_err(|e| ApiError::new(ErrorCode::InvalidArgument, e.to_string()))?;
+        self.persist(&snap)?;
+        Ok(snap)
+    }
+
+    /// Persist an accepted publish into the stores directory (when one is
+    /// configured) so it survives a restart: `StoreRegistry::from_config`
+    /// republishes every `<id>.json` at boot with origin `"dir"`.  The
+    /// write is atomic — serialise to `.tmp-<id>` in the same directory,
+    /// then rename over `<id>.json` — so a crash mid-write never leaves a
+    /// torn file for the loader to choke on.
+    fn persist(&self, snap: &StoreSnapshot) -> std::result::Result<(), ApiError> {
+        let Some(dir) = self.cfg.resolve_stores_dir() else {
+            return Ok(());
+        };
+        let Some(store) = &snap.store else {
+            return Ok(());
+        };
+        let dir = std::path::Path::new(&dir);
+        let tmp = dir.join(format!(".tmp-{}", snap.id));
+        let fin = dir.join(format!("{}.json", snap.id));
+        let io = |e: std::io::Error| {
+            ApiError::new(
+                ErrorCode::Internal,
+                format!(
+                    "store '{}' v{} is live but could not be persisted to {}: {e}",
+                    snap.id,
+                    snap.version,
+                    fin.display()
+                ),
+            )
+        };
+        std::fs::write(&tmp, store.to_json()).map_err(io)?;
+        std::fs::rename(&tmp, &fin).map_err(io)
     }
 
     /// Online re-fit: draw fresh labelled probes, build a candidate store

@@ -470,6 +470,60 @@ impl TemplateStore {
             .map(|(f, t)| u8::from(f > t))
             .collect()
     }
+
+    /// Serialise to the `templates.json` schema [`Self::from_json_str`]
+    /// parses, so accepted registry publishes can be persisted to the
+    /// stores directory and reloaded verbatim on restart.  The packed rows
+    /// and `words_per_row` are derived state and are rebuilt at parse time.
+    pub fn to_json(&self) -> String {
+        let f32_arr = |v: &[f32]| Value::Arr(v.iter().map(|&f| Value::Num(f as f64)).collect());
+        let f32_mat =
+            |m: &[Vec<f32>]| Value::Arr(m.iter().map(|row| f32_arr(row)).collect());
+        let mut stores = BTreeMap::new();
+        for (k, set) in &self.sets {
+            let templates = Value::Arr(
+                set.templates
+                    .iter()
+                    .map(|t| Value::Arr(t.iter().map(|&b| Value::Num(b as f64)).collect()))
+                    .collect(),
+            );
+            let class_of = Value::Arr(
+                set.class_of.iter().map(|&c| Value::Num(c as f64)).collect(),
+            );
+            let silhouette =
+                Value::Arr(set.silhouette.iter().map(|&s| Value::Num(s)).collect());
+            let obj = BTreeMap::from([
+                ("templates".to_string(), templates),
+                ("lo".to_string(), f32_mat(&set.lo)),
+                ("hi".to_string(), f32_mat(&set.hi)),
+                ("bin_lo".to_string(), f32_mat(&set.bin_lo)),
+                ("bin_hi".to_string(), f32_mat(&set.bin_hi)),
+                ("class_of".to_string(), class_of),
+                ("silhouette".to_string(), silhouette),
+            ]);
+            stores.insert(k.to_string(), Value::Obj(obj));
+        }
+        let doc = BTreeMap::from([
+            ("num_classes".to_string(), Value::Num(self.num_classes as f64)),
+            ("n_features".to_string(), Value::Num(self.n_features as f64)),
+            (
+                "threshold_mode".to_string(),
+                Value::Str(self.threshold_mode.clone()),
+            ),
+            ("thresholds".to_string(), f32_arr(&self.thresholds)),
+            ("thresholds_mean".to_string(), f32_arr(&self.thresholds_mean)),
+            (
+                "thresholds_median".to_string(),
+                f32_arr(&self.thresholds_median),
+            ),
+            (
+                "similarity_alpha".to_string(),
+                Value::Num(self.similarity_alpha as f64),
+            ),
+            ("stores".to_string(), Value::Obj(stores)),
+        ]);
+        Value::Obj(doc).to_json()
+    }
 }
 
 #[cfg(test)]
@@ -609,6 +663,36 @@ mod tests {
         let store = TemplateStore::from_features(&feats, &labels, 1, 2, 0).unwrap();
         assert!((store.thresholds_mean[0] - 1.5).abs() < 1e-6);
         assert!((store.thresholds_median[0] - 1.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn to_json_roundtrips_through_from_json_str() {
+        let (feats, labels) = clustered_features(8, 4, 20);
+        let store = TemplateStore::from_features(&feats, &labels, 20, 4, 42).unwrap();
+        let back = TemplateStore::from_json_str(&store.to_json()).unwrap();
+        assert_eq!(back.num_classes, store.num_classes);
+        assert_eq!(back.n_features, store.n_features);
+        assert_eq!(back.threshold_mode, store.threshold_mode);
+        assert_eq!(back.thresholds, store.thresholds);
+        assert_eq!(back.thresholds_mean, store.thresholds_mean);
+        assert_eq!(back.thresholds_median, store.thresholds_median);
+        assert_eq!(back.similarity_alpha, store.similarity_alpha);
+        assert_eq!(
+            back.sets.keys().collect::<Vec<_>>(),
+            store.sets.keys().collect::<Vec<_>>()
+        );
+        for (k, set) in &store.sets {
+            let bset = &back.sets[k];
+            assert_eq!(bset.templates, set.templates, "k={k} templates");
+            assert_eq!(bset.packed, set.packed, "k={k} packed (rebuilt)");
+            assert_eq!(bset.words_per_row, set.words_per_row);
+            assert_eq!(bset.lo, set.lo, "k={k} lo");
+            assert_eq!(bset.hi, set.hi, "k={k} hi");
+            assert_eq!(bset.bin_lo, set.bin_lo, "k={k} bin_lo");
+            assert_eq!(bset.bin_hi, set.bin_hi, "k={k} bin_hi");
+            assert_eq!(bset.class_of, set.class_of, "k={k} class_of");
+            assert_eq!(bset.silhouette, set.silhouette, "k={k} silhouette");
+        }
     }
 
     #[test]

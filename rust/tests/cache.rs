@@ -1,0 +1,380 @@
+//! Content-hash feature-cache acceptance tests — deterministic, Gate-based,
+//! artifact-free (synthetic fallback deployment), no sleeps.
+//!
+//! The suite pins the cache's contract:
+//!
+//! 1. **Hit-vs-miss parity**: a cache-on deployment serves bitwise-identical
+//!    predictions, scores, and back-end energy to a cache-off deployment fed
+//!    the same request sequence — on both interpreter engines and on the
+//!    stochastic ACAM path (the hit consumes the shard RNG exactly as a miss
+//!    would).  Only the front-end charge disappears: hits report
+//!    `front_end_nj == 0`.
+//! 2. **Cache-off invisibility**: with the cache disabled the wire JSON
+//!    carries no `cache` field and `/metrics` no `hec_cache_*` series — the
+//!    serving path is the pre-cache one, bitwise.
+//! 3. **Counter discipline**: hits/misses/evictions totals and the resident
+//!    entries gauge on `/metrics`, deterministic under seeded eviction.
+//! 4. **Swap correctness**: a default-store hot-swap flushes the cache —
+//!    cached bits are binarised under the old store's thresholds and must
+//!    never answer for the new version.
+//! 5. **Degradation correctness**: hits stay bitwise-parity under
+//!    `digital_fallback` (the cached bits feed the digital matcher, not a
+//!    stale ACAM answer).
+//! 6. **Restart hygiene**: a shard panic-restart flushes entries to zero
+//!    while the hit/miss totals stay monotone.
+
+use std::sync::Arc;
+
+use hec::api::{ClassifyOptions, ClassifyRequest, ClassifyResponse};
+use hec::config::{Backend, Engine, ServeConfig};
+use hec::coordinator::cache::FeatureCache;
+use hec::coordinator::shard::{Gate, ShardHooks};
+use hec::coordinator::{ClassifySurface, Pipeline, Server, ShardSet};
+use hec::dataset::SyntheticDataset;
+use hec::store::StoreRegistry;
+use hec::templates::TemplateStore;
+
+/// An artifacts directory that never exists -> synthetic fallback.
+const NO_ARTIFACTS: &str = "/nonexistent-hec-artifacts";
+
+fn cfg(backend: Backend) -> ServeConfig {
+    let mut c = ServeConfig {
+        artifacts_dir: NO_ARTIFACTS.into(),
+        backend,
+        engine: Engine::Interp,
+        ..Default::default()
+    };
+    c.batch.max_batch = 1; // serial submits -> singleton batches, no timing
+    c.batch.max_wait_us = 0;
+    c
+}
+
+fn cached_cfg(backend: Backend, capacity: usize) -> ServeConfig {
+    let mut c = cfg(backend);
+    c.cache.enabled = true;
+    c.cache.capacity = capacity;
+    c
+}
+
+fn workload(n: usize, seed: u64) -> (Vec<f32>, usize) {
+    let meta = hec::runtime::Meta::synthetic();
+    let ds = SyntheticDataset::new(seed, n, meta.norm.mean as f32, meta.norm.std as f32);
+    let (images, _) = ds.batch(0, n);
+    let s = meta.artifacts.image_size;
+    (images, s * s)
+}
+
+/// Class-separable labelled rows matching the registry's geometry
+/// (mirrors rust/tests/store.rs), for building publishable stores.
+fn publishable_store(reg: &StoreRegistry, seed: u64) -> TemplateStore {
+    let (num_classes, n_features, _) = reg.geometry();
+    let per_class = 4;
+    let n = per_class * num_classes;
+    let labels: Vec<usize> = (0..n).map(|i| i % num_classes).collect();
+    let mut rng = hec::rng::Rng::new(seed);
+    let mut feats = vec![0.0f32; n * n_features];
+    for (i, l) in labels.iter().enumerate() {
+        for j in 0..n_features {
+            feats[i * n_features + j] = (*l as f32) * 0.3
+                + rng.u01() as f32
+                + if j % num_classes == *l { 1.5 } else { 0.0 };
+        }
+    }
+    TemplateStore::from_features(&feats, &labels, n_features, num_classes, seed).unwrap()
+}
+
+/// Everything hit-vs-miss parity compares bitwise.
+#[derive(Debug, PartialEq)]
+struct Outcome {
+    predictions: Vec<(usize, f64)>,
+    back_end_nj: f64,
+}
+
+fn outcome(r: &ClassifyResponse) -> Outcome {
+    Outcome {
+        predictions: r.predictions.iter().map(|p| (p.class, p.score)).collect(),
+        back_end_nj: r.energy.back_end_nj,
+    }
+}
+
+/// Property 1: cache-on serving is bitwise identical to cache-off serving
+/// on the same request sequence — across both interpreter engines, the
+/// deterministic feature-count backend, and the RNG-consuming ACAM
+/// simulator at full variability.  Hits additionally charge a zero
+/// front-end; first occurrences charge exactly the cold figure.
+#[test]
+fn hit_serving_is_bitwise_identical_to_cold_serving() {
+    let scenarios = [
+        (Backend::FeatureCount, Engine::Interp, 0.0),
+        (Backend::FeatureCount, Engine::InterpFast, 0.0),
+        (Backend::AcamSim, Engine::Interp, 1.0),
+    ];
+    let (images, img_len) = workload(3, 9_901);
+    let seq = [0usize, 1, 0, 2, 1, 0];
+    for (backend, engine, variability) in scenarios {
+        let mut on = cached_cfg(backend, 8);
+        on.engine = engine;
+        on.acam.variability_level = variability;
+        let mut off = cfg(backend);
+        off.engine = engine;
+        off.acam.variability_level = variability;
+        let hot_srv = Server::start(on).unwrap();
+        let cold_srv = Server::start(off).unwrap();
+
+        let mut seen = std::collections::BTreeSet::new();
+        for (i, &img) in seq.iter().enumerate() {
+            let mut req = ClassifyRequest::new(images[img * img_len..(img + 1) * img_len].to_vec());
+            req.top_k = 3;
+            let hot = hot_srv.handle.submit_blocking(req.clone()).unwrap();
+            let cold = cold_srv.handle.submit_blocking(req).unwrap();
+            assert_eq!(
+                outcome(&hot),
+                outcome(&cold),
+                "request {i} (image {img}, {backend:?}/{engine:?}): \
+                 cached serving diverged from cold serving"
+            );
+            assert_eq!(cold.cache, None, "cache-off responses must not carry the flag");
+            if seen.insert(img) {
+                assert_eq!(hot.cache, Some(false), "request {i}: first sight is a miss");
+                assert_eq!(
+                    hot.energy.front_end_nj, cold.energy.front_end_nj,
+                    "request {i}: a miss pays the full front-end"
+                );
+                assert!(hot.energy.front_end_nj > 0.0);
+            } else {
+                assert_eq!(hot.cache, Some(true), "request {i}: repeat must hit");
+                assert_eq!(
+                    hot.energy.front_end_nj, 0.0,
+                    "request {i}: a hit skips the CNN front-end entirely"
+                );
+            }
+        }
+        hot_srv.shutdown();
+        cold_srv.shutdown();
+    }
+}
+
+/// Property 2: cache-off is bitwise invisible — no `cache` key on the wire,
+/// no `hec_cache_*` series on `/metrics`, and responses equal to a direct
+/// registry-free [`Pipeline`] run on the same images.
+#[test]
+fn cache_off_is_bitwise_invisible() {
+    let c = cfg(Backend::FeatureCount);
+    let (images, img_len) = workload(2, 555);
+    let srv = Server::start(c.clone()).unwrap();
+    let mut p = Pipeline::new(&c).unwrap();
+    for i in [0usize, 1, 0] {
+        let chunk = &images[i * img_len..(i + 1) * img_len];
+        let resp = srv.handle.classify_blocking(chunk.to_vec()).unwrap();
+        assert_eq!(resp.cache, None);
+        let wire = resp.to_value().to_json();
+        assert!(
+            !wire.contains("\"cache\""),
+            "cache-off wire bytes changed: {wire}"
+        );
+        let want = p.classify_batch(chunk, 1).unwrap().remove(0);
+        assert_eq!(resp.top1().class, want.top1().class);
+        assert_eq!(resp.top1().score, want.top1().score);
+        assert_eq!(resp.energy.front_end_nj, want.energy.front_end_nj);
+        assert_eq!(resp.energy.back_end_nj, want.energy.back_end_nj);
+    }
+    let text = srv.handle.prometheus_text();
+    assert!(
+        !text.contains("hec_cache_"),
+        "cache-off /metrics must not render cache series:\n{text}"
+    );
+    srv.shutdown();
+}
+
+/// Property 3: the `/metrics` counters are exact under a deterministic
+/// sequence — capacity 2, three distinct images: a, b, a(hit), c(evicts a
+/// seeded victim), and the entries gauge holds at capacity.
+#[test]
+fn cache_metrics_count_hits_misses_evictions_and_entries() {
+    let (images, img_len) = workload(3, 77_001);
+    let srv = Server::start(cached_cfg(Backend::FeatureCount, 2)).unwrap();
+    let img = |i: usize| images[i * img_len..(i + 1) * img_len].to_vec();
+    assert_eq!(srv.handle.classify_blocking(img(0)).unwrap().cache, Some(false));
+    assert_eq!(srv.handle.classify_blocking(img(1)).unwrap().cache, Some(false));
+    assert_eq!(srv.handle.classify_blocking(img(0)).unwrap().cache, Some(true));
+    assert_eq!(srv.handle.classify_blocking(img(2)).unwrap().cache, Some(false));
+    let text = srv.handle.prometheus_text();
+    for needle in [
+        "# TYPE hec_cache_hits_total counter",
+        "# TYPE hec_cache_entries gauge",
+        "hec_cache_hits_total 1",
+        "hec_cache_misses_total 3",
+        "hec_cache_evictions_total 1",
+        "hec_cache_entries 2",
+    ] {
+        assert!(text.contains(needle), "missing {needle:?} in:\n{text}");
+    }
+    srv.shutdown();
+}
+
+/// Property 4: a default-store hot-swap flushes the cache.  Cached bits are
+/// binarised under the **old** store's thresholds; serving them against the
+/// published version would silently answer from the wrong store.  The first
+/// post-swap repeat must therefore be a miss, and the refilled hit must
+/// again be bitwise-parity with the post-swap miss.
+#[test]
+fn default_store_swap_flushes_the_cache() {
+    let mut c = cached_cfg(Backend::FeatureCount, 8);
+    c.shards.count = 1;
+    let set = ShardSet::start(&c).unwrap();
+    let (images, img_len) = workload(1, 31_337);
+    let img = images[..img_len].to_vec();
+
+    assert_eq!(
+        set.handle.submit_blocking(ClassifyRequest::new(img.clone())).unwrap().cache,
+        Some(false)
+    );
+    assert_eq!(
+        set.handle.submit_blocking(ClassifyRequest::new(img.clone())).unwrap().cache,
+        Some(true)
+    );
+
+    let admin = set.handle.store_admin().expect("sharded surface carries the admin");
+    let reg = admin.registry();
+    let snap = reg
+        .publish("default", publishable_store(reg, 4242), "put")
+        .unwrap();
+    assert_eq!(snap.version, 1);
+
+    // The very next batch adopts v1 AND re-misses: the swap flushed the
+    // entry cached under the bootstrap store's thresholds.
+    let miss = set.handle.submit_blocking(ClassifyRequest::new(img.clone())).unwrap();
+    assert_eq!(miss.store_version, Some(1), "post-publish batch must serve v1");
+    assert_eq!(
+        miss.cache,
+        Some(false),
+        "stale bits must never answer for a freshly published store"
+    );
+    let hit = set.handle.submit_blocking(ClassifyRequest::new(img)).unwrap();
+    assert_eq!(hit.store_version, Some(1));
+    assert_eq!(hit.cache, Some(true));
+    assert_eq!(hit.energy.front_end_nj, 0.0);
+    assert_eq!(outcome(&hit), outcome(&miss), "post-swap hit diverged from post-swap miss");
+
+    // Flush keeps the totals monotone; the gauge re-counts the refill.
+    let text = set.handle.prometheus_text();
+    for needle in [
+        "hec_cache_hits_total{shard=\"0\"} 2",
+        "hec_cache_misses_total{shard=\"0\"} 2",
+        "hec_cache_entries{shard=\"0\"} 1",
+    ] {
+        assert!(text.contains(needle), "missing {needle:?} in:\n{text}");
+    }
+    set.shutdown();
+}
+
+/// Property 5: under `digital_fallback` (the degradation ladder's terminal
+/// rung) a hit feeds the cached bits to the **digital** matcher — bitwise
+/// identical to a cold run with fallback engaged, zero front-end charge.
+/// Driven at the [`Pipeline`] level through the public fallback switch, so
+/// no canary machinery is needed.
+#[test]
+fn hits_stay_bitwise_identical_under_digital_fallback() {
+    let mut c = cfg(Backend::AcamSim);
+    c.acam.variability_level = 1.0;
+    let mut hot = Pipeline::new(&c).unwrap();
+    let mut cold = Pipeline::new(&c).unwrap();
+    hot.set_digital_fallback(true);
+    cold.set_digital_fallback(true);
+    assert!(hot.digital_fallback());
+
+    let mut cache = FeatureCache::new(8, 0xF0CA);
+    let (images, img_len) = workload(2, 123_457);
+    let opts = [ClassifyOptions { top_k: 3, ..Default::default() }];
+    let mut seen = std::collections::BTreeSet::new();
+    for (i, &img) in [0usize, 1, 0, 0, 1].iter().enumerate() {
+        let chunk = &images[img * img_len..(img + 1) * img_len];
+        let h = hot
+            .classify_batch_cached(chunk, 1, &opts, &[], &mut cache)
+            .unwrap()
+            .remove(0);
+        let w = cold.classify_batch_routed(chunk, 1, &opts, &[]).unwrap().remove(0);
+        let pick = |r: &hec::api::ClassifyResult| {
+            (
+                r.predictions.iter().map(|p| (p.class, p.score)).collect::<Vec<_>>(),
+                r.energy.back_end_nj,
+            )
+        };
+        assert_eq!(pick(&h), pick(&w), "request {i}: fallback hit diverged from cold");
+        if seen.insert(img) {
+            assert_eq!(h.cache, Some(false), "request {i}");
+        } else {
+            assert_eq!(h.cache, Some(true), "request {i}");
+            assert_eq!(h.energy.front_end_nj, 0.0, "request {i}");
+        }
+    }
+}
+
+/// Property 6: a shard panic-restart rebuilds the engine — which
+/// invalidates every cached bit-vector — so the entries gauge flushes to
+/// zero while the hit/miss totals stay monotone (the cache object outlives
+/// the rebuild).  The injected panic fires before the cache is consulted,
+/// so the boom batch moves no counter.
+#[test]
+fn panic_restart_keeps_totals_monotone_and_resets_entries() {
+    let gate = Gate::new();
+    let mut c = cached_cfg(Backend::FeatureCount, 8);
+    c.shards.count = 1;
+    c.batch.queue_depth = 8;
+    let set = ShardSet::start_with_hooks(
+        &c,
+        ShardHooks {
+            panic_on: Some("boom".into()),
+            restart_gate: Some(Arc::clone(&gate)),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let (images, img_len) = workload(1, 2_024);
+    let img = images[..img_len].to_vec();
+
+    assert_eq!(
+        set.handle.submit_blocking(ClassifyRequest::new(img.clone())).unwrap().cache,
+        Some(false)
+    );
+    assert_eq!(
+        set.handle.submit_blocking(ClassifyRequest::new(img.clone())).unwrap().cache,
+        Some(true)
+    );
+
+    let mut req = ClassifyRequest::new(img.clone());
+    req.request_id = Some("boom".into());
+    assert!(set.handle.submit_blocking(req).is_err(), "panic fails the request");
+    gate.await_arrivals(1);
+    gate.release();
+    gate.await_arrivals(2); // rebuild done: flush + re-publish already ran
+
+    let text = set.handle.prometheus_text();
+    for needle in [
+        "hec_cache_hits_total{shard=\"0\"} 1",
+        "hec_cache_misses_total{shard=\"0\"} 1",
+        "hec_cache_entries{shard=\"0\"} 0",
+    ] {
+        assert!(text.contains(needle), "missing {needle:?} post-restart in:\n{text}");
+    }
+
+    // Same pixels re-miss against the rebuilt engine, then hit again; the
+    // totals only ever go up.
+    assert_eq!(
+        set.handle.submit_blocking(ClassifyRequest::new(img.clone())).unwrap().cache,
+        Some(false)
+    );
+    assert_eq!(
+        set.handle.submit_blocking(ClassifyRequest::new(img)).unwrap().cache,
+        Some(true)
+    );
+    let text = set.handle.prometheus_text();
+    for needle in [
+        "hec_cache_hits_total{shard=\"0\"} 2",
+        "hec_cache_misses_total{shard=\"0\"} 2",
+        "hec_cache_entries{shard=\"0\"} 1",
+    ] {
+        assert!(text.contains(needle), "missing {needle:?} in:\n{text}");
+    }
+    set.shutdown();
+}

@@ -829,6 +829,32 @@ fn streaming_error_paths_return_stable_codes() {
         400,
         ErrorCode::MalformedRequest,
     );
+    // A POST with a body but neither Content-Length nor Transfer-Encoding
+    // -> 411 LENGTH_REQUIRED.  (Regression: this used to be read as an
+    // empty body and misreported as a parse error.)
+    assert_err(
+        send_raw(
+            addr,
+            b"POST /v1/classify HTTP/1.1\r\nHost: hec-test\r\nConnection: close\r\n\
+              Content-Type: application/json\r\n\r\n{\"image\": [0.0]}",
+            true,
+        ),
+        411,
+        ErrorCode::LengthRequired,
+    );
+    // An explicit zero deadline is a client bug, rejected at decode time
+    // -> 400 INVALID_ARGUMENT (uniform across tree/streaming/binary; the
+    // decoder-level parity lives in rust/tests/ingest_fuzz.rs).
+    assert_err(
+        http(
+            addr,
+            "POST",
+            "/v1/classify",
+            Some("{\"image\": [0.0], \"deadline_ms\": 0}"),
+        ),
+        400,
+        ErrorCode::InvalidArgument,
+    );
     gateway.shutdown();
     server.shutdown();
 }

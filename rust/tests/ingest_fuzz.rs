@@ -352,7 +352,8 @@ fn random_request(rng: &mut Rng) -> ClassifyRequest {
         req.request_id = Some(format!("id-{}", rng.below(10_000)));
     }
     if rng.below(4) == 0 {
-        req.deadline_ms = Some(rng.below(5_000) as u64);
+        // Valid deadlines only: every decoder rejects an explicit 0.
+        req.deadline_ms = Some(1 + rng.below(4_999) as u64);
     }
     req
 }
@@ -461,6 +462,57 @@ fn top_k_zero_rejects_identically_across_all_decoders() {
     }
     assert_eq!(err_parts(&tree), err_parts(&streamed));
     assert_eq!(err_parts(&tree), err_parts(&bin));
+}
+
+/// `deadline_ms == 0` gets the same treatment: a zero deadline is
+/// indistinguishable from a client bug (it could never be served), so
+/// every decoder rejects it at decode time with one `INVALID_ARGUMENT` —
+/// identical code and message across the tree, streaming, and binary
+/// paths.  (Regression: the tree decoder used to accept `0` and fail the
+/// request later as `DEADLINE_EXCEEDED`, while the other paths diverged.)
+#[test]
+fn deadline_zero_rejects_identically_across_all_decoders() {
+    let text = r#"{"image": [0.5], "deadline_ms": 0}"#;
+    let tree = jsonlite::parse(text)
+        .map_err(malformed)
+        .and_then(|v| ClassifyRequest::from_value(&v))
+        .err()
+        .expect("tree decoder must reject deadline_ms=0");
+    let streamed = decode_classify_request(text, 16)
+        .err()
+        .expect("streaming decoder must reject deadline_ms=0");
+
+    // Binary: hand-build the frame — `encode_batch` could never emit a
+    // zero deadline, but a client can, and the wire must reject it.
+    let meta = br#"{"deadline_ms": 0}"#;
+    let mut frame = b"HECB\x01".to_vec();
+    frame.extend_from_slice(&1u32.to_le_bytes());
+    frame.extend_from_slice(&(meta.len() as u32).to_le_bytes());
+    frame.extend_from_slice(meta);
+    frame.extend_from_slice(&1u32.to_le_bytes());
+    frame.extend_from_slice(&0.5f32.to_le_bytes());
+    let items = binary::decode_batch(&frame).expect("framing itself is valid");
+    let bin = items[0]
+        .as_ref()
+        .err()
+        .expect("binary meta must reject deadline_ms=0")
+        .clone();
+
+    for (name, err) in [("tree", &tree), ("stream", &streamed), ("binary", &bin)] {
+        assert_eq!(err.code, ErrorCode::InvalidArgument, "{name}: wrong code");
+    }
+    assert_eq!(err_parts(&tree), err_parts(&streamed));
+    assert_eq!(err_parts(&tree), err_parts(&bin));
+
+    // A boundary deadline of 1 decodes everywhere.
+    let ok = r#"{"image": [0.5], "deadline_ms": 1}"#;
+    assert_eq!(
+        ClassifyRequest::from_value(&jsonlite::parse(ok).unwrap())
+            .unwrap()
+            .deadline_ms,
+        Some(1)
+    );
+    assert_eq!(decode_classify_request(ok, 16).unwrap().deadline_ms, Some(1));
 }
 
 /// The out-of-range half of the same contract: `top_k > num_classes` is

@@ -573,3 +573,78 @@ fn store_admin_round_trips_over_http() {
     gateway.shutdown();
     server.shutdown();
 }
+
+/// Publishes survive a restart.  The bug: a store uploaded through the
+/// admin surface lived only in the in-memory registry — any restart
+/// silently reverted the deployment to the bootstrap store.  The fix:
+/// `StoreAdmin` persists every successful publish atomically
+/// (`.tmp-<id>` write + rename, so a crash mid-write never leaves a
+/// half-readable `<id>.json`) into the configured stores directory, which
+/// the next boot's registry reloads at origin `"dir"`.
+#[test]
+fn publishes_survive_restart_via_stores_dir() {
+    let dir = std::env::temp_dir().join(format!("hec-store-persist-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut c = cfg(Backend::FeatureCount, 1);
+    c.stores.dir = Some(dir.to_string_lossy().into_owned());
+
+    // Boot 1: publish through the admin surface (the persistence funnel;
+    // `registry.publish` alone is the in-memory primitive).
+    let server = Server::start(c.clone()).unwrap();
+    let admin = server.handle.store_admin().unwrap();
+    let published = publishable_store(admin.registry(), 8_888);
+    let snap = admin.put_json("default", &published.to_json()).unwrap();
+    assert_eq!((snap.version, snap.origin), (1, "put"));
+    assert!(
+        dir.join("default.json").is_file(),
+        "a publish must persist into the stores dir"
+    );
+    let leftovers: Vec<String> = std::fs::read_dir(&dir)
+        .unwrap()
+        .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+        .filter(|n| n.starts_with(".tmp-"))
+        .collect();
+    assert!(
+        leftovers.is_empty(),
+        "the atomic rename must not leave temp debris: {leftovers:?}"
+    );
+
+    let (images, img_len) = workload(1, 424_242);
+    let img = images[..img_len].to_vec();
+    let before = server.handle.classify_blocking(img.clone()).unwrap();
+    assert_eq!(before.store_version, Some(1));
+    server.shutdown();
+
+    // Boot 2: same config, fresh process state.  The published store comes
+    // back from disk — resident, origin "dir", bitwise-identical JSON —
+    // and serves the same answers.
+    let server = Server::start(c).unwrap();
+    let snap = server
+        .handle
+        .store_admin()
+        .unwrap()
+        .get("default")
+        .expect("persisted store must be listed after reboot");
+    assert_eq!(
+        (snap.version, snap.origin),
+        (1, "dir"),
+        "reboot must reload the persisted publish, not the bootstrap store"
+    );
+    let restored = snap.store.expect("dir-loaded stores are resident");
+    assert_eq!(
+        restored.to_json(),
+        published.to_json(),
+        "persisted store must round-trip bitwise"
+    );
+    let after = server.handle.classify_blocking(img).unwrap();
+    assert_eq!(after.store_version, Some(1));
+    assert_eq!(
+        (after.predictions[0].class, after.predictions[0].score),
+        (before.predictions[0].class, before.predictions[0].score),
+        "the reloaded store must serve identically to the live publish"
+    );
+    assert_eq!(after.energy.back_end_nj, before.energy.back_end_nj);
+    server.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
