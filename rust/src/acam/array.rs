@@ -138,7 +138,10 @@ impl AcamArray {
             }
 
             let sim = match self.config.kind {
-                CellKind::Charging6T4R => {
+                // The 9T4R cell grades `i_charge` per cell but still drives
+                // one matchline from 0 V, so it shares the charging
+                // integration with the 6T4R design.
+                CellKind::Charging6T4R | CellKind::Analogue9T4R => {
                     // Integrate the single matchline from 0 V.
                     let mut v_ml = 0f64;
                     for _ in 0..steps {
@@ -295,6 +298,26 @@ mod tests {
         let out = arr.search(&vec![super::super::feature_to_voltage(0.0); 784]);
         // 10 x 784 x 185 fJ = 1.4504 nJ (Eq. 14)
         assert!((out.energy_nj - 1.4504).abs() < 0.001, "{}", out.energy_nj);
+    }
+
+    #[test]
+    fn analogue_9t4r_matches_eq8_on_binary_queries() {
+        // Binary query voltages sit 1 V from the wrong window — far past
+        // the 9T4R roll-off — so ideal match counts and the monotone
+        // similarity ordering both survive the graded cell.
+        let q: Vec<u8> = vec![1; 64];
+        let t_full = vec![1u8; 64];
+        let mut t_half = vec![1u8; 64];
+        for b in t_half.iter_mut().take(32) {
+            *b = 0;
+        }
+        let t_none = vec![0u8; 64];
+        let mut arr = ideal_array(&[t_full, t_half, t_none], CellKind::Analogue9T4R);
+        let qv: Vec<f64> = q.iter().map(|&b| super::super::feature_to_voltage(b as f32)).collect();
+        let out = arr.search(&qv);
+        assert_eq!(out.match_counts, vec![64, 32, 0]);
+        assert!(out.similarity[0] > out.similarity[1]);
+        assert!(out.similarity[1] > out.similarity[2]);
     }
 
     #[test]

@@ -33,7 +33,20 @@ pub enum CellKind {
     Charging6T4R,
     /// Fig. 4b — 3T1R precharging design.
     Precharging3T1R,
+    /// 9T4R analogue cell (arxiv 2410.03414): same 4-RRAM window storage,
+    /// but the richer 9-transistor periphery grades the output current with
+    /// the input's distance from the window instead of switching hard.  A
+    /// near-miss still charges the matchline a little, so the row voltage
+    /// encodes analogue template distance, not just the Eq. 8 match count.
+    Analogue9T4R,
 }
+
+/// Overdrive span (V) over which the 9T4R cell's charge current rolls off
+/// linearly from `I_LIMIT` to zero as the input leaves the stored window.
+/// Inputs further than this from either bound contribute nothing — a binary
+/// query bit on the wrong side of the window (1 V away) is fully rejected,
+/// which keeps the 9T4R array's ideal match counts equal to Eq. 8.
+pub const V_ROLLOFF_9T4R: f64 = 0.25;
 
 
 /// Current-limiter budget per cell (A).
@@ -165,6 +178,19 @@ impl AcamCell {
                 i_dis_low: 0.0,
                 i_dis_high: 0.0,
             },
+            CellKind::Analogue9T4R => {
+                // Graded charging: full current inside the window, linear
+                // roll-off with overdrive outside it (the analogue-distance
+                // behaviour of the 9T4R periphery).
+                let dist = (lo - v_in).max(0.0).max((v_in - hi).max(0.0));
+                let scale = (1.0 - dist / V_ROLLOFF_9T4R).max(0.0);
+                CellResponse {
+                    matched,
+                    i_charge: I_LIMIT * scale,
+                    i_dis_low: 0.0,
+                    i_dis_high: 0.0,
+                }
+            }
             CellKind::Precharging3T1R => {
                 // Discharge strength grows with how far outside the window
                 // the input sits (the MOS overdrive), saturating at I_DISCHARGE.
@@ -252,6 +278,25 @@ mod tests {
         let c1 = AcamCell::program(CellKind::Charging6T4R, v(0.5), v(1.5), &ideal, &mut r);
         assert!(c1.response(v(1.0), &ideal, &mut r).matched);
         assert!(!c1.response(v(0.0), &ideal, &mut r).matched);
+    }
+
+    #[test]
+    fn analogue_9t4r_grades_current_with_distance() {
+        let mut r = rng();
+        let ideal = Variability::ideal();
+        let c = AcamCell::program(CellKind::Analogue9T4R, 0.4, 0.6, &ideal, &mut r);
+        let inside = c.response(0.5, &ideal, &mut r);
+        assert!(inside.matched && (inside.i_charge - I_LIMIT).abs() < 1e-12);
+        // A near-miss still contributes current, graded by overdrive.
+        let near = c.response(0.65, &ideal, &mut r);
+        let far = c.response(0.75, &ideal, &mut r);
+        assert!(!near.matched && near.i_charge > 0.0);
+        assert!(far.i_charge < near.i_charge);
+        // Beyond the roll-off span the cell contributes nothing — binary
+        // query voltages (1 V apart) are fully rejected, preserving Eq. 8.
+        let wrong_bit = c.response(0.6 + V_ROLLOFF_9T4R + 0.01, &ideal, &mut r);
+        assert_eq!(wrong_bit.i_charge, 0.0);
+        assert!(c.response(0.1, &ideal, &mut r).i_charge == 0.0);
     }
 
     #[test]

@@ -191,6 +191,14 @@ pub struct ClassifyResponse {
     pub engine: &'static str,
     /// Backend that scored the request (override-resolved).
     pub backend: Backend,
+    /// The deployed [`MatchingBackend`] variant behind the `acam` route
+    /// (`"acam-9t4r"`, `"rbf"`, `"digital"`).  Additive v1 field; `None`
+    /// whenever the deployment runs the default `acam` variant **or** this
+    /// request resolved to a digital route (`fc`/`sim`/`softmax`) — in
+    /// both cases the wire form is byte-identical to pre-seam builds.
+    ///
+    /// [`MatchingBackend`]: crate::backend::MatchingBackend
+    pub backend_variant: Option<&'static str>,
     pub features: Option<Vec<f32>>,
     /// Index of the worker shard that served the request.  Additive v1
     /// field.  `None` only for un-sharded in-process deployments

@@ -156,6 +156,9 @@ impl ClassifyResponse {
             "backend".to_string(),
             Value::Str(self.backend.name().to_string()),
         );
+        if let Some(v) = self.backend_variant {
+            m.insert("backend_variant".to_string(), Value::Str(v.to_string()));
+        }
         if let Some(feats) = &self.features {
             m.insert(
                 "features".to_string(),
@@ -244,6 +247,11 @@ impl ClassifyResponse {
             timing,
             engine,
             backend,
+            backend_variant: obj
+                .get("backend_variant")
+                .and_then(Value::as_str)
+                .and_then(|s| s.parse::<crate::backend::BackendVariant>().ok())
+                .map(|v| v.name()),
             features: obj.get("features").and_then(Value::as_f32_vec),
             shard: obj.get("shard").and_then(Value::as_usize),
             degraded: obj.get("degraded").and_then(Value::as_bool),
@@ -361,6 +369,7 @@ mod tests {
             },
             engine: "interp",
             backend: Backend::FeatureCount,
+            backend_variant: Some("rbf"),
             features: Some(vec![0.5, 1.5]),
             shard: Some(2),
             degraded: Some(true),
@@ -382,6 +391,7 @@ mod tests {
         assert_eq!(back.timing, resp.timing);
         assert_eq!(back.features, resp.features);
         assert_eq!(back.shard, Some(2));
+        assert_eq!(back.backend_variant, Some("rbf"));
         assert_eq!(back.degraded, Some(true));
         assert_eq!(back.backend_state.as_deref(), Some("digital_fallback"));
         assert_eq!(back.store.as_deref(), Some("default"));
@@ -392,6 +402,7 @@ mod tests {
         // additive).
         let mut unsharded = resp;
         unsharded.shard = None;
+        unsharded.backend_variant = None;
         unsharded.degraded = None;
         unsharded.backend_state = None;
         unsharded.store = None;
@@ -399,6 +410,7 @@ mod tests {
         unsharded.cache = None;
         let v = jsonlite::parse(&unsharded.to_value().to_json()).unwrap();
         assert!(v.get("shard").is_none());
+        assert!(v.get("backend_variant").is_none());
         assert!(v.get("degraded").is_none());
         assert!(v.get("backend_state").is_none());
         assert!(v.get("store").is_none());
@@ -406,6 +418,7 @@ mod tests {
         assert!(v.get("cache").is_none());
         let back = ClassifyResponse::from_value(&v).unwrap();
         assert_eq!(back.shard, None);
+        assert_eq!(back.backend_variant, None);
         assert_eq!(back.degraded, None);
         assert_eq!(back.backend_state, None);
         assert_eq!(back.store, None);

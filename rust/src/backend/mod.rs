@@ -1,0 +1,738 @@
+//! The pluggable back-end matching seam — the [`MatchingBackend`] trait and
+//! its four variants, mirroring the front-end's `runtime::FrontEnd` seam.
+//!
+//! The paper deploys one fixed back-end: the RRAM-CMOS TXL-ACAM template
+//! matcher.  PAPERS.md names two drop-in alternatives from the same group —
+//! the RBF-neuron analogue classifier (arxiv 2606.14739) and the 9T4R ACAM
+//! cell (arxiv 2410.03414) — and the digital Eq. 8 matcher has always been
+//! the ladder's fallback special case.  This module makes all four
+//! first-class, selectable variants:
+//!
+//! | variant     | scoring kernel                           | search energy / cell | re-program / cell |
+//! |-------------|------------------------------------------|----------------------|-------------------|
+//! | `acam`      | TXL 6T4R/3T1R matchline + WTA (default)  | 185 fJ               | 80 pJ             |
+//! | `acam-9t4r` | 9T4R graded matchline + WTA              | 278 fJ               | 80 pJ             |
+//! | `rbf`       | Gaussian RBF neuron over Hamming distance| 92 fJ                | 40 pJ             |
+//! | `digital`   | packed popcount Eq. 8 (exact reference)  | 185 fJ envelope      | free              |
+//!
+//! The contract every unit implements: score/rank a binarised query,
+//! health-probe against the digital reference, (re-)program from a template
+//! set with a per-variant energy constant, absorb injected faults, and
+//! report per-classification energy.  The pipeline owns the *shared*
+//! serving state — the WTA/sense RNG stream, the variability corner, the
+//! re-program seed schedule — and passes it in, so the default `acam`
+//! variant replays the pre-seam instruction sequence bit for bit
+//! (predictions, RNG draws, energy figures, wire bytes).
+
+use std::str::FromStr;
+
+use crate::acam::cell::CellKind;
+use crate::acam::program::{binary_query_voltages, program_array, WindowMode};
+use crate::acam::{wta, AcamArray, ArrayConfig, Variability};
+use crate::energy::constants::{
+    ACAM_9T4R_CELL_ENERGY_FJ, RBF_CELL_ENERGY_FJ, RBF_PROGRAM_CELL_PJ, RRAM_PROGRAM_CELL_PJ,
+};
+use crate::energy::EnergyModel;
+use crate::error::Error;
+use crate::faults::{FaultInjector, FaultKind, StuckSet};
+use crate::matching;
+use crate::templates::TemplateSet;
+
+/// The selectable back-end variant (`--backend`, `backend.variant`,
+/// `HEC_BACKEND`).  Distinct from [`crate::config::Backend`], which routes
+/// *requests* (acam / fc / sim / softmax): the variant decides what
+/// hardware an `acam`-routed request lands on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendVariant {
+    /// The paper's TXL-ACAM array (6T4R or 3T1R cells) — the default,
+    /// pinned bitwise-identical to pre-seam serving.
+    Acam,
+    /// The 9T4R analogue ACAM cell (arxiv 2410.03414): graded matchline
+    /// currents, higher per-cell energy.
+    Acam9T4R,
+    /// The RBF-neuron classifier (arxiv 2606.14739): Gaussian bump over
+    /// Hamming distance, cheaper cells, 2-RRAM synapses.
+    Rbf,
+    /// The exact digital Eq. 8 matcher — the ladder's fallback path made
+    /// deployable in its own right.
+    Digital,
+}
+
+impl BackendVariant {
+    pub fn name(&self) -> &'static str {
+        match self {
+            BackendVariant::Acam => "acam",
+            BackendVariant::Acam9T4R => "acam-9t4r",
+            BackendVariant::Rbf => "rbf",
+            BackendVariant::Digital => "digital",
+        }
+    }
+
+    /// Whether the variant models analogue hardware that decays — i.e.
+    /// whether the canary/degradation ladder has anything to watch.  The
+    /// digital variant *is* the ladder's reference, so arming canaries on
+    /// it would only ever agree with itself.
+    pub fn analogue(&self) -> bool {
+        !matches!(self, BackendVariant::Digital)
+    }
+
+    /// All variants, in flag order (bench + CI matrix).
+    pub const ALL: [BackendVariant; 4] = [
+        BackendVariant::Acam,
+        BackendVariant::Acam9T4R,
+        BackendVariant::Rbf,
+        BackendVariant::Digital,
+    ];
+}
+
+impl FromStr for BackendVariant {
+    type Err = Error;
+    fn from_str(s: &str) -> Result<Self, Error> {
+        match s {
+            "acam" => Ok(BackendVariant::Acam),
+            "acam-9t4r" | "acam_9t4r" | "9t4r" => Ok(BackendVariant::Acam9T4R),
+            "rbf" => Ok(BackendVariant::Rbf),
+            "digital" => Ok(BackendVariant::Digital),
+            other => Err(Error::Config(format!(
+                "unknown backend variant '{other}' (expected acam | acam-9t4r | rbf | digital)"
+            ))),
+        }
+    }
+}
+
+/// Ranked classification outcome of one back-end search.
+pub struct ScoreOutcome {
+    /// `(class, score)` descending, truncated to the requested k.
+    pub ranked: Vec<(usize, f64)>,
+    /// Back-end search energy (nJ).
+    pub energy_nj: f64,
+}
+
+/// One canary probe's evidence, before the pipeline compares it with the
+/// digital reference.
+pub struct ProbeOutcome {
+    /// The variant's top-1 class for the probe.
+    pub top_class: usize,
+    /// The strongest raw row similarity (the analogue match margin input).
+    pub top_similarity: f64,
+    /// Search energy spent on the probe (nJ).
+    pub energy_nj: f64,
+}
+
+/// The back-end seam.  One unit == one programmed matching engine bound to
+/// a template set; the pipeline keeps a unit per store binding.
+///
+/// Shared serving state (the WTA RNG stream, the active variability
+/// corner, the energy model) stays in the pipeline and is passed per call —
+/// that is what pins the default variant's RNG draw order to the pre-seam
+/// code exactly.
+pub trait MatchingBackend: Send {
+    fn variant(&self) -> BackendVariant;
+
+    /// Score an already-binarised query: ranked top-k `(class, score)` plus
+    /// the search energy.
+    fn score(
+        &mut self,
+        bits: &[u8],
+        set: &TemplateSet,
+        num_classes: usize,
+        k: usize,
+        energy: &EnergyModel,
+        var: &Variability,
+        rng: &mut crate::rng::Rng,
+    ) -> ScoreOutcome;
+
+    /// Evaluate one canary probe (same kernel as [`Self::score`], plus the
+    /// raw top-row similarity the ladder's margin tracks).
+    fn probe(
+        &mut self,
+        bits: &[u8],
+        set: &TemplateSet,
+        num_classes: usize,
+        energy: &EnergyModel,
+        var: &Variability,
+        rng: &mut crate::rng::Rng,
+    ) -> ProbeOutcome;
+
+    /// Re-program the unit from `set` at the `var` corner with a
+    /// deterministic seed (clears drift/read-noise escalations; the caller
+    /// re-applies sticky stuck sets).
+    fn reprogram(&mut self, set: &TemplateSet, var: &Variability, seed: u64);
+
+    /// Energy (nJ) one full (re-)programming of `n_templates x n_features`
+    /// cells costs on this variant.
+    fn reprogram_nj(&self, n_templates: u64, n_features: u64) -> f64;
+
+    /// Build a sibling unit of the same variant/periphery programmed from a
+    /// different template set (tenant store bindings).
+    fn spawn(&self, set: &TemplateSet, var: &Variability, seed: u64) -> Box<dyn MatchingBackend>;
+
+    /// Absorb one injected fault (stall faults are the worker loop's
+    /// business and are ignored by every unit).
+    fn apply_fault(&mut self, kind: &FaultKind, inj: &mut FaultInjector);
+
+    /// Re-apply sticky stuck-cell sets after a re-programming; returns the
+    /// number of cells stuck.
+    fn apply_sticky(&mut self, sets: &[StuckSet]) -> usize;
+
+    /// Static full-match headroom at the design point (1.0 where the
+    /// concept does not apply).
+    fn headroom(&self) -> f64;
+}
+
+/// Build a unit of `variant` programmed from `set`.  `cell_kind` selects
+/// the TXL pixel for the `acam` variant (the 9T4R variant always uses its
+/// own cell).
+pub fn build_unit(
+    variant: BackendVariant,
+    cell_kind: CellKind,
+    set: &TemplateSet,
+    var: &Variability,
+    seed: u64,
+) -> Box<dyn MatchingBackend> {
+    match variant {
+        BackendVariant::Acam => Box::new(AcamUnit::build(
+            BackendVariant::Acam,
+            ArrayConfig {
+                kind: cell_kind,
+                ..Default::default()
+            },
+            set,
+            var,
+            seed,
+        )),
+        BackendVariant::Acam9T4R => Box::new(AcamUnit::build(
+            BackendVariant::Acam9T4R,
+            ArrayConfig {
+                kind: CellKind::Analogue9T4R,
+                cell_energy_fj: ACAM_9T4R_CELL_ENERGY_FJ,
+                ..Default::default()
+            },
+            set,
+            var,
+            seed,
+        )),
+        BackendVariant::Rbf => Box::new(RbfUnit::build(set, var, seed)),
+        BackendVariant::Digital => Box::new(DigitalUnit),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ACAM family: the TXL array (default) and the 9T4R graded array.
+// ---------------------------------------------------------------------------
+
+/// An [`AcamArray`] behind the seam.  `variant` distinguishes the default
+/// TXL array from the 9T4R build (same array machinery, different cell
+/// model + energy constant carried in the `ArrayConfig`).
+struct AcamUnit {
+    variant: BackendVariant,
+    arr: AcamArray,
+}
+
+impl AcamUnit {
+    fn build(
+        variant: BackendVariant,
+        config: ArrayConfig,
+        set: &TemplateSet,
+        var: &Variability,
+        seed: u64,
+    ) -> Self {
+        AcamUnit {
+            variant,
+            arr: program_array(set, WindowMode::Binary, config, var.clone(), seed),
+        }
+    }
+}
+
+impl MatchingBackend for AcamUnit {
+    fn variant(&self) -> BackendVariant {
+        self.variant
+    }
+
+    fn score(
+        &mut self,
+        bits: &[u8],
+        set: &TemplateSet,
+        num_classes: usize,
+        k: usize,
+        _energy: &EnergyModel,
+        var: &Variability,
+        rng: &mut crate::rng::Rng,
+    ) -> ScoreOutcome {
+        let search = self.arr.search(&binary_query_voltages(bits));
+        let mut ranked = wta::rank_classes(&search.similarity, &set.class_of, num_classes, var, rng);
+        ranked.truncate(k);
+        ScoreOutcome {
+            ranked,
+            energy_nj: search.energy_nj,
+        }
+    }
+
+    fn probe(
+        &mut self,
+        bits: &[u8],
+        set: &TemplateSet,
+        num_classes: usize,
+        _energy: &EnergyModel,
+        var: &Variability,
+        rng: &mut crate::rng::Rng,
+    ) -> ProbeOutcome {
+        let search = self.arr.search(&binary_query_voltages(bits));
+        let ranked = wta::rank_classes(&search.similarity, &set.class_of, num_classes, var, rng);
+        ProbeOutcome {
+            top_class: ranked[0].0,
+            top_similarity: search.similarity.iter().cloned().fold(0.0, f64::max),
+            energy_nj: search.energy_nj,
+        }
+    }
+
+    fn reprogram(&mut self, set: &TemplateSet, var: &Variability, seed: u64) {
+        let config = self.arr.config.clone();
+        self.arr = program_array(set, WindowMode::Binary, config, var.clone(), seed);
+    }
+
+    fn reprogram_nj(&self, n_templates: u64, n_features: u64) -> f64 {
+        (n_templates * n_features) as f64 * RRAM_PROGRAM_CELL_PJ * 1e-3
+    }
+
+    fn spawn(&self, set: &TemplateSet, var: &Variability, seed: u64) -> Box<dyn MatchingBackend> {
+        Box::new(AcamUnit {
+            variant: self.variant,
+            arr: program_array(set, WindowMode::Binary, self.arr.config.clone(), var.clone(), seed),
+        })
+    }
+
+    fn apply_fault(&mut self, kind: &FaultKind, inj: &mut FaultInjector) {
+        match kind {
+            FaultKind::Drift { level } => {
+                self.arr.variability = Variability::at_level(*level);
+            }
+            FaultKind::ReadNoise { sigma } => {
+                self.arr.variability.read_sigma = *sigma;
+            }
+            FaultKind::StuckCells { fraction, g } => {
+                let set = inj.materialize_stuck(self.arr.num_rows(), self.arr.width(), *fraction, *g);
+                self.arr.stick_cells(&set.cells, set.g);
+            }
+            FaultKind::Stall { .. } => {}
+        }
+    }
+
+    fn apply_sticky(&mut self, sets: &[StuckSet]) -> usize {
+        sets.iter().map(|s| self.arr.stick_cells(&s.cells, s.g)).sum()
+    }
+
+    fn headroom(&self) -> f64 {
+        self.arr.full_match_headroom()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// RBF-neuron variant (arxiv 2606.14739).
+// ---------------------------------------------------------------------------
+
+/// Gaussian width of the RBF bump, as a fraction of the feature width:
+/// `sigma = n_features * RBF_SIGMA_FRACTION` Hamming units.  At 784
+/// features sigma is 98 — templates a full class-distance away (hundreds of
+/// mismatching bits) score essentially zero while near matches keep
+/// meaningful separation, mirroring the published neuron's tuning range.
+pub const RBF_SIGMA_FRACTION: f64 = 0.125;
+
+/// The RBF-neuron classifier: one neuron per template row, each computing
+/// `exp(-d^2 / (2 sigma^2))` over the (programming-weighted) Hamming
+/// distance `d` between the query and its stored centre.
+///
+/// Behavioural analogue model:
+/// * programming variability perturbs each synapse's mismatch weight
+///   multiplicatively (log-normal, like the RRAM conductance spread);
+/// * read noise multiplies each neuron's bump output per evaluation,
+///   drawn from the unit's own RNG stream (mirroring the array-owned
+///   read-noise stream of the ACAM sim);
+/// * a stuck synapse always reports mismatch — its contribution to `d`
+///   becomes constant, degrading that neuron's peak score;
+/// * the shared WTA stage (offset noise from the *pipeline* RNG) ranks the
+///   per-neuron scores, exactly as it ranks ACAM matchline voltages.
+struct RbfUnit {
+    /// Stored centres, row-major `rows x width` (copied at program time).
+    centres: Vec<u8>,
+    /// Per-synapse mismatch weights (1.0 ideal; log-normal programming
+    /// spread otherwise).
+    weights: Vec<f64>,
+    stuck: Vec<bool>,
+    rows: usize,
+    width: usize,
+    /// Gaussian width in Hamming units.
+    sigma: f64,
+    /// The unit's read-noise corner (updated by drift/read-noise faults).
+    var: Variability,
+    /// Unit-owned RNG: consumed at programming, then per evaluation when
+    /// read noise is active — never touches the pipeline's WTA stream.
+    rng: crate::rng::Rng,
+}
+
+impl RbfUnit {
+    fn build(set: &TemplateSet, var: &Variability, seed: u64) -> Self {
+        let rows = set.num_templates();
+        let width = set.num_features();
+        let mut unit = RbfUnit {
+            centres: Vec::new(),
+            weights: Vec::new(),
+            stuck: Vec::new(),
+            rows,
+            width,
+            sigma: (width as f64 * RBF_SIGMA_FRACTION).max(1.0),
+            var: var.clone(),
+            rng: crate::rng::Rng::new(seed),
+        };
+        unit.program(set, var, seed);
+        unit
+    }
+
+    fn program(&mut self, set: &TemplateSet, var: &Variability, seed: u64) {
+        self.rows = set.num_templates();
+        self.width = set.num_features();
+        self.sigma = (self.width as f64 * RBF_SIGMA_FRACTION).max(1.0);
+        self.var = var.clone();
+        self.rng = crate::rng::Rng::new(seed);
+        self.centres = set.templates.iter().flatten().copied().collect();
+        self.stuck = vec![false; self.rows * self.width];
+        self.weights = if var.program_sigma > 0.0 {
+            (0..self.rows * self.width)
+                .map(|_| self.rng.normal(0.0, var.program_sigma).exp())
+                .collect()
+        } else {
+            vec![1.0; self.rows * self.width]
+        };
+    }
+
+    /// Per-neuron Gaussian scores for one query (consumes the unit RNG for
+    /// read noise when active).
+    fn neuron_scores(&mut self, bits: &[u8]) -> Vec<f64> {
+        let mut scores = Vec::with_capacity(self.rows);
+        for r in 0..self.rows {
+            let base = r * self.width;
+            let mut d = 0f64;
+            for j in 0..self.width {
+                let mismatch = self.stuck[base + j] || self.centres[base + j] != bits[j];
+                if mismatch {
+                    d += self.weights[base + j];
+                }
+            }
+            let mut s = (-d * d / (2.0 * self.sigma * self.sigma)).exp();
+            if self.var.read_sigma > 0.0 {
+                s *= self.rng.normal(0.0, self.var.read_sigma).exp();
+            }
+            scores.push(s);
+        }
+        scores
+    }
+
+    fn energy_nj(&self) -> f64 {
+        (self.rows * self.width) as f64 * RBF_CELL_ENERGY_FJ * 1e-6
+    }
+}
+
+impl MatchingBackend for RbfUnit {
+    fn variant(&self) -> BackendVariant {
+        BackendVariant::Rbf
+    }
+
+    fn score(
+        &mut self,
+        bits: &[u8],
+        set: &TemplateSet,
+        num_classes: usize,
+        k: usize,
+        _energy: &EnergyModel,
+        var: &Variability,
+        rng: &mut crate::rng::Rng,
+    ) -> ScoreOutcome {
+        let scores = self.neuron_scores(bits);
+        let mut ranked = wta::rank_classes(&scores, &set.class_of, num_classes, var, rng);
+        ranked.truncate(k);
+        ScoreOutcome {
+            ranked,
+            energy_nj: self.energy_nj(),
+        }
+    }
+
+    fn probe(
+        &mut self,
+        bits: &[u8],
+        set: &TemplateSet,
+        num_classes: usize,
+        _energy: &EnergyModel,
+        var: &Variability,
+        rng: &mut crate::rng::Rng,
+    ) -> ProbeOutcome {
+        let scores = self.neuron_scores(bits);
+        let ranked = wta::rank_classes(&scores, &set.class_of, num_classes, var, rng);
+        ProbeOutcome {
+            top_class: ranked[0].0,
+            top_similarity: scores.iter().cloned().fold(0.0, f64::max),
+            energy_nj: self.energy_nj(),
+        }
+    }
+
+    fn reprogram(&mut self, set: &TemplateSet, var: &Variability, seed: u64) {
+        self.program(set, var, seed);
+    }
+
+    fn reprogram_nj(&self, n_templates: u64, n_features: u64) -> f64 {
+        (n_templates * n_features) as f64 * RBF_PROGRAM_CELL_PJ * 1e-3
+    }
+
+    fn spawn(&self, set: &TemplateSet, var: &Variability, seed: u64) -> Box<dyn MatchingBackend> {
+        Box::new(RbfUnit::build(set, var, seed))
+    }
+
+    fn apply_fault(&mut self, kind: &FaultKind, inj: &mut FaultInjector) {
+        match kind {
+            FaultKind::Drift { level } => {
+                self.var = Variability::at_level(*level);
+            }
+            FaultKind::ReadNoise { sigma } => {
+                self.var.read_sigma = *sigma;
+            }
+            FaultKind::StuckCells { fraction, g } => {
+                let set = inj.materialize_stuck(self.rows, self.width, *fraction, *g);
+                self.apply_sticky(std::slice::from_ref(&set));
+            }
+            FaultKind::Stall { .. } => {}
+        }
+    }
+
+    fn apply_sticky(&mut self, sets: &[StuckSet]) -> usize {
+        let mut stuck = 0;
+        for s in sets {
+            for &(r, c) in &s.cells {
+                if r < self.rows && c < self.width {
+                    self.stuck[r * self.width + c] = true;
+                    stuck += 1;
+                }
+            }
+        }
+        stuck
+    }
+
+    fn headroom(&self) -> f64 {
+        1.0
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Digital variant: the exact Eq. 8 reference as a deployable back-end.
+// ---------------------------------------------------------------------------
+
+/// The packed popcount matcher — bitwise-identical to the degradation
+/// ladder's `digital_fallback` serving path, costed at the same digital
+/// envelope.  Stateless: templates live in the store, nothing to program,
+/// nothing that decays (so the canary ladder never arms on it).
+struct DigitalUnit;
+
+impl MatchingBackend for DigitalUnit {
+    fn variant(&self) -> BackendVariant {
+        BackendVariant::Digital
+    }
+
+    fn score(
+        &mut self,
+        bits: &[u8],
+        set: &TemplateSet,
+        num_classes: usize,
+        k: usize,
+        energy: &EnergyModel,
+        _var: &Variability,
+        _rng: &mut crate::rng::Rng,
+    ) -> ScoreOutcome {
+        let top = matching::classify_feature_count_topk(bits, set, num_classes, k);
+        ScoreOutcome {
+            ranked: top.into_iter().map(|(c, s)| (c, s as f64)).collect(),
+            energy_nj: energy.backend_nj(set.num_templates() as u64, set.num_features() as u64),
+        }
+    }
+
+    fn probe(
+        &mut self,
+        bits: &[u8],
+        set: &TemplateSet,
+        num_classes: usize,
+        energy: &EnergyModel,
+        _var: &Variability,
+        _rng: &mut crate::rng::Rng,
+    ) -> ProbeOutcome {
+        let top = matching::classify_feature_count_topk(bits, set, num_classes, 1);
+        ProbeOutcome {
+            top_class: top[0].0,
+            top_similarity: top[0].1 as f64 / set.num_features().max(1) as f64,
+            energy_nj: energy.backend_nj(set.num_templates() as u64, set.num_features() as u64),
+        }
+    }
+
+    fn reprogram(&mut self, _set: &TemplateSet, _var: &Variability, _seed: u64) {}
+
+    fn reprogram_nj(&self, _n_templates: u64, _n_features: u64) -> f64 {
+        0.0
+    }
+
+    fn spawn(&self, _set: &TemplateSet, _var: &Variability, _seed: u64) -> Box<dyn MatchingBackend> {
+        Box::new(DigitalUnit)
+    }
+
+    fn apply_fault(&mut self, _kind: &FaultKind, _inj: &mut FaultInjector) {}
+
+    fn apply_sticky(&mut self, _sets: &[StuckSet]) -> usize {
+        0
+    }
+
+    fn headroom(&self) -> f64 {
+        1.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::templates::TemplateStore;
+
+    fn toy_set() -> TemplateStore {
+        // 4 classes, 16 features, clearly separated centres.
+        let classes = 4usize;
+        let nf = 16usize;
+        let per_class = 6usize;
+        let mut rng = crate::rng::Rng::new(5);
+        let n = classes * per_class;
+        let mut feats = vec![0f32; n * nf];
+        let mut labels = vec![0usize; n];
+        for i in 0..n {
+            let c = i % classes;
+            labels[i] = c;
+            for j in 0..nf {
+                let base = if j % classes == c { 1.0 } else { 0.0 };
+                feats[i * nf + j] = base + rng.range(-0.1, 0.1) as f32;
+            }
+        }
+        TemplateStore::from_features(&feats, &labels, nf, classes, 3).unwrap()
+    }
+
+    #[test]
+    fn variant_names_parse_and_roundtrip() {
+        for v in BackendVariant::ALL {
+            assert_eq!(v.name().parse::<BackendVariant>().unwrap(), v);
+        }
+        assert_eq!("9t4r".parse::<BackendVariant>().unwrap(), BackendVariant::Acam9T4R);
+        assert_eq!("acam_9t4r".parse::<BackendVariant>().unwrap(), BackendVariant::Acam9T4R);
+        assert!("nope".parse::<BackendVariant>().is_err());
+        assert!(BackendVariant::Acam.analogue());
+        assert!(BackendVariant::Rbf.analogue());
+        assert!(!BackendVariant::Digital.analogue());
+    }
+
+    #[test]
+    fn every_variant_classifies_clean_templates_correctly() {
+        let store = toy_set();
+        let set = store.set(1).unwrap();
+        let energy = EnergyModel::default();
+        let ideal = Variability::ideal();
+        for variant in BackendVariant::ALL {
+            let mut unit = build_unit(variant, CellKind::Charging6T4R, set, &ideal, 42);
+            let mut rng = crate::rng::Rng::new(0);
+            for (t, &c) in set.templates.iter().zip(set.class_of.iter()) {
+                let out = unit.score(t, set, store.num_classes, 2, &energy, &ideal, &mut rng);
+                assert_eq!(out.ranked[0].0, c, "{} top-1 on its own template", variant.name());
+                assert!(out.energy_nj >= 0.0);
+                assert!(out.ranked.len() <= 2);
+            }
+        }
+    }
+
+    #[test]
+    fn probe_agrees_with_digital_on_ideal_devices() {
+        let store = toy_set();
+        let set = store.set(1).unwrap();
+        let energy = EnergyModel::default();
+        let ideal = Variability::ideal();
+        for variant in BackendVariant::ALL {
+            let mut unit = build_unit(variant, CellKind::Charging6T4R, set, &ideal, 7);
+            let mut rng = crate::rng::Rng::new(1);
+            for t in &set.templates {
+                let digital =
+                    matching::classify_feature_count_topk(t, set, store.num_classes, 1)[0].0;
+                let p = unit.probe(t, set, store.num_classes, &energy, &ideal, &mut rng);
+                assert_eq!(p.top_class, digital, "{}", variant.name());
+                assert!(p.top_similarity > 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn per_variant_energy_constants_order() {
+        let store = toy_set();
+        let set = store.set(1).unwrap();
+        let energy = EnergyModel::default();
+        let ideal = Variability::ideal();
+        let mut rng = crate::rng::Rng::new(2);
+        let q = &set.templates[0];
+        let nt = set.num_templates() as u64;
+        let nf = set.num_features() as u64;
+        let mut acam = build_unit(BackendVariant::Acam, CellKind::Charging6T4R, set, &ideal, 1);
+        let mut a9 = build_unit(BackendVariant::Acam9T4R, CellKind::Charging6T4R, set, &ideal, 1);
+        let mut rbf = build_unit(BackendVariant::Rbf, CellKind::Charging6T4R, set, &ideal, 1);
+        let mut dig = build_unit(BackendVariant::Digital, CellKind::Charging6T4R, set, &ideal, 1);
+        let e_acam = acam.score(q, set, 4, 1, &energy, &ideal, &mut rng).energy_nj;
+        let e_a9 = a9.score(q, set, 4, 1, &energy, &ideal, &mut rng).energy_nj;
+        let e_rbf = rbf.score(q, set, 4, 1, &energy, &ideal, &mut rng).energy_nj;
+        let e_dig = dig.score(q, set, 4, 1, &energy, &ideal, &mut rng).energy_nj;
+        // Search: 9T4R > acam == digital envelope > rbf.
+        assert!(e_a9 > e_acam, "{e_a9} vs {e_acam}");
+        assert!((e_dig - e_acam).abs() < 1e-12);
+        assert!(e_rbf < e_acam);
+        // Re-program: acam == 9t4r (4R pixels) > rbf (2R synapses) > digital (free).
+        assert_eq!(acam.reprogram_nj(nt, nf), a9.reprogram_nj(nt, nf));
+        assert!(rbf.reprogram_nj(nt, nf) < acam.reprogram_nj(nt, nf));
+        assert!(rbf.reprogram_nj(nt, nf) > 0.0);
+        assert_eq!(dig.reprogram_nj(nt, nf), 0.0);
+    }
+
+    #[test]
+    fn rbf_stuck_synapses_degrade_peak_score() {
+        let store = toy_set();
+        let set = store.set(1).unwrap();
+        let energy = EnergyModel::default();
+        let ideal = Variability::ideal();
+        let mut unit = build_unit(BackendVariant::Rbf, CellKind::Charging6T4R, set, &ideal, 9);
+        let mut rng = crate::rng::Rng::new(3);
+        let q = &set.templates[0];
+        let clean = unit
+            .probe(q, set, store.num_classes, &energy, &ideal, &mut rng)
+            .top_similarity;
+        let cells: Vec<(usize, usize)> = (0..set.num_features()).map(|c| (0, c)).collect();
+        let stuck = unit.apply_sticky(&[StuckSet { cells, g: 1e-6 }]);
+        assert_eq!(stuck, set.num_features());
+        let degraded = unit
+            .probe(q, set, store.num_classes, &energy, &ideal, &mut rng)
+            .top_similarity;
+        assert!(degraded < clean, "{degraded} vs {clean}");
+    }
+
+    #[test]
+    fn reprogram_restores_rbf_after_faults() {
+        let store = toy_set();
+        let set = store.set(1).unwrap();
+        let energy = EnergyModel::default();
+        let ideal = Variability::ideal();
+        let mut unit = build_unit(BackendVariant::Rbf, CellKind::Charging6T4R, set, &ideal, 9);
+        let mut rng = crate::rng::Rng::new(4);
+        let q = &set.templates[1];
+        let clean = unit
+            .probe(q, set, store.num_classes, &energy, &ideal, &mut rng)
+            .top_similarity;
+        let cells: Vec<(usize, usize)> = (0..set.num_features()).map(|c| (1, c)).collect();
+        unit.apply_sticky(&[StuckSet { cells, g: 1e-6 }]);
+        unit.reprogram(set, &ideal, 11);
+        let restored = unit
+            .probe(q, set, store.num_classes, &energy, &ideal, &mut rng)
+            .top_similarity;
+        assert_eq!(restored, clean);
+    }
+}

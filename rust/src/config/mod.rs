@@ -7,6 +7,7 @@ use std::path::{Path, PathBuf};
 
 
 use crate::acam::cell::CellKind;
+use crate::backend::BackendVariant;
 use crate::error::{Error, Result};
 
 /// Which execution engine runs the student CNN front-end
@@ -392,8 +393,13 @@ pub struct ServeConfig {
     /// serial path (though thread count never changes the numbers — see
     /// `runtime::backend::fast`).
     pub threads: usize,
-    /// Classification back-end.
+    /// Classification back-end (request routing: acam / fc / sim / softmax).
     pub backend: Backend,
+    /// Which hardware variant serves `acam`-routed requests (the
+    /// [`crate::backend::MatchingBackend`] seam): `None` resolves through
+    /// `HEC_BACKEND`, else the default TXL ACAM — see
+    /// [`ServeConfig::resolve_backend_variant`].
+    pub backend_variant: Option<BackendVariant>,
     /// Templates per class (Table II: 1, 2 or 3).
     pub templates_per_class: usize,
     /// Serve through the jnp-lowered front-end variant (XLA-native convs —
@@ -417,6 +423,7 @@ impl Default for ServeConfig {
             engine: Engine::default(),
             threads: 0,
             backend: Backend::AcamSim,
+            backend_variant: None,
             templates_per_class: 1,
             use_fast_frontend: true,
             batch: BatchConfig::default(),
@@ -444,8 +451,35 @@ impl ServeConfig {
         if let Some(v) = doc.get("threads").and_then(|v| v.as_usize()) {
             cfg.threads = v;
         }
-        if let Some(v) = doc.get("backend").and_then(|v| v.as_str()) {
-            cfg.backend = v.parse()?;
+        if let Some(b) = doc.get("backend") {
+            if let Some(v) = b.as_str() {
+                // String form: a route name ("acam"/"fc"/"sim"/"softmax"),
+                // or a variant name ("acam-9t4r"/"rbf"/"digital") which
+                // implies the acam route on that hardware.
+                match v.parse::<Backend>() {
+                    Ok(route) => cfg.backend = route,
+                    Err(_) => match v.parse::<BackendVariant>() {
+                        Ok(variant) => {
+                            cfg.backend = Backend::AcamSim;
+                            cfg.backend_variant = Some(variant);
+                        }
+                        Err(_) => {
+                            return Err(Error::Config(format!(
+                                "unknown backend '{v}' (routes: acam | fc | sim | softmax; \
+                                 variants: acam | acam-9t4r | rbf | digital)"
+                            )))
+                        }
+                    },
+                }
+            } else {
+                // Object form: {"route": "...", "variant": "..."}.
+                if let Some(v) = b.get("route").and_then(|v| v.as_str()) {
+                    cfg.backend = v.parse()?;
+                }
+                if let Some(v) = b.get("variant").and_then(|v| v.as_str()) {
+                    cfg.backend_variant = Some(v.parse()?);
+                }
+            }
         }
         if let Some(v) = doc.get("templates_per_class").and_then(|v| v.as_usize()) {
             cfg.templates_per_class = v;
@@ -542,6 +576,7 @@ impl ServeConfig {
                 cfg.acam.cell_kind = match v {
                     "6t4r" | "charging" => CellKind::Charging6T4R,
                     "3t1r" | "precharging" => CellKind::Precharging3T1R,
+                    "9t4r" | "analogue" => CellKind::Analogue9T4R,
                     other => return Err(Error::Config(format!("unknown cell kind: {other}"))),
                 };
             }
@@ -626,6 +661,30 @@ impl ServeConfig {
                 .map(Some)
                 .map_err(|e| Error::Config(format!("bad fault plan: {e}"))),
             None => Ok(None),
+        }
+    }
+
+    /// Effective back-end variant for `acam`-routed requests.  Precedence:
+    /// explicit `backend_variant` (config file `backend.variant` /
+    /// `--backend <variant>`) > `HEC_BACKEND` env > the default TXL
+    /// [`BackendVariant::Acam`].  A malformed env value is a config error —
+    /// a typo'd variant must fail loudly at startup, not silently serve the
+    /// default hardware.
+    pub fn resolve_backend_variant(&self) -> Result<BackendVariant> {
+        if let Some(v) = self.backend_variant {
+            return Ok(v);
+        }
+        match std::env::var("HEC_BACKEND") {
+            Ok(s) if !s.trim().is_empty() => {
+                let s = s.trim();
+                s.parse().map_err(|_| {
+                    Error::Config(format!(
+                        "HEC_BACKEND='{s}' is not a backend variant \
+                         (acam | acam-9t4r | rbf | digital)"
+                    ))
+                })
+            }
+            _ => Ok(BackendVariant::Acam),
         }
     }
 
@@ -736,6 +795,8 @@ impl ServeConfig {
         validate_tenants(&self.stores.tenants)?;
         // Surface a malformed plan spec at load time, not first use.
         self.resolve_fault_plan()?;
+        // Same for a malformed HEC_BACKEND variant.
+        self.resolve_backend_variant()?;
         Ok(())
     }
 }
@@ -800,6 +861,59 @@ mod tests {
         std::fs::write(&path, r#"{"engine": "pjrt", "backend": "fc"}"#).unwrap();
         let cfg = ServeConfig::load(&path).unwrap();
         assert_eq!(cfg.engine, Engine::Pjrt);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn backend_variant_loads_from_string_and_object_forms() {
+        let dir = std::env::temp_dir().join(format!("hec-varcfg-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("serve.json");
+
+        // String form: a variant name implies the acam route.
+        std::fs::write(&path, r#"{"backend": "acam-9t4r"}"#).unwrap();
+        let cfg = ServeConfig::load(&path).unwrap();
+        assert_eq!(cfg.backend, Backend::AcamSim);
+        assert_eq!(cfg.backend_variant, Some(BackendVariant::Acam9T4R));
+        assert_eq!(
+            cfg.resolve_backend_variant().unwrap(),
+            BackendVariant::Acam9T4R
+        );
+
+        // String form: a route name leaves the variant unset (env/default).
+        std::fs::write(&path, r#"{"backend": "fc"}"#).unwrap();
+        let cfg = ServeConfig::load(&path).unwrap();
+        assert_eq!(cfg.backend, Backend::FeatureCount);
+        assert_eq!(cfg.backend_variant, None);
+
+        // Object form: independent route + variant.
+        std::fs::write(&path, r#"{"backend": {"route": "acam", "variant": "rbf"}}"#).unwrap();
+        let cfg = ServeConfig::load(&path).unwrap();
+        assert_eq!(cfg.backend, Backend::AcamSim);
+        assert_eq!(cfg.backend_variant, Some(BackendVariant::Rbf));
+
+        // Unknown names are loud errors.
+        std::fs::write(&path, r#"{"backend": "warp"}"#).unwrap();
+        assert!(ServeConfig::load(&path).is_err());
+        std::fs::write(&path, r#"{"backend": {"variant": "warp"}}"#).unwrap();
+        assert!(ServeConfig::load(&path).is_err());
+
+        // Default: no explicit variant resolves to the TXL ACAM (unless
+        // HEC_BACKEND is set, which the suite never does).
+        let d = ServeConfig::default();
+        assert_eq!(d.backend_variant, None);
+        assert_eq!(d.resolve_backend_variant().unwrap(), BackendVariant::Acam);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn cell_kind_9t4r_loads_from_config_file() {
+        let dir = std::env::temp_dir().join(format!("hec-9t4rcfg-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("serve.json");
+        std::fs::write(&path, r#"{"acam": {"cell_kind": "9t4r"}}"#).unwrap();
+        let cfg = ServeConfig::load(&path).unwrap();
+        assert_eq!(cfg.acam.cell_kind, CellKind::Analogue9T4R);
         std::fs::remove_dir_all(&dir).ok();
     }
 

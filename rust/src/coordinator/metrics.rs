@@ -140,6 +140,15 @@ pub struct Metrics {
     pub cache_entries: AtomicU64,
     /// Modelled energy, micro-nJ integer (nJ * 1e3) to stay in atomics.
     energy_mnj: AtomicU64,
+    /// Back-end energy attributed to the deployed [`MatchingBackend`]
+    /// variant (micro-nJ), and end-to-end latency of requests served by
+    /// it.  Only rendered into `/metrics` for a non-default variant
+    /// ([`prometheus_variant`]), so a default `acam` deployment's
+    /// exposition text stays byte-identical to pre-seam builds.
+    ///
+    /// [`MatchingBackend`]: crate::backend::MatchingBackend
+    variant_energy_mnj: AtomicU64,
+    pub variant_latency: Histogram,
 }
 
 impl Metrics {
@@ -155,6 +164,15 @@ impl Metrics {
 
     pub fn energy_nj(&self) -> f64 {
         self.energy_mnj.load(Ordering::Relaxed) as f64 / 1e3
+    }
+
+    pub fn add_variant_energy_nj(&self, nj: f64) {
+        self.variant_energy_mnj
+            .fetch_add((nj * 1e3).round() as u64, Ordering::Relaxed);
+    }
+
+    pub fn variant_energy_nj(&self) -> f64 {
+        self.variant_energy_mnj.load(Ordering::Relaxed) as f64 / 1e3
     }
 
     /// Saturating gauge decrement (gauges never wrap below zero even if a
@@ -535,6 +553,54 @@ pub fn prometheus_cache(
     }
 }
 
+/// Render the per-variant back-end Prometheus series: the modelled
+/// back-end energy attributed to the deployed `MatchingBackend` variant
+/// and the end-to-end latency of the requests it served, both carrying a
+/// `variant` label.  `labeled` adds a `shard="i"` label per entry (the
+/// sharded surface); `false` renders the single-pipeline surface without
+/// it.  Appended by `/metrics` **only when the deployed variant is not
+/// the default `acam`**, so a default deployment's exposition text stays
+/// byte-identical to pre-seam builds.
+pub fn prometheus_variant(
+    variant: &'static str,
+    shards: &[std::sync::Arc<Metrics>],
+    labeled: bool,
+    out: &mut String,
+) {
+    use std::fmt::Write as _;
+    let name = "hec_variant_energy_nanojoules_total";
+    let _ = writeln!(
+        out,
+        "# HELP {name} Modelled back-end energy by MatchingBackend variant (nJ)"
+    );
+    let _ = writeln!(out, "# TYPE {name} counter");
+    for (i, m) in shards.iter().enumerate() {
+        if labeled {
+            let _ = writeln!(
+                out,
+                "{name}{{variant=\"{variant}\",shard=\"{i}\"}} {}",
+                m.variant_energy_nj()
+            );
+        } else {
+            let _ = writeln!(out, "{name}{{variant=\"{variant}\"}} {}", m.variant_energy_nj());
+        }
+    }
+    let name = "hec_variant_latency_microseconds";
+    let _ = writeln!(
+        out,
+        "# HELP {name} End-to-end request latency by MatchingBackend variant (us), power-of-two buckets"
+    );
+    let _ = writeln!(out, "# TYPE {name} histogram");
+    for (i, m) in shards.iter().enumerate() {
+        let labels = if labeled {
+            format!("variant=\"{variant}\",shard=\"{i}\"")
+        } else {
+            format!("variant=\"{variant}\"")
+        };
+        m.variant_latency.render_prometheus(name, &labels, out);
+    }
+}
+
 /// Render the degradation-ladder Prometheus series (`shard`-labelled), one
 /// tuple per shard: `(backend_state, last canary accuracy, re-programs)`.
 /// Appended after [`prometheus_shards`] by the sharded `/metrics` — but
@@ -894,6 +960,35 @@ mod tests {
         let mut single = String::new();
         prometheus_cache(&[a], false, &mut single);
         assert!(single.contains("hec_cache_hits_total 7"), "{single}");
+        assert!(!single.contains("shard="), "{single}");
+    }
+
+    #[test]
+    fn prometheus_variant_block_labels_energy_and_latency() {
+        let a = std::sync::Arc::new(Metrics::default());
+        a.add_variant_energy_nj(2.5);
+        a.variant_latency.record_us(10);
+        let b = std::sync::Arc::new(Metrics::default());
+        let mut out = String::new();
+        prometheus_variant("rbf", &[a.clone(), b], true, &mut out);
+        for needle in [
+            "hec_variant_energy_nanojoules_total{variant=\"rbf\",shard=\"0\"} 2.5",
+            "hec_variant_energy_nanojoules_total{variant=\"rbf\",shard=\"1\"} 0",
+            "hec_variant_latency_microseconds_count{variant=\"rbf\",shard=\"0\"} 1",
+            "# TYPE hec_variant_energy_nanojoules_total counter",
+            "# TYPE hec_variant_latency_microseconds histogram",
+        ] {
+            assert!(out.contains(needle), "missing {needle:?} in:\n{out}");
+        }
+        // One HELP header per family, not per shard.
+        assert_eq!(out.matches("# HELP hec_variant_energy_nanojoules_total").count(), 1);
+        // Unlabelled single-pipeline rendering keeps the variant label only.
+        let mut single = String::new();
+        prometheus_variant("acam-9t4r", &[a], false, &mut single);
+        assert!(
+            single.contains("hec_variant_energy_nanojoules_total{variant=\"acam-9t4r\"} 2.5"),
+            "{single}"
+        );
         assert!(!single.contains("shard="), "{single}");
     }
 

@@ -55,6 +55,13 @@ pub struct ShardStatus {
     /// `"digital_fallback"`); `None` when the canary ladder is inactive,
     /// in which case `/healthz` omits the key entirely (additive v1).
     pub backend_state: Option<&'static str>,
+    /// The deployed [`MatchingBackend`] variant serving this shard's
+    /// `acam`-routed requests (`"acam"`, `"acam-9t4r"`, `"rbf"`,
+    /// `"digital"`).  Always present — `/healthz` is not part of the wire
+    /// parity gate.
+    ///
+    /// [`MatchingBackend`]: crate::backend::MatchingBackend
+    pub backend_variant: &'static str,
 }
 
 /// Deployment health: degraded while any shard is down **or** any shard's

@@ -18,9 +18,9 @@ use std::collections::BTreeMap;
 use std::sync::Arc;
 use std::time::Instant;
 
-use crate::acam::program::{binary_query_voltages, program_array, WindowMode};
-use crate::acam::{wta, AcamArray, ArrayConfig, Variability};
+use crate::acam::Variability;
 use crate::api::{ClassifyOptions, ClassifyResult, EnergyBreakdown, Prediction};
+use crate::backend::{build_unit, BackendVariant, MatchingBackend};
 use crate::config::{Backend, ServeConfig};
 use crate::energy::{EnergyModel, Scale};
 use crate::error::{Error, Result};
@@ -47,7 +47,13 @@ pub struct Pipeline {
     pub store: TemplateStore,
     backend: Backend,
     k: usize,
-    acam: Option<AcamArray>,
+    /// The deployed back-end variant (what hardware `acam`-routed requests
+    /// land on); fixed at construction, invariant across panic-restart,
+    /// re-programming, and store hot-swap.
+    variant: BackendVariant,
+    /// The matching unit behind the [`MatchingBackend`] seam; `Some` only
+    /// when the deployment backend is `acam`.
+    unit: Option<Box<dyn MatchingBackend>>,
     acam_var: Variability,
     /// The configured (baseline) variability corner — what fault injection
     /// escalates away from and re-programming restores.
@@ -83,13 +89,13 @@ pub struct Pipeline {
     extras: BTreeMap<Arc<str>, StoreBinding>,
 }
 
-/// One adopted non-default store: the immutable snapshot plus the ACAM
-/// array programmed from it (mirroring the default binding's array
-/// availability).
+/// One adopted non-default store: the immutable snapshot plus the matching
+/// unit programmed from it (mirroring the default binding's unit
+/// availability — always the same variant as the deployment).
 struct StoreBinding {
     version: u64,
     store: Arc<TemplateStore>,
-    acam: Option<AcamArray>,
+    unit: Option<Box<dyn MatchingBackend>>,
 }
 
 /// One canary sweep's health evidence (see [`Pipeline::canary_probe`]).
@@ -135,15 +141,13 @@ impl Pipeline {
         };
 
         let set = store.set(cfg.templates_per_class)?;
-        let acam = if cfg.backend == Backend::AcamSim {
-            Some(program_array(
+        let variant = cfg.resolve_backend_variant()?;
+        let unit = if cfg.backend == Backend::AcamSim {
+            Some(build_unit(
+                variant,
+                cfg.acam.cell_kind,
                 set,
-                WindowMode::Binary,
-                ArrayConfig {
-                    kind: cfg.acam.cell_kind,
-                    ..Default::default()
-                },
-                Variability::at_level(cfg.acam.variability_level),
+                &Variability::at_level(cfg.acam.variability_level),
                 cfg.acam.seed,
             ))
         } else {
@@ -158,7 +162,8 @@ impl Pipeline {
             engine,
             backend: cfg.backend,
             k: cfg.templates_per_class,
-            acam,
+            variant,
+            unit,
             acam_var: Variability::at_level(cfg.acam.variability_level),
             base_var: Variability::at_level(cfg.acam.variability_level),
             acam_seed: cfg.acam.seed,
@@ -190,8 +195,9 @@ impl Pipeline {
     /// changed, so in-flight batches finish on the version they resolved
     /// and the next batch sees the new one (the hot-swap barrier).
     ///
-    /// Adopting a publish re-programs the affected ACAM array from the new
-    /// store at 80 pJ/cell; the returned energy (nJ) is charged to the
+    /// Adopting a publish re-programs the affected matching unit from the
+    /// new store at the variant's per-cell programming cost (80 pJ/cell on
+    /// the ACAM variants); the returned energy (nJ) is charged to the
     /// worker's meter.  Digital backends adopt stores without a
     /// re-programming charge.
     pub fn sync_stores(&mut self) -> Result<f64> {
@@ -211,7 +217,7 @@ impl Pipeline {
                 if snap.version != self.default_tag.1 {
                     if let Some(new_store) = &snap.store {
                         self.store = (**new_store).clone();
-                        if self.acam.is_some() {
+                        if self.unit.is_some() {
                             charged += self.reprogram()?;
                         }
                         self.default_tag = (Arc::clone(&snap.id), snap.version);
@@ -231,24 +237,19 @@ impl Pipeline {
                     self.extras.remove(&*snap.id);
                 }
                 Some(new_store) => {
-                    let acam = match self.acam.as_ref() {
-                        Some(arr) => {
+                    let unit = match self.unit.as_ref() {
+                        Some(u) => {
                             let set = new_store.set(self.k)?;
-                            charged += self
-                                .energy
-                                .reprogram_nj(set.num_templates() as u64, set.num_features() as u64);
+                            charged += u.reprogram_nj(
+                                set.num_templates() as u64,
+                                set.num_features() as u64,
+                            );
                             // Per-(store, version) deterministic seed, in
-                            // the same stream family as the default array.
+                            // the same stream family as the default unit.
                             let seed = self.acam_seed
                                 ^ crate::coordinator::shard::fnv1a(&snap.id)
                                 ^ (snap.version << 32);
-                            Some(program_array(
-                                set,
-                                WindowMode::Binary,
-                                arr.config.clone(),
-                                self.base_var.clone(),
-                                seed,
-                            ))
+                            Some(u.spawn(set, &self.base_var, seed))
                         }
                         None => None,
                     };
@@ -257,7 +258,7 @@ impl Pipeline {
                         StoreBinding {
                             version: snap.version,
                             store: Arc::clone(new_store),
-                            acam,
+                            unit,
                         },
                     );
                 }
@@ -308,14 +309,19 @@ impl Pipeline {
         self.backend
     }
 
+    /// The deployed back-end variant serving `acam`-routed requests.
+    pub fn backend_variant(&self) -> BackendVariant {
+        self.variant
+    }
+
     /// Whether this deployment can serve a per-request `backend` override.
     /// Digital matchers and the softmax head are always available (they run
     /// on the always-loaded template store / engine head); the simulated
-    /// ACAM needs the array that is only programmed when the deployment
-    /// backend is `acam`.
+    /// ACAM needs the matching unit that is only programmed when the
+    /// deployment backend is `acam`.
     pub fn backend_available(&self, b: Backend) -> bool {
         match b {
-            Backend::AcamSim => self.acam.is_some(),
+            Backend::AcamSim => self.unit.is_some(),
             Backend::FeatureCount | Backend::Similarity | Backend::Softmax => true,
         }
     }
@@ -442,7 +448,7 @@ impl Pipeline {
                         Some(b) => score_binding(
                             &b.store,
                             this.k,
-                            &mut b.acam,
+                            &mut b.unit,
                             this.digital_fallback,
                             &this.energy,
                             this.e_frontend_nj,
@@ -455,7 +461,7 @@ impl Pipeline {
                         None => score_binding(
                             &this.store,
                             this.k,
-                            &mut this.acam,
+                            &mut this.unit,
                             this.digital_fallback,
                             &this.energy,
                             this.e_frontend_nj,
@@ -640,7 +646,7 @@ impl Pipeline {
                         let (p, e) = score_bits(
                             &this.store,
                             this.k,
-                            &mut this.acam,
+                            &mut this.unit,
                             this.digital_fallback,
                             &this.energy,
                             0.0,
@@ -661,7 +667,7 @@ impl Pipeline {
                                 let (p, e) = score_binding(
                                     &b.store,
                                     this.k,
-                                    &mut b.acam,
+                                    &mut b.unit,
                                     this.digital_fallback,
                                     &this.energy,
                                     this.e_frontend_nj,
@@ -685,7 +691,7 @@ impl Pipeline {
                                 let (p, e) = score_bits(
                                     &this.store,
                                     this.k,
-                                    &mut this.acam,
+                                    &mut this.unit,
                                     this.digital_fallback,
                                     &this.energy,
                                     this.e_frontend_nj,
@@ -754,7 +760,7 @@ impl Pipeline {
         score_binding(
             &self.store,
             self.k,
-            &mut self.acam,
+            &mut self.unit,
             self.digital_fallback,
             &self.energy,
             self.e_frontend_nj,
@@ -838,20 +844,20 @@ impl Pipeline {
         Ok((bits, labels))
     }
 
-    /// Probe the analogue array's health against the digital reference.
+    /// Probe the matching unit's health against the digital reference.
     ///
-    /// For each probe bit-vector the array is searched for real (the probe
-    /// consumes the array's RNG stream and search energy — the ladder only
+    /// For each probe bit-vector the unit is searched for real (the probe
+    /// consumes the unit's RNG stream and search energy — the ladder only
     /// runs probes when canary scoring is enabled, keeping the default
-    /// deployment bitwise identical to a canary-free one) and the analogue
+    /// deployment bitwise identical to a canary-free one) and the unit's
     /// top-1 is compared with the digital Eq. 8 top-1 on the same bits —
     /// the calibration contract says they agree exactly on ideal devices,
     /// so disagreement is direct evidence of device decay.
     pub fn canary_probe(&mut self, probes: &[Vec<u8>]) -> Result<CanaryReport> {
         let num_classes = self.store.num_classes;
         let set = self.store.set(self.k)?;
-        let arr = self
-            .acam
+        let unit = self
+            .unit
             .as_mut()
             .ok_or_else(|| Error::Config("ACAM array not programmed".into()))?;
         let mut agree = 0usize;
@@ -859,19 +865,12 @@ impl Pipeline {
         let mut energy_nj = 0f64;
         for bits in probes {
             let digital = matching::classify_feature_count_topk(bits, set, num_classes, 1)[0].0;
-            let search = arr.search(&binary_query_voltages(bits));
-            energy_nj += search.energy_nj;
-            let ranked = wta::rank_classes(
-                &search.similarity,
-                &set.class_of,
-                num_classes,
-                &self.acam_var,
-                &mut self.rng,
-            );
-            agree += usize::from(ranked[0].0 == digital);
-            margin_sum += search.similarity.iter().cloned().fold(0.0, f64::max);
+            let p = unit.probe(bits, set, num_classes, &self.energy, &self.acam_var, &mut self.rng);
+            energy_nj += p.energy_nj;
+            agree += usize::from(p.top_class == digital);
+            margin_sum += p.top_similarity;
         }
-        let headroom = arr.full_match_headroom();
+        let headroom = unit.headroom();
         let n = probes.len();
         Ok(CanaryReport {
             probes: n,
@@ -887,27 +886,23 @@ impl Pipeline {
         })
     }
 
-    /// Re-fit the ACAM array: re-program every cell from the template store
-    /// at the baseline variability corner (clearing injected drift and
-    /// read-noise escalations — but NOT stuck cells, which the caller
+    /// Re-fit the matching unit: re-program every cell from the template
+    /// store at the baseline variability corner (clearing injected drift
+    /// and read-noise escalations — but NOT stuck cells, which the caller
     /// re-applies via [`Pipeline::apply_sticky`]).  Each attempt programs
     /// with a fresh deterministic seed.  Returns the programming energy
-    /// charged (nJ).
+    /// charged (nJ) at the variant's per-cell cost.
     pub fn reprogram(&mut self) -> Result<f64> {
         let set = self.store.set(self.k)?;
-        let config = self
-            .acam
-            .as_ref()
-            .ok_or_else(|| Error::Config("ACAM array not programmed".into()))?
-            .config
-            .clone();
-        let energy_nj = self
-            .energy
-            .reprogram_nj(set.num_templates() as u64, set.num_features() as u64);
+        let unit = self
+            .unit
+            .as_mut()
+            .ok_or_else(|| Error::Config("ACAM array not programmed".into()))?;
+        let energy_nj =
+            unit.reprogram_nj(set.num_templates() as u64, set.num_features() as u64);
         self.reprograms += 1;
         let seed = self.acam_seed.wrapping_add((self.reprograms as u64) << 32);
-        let fresh = program_array(set, WindowMode::Binary, config, self.base_var.clone(), seed);
-        self.acam = Some(fresh);
+        unit.reprogram(set, &self.base_var, seed);
         self.acam_var = self.base_var.clone();
         Ok(energy_nj)
     }
@@ -917,38 +912,26 @@ impl Pipeline {
         self.reprograms
     }
 
-    /// Apply one injected fault to this pipeline's ACAM state.  Stall
+    /// Apply one injected fault to this pipeline's matching state.  Stall
     /// faults are the worker loop's business and are ignored here; every
-    /// fault kind is a no-op on deployments without a programmed array.
+    /// fault kind is a no-op on deployments without a programmed unit
+    /// (except the WTA-corner half of drift, which the pipeline owns).
     pub fn apply_fault(&mut self, kind: &FaultKind, inj: &mut FaultInjector) {
-        match kind {
-            FaultKind::Drift { level } => {
-                let var = Variability::at_level(*level);
-                self.acam_var = var.clone();
-                if let Some(arr) = self.acam.as_mut() {
-                    arr.variability = var;
-                }
-            }
-            FaultKind::ReadNoise { sigma } => {
-                if let Some(arr) = self.acam.as_mut() {
-                    arr.variability.read_sigma = *sigma;
-                }
-            }
-            FaultKind::StuckCells { fraction, g } => {
-                if let Some(arr) = self.acam.as_mut() {
-                    let set = inj.materialize_stuck(arr.num_rows(), arr.width(), *fraction, *g);
-                    arr.stick_cells(&set.cells, set.g);
-                }
-            }
-            FaultKind::Stall { .. } => {}
+        if let FaultKind::Drift { level } = kind {
+            // The periphery (sense/WTA) half of the drift corner lives in
+            // the pipeline; the unit absorbs the array half below.
+            self.acam_var = Variability::at_level(*level);
+        }
+        if let Some(unit) = self.unit.as_mut() {
+            unit.apply_fault(kind, inj);
         }
     }
 
     /// Re-apply sticky stuck-cell sets (after a re-programming).  Returns
     /// the number of cells stuck.
     pub fn apply_sticky(&mut self, sets: &[crate::faults::StuckSet]) -> usize {
-        match self.acam.as_mut() {
-            Some(arr) => sets.iter().map(|s| arr.stick_cells(&s.cells, s.g)).sum(),
+        match self.unit.as_mut() {
+            Some(unit) => unit.apply_sticky(sets),
             None => 0,
         }
     }
@@ -973,7 +956,7 @@ impl Pipeline {
 fn score_binding(
     store: &TemplateStore,
     k_templates: usize,
-    acam: &mut Option<AcamArray>,
+    unit: &mut Option<Box<dyn MatchingBackend>>,
     digital_fallback: bool,
     energy: &EnergyModel,
     e_frontend_nj: f64,
@@ -987,7 +970,7 @@ fn score_binding(
     score_bits(
         store,
         k_templates,
-        acam,
+        unit,
         digital_fallback,
         energy,
         e_frontend_nj,
@@ -1008,7 +991,7 @@ fn score_binding(
 fn score_bits(
     store: &TemplateStore,
     k_templates: usize,
-    acam: &mut Option<AcamArray>,
+    unit: &mut Option<Box<dyn MatchingBackend>>,
     digital_fallback: bool,
     energy: &EnergyModel,
     e_frontend_nj: f64,
@@ -1057,14 +1040,11 @@ fn score_bits(
             )
         }
         Backend::AcamSim => {
-            let arr = acam
+            let u = unit
                 .as_mut()
                 .ok_or_else(|| Error::Config("ACAM array not programmed".into()))?;
-            let search = arr.search(&binary_query_voltages(bits));
-            let mut ranked =
-                wta::rank_classes(&search.similarity, &set.class_of, num_classes, acam_var, rng);
-            ranked.truncate(k);
-            (ranked, search.energy_nj)
+            let out = u.score(bits, set, num_classes, k, energy, acam_var, rng);
+            (out.ranked, out.energy_nj)
         }
         Backend::Softmax => unreachable!("handled in classify_batch_with"),
     };

@@ -14,6 +14,7 @@ use crate::api::{
     ApiError, ClassifyOptions, ClassifyRequest, ClassifyResponse, ClassifyResult, ErrorCode,
     Timing,
 };
+use crate::backend::BackendVariant;
 use crate::config::{Backend, ServeConfig};
 use crate::error::Result;
 use crate::runtime::Meta;
@@ -76,6 +77,22 @@ pub struct Caps {
     /// Whether the simulated ACAM array was programmed (i.e. whether a
     /// per-request `backend: "acam"` override can be served).
     pub acam_available: bool,
+    /// The deployed [`MatchingBackend`] variant behind `acam`-routed
+    /// requests (`--backend acam|acam-9t4r|rbf|digital` / `HEC_BACKEND`).
+    ///
+    /// [`MatchingBackend`]: crate::backend::MatchingBackend
+    pub backend_variant: BackendVariant,
+}
+
+impl Caps {
+    /// The variant name to advertise on responses and `/metrics`: `None`
+    /// for the default `acam` variant (wire parity — pre-seam builds had
+    /// no such field) and for deployments whose back-end unit was never
+    /// programmed (`acam`-routed serving impossible, variant irrelevant).
+    pub(crate) fn advertised_variant(&self) -> Option<&'static str> {
+        (self.acam_available && self.backend_variant != BackendVariant::Acam)
+            .then(|| self.backend_variant.name())
+    }
 }
 
 impl Caps {
@@ -206,7 +223,14 @@ pub(crate) fn drop_expired_jobs(batch: &mut Vec<Job>, m: &Metrics) {
 /// `ladder` carries the shard's degradation-ladder observation at dispatch
 /// time as `(degraded, backend_state)`; `None` (every deployment without an
 /// active ladder) leaves the new v1 fields unset so the wire output is
-/// byte-identical to pre-faults builds.
+/// byte-identical to pre-faults builds.  `variant` is the deployment's
+/// advertised [`MatchingBackend`] variant name ([`Caps::advertised_variant`]);
+/// it stamps responses whose resolved backend is `acam` and drives the
+/// per-variant energy/latency series, and is `None` for the default `acam`
+/// variant so that wire output and `/metrics` stay byte-identical to
+/// pre-seam builds.
+///
+/// [`MatchingBackend`]: crate::backend::MatchingBackend
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn deliver_batch(
     batch: Vec<Job>,
@@ -217,6 +241,7 @@ pub(crate) fn deliver_batch(
     compute_us: u64,
     shard: Option<usize>,
     ladder: Option<(bool, &'static str)>,
+    variant: Option<&'static str>,
 ) {
     use std::sync::atomic::Ordering::Relaxed;
     match results {
@@ -227,6 +252,11 @@ pub(crate) fn deliver_batch(
                 m.latency.record_us(total_us);
                 m.latency_for(res.backend).record_us(total_us);
                 m.add_energy_nj(res.energy.total_nj());
+                let backend_variant = variant.filter(|_| res.backend == Backend::AcamSim);
+                if backend_variant.is_some() {
+                    m.variant_latency.record_us(total_us);
+                    m.add_variant_energy_nj(res.energy.back_end_nj);
+                }
                 m.responses.fetch_add(1, Relaxed);
                 Metrics::gauge_dec(&m.in_flight, 1);
                 if let Some(t) = &job.tenant {
@@ -242,6 +272,7 @@ pub(crate) fn deliver_batch(
                     },
                     engine,
                     backend: res.backend,
+                    backend_variant,
                     features: res.features,
                     shard,
                     degraded: ladder.map(|(d, _)| d),
@@ -397,6 +428,7 @@ impl Server {
                             engine: p.engine_name(),
                             backend: p.backend(),
                             acam_available: p.backend_available(Backend::AcamSim),
+                            backend_variant: p.backend_variant(),
                         };
                         let _ = ready_tx.send(Ok(caps));
                         p
@@ -409,6 +441,9 @@ impl Server {
                 pipeline.attach_registry(reg_worker);
                 let engine = pipeline.engine_name();
                 let image_len = pipeline.image_len();
+                let variant = (pipeline.backend_available(Backend::AcamSim)
+                    && pipeline.backend_variant() != BackendVariant::Acam)
+                    .then(|| pipeline.backend_variant().name());
                 let mut buf: Vec<f32> = Vec::new();
                 let mut opts: Vec<ClassifyOptions> = Vec::new();
                 let mut routes: Vec<Option<Arc<str>>> = Vec::new();
@@ -470,7 +505,7 @@ impl Server {
                     let compute_us = dispatched.elapsed().as_micros() as u64;
                     m.execute.record_us(compute_us);
                     deliver_batch(
-                        batch, results, &m, engine, dispatched, compute_us, None, None,
+                        batch, results, &m, engine, dispatched, compute_us, None, None, variant,
                     );
                 }
             })
@@ -528,6 +563,14 @@ impl super::ClassifySurface for Handle {
         super::metrics::prometheus_histograms(std::slice::from_ref(&self.metrics), false, &mut out);
         if self.cache_on {
             super::metrics::prometheus_cache(std::slice::from_ref(&self.metrics), false, &mut out);
+        }
+        if let Some(variant) = self.caps.advertised_variant() {
+            super::metrics::prometheus_variant(
+                variant,
+                std::slice::from_ref(&self.metrics),
+                false,
+                &mut out,
+            );
         }
         let reg = self.admin.registry();
         if reg.advertises() {

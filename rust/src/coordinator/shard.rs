@@ -318,11 +318,15 @@ impl ShardSet {
         let max_wait = Duration::from_micros(cfg.batch.max_wait_us);
         // Faults/ladder wiring resolved once: every shard shares the plan
         // (each derives its own injector stream from its index) and the
-        // canary knobs.  The ladder only arms on the ACAM backend — the
-        // digital backends have no analogue hardware to age or re-program.
+        // canary knobs.  The ladder only arms on the ACAM backend with an
+        // analogue MatchingBackend variant — the digital backends have no
+        // analogue hardware to age or re-program, and the `digital` variant
+        // *is* the canary's reference (it would always agree with itself).
         let plan = cfg.resolve_fault_plan()?;
         let canary_every = cfg.resolve_canary_every();
-        let ladder = (canary_every > 0 && cfg.backend == Backend::AcamSim).then(|| LadderParams {
+        let variant = cfg.resolve_backend_variant()?;
+        let ladder = (canary_every > 0 && cfg.backend == Backend::AcamSim && variant.analogue())
+            .then(|| LadderParams {
             canary_every,
             per_class: cfg.faults.canary_per_class,
             threshold: cfg.faults.canary_threshold,
@@ -618,6 +622,7 @@ impl ClassifySurface for ShardHandle {
                     queue_depth: snap.queue_depth,
                     in_flight: snap.in_flight,
                     backend_state: ladder_active.then(|| s.ladder.state().as_str()),
+                    backend_variant: self.inner.caps.backend_variant.name(),
                 }
             })
             .collect();
@@ -653,6 +658,9 @@ impl ClassifySurface for ShardHandle {
         prometheus_histograms(&shard_metrics, true, &mut out);
         if self.inner.cache_on {
             super::metrics::prometheus_cache(&shard_metrics, true, &mut out);
+        }
+        if let Some(variant) = self.inner.caps.advertised_variant() {
+            super::metrics::prometheus_variant(variant, &shard_metrics, true, &mut out);
         }
         if let Some(ladder) = self.shard_ladder() {
             out.push_str(&prometheus_ladder(&ladder));
@@ -798,6 +806,7 @@ fn shard_worker(
                 engine: p.engine_name(),
                 backend: p.backend(),
                 acam_available: p.backend_available(crate::config::Backend::AcamSim),
+                backend_variant: p.backend_variant(),
             };
             let _ = ready_tx.send(Ok(caps));
             (p, c)
@@ -809,6 +818,9 @@ fn shard_worker(
     };
     let engine = pipeline.engine_name();
     let image_len = pipeline.image_len();
+    let variant = (pipeline.backend_available(Backend::AcamSim)
+        && pipeline.backend_variant() != crate::backend::BackendVariant::Acam)
+        .then(|| pipeline.backend_variant().name());
     let mut injector = fctx.plan.clone().map(|p| FaultInjector::new(p, index));
     // Served-request clock for the fault schedule and canary cadence.
     let mut served: u64 = 0;
@@ -922,6 +934,7 @@ fn shard_worker(
                     compute_us,
                     Some(index),
                     ladder_state,
+                    variant,
                 );
                 served += n as u64;
                 since_probe += n as u64;

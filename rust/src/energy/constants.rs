@@ -45,6 +45,24 @@ pub const SPARSITY: f64 = 0.80;
 /// TXL-ACAM energy per similarity-search operation per cell (Section III-B).
 pub const ACAM_CELL_ENERGY_FJ: f64 = 185.0;
 
+/// 9T4R analogue ACAM cell (arxiv 2410.03414) per-search energy (fJ):
+/// same 4-RRAM window storage as the TXL pixel, plus three extra periphery
+/// transistors that keep conducting through near-miss overdrive — modelled
+/// as a 9/6 transistor-count scaling of the 185 fJ TXL figure, rounded to
+/// the published design's simulation corner.
+pub const ACAM_9T4R_CELL_ENERGY_FJ: f64 = 278.0;
+
+/// RBF-neuron cell (arxiv 2606.14739) per-evaluation energy (fJ): the RBF
+/// synapse computes its Gaussian bump with a 2-RRAM divider and a shared
+/// current-mode squarer instead of a 4-RRAM dual-inverter window, roughly
+/// halving the per-cell search charge relative to the TXL pixel.
+pub const RBF_CELL_ENERGY_FJ: f64 = 92.0;
+
+/// RBF-neuron (re-)programming energy per cell (pJ): two filamentary
+/// devices per synapse instead of the ACAM pixel's four, at the same
+/// ~20 pJ program-and-verify cost per device.
+pub const RBF_PROGRAM_CELL_PJ: f64 = 40.0;
+
 /// RRAM (re-)programming energy per ACAM cell (pJ): each TXL pixel holds
 /// four filamentary devices, each SET with program-and-verify pulses in the
 /// ~2 V x ~100 µA x ~100 ns regime (~20 pJ per device).  Re-programming the

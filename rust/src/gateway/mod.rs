@@ -440,6 +440,10 @@ fn healthz<S: ClassifySurface>(handle: &S) -> Value {
             "acam_available".to_string(),
             Value::Bool(caps.acam_available),
         ),
+        (
+            "backend_variant".to_string(),
+            Value::Str(caps.backend_variant.name().to_string()),
+        ),
     ]);
     // Registry-backed deployments additionally publish the template-store
     // geometry, so a `PUT /v1/stores/{id}` client can build a valid HECT
@@ -469,6 +473,10 @@ fn healthz<S: ClassifySurface>(handle: &S) -> Value {
                                 Value::Num(s.queue_depth as f64),
                             ),
                             ("in_flight".to_string(), Value::Num(s.in_flight as f64)),
+                            (
+                                "backend_variant".to_string(),
+                                Value::Str(s.backend_variant.to_string()),
+                            ),
                         ]);
                         if let Some(state) = s.backend_state {
                             fields.insert(

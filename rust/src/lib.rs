@@ -19,6 +19,11 @@
 //!   the paper's fabricated 180 nm hardware (DESIGN.md §Substitutions).
 //! * [`matching`] implements the paper's digital matching models (Eq. 8-12)
 //!   bit-exactly, including a packed 64-features-per-word popcount path.
+//! * [`backend`] is the back-end mirror of the front-end seam: the
+//!   [`backend::MatchingBackend`] trait with four selectable variants —
+//!   the TXL ACAM (default), the 9T4R graded ACAM, the RBF-neuron
+//!   classifier, and the exact digital matcher — each with its own
+//!   search/re-program energy constants (`--backend`, `HEC_BACKEND`).
 //! * [`api`] is the versioned (v1) public classification protocol: typed
 //!   requests/responses with ranked predictions, per-stage energy, timings,
 //!   and stable machine-readable error codes, plus the JSON wire form.
@@ -60,6 +65,7 @@
 
 pub mod acam;
 pub mod api;
+pub mod backend;
 pub mod benchkit;
 pub mod config;
 pub mod coordinator;

@@ -14,7 +14,9 @@
 //! * `info`      — artifact inventory and metadata.
 //!
 //! Global flags: `--artifacts DIR` `--engine interp|interp-fast|pjrt`
-//! `--backend acam|fc|sim|softmax` `--templates K` `--threads N`
+//! `--backend acam|acam-9t4r|rbf|digital|fc|sim|softmax` (route names or
+//! MatchingBackend variant names — a variant implies the acam route)
+//! `--templates K` `--threads N`
 //! `--variability LEVEL` `--config serve.json` `--shards N`
 //! `--shard-policy round_robin|least_queue_depth|hash`.
 //!
@@ -40,7 +42,7 @@ use hec::runtime::Meta;
 use hec::Error;
 
 const USAGE: &str = "usage: hec [--artifacts DIR] [--engine interp|interp-fast|pjrt] \
-[--backend acam|fc|sim|softmax] [--templates K] [--threads N] [--variability L] \
+[--backend acam|acam-9t4r|rbf|digital|fc|sim|softmax] [--templates K] [--threads N] [--variability L] \
 [--frontend fast|pallas] [--config FILE] \
 [--shards N] [--shard-policy round_robin|least_queue_depth|hash] \
 [--stores-dir DIR] [--tenants name=store[:quota],...] [--cache CAPACITY] \
@@ -99,7 +101,24 @@ fn serve_config(args: &Args) -> hec::Result<ServeConfig> {
         cfg.engine = e.parse::<Engine>()?;
     }
     if let Some(b) = args.flags.get("backend") {
-        cfg.backend = b.parse::<Backend>()?;
+        // Route names first (`acam` selects the AcamSim route with the
+        // default variant), then MatchingBackend variant names, which imply
+        // the acam route (`--backend rbf` == route acam + variant rbf).
+        match b.parse::<Backend>() {
+            Ok(route) => cfg.backend = route,
+            Err(_) => match b.parse::<hec::backend::BackendVariant>() {
+                Ok(v) => {
+                    cfg.backend = Backend::AcamSim;
+                    cfg.backend_variant = Some(v);
+                }
+                Err(_) => {
+                    return Err(Error::Config(format!(
+                        "unknown backend '{b}' (routes: acam | fc | sim | softmax; \
+                         variants: acam | acam-9t4r | rbf | digital)"
+                    )))
+                }
+            },
+        }
     }
     cfg.templates_per_class = args
         .get("templates", cfg.templates_per_class)
@@ -312,12 +331,13 @@ fn main() -> hec::Result<()> {
                 let gateway = hec::gateway::Gateway::start(handle.clone(), &http)?;
                 let caps = handle.caps().clone();
                 println!(
-                    "hec {} gateway listening on {} (engine {}, backend {}, image_len {}, \
-                     shards {} [{}{}])",
+                    "hec {} gateway listening on {} (engine {}, backend {}, variant {}, \
+                     image_len {}, shards {} [{}{}])",
                     hec::api::API_VERSION,
                     gateway.local_addr(),
                     caps.engine,
                     caps.backend.name(),
+                    caps.backend_variant.name(),
                     caps.image_len,
                     shards,
                     cfg.shards.policy.name(),

@@ -19,10 +19,13 @@
 //!   counters surfaced as `hec_tenant_*` metrics.
 //! * Online re-fit ([`StoreAdmin::refit`]) — builds a candidate store from
 //!   fresh labelled probes via the existing k-means template builder,
-//!   verifies it against the digital matcher, and publishes it through the
-//!   same swap path.  Adoption charges re-programming energy at
-//!   `RRAM_PROGRAM_CELL_PJ` (80 pJ/cell) per ACAM array actually
-//!   re-programmed.
+//!   verifies it against the deployment's active
+//!   [`crate::backend::MatchingBackend`] variant at the ideal device
+//!   corner (bit-identical to the old digital check for the default `acam`
+//!   variant), and publishes it through the same swap path.  Adoption
+//!   charges the variant's re-programming energy (80 pJ/cell for the ACAM
+//!   pixels, 40 pJ/cell for RBF synapses, 0 for the digital matcher) per
+//!   back-end unit actually re-programmed.
 //!
 //! Version 0 marks the bootstrap store each shard builds for itself at
 //! startup; until something is published (version >= 1) or tenants are
@@ -39,7 +42,6 @@ use crate::coordinator::pipeline::BOOTSTRAP_DATA_SEED;
 use crate::coordinator::shard::fnv1a;
 use crate::energy::EnergyModel;
 use crate::jsonlite::Value;
-use crate::matching;
 use crate::runtime::Meta;
 use crate::templates::TemplateStore;
 use crate::{Error, Result};
@@ -577,14 +579,18 @@ pub fn decode_hect(body: &[u8], seed: u64) -> Result<TemplateStore> {
 #[derive(Debug, Clone)]
 pub struct RefitOutcome {
     pub id: String,
-    /// Whether the candidate passed digital verification and was published.
+    /// Whether the candidate passed verification against the active
+    /// back-end variant and was published.
     pub published: bool,
-    /// Digital-matcher accuracy of the candidate on the held-out probe set.
+    /// Accuracy of the candidate on the held-out probe set, scored by the
+    /// active [`crate::backend::MatchingBackend`] variant at ideal devices
+    /// (identical to the digital matcher for the default `acam` variant).
     pub accuracy: f64,
     /// New version when published.
     pub version: Option<u64>,
-    /// Expected re-programming energy per ACAM array that adopts the new
-    /// store: cells x 80 pJ/cell, in nJ.
+    /// Expected re-programming energy per back-end unit that adopts the
+    /// new store, at the active variant's per-cell programming cost
+    /// (80 pJ ACAM / 40 pJ RBF / 0 digital), in nJ.
     pub reprogram_nj: f64,
 }
 
@@ -693,9 +699,10 @@ impl StoreAdmin {
     }
 
     /// Online re-fit: draw fresh labelled probes, build a candidate store
-    /// with the k-means template builder, verify it against the digital
-    /// feature-count matcher on a held-out probe set, and publish iff the
-    /// accuracy clears `stores.refit_min_accuracy`.
+    /// with the k-means template builder, verify it against the active
+    /// [`crate::backend::MatchingBackend`] variant (ideal device corner) on
+    /// a held-out probe set, and publish iff the accuracy clears
+    /// `stores.refit_min_accuracy`.
     ///
     /// Deterministic: probe data, k-means seed, and the verification set
     /// depend only on config, store id, and the candidate version.
@@ -737,7 +744,17 @@ impl StoreAdmin {
             TemplateStore::from_features(&feats, &labels, n_features, num_classes, kmeans_seed)
                 .map_err(|e| arg(e.to_string()))?;
 
-        // Held-out digital verification (Eq. 8 feature-count matcher).
+        // Held-out verification against the *active* MatchingBackend
+        // variant at the ideal device corner (deterministic: no program or
+        // read noise, no WTA offsets).  For the default `acam` variant this
+        // is bit-identical to the previous digital Eq. 8 check by the
+        // ideal-device agreement contract (`backend::build_unit` tests);
+        // for the other variants the candidate is vetted by the engine that
+        // will actually serve it.
+        let variant = self
+            .cfg
+            .resolve_backend_variant()
+            .map_err(|e| arg(e.to_string()))?;
         let n_eval = (2 * per_class).max(4) * num_classes;
         let eval = crate::dataset::SyntheticDataset::new(
             BOOTSTRAP_DATA_SEED ^ 0xE7A1,
@@ -752,17 +769,23 @@ impl StoreAdmin {
         let set = candidate
             .set(k)
             .map_err(|e| internal(e.to_string()))?;
+        let ideal = crate::acam::Variability::ideal();
+        let unit_seed = self.cfg.acam.seed ^ fnv1a(id) ^ (next_version << 16);
+        let mut unit =
+            crate::backend::build_unit(variant, self.cfg.acam.cell_kind, set, &ideal, unit_seed);
+        let mut wta_rng = crate::rng::Rng::new(unit_seed ^ 0x5EED);
+        let energy = EnergyModel::default();
         let mut correct = 0usize;
         for (i, label) in eval_labels.iter().enumerate() {
             let bits = candidate.binarize(&eval_feats[i * n_features..(i + 1) * n_features]);
-            let top = matching::classify_feature_count_topk(&bits, set, num_classes, 1);
-            if top.first().map(|(c, _)| *c) == Some(*label) {
+            let out = unit.score(&bits, set, num_classes, 1, &energy, &ideal, &mut wta_rng);
+            if out.ranked.first().map(|(c, _)| *c) == Some(*label) {
                 correct += 1;
             }
         }
         let accuracy = correct as f64 / n_eval as f64;
-        let reprogram_nj = EnergyModel::default()
-            .reprogram_nj(set.num_templates() as u64, n_features as u64);
+        let reprogram_nj =
+            unit.reprogram_nj(set.num_templates() as u64, n_features as u64);
 
         if accuracy < self.cfg.stores.refit_min_accuracy {
             return Ok(RefitOutcome {
@@ -944,9 +967,31 @@ mod tests {
         let mut bad_label = frame.clone();
         bad_label[17..21].copy_from_slice(&99u32.to_le_bytes());
         assert!(decode_hect(&bad_label, 42).is_err());
-        let mut bad_ver = frame;
+        let mut bad_ver = frame.clone();
         bad_ver[4] = 9;
         assert!(decode_hect(&bad_ver, 42).is_err());
+        // Row 0's first feature lives at byte 21 (17-byte header + u32
+        // label); a NaN payload must be rejected before template build.
+        let mut nan_feat = frame;
+        nan_feat[21..25].copy_from_slice(&f32::NAN.to_le_bytes());
+        assert!(decode_hect(&nan_feat, 42).is_err());
+    }
+
+    #[test]
+    fn admin_uploads_reject_non_finite_values() {
+        let cfg = Arc::new(test_cfg());
+        let meta = Meta::load_or_synthetic(&cfg.artifacts_dir).unwrap();
+        let reg = StoreRegistry::from_config(&cfg, &meta).unwrap();
+        let admin = StoreAdmin::new(Arc::clone(&reg), Arc::clone(&cfg));
+
+        // HECT frame with one NaN feature: stable INVALID_ARGUMENT, no swap.
+        let labels: Vec<u32> = (0..8).map(|i| i % 2).collect();
+        let mut feats = vec![0.5f32; 8 * 4];
+        feats[3] = f32::NAN;
+        let frame = encode_hect(2, 4, &labels, &feats);
+        let err = admin.put_binary("default", &frame).unwrap_err();
+        assert_eq!(err.code, ErrorCode::InvalidArgument);
+        assert_eq!(reg.get("default").unwrap().version, 0);
     }
 
     #[test]

@@ -88,6 +88,15 @@ impl TemplateSet {
                 return Err(Error::Template("window lo > hi".into()));
             }
         }
+        // NaN slips past the ordering checks above (all comparisons are
+        // false), and a non-finite window would silently never match once
+        // programmed into cells — reject it at the validation boundary so
+        // uploads fail with INVALID_ARGUMENT instead.
+        for w in [&self.lo, &self.hi, &self.bin_lo, &self.bin_hi] {
+            if w.iter().flatten().any(|v| !v.is_finite()) {
+                return Err(Error::Template("non-finite window value".into()));
+            }
+        }
         Ok(())
     }
 }
@@ -264,6 +273,18 @@ impl TemplateStore {
         if raw.thresholds.len() != raw.n_features {
             return Err(Error::Template("threshold width mismatch".into()));
         }
+        if raw
+            .thresholds
+            .iter()
+            .chain(raw.thresholds_mean.iter())
+            .chain(raw.thresholds_median.iter())
+            .any(|v| !v.is_finite())
+            || !raw.similarity_alpha.is_finite()
+        {
+            return Err(Error::Template(
+                "non-finite threshold or similarity_alpha".into(),
+            ));
+        }
         let words_per_row = raw.n_features.div_ceil(64);
         let mut sets = BTreeMap::new();
         for (k, rs) in raw.stores {
@@ -324,6 +345,11 @@ impl TemplateStore {
                 "feature matrix has {} floats, expected {n} rows x {n_features}",
                 feats.len()
             )));
+        }
+        // HECT uploads land here with raw little-endian floats; a NaN row
+        // would poison thresholds and windows downstream, so reject early.
+        if feats.iter().any(|v| !v.is_finite()) {
+            return Err(Error::Template("non-finite feature value".into()));
         }
         // Per-feature mean and median thresholds (Fig. 1's two modes).
         let mut thresholds_mean = vec![0f32; n_features];
@@ -602,6 +628,28 @@ mod tests {
     }
 
     #[test]
+    fn validate_rejects_non_finite_window() {
+        // NaN compares false against everything, so the lo > hi check alone
+        // would let it through.
+        let mut raw = toy_raw(4);
+        raw.stores.get_mut("2").unwrap().lo[0][2] = f32::NAN;
+        assert!(TemplateStore::from_raw(raw).is_err());
+        let mut raw = toy_raw(4);
+        raw.stores.get_mut("1").unwrap().bin_hi[0][1] = f32::INFINITY;
+        assert!(TemplateStore::from_raw(raw).is_err());
+    }
+
+    #[test]
+    fn from_raw_rejects_non_finite_thresholds() {
+        let mut raw = toy_raw(4);
+        raw.thresholds[0] = f32::NAN;
+        assert!(TemplateStore::from_raw(raw).is_err());
+        let mut raw = toy_raw(4);
+        raw.similarity_alpha = f32::INFINITY;
+        assert!(TemplateStore::from_raw(raw).is_err());
+    }
+
+    #[test]
     fn missing_set_is_error() {
         let store = TemplateStore::from_raw(toy_raw(4)).unwrap();
         assert!(store.set(3).is_err());
@@ -700,5 +748,15 @@ mod tests {
         assert!(TemplateStore::from_features(&[0.0; 10], &[0, 1], 4, 2, 0).is_err());
         // A class with no rows is rejected.
         assert!(TemplateStore::from_features(&[0.0; 8], &[0, 0], 4, 2, 0).is_err());
+    }
+
+    #[test]
+    fn from_features_rejects_non_finite_rows() {
+        let (mut feats, labels) = clustered_features(8, 4, 20);
+        feats[5] = f32::NAN;
+        assert!(TemplateStore::from_features(&feats, &labels, 20, 4, 42).is_err());
+        let (mut feats, labels) = clustered_features(8, 4, 20);
+        feats[33] = f32::NEG_INFINITY;
+        assert!(TemplateStore::from_features(&feats, &labels, 20, 4, 42).is_err());
     }
 }

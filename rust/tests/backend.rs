@@ -1,0 +1,293 @@
+//! Cross-variant `MatchingBackend` seam tests (ISSUE 10's acceptance
+//! suite): deterministic, sleep-free, Gate-synchronised — the style of
+//! `rust/tests/faults.rs`.
+//!
+//! The contract under test, in order:
+//!
+//! 1. **Variant matrix**: every [`hec::backend::BackendVariant`] serves
+//!    through the sharded coordinator; non-default variants advertise
+//!    themselves on the response, `/healthz`, and `/metrics`, while the
+//!    default `acam` variant leaves all three byte-identical to a
+//!    pre-seam build.
+//! 2. **Digital anchor**: the deployable `digital` variant answers
+//!    bitwise-identically to the degradation ladder's `digital_fallback`
+//!    serving path — the same Eq. 8 popcount matcher at the same energy
+//!    envelope, reached through two different doors.
+//! 3. **Variant pinning**: the selected variant survives a worker
+//!    panic-restart and a template-store hot-swap — both rebuild the
+//!    matching unit, neither may silently change the hardware model.
+
+use std::sync::Arc;
+
+use hec::api::{ClassifyRequest, ErrorCode};
+use hec::backend::BackendVariant;
+use hec::config::{Backend, Engine, RoutePolicy, ServeConfig};
+use hec::coordinator::shard::{Gate, ShardHooks};
+use hec::coordinator::{ClassifySurface, ShardSet};
+use hec::dataset::SyntheticDataset;
+use hec::faults::BackendState;
+use hec::templates::TemplateStore;
+
+/// An artifacts directory that never exists -> synthetic fallback.
+const NO_ARTIFACTS: &str = "/nonexistent-hec-artifacts";
+
+/// A serve config pinned to an explicit variant.  Pinning (rather than
+/// leaving `backend_variant: None`) keeps every test deterministic under
+/// the CI `backend-matrix` job, which sweeps `HEC_BACKEND` through the
+/// process environment.
+fn cfg(variant: BackendVariant, shards: usize) -> ServeConfig {
+    let mut c = ServeConfig {
+        artifacts_dir: NO_ARTIFACTS.into(),
+        backend: Backend::AcamSim,
+        engine: Engine::Interp,
+        ..Default::default()
+    };
+    c.backend_variant = Some(variant);
+    c.batch.max_batch = 1; // serial submits -> singleton batches, no timing
+    c.batch.max_wait_us = 0;
+    c.shards.count = shards;
+    c.shards.policy = RoutePolicy::RoundRobin;
+    c
+}
+
+fn workload(n: usize, seed: u64) -> (Vec<f32>, usize) {
+    let meta = hec::runtime::Meta::synthetic();
+    let ds = SyntheticDataset::new(seed, n, meta.norm.mean as f32, meta.norm.std as f32);
+    let (images, _) = ds.batch(0, n);
+    let s = meta.artifacts.image_size;
+    (images, s * s)
+}
+
+// ---------------------------------------------------------------------------
+// 1. The variant matrix
+// ---------------------------------------------------------------------------
+
+/// Every variant serves end-to-end, reports itself consistently across the
+/// response / `/healthz` / `/metrics` surfaces, and carries its own energy
+/// constant — while the default `acam` variant stays invisible on the wire
+/// (the bitwise-parity gate's observable half).
+#[test]
+fn variant_matrix_serves_and_advertises_consistently() {
+    let requests = 4;
+    let (images, img_len) = workload(requests, 101_010);
+    let mut per_op = std::collections::BTreeMap::new();
+    for variant in BackendVariant::ALL {
+        let c = cfg(variant, 1);
+        let set = ShardSet::start(&c).unwrap();
+        let advertised = (variant != BackendVariant::Acam).then(|| variant.name());
+        for i in 0..requests {
+            let resp = set
+                .handle
+                .classify_blocking(images[i * img_len..(i + 1) * img_len].to_vec())
+                .unwrap();
+            assert_eq!(resp.backend, Backend::AcamSim);
+            assert_eq!(
+                resp.backend_variant, advertised,
+                "{}: response advertisement",
+                variant.name()
+            );
+            let json = resp.to_value().to_json();
+            match advertised {
+                Some(name) => assert!(
+                    json.contains(&format!("\"backend_variant\":\"{name}\"")),
+                    "{json}"
+                ),
+                None => assert!(
+                    !json.contains("backend_variant"),
+                    "default variant leaked into the wire bytes: {json}"
+                ),
+            }
+            assert!(!resp.predictions.is_empty());
+            assert!(resp.energy.back_end_nj > 0.0);
+            per_op.insert(variant.name(), resp.energy.back_end_nj);
+        }
+
+        // /healthz names the variant per shard unconditionally (health is
+        // not part of the parity gate — operators always see the truth).
+        let health = set.handle.health();
+        assert_eq!(health.shards[0].backend_variant, variant.name());
+
+        // /metrics: per-variant series exist iff the variant is advertised.
+        let text = set.handle.prometheus_text();
+        match advertised {
+            Some(name) => {
+                let needle =
+                    format!("hec_variant_energy_nanojoules_total{{variant=\"{name}\",shard=\"0\"}}");
+                assert!(text.contains(&needle), "missing {needle:?} in:\n{text}");
+                assert!(
+                    text.contains("hec_variant_latency_microseconds_count"),
+                    "{text}"
+                );
+            }
+            None => assert!(
+                !text.contains("hec_variant_"),
+                "default variant leaked into /metrics:\n{text}"
+            ),
+        }
+        set.shutdown();
+    }
+
+    // Per-op energy ordering follows the per-cell constants over the same
+    // array geometry: 9T4R (278 fJ) > TXL (185 fJ) > RBF (92 fJ).
+    assert!(per_op["acam-9t4r"] > per_op["acam"], "{per_op:?}");
+    assert!(per_op["acam"] > per_op["rbf"], "{per_op:?}");
+    assert!(per_op["digital"] > 0.0, "{per_op:?}");
+}
+
+// ---------------------------------------------------------------------------
+// 2. The digital anchor: variant == ladder fallback, bitwise
+// ---------------------------------------------------------------------------
+
+/// The `digital` variant is the ladder's `digital_fallback` path promoted
+/// to a first-class deployment: drive one shard set into `DigitalFallback`
+/// via sticky stuck-at faults, serve the same images through a `digital`
+/// variant deployment, and require bitwise-equal predictions, scores, and
+/// back-end energy.  Only the *door* differs — the fallback deployment is
+/// degraded, the digital deployment is healthy by construction (nothing to
+/// decay, so the ladder never arms).
+#[test]
+fn digital_variant_is_bitwise_equal_to_ladder_fallback() {
+    let (images, img_len) = workload(10, 565_656);
+    let img = |i: usize| images[i * img_len..(i + 1) * img_len].to_vec();
+
+    // Ladder deployment on the default ACAM variant: every cell stuck
+    // after 2 served requests, probe after 4 -> re-program fails ->
+    // DigitalFallback before request 5.
+    let mut lc = cfg(BackendVariant::Acam, 1);
+    lc.faults.plan = Some("stuck@2=1.0".into());
+    lc.faults.canary_every = 4;
+    let ladder = ShardSet::start(&lc).unwrap();
+    for i in 0..5 {
+        ladder.handle.classify_blocking(img(i)).unwrap();
+    }
+    assert_eq!(
+        ladder.handle.shard_ladder().unwrap()[0].0,
+        BackendState::DigitalFallback
+    );
+
+    // Digital-variant deployment: same store (same seeds), no ladder.
+    let dc = cfg(BackendVariant::Digital, 1);
+    let digital = ShardSet::start(&dc).unwrap();
+    assert!(
+        digital.handle.shard_ladder().is_none(),
+        "the canary ladder must not arm on a digital deployment"
+    );
+
+    for i in 5..10 {
+        let fall = ladder.handle.classify_blocking(img(i)).unwrap();
+        let dig = digital.handle.classify_blocking(img(i)).unwrap();
+        assert_eq!(fall.backend_state.as_deref(), Some("digital_fallback"));
+        assert_eq!(fall.backend_variant, None, "default variant stays silent");
+        assert_eq!(dig.backend_state, None);
+        assert_eq!(dig.backend_variant, Some("digital"));
+        assert_eq!(dig.predictions[0].class, fall.predictions[0].class);
+        assert_eq!(dig.predictions[0].score, fall.predictions[0].score);
+        assert_eq!(dig.energy.back_end_nj, fall.energy.back_end_nj);
+        assert_eq!(dig.energy.front_end_nj, fall.energy.front_end_nj);
+    }
+    assert!(ladder.handle.health().degraded);
+    assert!(!digital.handle.health().degraded);
+    ladder.shutdown();
+    digital.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// 3. Variant pinning across restart and hot-swap
+// ---------------------------------------------------------------------------
+
+/// A worker panic-restart rebuilds the pipeline (and with it the matching
+/// unit) from the same config: the selected variant must come back
+/// identical, and a repeated image must classify identically to before the
+/// panic (the rebuilt unit re-programs from the same seeds).
+#[test]
+fn variant_selection_survives_panic_restart() {
+    let restart_gate = Gate::new();
+    let c = cfg(BackendVariant::Rbf, 1);
+    let (images, img_len) = workload(2, 737_373);
+    let img = |i: usize| images[i * img_len..(i + 1) * img_len].to_vec();
+    let set = ShardSet::start_with_hooks(
+        &c,
+        ShardHooks {
+            panic_on: Some("boom".into()),
+            restart_gate: Some(Arc::clone(&restart_gate)),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+
+    let before = set.handle.classify_blocking(img(0)).unwrap();
+    assert_eq!(before.backend_variant, Some("rbf"));
+    assert_eq!(set.handle.health().shards[0].backend_variant, "rbf");
+
+    let mut req = ClassifyRequest::new(img(1));
+    req.request_id = Some("boom".into());
+    assert_eq!(
+        set.handle.submit_blocking(req).err().map(|e| e.code),
+        Some(ErrorCode::Internal)
+    );
+    restart_gate.await_arrivals(1);
+    restart_gate.release();
+    restart_gate.await_arrivals(2);
+
+    let after = set.handle.classify_blocking(img(0)).unwrap();
+    assert_eq!(
+        after.backend_variant,
+        Some("rbf"),
+        "restart must not change the deployed variant"
+    );
+    assert_eq!(set.handle.health().shards[0].backend_variant, "rbf");
+    assert_eq!(after.predictions[0].class, before.predictions[0].class);
+    assert_eq!(after.predictions[0].score, before.predictions[0].score);
+    assert_eq!(after.energy.back_end_nj, before.energy.back_end_nj);
+    set.shutdown();
+}
+
+/// A template-store publish re-programs the active unit from the new set
+/// at the batch boundary: the variant is pinned across the swap, the
+/// post-swap responses are tagged with the published version, and serving
+/// never misses a beat.
+#[test]
+fn variant_selection_survives_store_hot_swap() {
+    let c = cfg(BackendVariant::Acam9T4R, 1);
+    let (images, img_len) = workload(4, 929_292);
+    let img = |i: usize| images[i * img_len..(i + 1) * img_len].to_vec();
+    let set = ShardSet::start(&c).unwrap();
+
+    let pre = set.handle.classify_blocking(img(0)).unwrap();
+    assert_eq!(pre.backend_variant, Some("acam-9t4r"));
+    assert_eq!(pre.store_version, None, "nothing published yet");
+
+    // Publish a replacement store built over the registry's geometry.
+    let admin = set.handle.store_admin().expect("sharded surface carries the admin");
+    let reg = admin.registry();
+    let (num_classes, n_features, _) = reg.geometry();
+    let per_class = 4;
+    let n = per_class * num_classes;
+    let labels: Vec<usize> = (0..n).map(|i| i % num_classes).collect();
+    let mut rng = hec::rng::Rng::new(31_337);
+    let mut feats = vec![0.0f32; n * n_features];
+    for (i, l) in labels.iter().enumerate() {
+        for j in 0..n_features {
+            feats[i * n_features + j] = (*l as f32) * 0.3
+                + rng.u01() as f32
+                + if j % num_classes == *l { 1.5 } else { 0.0 };
+        }
+    }
+    let store = TemplateStore::from_features(&feats, &labels, n_features, num_classes, 7).unwrap();
+    let snap = reg.publish("default", store, "put").unwrap();
+    assert_eq!(snap.version, 1);
+
+    for i in 1..4 {
+        let resp = set.handle.classify_blocking(img(i)).unwrap();
+        assert_eq!(
+            resp.backend_variant,
+            Some("acam-9t4r"),
+            "hot-swap must not change the deployed variant"
+        );
+        assert_eq!(resp.store.as_deref(), Some("default"));
+        assert_eq!(resp.store_version, Some(1), "post-publish batch must serve v1");
+        assert!(!resp.predictions.is_empty());
+    }
+    assert_eq!(set.handle.health().shards[0].backend_variant, "acam-9t4r");
+    set.shutdown();
+}

@@ -119,6 +119,7 @@ fn healthz_reports_deployment_facts() {
         Some(server.handle.caps().image_len)
     );
     assert_eq!(v.get("acam_available").unwrap().as_bool(), Some(false));
+    assert_eq!(v.get("backend_variant").unwrap().as_str(), Some("acam"));
     gateway.shutdown();
     server.shutdown();
 }
